@@ -1,0 +1,78 @@
+//! Large-embedding-table walkthrough (paper §V-I / Fig. 13 premise): a
+//! 40M-row × 128-dim table (~19 GB uncompressed) cannot fit a 16 GB V100,
+//! forcing the baselines into model-parallel sharding — while Eff-TT
+//! compresses it onto ONE device.  This example shows the footprint
+//! arithmetic at full scale and exercises a scaled-down instantiation of
+//! the same shape end to end.
+//!
+//! Run: `cargo run --release --example large_table`
+
+use recad::baselines::multi_gpu::{
+    dlrm_model_parallel_step, hugectr_step, recad_step, throughput, torchrec_step,
+    MultiGpuWorkload,
+};
+use recad::coordinator::platform::SimPlatform;
+use recad::data::ctr::Batch;
+use recad::tt::shapes::TtShapes;
+use recad::tt::table::{EffTtOptions, EffTtTable, TtScratch};
+use recad::util::bench::fmt_bytes;
+use recad::util::prng::Rng;
+use std::time::Instant;
+
+fn main() {
+    // ---- full-scale footprint arithmetic (the Fig. 13 premise) ----------
+    let full = TtShapes::plan(40_000_000, 128, 32);
+    let platform = SimPlatform::v100(4);
+    println!("=== 40M x 128 table (paper §V-I) ===");
+    println!("  plain size : {}", fmt_bytes(full.plain_bytes()));
+    println!("  Eff-TT size: {} (rank {})", fmt_bytes(full.tt_bytes()), full.rank);
+    println!(
+        "  fits one {} ({}): plain={}, Eff-TT={}",
+        platform.name,
+        fmt_bytes(platform.hbm_bytes),
+        platform.fits_hbm(full.plain_bytes()),
+        platform.fits_hbm(full.tt_bytes()),
+    );
+    assert!(!platform.fits_hbm(full.plain_bytes()));
+    assert!(platform.fits_hbm(full.tt_bytes()));
+
+    // ---- scaled instantiation: same shape, 1/100 rows --------------------
+    println!("\n=== scaled instantiation (400k rows, dim 128) ===");
+    let shapes = TtShapes::plan(400_000, 128, 16);
+    let mut rng = Rng::new(1);
+    let mut table = EffTtTable::new(shapes, EffTtOptions::default(), &mut rng);
+    let mut scratch = TtScratch::default();
+    let batch: Vec<u64> = (0..4096).map(|_| rng.below(400_000)).collect();
+    let offsets: Vec<usize> = (0..=4096).collect();
+    let mut out = vec![0.0f32; 4096 * 128];
+    let t0 = Instant::now();
+    table.embedding_bag(&batch, &offsets, &mut out, &mut scratch);
+    let lookup_time = t0.elapsed();
+    println!(
+        "  batch-4096 lookup: {:?} ({} reuse hits / {} prefixes)",
+        lookup_time, table.stats.reuse_hits, table.stats.prefix_gemms
+    );
+
+    // ---- multi-GPU throughput model (Fig. 13 shape) -----------------------
+    println!("\n=== Fig. 13: throughput vs HugeCTR / TorchRec (modeled 4x V100) ===");
+    let w = MultiGpuWorkload {
+        compute: lookup_time * 3, // fwd + bwd ≈ 3x the lookup on this table
+        batch_size: 4096,
+        n_sparse: 1,
+        emb_dim: 128,
+        dp_grad_bytes: shapes.tt_bytes(),
+    };
+    let c = platform.cost;
+    for n in [1usize, 2, 4] {
+        let r = throughput(&w, recad_step(&w, &c, n), n);
+        let h = throughput(&w, hugectr_step(&w, &c, n), n);
+        let t = throughput(&w, torchrec_step(&w, &c, n), n);
+        let d = throughput(&w, dlrm_model_parallel_step(&w, &c, n), n);
+        println!(
+            "  {n} GPU: Rec-AD {:>9.0}/s  HugeCTR {:>9.0}/s  TorchRec {:>9.0}/s  DLRM-MP {:>9.0}/s \
+             (Rec-AD = {:.2}x HugeCTR, {:.2}x TorchRec)",
+            r, h, t, d, r / h, r / t
+        );
+    }
+    let _ = &mut Batch { dense: vec![], sparse: vec![], labels: vec![], batch_size: 0 };
+}

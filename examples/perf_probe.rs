@@ -1,0 +1,35 @@
+// L3 perf probe: Eff-TT fwd+bwd at serving-relevant shapes.
+use recad::tt::shapes::TtShapes;
+use recad::tt::table::{EffTtOptions, EffTtTable, TtScratch};
+use recad::util::prng::Rng;
+use std::time::Instant;
+
+fn main() {
+    for (rows, rank, batch) in [(100_000u64, 8usize, 4096usize), (100_000, 16, 4096), (1_000_000, 16, 4096)] {
+        let shapes = TtShapes::plan(rows, 16, rank);
+        let mut rng = Rng::new(1);
+        let mut t = EffTtTable::new(shapes, EffTtOptions::default(), &mut rng);
+        let zipf = recad::data::zipf::Zipf::new(rows, 1.2);
+        let idx: Vec<u64> = (0..batch).map(|_| zipf.sample(&mut rng)).collect();
+        let offsets: Vec<usize> = (0..=batch).collect();
+        let mut out = vec![0.0f32; batch * 16];
+        let g = vec![0.05f32; batch * 16];
+        let mut scratch = TtScratch::default();
+        // warmup
+        t.embedding_bag(&idx, &offsets, &mut out, &mut scratch);
+        t.backward_sgd(&idx, &offsets, &g, 0.01, &mut scratch);
+        let reps = 20;
+        let mut fwd_best = f64::INFINITY;
+        let mut bwd_best = f64::INFINITY;
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            for _ in 0..reps { t.embedding_bag(&idx, &offsets, &mut out, &mut scratch); }
+            fwd_best = fwd_best.min(t0.elapsed().as_secs_f64() / reps as f64);
+            let t0 = Instant::now();
+            for _ in 0..reps { t.backward_sgd(&idx, &offsets, &g, 0.01, &mut scratch); }
+            bwd_best = bwd_best.min(t0.elapsed().as_secs_f64() / reps as f64);
+        }
+        println!("rows={rows:>8} rank={rank:>2} batch={batch}: fwd {:.0}µs ({:.1} Mlookup/s)  bwd {:.0}µs",
+            fwd_best*1e6, batch as f64/fwd_best/1e6, bwd_best*1e6);
+    }
+}

@@ -1,0 +1,61 @@
+//! Streaming detection service demo (paper §V-M / Table VI): train a
+//! detector, then serve a batch-1 closed-loop request stream and report
+//! latency / TPS / memory — the edge-deployment scenario.
+//!
+//! Run: `cargo run --release --example streaming_serve`
+
+use std::time::Duration;
+
+use recad::coordinator::engine::EngineCfg;
+use recad::coordinator::platform::SimPlatform;
+use recad::coordinator::trainer::train_ieee118;
+use recad::powersys::dataset::{generate, DatasetCfg, SparseVocab};
+use recad::serve::{Detector, StreamingServer};
+use recad::util::bench::{fmt_bytes, fmt_dur};
+
+const SCALE: f64 = 1.0 / 2000.0;
+
+fn main() {
+    let ds = generate(&DatasetCfg {
+        n_normal: 3000,
+        n_attack: 750,
+        vocab: SparseVocab::ieee118(SCALE),
+        n_profiles: 100,
+        noise_std: 0.005,
+        seed: 11,
+    });
+
+    println!("training detector…");
+    let (report, engine) = train_ieee118(EngineCfg::ieee118(SCALE), &ds, 2, 64, 5);
+    println!(
+        "detector ready: accuracy {:.1}% / recall {:.1}%",
+        report.eval.accuracy * 100.0,
+        report.eval.recall * 100.0
+    );
+    let model_bytes = engine.model_bytes();
+
+    // Table VI scenario: batch size 1, RTX-2060-class edge box.
+    let platform = SimPlatform::rtx2060();
+    let det = Detector::new(engine, 0.5);
+    let server = StreamingServer::start(det, 1, platform.cost.dispatch);
+    let stream = &ds.samples[..1000];
+    println!("serving {} requests (batch size 1, closed loop)…", stream.len());
+    let sr = server.run_stream(stream, model_bytes);
+
+    println!("\n=== Table VI row (streaming real-time detection) ===");
+    println!("  requests served      : {}", sr.served);
+    println!("  throughput           : {:.1} samples/s", sr.tps);
+    println!("  mean latency         : {}", fmt_dur(sr.mean_latency.as_secs_f64()));
+    println!("  p99 latency          : {}", fmt_dur(sr.p99_latency.as_secs_f64()));
+    println!("  model deployment size: {}", fmt_bytes(sr.model_bytes));
+
+    // attack-window narrative from the intro: detection latency bounds
+    // the attacker's undetected window
+    let window = sr.p99_latency + Duration::from_millis(1);
+    println!(
+        "\nattack window (p99 + ingest): {} — vs a 30 s dispatch cycle, \
+         the attacker loses {:.0}x of their window",
+        fmt_dur(window.as_secs_f64()),
+        30.0 / window.as_secs_f64()
+    );
+}

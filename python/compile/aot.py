@@ -1,0 +1,170 @@
+"""AOT lowering: jax (L2) → HLO **text** artifacts for the rust runtime (L3).
+
+Interchange is HLO text, not ``.serialize()``: jax ≥ 0.5 emits HloModule
+protos with 64-bit instruction ids which the ``xla`` crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to ../artifacts, one PJRT executable each):
+
+  tt_lookup.hlo.txt       pooled Eff-TT bag lookup (cores, idx) → [B, N]
+  dlrm_fwd.hlo.txt        (params…, dense, idx) → probs [B]       (serving)
+  dlrm_train_step.hlo.txt (params…, dense, idx, labels) → (loss, params…)
+  meta.json               shapes/param layout consumed by rust/src/runtime
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).  Python never
+runs again after this — the rust binary is self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.tt_spec import TtSpec
+from compile.kernels.tt_lookup import tt_embedding_bag
+
+# Artifact-scale model: IEEE118 schema at 1/2000 scale → two TT tables of
+# 6000/3750 rows + five small plain tables.  Structure (7 sparse, 6 dense,
+# TT rank 8, dim 16) matches the paper's Table II row exactly.
+SCALE = 1.0 / 2000.0
+FWD_BATCH = 128          # serving batch (router pads to this)
+TRAIN_BATCH = 64         # per-step mini-batch on the PJRT path
+LOOKUP_BATCH = 256
+LOOKUP_BAG = 4
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_tt_lookup(spec: TtSpec):
+    """Standalone Eff-TT pooled lookup artifact (runtime unit tests +
+    serving-side embedding microbench)."""
+    def fn(d1, d2, d3, idx):
+        return (tt_embedding_bag(spec, (d1, d2, d3), idx),)
+
+    s1, s2, s3 = spec.core_shapes
+    args = (
+        jax.ShapeDtypeStruct(s1, jnp.float32),
+        jax.ShapeDtypeStruct(s2, jnp.float32),
+        jax.ShapeDtypeStruct(s3, jnp.float32),
+        jax.ShapeDtypeStruct((LOOKUP_BATCH, LOOKUP_BAG), jnp.int32),
+    )
+    return jax.jit(fn).lower(*args)
+
+
+def lower_fwd(cfg: model.ModelCfg, n_params: int):
+    def fn(*args):
+        leaves, dense, idx = args[:n_params], args[n_params], args[n_params + 1]
+        params = jax.tree_util.tree_unflatten(model.params_treedef(cfg), leaves)
+        return (model.predict(cfg, params, dense, idx),)
+
+    shapes = _param_shapes(cfg) + [
+        jax.ShapeDtypeStruct((FWD_BATCH, cfg.dense_dim), jnp.float32),
+        jax.ShapeDtypeStruct((FWD_BATCH, cfg.num_tables), jnp.int32),
+    ]
+    return jax.jit(fn).lower(*shapes)
+
+
+def lower_train_step(cfg: model.ModelCfg, n_params: int):
+    def fn(*args):
+        leaves = args[:n_params]
+        dense, idx, labels = args[n_params:]
+        params = jax.tree_util.tree_unflatten(model.params_treedef(cfg), leaves)
+        loss, new = model.train_step(cfg, params, dense, idx, labels)
+        return (loss, *model.flatten_params(new))
+
+    shapes = _param_shapes(cfg) + [
+        jax.ShapeDtypeStruct((TRAIN_BATCH, cfg.dense_dim), jnp.float32),
+        jax.ShapeDtypeStruct((TRAIN_BATCH, cfg.num_tables), jnp.int32),
+        jax.ShapeDtypeStruct((TRAIN_BATCH,), jnp.float32),
+    ]
+    return jax.jit(fn).lower(*shapes)
+
+
+@functools.lru_cache(maxsize=None)
+def _cfg():
+    return model.ieee118_cfg(scale=SCALE)
+
+
+def _param_shapes(cfg):
+    return [jax.ShapeDtypeStruct(tuple(m["shape"]), jnp.dtype(m["dtype"]))
+            for m in model.param_meta(cfg)]
+
+
+def init_param_values(cfg, seed: int = 0):
+    """Initial parameter leaves — exported so rust can bootstrap training
+    from the same init the python tests use (written as meta + .npy-like
+    raw f32 blobs)."""
+    return model.flatten_params(model.init_params(cfg, jax.random.PRNGKey(seed)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = _cfg()
+    meta_params = model.param_meta(cfg)
+    n_params = len(meta_params)
+    spec = TtSpec.plan(6000, cfg.emb_dim, rank=8)
+
+    artifacts = {
+        "tt_lookup": lower_tt_lookup(spec),
+        "dlrm_fwd": lower_fwd(cfg, n_params),
+        "dlrm_train_step": lower_train_step(cfg, n_params),
+    }
+    for name, lowered in artifacts.items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # initial parameter blob: flat little-endian f32 concatenation
+    leaves = init_param_values(cfg)
+    blob_path = os.path.join(args.out_dir, "init_params.bin")
+    with open(blob_path, "wb") as f:
+        import numpy as np
+        for leaf in leaves:
+            f.write(np.asarray(leaf, dtype=np.float32).tobytes())
+    print(f"wrote {blob_path}")
+
+    meta = {
+        "model": {
+            "dense_dim": cfg.dense_dim,
+            "emb_dim": cfg.emb_dim,
+            "num_tables": cfg.num_tables,
+            "tables": [
+                {"rows": t.rows, "compressed": t.compressed, "rank": t.rank}
+                for t in cfg.tables
+            ],
+            "lr": cfg.lr,
+        },
+        "batches": {"fwd": FWD_BATCH, "train": TRAIN_BATCH,
+                    "lookup": [LOOKUP_BATCH, LOOKUP_BAG]},
+        "tt_lookup_spec": {"rows": spec.rows, "dim": spec.dim,
+                           "m": list(spec.m), "n": list(spec.n),
+                           "rank": spec.rank},
+        "params": meta_params,
+    }
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote meta.json ({n_params} params)")
+
+
+if __name__ == "__main__":
+    main()

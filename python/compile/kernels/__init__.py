@@ -1,0 +1,7 @@
+"""Pallas kernels for the Eff-TT / DLRM hot path (L1)."""
+from compile.kernels.bgemm import bgemm  # noqa: F401
+from compile.kernels.tt_lookup import (  # noqa: F401
+    tt_lookup, tt_lookup_noreuse, tt_embedding_bag, init_cores,
+)
+from compile.kernels.tt_grad import tt_core_grads, fused_sgd_update  # noqa: F401
+from compile.kernels.interaction import interaction  # noqa: F401

@@ -1,0 +1,92 @@
+"""Pallas batched-GEMM kernel — the Eff-TT contraction hot-spot.
+
+The paper's CUDA implementation prepares pointer arrays (Algorithm 1) and
+issues one ``cublasGemmBatchedEx`` over the distinct TT prefixes.  The TPU
+rethink (DESIGN.md §3): the L2/L3 side computes the *unique-prefix
+segmentation* with integer ops, then this kernel contracts one GEMM per
+grid step with all operands staged in VMEM.  ``interpret=True`` everywhere
+— the CPU PJRT plugin cannot run Mosaic custom-calls.
+
+Reverse-mode autodiff: ``pallas_call`` has no automatic transpose rule, so
+``bgemm`` carries a ``jax.custom_vjp`` whose backward is two more bgemm
+calls (dA = dO·Bᵀ, dB = Aᵀ·dO) — exactly the paper's observation that the
+TT backward is "d× the lookup cost" (Eq. 8) expressed as kernel reuse.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Grid-step tile over the batch (G) axis.  The M/K/N dims of the per-prefix
+# GEMMs are small (n1·n2 ≈ dim, R ≈ 8–32), so a whole [GB, M, K] tile fits
+# VMEM comfortably; tiling G keeps the scratch bounded for large batches.
+G_BLOCK = 32
+
+
+def _bgemm_kernel(a_ref, b_ref, o_ref):
+    """One grid step: contract G_BLOCK stacked GEMMs on the MXU.
+
+    a_ref: [G_BLOCK, M, K]   b_ref: [G_BLOCK, K, N]   o_ref: [G_BLOCK, M, N]
+    """
+    a = a_ref[...]
+    b = b_ref[...]
+    # dot_general with a leading batch dim maps to MXU-batched matmul.
+    o_ref[...] = jax.lax.dot_general(
+        a,
+        b,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _bgemm_raw(a: jax.Array, b: jax.Array) -> jax.Array:
+    """[G, M, K] @ [G, K, N] -> [G, M, N] via the Pallas kernel."""
+    g, m, k = a.shape
+    g2, k2, n = b.shape
+    assert g == g2 and k == k2, (a.shape, b.shape)
+    # Pad G up to a multiple of the block so BlockSpec tiling is exact.
+    gp = (g + G_BLOCK - 1) // G_BLOCK * G_BLOCK
+    if gp != g:
+        a = jnp.pad(a, ((0, gp - g), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, gp - g), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        _bgemm_kernel,
+        grid=(gp // G_BLOCK,),
+        in_specs=[
+            pl.BlockSpec((G_BLOCK, m, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((G_BLOCK, k, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((G_BLOCK, m, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((gp, m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+    return out[:g]
+
+
+@jax.custom_vjp
+def bgemm(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Batched matmul ``einsum('gmk,gkn->gmn')`` as a Pallas kernel."""
+    return _bgemm_raw(a, b)
+
+
+def _bgemm_fwd(a, b):
+    return _bgemm_raw(a, b), (a, b)
+
+
+def _bgemm_bwd(res, g):
+    a, b = res
+    da = _bgemm_raw(g, jnp.swapaxes(b, 1, 2))   # dO · Bᵀ
+    db = _bgemm_raw(jnp.swapaxes(a, 1, 2), g)   # Aᵀ · dO
+    return da, db
+
+
+bgemm.defvjp(_bgemm_fwd, _bgemm_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def bgemm_jit(a, b):
+    return bgemm(a, b)

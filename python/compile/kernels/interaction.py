@@ -1,0 +1,77 @@
+"""DLRM pairwise-dot feature interaction as a Pallas kernel.
+
+The interaction layer (paper Fig. 2) projects the bottom-MLP output and all
+sparse embeddings into a shared space, computes all pairwise dot products
+Z·Zᵀ, and keeps the strictly-lower triangle.  On TPU this is a single
+[F,D]×[D,F] MXU matmul per sample; the batch is tiled over the grid.
+
+``pallas_call`` has no automatic transpose rule, so the gram product
+carries a ``jax.custom_vjp``: for G = Z·Zᵀ, dZ = (dG + dGᵀ)·Z — one more
+batched matmul, routed through the same bgemm Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.bgemm import _bgemm_raw
+
+B_BLOCK = 32
+
+
+def _gram_kernel(z_ref, o_ref):
+    """z_ref: [B_BLOCK, F, D] -> o_ref: [B_BLOCK, F, F] (full gram)."""
+    z = z_ref[...]
+    o_ref[...] = jax.lax.dot_general(
+        z, z,
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _gram_raw(z: jax.Array) -> jax.Array:
+    b, f, d = z.shape
+    bp = (b + B_BLOCK - 1) // B_BLOCK * B_BLOCK
+    zp = jnp.pad(z, ((0, bp - b), (0, 0), (0, 0))) if bp != b else z
+    out = pl.pallas_call(
+        _gram_kernel,
+        grid=(bp // B_BLOCK,),
+        in_specs=[pl.BlockSpec((B_BLOCK, f, d), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((B_BLOCK, f, f), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, f, f), jnp.float32),
+        interpret=True,
+    )(zp)
+    return out[:b]
+
+
+@jax.custom_vjp
+def gram(z: jax.Array) -> jax.Array:
+    """Batched Z·Zᵀ [B, F, F] via the Pallas kernel."""
+    return _gram_raw(z)
+
+
+def _gram_fwd(z):
+    return _gram_raw(z), z
+
+
+def _gram_bwd(z, dg):
+    # d/dZ tr(dGᵀ·Z Zᵀ) = (dG + dGᵀ)·Z
+    return (_bgemm_raw(dg + jnp.swapaxes(dg, 1, 2), z),)
+
+
+gram.defvjp(_gram_fwd, _gram_bwd)
+
+
+def interaction(z: jax.Array) -> jax.Array:
+    """[B, F, D] -> [B, F(F-1)/2] lower-triangular pairwise dots.
+
+    The gram matrix is produced by the Pallas kernel; the (cheap, gather-
+    only) triangle extraction stays in XLA where it fuses with the top-MLP
+    concat.
+    """
+    b, f, _ = z.shape
+    g = gram(z)
+    li, lj = jnp.tril_indices(f, k=-1)
+    return g[:, li, lj]

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Nothing here is performance-relevant: these functions materialize the full
+embedding table from the TT cores and use textbook ops, so they are easy to
+audit against the paper's Eq. 1/2/6/8 and serve as the `assert_allclose`
+reference for pytest/hypothesis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.tt_spec import TtSpec
+
+
+def bgemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """einsum oracle for kernels.bgemm."""
+    return jnp.einsum("gmk,gkn->gmn", a, b)
+
+
+def materialize(spec: TtSpec, cores) -> jax.Array:
+    """Reconstruct the full (padded) embedding table W [padded_M, N].
+
+    Direct transcription of paper Eq. 2:
+        W[(i1 j1),(i2 j2),(i3 j3)] = D1[i1,j1,:] · D2[:,i2,j2,:] · D3[:,i3,j3]
+    """
+    d1, d2, d3 = cores
+    m1, m2, m3 = spec.m
+    n1, n2, n3 = spec.n
+    # [m1,n1,r] x [r,m2,n2,r] -> [m1,n1,m2,n2,r]
+    p = jnp.einsum("aur,rbvs->aubvs", d1, d2)
+    # ... x [r,m3,n3] -> [m1,n1,m2,n2,m3,n3]
+    w = jnp.einsum("aubvs,scw->aubvcw", p, d3)
+    # rows are (i1,i2,i3) row-major, cols are (j1,j2,j3) row-major
+    w = jnp.transpose(w, (0, 2, 4, 1, 3, 5))
+    return w.reshape(m1 * m2 * m3, n1 * n2 * n3)
+
+
+def lookup_ref(spec: TtSpec, cores, indices: jax.Array) -> jax.Array:
+    """Plain-table lookup oracle: rows of the materialized table.
+
+    indices: [...] int32 -> [..., N] f32.
+    """
+    w = materialize(spec, cores)
+    return jnp.take(w, indices, axis=0)
+
+
+def pooled_lookup_ref(spec: TtSpec, cores, indices: jax.Array) -> jax.Array:
+    """EmbeddingBag(sum) oracle: indices [B, K] -> [B, N]."""
+    return lookup_ref(spec, cores, indices).sum(axis=1)
+
+
+def interaction_ref(z: jax.Array) -> jax.Array:
+    """DLRM pairwise-dot feature interaction oracle.
+
+    z: [B, F, D] stacked feature vectors (bottom-MLP output + embeddings).
+    Returns [B, F(F-1)/2]: the strictly-lower-triangular entries of Z·Zᵀ,
+    row-major — identical to Facebook DLRM's `interact_features`.
+    """
+    b, f, _ = z.shape
+    zz = jnp.einsum("bfd,bgd->bfg", z, z)
+    li, lj = jnp.tril_indices(f, k=-1)
+    return zz[:, li, lj]
+
+
+def tt_core_grads_ref(spec: TtSpec, cores, indices: jax.Array,
+                      d_out: jax.Array):
+    """Oracle for the backward pass (paper Eq. 8) via jax autodiff.
+
+    indices: [B, K]; d_out: [B, N] gradient of the pooled embedding.
+    Returns grads for (d1, d2, d3).
+    """
+    def f(cs):
+        return pooled_lookup_ref(spec, cs, indices)
+
+    _, vjp = jax.vjp(f, tuple(cores))
+    (gc,) = vjp(d_out)
+    return gc

@@ -1,0 +1,114 @@
+"""Eff-TT embedding lookup (paper §III-B/C) built on the Pallas bgemm kernel.
+
+The lookup of row ``i`` from a 3-core TT table is two chained GEMMs:
+
+    P(i1,i2) = D1[i1]  @ D2[:, i2]        # [n1,R] @ [R, n2·R]  -> "prefix"
+    row(i)   = P(i1,i2) @ D3[:, i3]       # [n1·n2, R] @ [R, n3]
+
+The Eff-TT insight: rows sharing the prefix ``p = i // m3`` share P, so P
+is computed **once per distinct prefix in the batch** and held in the
+Reuse Buffer (Algorithm 1).  The paper deduplicates with a CUDA
+atomicCAS flag array; the TPU/Pallas rethink (DESIGN.md §3) deduplicates
+with ``jnp.unique`` (integer work outside the kernel, folded into the same
+HLO) and contracts one GEMM per *unique* prefix on the MXU.
+
+Both GEMM hops run through :func:`kernels.bgemm.bgemm`, so forward AND
+backward (via bgemm's custom VJP) execute in the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.tt_spec import TtSpec
+from compile.kernels.bgemm import bgemm
+
+
+def split_indices(spec: TtSpec, idx: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Flat row index -> (reuse prefix ``i//m3``, last TT index ``i%m3``)."""
+    m3 = spec.m[2]
+    return idx // m3, idx % m3
+
+
+def prefix_products(spec: TtSpec, cores, prefixes: jax.Array) -> jax.Array:
+    """Reuse-Buffer contents: P[g] for each (already unique) prefix.
+
+    prefixes: [U] int32 with values in [0, m1*m2).
+    Returns [U, n1*n2, R].
+    """
+    d1, d2, _ = cores
+    m2 = spec.m[1]
+    n1, n2, _ = spec.n
+    r = spec.rank
+    i1 = prefixes // m2
+    i2 = prefixes % m2
+    a = jnp.take(d1, i1, axis=0)                       # [U, n1, R]
+    b = jnp.take(d2, i2, axis=1)                       # [R, U, n2, R]
+    b = jnp.transpose(b, (1, 0, 2, 3)).reshape(-1, r, n2 * r)  # [U, R, n2·R]
+    p = bgemm(a, b)                                    # [U, n1, n2·R]
+    return p.reshape(-1, n1 * n2, r)
+
+
+def tt_lookup(spec: TtSpec, cores, indices: jax.Array) -> jax.Array:
+    """Gather rows [..., N] from the TT table with prefix reuse.
+
+    indices: any int32 shape; flattened internally.  The unique() size is
+    static (= #indices) as required under jit; padding slots recompute
+    prefix 0 harmlessly (they are never scattered to output).
+    """
+    shape = indices.shape
+    flat = indices.reshape(-1)
+    k = flat.shape[0]
+    pref, i3 = split_indices(spec, flat)
+
+    # --- Reuse-Buffer construction: one P per distinct prefix ------------
+    uniq, inv = jnp.unique(pref, return_inverse=True, size=k, fill_value=0)
+    p = prefix_products(spec, cores, uniq)             # [k, n1·n2, R]
+
+    # --- second hop: gather P by inverse map, contract with D3 slices ----
+    d3 = cores[2]                                      # [R, m3, n3]
+    c = jnp.take(d3, i3, axis=1)                       # [R, k, n3]
+    c = jnp.transpose(c, (1, 0, 2))                    # [k, R, n3]
+    rows = bgemm(jnp.take(p, inv, axis=0), c)          # [k, n1·n2, n3]
+    return rows.reshape(*shape, spec.dim)
+
+
+def tt_lookup_noreuse(spec: TtSpec, cores, indices: jax.Array) -> jax.Array:
+    """Ablation path (Fig. 12 'w/o intermediate reuse'): recompute P for
+    every index occurrence — the TT-Rec baseline behaviour."""
+    shape = indices.shape
+    flat = indices.reshape(-1)
+    pref, i3 = split_indices(spec, flat)
+    p = prefix_products(spec, cores, pref)             # [k, n1·n2, R] (dup work)
+    d3 = cores[2]
+    c = jnp.transpose(jnp.take(d3, i3, axis=1), (1, 0, 2))
+    rows = bgemm(p, c)
+    return rows.reshape(*shape, spec.dim)
+
+
+def tt_embedding_bag(spec: TtSpec, cores, indices: jax.Array,
+                     reuse: bool = True) -> jax.Array:
+    """nn.EmbeddingBag(mode='sum') drop-in (the paper's API claim).
+
+    indices: [B, K] -> pooled [B, N].
+    """
+    f = tt_lookup if reuse else tt_lookup_noreuse
+    rows = f(spec, cores, indices)                     # [B, K, N]
+    return rows.sum(axis=1)
+
+
+def init_cores(spec: TtSpec, key: jax.Array) -> Tuple[jax.Array, ...]:
+    """TT-Rec-style init: cores ~ N(0, σ) with σ chosen so the materialized
+    rows have variance ≈ 1/dim (matching nn.EmbeddingBag defaults)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    s1, s2, s3 = spec.core_shapes
+    # Var(row) ≈ (σ²)³ · R² — pick σ = (1/(dim · R²))^(1/6)
+    sigma = (1.0 / (spec.dim * spec.rank ** 2)) ** (1.0 / 6.0)
+    return (
+        jax.random.normal(k1, s1, jnp.float32) * sigma,
+        jax.random.normal(k2, s2, jnp.float32) * sigma,
+        jax.random.normal(k3, s3, jnp.float32) * sigma,
+    )

@@ -1,0 +1,196 @@
+"""L2: the Rec-AD DLRM (paper Fig. 2) in JAX, calling the L1 Pallas kernels.
+
+Architecture (faithful to Facebook DLRM / paper §II-A):
+
+    dense [B, Dd] ──► bottom MLP ──► z0 [B, E] ─┐
+    sparse idx [B, T] ──► per-table lookup ──► z1..zT [B, E] ─┤
+                                                              ▼
+                         interaction (pairwise dots, Pallas) [B, T(T+1)/2]
+                                                              ▼
+                            concat(z0, interactions) ──► top MLP ──► logit
+
+Large tables are Eff-TT compressed (kernels.tt_lookup); small ones stay
+plain — exactly the paper's policy ("tables with over one million rows are
+compressed, smaller ones left uncompressed", §V-C), scaled to artifact size.
+
+The classification head replaces CTR: sigmoid(logit) is P(state vector is
+FDIA-compromised).  Loss is BCE-with-logits; `train_step` is a fused
+fwd+bwd+SGD update lowered to a single HLO artifact so the rust runtime
+performs one PJRT call per mini-batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.tt_spec import TtSpec
+from compile.kernels.tt_lookup import tt_lookup, init_cores
+from compile.kernels.interaction import interaction
+
+
+@dataclasses.dataclass(frozen=True)
+class TableCfg:
+    rows: int
+    compressed: bool          # Eff-TT vs plain nn.Embedding
+    rank: int = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    """Shape plan for one DLRM variant (mirrors rust/src/config)."""
+
+    dense_dim: int
+    tables: Tuple[TableCfg, ...]
+    emb_dim: int = 16
+    bot_mlp: Tuple[int, ...] = (64, 32)
+    top_mlp: Tuple[int, ...] = (64, 32)
+    lr: float = 0.05
+
+    @property
+    def num_tables(self) -> int:
+        return len(self.tables)
+
+    def tt_specs(self):
+        return [TtSpec.plan(t.rows, self.emb_dim, t.rank) if t.compressed
+                else None for t in self.tables]
+
+
+def ieee118_cfg(scale: float = 1.0) -> ModelCfg:
+    """IEEE 118-bus detection model (Table II row: 6 dense / 7 sparse).
+
+    The paper's 19.53M-row aggregate table is represented by two large
+    (compressed) tables + five small categorical ones; `scale` shrinks row
+    counts for CPU-sized artifacts while preserving structure.
+    """
+    s = lambda r: max(32, int(r * scale))
+    return ModelCfg(
+        dense_dim=6,
+        tables=(
+            TableCfg(rows=s(12_000_000), compressed=True),   # bus-pair topo
+            TableCfg(rows=s(7_500_000), compressed=True),    # load profile id
+            TableCfg(rows=118, compressed=False),            # bus id
+            TableCfg(rows=186, compressed=False),            # branch id
+            TableCfg(rows=54, compressed=False),             # generator id
+            TableCfg(rows=24, compressed=False),             # hour of day
+            TableCfg(rows=91, compressed=False),             # measurement type
+        ),
+    )
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def _init_mlp(key, dims: Sequence[int]) -> List[Tuple[jax.Array, jax.Array]]:
+    layers = []
+    for din, dout in zip(dims[:-1], dims[1:]):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (din, dout), jnp.float32) * (2.0 / din) ** 0.5
+        layers.append((w, jnp.zeros((dout,), jnp.float32)))
+    return layers
+
+
+def init_params(cfg: ModelCfg, key: jax.Array) -> Dict[str, Any]:
+    specs = cfg.tt_specs()
+    n_feat = cfg.num_tables + 1
+    n_inter = n_feat * (n_feat - 1) // 2
+    key, kb, kt = jax.random.split(key, 3)
+    params: Dict[str, Any] = {
+        "bot": _init_mlp(kb, (cfg.dense_dim, *cfg.bot_mlp, cfg.emb_dim)),
+        "top": _init_mlp(kt, (cfg.emb_dim + n_inter, *cfg.top_mlp, 1)),
+        "tables": [],
+    }
+    for t, spec in zip(cfg.tables, specs):
+        key, sub = jax.random.split(key)
+        if spec is not None:
+            params["tables"].append(tuple(init_cores(spec, sub)))
+        else:
+            w = jax.random.normal(sub, (t.rows, cfg.emb_dim), jnp.float32)
+            params["tables"].append(w * (1.0 / cfg.emb_dim) ** 0.5)
+    return params
+
+
+def _mlp(layers, x, final_relu: bool) -> jax.Array:
+    for i, (w, b) in enumerate(layers):
+        x = x @ w + b
+        if i + 1 < len(layers) or final_relu:
+            x = jax.nn.relu(x)
+    return x
+
+
+# --------------------------------------------------------------------------
+# Forward / loss / train step
+# --------------------------------------------------------------------------
+
+def forward(cfg: ModelCfg, params, dense: jax.Array, idx: jax.Array
+            ) -> jax.Array:
+    """dense [B, Dd] f32, idx [B, T] int32 -> logits [B]."""
+    specs = cfg.tt_specs()
+    z0 = _mlp(params["bot"], dense, final_relu=True)        # [B, E]
+    feats = [z0]
+    for t, (spec, tab) in enumerate(zip(specs, params["tables"])):
+        col = idx[:, t]
+        if spec is not None:
+            feats.append(tt_lookup(spec, tab, col))         # Pallas path
+        else:
+            feats.append(jnp.take(tab, col, axis=0))
+    z = jnp.stack(feats, axis=1)                            # [B, T+1, E]
+    inter = interaction(z)                                  # Pallas path
+    x = jnp.concatenate([z0, inter], axis=1)
+    return _mlp(params["top"], x, final_relu=False)[:, 0]
+
+
+def predict(cfg: ModelCfg, params, dense, idx) -> jax.Array:
+    """Attack probability per sample (serving head)."""
+    return jax.nn.sigmoid(forward(cfg, params, dense, idx))
+
+
+def bce_loss(cfg: ModelCfg, params, dense, idx, labels) -> jax.Array:
+    logits = forward(cfg, params, dense, idx)
+    # numerically stable BCE-with-logits
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def train_step(cfg: ModelCfg, params, dense, idx, labels):
+    """One fused SGD step: returns (loss, new_params).
+
+    Lowered as a single HLO module so L3 pays one dispatch per batch; TT
+    core grads flow through the bgemm custom-VJP (aggregation happens via
+    the unique/segment structure of the forward — see tt_grad.py for the
+    explicit formulation used by the ablation artifacts).
+    """
+    loss, grads = jax.value_and_grad(
+        lambda p: bce_loss(cfg, p, dense, idx, labels))(params)
+    new = jax.tree_util.tree_map(lambda p, g: p - cfg.lr * g, params, grads)
+    return loss, new
+
+
+# --------------------------------------------------------------------------
+# Flat interchange layout (rust side reads meta.json; order must be stable)
+# --------------------------------------------------------------------------
+
+def flatten_params(params) -> List[jax.Array]:
+    leaves, _ = jax.tree_util.tree_flatten(params)
+    return leaves
+
+
+def params_treedef(cfg: ModelCfg):
+    dummy = init_params(cfg, jax.random.PRNGKey(0))
+    return jax.tree_util.tree_structure(dummy)
+
+
+def param_meta(cfg: ModelCfg) -> List[Dict[str, Any]]:
+    """Name+shape+dtype per flat leaf, for artifacts/meta.json."""
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(params)[0]
+    out = []
+    for path, leaf in leaves_with_path:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append({"name": name, "shape": list(leaf.shape),
+                    "dtype": str(leaf.dtype)})
+    return out

@@ -1,0 +1,127 @@
+"""Tensor-Train embedding-table shape planning (shared by kernels & model).
+
+A plain embedding table ``W ∈ R^{M×N}`` is factored (paper Eq. 2) as a
+3-core tensor train:
+
+    D1 ∈ R^{m1, n1, R1}          (boundary rank R0 = 1)
+    D2 ∈ R^{R1, m2, n2, R2}
+    D3 ∈ R^{R2, m3, n3}          (boundary rank R3 = 1)
+
+with ``M = m1·m2·m3`` and ``N = n1·n2·n3``.  Row ``i`` decomposes into TT
+indices (paper Eq. 5, row-major):
+
+    i1 = i // (m2·m3)
+    i2 = (i // m3) % m2
+    i3 = i % m3
+
+and the *reuse prefix* of the paper's Algorithm 1 is ``i // m3`` — two rows
+sharing it read the same slices of D1 and D2, so the partial product
+``D1[i1] @ D2[:, i2]`` can be computed once per distinct prefix and kept in
+the Reuse Buffer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+
+def factorize3(x: int) -> Tuple[int, int, int]:
+    """Split ``x`` into three factors as close to x^(1/3) as possible.
+
+    Mirrors ``rust/src/tt/shapes.rs::factorize3`` — the two sides must agree
+    so that artifacts and the native engine index cores identically.
+    """
+    if x <= 0:
+        raise ValueError(f"cannot factorize non-positive {x}")
+    best = (1, 1, x)
+    best_cost = _spread((1, 1, x))
+    for a in range(1, int(round(x ** (1.0 / 3.0))) + 2):
+        if x % a:
+            continue
+        rem = x // a
+        for b in range(a, int(math.isqrt(rem)) + 1):
+            if rem % b:
+                continue
+            cand = tuple(sorted((a, b, rem // b)))
+            cost = _spread(cand)
+            if cost < best_cost:
+                best, best_cost = cand, cost
+    return best  # ascending: m1 <= m2 <= m3
+
+
+def _spread(f: Sequence[int]) -> int:
+    return max(f) - min(f)
+
+
+def padded_rows(rows: int) -> int:
+    """Smallest M >= rows whose factorize3 is 'balanced enough'.
+
+    Embedding tables rarely have smooth cardinalities; like TT-Rec we pad
+    the virtual row count so it factors into three near-cubic terms (excess
+    rows are simply never addressed).
+    """
+    m = rows
+    while True:
+        f = factorize3(m)
+        if max(f) <= 4 * min(f) or max(f) <= 64:
+            return m
+        m += 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TtSpec:
+    """Complete shape plan for one Eff-TT table."""
+
+    rows: int           # logical row count M' (pre-padding)
+    dim: int            # embedding dim N
+    m: Tuple[int, int, int]
+    n: Tuple[int, int, int]
+    rank: int           # R1 == R2 == R (R0 = R3 = 1)
+
+    @staticmethod
+    def plan(rows: int, dim: int, rank: int = 16) -> "TtSpec":
+        m = factorize3(padded_rows(rows))
+        n = factorize3(dim)
+        if n[0] * n[1] * n[2] != dim:
+            raise ValueError(f"dim {dim} not factorable into 3 terms")
+        return TtSpec(rows=rows, dim=dim, m=m, n=n, rank=rank)
+
+    # -- core shapes ------------------------------------------------------
+    @property
+    def core_shapes(self) -> List[Tuple[int, ...]]:
+        m1, m2, m3 = self.m
+        n1, n2, n3 = self.n
+        r = self.rank
+        return [(m1, n1, r), (r, m2, n2, r), (r, m3, n3)]
+
+    @property
+    def padded_m(self) -> int:
+        return self.m[0] * self.m[1] * self.m[2]
+
+    # -- index math (must mirror rust/src/tt/shapes.rs) --------------------
+    def tt_indices(self, i: int) -> Tuple[int, int, int]:
+        m2, m3 = self.m[1], self.m[2]
+        return i // (m2 * m3), (i // m3) % m2, i % m3
+
+    def prefix_of(self, i: int) -> int:
+        """Reuse-buffer key (Algorithm 1: ``Bufe_index = Index / length_3``)."""
+        return i // self.m[2]
+
+    # -- accounting --------------------------------------------------------
+    def tt_params(self) -> int:
+        return sum(int(math.prod(s)) for s in self.core_shapes)
+
+    def plain_params(self) -> int:
+        return self.rows * self.dim
+
+    def compression_ratio(self) -> float:
+        return self.plain_params() / self.tt_params()
+
+    def vmem_bytes(self, batch_prefixes: int) -> int:
+        """Estimated VMEM residency for one kernel tile (see DESIGN §8):
+        all three cores + the reuse-buffer scratch [U, n1*n2, R]."""
+        cores = self.tt_params() * 4
+        scratch = batch_prefixes * self.n[0] * self.n[1] * self.rank * 4
+        return cores + scratch

@@ -1,0 +1,117 @@
+"""L2 model tests: shapes, loss descent, numerical gradient check, and the
+artifact interchange layout."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.tt_spec import TtSpec
+
+
+def tiny_cfg():
+    return model.ModelCfg(
+        dense_dim=6,
+        tables=(
+            model.TableCfg(rows=600, compressed=True, rank=4),
+            model.TableCfg(rows=450, compressed=True, rank=4),
+            model.TableCfg(rows=30, compressed=False),
+        ),
+        emb_dim=8,
+        bot_mlp=(16,),
+        top_mlp=(16,),
+        lr=0.1,
+    )
+
+
+def batch(cfg, b, seed=0):
+    r = np.random.default_rng(seed)
+    dense = jnp.asarray(r.normal(size=(b, cfg.dense_dim)), jnp.float32)
+    idx = jnp.asarray(
+        np.stack([r.integers(0, t.rows, b) for t in cfg.tables], axis=1),
+        jnp.int32)
+    labels = jnp.asarray(r.random(b) > 0.5, jnp.float32)
+    return dense, idx, labels
+
+
+def test_forward_shapes():
+    cfg = tiny_cfg()
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    dense, idx, _ = batch(cfg, 5)
+    logits = model.forward(cfg, params, dense, idx)
+    assert logits.shape == (5,)
+    probs = model.predict(cfg, params, dense, idx)
+    assert float(jnp.min(probs)) >= 0.0 and float(jnp.max(probs)) <= 1.0
+
+
+def test_train_step_descends_and_updates_all_leaves():
+    cfg = tiny_cfg()
+    params = model.init_params(cfg, jax.random.PRNGKey(1))
+    dense, idx, labels = batch(cfg, 16, seed=3)
+    loss0, new = model.train_step(cfg, params, dense, idx, labels)
+    loss1, _ = model.train_step(cfg, new, dense, idx, labels)
+    assert float(loss1) < float(loss0)
+    # every MLP leaf must have moved (TT cores too, except untouched rows)
+    for (a, b) in zip(model.flatten_params(params)[:4],
+                      model.flatten_params(new)[:4]):
+        assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_overfits_tiny_dataset():
+    """End-to-end learnability: 32 samples should be separable."""
+    cfg = tiny_cfg()
+    params = model.init_params(cfg, jax.random.PRNGKey(2))
+    dense, idx, labels = batch(cfg, 32, seed=9)
+    loss = None
+    for _ in range(120):
+        loss, params = model.train_step(cfg, params, dense, idx, labels)
+    assert float(loss) < 0.2
+
+
+def test_grad_matches_numerical():
+    """Finite-difference check through the full model (incl. Pallas path)."""
+    cfg = tiny_cfg()
+    params = model.init_params(cfg, jax.random.PRNGKey(4))
+    dense, idx, labels = batch(cfg, 4, seed=5)
+    f = lambda p: model.bce_loss(cfg, p, dense, idx, labels)
+    g = jax.grad(f)(params)
+    # probe one TT core entry and one MLP weight
+    leaves, tree = jax.tree_util.tree_flatten(params)
+    gleaves = jax.tree_util.tree_flatten(g)[0]
+    for li in [0, len(leaves) - 2]:
+        eps = 1e-3
+        bumped = [l for l in leaves]
+        probe = np.zeros(leaves[li].shape, np.float32)
+        probe_idx = tuple(0 for _ in leaves[li].shape)
+        probe[probe_idx] = eps
+        bumped[li] = leaves[li] + probe
+        fplus = float(f(jax.tree_util.tree_unflatten(tree, bumped)))
+        bumped[li] = leaves[li] - probe
+        fminus = float(f(jax.tree_util.tree_unflatten(tree, bumped)))
+        num = (fplus - fminus) / (2 * eps)
+        ana = float(np.asarray(gleaves[li])[probe_idx])
+        assert abs(num - ana) < 5e-2 * max(1.0, abs(ana)), (li, num, ana)
+
+
+def test_param_meta_is_stable_and_complete():
+    cfg = tiny_cfg()
+    meta = model.param_meta(cfg)
+    params = model.flatten_params(model.init_params(cfg, jax.random.PRNGKey(0)))
+    assert len(meta) == len(params)
+    for m, p in zip(meta, params):
+        assert tuple(m["shape"]) == p.shape
+        assert m["dtype"] == str(p.dtype)
+    # deterministic across calls
+    assert meta == model.param_meta(cfg)
+
+
+def test_ieee118_schema_matches_table2():
+    cfg = model.ieee118_cfg(scale=1.0)
+    assert cfg.dense_dim == 6 and cfg.num_tables == 7      # Table II row
+    rows = sum(t.rows for t in cfg.tables)
+    assert abs(rows - 19_530_000) / 19_530_000 < 0.01      # ≈19.53M rows
+    specs = [s for s in cfg.tt_specs() if s is not None]
+    assert len(specs) == 2                                  # >1M rows ⇒ TT
+    for s in specs:
+        assert s.compression_ratio() > 4                    # Table IV: 5.33×

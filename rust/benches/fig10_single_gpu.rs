@@ -1,0 +1,56 @@
+//! Fig. 10 — end-to-end single-GPU training speedup over DLRM, per
+//! dataset, on the V100-class and T4-class platforms.
+//!
+//! Paper shape: Rec-AD ≈3× DLRM (avg), ≈1.5× FAE, ≈1.4× TT-Rec on V100;
+//! the same ordering holds on T4 with smaller gaps.
+
+use recad::baselines::dlrm_ps::DlrmPs;
+use recad::baselines::fae::Fae;
+use recad::baselines::recad::RecAd;
+use recad::baselines::ttrec::TtRec;
+use recad::baselines::{run_arm, TrainArm};
+use recad::bench_support::{bench_schemas, engine_for, workload, BENCH_SCALE};
+use recad::coordinator::platform::SimPlatform;
+use recad::util::bench::Table;
+use recad::util::prng::Rng;
+
+fn main() {
+    for platform in [SimPlatform::v100(1), SimPlatform::t4(1)] {
+        let mut table = Table::new(
+            &format!("Fig. 10 — single-GPU speedup over DLRM ({})", platform.name),
+            &["Dataset", "DLRM", "FAE", "TT-Rec", "Rec-AD", "Paper Rec-AD"],
+        );
+        for schema in bench_schemas() {
+            let (profile, train) = workload(&schema, 10, 16, 512);
+            let threshold = (1_000_000.0 * BENCH_SCALE) as u64;
+            let cfg = engine_for(&schema, BENCH_SCALE, 8);
+            let mut arms: Vec<Box<dyn TrainArm>> = vec![
+                Box::new(DlrmPs::new(cfg.clone(), platform, threshold, &mut Rng::new(1))),
+                Box::new(Fae::new(
+                    cfg.clone(),
+                    platform,
+                    threshold,
+                    &profile,
+                    0.85,
+                    &mut Rng::new(1),
+                )),
+                Box::new(TtRec::new(cfg.clone(), platform, &mut Rng::new(1))),
+                Box::new(RecAd::new(cfg.clone(), platform, &profile, true, &mut Rng::new(1))),
+            ];
+            let reports: Vec<_> = arms.iter_mut().map(|a| run_arm(a.as_mut(), &train)).collect();
+            let dlrm_t = reports[0].total().as_secs_f64();
+            let speedup = |i: usize| dlrm_t / reports[i].total().as_secs_f64();
+            table.row(&[
+                schema.name.to_string(),
+                "1.00x".to_string(),
+                format!("{:.2}x", speedup(1)),
+                format!("{:.2}x", speedup(2)),
+                format!("{:.2}x", speedup(3)),
+                "~3x (V100 avg)".to_string(),
+            ]);
+        }
+        table.print();
+    }
+    println!("\nnote: compute measured on CPU; link costs from the platform model are");
+    println!("slowdown-scaled so the compute:comm ratio matches the paper's testbed (DESIGN.md §4).");
+}

@@ -1,0 +1,85 @@
+//! Fig. 11 — training throughput, 1 GPU vs 4 GPUs (Rec-AD data-parallel
+//! replication vs DLRM model-parallel sharding).
+//!
+//! Paper shape: DLRM slightly ahead at 1 GPU (raw compute, no TT
+//! overhead); Rec-AD 1.4× ahead at 4 GPUs (no peer-to-peer embedding
+//! traffic).
+
+use std::time::Instant;
+
+use recad::baselines::multi_gpu::{
+    dlrm_model_parallel_step, recad_step, throughput, MultiGpuWorkload,
+};
+use recad::bench_support::{engine_for, scaled, workload, BENCH_SCALE};
+use recad::coordinator::engine::NativeDlrm;
+use recad::coordinator::platform::SimPlatform;
+use recad::data::schema;
+use recad::util::bench::Table;
+use recad::util::prng::Rng;
+
+fn main() {
+    let platform = SimPlatform::v100(4);
+    let s = scaled(&schema::criteo_kaggle(), BENCH_SCALE);
+    let (_, train) = workload(&s, 21, 6, 1024);
+
+    // measure per-batch compute for both engines
+    let measure = |compressed: bool| {
+        let mut cfg = engine_for(&s, BENCH_SCALE, 8);
+        if !compressed {
+            for t in cfg.tables.iter_mut() {
+                t.1 = false;
+            }
+        }
+        let mut engine = NativeDlrm::new(cfg, &mut Rng::new(1));
+        engine.train_step(&train[0]); // warmup
+        let t0 = Instant::now();
+        for b in &train {
+            engine.train_step(b);
+        }
+        (t0.elapsed() / train.len() as u32, engine.embedding_bytes())
+    };
+    let (recad_compute, recad_bytes) = measure(true);
+    let (dlrm_compute, _) = measure(false);
+
+    let wl = |compute| MultiGpuWorkload {
+        compute,
+        batch_size: 1024,
+        n_sparse: s.n_sparse(),
+        emb_dim: 16,
+        dp_grad_bytes: recad_bytes.min(8 << 20),
+    };
+
+    let mut t = Table::new(
+        "Fig. 11 — throughput (samples/s), 1 vs 4 GPUs (Kaggle-shaped)",
+        &["System", "1 GPU", "4 GPU", "4/1 scaling", "Paper shape"],
+    );
+    let r1 = throughput(&wl(recad_compute), recad_step(&wl(recad_compute), &platform.cost, 1), 1);
+    let r4 = throughput(&wl(recad_compute), recad_step(&wl(recad_compute), &platform.cost, 4), 4);
+    let d1 = throughput(
+        &wl(dlrm_compute),
+        dlrm_model_parallel_step(&wl(dlrm_compute), &platform.cost, 1),
+        1,
+    );
+    let d4 = throughput(
+        &wl(dlrm_compute),
+        dlrm_model_parallel_step(&wl(dlrm_compute), &platform.cost, 4),
+        4,
+    );
+    t.row(&[
+        "DLRM (model-parallel)".into(),
+        format!("{d1:.0}"),
+        format!("{d4:.0}"),
+        format!("{:.2}x", d4 / d1),
+        "ahead at 1 GPU".into(),
+    ]);
+    t.row(&[
+        "Rec-AD (data-parallel)".into(),
+        format!("{r1:.0}"),
+        format!("{r4:.0}"),
+        format!("{:.2}x", r4 / r1),
+        "1.4x DLRM at 4 GPU".into(),
+    ]);
+    t.print();
+    println!("\nmeasured: Rec-AD(4)/DLRM(4) = {:.2}x (paper: 1.4x)", r4 / d4);
+    println!("          DLRM(1)/Rec-AD(1) = {:.2}x (paper: DLRM slightly ahead)", d1 / r1);
+}

@@ -1,0 +1,84 @@
+//! Tables II & IV — dataset schemas and embedding-table footprint
+//! (plain DLRM vs Eff-TT at the calibrated ranks).
+//!
+//! Paper Table IV: Avazu 0.55GB→87.6MB (6.22×), Terabyte 59.2GB→797.9MB
+//! (74.19×), Kaggle 1.9GB→258.2MB (7.29×), IEEE118 1.22GB→235.7MB (5.33×).
+//! These are *analytic* at full scale (the tables are shape arithmetic)
+//! plus an instantiated verification at bench scale.
+
+use recad::bench_support::{scaled, BENCH_SCALE};
+use recad::coordinator::engine::NativeDlrm;
+use recad::data::schema::all_schemas;
+use recad::tt::shapes::TtShapes;
+use recad::util::bench::{fmt_bytes, Table};
+use recad::util::prng::Rng;
+
+fn main() {
+    let paper = [6.22, 74.19, 7.29, 5.33];
+
+    let mut t2 = Table::new(
+        "Table II — dataset schemas",
+        &["Dataset", "Dense", "Sparse", "Rows", "Dim", "Plain size", "Paper size"],
+    );
+    let paper_sizes = ["0.55GB", "59.2GB", "1.9GB", "1.22GB"];
+    for (s, ps) in all_schemas().iter().zip(paper_sizes) {
+        t2.row(&[
+            s.name.to_string(),
+            s.n_dense.to_string(),
+            s.n_sparse().to_string(),
+            format!("{:.1}M", s.total_rows() as f64 / 1e6),
+            s.emb_dim.to_string(),
+            fmt_bytes(s.plain_bytes()),
+            ps.to_string(),
+        ]);
+    }
+    t2.print();
+
+    let mut t4 = Table::new(
+        "Table IV — embedding footprint (full-scale, analytic)",
+        &["Dataset", "DLRM", "Rec-AD", "Ratio", "Paper ratio"],
+    );
+    for (s, p) in all_schemas().iter().zip(paper) {
+        let tt = s.tt_bytes(s.ft_rank, 1_000_000);
+        t4.row(&[
+            s.name.to_string(),
+            fmt_bytes(s.plain_bytes()),
+            fmt_bytes(tt),
+            format!("{:.2}x", s.compression_ratio(s.ft_rank, 1_000_000)),
+            format!("{p:.2}x"),
+        ]);
+    }
+    t4.print();
+
+    // instantiated verification at bench scale: the engine's actual
+    // allocated bytes must match the analytic accounting
+    let mut tv = Table::new(
+        "Table IV(b) — instantiated verification (bench scale)",
+        &["Dataset", "Engine bytes (TT)", "Analytic (TT)", "Match"],
+    );
+    for s in [scaled(&all_schemas()[0], BENCH_SCALE), scaled(&all_schemas()[3], BENCH_SCALE)] {
+        let threshold = (1_000_000.0 * BENCH_SCALE) as u64;
+        let cfg = recad::bench_support::engine_for(&s, BENCH_SCALE, 8);
+        let engine = NativeDlrm::new(cfg, &mut Rng::new(1));
+        let analytic: u64 = s
+            .vocabs
+            .iter()
+            .map(|&v| {
+                if v > threshold {
+                    TtShapes::plan(v, 16, 8).tt_bytes()
+                } else {
+                    v * 16 * 4
+                }
+            })
+            .sum();
+        let actual = engine.embedding_bytes();
+        tv.row(&[
+            s.name.to_string(),
+            fmt_bytes(actual),
+            fmt_bytes(analytic),
+            format!("{}", actual == analytic),
+        ]);
+        assert_eq!(actual, analytic, "{}: engine/analytic drift", s.name);
+    }
+    tv.print();
+}

@@ -1,0 +1,116 @@
+//! Table VI — streaming real-time detection (batch size 1, RTX-2060-class
+//! edge box): DLRM vs Rec-AD on latency, TPS, memory, deployment size,
+//! and the 100 MB-scale total processing time.
+//!
+//! Paper: latency 25→21.5 ms (−14%), TPS 40→46.5 (+16%), GPU memory
+//! 320→210 MB (−34%), deployment 180→95 MB (−47%), total 3.47→3.0 h.
+
+use recad::coordinator::engine::{EngineCfg, NativeDlrm};
+use recad::coordinator::platform::SimPlatform;
+use recad::coordinator::trainer::train_ieee118;
+use recad::powersys::dataset::{generate, DatasetCfg, SparseVocab};
+use recad::serve::{Detector, StreamingServer};
+use recad::util::bench::{fmt_bytes, fmt_dur, Table};
+
+const SCALE: f64 = 1.0 / 2000.0;
+/// ~100 MB of 52-byte samples ≈ 2M samples; we serve a slice and
+/// extrapolate the total (the paper's "100MB Total Time" row).
+const SAMPLE_BYTES: f64 = 52.0;
+const STREAM_REQUESTS: usize = 1500;
+
+fn serve_arm(name: &str, compressed: bool, ds: &recad::powersys::dataset::Ieee118Dataset)
+    -> (String, f64, f64, u64, u64) {
+    let mut cfg = EngineCfg::ieee118(SCALE);
+    if !compressed {
+        for t in cfg.tables.iter_mut() {
+            t.1 = false;
+        }
+    }
+    let (_, engine) = train_ieee118(cfg, ds, 2, 64, 3);
+    let deploy = engine.model_bytes();
+    // peak run memory ≈ params + activations + cache slack (dominated by
+    // the embedding tables at real scale; measured here at bench scale)
+    let peak = deploy + 64 * 1024;
+    let platform = SimPlatform::rtx2060();
+    // Placement premise (paper Table VI: DLRM peaks at 320 MB of GPU
+    // memory, i.e. the 1.22 GB uncompressed tables stay in host memory):
+    // the uncompressed arm fetches its two big-table rows over PCIe per
+    // request; Rec-AD's Eff-TT cores are device-resident (dispatch only).
+    let per_request = if compressed {
+        platform.cost.dispatch
+    } else {
+        platform.cost.dispatch
+            + platform.cost.gather_time(2)
+            + platform.cost.h2d_time(2 * 16 * 4)
+    };
+    let det = Detector::new(engine, 0.5);
+    let server = StreamingServer::start(det, 1, per_request);
+    let report = server.run_stream(&ds.samples[..STREAM_REQUESTS], deploy);
+    (
+        name.to_string(),
+        report.mean_latency.as_secs_f64(),
+        report.tps,
+        peak,
+        deploy,
+    )
+}
+
+fn main() {
+    let ds = generate(&DatasetCfg {
+        n_normal: 4000,
+        n_attack: 1000,
+        vocab: SparseVocab::ieee118(SCALE),
+        n_profiles: 100,
+        noise_std: 0.005,
+        seed: 6,
+    });
+
+    let dlrm = serve_arm("DLRM", false, &ds);
+    let recad_arm = serve_arm("Rec-AD", true, &ds);
+
+    let total_samples = (100e6 / SAMPLE_BYTES) as u64;
+    let mut t = Table::new(
+        "Table VI — streaming detection, batch size 1 (RTX-2060-class)",
+        &["Metric", "DLRM", "Rec-AD", "Delta", "Paper delta"],
+    );
+    t.row(&[
+        "Single-detection latency".into(),
+        fmt_dur(dlrm.1),
+        fmt_dur(recad_arm.1),
+        format!("{:+.1}%", 100.0 * (recad_arm.1 - dlrm.1) / dlrm.1),
+        "-14%".into(),
+    ]);
+    t.row(&[
+        "Throughput (TPS)".into(),
+        format!("{:.1}/s", dlrm.2),
+        format!("{:.1}/s", recad_arm.2),
+        format!("{:+.1}%", 100.0 * (recad_arm.2 - dlrm.2) / dlrm.2),
+        "+16%".into(),
+    ]);
+    t.row(&[
+        "Peak memory".into(),
+        fmt_bytes(dlrm.3),
+        fmt_bytes(recad_arm.3),
+        format!("{:+.1}%", 100.0 * (recad_arm.3 as f64 - dlrm.3 as f64) / dlrm.3 as f64),
+        "-34%".into(),
+    ]);
+    t.row(&[
+        "Deployment size".into(),
+        fmt_bytes(dlrm.4),
+        fmt_bytes(recad_arm.4),
+        format!("{:+.1}%", 100.0 * (recad_arm.4 as f64 - dlrm.4 as f64) / dlrm.4 as f64),
+        "-47%".into(),
+    ]);
+    let total_d = total_samples as f64 / dlrm.2;
+    let total_r = total_samples as f64 / recad_arm.2;
+    t.row(&[
+        "100MB total time".into(),
+        format!("{:.2}h", total_d / 3600.0),
+        format!("{:.2}h", total_r / 3600.0),
+        format!("{:+.1}%", 100.0 * (total_r - total_d) / total_d),
+        "-13.5%".into(),
+    ]);
+    t.print();
+    println!("\nnote: vocab scale {SCALE} — absolute MB/ms shrink with it; the reproduced");
+    println!("quantities are the DLRM→Rec-AD deltas (right columns).");
+}

@@ -1,0 +1,144 @@
+//! Vanilla DLRM with a parameter-server embedding layout (paper baseline
+//! [24]): uncompressed tables too large for HBM live in host memory; every
+//! batch pays gather + H2D for its rows and D2H for its gradients.
+
+use std::time::Instant;
+
+use crate::baselines::{StepCost, TrainArm};
+use crate::coordinator::engine::{EngineCfg, NativeDlrm};
+use crate::coordinator::platform::SimPlatform;
+use crate::data::ctr::Batch;
+use crate::util::prng::Rng;
+
+pub struct DlrmPs {
+    pub engine: NativeDlrm,
+    pub platform: SimPlatform,
+    /// Table slots that exceed the device budget and live on the host.
+    host_slots: Vec<usize>,
+}
+
+impl DlrmPs {
+    /// Build with every table uncompressed; tables bigger than
+    /// `host_threshold_rows` are host-resident (PS mode).
+    pub fn new(
+        mut cfg: EngineCfg,
+        platform: SimPlatform,
+        host_threshold_rows: u64,
+        rng: &mut Rng,
+    ) -> DlrmPs {
+        for t in cfg.tables.iter_mut() {
+            t.1 = false; // uncompressed everywhere — the baseline
+        }
+        let host_slots = cfg
+            .tables
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.0 > host_threshold_rows)
+            .map(|(i, _)| i)
+            .collect();
+        DlrmPs { engine: NativeDlrm::new(cfg, rng), platform, host_slots }
+    }
+
+    fn distinct_host_rows(&self, batch: &Batch) -> usize {
+        let ns = self.engine.cfg.n_tables();
+        let mut seen = std::collections::HashSet::new();
+        for &slot in &self.host_slots {
+            for idx in batch.sparse_col(slot, ns) {
+                seen.insert((slot, idx));
+            }
+        }
+        seen.len()
+    }
+}
+
+impl TrainArm for DlrmPs {
+    fn name(&self) -> String {
+        "DLRM".to_string()
+    }
+
+    fn step(&mut self, batch: &Batch) -> StepCost {
+        let rows = self.distinct_host_rows(batch);
+        let bytes = (rows * self.engine.cfg.emb_dim * 4) as u64;
+        let c = &self.platform.cost;
+        // gather + H2D (rows down) + D2H (grads back) + host apply
+        let comm = c.gather_time(rows)
+            + c.h2d_time(bytes)
+            + c.h2d_time(bytes)
+            + c.gather_time(rows)
+            + c.dispatch * 2;
+        let t = Instant::now();
+        let loss = self.engine.train_step(batch);
+        StepCost { loss, compute: t.elapsed(), comm }
+    }
+
+    fn device_embedding_bytes(&self) -> u64 {
+        self.engine
+            .tables
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !self.host_slots.contains(i))
+            .map(|(_, t)| t.bytes())
+            .sum()
+    }
+
+    fn host_embedding_bytes(&self) -> u64 {
+        self.engine
+            .tables
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| self.host_slots.contains(i))
+            .map(|(_, t)| t.bytes())
+            .sum()
+    }
+}
+
+// expose for FAE which shares the table-placement logic
+impl DlrmPs {
+    pub fn host_slots(&self) -> &[usize] {
+        &self.host_slots
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn small() -> (DlrmPs, Batch) {
+        let cfg = EngineCfg {
+            dense_dim: 4,
+            emb_dim: 8,
+            tables: vec![(5000, false), (100, false)],
+            tt_rank: 4,
+            bot_hidden: vec![8],
+            top_hidden: vec![8],
+            lr: 0.05,
+            tt_opts: Default::default(),
+        };
+        let mut rng = Rng::new(1);
+        let arm = DlrmPs::new(cfg, SimPlatform::v100(1), 1000, &mut rng);
+        let batch = Batch {
+            dense: vec![0.1; 8 * 4],
+            sparse: (0..16).map(|i| (i * 37 % 100) as u64).collect(),
+            labels: vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0],
+            batch_size: 8,
+        };
+        (arm, batch)
+    }
+
+    #[test]
+    fn big_table_goes_to_host() {
+        let (arm, _) = small();
+        assert_eq!(arm.host_slots(), &[0]);
+        assert!(arm.host_embedding_bytes() > arm.device_embedding_bytes());
+    }
+
+    #[test]
+    fn step_charges_comm() {
+        let (mut arm, batch) = small();
+        let c = arm.step(&batch);
+        assert!(c.comm > Duration::ZERO);
+        assert!(c.compute > Duration::ZERO);
+        assert!(c.loss.is_finite());
+    }
+}

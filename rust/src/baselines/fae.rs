@@ -1,0 +1,193 @@
+//! FAE baseline (paper [25]): hot embeddings live on the GPU, cold ones on
+//! the host.  Batches containing only hot indices train entirely on
+//! device; a batch touching any cold index falls back to the PS path.
+//! The paper observes ~25% of batches stay cold-contaminated — the ceiling
+//! FAE hits and Rec-AD removes (§V-H).
+
+use std::collections::HashSet;
+use std::time::Instant;
+
+use crate::baselines::{StepCost, TrainArm};
+use crate::coordinator::engine::{EngineCfg, NativeDlrm};
+use crate::coordinator::platform::SimPlatform;
+use crate::data::ctr::Batch;
+use crate::reorder::freq::FreqCounter;
+use crate::util::prng::Rng;
+
+pub struct Fae {
+    pub engine: NativeDlrm,
+    pub platform: SimPlatform,
+    /// Per-table hot sets (device-resident rows).
+    hot: Vec<HashSet<u64>>,
+    big_slots: Vec<usize>,
+    pub hot_batches: u64,
+    pub cold_batches: u64,
+}
+
+impl Fae {
+    /// Profile `profile_batches` to pick hot sets covering `hot_mass` of
+    /// accesses on the host-eligible (large) tables.
+    pub fn new(
+        mut cfg: EngineCfg,
+        platform: SimPlatform,
+        host_threshold_rows: u64,
+        profile_batches: &[Batch],
+        hot_mass: f64,
+        rng: &mut Rng,
+    ) -> Fae {
+        for t in cfg.tables.iter_mut() {
+            t.1 = false; // FAE keeps tables uncompressed
+        }
+        let ns = cfg.tables.len();
+        let big_slots: Vec<usize> = cfg
+            .tables
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.0 > host_threshold_rows)
+            .map(|(i, _)| i)
+            .collect();
+        let mut hot = vec![HashSet::new(); ns];
+        for &slot in &big_slots {
+            let mut f = FreqCounter::new();
+            for b in profile_batches {
+                let col: Vec<u64> = b.sparse_col(slot, ns).collect();
+                f.observe(&col);
+            }
+            hot[slot] = f.hot_set(hot_mass).into_iter().collect();
+        }
+        Fae {
+            engine: NativeDlrm::new(cfg, rng),
+            platform,
+            hot,
+            big_slots,
+            hot_batches: 0,
+            cold_batches: 0,
+        }
+    }
+
+    fn cold_rows(&self, batch: &Batch) -> usize {
+        let ns = self.engine.cfg.n_tables();
+        let mut cold = HashSet::new();
+        for &slot in &self.big_slots {
+            for idx in batch.sparse_col(slot, ns) {
+                if !self.hot[slot].contains(&idx) {
+                    cold.insert((slot, idx));
+                }
+            }
+        }
+        cold.len()
+    }
+}
+
+impl TrainArm for Fae {
+    fn name(&self) -> String {
+        "FAE".to_string()
+    }
+
+    fn step(&mut self, batch: &Batch) -> StepCost {
+        let cold = self.cold_rows(batch);
+        let c = &self.platform.cost;
+        let comm = if cold == 0 {
+            self.hot_batches += 1;
+            c.dispatch
+        } else {
+            self.cold_batches += 1;
+            let bytes = (cold * self.engine.cfg.emb_dim * 4) as u64;
+            c.gather_time(cold) + c.h2d_time(bytes) * 2 + c.gather_time(cold) + c.dispatch * 2
+        };
+        let t = Instant::now();
+        let loss = self.engine.train_step(batch);
+        StepCost { loss, compute: t.elapsed(), comm }
+    }
+
+    fn device_embedding_bytes(&self) -> u64 {
+        let dim = self.engine.cfg.emb_dim as u64;
+        let hot_rows: u64 = self.hot.iter().map(|h| h.len() as u64).sum();
+        let small: u64 = self
+            .engine
+            .tables
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !self.big_slots.contains(i))
+            .map(|(_, t)| t.bytes())
+            .sum();
+        small + hot_rows * dim * 4
+    }
+
+    fn host_embedding_bytes(&self) -> u64 {
+        self.engine
+            .tables
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| self.big_slots.contains(i))
+            .map(|(_, t)| t.bytes())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::schema::DatasetSchema;
+    use crate::data::ctr::CtrGenerator;
+
+    fn setup() -> (Fae, Vec<Batch>) {
+        let cfg = EngineCfg {
+            dense_dim: 2,
+            emb_dim: 8,
+            tables: vec![(20_000, false), (50, false)],
+            tt_rank: 4,
+            bot_hidden: vec![8],
+            top_hidden: vec![8],
+            lr: 0.05,
+            tt_opts: Default::default(),
+        };
+        let schema = DatasetSchema {
+            name: "fae-test",
+            n_dense: 2,
+            vocabs: vec![20_000, 50],
+            emb_dim: 8,
+            zipf_s: 1.3,
+            ft_rank: 8,
+        };
+        let mut gen = CtrGenerator::new(schema, 3);
+        let profile = gen.batches(20, 8);
+        let mut rng = Rng::new(9);
+        let arm = Fae::new(cfg, SimPlatform::v100(1), 1000, &profile, 0.97, &mut rng);
+        let eval = gen.batches(20, 8);
+        (arm, eval)
+    }
+
+    #[test]
+    fn most_batches_hot_under_zipf() {
+        let (mut arm, eval) = setup();
+        for b in &eval {
+            arm.step(b);
+        }
+        let total = arm.hot_batches + arm.cold_batches;
+        assert_eq!(total, 20);
+        assert!(
+            arm.hot_batches > 0,
+            "zipf-1.3 with 97% hot mass and batch 8 should give all-hot batches"
+        );
+    }
+
+    #[test]
+    fn cold_batches_cost_more() {
+        let (mut arm, eval) = setup();
+        let mut hot_comm = None;
+        let mut cold_comm = None;
+        for b in &eval {
+            let before_cold = arm.cold_batches;
+            let c = arm.step(b);
+            if arm.cold_batches > before_cold {
+                cold_comm.get_or_insert(c.comm);
+            } else {
+                hot_comm.get_or_insert(c.comm);
+            }
+        }
+        if let (Some(h), Some(c)) = (hot_comm, cold_comm) {
+            assert!(c > h, "cold {c:?} !> hot {h:?}");
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Baseline systems (paper §V-C): DLRM-PS, FAE, TT-Rec, HugeCTR-like and
+//! TorchRec-like arms, plus a classical GBDT-flavor detector for Table I
+//! context.
+//!
+//! Single-device arms implement [`TrainArm`]: every step runs **real**
+//! compute through the native engine and reports a **modeled** link cost
+//! from the platform cost model; benches compose the two (sequential arms:
+//! `compute + comm`; the pipeline overlaps for real in
+//! `coordinator::pipeline`).  Multi-device scaling (Figs. 11/13) is
+//! composed analytically from measured compute + the cost model — see
+//! `multi_gpu.rs`.
+
+pub mod dlrm_ps;
+pub mod fae;
+pub mod gbdt;
+pub mod multi_gpu;
+pub mod quantized;
+pub mod recad;
+pub mod ttrec;
+
+use std::time::Duration;
+
+use crate::data::ctr::Batch;
+
+/// The outcome of one training step under a given system arm.
+pub struct StepCost {
+    pub loss: f32,
+    /// Measured on-device compute time.
+    pub compute: Duration,
+    /// Modeled communication/dispatch time (serialized with compute for
+    /// non-pipelined systems).
+    pub comm: Duration,
+}
+
+impl StepCost {
+    pub fn total(&self) -> Duration {
+        self.compute + self.comm
+    }
+}
+
+/// A trainable system arm.
+pub trait TrainArm {
+    fn name(&self) -> String;
+    fn step(&mut self, batch: &Batch) -> StepCost;
+    /// Device-resident embedding bytes.
+    fn device_embedding_bytes(&self) -> u64;
+    /// Host-resident embedding bytes.
+    fn host_embedding_bytes(&self) -> u64;
+}
+
+/// Throughput over a batch stream: samples / Σ step totals.
+pub fn run_arm(arm: &mut dyn TrainArm, batches: &[Batch]) -> ArmReport {
+    let mut compute = Duration::ZERO;
+    let mut comm = Duration::ZERO;
+    let mut losses = Vec::with_capacity(batches.len());
+    for b in batches {
+        let c = arm.step(b);
+        compute += c.compute;
+        comm += c.comm;
+        losses.push(c.loss);
+    }
+    let samples: u64 = batches.iter().map(|b| b.batch_size as u64).sum();
+    ArmReport {
+        name: arm.name(),
+        samples,
+        compute,
+        comm,
+        losses,
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArmReport {
+    pub name: String,
+    pub samples: u64,
+    pub compute: Duration,
+    pub comm: Duration,
+    pub losses: Vec<f32>,
+}
+
+impl ArmReport {
+    pub fn total(&self) -> Duration {
+        self.compute + self.comm
+    }
+
+    pub fn throughput(&self) -> f64 {
+        self.samples as f64 / self.total().as_secs_f64()
+    }
+
+    pub fn mean_tail_loss(&self) -> f32 {
+        let k = (self.losses.len() / 5).max(1);
+        self.losses[self.losses.len() - k..].iter().sum::<f32>() / k as f32
+    }
+}

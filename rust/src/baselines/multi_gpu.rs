@@ -1,0 +1,132 @@
+//! Multi-device scaling models (Figs. 11 & 13).
+//!
+//! Real data-parallel speedup cannot be measured on this single-core
+//! substrate, so scaling composes **measured** single-device compute with
+//! the platform's **modeled** interconnect costs — the same decomposition
+//! the paper's analysis uses:
+//!
+//! * **Rec-AD (data parallel)** — Eff-TT tables are small enough to
+//!   replicate; per step: compute/n + allreduce(MLP grads + TT core grads).
+//! * **DLRM (model parallel embeddings)** — tables sharded; per step:
+//!   compute/n + 2× all-to-all of the batch's embedding vectors (fwd
+//!   gather + bwd scatter) + allreduce(MLP grads).
+//! * **HugeCTR-like** — model-parallel embeddings with optimized fused
+//!   collectives: same structure, lower per-transfer latency.
+//! * **TorchRec-like** — column-wise sharding: every lookup touches all
+//!   shards, all-to-all volume multiplies by the shard fan-out factor.
+
+use std::time::Duration;
+
+use crate::coordinator::platform::CostModel;
+
+#[derive(Clone, Copy, Debug)]
+pub struct MultiGpuWorkload {
+    /// Measured single-device compute per batch.
+    pub compute: Duration,
+    pub batch_size: usize,
+    pub n_sparse: usize,
+    pub emb_dim: usize,
+    /// Data-parallel gradient payload (MLP params + TT cores), bytes.
+    pub dp_grad_bytes: u64,
+}
+
+impl MultiGpuWorkload {
+    /// Bytes of embedding vectors a batch moves in one all-to-all.
+    fn emb_bytes(&self) -> u64 {
+        (self.batch_size * self.n_sparse * self.emb_dim * 4) as u64
+    }
+}
+
+/// Per-step time for each system at `n` devices.
+pub fn recad_step(w: &MultiGpuWorkload, c: &CostModel, n: usize) -> Duration {
+    let compute = w.compute / n as u32;
+    compute + c.allreduce_time(w.dp_grad_bytes, n)
+}
+
+pub fn dlrm_model_parallel_step(w: &MultiGpuWorkload, c: &CostModel, n: usize) -> Duration {
+    let compute = w.compute / n as u32;
+    // fwd all-to-all + bwd all-to-all of embedding activations/grads
+    compute
+        + c.alltoall_time(w.emb_bytes(), n) * 2
+        + c.allreduce_time(w.dp_grad_bytes, n)
+}
+
+pub fn hugectr_step(w: &MultiGpuWorkload, c: &CostModel, n: usize) -> Duration {
+    // production-grade collectives: fused launches halve the fixed
+    // latency; volume is the same as model-parallel DLRM
+    let mut cc = *c;
+    cc.transfer_latency = c.transfer_latency / 2;
+    let compute = w.compute / n as u32;
+    compute
+        + cc.alltoall_time(w.emb_bytes(), n) * 2
+        + cc.allreduce_time(w.dp_grad_bytes, n)
+}
+
+pub fn torchrec_step(w: &MultiGpuWorkload, c: &CostModel, n: usize) -> Duration {
+    // column-wise sharding: each embedding vector is split across all n
+    // shards, so every lookup gathers from every device (higher volume +
+    // per-shard latency)
+    let compute = w.compute / n as u32;
+    let vol = w.emb_bytes(); // same payload but touched by all shards
+    compute
+        + c.alltoall_time(vol, n) * 2
+        + c.transfer_latency * (n as u32) / 2
+        + c.allreduce_time(w.dp_grad_bytes, n)
+}
+
+/// Throughput (samples/s) from a per-step time.
+pub fn throughput(w: &MultiGpuWorkload, step: Duration, n: usize) -> f64 {
+    // n devices each process batch_size samples per step (weak scaling,
+    // as in the paper's throughput plots)
+    (w.batch_size * n) as f64 / step.as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::platform::SimPlatform;
+
+    fn workload() -> MultiGpuWorkload {
+        MultiGpuWorkload {
+            compute: Duration::from_millis(40),
+            batch_size: 4096,
+            n_sparse: 26,
+            emb_dim: 16,
+            dp_grad_bytes: 2 << 20,
+        }
+    }
+
+    #[test]
+    fn recad_scales_better_than_model_parallel() {
+        let w = workload();
+        let c = SimPlatform::v100(4).cost;
+        let r4 = throughput(&w, recad_step(&w, &c, 4), 4);
+        let d4 = throughput(&w, dlrm_model_parallel_step(&w, &c, 4), 4);
+        assert!(r4 > d4, "Rec-AD {r4} !> DLRM-MP {d4}");
+    }
+
+    #[test]
+    fn fig11_shape_scaling_gain() {
+        // 4-GPU Rec-AD must beat 1-GPU by a healthy margin, and beat
+        // 4-GPU DLRM by ≈1.4x (paper)
+        let w = workload();
+        let c = SimPlatform::v100(4).cost;
+        let r1 = throughput(&w, recad_step(&w, &c, 1), 1);
+        let r4 = throughput(&w, recad_step(&w, &c, 4), 4);
+        let d4 = throughput(&w, dlrm_model_parallel_step(&w, &c, 4), 4);
+        assert!(r4 > 2.0 * r1);
+        let ratio = r4 / d4;
+        assert!(ratio > 1.1 && ratio < 3.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn fig13_shape_ordering() {
+        // Rec-AD > HugeCTR > TorchRec at 4 devices (paper: 1.07x / 1.35x)
+        let w = workload();
+        let c = SimPlatform::v100(4).cost;
+        let r = throughput(&w, recad_step(&w, &c, 4), 4);
+        let h = throughput(&w, hugectr_step(&w, &c, 4), 4);
+        let t = throughput(&w, torchrec_step(&w, &c, 4), 4);
+        assert!(r > h && h > t, "r={r} h={h} t={t}");
+    }
+}

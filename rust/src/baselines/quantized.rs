@@ -1,0 +1,129 @@
+//! Post-training int8 quantization baseline (the paper's related-work
+//! alternative to TT compression, ref [22]): per-row symmetric int8
+//! weights with an f32 scale.  4× compression (vs Eff-TT's 5–80×) and a
+//! measurable accuracy cost — the trade-off Table I summarizes.
+
+use crate::tt::linalg::axpy;
+use crate::tt::plain::PlainTable;
+
+/// Per-row symmetric int8 embedding table.
+pub struct QuantizedTable {
+    pub rows: u64,
+    pub dim: usize,
+    q: Vec<i8>,
+    scale: Vec<f32>,
+}
+
+impl QuantizedTable {
+    /// Quantize an existing f32 table.
+    pub fn from_plain(t: &PlainTable) -> QuantizedTable {
+        let (rows, dim) = (t.rows, t.dim);
+        let mut q = vec![0i8; rows as usize * dim];
+        let mut scale = vec![0.0f32; rows as usize];
+        for r in 0..rows as usize {
+            let row = &t.weights[r * dim..(r + 1) * dim];
+            let max = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let s = if max > 0.0 { max / 127.0 } else { 1.0 };
+            scale[r] = s;
+            for d in 0..dim {
+                q[r * dim + d] = (row[d] / s).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        QuantizedTable { rows, dim, q, scale }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.q.len() + self.scale.len() * 4) as u64
+    }
+
+    /// Dequantized row materialization.
+    pub fn row(&self, i: u64, out: &mut [f32]) {
+        let d = self.dim;
+        let s = self.scale[i as usize];
+        for (o, &qv) in out.iter_mut().zip(&self.q[i as usize * d..(i as usize + 1) * d]) {
+            *o = qv as f32 * s;
+        }
+    }
+
+    /// EmbeddingBag(sum) with on-the-fly dequantization.
+    pub fn embedding_bag(&self, indices: &[u64], offsets: &[usize], out: &mut [f32]) {
+        let d = self.dim;
+        let bags = offsets.len() - 1;
+        assert_eq!(out.len(), bags * d);
+        out.fill(0.0);
+        let mut row = vec![0.0f32; d];
+        for b in 0..bags {
+            let dst = &mut out[b * d..(b + 1) * d];
+            for k in offsets[b]..offsets[b + 1] {
+                self.row(indices[k], &mut row);
+                axpy(dst, 1.0, &row);
+            }
+        }
+    }
+
+    /// Max absolute quantization error across the table.
+    pub fn max_error(&self, original: &PlainTable) -> f32 {
+        let d = self.dim;
+        let mut row = vec![0.0f32; d];
+        let mut err = 0.0f32;
+        for r in 0..self.rows {
+            self.row(r, &mut row);
+            for (a, b) in row.iter().zip(original.row(r)) {
+                err = err.max((a - b).abs());
+            }
+        }
+        err
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tt::shapes::TtShapes;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn four_x_compression() {
+        let mut rng = Rng::new(1);
+        let t = PlainTable::new(1000, 16, &mut rng);
+        let q = QuantizedTable::from_plain(&t);
+        let ratio = t.bytes() as f64 / q.bytes() as f64;
+        assert!(ratio > 3.0 && ratio < 4.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn quantization_error_bounded() {
+        let mut rng = Rng::new(2);
+        let t = PlainTable::new(500, 16, &mut rng);
+        let q = QuantizedTable::from_plain(&t);
+        // symmetric int8: error ≤ scale/2 = max|row|/254
+        let worst_scale = (0..500u64)
+            .map(|r| t.row(r).iter().fold(0.0f32, |m, &v| m.max(v.abs())))
+            .fold(0.0f32, f32::max);
+        assert!(q.max_error(&t) <= worst_scale / 127.0 + 1e-6);
+    }
+
+    #[test]
+    fn bag_close_to_plain() {
+        let mut rng = Rng::new(3);
+        let t = PlainTable::new(200, 8, &mut rng);
+        let q = QuantizedTable::from_plain(&t);
+        let idx = [5u64, 9, 5, 77];
+        let off = [0usize, 4];
+        let mut a = vec![0.0; 8];
+        let mut b = vec![0.0; 8];
+        t.embedding_bag(&idx, &off, &mut a);
+        q.embedding_bag(&idx, &off, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 0.05, "{x} vs {y}");
+        }
+    }
+
+    /// Table I context: int8 gives 4x, Eff-TT gives far more at scale.
+    #[test]
+    fn tt_beats_quantization_on_footprint() {
+        let shapes = TtShapes::plan(1_000_000, 16, 16);
+        let int8_bytes = 1_000_000u64 * (16 + 4); // q + scale
+        assert!(shapes.tt_bytes() * 10 < int8_bytes);
+    }
+}

@@ -1,0 +1,210 @@
+//! The Rec-AD arm: Eff-TT embeddings (reuse + aggregation + fused update)
+//! plus the offline index bijection applied per batch (§III-G/H).  All
+//! compressed tables are device-resident — no CPU↔GPU embedding traffic.
+
+use std::time::Instant;
+
+use crate::baselines::{StepCost, TrainArm};
+use crate::coordinator::engine::{EngineCfg, NativeDlrm, TableSlot};
+use crate::coordinator::platform::SimPlatform;
+use crate::data::ctr::Batch;
+use crate::reorder::bijection::IndexBijection;
+use crate::util::prng::Rng;
+
+pub struct RecAd {
+    pub engine: NativeDlrm,
+    pub platform: SimPlatform,
+    /// Per-table bijection (None = identity; built offline from a
+    /// profiling sample, paper §III-H).
+    bijections: Vec<Option<IndexBijection>>,
+    scratch_batch: Batch,
+}
+
+impl RecAd {
+    /// `profile` drives both the hot-set and the co-occurrence graph.
+    /// `reorder=false` is the Fig. 12 "w/o index reordering" arm.
+    pub fn new(
+        cfg: EngineCfg,
+        platform: SimPlatform,
+        profile: &[Batch],
+        reorder: bool,
+        rng: &mut Rng,
+    ) -> RecAd {
+        let ns = cfg.tables.len();
+        let mut bijections: Vec<Option<IndexBijection>> = (0..ns).map(|_| None).collect();
+        if reorder {
+            for (slot, &(rows, compressed)) in cfg.tables.iter().enumerate() {
+                if !compressed {
+                    continue; // reordering pays off on the TT tables
+                }
+                let cols: Vec<Vec<u64>> = profile
+                    .iter()
+                    .map(|b| b.sparse_col(slot, ns).collect())
+                    .collect();
+                let refs: Vec<&[u64]> = cols.iter().map(|c| c.as_slice()).collect();
+                bijections[slot] = Some(IndexBijection::build(rows, &refs, 0.05));
+            }
+        }
+        RecAd {
+            engine: NativeDlrm::new(cfg, rng),
+            platform,
+            bijections,
+            scratch_batch: Batch { dense: vec![], sparse: vec![], labels: vec![], batch_size: 0 },
+        }
+    }
+
+    /// Apply the per-table bijections into the scratch batch (free-standing
+    /// borrow shape so the engine can be borrowed mutably afterwards).
+    fn remap_into(
+        scratch: &mut Batch,
+        bijections: &[Option<IndexBijection>],
+        batch: &Batch,
+        ns: usize,
+    ) {
+        scratch.dense.clear();
+        scratch.dense.extend_from_slice(&batch.dense);
+        scratch.labels.clear();
+        scratch.labels.extend_from_slice(&batch.labels);
+        scratch.sparse.clear();
+        scratch.sparse.extend_from_slice(&batch.sparse);
+        scratch.batch_size = batch.batch_size;
+        for (slot, bij) in bijections.iter().enumerate() {
+            if let Some(bij) = bij {
+                for r in 0..scratch.batch_size {
+                    let k = r * ns + slot;
+                    scratch.sparse[k] = bij.apply(scratch.sparse[k]);
+                }
+            }
+        }
+    }
+
+    pub fn tt_stats(&self) -> crate::tt::table::TtStats {
+        self.engine.tt_stats()
+    }
+}
+
+impl TrainArm for RecAd {
+    fn name(&self) -> String {
+        "Rec-AD".to_string()
+    }
+
+    fn step(&mut self, batch: &Batch) -> StepCost {
+        let dispatch = self.platform.cost.dispatch;
+        let t = Instant::now();
+        // bijection application is part of the input pipeline (measured)
+        Self::remap_into(
+            &mut self.scratch_batch,
+            &self.bijections,
+            batch,
+            self.engine.cfg.n_tables(),
+        );
+        let loss = self.engine.train_step(&self.scratch_batch);
+        StepCost { loss, compute: t.elapsed(), comm: dispatch }
+    }
+
+    fn device_embedding_bytes(&self) -> u64 {
+        self.engine.embedding_bytes()
+    }
+
+    fn host_embedding_bytes(&self) -> u64 {
+        0
+    }
+}
+
+/// Footprint check used by Fig. 13: Rec-AD fits where plain tables spill.
+pub fn fits_single_device(cfg: &EngineCfg, platform: &SimPlatform, rng: &mut Rng) -> bool {
+    let engine = NativeDlrm::new(cfg.clone(), rng);
+    let bytes: u64 = engine
+        .tables
+        .iter()
+        .map(|t| match t {
+            TableSlot::Tt(t) => t.bytes(),
+            TableSlot::Plain(t) => t.bytes(),
+        })
+        .sum();
+    platform.fits_hbm(bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::schema::DatasetSchema;
+    use crate::data::ctr::CtrGenerator;
+
+    fn setup(reorder: bool) -> (RecAd, Vec<Batch>) {
+        let cfg = EngineCfg {
+            dense_dim: 2,
+            emb_dim: 8,
+            tables: vec![(4000, true), (40, false)],
+            tt_rank: 4,
+            bot_hidden: vec![8],
+            top_hidden: vec![8],
+            lr: 0.05,
+            tt_opts: Default::default(),
+        };
+        let schema = DatasetSchema {
+            name: "recad-test",
+            n_dense: 2,
+            vocabs: vec![4000, 40],
+            emb_dim: 8,
+            zipf_s: 1.2,
+            ft_rank: 8,
+        };
+        let mut gen = CtrGenerator::new(schema, 5);
+        let profile = gen.batches(15, 32);
+        let mut rng = Rng::new(4);
+        let arm = RecAd::new(cfg, SimPlatform::v100(1), &profile, reorder, &mut rng);
+        let eval = gen.batches(10, 32);
+        (arm, eval)
+    }
+
+    #[test]
+    fn steps_and_learns() {
+        let (mut arm, eval) = setup(true);
+        let first = arm.step(&eval[0]).loss;
+        for b in &eval {
+            for _ in 0..3 {
+                arm.step(b);
+            }
+        }
+        let last = arm.step(&eval[0]).loss;
+        assert!(last < first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn reordering_increases_reuse_hits() {
+        let (mut with, eval) = setup(true);
+        let (mut without, _) = setup(false);
+        for b in &eval {
+            with.step(b);
+            without.step(b);
+        }
+        let (a, b) = (with.tt_stats(), without.tt_stats());
+        // CtrGenerator draws iid per batch (no co-occurrence structure),
+        // so the bijection cannot *gain* reuse here — it must merely not
+        // lose materially.  The genuine improvement on structured batches
+        // is proven in reorder::bijection::tests::
+        // reordering_improves_prefix_sharing.
+        assert!(
+            a.reuse_hits as f64 >= 0.8 * b.reuse_hits as f64,
+            "reordering lost too much reuse: {} vs {}",
+            a.reuse_hits,
+            b.reuse_hits
+        );
+    }
+
+    #[test]
+    fn remap_is_in_vocab_and_stable() {
+        let (mut arm, eval) = setup(true);
+        let ns = arm.engine.cfg.n_tables();
+        let rows0 = arm.engine.cfg.tables[0].0;
+        let before: Vec<u64> = eval[0].sparse.clone();
+        arm.step(&eval[0]);
+        let remapped = arm.scratch_batch.sparse.clone();
+        // table-0 entries remapped within vocab, table-1 untouched
+        for r in 0..eval[0].batch_size {
+            assert!(remapped[r * ns] < rows0);
+            assert_eq!(remapped[r * ns + 1], before[r * ns + 1]);
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! TT-Rec baseline (paper [23]): TT-compressed embeddings on device, but
+//! WITHOUT the Eff-TT compute optimizations — no intermediate reuse, no
+//! advance gradient aggregation, no fused update, no index reordering.
+//! Compression equals Rec-AD's; throughput should trail it by ≈1.4×
+//! (paper §V-H).
+
+use std::time::Instant;
+
+use crate::baselines::{StepCost, TrainArm};
+use crate::coordinator::engine::{EngineCfg, NativeDlrm};
+use crate::coordinator::platform::SimPlatform;
+use crate::data::ctr::Batch;
+use crate::tt::table::EffTtOptions;
+use crate::util::prng::Rng;
+
+pub struct TtRec {
+    pub engine: NativeDlrm,
+    pub platform: SimPlatform,
+}
+
+impl TtRec {
+    pub fn new(mut cfg: EngineCfg, platform: SimPlatform, rng: &mut Rng) -> TtRec {
+        cfg.tt_opts = EffTtOptions::ttrec_baseline();
+        TtRec { engine: NativeDlrm::new(cfg, rng), platform }
+    }
+}
+
+impl TrainArm for TtRec {
+    fn name(&self) -> String {
+        "TT-Rec".to_string()
+    }
+
+    fn step(&mut self, batch: &Batch) -> StepCost {
+        let t = Instant::now();
+        let loss = self.engine.train_step(batch);
+        StepCost { loss, compute: t.elapsed(), comm: self.platform.cost.dispatch }
+    }
+
+    fn device_embedding_bytes(&self) -> u64 {
+        self.engine.embedding_bytes()
+    }
+
+    fn host_embedding_bytes(&self) -> u64 {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ttrec_disables_eff_tt_optimizations() {
+        let cfg = EngineCfg {
+            dense_dim: 2,
+            emb_dim: 8,
+            tables: vec![(3000, true)],
+            tt_rank: 4,
+            bot_hidden: vec![8],
+            top_hidden: vec![8],
+            lr: 0.05,
+            tt_opts: Default::default(),
+        };
+        let mut rng = Rng::new(1);
+        let mut arm = TtRec::new(cfg, SimPlatform::v100(1), &mut rng);
+        let batch = Batch {
+            dense: vec![0.1; 8],
+            sparse: vec![1, 1, 2, 2], // duplicates: reuse would dedup
+            labels: vec![1.0, 0.0, 1.0, 0.0],
+            batch_size: 4,
+        };
+        arm.step(&batch);
+        let s = arm.engine.tt_stats();
+        assert_eq!(s.reuse_hits, 0, "TT-Rec must not reuse");
+        assert_eq!(s.grads_aggregated, 0, "TT-Rec must not aggregate");
+    }
+}

@@ -1,0 +1,92 @@
+//! Shared workload builders for the `cargo bench` targets (one per paper
+//! table/figure).  Benches run on a CPU substrate, so dataset schemas are
+//! instantiated at `BENCH_SCALE` of the paper's vocabulary sizes — the
+//! index *distribution shape* (Zipf skew, co-occurrence) is preserved,
+//! which is what every measured effect depends on (DESIGN.md §4).
+
+use crate::coordinator::engine::EngineCfg;
+use crate::data::ctr::{Batch, CtrGenerator};
+use crate::data::schema::{self, DatasetSchema};
+use crate::tt::table::EffTtOptions;
+
+/// Vocabulary scale for bench instantiations.
+pub const BENCH_SCALE: f64 = 1.0 / 1000.0;
+
+/// Scale a schema's vocabularies (min 16 rows each).
+pub fn scaled(s: &DatasetSchema, scale: f64) -> DatasetSchema {
+    DatasetSchema {
+        name: s.name,
+        n_dense: s.n_dense,
+        vocabs: s
+            .vocabs
+            .iter()
+            .map(|&v| ((v as f64 * scale) as u64).max(16))
+            .collect(),
+        emb_dim: s.emb_dim,
+        zipf_s: s.zipf_s,
+        ft_rank: s.ft_rank,
+    }
+}
+
+/// Engine config for a (scaled) schema: tables above `threshold` rows are
+/// TT-compressed — the paper's §V-C policy, scaled alongside the vocab.
+pub fn engine_for(s: &DatasetSchema, scale: f64, rank: usize) -> EngineCfg {
+    let threshold = (1_000_000.0 * scale) as u64;
+    EngineCfg {
+        dense_dim: s.n_dense,
+        emb_dim: s.emb_dim.min(16), // bench dim capped for CPU wall time
+        tables: s.vocabs.iter().map(|&v| (v, v > threshold)).collect(),
+        tt_rank: rank,
+        bot_hidden: vec![64, 32],
+        top_hidden: vec![64, 32],
+        lr: 0.05,
+        tt_opts: EffTtOptions::default(),
+    }
+}
+
+/// The three CTR datasets + IEEE118, scaled for benching.
+pub fn bench_schemas() -> Vec<DatasetSchema> {
+    vec![
+        scaled(&schema::avazu(), BENCH_SCALE),
+        scaled(&schema::criteo_kaggle(), BENCH_SCALE),
+        scaled(&schema::ieee118(), BENCH_SCALE),
+    ]
+}
+
+/// Profiling + eval batch streams for one schema.
+pub fn workload(s: &DatasetSchema, seed: u64, n_batches: usize, batch: usize)
+    -> (Vec<Batch>, Vec<Batch>) {
+    let mut gen = CtrGenerator::new(s.clone(), seed);
+    let profile = gen.batches(n_batches / 2, batch);
+    let eval = gen.batches(n_batches, batch);
+    (profile, eval)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaled_preserves_structure() {
+        let s = scaled(&schema::avazu(), BENCH_SCALE);
+        assert_eq!(s.n_sparse(), 20);
+        assert!(s.vocabs[0] >= 16 && s.vocabs[0] < 10_000);
+    }
+
+    #[test]
+    fn engine_compresses_scaled_big_tables() {
+        let s = scaled(&schema::ieee118(), BENCH_SCALE);
+        let cfg = engine_for(&s, BENCH_SCALE, 8);
+        assert!(cfg.tables[0].1, "scaled 12k-row table should compress");
+        assert!(!cfg.tables[2].1, "118-row table stays plain");
+    }
+
+    #[test]
+    fn workload_batches_have_schema_shape() {
+        let s = scaled(&schema::avazu(), BENCH_SCALE);
+        let (p, e) = workload(&s, 1, 8, 64);
+        assert_eq!(p.len(), 4);
+        assert_eq!(e.len(), 8);
+        assert_eq!(e[0].sparse.len(), 64 * 20);
+    }
+}

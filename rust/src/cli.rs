@@ -1,0 +1,124 @@
+//! Command-line interface (clap is unavailable offline): subcommands +
+//! `--key value` / `--flag` option parsing with typed accessors.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug)]
+pub struct Cli {
+    pub subcommand: String,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Cli {
+    /// Parse `argv[1..]`: first positional is the subcommand, then
+    /// `--key value` pairs and bare `--flag`s.
+    pub fn parse(args: &[String]) -> Result<Cli> {
+        if args.is_empty() {
+            bail!("missing subcommand; try `recad help`");
+        }
+        let subcommand = args[0].clone();
+        let mut options = HashMap::new();
+        let mut flags = Vec::new();
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument '{a}'");
+            };
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                options.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.push(key.to_string());
+                i += 1;
+            }
+        }
+        Ok(Cli { subcommand, options, flags })
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: '{v}' is not an integer")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: '{v}' is not a number")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+pub const USAGE: &str = "\
+recad — Rec-AD: TT-compressed DLRM for FDIA detection
+
+USAGE:
+  recad <subcommand> [--option value] [--flag]
+
+SUBCOMMANDS:
+  train        Train the FDIA detector on synthetic IEEE-118 data
+               --config file.toml  --epochs N  --batch N  --scale F
+               --no-reorder  --no-reuse  --pipeline
+  serve        Stream batch-1 detection over a held-out sample stream
+               --requests N  --threshold F
+  gen-data     Generate and summarize the IEEE-118 FDIA dataset
+               --normal N  --attack N  --seed N
+  runtime      Smoke-run the PJRT artifacts (requires `make artifacts`)
+               --artifacts DIR
+  report       Print the static Table II / Table IV footprint report
+  help         Show this message
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let c = Cli::parse(&sv(&["train", "--epochs", "5", "--no-reorder"])).unwrap();
+        assert_eq!(c.subcommand, "train");
+        assert_eq!(c.usize_or("epochs", 1).unwrap(), 5);
+        assert!(c.flag("no-reorder"));
+        assert!(!c.flag("pipeline"));
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(Cli::parse(&sv(&[])).is_err());
+        assert!(Cli::parse(&sv(&["train", "positional"])).is_err());
+        let c = Cli::parse(&sv(&["train", "--epochs", "abc"])).unwrap();
+        assert!(c.usize_or("epochs", 1).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Cli::parse(&sv(&["serve"])).unwrap();
+        assert_eq!(c.opt_or("threshold", "0.5"), "0.5");
+        assert_eq!(c.f64_or("threshold", 0.5).unwrap(), 0.5);
+    }
+}

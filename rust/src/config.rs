@@ -1,0 +1,259 @@
+//! Configuration system: typed config + a TOML-subset parser (tables,
+//! key = value with strings / numbers / booleans / arrays of numbers;
+//! comments).  serde/toml are unavailable offline; this subset covers the
+//! launcher's needs and rejects anything outside it loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::engine::EngineCfg;
+use crate::tt::table::EffTtOptions;
+
+/// Parsed TOML-subset document: `section.key -> value`.
+#[derive(Debug, Default)]
+pub struct Toml {
+    values: BTreeMap<String, TomlValue>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    NumArray(Vec<f64>),
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Toml> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", ln + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, parse_value(v.trim(), ln + 1)?);
+        }
+        Ok(Toml { values })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        match self.get(key) {
+            Some(TomlValue::Str(s)) => s,
+            _ => default,
+        }
+    }
+
+    pub fn num_or(&self, key: &str, default: f64) -> f64 {
+        match self.get(key) {
+            Some(TomlValue::Num(n)) => *n,
+            _ => default,
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.num_or(key, default as f64) as usize
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some(TomlValue::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    pub fn nums(&self, key: &str) -> Option<Vec<f64>> {
+        match self.get(key) {
+            Some(TomlValue::NumArray(v)) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but sufficient: the subset forbids '#' inside strings
+    match line.find('#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn parse_value(v: &str, ln: usize) -> Result<TomlValue> {
+    if v == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(inner) = v.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+        let nums: Result<Vec<f64>> = inner
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse::<f64>()
+                    .with_context(|| format!("line {ln}: bad number '{s}'"))
+            })
+            .collect();
+        return Ok(TomlValue::NumArray(nums?));
+    }
+    if let Ok(n) = v.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Num(n));
+    }
+    bail!("line {ln}: cannot parse value '{v}' (supported: string, number, bool, [numbers])")
+}
+
+/// Top-level launcher configuration.
+#[derive(Clone, Debug)]
+pub struct RecAdConfig {
+    /// "ieee118" | "avazu" | "kaggle" | "terabyte"
+    pub dataset: String,
+    pub scale: f64,
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub lr: f64,
+    pub tt_rank: usize,
+    pub reorder: bool,
+    pub reuse: bool,
+    pub grad_aggregation: bool,
+    pub fused_update: bool,
+    pub pipeline_lc: usize,
+    pub seed: u64,
+    pub artifacts_dir: String,
+}
+
+impl Default for RecAdConfig {
+    fn default() -> Self {
+        RecAdConfig {
+            dataset: "ieee118".into(),
+            scale: 1.0 / 2000.0,
+            epochs: 2,
+            batch_size: 128,
+            lr: 0.05,
+            tt_rank: 8,
+            reorder: true,
+            reuse: true,
+            grad_aggregation: true,
+            fused_update: true,
+            pipeline_lc: 4,
+            seed: 42,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl RecAdConfig {
+    pub fn from_toml(t: &Toml) -> RecAdConfig {
+        let d = RecAdConfig::default();
+        RecAdConfig {
+            dataset: t.str_or("run.dataset", &d.dataset).to_string(),
+            scale: t.num_or("run.scale", d.scale),
+            epochs: t.usize_or("run.epochs", d.epochs),
+            batch_size: t.usize_or("run.batch_size", d.batch_size),
+            lr: t.num_or("run.lr", d.lr),
+            tt_rank: t.usize_or("tt.rank", d.tt_rank),
+            reorder: t.bool_or("tt.reorder", d.reorder),
+            reuse: t.bool_or("tt.reuse", d.reuse),
+            grad_aggregation: t.bool_or("tt.grad_aggregation", d.grad_aggregation),
+            fused_update: t.bool_or("tt.fused_update", d.fused_update),
+            pipeline_lc: t.usize_or("pipeline.lc", d.pipeline_lc),
+            seed: t.num_or("run.seed", d.seed as f64) as u64,
+            artifacts_dir: t.str_or("run.artifacts_dir", &d.artifacts_dir).to_string(),
+        }
+    }
+
+    pub fn load(path: &str) -> Result<RecAdConfig> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Ok(Self::from_toml(&Toml::parse(&text)?))
+    }
+
+    pub fn engine_cfg(&self) -> EngineCfg {
+        let mut cfg = EngineCfg::ieee118(self.scale);
+        cfg.lr = self.lr as f32;
+        cfg.tt_rank = self.tt_rank;
+        cfg.tt_opts = EffTtOptions {
+            reuse: self.reuse,
+            grad_aggregation: self.grad_aggregation,
+            fused_update: self.fused_update,
+        };
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let doc = r#"
+# Rec-AD run config
+[run]
+dataset = "ieee118"
+epochs = 5
+batch_size = 256
+lr = 0.01
+seed = 7
+
+[tt]
+rank = 16
+reorder = false
+
+[pipeline]
+lc = 8
+"#;
+        let t = Toml::parse(doc).unwrap();
+        let c = RecAdConfig::from_toml(&t);
+        assert_eq!(c.dataset, "ieee118");
+        assert_eq!(c.epochs, 5);
+        assert_eq!(c.batch_size, 256);
+        assert!((c.lr - 0.01).abs() < 1e-12);
+        assert_eq!(c.tt_rank, 16);
+        assert!(!c.reorder);
+        assert!(c.reuse); // default preserved
+        assert_eq!(c.pipeline_lc, 8);
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn arrays_and_underscored_numbers() {
+        let t = Toml::parse("dims = [64, 32]\nrows = 12_000_000\n").unwrap();
+        assert_eq!(t.nums("dims"), Some(vec![64.0, 32.0]));
+        assert_eq!(t.num_or("rows", 0.0), 12_000_000.0);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Toml::parse("key value").is_err());
+        assert!(Toml::parse("key = {inline}").is_err());
+    }
+
+    #[test]
+    fn engine_cfg_reflects_ablations() {
+        let mut c = RecAdConfig::default();
+        c.reuse = false;
+        let e = c.engine_cfg();
+        assert!(!e.tt_opts.reuse);
+        assert!(e.tt_opts.grad_aggregation);
+    }
+}

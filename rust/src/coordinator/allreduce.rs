@@ -1,0 +1,132 @@
+//! Ring all-reduce across simulated devices (paper Fig. 8 "ALLReduce"
+//! gradient synchronization for the data-parallel MLPs + TT cores).
+//!
+//! Real summation over worker threads (correctness-bearing) plus a
+//! modeled link cost (2·(N−1)/N · bytes / bw) charged as wall time — the
+//! same overlap semantics as the pipeline's transfers.
+
+use std::sync::{Arc, Barrier, Mutex};
+
+use crate::coordinator::platform::{CostModel, SimPlatform};
+
+/// Shared all-reduce context for `n` workers.
+pub struct AllReduce {
+    n: usize,
+    acc: Mutex<Vec<f32>>,
+    arrived: Mutex<usize>,
+    barrier: Barrier,
+    cost: CostModel,
+}
+
+impl AllReduce {
+    pub fn new(n: usize, len: usize, cost: CostModel) -> Arc<AllReduce> {
+        Arc::new(AllReduce {
+            n,
+            acc: Mutex::new(vec![0.0; len]),
+            arrived: Mutex::new(0),
+            barrier: Barrier::new(n),
+            cost,
+        })
+    }
+
+    /// Reduce `data` across all workers (mean); every worker's slice is
+    /// replaced by the mean.  Blocks until all `n` workers arrive.
+    pub fn allreduce_mean(&self, data: &mut [f32]) {
+        // charge the ring cost once per worker (concurrent sleeps overlap,
+        // so wall impact ≈ one ring time — matching a real ring)
+        SimPlatform::charge(self.cost.allreduce_time((data.len() * 4) as u64, self.n));
+
+        // accumulate
+        {
+            let mut acc = self.acc.lock().unwrap();
+            assert_eq!(acc.len(), data.len(), "allreduce length mismatch");
+            for (a, &d) in acc.iter_mut().zip(data.iter()) {
+                *a += d;
+            }
+            let mut k = self.arrived.lock().unwrap();
+            *k += 1;
+        }
+        self.barrier.wait();
+        // read back the mean
+        {
+            let acc = self.acc.lock().unwrap();
+            let inv = 1.0 / self.n as f32;
+            for (d, &a) in data.iter_mut().zip(acc.iter()) {
+                *d = a * inv;
+            }
+        }
+        self.barrier.wait();
+        // one worker resets for the next round
+        {
+            let mut k = self.arrived.lock().unwrap();
+            if *k == self.n {
+                *k = 0;
+                let mut acc = self.acc.lock().unwrap();
+                acc.fill(0.0);
+            }
+        }
+        self.barrier.wait();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn cost() -> CostModel {
+        CostModel {
+            h2d_bps: 1e18,
+            d2d_bps: 1e18,
+            transfer_latency: Duration::ZERO,
+            ps_row: Duration::ZERO,
+            dispatch: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn reduces_to_mean_across_workers() {
+        let n = 4;
+        let ar = AllReduce::new(n, 8, cost());
+        let handles: Vec<_> = (0..n)
+            .map(|w| {
+                let ar = ar.clone();
+                std::thread::spawn(move || {
+                    let mut v = vec![(w + 1) as f32; 8];
+                    ar.allreduce_mean(&mut v);
+                    v
+                })
+            })
+            .collect();
+        for h in handles {
+            let v = h.join().unwrap();
+            for &x in &v {
+                assert!((x - 2.5).abs() < 1e-6); // mean of 1..4
+            }
+        }
+    }
+
+    #[test]
+    fn multiple_rounds_reset_correctly() {
+        let n = 2;
+        let ar = AllReduce::new(n, 2, cost());
+        let handles: Vec<_> = (0..n)
+            .map(|w| {
+                let ar = ar.clone();
+                std::thread::spawn(move || {
+                    let mut out = Vec::new();
+                    for round in 0..3 {
+                        let mut v = vec![(w as f32) + round as f32; 2];
+                        ar.allreduce_mean(&mut v);
+                        out.push(v[0]);
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            let o = h.join().unwrap();
+            assert_eq!(o, vec![0.5, 1.5, 2.5]);
+        }
+    }
+}

@@ -1,0 +1,252 @@
+//! GPU-side embedding cache + RAW-conflict synchronizer (paper §IV-B,
+//! Fig. 9).
+//!
+//! The pipeline prefetches batch i+1's embedding rows from host memory
+//! while batch i is still training, so a prefetched row may be **stale**:
+//! batch i's gradient update to that row happened on the device after the
+//! prefetch snapshot left the host (read-after-write hazard).
+//!
+//! The fix mirrors Fig. 9(b): rows updated on-device are written to the
+//! secondary cache (`Emb2`) with a version counter; when a prefetched
+//! batch arrives, any row whose cached version is newer than the prefetch
+//! snapshot version is patched from the cache instead of being trusted.
+//! Lifecycle control (the paper's LC parameter) bounds memory: each
+//! cached row has a load-capacity counter, decremented per step, evicted
+//! at zero unless re-touched.
+
+use std::collections::HashMap;
+
+/// One embedding row in transit between host and device.
+#[derive(Clone, Debug)]
+pub struct PrefetchedRow {
+    pub row: u64,
+    pub data: Vec<f32>,
+    /// Host parameter version at snapshot time.
+    pub version: u64,
+}
+
+/// A prefetched batch (what the PS pushes into the prefetch queue).
+pub struct PrefetchBatch {
+    pub step: u64,
+    /// Per (table, row) payloads.
+    pub rows: Vec<(usize, PrefetchedRow)>,
+}
+
+struct CacheEntry {
+    data: Vec<f32>,
+    /// Device-side version (monotonic per update).
+    version: u64,
+    /// Remaining lifecycle (steps until eviction if untouched).
+    lc: u32,
+}
+
+/// Per-device embedding cache with RAW synchronization.
+pub struct EmbeddingCache {
+    entries: HashMap<(usize, u64), CacheEntry>,
+    /// LC assigned on (re)touch.
+    pub lc_init: u32,
+    /// Monotonic device version counter.
+    version_clock: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub raw_conflicts_fixed: u64,
+    pub evictions: u64,
+}
+
+impl EmbeddingCache {
+    pub fn new(lc_init: u32) -> Self {
+        EmbeddingCache {
+            entries: HashMap::new(),
+            lc_init,
+            version_clock: 0,
+            hits: 0,
+            misses: 0,
+            raw_conflicts_fixed: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Approximate resident bytes.
+    pub fn bytes(&self) -> u64 {
+        self.entries
+            .values()
+            .map(|e| (e.data.len() * 4 + 32) as u64)
+            .sum()
+    }
+
+    /// Record a device-side update of `row` at `version` (after the
+    /// training step producing that version wrote new values).  This is
+    /// the write side of the RAW fix: the freshest copy now lives in the
+    /// cache (Fig. 9(b) "synchronized with Emb2").  Versions are step
+    /// numbers: a row written at step i carries version i+1, and a
+    /// prefetch snapshot taken with `k` host-applied steps carries
+    /// version k — strictly newer cache entries patch the prefetch.
+    pub fn record_update(&mut self, table: usize, row: u64, data: &[f32], version: u64) {
+        self.version_clock = self.version_clock.max(version);
+        let v = version;
+        let lc = self.lc_init;
+        let e = self.entries.entry((table, row)).or_insert_with(|| CacheEntry {
+            data: Vec::new(),
+            version: 0,
+            lc,
+        });
+        e.data.clear();
+        e.data.extend_from_slice(data);
+        e.version = v;
+        e.lc = self.lc_init;
+    }
+
+    /// Reconcile a prefetched batch against the cache: any row with a
+    /// newer device-side version is patched in place.  Returns how many
+    /// rows were stale (RAW conflicts the synchronizer fixed).
+    pub fn sync_prefetch(&mut self, batch: &mut PrefetchBatch) -> usize {
+        let mut fixed = 0;
+        for (table, pr) in batch.rows.iter_mut() {
+            match self.entries.get_mut(&(*table, pr.row)) {
+                Some(e) if e.version > pr.version => {
+                    pr.data.clear();
+                    pr.data.extend_from_slice(&e.data);
+                    pr.version = e.version;
+                    e.lc = self.lc_init; // touch
+                    fixed += 1;
+                    self.hits += 1;
+                }
+                Some(e) => {
+                    e.lc = self.lc_init; // fresh prefetch confirms residency
+                    self.hits += 1;
+                }
+                None => {
+                    self.misses += 1;
+                }
+            }
+        }
+        self.raw_conflicts_fixed += fixed as u64;
+        fixed
+    }
+
+    /// End-of-step lifecycle pass: decrement LC, evict the dead.
+    pub fn end_step(&mut self) {
+        let before = self.entries.len();
+        self.entries.retain(|_, e| {
+            if e.lc > 0 {
+                e.lc -= 1;
+                true
+            } else {
+                false
+            }
+        });
+        self.evictions += (before - self.entries.len()) as u64;
+    }
+
+    /// Current device version clock (used as the "snapshot version" by
+    /// the PS when it builds a prefetch batch from host data).
+    pub fn clock(&self) -> u64 {
+        self.version_clock
+    }
+
+    pub fn get(&self, table: usize, row: u64) -> Option<&[f32]> {
+        self.entries.get(&(table, row)).map(|e| e.data.as_slice())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pf(table: usize, row: u64, val: f32, version: u64) -> (usize, PrefetchedRow) {
+        (table, PrefetchedRow { row, data: vec![val; 4], version })
+    }
+
+    #[test]
+    fn stale_prefetch_gets_patched() {
+        let mut c = EmbeddingCache::new(4);
+        // device wrote row 7 at version 1
+        c.record_update(0, 7, &[9.0; 4], 1);
+        // PS snapshot was taken before that write (version 0)
+        let mut batch = PrefetchBatch { step: 1, rows: vec![pf(0, 7, 1.0, 0)] };
+        let fixed = c.sync_prefetch(&mut batch);
+        assert_eq!(fixed, 1);
+        assert_eq!(batch.rows[0].1.data, vec![9.0; 4]);
+        assert_eq!(c.raw_conflicts_fixed, 1);
+    }
+
+    #[test]
+    fn fresh_prefetch_untouched() {
+        let mut c = EmbeddingCache::new(4);
+        c.record_update(0, 7, &[9.0; 4], 1); // version 1
+        // PS snapshot taken AFTER the host applied that gradient: the
+        // prefetched value already reflects it (version >= cache)
+        let mut batch = PrefetchBatch { step: 1, rows: vec![pf(0, 7, 5.0, 1)] };
+        let fixed = c.sync_prefetch(&mut batch);
+        assert_eq!(fixed, 0);
+        assert_eq!(batch.rows[0].1.data, vec![5.0; 4]);
+    }
+
+    #[test]
+    fn never_serves_stale_rows_property() {
+        // Interleave device writes and prefetches; after every sync, the
+        // prefetched data must equal the latest device write if one
+        // happened after the snapshot.
+        let mut c = EmbeddingCache::new(8);
+        let mut latest = vec![0.0f32; 4];
+        for step in 0..50u64 {
+            let snap = c.clock();
+            if step % 3 == 0 {
+                latest = vec![step as f32; 4];
+                c.record_update(0, 42, &latest, snap + 1);
+            }
+            let mut b = PrefetchBatch {
+                step,
+                rows: vec![pf(0, 42, -1.0, snap)],
+            };
+            c.sync_prefetch(&mut b);
+            if c.clock() > snap {
+                assert_eq!(b.rows[0].1.data, latest, "stale row at step {step}");
+            }
+            c.end_step();
+        }
+    }
+
+    #[test]
+    fn lifecycle_evicts_untouched() {
+        let mut c = EmbeddingCache::new(2);
+        c.record_update(0, 1, &[1.0; 4], 1);
+        assert_eq!(c.len(), 1);
+        c.end_step(); // lc 2 -> 1
+        c.end_step(); // lc 1 -> 0
+        c.end_step(); // evicted
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.evictions, 1);
+    }
+
+    #[test]
+    fn touch_resets_lifecycle() {
+        let mut c = EmbeddingCache::new(2);
+        c.record_update(0, 1, &[1.0; 4], 1);
+        c.end_step();
+        // a prefetch touching the row resets its LC
+        let mut b = PrefetchBatch { step: 0, rows: vec![pf(0, 1, 0.0, c.clock())] };
+        c.sync_prefetch(&mut b);
+        c.end_step();
+        c.end_step();
+        assert_eq!(c.len(), 1, "touched row evicted too early");
+    }
+
+    #[test]
+    fn bytes_accounting_scales_with_entries() {
+        let mut c = EmbeddingCache::new(4);
+        let b0 = c.bytes();
+        for r in 0..10 {
+            c.record_update(0, r, &[0.0; 16], r + 1);
+        }
+        assert!(c.bytes() > b0 + 10 * 64);
+    }
+}

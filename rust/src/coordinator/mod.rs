@@ -1,0 +1,21 @@
+//! The Rec-AD coordinator (paper §IV): pipeline PS training, embedding
+//! cache with RAW synchronization, device/cost platform model, native
+//! compute engine, and the all-reduce used by multi-device arms.
+
+pub mod allreduce;
+pub mod cache;
+pub mod data_parallel;
+pub mod engine;
+pub mod params;
+pub mod pipeline;
+pub mod platform;
+pub mod queues;
+pub mod trainer;
+
+pub use cache::{EmbeddingCache, PrefetchBatch, PrefetchedRow};
+pub use data_parallel::{train_data_parallel, DataParallelReport};
+pub use engine::{EngineCfg, NativeDlrm, TableSlot};
+pub use params::{GradPacket, HostParams};
+pub use pipeline::{run as run_pipeline, PipelineCfg, PipelineReport};
+pub use platform::{CostModel, SimPlatform};
+pub use queues::BoundedQueue;

@@ -1,0 +1,149 @@
+//! Host-memory parameter server state (paper Fig. 8, "CPU as parameter
+//! server"): the authoritative copy of every embedding table that does not
+//! fit (or is not placed) in device memory.
+//!
+//! Workers ship back *updated row values* (value shipping — equivalent to
+//! grads under single-writer SGD and cheaper to reconcile); `applied`
+//! counts steps whose updates have landed, and doubles as the snapshot
+//! version carried by prefetched rows for the RAW protocol.
+
+use std::collections::HashMap;
+
+use crate::coordinator::cache::{PrefetchBatch, PrefetchedRow};
+use crate::data::ctr::Batch;
+use crate::tt::plain::PlainTable;
+use crate::util::prng::Rng;
+
+/// Updated rows for one step (worker → PS).
+pub struct GradPacket {
+    pub step: u64,
+    /// (host-table slot, row, new row values)
+    pub rows: Vec<(usize, u64, Vec<f32>)>,
+}
+
+impl GradPacket {
+    pub fn bytes(&self) -> u64 {
+        self.rows
+            .iter()
+            .map(|(_, _, v)| (v.len() * 4 + 16) as u64)
+            .sum()
+    }
+}
+
+/// Host-resident tables, addressed by *slot* (position in the engine's
+/// table list).
+pub struct HostParams {
+    /// slot id -> table
+    pub tables: HashMap<usize, PlainTable>,
+    /// Steps whose updates have been applied (the host version).
+    pub applied: u64,
+}
+
+impl HostParams {
+    /// Take ownership of the given engine slots' tables.
+    pub fn new(slots: Vec<(usize, u64, usize)>, rng: &mut Rng) -> HostParams {
+        let tables = slots
+            .into_iter()
+            .map(|(slot, rows, dim)| (slot, PlainTable::new(rows, dim, rng)))
+            .collect();
+        HostParams { tables, applied: 0 }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.tables.values().map(|t| t.bytes()).sum()
+    }
+
+    /// Snapshot the rows a batch will need from host tables, stamped with
+    /// the current host version (paper: "inject host memory values into
+    /// the prefetch queues").
+    pub fn snapshot_for(&self, batch: &Batch, n_sparse: usize, step: u64) -> PrefetchBatch {
+        let mut rows = Vec::new();
+        let mut seen: HashMap<(usize, u64), ()> = HashMap::new();
+        for (&slot, table) in self.tables.iter() {
+            for idx in batch.sparse_col(slot, n_sparse) {
+                if seen.insert((slot, idx), ()).is_none() {
+                    rows.push((
+                        slot,
+                        PrefetchedRow {
+                            row: idx,
+                            data: table.row(idx).to_vec(),
+                            version: self.applied,
+                        },
+                    ));
+                }
+            }
+        }
+        PrefetchBatch { step, rows }
+    }
+
+    /// Apply a worker's updated rows (value shipping).
+    pub fn apply(&mut self, packet: &GradPacket) {
+        for (slot, row, values) in &packet.rows {
+            if let Some(t) = self.tables.get_mut(slot) {
+                t.row_mut(*row).copy_from_slice(values);
+            }
+        }
+        self.applied += 1;
+    }
+
+    /// Number of distinct host rows a batch touches (transfer accounting).
+    pub fn rows_needed(&self, batch: &Batch, n_sparse: usize) -> usize {
+        let mut seen = std::collections::HashSet::new();
+        for (&slot, _) in self.tables.iter() {
+            for idx in batch.sparse_col(slot, n_sparse) {
+                seen.insert((slot, idx));
+            }
+        }
+        seen.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch2(slots: usize, b: usize) -> Batch {
+        Batch {
+            dense: vec![0.0; b],
+            sparse: (0..b * slots).map(|i| (i % 5) as u64).collect(),
+            labels: vec![0.0; b],
+            batch_size: b,
+        }
+    }
+
+    #[test]
+    fn snapshot_dedups_and_versions() {
+        let mut rng = Rng::new(1);
+        let hp = HostParams::new(vec![(0, 10, 4), (1, 10, 4)], &mut rng);
+        let b = batch2(2, 6);
+        let snap = hp.snapshot_for(&b, 2, 0);
+        // 6 samples × 2 tables but only 5 distinct ids per table
+        assert!(snap.rows.len() <= 10);
+        for (_, r) in &snap.rows {
+            assert_eq!(r.version, 0);
+        }
+    }
+
+    #[test]
+    fn apply_bumps_version_and_writes_values() {
+        let mut rng = Rng::new(2);
+        let mut hp = HostParams::new(vec![(0, 10, 4)], &mut rng);
+        let packet = GradPacket {
+            step: 0,
+            rows: vec![(0, 3, vec![7.0; 4])],
+        };
+        hp.apply(&packet);
+        assert_eq!(hp.applied, 1);
+        assert_eq!(hp.tables[&0].row(3), &[7.0; 4]);
+    }
+
+    #[test]
+    fn rows_needed_counts_distinct() {
+        let mut rng = Rng::new(3);
+        let hp = HostParams::new(vec![(1, 10, 4)], &mut rng);
+        let b = batch2(2, 8);
+        // table slot 1 sees ids {1,3} pattern: i%5 over odd positions
+        let n = hp.rows_needed(&b, 2);
+        assert!(n >= 1 && n <= 5);
+    }
+}

@@ -1,0 +1,412 @@
+//! Three-stage pipeline trainer (paper §IV, Figs. 8/9/14).
+//!
+//! Stage layout per step i (pipelined mode, two OS threads):
+//!
+//! ```text
+//!   PS thread      : apply grads of i−1 │ snapshot+gather batch i+1 │ …
+//!   worker thread  :   RAW-sync i │ fwd/bwd i (real compute) │ ship rows
+//! ```
+//!
+//! Device-resident tables (Eff-TT compressed) never cross the link; host-
+//! resident tables flow through the prefetch/gradient queues with the
+//! Fig. 9(b) cache patching stale rows.  Because the worker's own updates
+//! are what the cache holds, a patched row always equals the value a fully
+//! sequential run would have used — pipeline and sequential training are
+//! **bit-identical** (asserted in tests), the pipeline is pure overlap.
+//!
+//! Sequential mode (`pipelined=false`) is the Fig. 14 "prefetch queue
+//! length 1" arm: the same operations on one thread, nothing overlaps.
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::cache::EmbeddingCache;
+use crate::coordinator::engine::{NativeDlrm, TableSlot};
+use crate::coordinator::params::{GradPacket, HostParams};
+use crate::coordinator::platform::{CostModel, SimPlatform};
+use crate::coordinator::queues::BoundedQueue;
+use crate::data::ctr::Batch;
+use crate::util::prng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct PipelineCfg {
+    /// Prefetch queue depth — the paper's LC parameter.
+    pub lc: usize,
+    /// false ⇒ the Fig. 14 sequential arm.
+    pub pipelined: bool,
+    /// Cache lifecycle init.
+    pub cache_lc: u32,
+    pub cost: CostModel,
+    /// Engine table slots whose parameters live in host memory.
+    pub host_slots: Vec<usize>,
+    /// Disable the RAW synchronizer (correctness ablation: stale reads).
+    pub disable_raw_sync: bool,
+}
+
+impl PipelineCfg {
+    pub fn new(cost: CostModel, host_slots: Vec<usize>) -> PipelineCfg {
+        PipelineCfg {
+            lc: 4,
+            pipelined: true,
+            cache_lc: 8,
+            cost,
+            host_slots,
+            disable_raw_sync: false,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct PipelineReport {
+    pub steps: u64,
+    pub samples: u64,
+    pub wall: Duration,
+    pub throughput: f64,
+    pub losses: Vec<f32>,
+    pub raw_fixed: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    pub host_bytes_moved: u64,
+}
+
+/// Move the configured slots' tables out of the engine into a PS store.
+/// The engine keeps same-shaped mirrors (refreshed per prefetch).
+pub fn split_to_host(engine: &mut NativeDlrm, host_slots: &[usize], rng: &mut Rng) -> HostParams {
+    let dim = engine.cfg.emb_dim;
+    let mut slots = Vec::new();
+    for &s in host_slots {
+        match &engine.tables[s] {
+            TableSlot::Plain(t) => slots.push((s, t.rows, dim)),
+            TableSlot::Tt(_) => panic!("host slots must be plain tables (slot {s})"),
+        }
+    }
+    let mut hp = HostParams::new(slots, rng);
+    // engine mirrors start identical to the authoritative host copy
+    for (&slot, table) in hp.tables.iter_mut() {
+        if let TableSlot::Plain(mirror) = &mut engine.tables[slot] {
+            mirror.weights.copy_from_slice(&table.weights);
+        }
+    }
+    hp
+}
+
+/// Run training over `batches`; returns the report, the trained engine,
+/// and the final host params (post-drain, consistent with the engine).
+pub fn run(
+    mut engine: NativeDlrm,
+    mut host: HostParams,
+    batches: &[Batch],
+    cfg: &PipelineCfg,
+) -> (PipelineReport, NativeDlrm, HostParams) {
+    if cfg.pipelined {
+        run_pipelined(engine, host, batches, cfg)
+    } else {
+        // -------- sequential arm: one thread, no overlap ----------------
+        let n_sparse = engine.cfg.n_tables();
+        let dim = engine.cfg.emb_dim;
+        let mut cache = EmbeddingCache::new(cfg.cache_lc);
+        let mut losses = Vec::with_capacity(batches.len());
+        let mut moved = 0u64;
+        let t0 = Instant::now();
+        for (step, batch) in batches.iter().enumerate() {
+            let mut pf = host.snapshot_for(batch, n_sparse, step as u64);
+            let bytes = (pf.rows.len() * dim * 4) as u64;
+            SimPlatform::charge(cfg.cost.gather_time(pf.rows.len()) + cfg.cost.h2d_time(bytes));
+            moved += bytes;
+            cache.sync_prefetch(&mut pf); // no conflicts possible here
+            install_rows(&mut engine, &pf.rows);
+            losses.push(engine.train_step(batch));
+            let packet = collect_updates(&engine, batch, &cfg.host_slots, n_sparse, step as u64);
+            let pbytes = packet.bytes();
+            SimPlatform::charge(cfg.cost.h2d_time(pbytes)); // D2H, same link
+            moved += pbytes;
+            for (slot, row, vals) in &packet.rows {
+                cache.record_update(*slot, *row, vals, step as u64 + 1);
+            }
+            SimPlatform::charge(cfg.cost.gather_time(packet.rows.len()));
+            host.apply(&packet);
+            cache.end_step();
+        }
+        let wall = t0.elapsed();
+        let samples: u64 = batches.iter().map(|b| b.batch_size as u64).sum();
+        let report = PipelineReport {
+            steps: batches.len() as u64,
+            samples,
+            wall,
+            throughput: samples as f64 / wall.as_secs_f64(),
+            losses,
+            raw_fixed: cache.raw_conflicts_fixed,
+            cache_hits: cache.hits,
+            cache_misses: cache.misses,
+            cache_evictions: cache.evictions,
+            host_bytes_moved: moved,
+        };
+        (report, engine, host)
+    }
+}
+
+fn run_pipelined(
+    mut engine: NativeDlrm,
+    mut host: HostParams,
+    batches: &[Batch],
+    cfg: &PipelineCfg,
+) -> (PipelineReport, NativeDlrm, HostParams) {
+    let n_sparse = engine.cfg.n_tables();
+    let dim = engine.cfg.emb_dim;
+    let n = batches.len();
+    let prefetch_q = BoundedQueue::new(cfg.lc.max(1));
+    // grad queue effectively unbounded to keep the two blocking pushes
+    // deadlock-free (PS only drains between prefetches)
+    let grad_q: std::sync::Arc<BoundedQueue<GradPacket>> = BoundedQueue::new(n + 1);
+
+    let t0 = Instant::now();
+    let (report, eng, hp) = std::thread::scope(|scope| {
+        // ---------------- PS thread (CPU side of Fig. 8) ----------------
+        let ps_pf = prefetch_q.clone_arc();
+        let ps_gq = grad_q.clone_arc();
+        let ps_cost = cfg.cost;
+        let ps_batches = batches;
+        let ps_handle = scope.spawn(move || {
+            let mut moved = 0u64;
+            for (step, batch) in ps_batches.iter().enumerate() {
+                // land any finished gradients first (keeps staleness at
+                // the minimum the queue depth forces)
+                while let Some(p) = ps_gq.try_pop() {
+                    SimPlatform::charge(ps_cost.gather_time(p.rows.len()));
+                    host.apply(&p);
+                }
+                let pf = host.snapshot_for(batch, n_sparse, step as u64);
+                let bytes = (pf.rows.len() * dim * 4) as u64;
+                SimPlatform::charge(ps_cost.gather_time(pf.rows.len()) + ps_cost.h2d_time(bytes));
+                moved += bytes;
+                if !ps_pf.push(pf) {
+                    break;
+                }
+            }
+            ps_pf.close();
+            // drain the tail
+            while let Some(p) = ps_gq.pop() {
+                SimPlatform::charge(ps_cost.gather_time(p.rows.len()));
+                host.apply(&p);
+            }
+            (host, moved)
+        });
+
+        // ---------------- worker thread (device side) -------------------
+        let wk_pf = prefetch_q.clone_arc();
+        let wk_gq = grad_q.clone_arc();
+        let wk_cost = cfg.cost;
+        let host_slots = cfg.host_slots.clone();
+        let disable_sync = cfg.disable_raw_sync;
+        let cache_lc = cfg.cache_lc;
+        let wk_handle = scope.spawn(move || {
+            let mut cache = EmbeddingCache::new(cache_lc);
+            let mut losses = Vec::with_capacity(n);
+            let mut moved = 0u64;
+            for (step, batch) in batches.iter().enumerate() {
+                let mut pf = match wk_pf.pop() {
+                    Some(p) => p,
+                    None => break,
+                };
+                if !disable_sync {
+                    cache.sync_prefetch(&mut pf);
+                }
+                install_rows(&mut engine, &pf.rows);
+                losses.push(engine.train_step(batch));
+                let packet =
+                    collect_updates(&engine, batch, &host_slots, n_sparse, step as u64);
+                for (slot, row, vals) in &packet.rows {
+                    cache.record_update(*slot, *row, vals, step as u64 + 1);
+                }
+                let pbytes = packet.bytes();
+                SimPlatform::charge(wk_cost.h2d_time(pbytes));
+                moved += pbytes;
+                wk_gq.push(packet);
+                cache.end_step();
+            }
+            wk_gq.close();
+            (engine, cache, losses, moved)
+        });
+
+        let (host, ps_moved) = ps_handle.join().unwrap();
+        let (engine, cache, losses, wk_moved) = wk_handle.join().unwrap();
+        let wall = t0.elapsed();
+        let samples: u64 = batches.iter().map(|b| b.batch_size as u64).sum();
+        let report = PipelineReport {
+            steps: losses.len() as u64,
+            samples,
+            wall,
+            throughput: samples as f64 / wall.as_secs_f64(),
+            losses,
+            raw_fixed: cache.raw_conflicts_fixed,
+            cache_hits: cache.hits,
+            cache_misses: cache.misses,
+            cache_evictions: cache.evictions,
+            host_bytes_moved: ps_moved + wk_moved,
+        };
+        (report, engine, host)
+    });
+    (report, eng, hp)
+}
+
+/// Write prefetched host rows into the engine's device mirrors.
+fn install_rows(engine: &mut NativeDlrm, rows: &[(usize, crate::coordinator::cache::PrefetchedRow)]) {
+    for (slot, pr) in rows {
+        if let TableSlot::Plain(mirror) = &mut engine.tables[*slot] {
+            mirror.row_mut(pr.row).copy_from_slice(&pr.data);
+        }
+    }
+}
+
+/// Read back the batch's touched host-table rows after the local update.
+fn collect_updates(
+    engine: &NativeDlrm,
+    batch: &Batch,
+    host_slots: &[usize],
+    n_sparse: usize,
+    step: u64,
+) -> GradPacket {
+    let mut rows = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    for &slot in host_slots {
+        if let TableSlot::Plain(mirror) = &engine.tables[slot] {
+            for idx in batch.sparse_col(slot, n_sparse) {
+                if seen.insert((slot, idx)) {
+                    rows.push((slot, idx, mirror.row(idx).to_vec()));
+                }
+            }
+        }
+    }
+    GradPacket { step, rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::EngineCfg;
+    use crate::data::schema::DatasetSchema;
+    use crate::data::ctr::CtrGenerator;
+    use crate::tt::table::EffTtOptions;
+
+    fn cfg_and_batches() -> (EngineCfg, Vec<Batch>) {
+        let ecfg = EngineCfg {
+            dense_dim: 4,
+            emb_dim: 8,
+            tables: vec![(2000, true), (400, false), (300, false)],
+            tt_rank: 4,
+            bot_hidden: vec![16],
+            top_hidden: vec![16],
+            lr: 0.05,
+            tt_opts: EffTtOptions::default(),
+        };
+        let schema = DatasetSchema {
+            name: "pipe-test",
+            n_dense: 4,
+            vocabs: vec![2000, 400, 300],
+            emb_dim: 8,
+            zipf_s: 1.2,
+            ft_rank: 8,
+        };
+        let mut gen = CtrGenerator::new(schema, 7);
+        let batches = gen.batches(30, 16);
+        (ecfg, batches)
+    }
+
+    fn zero_cost() -> CostModel {
+        CostModel {
+            h2d_bps: 1e18,
+            d2d_bps: 1e18,
+            transfer_latency: Duration::ZERO,
+            ps_row: Duration::ZERO,
+            dispatch: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn pipeline_matches_sequential_bitwise() {
+        // The RAW synchronizer's whole job: pipelined training must
+        // produce the SAME loss trajectory as sequential.
+        let (ecfg, batches) = cfg_and_batches();
+        let run_mode = |pipelined: bool| -> Vec<f32> {
+            let mut engine = NativeDlrm::new(ecfg.clone(), &mut Rng::new(11));
+            let host = split_to_host(&mut engine, &[1, 2], &mut Rng::new(22));
+            let mut pcfg = PipelineCfg::new(zero_cost(), vec![1, 2]);
+            pcfg.pipelined = pipelined;
+            pcfg.lc = 4;
+            let (report, _, _) = run(engine, host, &batches, &pcfg);
+            report.losses
+        };
+        let seq = run_mode(false);
+        let pipe = run_mode(true);
+        assert_eq!(seq.len(), pipe.len());
+        for (i, (a, b)) in seq.iter().zip(&pipe).enumerate() {
+            assert_eq!(a, b, "divergence at step {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn raw_conflicts_happen_and_get_fixed() {
+        let (ecfg, batches) = cfg_and_batches();
+        let mut engine = NativeDlrm::new(ecfg, &mut Rng::new(11));
+        let host = split_to_host(&mut engine, &[1, 2], &mut Rng::new(22));
+        let mut pcfg = PipelineCfg::new(zero_cost(), vec![1, 2]);
+        pcfg.lc = 6; // deep queue => lots of run-ahead => staleness
+        let (report, _, _) = run(engine, host, &batches, &pcfg);
+        assert!(
+            report.raw_fixed > 0,
+            "zipf-skewed stream with deep prefetch must hit RAW conflicts"
+        );
+    }
+
+    #[test]
+    fn disabling_sync_diverges() {
+        // Negative control: without the Fig. 9(b) synchronizer the loss
+        // trajectory must differ from sequential (stale reads).
+        let (ecfg, batches) = cfg_and_batches();
+        let mk = |sync_off: bool| -> Vec<f32> {
+            let mut engine = NativeDlrm::new(ecfg.clone(), &mut Rng::new(11));
+            let host = split_to_host(&mut engine, &[1, 2], &mut Rng::new(22));
+            let mut pcfg = PipelineCfg::new(zero_cost(), vec![1, 2]);
+            pcfg.lc = 6;
+            pcfg.disable_raw_sync = sync_off;
+            let (r, _, _) = run(engine, host, &batches, &pcfg);
+            r.losses
+        };
+        let with_sync = mk(false);
+        let without = mk(true);
+        assert_ne!(with_sync, without, "stale reads should perturb training");
+    }
+
+    #[test]
+    fn host_and_device_converge_after_drain() {
+        let (ecfg, batches) = cfg_and_batches();
+        let mut engine = NativeDlrm::new(ecfg, &mut Rng::new(1));
+        let host = split_to_host(&mut engine, &[1], &mut Rng::new(2));
+        let pcfg = PipelineCfg::new(zero_cost(), vec![1]);
+        let (_, engine, host) = run(engine, host, &batches, &pcfg);
+        // every host row the stream touched must equal the device mirror
+        if let TableSlot::Plain(mirror) = &engine.tables[1] {
+            let auth = &host.tables[&1];
+            for r in 0..auth.rows {
+                let (a, b) = (auth.row(r), mirror.row(r));
+                for (x, y) in a.iter().zip(b) {
+                    assert!((x - y).abs() < 1e-6, "row {r} host/device drift");
+                }
+            }
+        } else {
+            panic!("slot 1 must be plain");
+        }
+    }
+
+    #[test]
+    fn training_actually_learns_through_pipeline() {
+        let (ecfg, batches) = cfg_and_batches();
+        let mut engine = NativeDlrm::new(ecfg, &mut Rng::new(5));
+        let host = split_to_host(&mut engine, &[1, 2], &mut Rng::new(6));
+        let pcfg = PipelineCfg::new(zero_cost(), vec![1, 2]);
+        let (report, _, _) = run(engine, host, &batches, &pcfg);
+        let head: f32 = report.losses[..5].iter().sum::<f32>() / 5.0;
+        let tail: f32 = report.losses[report.losses.len() - 5..].iter().sum::<f32>() / 5.0;
+        assert!(tail < head, "loss not trending down: {head} -> {tail}");
+    }
+}

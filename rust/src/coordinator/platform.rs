@@ -1,0 +1,219 @@
+//! `SimPlatform` — the device/interconnect cost model standing in for the
+//! paper's AWS p3.8xlarge (4× V100) / g4dn.12xlarge (4× T4) testbeds
+//! (DESIGN.md §4 substitution).
+//!
+//! Compute runs for real on CPU threads; **communication** (PCIe/NVLink
+//! transfers, PS gathers, kernel dispatch) is charged from this model as
+//! real sleeps, so pipeline overlap is genuinely concurrent rather than
+//! analytically composed.  Because a CPU core is ~`cpu_slowdown`× slower
+//! than the paper's GPUs at DLRM compute, link bandwidths are divided by
+//! the same factor — preserving the compute:communication *ratio* the
+//! paper's wins depend on, which is the quantity the benches reproduce.
+
+use std::time::Duration;
+
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Host↔device bandwidth, bytes/s (already slowdown-scaled).
+    pub h2d_bps: f64,
+    /// Device↔device bandwidth, bytes/s.
+    pub d2d_bps: f64,
+    /// Fixed per-transfer latency.
+    pub transfer_latency: Duration,
+    /// Host-side gather/update cost per embedding row.
+    pub ps_row: Duration,
+    /// Per-dispatch overhead (kernel launch / executable invoke).
+    pub dispatch: Duration,
+}
+
+impl CostModel {
+    /// Scale every cost by `f` (benches use this to shrink wall time
+    /// without changing ratios).
+    pub fn scaled(&self, f: f64) -> CostModel {
+        CostModel {
+            h2d_bps: self.h2d_bps / f,
+            d2d_bps: self.d2d_bps / f,
+            transfer_latency: mul(self.transfer_latency, f),
+            ps_row: mul(self.ps_row, f),
+            dispatch: mul(self.dispatch, f),
+        }
+    }
+
+    pub fn h2d_time(&self, bytes: u64) -> Duration {
+        self.transfer_latency + Duration::from_secs_f64(bytes as f64 / self.h2d_bps)
+    }
+
+    pub fn d2d_time(&self, bytes: u64) -> Duration {
+        self.transfer_latency + Duration::from_secs_f64(bytes as f64 / self.d2d_bps)
+    }
+
+    pub fn gather_time(&self, rows: usize) -> Duration {
+        mul(self.ps_row, rows as f64)
+    }
+
+    /// Ring all-reduce time for `bytes` over `n` devices:
+    /// 2·(n−1)/n · bytes / link_bw.
+    pub fn allreduce_time(&self, bytes: u64, n: usize) -> Duration {
+        if n <= 1 {
+            return Duration::ZERO;
+        }
+        let vol = 2.0 * (n as f64 - 1.0) / n as f64 * bytes as f64;
+        self.transfer_latency * 2 + Duration::from_secs_f64(vol / self.d2d_bps)
+    }
+
+    /// All-to-all exchange (model-parallel embedding lookup).
+    pub fn alltoall_time(&self, bytes: u64, n: usize) -> Duration {
+        if n <= 1 {
+            return Duration::ZERO;
+        }
+        let vol = bytes as f64 * (n as f64 - 1.0) / n as f64;
+        self.transfer_latency + Duration::from_secs_f64(vol / self.d2d_bps)
+    }
+}
+
+fn mul(d: Duration, f: f64) -> Duration {
+    Duration::from_secs_f64(d.as_secs_f64() * f)
+}
+
+/// Scale a *time* cost up by the CPU slowdown.
+///
+/// Compute runs on a CPU that is `slow`× slower than the paper's GPU, so
+/// every modeled latency/overhead must stretch by the same factor or the
+/// compute:communication balance (the quantity every pipeline/PS result
+/// depends on) would be silently distorted.  Bandwidth-derived costs get
+/// the same treatment by dividing the bandwidths above.
+fn scale_t(d: Duration, slow: f64) -> Duration {
+    mul(d, slow)
+}
+
+/// Platform presets.
+#[derive(Clone, Copy, Debug)]
+pub struct SimPlatform {
+    pub name: &'static str,
+    pub n_devices: usize,
+    /// Per-device memory capacity (the spill threshold that forces PS
+    /// mode for uncompressed tables — Fig. 13's premise).
+    pub hbm_bytes: u64,
+    pub cost: CostModel,
+    /// How much slower one CPU core is vs. this GPU at DLRM compute
+    /// (documentation of the scaling baked into `cost`).
+    pub cpu_slowdown: f64,
+}
+
+impl SimPlatform {
+    /// AWS p3.8xlarge: V100 16 GB, PCIe gen3 ~12 GB/s, NVLink ~100 GB/s.
+    pub fn v100(n_devices: usize) -> SimPlatform {
+        let slow = 100.0;
+        SimPlatform {
+            name: "V100",
+            n_devices,
+            hbm_bytes: 16 << 30,
+            cost: CostModel {
+                h2d_bps: 12e9 / slow,
+                d2d_bps: 100e9 / slow,
+                transfer_latency: scale_t(Duration::from_micros(10), slow),
+                ps_row: scale_t(Duration::from_nanos(120), slow),
+                dispatch: scale_t(Duration::from_micros(8), slow),
+            },
+            cpu_slowdown: slow,
+        }
+    }
+
+    /// AWS g4dn.12xlarge: T4 15 GB, PCIe ~12 GB/s, no NVLink (PCIe P2P).
+    pub fn t4(n_devices: usize) -> SimPlatform {
+        let slow = 40.0; // T4 is ~2.5x slower than V100 at this workload
+        SimPlatform {
+            name: "T4",
+            n_devices,
+            hbm_bytes: 15 << 30,
+            cost: CostModel {
+                h2d_bps: 12e9 / slow,
+                d2d_bps: 12e9 / slow,
+                transfer_latency: scale_t(Duration::from_micros(10), slow),
+                ps_row: scale_t(Duration::from_nanos(120), slow),
+                dispatch: scale_t(Duration::from_micros(8), slow),
+            },
+            cpu_slowdown: slow,
+        }
+    }
+
+    /// RTX 2060 edge box (Table VI's deployment platform).
+    pub fn rtx2060() -> SimPlatform {
+        let slow = 30.0;
+        SimPlatform {
+            name: "RTX2060",
+            n_devices: 1,
+            hbm_bytes: 6 << 30,
+            cost: CostModel {
+                h2d_bps: 12e9 / slow,
+                d2d_bps: 12e9 / slow,
+                transfer_latency: scale_t(Duration::from_micros(12), slow),
+                ps_row: scale_t(Duration::from_nanos(150), slow),
+                dispatch: scale_t(Duration::from_micros(10), slow),
+            },
+            cpu_slowdown: slow,
+        }
+    }
+
+    /// Charge a cost as real wall time (the pipeline threads genuinely
+    /// overlap these sleeps with compute).
+    pub fn charge(d: Duration) {
+        if d > Duration::ZERO {
+            std::thread::sleep(d);
+        }
+    }
+
+    /// Does a table set of `bytes` fit in HBM next to activations?
+    /// (90% usable heuristic.)
+    pub fn fits_hbm(&self, bytes: u64) -> bool {
+        (bytes as f64) < self.hbm_bytes as f64 * 0.9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_scales_with_bytes() {
+        let p = SimPlatform::v100(1);
+        let t1 = p.cost.h2d_time(1 << 20);
+        let t2 = p.cost.h2d_time(1 << 24);
+        assert!(t2 > t1);
+        assert!(t2.as_secs_f64() > 10.0 * (t1.as_secs_f64() - 2e-5));
+    }
+
+    #[test]
+    fn allreduce_zero_for_single_device() {
+        let p = SimPlatform::v100(1);
+        assert_eq!(p.cost.allreduce_time(1 << 20, 1), Duration::ZERO);
+        assert!(p.cost.allreduce_time(1 << 20, 4) > Duration::ZERO);
+    }
+
+    #[test]
+    fn v100_nvlink_faster_than_t4_pcie() {
+        let v = SimPlatform::v100(4);
+        let t = SimPlatform::t4(4);
+        // same logical volume: V100's (scaled) NVLink must beat T4's PCIe
+        // by less than the raw 8x because T4's slowdown scale is smaller
+        let tv = v.cost.d2d_time(100 << 20).as_secs_f64();
+        let tt = t.cost.d2d_time(100 << 20).as_secs_f64();
+        assert!(tv < tt);
+    }
+
+    #[test]
+    fn hbm_capacity_gate() {
+        let p = SimPlatform::v100(1);
+        assert!(p.fits_hbm(1 << 30));
+        assert!(!p.fits_hbm(19 << 30)); // Fig. 13's 19 GB table
+    }
+
+    #[test]
+    fn scaled_preserves_ratio() {
+        let c = SimPlatform::v100(1).cost;
+        let s = c.scaled(10.0);
+        let r0 = c.h2d_time(1 << 26).as_secs_f64() / c.d2d_time(1 << 26).as_secs_f64();
+        let r1 = s.h2d_time(1 << 26).as_secs_f64() / s.d2d_time(1 << 26).as_secs_f64();
+        assert!((r0 - r1).abs() < 0.2 * r0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Bounded blocking queues for the pipeline trainer (paper Fig. 8): the
+//! prefetch queue (PS → worker) and the gradient queue (worker → PS).
+//!
+//! The queue length is the paper's **LC (Load Capacity)** parameter: depth
+//! 1 degrades the pipeline to sequential execution (the Fig. 14 ablation
+//! arm), larger depths let the PS run ahead of the trainer.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Inner<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+/// MPMC bounded blocking queue (mutex + condvars; contention here is two
+/// threads, so a lock-free design buys nothing).
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    cap: usize,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Arc<Self> {
+        assert!(cap >= 1);
+        Arc::new(BoundedQueue {
+            inner: Mutex::new(Inner { q: VecDeque::with_capacity(cap), closed: false }),
+            cap,
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        })
+    }
+
+    /// Blocking push; returns `false` if the queue was closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        while g.q.len() >= self.cap && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return false;
+        }
+        g.q.push_back(item);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Blocking pop; returns `None` once closed AND drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.q.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        let item = g.q.pop_front();
+        if item.is_some() {
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Close: producers stop, consumers drain.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::thread;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(4);
+        for i in 0..4 {
+            assert!(q.push(i));
+        }
+        for i in 0..4 {
+            assert_eq!(q.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn blocks_at_capacity_until_pop() {
+        let q = BoundedQueue::new(1);
+        q.push(1);
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.push(2));
+        thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.len(), 1); // producer blocked
+        assert_eq!(q.pop(), Some(1));
+        h.join().unwrap();
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn close_unblocks_everyone() {
+        let q: Arc<BoundedQueue<u32>> = BoundedQueue::new(1);
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.pop());
+        thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+        assert!(!q.push(9)); // push after close fails
+    }
+
+    #[test]
+    fn producer_consumer_transfers_everything() {
+        let q = BoundedQueue::new(3);
+        let total = Arc::new(AtomicUsize::new(0));
+        let qp = q.clone();
+        let producer = thread::spawn(move || {
+            for i in 1..=100usize {
+                qp.push(i);
+            }
+            qp.close();
+        });
+        let tc = total.clone();
+        let consumer = thread::spawn(move || {
+            while let Some(x) = q.pop() {
+                tc.fetch_add(x, Ordering::Relaxed);
+            }
+        });
+        producer.join().unwrap();
+        consumer.join().unwrap();
+        assert_eq!(total.load(Ordering::Relaxed), 5050);
+    }
+
+    #[test]
+    fn depth_one_serializes() {
+        // LC=1: at most one item in flight — the sequential-mode premise
+        let q = BoundedQueue::new(1);
+        assert!(q.push(1));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.try_pop(), Some(1));
+        assert_eq!(q.try_pop(), None);
+    }
+}
+
+impl<T> BoundedQueue<T> {
+    /// Arc helper so call sites read naturally.
+    pub fn clone_arc(self: &Arc<Self>) -> Arc<Self> {
+        Arc::clone(self)
+    }
+}

@@ -1,0 +1,119 @@
+//! Mini-batch assembly from the IEEE118 dataset + EmbeddingBag layout
+//! helpers shared by the trainers.
+
+use crate::data::ctr::Batch;
+use crate::powersys::dataset::{Sample, N_DENSE, N_SPARSE};
+use crate::util::prng::Rng;
+
+/// Convert a window of IEEE118 samples into the DLRM batch layout.
+pub fn to_batch(samples: &[Sample]) -> Batch {
+    let b = samples.len();
+    let mut dense = Vec::with_capacity(b * N_DENSE);
+    let mut sparse = Vec::with_capacity(b * N_SPARSE);
+    let mut labels = Vec::with_capacity(b);
+    for s in samples {
+        dense.extend_from_slice(&s.dense);
+        sparse.extend_from_slice(&s.sparse);
+        labels.push(s.label);
+    }
+    Batch { dense, sparse, labels, batch_size: b }
+}
+
+/// Epoch iterator: shuffled fixed-size batches over a sample slice.
+pub struct EpochIter<'a> {
+    samples: &'a [Sample],
+    order: Vec<usize>,
+    batch_size: usize,
+    cursor: usize,
+}
+
+impl<'a> EpochIter<'a> {
+    pub fn new(samples: &'a [Sample], batch_size: usize, rng: &mut Rng) -> Self {
+        let mut order: Vec<usize> = (0..samples.len()).collect();
+        rng.shuffle(&mut order);
+        EpochIter { samples, order, batch_size, cursor: 0 }
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.samples.len() / self.batch_size
+    }
+}
+
+impl<'a> Iterator for EpochIter<'a> {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        if self.cursor + self.batch_size > self.order.len() {
+            return None;
+        }
+        let sel: Vec<&Sample> = self.order[self.cursor..self.cursor + self.batch_size]
+            .iter()
+            .map(|&i| &self.samples[i])
+            .collect();
+        self.cursor += self.batch_size;
+        let owned: Vec<Sample> = sel.into_iter().cloned().collect();
+        Some(to_batch(&owned))
+    }
+}
+
+/// Extract one sparse column of a batch as (indices, unit-bag offsets) —
+/// the EmbeddingBag calling convention for per-feature tables.
+pub fn column_bags(batch: &Batch, table: usize, n_sparse: usize) -> (Vec<u64>, Vec<usize>) {
+    let indices: Vec<u64> = batch.sparse_col(table, n_sparse).collect();
+    let offsets: Vec<usize> = (0..=indices.len()).collect();
+    (indices, offsets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::powersys::dataset::{generate, DatasetCfg, SparseVocab};
+
+    fn tiny_ds() -> Vec<Sample> {
+        generate(&DatasetCfg {
+            n_normal: 80,
+            n_attack: 20,
+            vocab: SparseVocab::ieee118(1.0 / 2000.0),
+            n_profiles: 10,
+            noise_std: 0.005,
+            seed: 1,
+        })
+        .samples
+    }
+
+    #[test]
+    fn to_batch_layout() {
+        let ds = tiny_ds();
+        let b = to_batch(&ds[..4]);
+        assert_eq!(b.batch_size, 4);
+        assert_eq!(b.dense.len(), 4 * N_DENSE);
+        assert_eq!(b.sparse.len(), 4 * N_SPARSE);
+        assert_eq!(b.dense[0], ds[0].dense[0]);
+        assert_eq!(b.sparse[N_SPARSE], ds[1].sparse[0]);
+    }
+
+    #[test]
+    fn epoch_covers_all_full_batches() {
+        let ds = tiny_ds();
+        let mut rng = Rng::new(0);
+        let it = EpochIter::new(&ds, 16, &mut rng);
+        assert_eq!(it.num_batches(), 100 / 16);
+        let batches: Vec<_> = it.collect();
+        assert_eq!(batches.len(), 6);
+        for b in &batches {
+            assert_eq!(b.batch_size, 16);
+        }
+    }
+
+    #[test]
+    fn column_bags_unit_offsets() {
+        let ds = tiny_ds();
+        let b = to_batch(&ds[..8]);
+        let (idx, off) = column_bags(&b, 2, N_SPARSE);
+        assert_eq!(idx.len(), 8);
+        assert_eq!(off, (0..=8).collect::<Vec<_>>());
+        for (i, &v) in idx.iter().enumerate() {
+            assert_eq!(v, ds[i].sparse[2]);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Workload synthesis: dataset schemas (Table II), Zipf index sampler,
+//! synthetic CTR generator, and batch assembly.
+
+pub mod batcher;
+pub mod ctr;
+pub mod schema;
+pub mod zipf;
+
+pub use ctr::{Batch, CtrGenerator};
+pub use schema::DatasetSchema;
+pub use zipf::Zipf;

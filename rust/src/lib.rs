@@ -1,0 +1,16 @@
+//! Rec-AD: Tensor-Train-compressed DLRM for FDIA detection.
+#![allow(clippy::needless_range_loop)]
+
+pub mod baselines;
+pub mod bench_support;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod powersys;
+pub mod reorder;
+pub mod runtime;
+pub mod serve;
+pub mod tt;
+pub mod util;

@@ -1,0 +1,275 @@
+//! `recad` — the Rec-AD leader binary: train / serve / gen-data /
+//! runtime-smoke / report subcommands over the library.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use recad::cli::{Cli, USAGE};
+use recad::config::RecAdConfig;
+use recad::coordinator::engine::NativeDlrm;
+use recad::coordinator::pipeline::{self, PipelineCfg};
+use recad::coordinator::platform::SimPlatform;
+use recad::coordinator::trainer;
+use recad::data::schema;
+use recad::powersys::dataset::{generate, DatasetCfg, SparseVocab};
+use recad::runtime::{Artifacts, DlrmTrainStep, TtLookupExe};
+use recad::serve::{Detector, StreamingServer};
+use recad::util::bench::{fmt_bytes, fmt_dur, Table};
+use recad::util::prng::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cli = match Cli::parse(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{USAGE}");
+            return Err(e);
+        }
+    };
+    match cli.subcommand.as_str() {
+        "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "train" => cmd_train(&cli),
+        "serve" => cmd_serve(&cli),
+        "gen-data" => cmd_gen_data(&cli),
+        "runtime" => cmd_runtime(&cli),
+        "report" => cmd_report(),
+        other => {
+            eprintln!("{USAGE}");
+            anyhow::bail!("unknown subcommand '{other}'")
+        }
+    }
+}
+
+fn load_config(cli: &Cli) -> Result<RecAdConfig> {
+    let mut cfg = match cli.opt("config") {
+        Some(path) => RecAdConfig::load(path)?,
+        None => RecAdConfig::default(),
+    };
+    cfg.epochs = cli.usize_or("epochs", cfg.epochs)?;
+    cfg.batch_size = cli.usize_or("batch", cfg.batch_size)?;
+    cfg.scale = cli.f64_or("scale", cfg.scale)?;
+    if cli.flag("no-reorder") {
+        cfg.reorder = false;
+    }
+    if cli.flag("no-reuse") {
+        cfg.reuse = false;
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(cli: &Cli) -> Result<()> {
+    let cfg = load_config(cli)?;
+    println!("Rec-AD training — config: {cfg:?}");
+    let ds = generate(&DatasetCfg {
+        n_normal: cli.usize_or("normal", 4000)?,
+        n_attack: cli.usize_or("attack", 1000)?,
+        vocab: SparseVocab::ieee118(cfg.scale),
+        n_profiles: 100,
+        noise_std: 0.005,
+        seed: cfg.seed,
+    });
+    println!("dataset: {} samples, BDD tau = {:.4}", ds.samples.len(), ds.bdd_tau);
+
+    if cli.flag("pipeline") {
+        // PS-pipeline mode over the small host tables
+        let ecfg = cfg.engine_cfg();
+        let mut engine = NativeDlrm::new(ecfg, &mut Rng::new(cfg.seed));
+        let host_slots = vec![2usize, 3, 4, 5, 6];
+        let host = pipeline::split_to_host(&mut engine, &host_slots, &mut Rng::new(cfg.seed ^ 1));
+        let batches: Vec<_> = {
+            let mut rng = Rng::new(cfg.seed ^ 2);
+            recad::data::batcher::EpochIter::new(&ds.samples, cfg.batch_size, &mut rng).collect()
+        };
+        let mut pcfg = PipelineCfg::new(SimPlatform::v100(1).cost, host_slots);
+        pcfg.lc = cfg.pipeline_lc;
+        let (report, mut engine, _) = pipeline::run(engine, host, &batches, &pcfg);
+        println!(
+            "pipeline: {} steps, {:.0} samples/s, RAW fixed {}, cache hits {}",
+            report.steps, report.throughput, report.raw_fixed, report.cache_hits
+        );
+        let eval = trainer::evaluate_on(&mut engine, ds.split(0.8).1);
+        print_eval(&eval);
+    } else {
+        let (report, _) = trainer::train_ieee118(
+            cfg.engine_cfg(),
+            &ds,
+            cfg.epochs,
+            cfg.batch_size,
+            cfg.seed,
+        );
+        println!(
+            "trained {} steps in {} ({:.0} samples/s)",
+            report.steps,
+            fmt_dur(report.wall.as_secs_f64()),
+            report.samples_per_sec
+        );
+        let show = report.loss_curve.len().min(10);
+        let stride = (report.loss_curve.len() / show).max(1);
+        println!("loss curve (every {stride} steps):");
+        for (i, l) in report.loss_curve.iter().step_by(stride).enumerate() {
+            println!("  step {:>5}  loss {:.4}", i * stride, l);
+        }
+        print_eval(&report.eval);
+    }
+    Ok(())
+}
+
+fn print_eval(eval: &recad::metrics::ClassifyReport) {
+    println!(
+        "eval: accuracy {:.1}%  recall {:.1}%  precision {:.1}%  F1 {:.1}%",
+        eval.accuracy * 100.0,
+        eval.recall * 100.0,
+        eval.precision * 100.0,
+        eval.f1 * 100.0
+    );
+}
+
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    let cfg = load_config(cli)?;
+    let requests = cli.usize_or("requests", 500)?;
+    let threshold = cli.f64_or("threshold", 0.5)? as f32;
+    let ds = generate(&DatasetCfg {
+        n_normal: 2000,
+        n_attack: 500,
+        vocab: SparseVocab::ieee118(cfg.scale),
+        n_profiles: 100,
+        noise_std: 0.005,
+        seed: cfg.seed,
+    });
+    println!("training detector before serving…");
+    let (report, engine) = trainer::train_ieee118(cfg.engine_cfg(), &ds, 2, 64, cfg.seed);
+    print_eval(&report.eval);
+    let model_bytes = engine.model_bytes();
+    let det = Detector::new(engine, threshold);
+    let server = StreamingServer::start(det, 1, Duration::from_micros(100));
+    let stream = &ds.samples[..requests.min(ds.samples.len())];
+    let sr = server.run_stream(stream, model_bytes);
+    println!(
+        "served {} requests: {:.1} TPS, mean latency {}, p99 {}, model {}",
+        sr.served,
+        sr.tps,
+        fmt_dur(sr.mean_latency.as_secs_f64()),
+        fmt_dur(sr.p99_latency.as_secs_f64()),
+        fmt_bytes(sr.model_bytes)
+    );
+    Ok(())
+}
+
+fn cmd_gen_data(cli: &Cli) -> Result<()> {
+    let ds = generate(&DatasetCfg {
+        n_normal: cli.usize_or("normal", 20_000)?,
+        n_attack: cli.usize_or("attack", 4_800)?,
+        vocab: SparseVocab::ieee118(1.0 / 2000.0),
+        n_profiles: 200,
+        noise_std: 0.005,
+        seed: cli.usize_or("seed", 0x5EED)? as u64,
+    });
+    let attacked = ds.samples.iter().filter(|s| s.label > 0.5).count();
+    println!(
+        "IEEE118 FDIA dataset: {} samples ({} attacked), BDD tau {:.4}",
+        ds.samples.len(),
+        attacked,
+        ds.bdd_tau
+    );
+    Ok(())
+}
+
+fn cmd_runtime(cli: &Cli) -> Result<()> {
+    let dir = cli.opt_or("artifacts", "artifacts");
+    println!("loading + compiling artifacts from {dir}/ …");
+    let arts = Artifacts::load(dir)?;
+    println!(
+        "meta: dense={} tables={} train_batch={} params={}",
+        arts.meta.dense_dim,
+        arts.meta.num_tables,
+        arts.meta.train_batch,
+        arts.meta.params.len()
+    );
+    // one train step on random data
+    let m = arts.meta.clone();
+    let mut rng = Rng::new(1);
+    let mut dense = vec![0f32; m.train_batch * m.dense_dim];
+    rng.fill_normal(&mut dense, 0.0, 1.0);
+    let idx: Vec<i32> = (0..m.train_batch * m.num_tables)
+        .map(|i| (rng.below(m.table_rows[i % m.num_tables])) as i32)
+        .collect();
+    let labels: Vec<f32> = (0..m.train_batch)
+        .map(|_| if rng.coin(0.5) { 1.0 } else { 0.0 })
+        .collect();
+    let mut step = DlrmTrainStep::new(&arts)?;
+    let l0 = step.step(&dense, &idx, &labels)?;
+    let l1 = step.step(&dense, &idx, &labels)?;
+    println!("train_step loss: {l0:.4} -> {l1:.4} (same batch; must descend)");
+    anyhow::ensure!(l1 < l0, "loss did not descend on repeated batch");
+
+    // tt_lookup artifact smoke
+    let spec = recad::tt::shapes::TtShapes::plan(m.lookup_rows, m.emb_dim, m.lookup_rank);
+    let tbl = recad::tt::table::EffTtTable::new(
+        spec,
+        recad::tt::table::EffTtOptions::default(),
+        &mut rng,
+    );
+    let (d1, d2, d3) = tbl.to_jax_cores();
+    let r = m.lookup_rank;
+    let idx2: Vec<i32> = (0..m.lookup_batch * m.lookup_bag)
+        .map(|_| rng.below(m.lookup_rows) as i32)
+        .collect();
+    let lookup = TtLookupExe::new(&arts);
+    let out = lookup.run(
+        (&d1, &[spec.m[0] as usize, spec.n[0], r]),
+        (&d2, &[r, spec.m[1] as usize, spec.n[1], r]),
+        (&d3, &[r, spec.m[2] as usize, spec.n[2]]),
+        &idx2,
+    )?;
+    println!("tt_lookup artifact OK: {} outputs", out.len());
+    println!("runtime smoke PASSED");
+    Ok(())
+}
+
+fn cmd_report() -> Result<()> {
+    let mut t2 = Table::new(
+        "Table II — dataset schemas",
+        &["Dataset", "Dense", "Sparse", "Rows", "Dim", "Plain size"],
+    );
+    let mut t4 = Table::new(
+        "Table IV — embedding footprint (plain vs Eff-TT)",
+        &["Dataset", "DLRM", "Rec-AD", "Compression", "Paper"],
+    );
+    let paper = [6.22, 74.19, 7.29, 5.33];
+    for (s, p) in schema::all_schemas().iter().zip(paper) {
+        t2.row(&[
+            s.name.to_string(),
+            s.n_dense.to_string(),
+            s.n_sparse().to_string(),
+            format!("{:.1}M", s.total_rows() as f64 / 1e6),
+            s.emb_dim.to_string(),
+            fmt_bytes(s.plain_bytes()),
+        ]);
+        let tt = s.tt_bytes(s.ft_rank, 1_000_000);
+        t4.row(&[
+            s.name.to_string(),
+            fmt_bytes(s.plain_bytes()),
+            fmt_bytes(tt),
+            format!("{:.2}x", s.compression_ratio(s.ft_rank, 1_000_000)),
+            format!("{p:.2}x"),
+        ]);
+    }
+    t2.print();
+    t4.print();
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! ROC-AUC — the CTR-standard ranking metric backing Table V's accuracy
+//! parity claims (threshold-free, robust to class imbalance).
+
+/// Exact AUC by the rank-sum (Mann–Whitney U) formulation, with proper
+/// tie handling via midranks.  O(n log n).
+pub fn auc(probs: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(probs.len(), labels.len());
+    let n = probs.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| probs[a].partial_cmp(&probs[b]).unwrap());
+    // midranks over tie groups
+    let mut rank = vec![0.0f64; n];
+    let mut i = 0usize;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && probs[order[j + 1]] == probs[order[i]] {
+            j += 1;
+        }
+        let mid = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            rank[order[k]] = mid;
+        }
+        i = j + 1;
+    }
+    let n_pos = labels.iter().filter(|&&l| l > 0.5).count() as f64;
+    let n_neg = n as f64 - n_pos;
+    if n_pos == 0.0 || n_neg == 0.0 {
+        return 0.5; // degenerate: no ranking information
+    }
+    let rank_sum_pos: f64 = (0..n).filter(|&k| labels[k] > 0.5).map(|k| rank[k]).sum();
+    (rank_sum_pos - n_pos * (n_pos + 1.0) / 2.0) / (n_pos * n_neg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_ranking() {
+        assert_eq!(auc(&[0.1, 0.2, 0.8, 0.9], &[0.0, 0.0, 1.0, 1.0]), 1.0);
+    }
+
+    #[test]
+    fn inverted_ranking() {
+        assert_eq!(auc(&[0.9, 0.8, 0.2, 0.1], &[0.0, 0.0, 1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn random_is_half() {
+        // all-equal scores: every pair is a tie -> 0.5 by midranks
+        assert!((auc(&[0.5; 10], &[1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_single_class() {
+        assert_eq!(auc(&[0.3, 0.7], &[1.0, 1.0]), 0.5);
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        let probs = [0.1f32, 0.4, 0.35, 0.8, 0.65, 0.9, 0.5, 0.2];
+        let labels = [0.0f32, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0, 0.0];
+        // brute force pair counting
+        let mut wins = 0.0;
+        let mut total = 0.0;
+        for i in 0..8 {
+            for j in 0..8 {
+                if labels[i] > 0.5 && labels[j] < 0.5 {
+                    total += 1.0;
+                    if probs[i] > probs[j] {
+                        wins += 1.0;
+                    } else if probs[i] == probs[j] {
+                        wins += 0.5;
+                    }
+                }
+            }
+        }
+        assert!((auc(&probs, &labels) - wins / total).abs() < 1e-12);
+    }
+}

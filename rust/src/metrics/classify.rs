@@ -1,0 +1,125 @@
+//! Detection-quality metrics (paper §V-F): Accuracy, Recall, Precision,
+//! F1 from a probability/label stream at a decision threshold.
+
+/// Confusion-matrix counts.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Confusion {
+    pub tp: u64,
+    pub fp: u64,
+    pub tn: u64,
+    pub fn_: u64,
+}
+
+impl Confusion {
+    pub fn observe(&mut self, prob: f32, label: f32, threshold: f32) {
+        let pred = prob > threshold;
+        let truth = label > 0.5;
+        match (pred, truth) {
+            (true, true) => self.tp += 1,
+            (true, false) => self.fp += 1,
+            (false, false) => self.tn += 1,
+            (false, true) => self.fn_ += 1,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.tp + self.fp + self.tn + self.fn_
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.total() == 0 {
+            return 0.0;
+        }
+        (self.tp + self.tn) as f64 / self.total() as f64
+    }
+
+    pub fn recall(&self) -> f64 {
+        if self.tp + self.fn_ == 0 {
+            return 0.0;
+        }
+        self.tp as f64 / (self.tp + self.fn_) as f64
+    }
+
+    pub fn precision(&self) -> f64 {
+        if self.tp + self.fp == 0 {
+            return 0.0;
+        }
+        self.tp as f64 / (self.tp + self.fp) as f64
+    }
+
+    pub fn f1(&self) -> f64 {
+        let p = self.precision();
+        let r = self.recall();
+        if p + r == 0.0 {
+            return 0.0;
+        }
+        2.0 * p * r / (p + r)
+    }
+}
+
+/// Full evaluation report (one Table III row).
+#[derive(Clone, Debug)]
+pub struct ClassifyReport {
+    pub confusion: Confusion,
+    pub accuracy: f64,
+    pub recall: f64,
+    pub precision: f64,
+    pub f1: f64,
+}
+
+/// Evaluate probabilities against labels at `threshold`.
+pub fn evaluate(probs: &[f32], labels: &[f32], threshold: f32) -> ClassifyReport {
+    assert_eq!(probs.len(), labels.len());
+    let mut c = Confusion::default();
+    for (&p, &l) in probs.iter().zip(labels) {
+        c.observe(p, l, threshold);
+    }
+    ClassifyReport {
+        confusion: c,
+        accuracy: c.accuracy(),
+        recall: c.recall(),
+        precision: c.precision(),
+        f1: c.f1(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_classifier() {
+        let r = evaluate(&[0.9, 0.1, 0.8, 0.2], &[1.0, 0.0, 1.0, 0.0], 0.5);
+        assert_eq!(r.accuracy, 1.0);
+        assert_eq!(r.recall, 1.0);
+        assert_eq!(r.f1, 1.0);
+    }
+
+    #[test]
+    fn all_wrong() {
+        let r = evaluate(&[0.1, 0.9], &[1.0, 0.0], 0.5);
+        assert_eq!(r.accuracy, 0.0);
+        assert_eq!(r.recall, 0.0);
+    }
+
+    #[test]
+    fn known_confusion() {
+        // tp=1 fp=1 tn=1 fn=1
+        let r = evaluate(&[0.9, 0.9, 0.1, 0.1], &[1.0, 0.0, 0.0, 1.0], 0.5);
+        assert_eq!(r.confusion, Confusion { tp: 1, fp: 1, tn: 1, fn_: 1 });
+        assert!((r.accuracy - 0.5).abs() < 1e-12);
+        assert!((r.recall - 0.5).abs() < 1e-12);
+        assert!((r.precision - 0.5).abs() < 1e-12);
+        assert!((r.f1 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn threshold_moves_tradeoff() {
+        let probs = [0.3, 0.6, 0.7, 0.9];
+        let labels = [0.0, 1.0, 0.0, 1.0];
+        let loose = evaluate(&probs, &labels, 0.2);
+        let tight = evaluate(&probs, &labels, 0.8);
+        assert!(loose.recall >= tight.recall);
+        assert!(tight.precision >= loose.precision);
+    }
+}

@@ -1,0 +1,8 @@
+//! Evaluation metrics: classification quality (Table III/V) and the
+//! throughput/latency trackers shared by the serving path and benches.
+
+pub mod auc;
+pub mod classify;
+
+pub use auc::auc;
+pub use classify::{evaluate, ClassifyReport, Confusion};

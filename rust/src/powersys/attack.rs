@@ -1,0 +1,163 @@
+//! FDIA construction: stealthy attacks `a = H·c` (invisible to residual
+//! BDD — Liu, Ning & Reiter's classical result) and naive random attacks
+//! (which BDD catches).  The detector the paper trains must catch what BDD
+//! cannot.
+
+use crate::powersys::dcpf::DcPowerFlow;
+use crate::powersys::ieee118::N_BUS;
+use crate::util::prng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttackKind {
+    /// a = H·c with sparse c: bypasses BDD entirely.
+    Stealthy,
+    /// Random measurement corruption: detectable by BDD.
+    Random,
+    /// Proportional scaling of a measurement subset (load-altering flavor).
+    Scaling,
+}
+
+#[derive(Clone, Debug)]
+pub struct Attack {
+    pub kind: AttackKind,
+    /// Additive perturbation on the measurement vector.
+    pub delta: Vec<f64>,
+    /// Buses whose state the attacker targets (c-support for stealthy).
+    pub target_buses: Vec<usize>,
+    pub magnitude: f64,
+}
+
+pub struct AttackGen<'a> {
+    pf: &'a DcPowerFlow,
+    h_rows: usize,
+}
+
+impl<'a> AttackGen<'a> {
+    pub fn new(pf: &'a DcPowerFlow) -> AttackGen<'a> {
+        let h_rows = pf.grid.n_measurements();
+        AttackGen { pf, h_rows }
+    }
+
+    /// Stealthy FDIA: pick `k` target buses, draw attack state shift c,
+    /// inject a = H·c.  The estimator absorbs c into the state, so the
+    /// residual is **unchanged** — this is the attack class the DLRM must
+    /// learn to catch.
+    pub fn stealthy(&self, rng: &mut Rng, k: usize, magnitude: f64) -> Attack {
+        let targets = rng.sample_distinct(N_BUS - 1, k.max(1));
+        let mut c = vec![0.0; N_BUS - 1];
+        for &t in &targets {
+            c[t] = magnitude * (rng.normal() * 0.5 + (if rng.coin(0.5) { 1.0 } else { -1.0 }));
+        }
+        let h = self.pf.jacobian();
+        let delta = h.matvec(&c);
+        Attack {
+            kind: AttackKind::Stealthy,
+            delta,
+            target_buses: targets.iter().map(|&t| t + 1).collect(),
+            magnitude,
+        }
+    }
+
+    /// Random corruption of `k` measurements — BDD-detectable.
+    pub fn random(&self, rng: &mut Rng, k: usize, magnitude: f64) -> Attack {
+        let rows = rng.sample_distinct(self.h_rows, k.max(1));
+        let mut delta = vec![0.0; self.h_rows];
+        for &r in &rows {
+            delta[r] = magnitude * rng.normal();
+        }
+        Attack {
+            kind: AttackKind::Random,
+            delta,
+            target_buses: vec![],
+            magnitude,
+        }
+    }
+
+    /// Scale a contiguous measurement window (mimics coordinated load
+    /// falsification) — partially detectable.
+    pub fn scaling(&self, rng: &mut Rng, z: &[f64], frac: f64, factor: f64) -> Attack {
+        let span = ((self.h_rows as f64) * frac) as usize;
+        let start = rng.usize_below(self.h_rows - span.max(1));
+        let mut delta = vec![0.0; self.h_rows];
+        for i in start..start + span {
+            delta[i] = z[i] * (factor - 1.0);
+        }
+        Attack {
+            kind: AttackKind::Scaling,
+            delta,
+            target_buses: vec![],
+            magnitude: factor,
+        }
+    }
+}
+
+/// Apply an attack to a measurement vector.
+pub fn apply(z: &[f64], attack: &Attack) -> Vec<f64> {
+    z.iter().zip(&attack.delta).map(|(a, b)| a + b).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::powersys::estimation::Estimator;
+    use crate::powersys::ieee118::Grid;
+    use crate::util::check::check_cases;
+
+    fn clean_measurements(pf: &DcPowerFlow, rng: &mut Rng) -> Vec<f64> {
+        let inj: Vec<f64> = (0..N_BUS).map(|_| rng.normal() * 0.1).collect();
+        let theta = pf.solve_angles(&inj);
+        let mut z = pf.flows(&theta);
+        z.extend(pf.injections(&theta));
+        for v in z.iter_mut() {
+            *v += rng.normal() * 0.005; // sensor noise
+        }
+        z
+    }
+
+    #[test]
+    fn stealthy_attack_preserves_residual() {
+        let pf = DcPowerFlow::new(Grid::ieee118(8));
+        let est = Estimator::new(&pf);
+        let gen = AttackGen::new(&pf);
+        check_cases("stealthy", 10, |rng, _| {
+            let z = clean_measurements(&pf, rng);
+            let r0 = est.estimate(&z).residual_norm;
+            let atk = gen.stealthy(rng, 4, 0.5);
+            let za = apply(&z, &atk);
+            let r1 = est.estimate(&za).residual_norm;
+            assert!(
+                (r1 - r0).abs() < 1e-6 * r0.max(1.0),
+                "stealthy attack changed residual: {r0} -> {r1}"
+            );
+            // ... but it does move the measurements substantially
+            let shift: f64 = atk.delta.iter().map(|d| d * d).sum::<f64>().sqrt();
+            assert!(shift > 0.1, "attack too small to matter: {shift}");
+        });
+    }
+
+    #[test]
+    fn random_attack_trips_bdd() {
+        let pf = DcPowerFlow::new(Grid::ieee118(8));
+        let est = Estimator::new(&pf);
+        let gen = AttackGen::new(&pf);
+        check_cases("random-detectable", 10, |rng, _| {
+            let z = clean_measurements(&pf, rng);
+            let r0 = est.estimate(&z).residual_norm;
+            let atk = gen.random(rng, 6, 5.0);
+            let za = apply(&z, &atk);
+            let r1 = est.estimate(&za).residual_norm;
+            assert!(r1 > 2.0 * r0, "random attack invisible: {r0} -> {r1}");
+        });
+    }
+
+    #[test]
+    fn scaling_attack_shapes() {
+        let pf = DcPowerFlow::new(Grid::ieee118(8));
+        let gen = AttackGen::new(&pf);
+        let mut rng = Rng::new(3);
+        let z = clean_measurements(&pf, &mut rng);
+        let atk = gen.scaling(&mut rng, &z, 0.1, 1.5);
+        let touched = atk.delta.iter().filter(|d| d.abs() > 0.0).count();
+        assert!(touched > 0 && touched <= z.len() / 5);
+    }
+}

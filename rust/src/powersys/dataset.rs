@@ -1,0 +1,404 @@
+//! IEEE-118 FDIA detection dataset synthesis (paper Table II row 4:
+//! 24,800 samples, 6 dense + 7 sparse features, 20,000 normal / 4,800
+//! attacked).
+//!
+//! Each sample is one SCADA snapshot: a DC power-flow solution under a
+//! time-varying load pattern, optionally perturbed by an FDIA, summarized
+//! into the DLRM feature layout:
+//!
+//! dense (6): [mean|flow|, max|flow|, std(flow), mean(inj), residual-norm,
+//!            max-normalized-residual]
+//! sparse (7): [topo-pair id (large, hashed), load-profile id (large,
+//!            hashed), argmax-|inj| bus, argmax-|flow| branch, dominant
+//!            generator, hour-of-day, dominant measurement type]
+//!
+//! The two large vocabularies are produced by hashing structured state, so
+//! their index distribution inherits the power-law skew of real telemetry
+//! (a small set of load archetypes dominates) — exactly the skew the
+//! Eff-TT reuse buffer and the index reordering exploit.
+
+use crate::powersys::attack::{apply, Attack, AttackGen, AttackKind};
+use crate::powersys::dcpf::DcPowerFlow;
+use crate::powersys::estimation::Estimator;
+use crate::powersys::ieee118::{Grid, N_BRANCH, N_BUS, N_GEN};
+use crate::util::prng::Rng;
+
+pub const N_DENSE: usize = 6;
+pub const N_SPARSE: usize = 7;
+
+/// One DLRM-ready sample.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub dense: [f32; N_DENSE],
+    pub sparse: [u64; N_SPARSE],
+    /// 1.0 = attacked, 0.0 = clean.
+    pub label: f32,
+    pub attack_kind: Option<AttackKind>,
+}
+
+/// Vocabulary sizes per sparse feature (must match the model config).
+#[derive(Clone, Copy, Debug)]
+pub struct SparseVocab(pub [u64; N_SPARSE]);
+
+impl SparseVocab {
+    /// Paper-shape vocabularies scaled by `scale` on the two large tables
+    /// (12M and 7.5M rows at scale 1.0; Σ ≈ 19.53M ≈ Table II).
+    pub fn ieee118(scale: f64) -> SparseVocab {
+        let s = |r: f64| ((r * scale) as u64).max(32);
+        SparseVocab([
+            s(12_000_000.0),
+            s(7_500_000.0),
+            N_BUS as u64,
+            N_BRANCH as u64,
+            N_GEN as u64,
+            24,
+            91,
+        ])
+    }
+}
+
+pub struct DatasetCfg {
+    pub n_normal: usize,
+    pub n_attack: usize,
+    pub vocab: SparseVocab,
+    /// Number of load archetypes (drives the power-law on table 1).
+    pub n_profiles: usize,
+    pub noise_std: f64,
+    pub seed: u64,
+}
+
+impl Default for DatasetCfg {
+    fn default() -> Self {
+        DatasetCfg {
+            n_normal: 20_000,
+            n_attack: 4_800,
+            vocab: SparseVocab::ieee118(1.0 / 2000.0),
+            n_profiles: 200,
+            noise_std: 0.005,
+            seed: 0x5EED,
+        }
+    }
+}
+
+pub struct Ieee118Dataset {
+    pub samples: Vec<Sample>,
+    pub vocab: SparseVocab,
+    /// Calibrated BDD threshold (for baseline comparison).
+    pub bdd_tau: f64,
+}
+
+/// FNV-1a for stable feature hashing.
+#[inline]
+pub fn fnv1a(data: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &d in data {
+        for b in d.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+    h
+}
+
+pub fn generate(cfg: &DatasetCfg) -> Ieee118Dataset {
+    let grid = Grid::ieee118(cfg.seed);
+    let pf = DcPowerFlow::new(grid);
+    let est = Estimator::new(&pf);
+    let gen = AttackGen::new(&pf);
+    let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
+
+    // Load archetypes with Zipf popularity: profile p is chosen with
+    // weight ∝ 1/(p+1)^1.1 — telemetry skew.
+    let profiles: Vec<Vec<f64>> = (0..cfg.n_profiles)
+        .map(|_| (0..N_BUS).map(|_| 0.3 + 0.7 * rng.f64()).collect())
+        .collect();
+    let weights: Vec<f64> = (0..cfg.n_profiles)
+        .map(|p| 1.0 / ((p + 1) as f64).powf(1.1))
+        .collect();
+    let wsum: f64 = weights.iter().sum();
+
+    let pick_profile = |rng: &mut Rng| -> usize {
+        let mut x = rng.f64() * wsum;
+        for (p, &w) in weights.iter().enumerate() {
+            if x < w {
+                return p;
+            }
+            x -= w;
+        }
+        cfg.n_profiles - 1
+    };
+
+    let total = cfg.n_normal + cfg.n_attack;
+    let mut order: Vec<bool> = (0..total).map(|i| i < cfg.n_attack).collect();
+    rng.shuffle(&mut order);
+
+    let mut samples = Vec::with_capacity(total);
+    let mut clean_norms = Vec::new();
+    for (si, &attacked) in order.iter().enumerate() {
+        let hour = (si % 24) as u64;
+        let day_factor = 0.8 + 0.4 * ((hour as f64 / 24.0) * std::f64::consts::TAU).sin().abs();
+        let p_id = pick_profile(&mut rng);
+
+        // injections: generators cover the scaled profile load
+        let mut inj: Vec<f64> = profiles[p_id]
+            .iter()
+            .map(|&l| -l * day_factor * (1.0 + 0.05 * rng.normal()))
+            .collect();
+        let total_load: f64 = -inj.iter().sum::<f64>();
+        let per_gen = total_load / pf.grid.gen_buses.len() as f64;
+        let gen_jitter: Vec<f64> = pf
+            .grid
+            .gen_buses
+            .iter()
+            .map(|_| per_gen * (1.0 + 0.1 * rng.normal()))
+            .collect();
+        let jsum: f64 = gen_jitter.iter().sum();
+        let scale = total_load / jsum;
+        for (gi, &g) in pf.grid.gen_buses.iter().enumerate() {
+            inj[g] += gen_jitter[gi] * scale;
+        }
+
+        let theta = pf.solve_angles(&inj);
+        let mut z = pf.flows(&theta);
+        z.extend(pf.injections(&theta));
+        for v in z.iter_mut() {
+            *v += rng.normal() * cfg.noise_std;
+        }
+
+        let (z, attack): (Vec<f64>, Option<Attack>) = if attacked {
+            // paper's threat model: mostly stealthy, some crude attacks
+            let pick = rng.usize_below(10);
+            let atk = match pick {
+                0..=6 => {
+                    let k = 2 + rng.usize_below(6);
+                    let mag = 0.3 + 0.7 * rng.f64();
+                    gen.stealthy(&mut rng, k, mag)
+                }
+                7..=8 => {
+                    let frac = 0.05 + 0.1 * rng.f64();
+                    let factor = 1.2 + rng.f64();
+                    gen.scaling(&mut rng, &z, frac, factor)
+                }
+                _ => {
+                    let k = 3 + rng.usize_below(5);
+                    let mag = 1.0 + 2.0 * rng.f64();
+                    gen.random(&mut rng, k, mag)
+                }
+            };
+            (apply(&z, &atk), Some(atk))
+        } else {
+            (z, None)
+        };
+
+        let e = est.estimate(&z);
+        if !attacked {
+            clean_norms.push(e.residual_norm);
+        }
+
+        // ---- dense features -------------------------------------------
+        let nb = pf.grid.branches.len();
+        let flows = &z[..nb];
+        let injm = &z[nb..];
+        let mean_f = flows.iter().map(|f| f.abs()).sum::<f64>() / nb as f64;
+        let max_f = flows.iter().fold(0.0f64, |m, f| m.max(f.abs()));
+        let var_f = flows.iter().map(|f| (f.abs() - mean_f) * (f.abs() - mean_f)).sum::<f64>() / nb as f64;
+        let mean_i = injm.iter().sum::<f64>() / injm.len() as f64;
+        let dense = [
+            mean_f as f32,
+            max_f as f32,
+            var_f.sqrt() as f32,
+            mean_i as f32,
+            e.residual_norm as f32,
+            e.max_abs_residual as f32,
+        ];
+
+        // ---- sparse features -------------------------------------------
+        let vocab = cfg.vocab.0;
+        let argmax_flow = flows
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let argmax_inj = injm
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let dominant_gen = pf
+            .grid
+            .gen_buses
+            .iter()
+            .enumerate()
+            .max_by(|a, b| inj[*a.1].partial_cmp(&inj[*b.1]).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let max_res_row = e
+            .residual
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        // large-vocab hashes: structured state → skewed id space
+        let topo_pair = fnv1a(&[argmax_flow as u64, argmax_inj as u64, hour]) % vocab[0];
+        let quant: Vec<u64> = profiles[p_id].iter().take(16).map(|l| (l * 8.0) as u64).collect();
+        let profile_id = fnv1a(&quant) % vocab[1];
+        let sparse = [
+            topo_pair,
+            profile_id,
+            argmax_inj as u64 % vocab[2],
+            argmax_flow as u64 % vocab[3],
+            dominant_gen as u64 % vocab[4],
+            hour % vocab[5],
+            (max_res_row as u64) % vocab[6],
+        ];
+
+        samples.push(Sample {
+            dense,
+            sparse,
+            label: if attacked { 1.0 } else { 0.0 },
+            attack_kind: attack.map(|a| a.kind),
+        });
+    }
+
+    // normalize dense features to zero-mean/unit-std (paper: max-min /
+    // normalization preprocessing; z-score is the variance-preserving kin)
+    let mut mean = [0.0f64; N_DENSE];
+    let mut var = [0.0f64; N_DENSE];
+    for s in &samples {
+        for d in 0..N_DENSE {
+            mean[d] += s.dense[d] as f64;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= samples.len() as f64;
+    }
+    for s in &samples {
+        for d in 0..N_DENSE {
+            let x = s.dense[d] as f64 - mean[d];
+            var[d] += x * x;
+        }
+    }
+    for v in var.iter_mut() {
+        *v = (*v / samples.len() as f64).sqrt().max(1e-9);
+    }
+    for s in samples.iter_mut() {
+        for d in 0..N_DENSE {
+            s.dense[d] = ((s.dense[d] as f64 - mean[d]) / var[d]) as f32;
+        }
+    }
+
+    let bdd_tau = Estimator::calibrate_tau(&clean_norms, 1.05);
+    Ieee118Dataset { samples, vocab: cfg.vocab, bdd_tau }
+}
+
+impl Ieee118Dataset {
+    /// Split into (train, test) preserving order randomization.
+    pub fn split(&self, train_frac: f64) -> (&[Sample], &[Sample]) {
+        let n = (self.samples.len() as f64 * train_frac) as usize;
+        (&self.samples[..n], &self.samples[n..])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> DatasetCfg {
+        DatasetCfg {
+            n_normal: 400,
+            n_attack: 100,
+            vocab: SparseVocab::ieee118(1.0 / 2000.0),
+            n_profiles: 40,
+            noise_std: 0.005,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn generates_requested_counts() {
+        let ds = generate(&small_cfg());
+        assert_eq!(ds.samples.len(), 500);
+        let attacked = ds.samples.iter().filter(|s| s.label > 0.5).count();
+        assert_eq!(attacked, 100);
+    }
+
+    #[test]
+    fn sparse_indices_in_vocab() {
+        let ds = generate(&small_cfg());
+        for s in &ds.samples {
+            for (f, &idx) in s.sparse.iter().enumerate() {
+                assert!(idx < ds.vocab.0[f], "feature {f}: {idx} >= {}", ds.vocab.0[f]);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_normalized() {
+        let ds = generate(&small_cfg());
+        for d in 0..N_DENSE {
+            let mean: f64 = ds.samples.iter().map(|s| s.dense[d] as f64).sum::<f64>()
+                / ds.samples.len() as f64;
+            assert!(mean.abs() < 0.1, "feature {d} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn profile_ids_are_skewed() {
+        // power-law premise: top profile id must dominate
+        let ds = generate(&small_cfg());
+        let mut counts = std::collections::HashMap::new();
+        for s in &ds.samples {
+            *counts.entry(s.sparse[1]).or_insert(0usize) += 1;
+        }
+        let max = counts.values().copied().max().unwrap();
+        assert!(
+            max as f64 > 2.0 * ds.samples.len() as f64 / counts.len() as f64,
+            "no skew: max {max} over {} ids", counts.len()
+        );
+    }
+
+    #[test]
+    fn bdd_misses_stealthy_catches_random() {
+        let ds = generate(&small_cfg());
+        // recompute BDD verdicts from stored dense[4] (residual norm)
+        let mut stealthy_caught = 0;
+        let mut stealthy_total = 0;
+        let mut random_caught = 0;
+        let mut random_total = 0;
+        // NOTE: dense was normalized; use kind + stored residual ordering
+        // instead: stealthy residuals must look like clean ones.
+        let clean_mean: f32 = {
+            let c: Vec<f32> = ds.samples.iter().filter(|s| s.label < 0.5).map(|s| s.dense[4]).collect();
+            c.iter().sum::<f32>() / c.len() as f32
+        };
+        for s in &ds.samples {
+            match s.attack_kind {
+                Some(AttackKind::Stealthy) => {
+                    stealthy_total += 1;
+                    if s.dense[4] > clean_mean + 3.0 {
+                        stealthy_caught += 1;
+                    }
+                }
+                Some(AttackKind::Random) => {
+                    random_total += 1;
+                    if s.dense[4] > clean_mean + 3.0 {
+                        random_caught += 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+        assert!(stealthy_total > 0 && random_total > 0);
+        assert!(
+            (stealthy_caught as f64) < 0.2 * stealthy_total as f64,
+            "stealthy attacks should evade the residual test: {stealthy_caught}/{stealthy_total}"
+        );
+        assert!(
+            (random_caught as f64) > 0.5 * random_total as f64,
+            "random attacks should trip the residual test: {random_caught}/{random_total}"
+        );
+    }
+}

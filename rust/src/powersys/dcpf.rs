@@ -1,0 +1,324 @@
+//! DC power flow: susceptance matrix assembly + dense LU solver.
+//!
+//! Under the DC approximation branch flow is `f = (θ_from − θ_to)/x` and
+//! bus injections satisfy `P = B'·θ` with the slack angle fixed at 0.  The
+//! reduced B' (slack row/col removed) is SPD for a connected grid, so a
+//! plain partial-pivot LU is ample at 117×117.
+
+use crate::powersys::ieee118::{Grid, N_BUS, SLACK};
+
+/// Dense row-major matrix with an LU solver (no external BLAS offline).
+#[derive(Clone)]
+pub struct DMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub a: Vec<f64>,
+}
+
+impl DMat {
+    pub fn zeros(rows: usize, cols: usize) -> DMat {
+        DMat { rows, cols, a: vec![0.0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.a[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
+        &mut self.a[r * self.cols + c]
+    }
+
+    /// y = A·x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let row = &self.a[r * self.cols..(r + 1) * self.cols];
+            y[r] = row.iter().zip(x).map(|(a, b)| a * b).sum();
+        }
+        y
+    }
+
+    /// y = Aᵀ·x.
+    pub fn tmatvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            let row = &self.a[r * self.cols..(r + 1) * self.cols];
+            for (yc, &a) in y.iter_mut().zip(row) {
+                *yc += a * x[r];
+            }
+        }
+        y
+    }
+
+    /// C = AᵀA (normal-equation assembly for WLS).
+    pub fn gram(&self) -> DMat {
+        let n = self.cols;
+        let mut c = DMat::zeros(n, n);
+        for r in 0..self.rows {
+            let row = &self.a[r * self.cols..(r + 1) * self.cols];
+            for i in 0..n {
+                let ai = row[i];
+                if ai == 0.0 {
+                    continue;
+                }
+                let crow = &mut c.a[i * n..(i + 1) * n];
+                for (cv, &aj) in crow.iter_mut().zip(row) {
+                    *cv += ai * aj;
+                }
+            }
+        }
+        c
+    }
+}
+
+/// LU factorization with partial pivoting (in place).
+pub struct Lu {
+    lu: DMat,
+    piv: Vec<usize>,
+}
+
+impl Lu {
+    pub fn factor(mut m: DMat) -> Result<Lu, &'static str> {
+        assert_eq!(m.rows, m.cols);
+        let n = m.rows;
+        let mut piv: Vec<usize> = (0..n).collect();
+        for k in 0..n {
+            // pivot
+            let (mut pmax, mut prow) = (m.at(k, k).abs(), k);
+            for r in k + 1..n {
+                let v = m.at(r, k).abs();
+                if v > pmax {
+                    pmax = v;
+                    prow = r;
+                }
+            }
+            if pmax < 1e-12 {
+                return Err("singular matrix in LU");
+            }
+            if prow != k {
+                for c in 0..n {
+                    let t = m.at(k, c);
+                    *m.at_mut(k, c) = m.at(prow, c);
+                    *m.at_mut(prow, c) = t;
+                }
+                piv.swap(k, prow);
+            }
+            let inv = 1.0 / m.at(k, k);
+            for r in k + 1..n {
+                let f = m.at(r, k) * inv;
+                *m.at_mut(r, k) = f;
+                if f != 0.0 {
+                    for c in k + 1..n {
+                        *m.at_mut(r, c) -= f * m.at(k, c);
+                    }
+                }
+            }
+        }
+        Ok(Lu { lu: m, piv })
+    }
+
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows;
+        assert_eq!(b.len(), n);
+        // apply permutation
+        let mut y: Vec<f64> = self.piv.iter().map(|&p| b[p]).collect();
+        // forward substitution (unit lower)
+        for r in 1..n {
+            let mut s = y[r];
+            for c in 0..r {
+                s -= self.lu.at(r, c) * y[c];
+            }
+            y[r] = s;
+        }
+        // back substitution
+        for r in (0..n).rev() {
+            let mut s = y[r];
+            for c in r + 1..n {
+                s -= self.lu.at(r, c) * y[c];
+            }
+            y[r] = s / self.lu.at(r, r);
+        }
+        y
+    }
+}
+
+/// DC power-flow model for a grid: reduced susceptance matrix + factor.
+pub struct DcPowerFlow {
+    pub grid: Grid,
+    /// Reduced B' [n-1, n-1] (slack removed), prefactored.
+    lu: Lu,
+}
+
+impl DcPowerFlow {
+    pub fn new(grid: Grid) -> DcPowerFlow {
+        let n = N_BUS;
+        let mut b = DMat::zeros(n - 1, n - 1);
+        for br in &grid.branches {
+            let w = 1.0 / br.x;
+            let (f, t) = (br.from, br.to);
+            for &(i, j, s) in &[(f, f, w), (t, t, w), (f, t, -w), (t, f, -w)] {
+                if i == SLACK || j == SLACK {
+                    continue;
+                }
+                *b.at_mut(red(i), red(j)) += s;
+            }
+        }
+        let lu = Lu::factor(b).expect("connected grid ⇒ B' nonsingular");
+        DcPowerFlow { grid, lu }
+    }
+
+    /// Solve angles θ (full length, θ[slack]=0) from injections P.
+    pub fn solve_angles(&self, injections: &[f64]) -> Vec<f64> {
+        assert_eq!(injections.len(), N_BUS);
+        let reduced: Vec<f64> = (0..N_BUS)
+            .filter(|&i| i != SLACK)
+            .map(|i| injections[i])
+            .collect();
+        let th_red = self.lu.solve(&reduced);
+        let mut theta = vec![0.0; N_BUS];
+        for i in 0..N_BUS {
+            if i != SLACK {
+                theta[i] = th_red[red(i)];
+            }
+        }
+        theta
+    }
+
+    /// Branch flows from angles.
+    pub fn flows(&self, theta: &[f64]) -> Vec<f64> {
+        self.grid
+            .branches
+            .iter()
+            .map(|br| (theta[br.from] - theta[br.to]) / br.x)
+            .collect()
+    }
+
+    /// Bus injections implied by angles (B·θ over the full matrix).
+    pub fn injections(&self, theta: &[f64]) -> Vec<f64> {
+        let mut p = vec![0.0; N_BUS];
+        for br in &self.grid.branches {
+            let f = (theta[br.from] - theta[br.to]) / br.x;
+            p[br.from] += f;
+            p[br.to] -= f;
+        }
+        p
+    }
+
+    /// Measurement Jacobian H [n_meas, n-1] over reduced angles:
+    /// rows = branch flows then bus injections.
+    pub fn jacobian(&self) -> DMat {
+        let nb = self.grid.branches.len();
+        let mut h = DMat::zeros(nb + N_BUS, N_BUS - 1);
+        for (r, br) in self.grid.branches.iter().enumerate() {
+            let w = 1.0 / br.x;
+            if br.from != SLACK {
+                *h.at_mut(r, red(br.from)) += w;
+            }
+            if br.to != SLACK {
+                *h.at_mut(r, red(br.to)) -= w;
+            }
+        }
+        for br in self.grid.branches.iter() {
+            let w = 1.0 / br.x;
+            let row_from = nb + br.from;
+            let row_to = nb + br.to;
+            if br.from != SLACK {
+                *h.at_mut(row_from, red(br.from)) += w;
+                *h.at_mut(row_to, red(br.from)) -= w;
+            }
+            if br.to != SLACK {
+                *h.at_mut(row_from, red(br.to)) -= w;
+                *h.at_mut(row_to, red(br.to)) += w;
+            }
+        }
+        h
+    }
+}
+
+#[inline]
+fn red(bus: usize) -> usize {
+    // index into the reduced (slack-removed) vector
+    if bus > SLACK {
+        bus - 1
+    } else {
+        bus
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::powersys::ieee118::Grid;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn lu_solves_random_system() {
+        let mut rng = Rng::new(4);
+        let n = 20;
+        let mut m = DMat::zeros(n, n);
+        for r in 0..n {
+            for c in 0..n {
+                *m.at_mut(r, c) = rng.normal();
+            }
+            *m.at_mut(r, r) += 5.0; // diagonally dominant
+        }
+        let x: Vec<f64> = (0..n).map(|i| i as f64 * 0.3 - 2.0).collect();
+        let b = m.matvec(&x);
+        let lu = Lu::factor(m).unwrap();
+        let xhat = lu.solve(&b);
+        for (a, e) in xhat.iter().zip(&x) {
+            assert!((a - e).abs() < 1e-8, "{a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn power_flow_balances() {
+        let grid = Grid::ieee118(1);
+        let pf = DcPowerFlow::new(grid);
+        // balanced injections: generators cover total load
+        let mut inj: Vec<f64> = pf.grid.base_load.iter().map(|&l| -l).collect();
+        let total: f64 = pf.grid.base_load.iter().sum();
+        let per_gen = total / pf.grid.gen_buses.len() as f64;
+        for &g in &pf.grid.gen_buses.clone() {
+            inj[g] += per_gen;
+        }
+        let theta = pf.solve_angles(&inj);
+        let implied = pf.injections(&theta);
+        // implied injections must match everywhere except slack (absorbs
+        // imbalance; here balance is exact so slack matches too)
+        for i in 0..N_BUS {
+            assert!(
+                (implied[i] - inj[i]).abs() < 1e-6,
+                "bus {i}: {} vs {}",
+                implied[i],
+                inj[i]
+            );
+        }
+    }
+
+    #[test]
+    fn jacobian_linearizes_measurements() {
+        let grid = Grid::ieee118(2);
+        let pf = DcPowerFlow::new(grid);
+        let mut rng = Rng::new(9);
+        let theta_red: Vec<f64> = (0..N_BUS - 1).map(|_| rng.normal() * 0.1).collect();
+        let mut theta = vec![0.0; N_BUS];
+        for i in 1..N_BUS {
+            theta[i] = theta_red[i - 1];
+        }
+        let h = pf.jacobian();
+        let z = h.matvec(&theta_red);
+        let flows = pf.flows(&theta);
+        let inj = pf.injections(&theta);
+        for (i, f) in flows.iter().enumerate() {
+            assert!((z[i] - f).abs() < 1e-9);
+        }
+        for (i, p) in inj.iter().enumerate() {
+            assert!((z[pf.grid.branches.len() + i] - p).abs() < 1e-9);
+        }
+    }
+}

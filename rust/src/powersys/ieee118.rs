@@ -1,0 +1,155 @@
+//! IEEE-118-scale grid topology.
+//!
+//! Substitution note (DESIGN.md §4): the authoritative MATPOWER case file
+//! is not available offline, so we synthesize a 118-bus / 186-branch /
+//! 54-generator network with the same dimensions and a power-grid-like
+//! degree distribution (connected spanning tree + locality-biased chords).
+//! Everything downstream (DC power flow, WLS estimation, stealthy FDIA
+//! construction) depends only on these dimensions and on B-matrix
+//! structure, not on the exact IEEE parameter values.
+
+use crate::util::prng::Rng;
+
+pub const N_BUS: usize = 118;
+pub const N_BRANCH: usize = 186;
+pub const N_GEN: usize = 54;
+/// Slack/reference bus (angle fixed to 0).
+pub const SLACK: usize = 0;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Branch {
+    pub from: usize,
+    pub to: usize,
+    /// Series reactance (p.u.); DC susceptance is 1/x.
+    pub x: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Grid {
+    pub branches: Vec<Branch>,
+    /// Generator bus ids (first `N_GEN` by convention).
+    pub gen_buses: Vec<usize>,
+    /// Base-case load at each bus (p.u., positive = consumption).
+    pub base_load: Vec<f64>,
+}
+
+impl Grid {
+    /// Deterministic synthetic IEEE-118-scale grid.
+    pub fn ieee118(seed: u64) -> Grid {
+        let mut rng = Rng::new(seed ^ 0x118_118);
+        // Spanning tree with locality: bus i attaches to a nearby earlier
+        // bus — yields the chain-of-regions structure of real grids.
+        let mut branches = Vec::with_capacity(N_BRANCH);
+        let mut seen = std::collections::HashSet::new();
+        for i in 1..N_BUS {
+            let lo = i.saturating_sub(8);
+            let to = lo + rng.usize_below(i - lo);
+            branches.push(Branch { from: i, to, x: sample_x(&mut rng) });
+            seen.insert(key(i, to));
+        }
+        // Locality-biased chords up to N_BRANCH.
+        while branches.len() < N_BRANCH {
+            let a = rng.usize_below(N_BUS);
+            let span = 2 + rng.usize_below(20);
+            let b = (a + span) % N_BUS;
+            if a == b || seen.contains(&key(a, b)) {
+                continue;
+            }
+            seen.insert(key(a, b));
+            branches.push(Branch { from: a, to: b, x: sample_x(&mut rng) });
+        }
+        // Generators spread across the grid.
+        let gen_buses: Vec<usize> = (0..N_GEN).map(|g| (g * N_BUS) / N_GEN).collect();
+        // Base loads: every non-generator bus consumes; generators net-inject.
+        let mut base_load = vec![0.0; N_BUS];
+        for b in 0..N_BUS {
+            base_load[b] = 0.2 + 0.8 * rng.f64(); // p.u.
+        }
+        Grid { branches, gen_buses, base_load }
+    }
+
+    /// Bus degree (for feature synthesis + sanity checks).
+    pub fn degrees(&self) -> Vec<usize> {
+        let mut d = vec![0; N_BUS];
+        for br in &self.branches {
+            d[br.from] += 1;
+            d[br.to] += 1;
+        }
+        d
+    }
+
+    /// Total measurement count of the standard DC sensor suite:
+    /// one flow per branch + one injection per bus.
+    pub fn n_measurements(&self) -> usize {
+        self.branches.len() + N_BUS
+    }
+
+    /// Check the grid is a single connected component.
+    pub fn is_connected(&self) -> bool {
+        let mut adj = vec![Vec::new(); N_BUS];
+        for br in &self.branches {
+            adj[br.from].push(br.to);
+            adj[br.to].push(br.from);
+        }
+        let mut seen = vec![false; N_BUS];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = stack.pop() {
+            for &v in &adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    stack.push(v);
+                }
+            }
+        }
+        count == N_BUS
+    }
+}
+
+fn sample_x(rng: &mut Rng) -> f64 {
+    // log-uniform reactance in [0.02, 0.2] p.u.
+    0.02 * (10.0f64).powf(rng.f64())
+}
+
+fn key(a: usize, b: usize) -> (usize, usize) {
+    (a.min(b), a.max(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dimensions_match_ieee118() {
+        let g = Grid::ieee118(0);
+        assert_eq!(g.branches.len(), N_BRANCH);
+        assert_eq!(g.gen_buses.len(), N_GEN);
+        assert_eq!(g.base_load.len(), N_BUS);
+        assert_eq!(g.n_measurements(), N_BRANCH + N_BUS);
+    }
+
+    #[test]
+    fn connected_and_deterministic() {
+        let g1 = Grid::ieee118(7);
+        let g2 = Grid::ieee118(7);
+        assert!(g1.is_connected());
+        assert_eq!(g1.branches.len(), g2.branches.len());
+        for (a, b) in g1.branches.iter().zip(&g2.branches) {
+            assert_eq!((a.from, a.to), (b.from, b.to));
+            assert_eq!(a.x, b.x);
+        }
+    }
+
+    #[test]
+    fn no_self_loops_or_duplicates() {
+        let g = Grid::ieee118(3);
+        let mut seen = std::collections::HashSet::new();
+        for br in &g.branches {
+            assert_ne!(br.from, br.to);
+            assert!(seen.insert(key(br.from, br.to)), "dup branch");
+            assert!(br.x >= 0.02 && br.x <= 0.2 + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Power-system substrate: grid topology, DC power flow, WLS state
+//! estimation with residual BDD, FDIA attack construction, and the
+//! IEEE-118 detection dataset generator (paper §V-B).
+
+pub mod attack;
+pub mod dataset;
+pub mod dcpf;
+pub mod estimation;
+pub mod ieee118;
+
+pub use attack::{Attack, AttackGen, AttackKind};
+pub use dataset::{generate, DatasetCfg, Ieee118Dataset, Sample, SparseVocab};
+pub use dcpf::DcPowerFlow;
+pub use estimation::Estimator;
+pub use ieee118::Grid;

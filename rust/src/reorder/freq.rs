@@ -1,0 +1,119 @@
+//! Global-information pass: access-frequency ordering + hot-set selection
+//! (paper Algorithm 2, lines 1–4).
+//!
+//! Indices are ranked by access frequency over a sample of training
+//! batches; the top `hot_ratio` fraction are "hot embeddings" — they are
+//! pinned (exempt from community reordering) and are the FAE/cache
+//! residency candidates at the system level.
+
+use std::collections::HashMap;
+
+/// Frequency statistics over a stream of index batches.
+#[derive(Default)]
+pub struct FreqCounter {
+    counts: HashMap<u64, u64>,
+    total: u64,
+}
+
+impl FreqCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe(&mut self, indices: &[u64]) {
+        for &i in indices {
+            *self.counts.entry(i).or_insert(0) += 1;
+            self.total += 1;
+        }
+    }
+
+    pub fn distinct(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn count_of(&self, idx: u64) -> u64 {
+        self.counts.get(&idx).copied().unwrap_or(0)
+    }
+
+    /// Indices sorted by descending frequency (ties by index for
+    /// determinism) — Algorithm 2's `Freq_order`.
+    pub fn freq_order(&self) -> Vec<u64> {
+        let mut v: Vec<(u64, u64)> = self.counts.iter().map(|(&i, &c)| (i, c)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.into_iter().map(|(i, _)| i).collect()
+    }
+
+    /// The hot set: smallest prefix of `freq_order` covering `hot_ratio`
+    /// of all accesses (access-mass definition, robust to vocab size).
+    pub fn hot_set(&self, hot_ratio: f64) -> Vec<u64> {
+        let order = self.freq_order();
+        let target = (self.total as f64 * hot_ratio.clamp(0.0, 1.0)) as u64;
+        let mut acc = 0;
+        let mut out = Vec::new();
+        for i in order {
+            if acc >= target {
+                break;
+            }
+            acc += self.count_of(i);
+            out.push(i);
+        }
+        out
+    }
+
+    /// Fraction of total accesses covered by the `k` most frequent ids
+    /// (the power-law diagnostic the paper cites).
+    pub fn coverage_topk(&self, k: usize) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let order = self.freq_order();
+        let cov: u64 = order.iter().take(k).map(|&i| self.count_of(i)).sum();
+        cov as f64 / self.total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::zipf::Zipf;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn order_is_by_frequency() {
+        let mut f = FreqCounter::new();
+        f.observe(&[5, 5, 5, 2, 2, 9]);
+        assert_eq!(f.freq_order(), vec![5, 2, 9]);
+        assert_eq!(f.count_of(5), 3);
+        assert_eq!(f.distinct(), 3);
+    }
+
+    #[test]
+    fn hot_set_covers_mass() {
+        let mut f = FreqCounter::new();
+        // 10 accesses: id 1 has 6, id 2 has 3, id 3 has 1
+        f.observe(&[1, 1, 1, 1, 1, 1, 2, 2, 2, 3]);
+        let hot = f.hot_set(0.6);
+        assert_eq!(hot, vec![1]);
+        let hot = f.hot_set(0.9);
+        assert_eq!(hot, vec![1, 2]);
+    }
+
+    #[test]
+    fn zipf_stream_concentrates() {
+        let z = Zipf::new(100_000, 1.2);
+        let mut rng = Rng::new(1);
+        let mut f = FreqCounter::new();
+        let mut buf = vec![0u64; 512];
+        for _ in 0..40 {
+            z.sample_many(&mut rng, &mut buf);
+            f.observe(&buf);
+        }
+        // power law: tiny hot set covers most accesses
+        assert!(f.coverage_topk(100) > 0.5);
+        assert!(f.hot_set(0.75).len() < f.distinct() / 2);
+    }
+}

@@ -1,0 +1,155 @@
+//! Local-information pass: the batch co-occurrence index graph
+//! (paper Algorithm 2, Fig. 7 step 1).
+//!
+//! Nodes are (non-hot) embedding indices; an edge connects two indices
+//! each time they co-occur in the same mini-batch.  Edge weights feed the
+//! modularity clustering in `louvain.rs`.
+
+use std::collections::HashMap;
+
+/// Compressed index graph: adjacency with accumulated co-occurrence
+/// weights, nodes remapped to dense ids.
+pub struct IndexGraph {
+    /// dense node id -> original embedding index
+    pub nodes: Vec<u64>,
+    /// original embedding index -> dense node id
+    pub node_of: HashMap<u64, usize>,
+    /// adjacency: per node, (neighbor dense id, weight)
+    pub adj: Vec<HashMap<usize, f64>>,
+    pub total_weight: f64,
+}
+
+pub struct GraphBuilder {
+    hot: std::collections::HashSet<u64>,
+    /// Cap on pairs per batch — co-occurrence is quadratic in batch size,
+    /// so like Rabbit-Order-style preprocessing we subsample long batches.
+    max_pairs_per_batch: usize,
+    pairs: HashMap<(u64, u64), f64>,
+}
+
+impl GraphBuilder {
+    pub fn new(hot: &[u64]) -> GraphBuilder {
+        GraphBuilder {
+            hot: hot.iter().copied().collect(),
+            max_pairs_per_batch: 4096,
+            pairs: HashMap::new(),
+        }
+    }
+
+    /// Add one batch's indices (Algorithm 2 `self_combinations`): every
+    /// unordered pair of distinct, non-hot indices gains weight 1.
+    pub fn observe_batch(&mut self, batch: &[u64]) {
+        // dedup within batch first: co-occurrence is a set property
+        let mut uniq: Vec<u64> = batch
+            .iter()
+            .copied()
+            .filter(|i| !self.hot.contains(i))
+            .collect();
+        uniq.sort_unstable();
+        uniq.dedup();
+        let n = uniq.len();
+        if n < 2 {
+            return;
+        }
+        // bound quadratic blowup: stride over pairs if needed
+        let all_pairs = n * (n - 1) / 2;
+        let stride = (all_pairs / self.max_pairs_per_batch).max(1);
+        let mut c = 0usize;
+        for a in 0..n {
+            for b in a + 1..n {
+                if c % stride == 0 {
+                    let key = (uniq[a], uniq[b]);
+                    *self.pairs.entry(key).or_insert(0.0) += stride as f64;
+                }
+                c += 1;
+            }
+        }
+    }
+
+    pub fn build(self) -> IndexGraph {
+        let mut node_of: HashMap<u64, usize> = HashMap::new();
+        let mut nodes = Vec::new();
+        let intern = |i: u64, nodes: &mut Vec<u64>, node_of: &mut HashMap<u64, usize>| {
+            *node_of.entry(i).or_insert_with(|| {
+                nodes.push(i);
+                nodes.len() - 1
+            })
+        };
+        let mut edges: Vec<(usize, usize, f64)> = Vec::with_capacity(self.pairs.len());
+        for (&(a, b), &w) in &self.pairs {
+            let ia = intern(a, &mut nodes, &mut node_of);
+            let ib = intern(b, &mut nodes, &mut node_of);
+            edges.push((ia, ib, w));
+        }
+        let mut adj = vec![HashMap::new(); nodes.len()];
+        let mut total = 0.0;
+        for (a, b, w) in edges {
+            *adj[a].entry(b).or_insert(0.0) += w;
+            *adj[b].entry(a).or_insert(0.0) += w;
+            total += w;
+        }
+        IndexGraph { nodes, node_of, adj, total_weight: total }
+    }
+}
+
+impl IndexGraph {
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Weighted degree of a node.
+    pub fn degree(&self, v: usize) -> f64 {
+        self.adj[v].values().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cooccurrence_weights() {
+        let mut gb = GraphBuilder::new(&[]);
+        gb.observe_batch(&[1, 2, 3]);
+        gb.observe_batch(&[1, 2]);
+        let g = gb.build();
+        assert_eq!(g.num_nodes(), 3);
+        let a = g.node_of[&1];
+        let b = g.node_of[&2];
+        let c = g.node_of[&3];
+        assert_eq!(g.adj[a][&b], 2.0); // co-occurred twice
+        assert_eq!(g.adj[a][&c], 1.0);
+        assert_eq!(g.total_weight, 4.0); // edges (1,2)x2 (1,3) (2,3)
+    }
+
+    #[test]
+    fn hot_indices_excluded() {
+        let mut gb = GraphBuilder::new(&[7]);
+        gb.observe_batch(&[7, 1, 2]);
+        let g = gb.build();
+        assert!(!g.node_of.contains_key(&7));
+        assert_eq!(g.num_nodes(), 2);
+    }
+
+    #[test]
+    fn duplicate_in_batch_counts_once() {
+        let mut gb = GraphBuilder::new(&[]);
+        gb.observe_batch(&[4, 4, 9]);
+        let g = gb.build();
+        let a = g.node_of[&4];
+        let b = g.node_of[&9];
+        assert_eq!(g.adj[a][&b], 1.0);
+    }
+
+    #[test]
+    fn large_batch_subsampled_but_connected() {
+        let mut gb = GraphBuilder::new(&[]);
+        let batch: Vec<u64> = (0..500).collect();
+        gb.observe_batch(&batch);
+        let g = gb.build();
+        assert!(g.num_nodes() > 0);
+        // subsampling keeps total weight ≈ all pairs
+        let expect = 500.0 * 499.0 / 2.0;
+        assert!((g.total_weight - expect).abs() / expect < 0.1);
+    }
+}

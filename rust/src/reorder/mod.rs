@@ -1,0 +1,12 @@
+//! Input-level optimization (paper §III-G/H): the dual-projection index
+//! bijection built from global frequency + local co-occurrence structure.
+
+pub mod bijection;
+pub mod freq;
+pub mod graph;
+pub mod louvain;
+
+pub use bijection::IndexBijection;
+pub use freq::FreqCounter;
+pub use graph::{GraphBuilder, IndexGraph};
+pub use louvain::{louvain, modularity, Communities};

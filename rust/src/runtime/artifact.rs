@@ -1,0 +1,202 @@
+//! Artifact registry: discovers `artifacts/`, parses `meta.json`, compiles
+//! HLO text modules on the PJRT client, and loads the initial parameter
+//! blob exported by `python/compile/aot.py`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::client;
+use crate::util::json::Json;
+
+/// One flat parameter leaf of the L2 model (order matters: it is the
+/// positional argument order of every artifact).
+#[derive(Clone, Debug)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ParamMeta {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Parsed `meta.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub dense_dim: usize,
+    pub emb_dim: usize,
+    pub num_tables: usize,
+    pub table_rows: Vec<u64>,
+    pub table_compressed: Vec<bool>,
+    pub lr: f64,
+    pub fwd_batch: usize,
+    pub train_batch: usize,
+    pub lookup_batch: usize,
+    pub lookup_bag: usize,
+    pub lookup_rows: u64,
+    pub lookup_m: [u64; 3],
+    pub lookup_rank: usize,
+    pub params: Vec<ParamMeta>,
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> Result<ArtifactMeta> {
+        let j = Json::parse(text).context("meta.json parse")?;
+        let model = j.get("model").context("missing model")?;
+        let batches = j.get("batches").context("missing batches")?;
+        let spec = j.get("tt_lookup_spec").context("missing tt_lookup_spec")?;
+        let need_u = |v: &Json, k: &str| -> Result<usize> {
+            v.get(k).and_then(Json::as_usize).with_context(|| format!("missing {k}"))
+        };
+        let tables = model.get("tables").and_then(Json::as_arr).context("tables")?;
+        let params = j
+            .get("params")
+            .and_then(Json::as_arr)
+            .context("params")?
+            .iter()
+            .map(|p| -> Result<ParamMeta> {
+                Ok(ParamMeta {
+                    name: p.get("name").and_then(Json::as_str).context("name")?.to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .context("shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("dim"))
+                        .collect::<Result<_>>()?,
+                    dtype: p.get("dtype").and_then(Json::as_str).context("dtype")?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let lookup = batches.get("lookup").and_then(Json::as_arr).context("lookup")?;
+        let m = spec.get("m").and_then(Json::as_arr).context("m")?;
+        Ok(ArtifactMeta {
+            dense_dim: need_u(model, "dense_dim")?,
+            emb_dim: need_u(model, "emb_dim")?,
+            num_tables: need_u(model, "num_tables")?,
+            table_rows: tables
+                .iter()
+                .map(|t| t.get("rows").and_then(Json::as_u64).context("rows"))
+                .collect::<Result<_>>()?,
+            table_compressed: tables
+                .iter()
+                .map(|t| t.get("compressed").and_then(Json::as_bool).context("compressed"))
+                .collect::<Result<_>>()?,
+            lr: model.get("lr").and_then(Json::as_f64).context("lr")?,
+            fwd_batch: need_u(batches, "fwd")?,
+            train_batch: need_u(batches, "train")?,
+            lookup_batch: lookup[0].as_usize().context("lookup[0]")?,
+            lookup_bag: lookup[1].as_usize().context("lookup[1]")?,
+            lookup_rows: spec.get("rows").and_then(Json::as_u64).context("rows")?,
+            lookup_m: [
+                m[0].as_u64().context("m0")?,
+                m[1].as_u64().context("m1")?,
+                m[2].as_u64().context("m2")?,
+            ],
+            lookup_rank: need_u(spec, "rank")?,
+            params,
+        })
+    }
+
+    /// Total f32 element count across all parameter leaves.
+    pub fn total_param_elems(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+}
+
+/// Compiled artifact registry.
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub meta: ArtifactMeta,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Initial parameter leaves (f32, little-endian blob from aot.py).
+    pub init_params: Vec<Vec<f32>>,
+}
+
+impl Artifacts {
+    /// Load + compile everything under `dir`.  Compilation happens once;
+    /// executables are reused across the training/serving run.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Artifacts> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("reading {}/meta.json (run `make artifacts`)", dir.display()))?;
+        let meta = ArtifactMeta::parse(&meta_text)?;
+
+        let mut executables = HashMap::new();
+        for name in ["tt_lookup", "dlrm_fwd", "dlrm_train_step"] {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client()
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+            executables.insert(name.to_string(), exe);
+        }
+
+        let blob = std::fs::read(dir.join("init_params.bin")).context("init_params.bin")?;
+        let expect = meta.total_param_elems() * 4;
+        if blob.len() != expect {
+            bail!("init_params.bin is {} bytes, expected {expect}", blob.len());
+        }
+        let mut init_params = Vec::with_capacity(meta.params.len());
+        let mut off = 0usize;
+        for p in &meta.params {
+            let n = p.len();
+            let mut v = vec![0f32; n];
+            for (i, x) in v.iter_mut().enumerate() {
+                let b = &blob[off + i * 4..off + i * 4 + 4];
+                *x = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            }
+            off += n * 4;
+            init_params.push(v);
+        }
+
+        Ok(Artifacts { dir, meta, executables, init_params })
+    }
+
+    pub fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.executables
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_meta_fixture() {
+        let doc = r#"{
+          "model": {"dense_dim": 6, "emb_dim": 16, "num_tables": 2,
+                    "tables": [{"rows": 100, "compressed": true, "rank": 8},
+                               {"rows": 50, "compressed": false, "rank": 8}],
+                    "lr": 0.05},
+          "batches": {"fwd": 128, "train": 64, "lookup": [256, 4]},
+          "tt_lookup_spec": {"rows": 6000, "dim": 16, "m": [18, 18, 19],
+                             "n": [2, 2, 4], "rank": 8},
+          "params": [{"name": "bot/0/0", "shape": [6, 64], "dtype": "float32"},
+                     {"name": "bot/0/1", "shape": [64], "dtype": "float32"}]
+        }"#;
+        let m = ArtifactMeta::parse(doc).unwrap();
+        assert_eq!(m.dense_dim, 6);
+        assert_eq!(m.num_tables, 2);
+        assert_eq!(m.table_rows, vec![100, 50]);
+        assert_eq!(m.table_compressed, vec![true, false]);
+        assert_eq!(m.fwd_batch, 128);
+        assert_eq!(m.lookup_bag, 4);
+        assert_eq!(m.lookup_m, [18, 18, 19]);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.total_param_elems(), 6 * 64 + 64);
+    }
+}

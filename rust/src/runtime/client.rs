@@ -1,0 +1,51 @@
+//! Per-thread PJRT CPU client.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`/`Sync`), so
+//! the client — and everything compiled on it — is confined to the thread
+//! that created it.  We expose a thread-local singleton: each coordinator
+//! thread that touches PJRT lazily builds its own client, which also maps
+//! naturally onto the simulated-device model (one client per worker
+//! thread ≙ one device context per GPU).  Artifacts/executables must be
+//! loaded on the thread that executes them.
+
+use std::cell::OnceCell;
+
+thread_local! {
+    static CLIENT: OnceCell<xla::PjRtClient> = const { OnceCell::new() };
+}
+
+/// This thread's PJRT CPU client (lazily initialized).
+///
+/// # Panics
+/// Panics if PJRT initialization fails — there is no degraded mode.
+pub fn client() -> xla::PjRtClient {
+    CLIENT.with(|c| {
+        c.get_or_init(|| {
+            xla::PjRtClient::cpu().expect("PJRT CPU client initialization failed")
+        })
+        .clone()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_initializes_and_is_cpu() {
+        let c = client();
+        assert!(c.device_count() >= 1);
+        let name = c.platform_name().to_lowercase();
+        assert!(name.contains("cpu") || name.contains("host"), "{name}");
+    }
+
+    #[test]
+    fn separate_threads_get_separate_clients() {
+        let _a = client();
+        std::thread::spawn(|| {
+            let _b = client(); // must not panic or deadlock
+        })
+        .join()
+        .unwrap();
+    }
+}

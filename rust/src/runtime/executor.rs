@@ -1,0 +1,221 @@
+//! Typed executors over the compiled artifacts.
+//!
+//! Parameters live as PJRT device buffers between steps (`execute_b`), so
+//! a training step costs: upload batch (3 small buffers) → execute →
+//! download loss + refresh param buffers from the returned tuple.  All
+//! artifacts were lowered with `return_tuple=True`, so outputs arrive as a
+//! single tuple literal that we decompose.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::artifact::Artifacts;
+use crate::runtime::client;
+
+/// Upload a host f32 slice as a device buffer.
+fn upload_f32(data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+    client()
+        .buffer_from_host_buffer(data, dims, None)
+        .map_err(|e| anyhow::anyhow!("upload f32: {e}"))
+}
+
+/// Upload a host i32 slice.
+fn upload_i32(data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+    client()
+        .buffer_from_host_buffer(data, dims, None)
+        .map_err(|e| anyhow::anyhow!("upload i32: {e}"))
+}
+
+/// Fused train-step executor: `(params…, dense, idx, labels) → (loss,
+/// params…)`.  Owns the resident parameter buffers.
+pub struct DlrmTrainStep<'a> {
+    arts: &'a Artifacts,
+    params: Vec<xla::PjRtBuffer>,
+    pub steps: u64,
+}
+
+impl<'a> DlrmTrainStep<'a> {
+    pub fn new(arts: &'a Artifacts) -> Result<Self> {
+        let params = arts
+            .meta
+            .params
+            .iter()
+            .zip(&arts.init_params)
+            .map(|(m, v)| upload_f32(v, &m.shape))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(DlrmTrainStep { arts, params, steps: 0 })
+    }
+
+    /// Run one SGD step; returns the batch loss.
+    ///
+    /// `dense` is [train_batch × dense_dim] f32 row-major, `idx` is
+    /// [train_batch × num_tables] i32, `labels` is [train_batch].
+    pub fn step(&mut self, dense: &[f32], idx: &[i32], labels: &[f32]) -> Result<f32> {
+        let m = &self.arts.meta;
+        let b = m.train_batch;
+        if dense.len() != b * m.dense_dim || idx.len() != b * m.num_tables || labels.len() != b {
+            bail!(
+                "batch shape mismatch: dense {} idx {} labels {} (want b={b})",
+                dense.len(),
+                idx.len(),
+                labels.len()
+            );
+        }
+        let exe = self.arts.exe("dlrm_train_step")?;
+        let d = upload_f32(dense, &[b, m.dense_dim])?;
+        let i = upload_i32(idx, &[b, m.num_tables])?;
+        let l = upload_f32(labels, &[b])?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        args.push(&d);
+        args.push(&i);
+        args.push(&l);
+        let out = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("train_step execute: {e}"))?;
+        let tuple = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download: {e}"))?;
+        let mut parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("tuple decompose: {e}"))?;
+        if parts.len() != 1 + self.params.len() {
+            bail!("train_step returned {} outputs, want {}", parts.len(), 1 + self.params.len());
+        }
+        let loss: f32 = parts[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss literal: {e}"))?[0];
+        // refresh resident params from the returned leaves
+        for (k, lit) in parts.drain(..).skip(1).enumerate() {
+            let v = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("param {k} download: {e}"))?;
+            self.params[k] = upload_f32(&v, &m.params[k].shape)?;
+        }
+        self.steps += 1;
+        Ok(loss)
+    }
+
+    /// Download the current parameter leaves.
+    pub fn params_host(&self) -> Result<Vec<Vec<f32>>> {
+        self.params
+            .iter()
+            .map(|b| {
+                b.to_literal_sync()
+                    .map_err(|e| anyhow::anyhow!("param download: {e}"))?
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("param to_vec: {e}"))
+            })
+            .collect()
+    }
+}
+
+/// Serving-path forward executor: `(params…, dense, idx) → probs`.
+pub struct DlrmFwd<'a> {
+    arts: &'a Artifacts,
+    params: Vec<xla::PjRtBuffer>,
+}
+
+impl<'a> DlrmFwd<'a> {
+    /// Build with specific parameter leaves (e.g. the output of training).
+    pub fn with_params(arts: &'a Artifacts, leaves: &[Vec<f32>]) -> Result<Self> {
+        if leaves.len() != arts.meta.params.len() {
+            bail!("expected {} leaves, got {}", arts.meta.params.len(), leaves.len());
+        }
+        let params = arts
+            .meta
+            .params
+            .iter()
+            .zip(leaves)
+            .map(|(m, v)| upload_f32(v, &m.shape))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(DlrmFwd { arts, params })
+    }
+
+    pub fn new(arts: &'a Artifacts) -> Result<Self> {
+        let leaves = arts.init_params.clone();
+        Self::with_params(arts, &leaves)
+    }
+
+    /// Predict attack probabilities for a full `fwd_batch`-sized batch.
+    pub fn predict(&self, dense: &[f32], idx: &[i32]) -> Result<Vec<f32>> {
+        let m = &self.arts.meta;
+        let b = m.fwd_batch;
+        if dense.len() != b * m.dense_dim || idx.len() != b * m.num_tables {
+            bail!("fwd batch shape mismatch");
+        }
+        let exe = self.arts.exe("dlrm_fwd")?;
+        let d = upload_f32(dense, &[b, m.dense_dim])?;
+        let i = upload_i32(idx, &[b, m.num_tables])?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        args.push(&d);
+        args.push(&i);
+        let out = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("fwd execute: {e}"))?;
+        let tuple = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download: {e}"))?;
+        let probs = tuple
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("tuple: {e}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+        Ok(probs)
+    }
+
+    /// Predict for fewer than `fwd_batch` samples by padding (serving
+    /// router path; Table VI uses batch 1).
+    pub fn predict_padded(&self, dense: &[f32], idx: &[i32], n: usize) -> Result<Vec<f32>> {
+        let m = &self.arts.meta;
+        let b = m.fwd_batch;
+        if n == 0 || n > b {
+            bail!("predict_padded: n={n} out of range 1..={b}");
+        }
+        let mut dfull = vec![0f32; b * m.dense_dim];
+        let mut ifull = vec![0i32; b * m.num_tables];
+        dfull[..n * m.dense_dim].copy_from_slice(dense);
+        ifull[..n * m.num_tables].copy_from_slice(idx);
+        let mut probs = self.predict(&dfull, &ifull)?;
+        probs.truncate(n);
+        Ok(probs)
+    }
+}
+
+/// Standalone Eff-TT pooled-lookup executor (runtime validation +
+/// microbench): `(d1, d2, d3, idx) → pooled [lookup_batch, emb_dim]`.
+pub struct TtLookupExe<'a> {
+    arts: &'a Artifacts,
+}
+
+impl<'a> TtLookupExe<'a> {
+    pub fn new(arts: &'a Artifacts) -> Self {
+        TtLookupExe { arts }
+    }
+
+    pub fn run(
+        &self,
+        d1: (&[f32], &[usize]),
+        d2: (&[f32], &[usize]),
+        d3: (&[f32], &[usize]),
+        idx: &[i32],
+    ) -> Result<Vec<f32>> {
+        let m = &self.arts.meta;
+        if idx.len() != m.lookup_batch * m.lookup_bag {
+            bail!("lookup idx len {} != {}", idx.len(), m.lookup_batch * m.lookup_bag);
+        }
+        let exe = self.arts.exe("tt_lookup")?;
+        let b1 = upload_f32(d1.0, d1.1)?;
+        let b2 = upload_f32(d2.0, d2.1)?;
+        let b3 = upload_f32(d3.0, d3.1)?;
+        let bi = upload_i32(idx, &[m.lookup_batch, m.lookup_bag])?;
+        let out = exe
+            .execute_b(&[&b1, &b2, &b3, &bi])
+            .map_err(|e| anyhow::anyhow!("tt_lookup execute: {e}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download: {e}"))?
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("tuple: {e}"))?;
+        lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: load the L2-lowered HLO text artifacts and execute them
+//! from the coordinator's hot path.  Python never runs here — the rust
+//! binary is self-contained once `make artifacts` has produced
+//! `artifacts/{*.hlo.txt, meta.json, init_params.bin}`.
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+
+pub use artifact::{ArtifactMeta, Artifacts, ParamMeta};
+pub use client::client;
+pub use executor::{DlrmFwd, DlrmTrainStep, TtLookupExe};

@@ -1,0 +1,9 @@
+//! Streaming FDIA detection service (paper §V-M, Table VI): batch-1
+//! real-time inference with latency/TPS accounting, plus an optional
+//! micro-batching router.
+
+pub mod detector;
+pub mod server;
+
+pub use detector::{Detector, Verdict};
+pub use server::{ServeReport, StreamingServer};

@@ -1,0 +1,162 @@
+//! Streaming inference server: a worker thread consumes a request channel
+//! and answers with verdicts; the driver measures per-request latency and
+//! sustained TPS (Table VI's configuration: batch size 1, industrial
+//! streaming).  A micro-batching mode (`max_batch > 1`) drains whatever is
+//! queued up to the cap — the standard serving-router trade-off.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::platform::SimPlatform;
+use crate::powersys::dataset::Sample;
+use crate::serve::detector::Detector;
+use crate::util::stats::LatencyHist;
+
+/// One in-flight request.
+struct Request {
+    sample: Sample,
+    enqueued: Instant,
+    reply: mpsc::Sender<(f32, Duration)>,
+}
+
+pub struct StreamingServer {
+    tx: mpsc::Sender<Request>,
+    handle: Option<thread::JoinHandle<ServerStats>>,
+}
+
+struct ServerStats {
+    served: u64,
+    hist: LatencyHist,
+}
+
+#[derive(Debug)]
+pub struct ServeReport {
+    pub served: u64,
+    pub wall: Duration,
+    pub tps: f64,
+    pub mean_latency: Duration,
+    pub p99_latency: Duration,
+    /// Peak device memory ≈ model bytes + activation slack.
+    pub model_bytes: u64,
+}
+
+impl StreamingServer {
+    /// Spawn the serving thread around a trained detector.  `dispatch`
+    /// is charged per inference call (the platform's launch overhead).
+    pub fn start(mut detector: Detector, max_batch: usize, dispatch: Duration) -> StreamingServer {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let handle = thread::spawn(move || {
+            let mut stats = ServerStats { served: 0, hist: LatencyHist::new() };
+            let mut pending: Vec<Request> = Vec::new();
+            loop {
+                // blocking receive for the first request
+                let first = match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => break,
+                };
+                pending.push(first);
+                // micro-batch: drain whatever is already queued
+                while pending.len() < max_batch {
+                    match rx.try_recv() {
+                        Ok(r) => pending.push(r),
+                        Err(_) => break,
+                    }
+                }
+                SimPlatform::charge(dispatch);
+                let samples: Vec<&Sample> = pending.iter().map(|r| &r.sample).collect();
+                let probs = detector.score_batch(&samples);
+                let now = Instant::now();
+                for (req, p) in pending.drain(..).zip(probs) {
+                    let lat = now.duration_since(req.enqueued);
+                    stats.hist.record(lat);
+                    stats.served += 1;
+                    let _ = req.reply.send((p, lat));
+                }
+            }
+            stats
+        });
+        StreamingServer { tx, handle: Some(handle) }
+    }
+
+    /// Submit one sample and wait for the verdict (closed-loop client).
+    pub fn infer(&self, sample: &Sample) -> (f32, Duration) {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Request { sample: sample.clone(), enqueued: Instant::now(), reply: rtx })
+            .expect("server alive");
+        rrx.recv().expect("server replies")
+    }
+
+    /// Drive a closed-loop stream of samples; returns the Table VI row.
+    pub fn run_stream(self, samples: &[Sample], model_bytes: u64) -> ServeReport {
+        let t0 = Instant::now();
+        for s in samples {
+            let _ = self.infer(s);
+        }
+        let wall = t0.elapsed();
+        let stats = self.finish();
+        ServeReport {
+            served: stats.served,
+            wall,
+            tps: stats.served as f64 / wall.as_secs_f64(),
+            mean_latency: Duration::from_nanos(stats.hist.mean_ns() as u64),
+            p99_latency: Duration::from_nanos(stats.hist.quantile_ns(0.99) as u64),
+            model_bytes,
+        }
+    }
+
+    fn finish(mut self) -> ServerStats {
+        drop(self.tx);
+        self.handle.take().unwrap().join().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{EngineCfg, NativeDlrm};
+    use crate::powersys::dataset::{generate, DatasetCfg, SparseVocab};
+    use crate::util::prng::Rng;
+
+    fn samples(n: usize) -> Vec<Sample> {
+        generate(&DatasetCfg {
+            n_normal: n,
+            n_attack: n / 4,
+            vocab: SparseVocab::ieee118(1.0 / 2000.0),
+            n_profiles: 10,
+            noise_std: 0.005,
+            seed: 2,
+        })
+        .samples
+    }
+
+    fn detector() -> Detector {
+        let cfg = EngineCfg::ieee118(1.0 / 2000.0);
+        Detector::new(NativeDlrm::new(cfg, &mut Rng::new(1)), 0.5)
+    }
+
+    #[test]
+    fn serves_all_requests_with_latency() {
+        let ss = samples(20);
+        let server = StreamingServer::start(detector(), 1, Duration::ZERO);
+        let report = server.run_stream(&ss[..25], 1000);
+        assert_eq!(report.served, 25);
+        assert!(report.tps > 0.0);
+        assert!(report.mean_latency > Duration::ZERO);
+        assert!(report.p99_latency >= report.mean_latency / 2);
+    }
+
+    #[test]
+    fn verdict_probabilities_sane() {
+        let ss = samples(8);
+        let server = StreamingServer::start(detector(), 1, Duration::ZERO);
+        for s in &ss[..5] {
+            let (p, lat) = server.infer(s);
+            assert!((0.0..=1.0).contains(&p));
+            assert!(lat > Duration::ZERO);
+        }
+        let report = server.run_stream(&ss[5..8], 0);
+        assert_eq!(report.served, 8); // 5 singles + 3 streamed
+    }
+}

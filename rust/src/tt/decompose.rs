@@ -1,0 +1,296 @@
+//! TT-SVD: decompose an EXISTING embedding table into TT cores
+//! (Oseledets 2011, the algorithm TT-Rec uses to initialize from
+//! pretrained weights — §II-B "trainable TT embedding table").
+//!
+//! The paper trains cores from random init, but production migration
+//! (the nn.EmbeddingBag drop-in story) needs to import pretrained
+//! tables: W [M×N] is reshaped to the (m1·n1)×(m2·n2)×(m3·n3) tensor of
+//! Eq. 2 and factored by two successive truncated SVDs.  Jacobi one-sided
+//! SVD keeps us dependency-free; tables are decomposed in f64 for
+//! stability and stored back as f32 cores.
+
+use crate::tt::shapes::TtShapes;
+use crate::tt::table::{EffTtOptions, EffTtTable};
+
+/// Dense column-major-free matrix helper for the decomposition path.
+struct Mat {
+    r: usize,
+    c: usize,
+    a: Vec<f64>,
+}
+
+impl Mat {
+    fn zeros(r: usize, c: usize) -> Mat {
+        Mat { r, c, a: vec![0.0; r * c] }
+    }
+
+    #[inline]
+    fn at(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.c + j]
+    }
+
+    #[inline]
+    fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.a[i * self.c + j] = v;
+    }
+}
+
+/// One-sided Jacobi SVD: A [r×c] = U Σ Vᵀ with r ≥ 1, returns
+/// (U [r×k], σ [k], V [c×k]) for k = min(r, c), singular values
+/// descending.  O(r·c²·sweeps) — fine for the slim matrices TT-SVD
+/// produces (c ≤ m·n ≤ a few hundred at embedding shapes).
+fn jacobi_svd(a: &Mat) -> (Mat, Vec<f64>, Mat) {
+    let (r, c) = (a.r, a.c);
+    // work on columns of A; accumulate V as rotations applied to identity
+    let mut u = Mat { r, c, a: a.a.clone() };
+    let mut v = Mat::zeros(c, c);
+    for i in 0..c {
+        v.set(i, i, 1.0);
+    }
+    let col_dot = |m: &Mat, i: usize, j: usize| -> f64 {
+        (0..m.r).map(|t| m.at(t, i) * m.at(t, j)).sum()
+    };
+    for _sweep in 0..30 {
+        let mut off = 0.0f64;
+        for i in 0..c {
+            for j in i + 1..c {
+                let aii = col_dot(&u, i, i);
+                let ajj = col_dot(&u, j, j);
+                let aij = col_dot(&u, i, j);
+                off += aij * aij;
+                if aij.abs() < 1e-14 * (aii * ajj).sqrt().max(1e-300) {
+                    continue;
+                }
+                // Jacobi rotation zeroing the (i,j) gram entry
+                let tau = (ajj - aii) / (2.0 * aij);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let cs = 1.0 / (1.0 + t * t).sqrt();
+                let sn = cs * t;
+                for m in [&mut u, &mut v] {
+                    for row in 0..m.r {
+                        let (xi, xj) = (m.at(row, i), m.at(row, j));
+                        m.set(row, i, cs * xi - sn * xj);
+                        m.set(row, j, sn * xi + cs * xj);
+                    }
+                }
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+    }
+    // singular values = column norms; normalize U's columns
+    let mut order: Vec<usize> = (0..c).collect();
+    let mut sig: Vec<f64> = (0..c).map(|i| col_dot(&u, i, i).sqrt()).collect();
+    order.sort_by(|&x, &y| sig[y].partial_cmp(&sig[x]).unwrap());
+    let k = r.min(c);
+    let mut uu = Mat::zeros(r, k);
+    let mut vv = Mat::zeros(c, k);
+    let mut s = vec![0.0; k];
+    for (slot, &i) in order.iter().take(k).enumerate() {
+        s[slot] = sig[i];
+        let inv = if sig[i] > 1e-300 { 1.0 / sig[i] } else { 0.0 };
+        for t in 0..r {
+            uu.set(t, slot, u.at(t, i) * inv);
+        }
+        for t in 0..c {
+            vv.set(t, slot, v.at(t, i));
+        }
+    }
+    sig = s;
+    (uu, sig, vv)
+}
+
+/// Result of a TT-SVD decomposition.
+pub struct TtSvd {
+    pub table: EffTtTable,
+    /// Relative Frobenius reconstruction error ‖W − Ŵ‖/‖W‖.
+    pub rel_error: f64,
+}
+
+/// Decompose `weights` [rows × dim] into an `EffTtTable` at `shapes`
+/// (rank-truncated; padding rows are treated as zero).
+pub fn tt_svd(weights: &[f32], shapes: TtShapes, opts: EffTtOptions) -> TtSvd {
+    let rows = shapes.rows as usize;
+    let dim = shapes.dim;
+    assert_eq!(weights.len(), rows * dim);
+    let (m1, m2, m3) = (shapes.m[0] as usize, shapes.m[1] as usize, shapes.m[2] as usize);
+    let (n1, n2, n3) = (shapes.n[0], shapes.n[1], shapes.n[2]);
+    let r = shapes.rank;
+
+    // Eq. 2 tensorization: entry ((i1 j1),(i2 j2),(i3 j3));
+    // unfold as A1 [(m1 n1) × (m2 n2 m3 n3)]
+    let c1 = m2 * n2 * m3 * n3;
+    let mut a1 = Mat::zeros(m1 * n1, c1);
+    for i in 0..rows {
+        let (i1, i2, i3) = {
+            let i = i as u64;
+            let t = shapes.tt_indices(i);
+            (t.0 as usize, t.1 as usize, t.2 as usize)
+        };
+        for j in 0..dim {
+            let (j1, rem) = (j / (n2 * n3), j % (n2 * n3));
+            let (j2, j3) = (rem / n3, rem % n3);
+            let row = i1 * n1 + j1;
+            let col = ((i2 * n2 + j2) * m3 + i3) * n3 + j3;
+            a1.set(row, col, weights[i * dim + j] as f64);
+        }
+    }
+
+    // SVD 1: A1 = U1 Σ1 V1ᵀ, truncate to rank r  →  D1 = U1 [m1 n1 × r]
+    let (u1, s1, v1) = jacobi_svd(&a1);
+    let r1 = r.min(s1.len());
+    // carry Σ into the remainder: B = Σ1 V1ᵀ  [r1 × c1]
+    let mut b = Mat::zeros(r1, c1);
+    for k in 0..r1 {
+        for col in 0..c1 {
+            b.set(k, col, s1[k] * v1.at(col, k));
+        }
+    }
+    // reshape B to A2 [(r1 m2 n2) × (m3 n3)]
+    let c2 = m3 * n3;
+    let mut a2 = Mat::zeros(r1 * m2 * n2, c2);
+    for k in 0..r1 {
+        for i2 in 0..m2 {
+            for j2 in 0..n2 {
+                for i3 in 0..m3 {
+                    for j3 in 0..n3 {
+                        let col1 = ((i2 * n2 + j2) * m3 + i3) * n3 + j3;
+                        a2.set((k * m2 + i2) * n2 + j2, i3 * n3 + j3, b.at(k, col1));
+                    }
+                }
+            }
+        }
+    }
+    // SVD 2: A2 = U2 Σ2 V2ᵀ truncate to r  →  D2 = U2, D3 = Σ2 V2ᵀ
+    let (u2, s2, v2) = jacobi_svd(&a2);
+    let r2 = r.min(s2.len());
+
+    // Pack cores in the jax layout then convert (reusing the tested path)
+    // D1 [m1, n1, r]: U1 columns (zero-pad if r1 < r)
+    let mut d1 = vec![0.0f32; m1 * n1 * r];
+    for row in 0..m1 * n1 {
+        for k in 0..r1 {
+            d1[row * r + k] = u1.at(row, k) as f32;
+        }
+    }
+    // D2 [r, m2, n2, r]: U2[(k1 m2 n2), k2]
+    let mut d2 = vec![0.0f32; r * m2 * n2 * r];
+    for k1 in 0..r1 {
+        for i2 in 0..m2 {
+            for j2 in 0..n2 {
+                for k2 in 0..r2 {
+                    d2[((k1 * m2 + i2) * n2 + j2) * r + k2] =
+                        u2.at((k1 * m2 + i2) * n2 + j2, k2) as f32;
+                }
+            }
+        }
+    }
+    // D3 [r, m3, n3]: Σ2 V2ᵀ
+    let mut d3 = vec![0.0f32; r * m3 * n3];
+    for k2 in 0..r2 {
+        for col in 0..c2 {
+            d3[k2 * c2 + col] = (s2[k2] * v2.at(col, k2)) as f32;
+        }
+    }
+
+    let table = EffTtTable::from_jax_cores(shapes, opts, &d1, &d2, &d3);
+    // reconstruction error over the real (non-padding) rows
+    let w2 = table.materialize();
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for i in 0..rows {
+        for j in 0..dim {
+            let w = weights[i * dim + j] as f64;
+            let e = w - w2[i * dim + j] as f64;
+            num += e * e;
+            den += w * w;
+        }
+    }
+    TtSvd { table, rel_error: (num / den.max(1e-300)).sqrt() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::assert_allclose;
+    use crate::util::prng::Rng;
+
+    /// A table that IS low-rank must reconstruct near-exactly.
+    #[test]
+    fn exact_recovery_of_tt_structured_table() {
+        let shapes = TtShapes::plan(216, 8, 4);
+        let mut rng = Rng::new(3);
+        let src = EffTtTable::new(shapes, EffTtOptions::default(), &mut rng);
+        let w = src.materialize();
+        let w_rows: Vec<f32> = w[..216 * 8].to_vec();
+        let dec = tt_svd(&w_rows, shapes, EffTtOptions::default());
+        assert!(
+            dec.rel_error < 1e-3,
+            "low-rank table should round-trip: err {}",
+            dec.rel_error
+        );
+        // spot-check lookups agree
+        let mut scratch = crate::tt::table::TtScratch::default();
+        let mut a = vec![0.0; 8];
+        let mut b = dec.table;
+        b.embedding_bag(&[7, 100, 215], &[0, 3], &mut a, &mut scratch);
+        let mut expect = vec![0.0f32; 8];
+        for &i in &[7usize, 100, 215] {
+            for d in 0..8 {
+                expect[d] += w_rows[i * 8 + d];
+            }
+        }
+        assert_allclose(&a, &expect, 1e-2, 1e-3);
+    }
+
+    /// Random (full-rank) tables: error decreases with rank — the
+    /// accuracy-vs-compression dial of Table IV/V.
+    #[test]
+    fn error_monotone_in_rank() {
+        let rows = 216usize;
+        let dim = 8usize;
+        let mut rng = Rng::new(7);
+        let mut w = vec![0.0f32; rows * dim];
+        rng.fill_normal(&mut w, 0.0, 1.0);
+        let mut last = f64::INFINITY;
+        for rank in [2usize, 4, 8] {
+            let shapes = TtShapes::plan(rows as u64, dim, rank);
+            let dec = tt_svd(&w, shapes, EffTtOptions::default());
+            assert!(
+                dec.rel_error <= last + 1e-9,
+                "rank {rank}: error went up ({last} -> {})",
+                dec.rel_error
+            );
+            last = dec.rel_error;
+        }
+        assert!(last < 1.0, "even truncated TT must capture something");
+    }
+
+    #[test]
+    fn jacobi_svd_reconstructs() {
+        let mut rng = Rng::new(9);
+        let (r, c) = (12usize, 5usize);
+        let mut a = Mat::zeros(r, c);
+        for i in 0..r {
+            for j in 0..c {
+                a.set(i, j, rng.normal());
+            }
+        }
+        let (u, s, v) = jacobi_svd(&a);
+        // A ≈ U Σ Vᵀ
+        for i in 0..r {
+            for j in 0..c {
+                let mut x = 0.0;
+                for k in 0..s.len() {
+                    x += u.at(i, k) * s[k] * v.at(j, k);
+                }
+                assert!((x - a.at(i, j)).abs() < 1e-8, "({i},{j}): {x} vs {}", a.at(i, j));
+            }
+        }
+        // descending singular values
+        for w in s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! Small-matrix kernels for the TT hot path.
+//!
+//! TT contractions are many *tiny* GEMMs (n≈2–4, R≈8–32), so a cache-
+//! blocked microkernel with the k-loop innermost-unrolled beats any
+//! generic BLAS call overhead at these sizes.  All matrices are row-major
+//! contiguous f32.
+
+/// C[m,n] = A[m,k] · B[k,n]  (overwrite).
+#[inline]
+pub fn gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    gemm_acc(a, b, c, m, k, n);
+}
+
+/// C[m,n] += A[m,k] · B[k,n].
+///
+/// i-k-j loop order: the innermost j-loop is a contiguous AXPY over rows of
+/// B and C, which LLVM auto-vectorizes; `a[i*k+p]` is hoisted per k-step.
+#[inline]
+pub fn gemm_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// C[m,n] += Aᵀ[k,m]ᵀ · B[k,n], i.e. A is stored [k, m] and used transposed.
+#[inline]
+pub fn gemm_at_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// C[m,n] += A[m,k] · Bᵀ where B is stored [n, k] and used transposed.
+#[inline]
+pub fn gemm_bt_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            crow[j] += dot(arow, brow);
+        }
+    }
+}
+
+/// Dense dot product with 4-way unrolling.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y += x (AXPY with alpha=1).
+#[inline]
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (a, &b) in y.iter_mut().zip(x) {
+        *a += b;
+    }
+}
+
+/// y += alpha * x.
+#[inline]
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (a, &b) in y.iter_mut().zip(x) {
+        *a += alpha * b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{assert_allclose, check_cases};
+    use crate::util::prng::Rng;
+
+    fn naive_gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for p in 0..k {
+                    c[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        check_cases("gemm", 50, |rng, _| {
+            let (m, k, n) = (
+                rng.usize_below(8) + 1,
+                rng.usize_below(8) + 1,
+                rng.usize_below(8) + 1,
+            );
+            let a = rand_vec(rng, m * k);
+            let b = rand_vec(rng, k * n);
+            let mut c = vec![0.0; m * n];
+            gemm(&a, &b, &mut c, m, k, n);
+            assert_allclose(&c, &naive_gemm(&a, &b, m, k, n), 1e-5, 1e-5);
+        });
+    }
+
+    #[test]
+    fn gemm_at_matches() {
+        check_cases("gemm_at", 50, |rng, _| {
+            let (m, k, n) = (
+                rng.usize_below(6) + 1,
+                rng.usize_below(6) + 1,
+                rng.usize_below(6) + 1,
+            );
+            let at = rand_vec(rng, k * m); // stored [k, m]
+            let b = rand_vec(rng, k * n);
+            // materialize A = atᵀ  [m, k]
+            let mut a = vec![0.0; m * k];
+            for p in 0..k {
+                for i in 0..m {
+                    a[i * k + p] = at[p * m + i];
+                }
+            }
+            let mut c1 = vec![0.0; m * n];
+            gemm_at_acc(&at, &b, &mut c1, m, k, n);
+            assert_allclose(&c1, &naive_gemm(&a, &b, m, k, n), 1e-5, 1e-5);
+        });
+    }
+
+    #[test]
+    fn gemm_bt_matches() {
+        check_cases("gemm_bt", 50, |rng, _| {
+            let (m, k, n) = (
+                rng.usize_below(6) + 1,
+                rng.usize_below(6) + 1,
+                rng.usize_below(6) + 1,
+            );
+            let a = rand_vec(rng, m * k);
+            let bt = rand_vec(rng, n * k); // stored [n, k]
+            let mut b = vec![0.0; k * n];
+            for j in 0..n {
+                for p in 0..k {
+                    b[p * n + j] = bt[j * k + p];
+                }
+            }
+            let mut c1 = vec![0.0; m * n];
+            gemm_bt_acc(&a, &bt, &mut c1, m, k, n);
+            assert_allclose(&c1, &naive_gemm(&a, &b, m, k, n), 1e-5, 1e-5);
+        });
+    }
+
+    #[test]
+    fn dot_unrolled() {
+        let a: Vec<f32> = (0..13).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..13).map(|i| (i * 2) as f32).collect();
+        let expect: f32 = (0..13).map(|i| (i * i * 2) as f32).sum();
+        assert!((dot(&a, &b) - expect).abs() < 1e-3);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut y = vec![1.0, 2.0];
+        axpy(&mut y, 0.5, &[2.0, 4.0]);
+        assert_eq!(y, vec![2.0, 4.0]);
+    }
+}

@@ -1,0 +1,19 @@
+//! Native Tensor-Train embedding engine (the paper's §III, in rust).
+//!
+//! The PJRT runtime executes the L2-lowered model artifacts; this module is
+//! the coordinator-side mirror used for (a) host-memory parameter serving,
+//! (b) system-scale benches where per-op HLO dispatch would dominate, and
+//! (c) the Fig. 12 ablations.  `table::EffTtTable` is validated against
+//! both the python oracle (fixtures) and the PJRT `tt_lookup` artifact
+//! (integration tests).
+
+pub mod decompose;
+pub mod linalg;
+pub mod plain;
+pub mod shapes;
+pub mod table;
+
+pub use plain::PlainTable;
+pub use decompose::{tt_svd, TtSvd};
+pub use shapes::TtShapes;
+pub use table::{EffTtOptions, EffTtTable, TtScratch, TtStats};

@@ -1,0 +1,123 @@
+//! `PlainTable` — the uncompressed `nn.EmbeddingBag` baseline (DLRM/FAE
+//! store these in host memory; Table IV compares their footprint against
+//! Eff-TT).  Same `embedding_bag` contract as [`EffTtTable`].
+
+use crate::tt::linalg::{add_assign, axpy};
+use crate::util::prng::Rng;
+
+pub struct PlainTable {
+    pub rows: u64,
+    pub dim: usize,
+    pub weights: Vec<f32>,
+}
+
+impl PlainTable {
+    pub fn new(rows: u64, dim: usize, rng: &mut Rng) -> Self {
+        let mut weights = vec![0.0; rows as usize * dim];
+        let sigma = (1.0 / dim as f64).sqrt() as f32;
+        rng.fill_normal(&mut weights, 0.0, sigma);
+        PlainTable { rows, dim, weights }
+    }
+
+    /// Zero-initialized table (for gradient accumulators).
+    pub fn zeros(rows: u64, dim: usize) -> Self {
+        PlainTable { rows, dim, weights: vec![0.0; rows as usize * dim] }
+    }
+
+    #[inline]
+    pub fn row(&self, i: u64) -> &[f32] {
+        let d = self.dim;
+        &self.weights[i as usize * d..(i as usize + 1) * d]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: u64) -> &mut [f32] {
+        let d = self.dim;
+        &mut self.weights[i as usize * d..(i as usize + 1) * d]
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.weights.len() * 4) as u64
+    }
+
+    /// EmbeddingBag(sum) forward — same contract as `EffTtTable`.
+    pub fn embedding_bag(&self, indices: &[u64], offsets: &[usize], out: &mut [f32]) {
+        let d = self.dim;
+        let bags = offsets.len() - 1;
+        assert_eq!(out.len(), bags * d);
+        out.fill(0.0);
+        for b in 0..bags {
+            let dst = &mut out[b * d..(b + 1) * d];
+            for k in offsets[b]..offsets[b + 1] {
+                let i = indices[k];
+                debug_assert!(i < self.rows);
+                let row = &self.weights[i as usize * d..(i as usize + 1) * d];
+                add_assign(dst, row);
+            }
+        }
+    }
+
+    /// SGD on the touched rows (sparse update).
+    pub fn backward_sgd(
+        &mut self,
+        indices: &[u64],
+        offsets: &[usize],
+        grad_out: &[f32],
+        lr: f32,
+    ) {
+        let d = self.dim;
+        let bags = offsets.len() - 1;
+        assert_eq!(grad_out.len(), bags * d);
+        for b in 0..bags {
+            let g = &grad_out[b * d..(b + 1) * d];
+            for k in offsets[b]..offsets[b + 1] {
+                let i = indices[k] as usize;
+                axpy(&mut self.weights[i * d..(i + 1) * d], -lr, g);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::assert_allclose;
+
+    #[test]
+    fn bag_sums_rows() {
+        let mut rng = Rng::new(1);
+        let t = PlainTable::new(10, 4, &mut rng);
+        let mut out = vec![0.0; 4];
+        t.embedding_bag(&[2, 2, 5], &[0, 3], &mut out);
+        let expect: Vec<f32> = (0..4)
+            .map(|d| 2.0 * t.weights[2 * 4 + d] + t.weights[5 * 4 + d])
+            .collect();
+        assert_allclose(&out, &expect, 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn sgd_moves_only_touched_rows() {
+        let mut rng = Rng::new(2);
+        let mut t = PlainTable::new(10, 4, &mut rng);
+        let before = t.weights.clone();
+        let g = vec![1.0; 4];
+        t.backward_sgd(&[3], &[0, 1], &g, 0.5);
+        for i in 0..10 {
+            for d in 0..4 {
+                let idx = i * 4 + d;
+                if i == 3 {
+                    assert!((t.weights[idx] - (before[idx] - 0.5)).abs() < 1e-6);
+                } else {
+                    assert_eq!(t.weights[idx], before[idx]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_in_bag_gets_double_grad() {
+        let mut t = PlainTable::zeros(5, 2);
+        t.backward_sgd(&[1, 1], &[0, 2], &[1.0, 2.0], 1.0);
+        assert_allclose(t.row(1), &[-2.0, -4.0], 1e-6, 1e-7);
+    }
+}

@@ -1,0 +1,224 @@
+//! TT shape planning — MUST mirror `python/compile/tt_spec.py` exactly so
+//! artifacts lowered by L2 and the native engine index cores identically.
+//!
+//! A plain table `W ∈ R^{M×N}` factors into three cores (paper Eq. 2):
+//!
+//! ```text
+//!   D1 [m1, n1, R]      D2 [R, m2, n2, R]      D3 [R, m3, n3]
+//! ```
+//!
+//! with row index split (Eq. 5, row-major): `i1 = i/(m2·m3)`,
+//! `i2 = (i/m3)%m2`, `i3 = i%m3`, and the Algorithm-1 reuse prefix
+//! `p = i / m3` (shared ⇒ the partial product D1[i1]·D2[:,i2] is shared).
+
+/// Split `x` into three factors as close to cube-root as possible
+/// (ascending). Mirrors `tt_spec.factorize3`.
+pub fn factorize3(x: u64) -> [u64; 3] {
+    assert!(x > 0, "cannot factorize 0");
+    let mut best = [1, 1, x];
+    let mut best_cost = spread(&best);
+    let cbrt = (x as f64).powf(1.0 / 3.0).round() as u64 + 2;
+    for a in 1..=cbrt {
+        if x % a != 0 {
+            continue;
+        }
+        let rem = x / a;
+        let sq = (rem as f64).sqrt() as u64 + 1;
+        for b in a..=sq {
+            if rem % b != 0 {
+                continue;
+            }
+            let mut cand = [a, b, rem / b];
+            cand.sort_unstable();
+            let cost = spread(&cand);
+            if cost < best_cost {
+                best = cand;
+                best_cost = cost;
+            }
+        }
+    }
+    best
+}
+
+fn spread(f: &[u64; 3]) -> u64 {
+    f[2] - f[0]
+}
+
+/// Smallest `M >= rows` factoring into three balanced terms.
+/// Mirrors `tt_spec.padded_rows`.
+pub fn padded_rows(rows: u64) -> u64 {
+    let mut m = rows;
+    loop {
+        let f = factorize3(m);
+        if f[2] <= 4 * f[0] || f[2] <= 64 {
+            return m;
+        }
+        m += 1;
+    }
+}
+
+/// Complete shape plan for one Eff-TT table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TtShapes {
+    /// Logical (pre-padding) row count.
+    pub rows: u64,
+    /// Embedding dimension N = n1·n2·n3.
+    pub dim: usize,
+    pub m: [u64; 3],
+    pub n: [usize; 3],
+    /// Internal ranks R1 = R2 = R (boundary ranks are 1).
+    pub rank: usize,
+}
+
+impl TtShapes {
+    /// Plan shapes for a `rows × dim` table (same algorithm as
+    /// `TtSpec.plan` on the python side).
+    pub fn plan(rows: u64, dim: usize, rank: usize) -> TtShapes {
+        let m = factorize3(padded_rows(rows));
+        let n64 = factorize3(dim as u64);
+        let n = [n64[0] as usize, n64[1] as usize, n64[2] as usize];
+        assert_eq!(
+            n[0] * n[1] * n[2],
+            dim,
+            "dim {dim} not factorable into 3 terms"
+        );
+        TtShapes { rows, dim, m, n, rank }
+    }
+
+    /// Core element counts: `[m1·n1·R, R·m2·n2·R, R·m3·n3]`.
+    pub fn core_lens(&self) -> [usize; 3] {
+        let r = self.rank;
+        [
+            self.m[0] as usize * self.n[0] * r,
+            r * self.m[1] as usize * self.n[1] * r,
+            r * self.m[2] as usize * self.n[2],
+        ]
+    }
+
+    pub fn padded_m(&self) -> u64 {
+        self.m[0] * self.m[1] * self.m[2]
+    }
+
+    /// Row index → (i1, i2, i3).
+    #[inline]
+    pub fn tt_indices(&self, i: u64) -> (u64, u64, u64) {
+        let (m2, m3) = (self.m[1], self.m[2]);
+        (i / (m2 * m3), (i / m3) % m2, i % m3)
+    }
+
+    /// Reuse-buffer key (Algorithm 1): rows sharing it share D1·D2 slices.
+    #[inline]
+    pub fn prefix_of(&self, i: u64) -> u64 {
+        i / self.m[2]
+    }
+
+    /// Number of distinct prefixes (`m1·m2`).
+    pub fn num_prefixes(&self) -> u64 {
+        self.m[0] * self.m[1]
+    }
+
+    /// Trainable parameter count in TT form.
+    pub fn tt_params(&self) -> u64 {
+        let l = self.core_lens();
+        (l[0] + l[1] + l[2]) as u64
+    }
+
+    /// Parameter count of the uncompressed table.
+    pub fn plain_params(&self) -> u64 {
+        self.rows * self.dim as u64
+    }
+
+    /// Table IV's headline metric.
+    pub fn compression_ratio(&self) -> f64 {
+        self.plain_params() as f64 / self.tt_params() as f64
+    }
+
+    /// Bytes of f32 storage in TT form.
+    pub fn tt_bytes(&self) -> u64 {
+        self.tt_params() * 4
+    }
+
+    pub fn plain_bytes(&self) -> u64 {
+        self.plain_params() * 4
+    }
+
+    /// FLOPs for one row lookup without reuse: two GEMM hops.
+    pub fn lookup_flops(&self) -> u64 {
+        let (n1, n2, n3) = (self.n[0] as u64, self.n[1] as u64, self.n[2] as u64);
+        let r = self.rank as u64;
+        // D1[i1] (n1×R) · D2[:,i2] (R×n2R) + P (n1n2×R) · D3[:,i3] (R×n3)
+        2 * n1 * r * n2 * r + 2 * n1 * n2 * r * n3
+    }
+
+    /// FLOPs of just the second hop (paid even on reuse-buffer hits).
+    pub fn hop2_flops(&self) -> u64 {
+        let (n1, n2, n3) = (self.n[0] as u64, self.n[1] as u64, self.n[2] as u64);
+        2 * n1 * n2 * self.rank as u64 * n3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check_cases;
+
+    #[test]
+    fn factorize3_products() {
+        check_cases("factorize3", 200, |rng, _| {
+            let x = rng.below(1_000_000) + 1;
+            let f = factorize3(x);
+            assert_eq!(f[0] * f[1] * f[2], x);
+            assert!(f[0] <= f[1] && f[1] <= f[2]);
+        });
+    }
+
+    #[test]
+    fn padded_rows_balanced() {
+        check_cases("padded", 100, |rng, _| {
+            let rows = rng.below(3_000_000) + 32;
+            let m = padded_rows(rows);
+            assert!(m >= rows);
+            let f = factorize3(m);
+            assert!(f[2] <= 4 * f[0] || f[2] <= 64);
+        });
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        check_cases("roundtrip", 100, |rng, _| {
+            let rows = rng.below(500_000) + 100;
+            let s = TtShapes::plan(rows, 16, 8);
+            let i = rng.below(rows);
+            let (i1, i2, i3) = s.tt_indices(i);
+            assert!(i1 < s.m[0] && i2 < s.m[1] && i3 < s.m[2]);
+            assert_eq!(i1 * s.m[1] * s.m[2] + i2 * s.m[2] + i3, i);
+            assert_eq!(s.prefix_of(i), i1 * s.m[1] + i2);
+        });
+    }
+
+    #[test]
+    fn known_factorizations() {
+        assert_eq!(factorize3(1000), [10, 10, 10]);
+        assert_eq!(factorize3(8), [2, 2, 2]);
+        assert_eq!(factorize3(7), [1, 1, 7]);
+    }
+
+    #[test]
+    fn table4_terabyte_ratio_direction() {
+        // Criteo Terabyte row: 242.5M × 64 must compress by orders of
+        // magnitude (paper reports 74× at their rank config; ratio grows
+        // as rank shrinks).
+        let s = TtShapes::plan(242_500_000, 64, 32);
+        assert!(s.compression_ratio() > 1_000.0);
+    }
+
+    #[test]
+    fn python_parity_fixtures() {
+        // Fixed cross-language fixtures (values printed by tt_spec.py).
+        let s = TtShapes::plan(1000, 16, 8);
+        assert_eq!(s.m, [10, 10, 10]);
+        assert_eq!(s.n, [2, 2, 4]);
+        let s = TtShapes::plan(6000, 16, 8);
+        assert_eq!(s.padded_m() % 6000, 0);
+    }
+}

@@ -1,0 +1,193 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Used by every `cargo bench` target: warmup, timed iterations, outlier-
+//! robust summary, and paper-style table rows on stdout.  Deliberately
+//! small and deterministic — benches print the same rows the paper reports
+//! so EXPERIMENTS.md can diff paper-vs-measured directly.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{summarize, Summary};
+
+/// One benchmark measurement.
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub per_iter: Summary,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> Duration {
+        Duration::from_secs_f64(self.per_iter.mean)
+    }
+
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.per_iter.mean
+    }
+}
+
+/// Benchmark runner with a time budget per case.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(500),
+            min_iters: 3,
+            max_iters: 2_000,
+        }
+    }
+
+    /// Run `f` repeatedly; each call is one iteration.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup until budget elapses (at least one call).
+        let w0 = Instant::now();
+        loop {
+            f();
+            if w0.elapsed() >= self.warmup {
+                break;
+            }
+        }
+        let mut samples = Vec::new();
+        let t0 = Instant::now();
+        while (samples.len() < self.min_iters || t0.elapsed() < self.budget)
+            && samples.len() < self.max_iters
+        {
+            let it = Instant::now();
+            f();
+            samples.push(it.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            per_iter: summarize(&samples),
+        }
+    }
+}
+
+/// Pretty paper-style table emitter.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{:<width$}", c, width = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+}
+
+/// Format seconds as an adaptive human string.
+pub fn fmt_dur(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.2}s")
+    } else if secs >= 1e-3 {
+        format!("{:.2}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.2}µs", secs * 1e6)
+    } else {
+        format!("{:.0}ns", secs * 1e9)
+    }
+}
+
+/// Format a byte count.
+pub fn fmt_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let b = b as f64;
+    if b >= K * K * K {
+        format!("{:.2}GB", b / (K * K * K))
+    } else if b >= K * K {
+        format!("{:.1}MB", b / (K * K))
+    } else if b >= K {
+        format!("{:.1}KB", b / K)
+    } else {
+        format!("{b:.0}B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_runs_and_reports() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(10),
+            min_iters: 3,
+            max_iters: 100,
+        };
+        let mut acc = 0u64;
+        let r = b.run("noop", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.iters >= 3);
+        assert!(r.per_iter.mean >= 0.0);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_dur(2.0), "2.00s");
+        assert_eq!(fmt_dur(0.002), "2.00ms");
+        assert_eq!(fmt_bytes(2048), "2.0KB");
+        assert!(fmt_bytes(59_200_000_000).starts_with("55."));
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // should not panic
+    }
+}

@@ -1,0 +1,83 @@
+//! Lightweight property-testing driver (proptest is unavailable offline).
+//!
+//! `props!` runs a closure across many seeded random cases and reports the
+//! first failing seed, so a failure reproduces with `CASE_SEED=<n>`.  Not a
+//! shrinker — cases are kept small instead.
+
+use crate::util::prng::Rng;
+
+/// Run `cases` random property checks. The closure receives a per-case RNG
+/// and the case index; it should panic (assert) on violation.
+pub fn check_cases<F: FnMut(&mut Rng, usize)>(name: &str, cases: usize, mut f: F) {
+    // Allow narrowing to one case for debugging: CASE_SEED=17 cargo test
+    if let Ok(s) = std::env::var("CASE_SEED") {
+        if let Ok(seed) = s.parse::<u64>() {
+            let mut rng = Rng::new(seed);
+            f(&mut rng, seed as usize);
+            return;
+        }
+    }
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng, case)
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {case} (reproduce with CASE_SEED={seed})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        assert!(
+            (x - y).abs() <= tol || (x.is_nan() && y.is_nan()),
+            "mismatch at {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+/// Max absolute difference between two slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_cases_runs_all() {
+        let mut n = 0;
+        check_cases("count", 10, |_rng, _case| {
+            n += 1;
+        });
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    fn allclose_passes_equal() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn allclose_fails_far() {
+        assert_allclose(&[1.0], &[2.0], 1e-5, 1e-6);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        assert_eq!(max_abs_diff(&[1.0, 5.0], &[1.5, 4.0]), 1.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared infrastructure: PRNG, statistics, bench harness, property checks.
+//!
+//! These exist in-repo because the offline crate closure lacks `rand`,
+//! `criterion`, and `proptest`; each submodule is a small, tested,
+//! deterministic replacement scoped to what Rec-AD needs.
+
+pub mod bench;
+pub mod check;
+pub mod json;
+pub mod prng;
+pub mod stats;

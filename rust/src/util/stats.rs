@@ -1,0 +1,213 @@
+//! Streaming statistics + latency histograms used by metrics and benches.
+
+/// Welford's online mean/variance.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Percentile summary over a recorded sample set.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+pub fn summarize(samples: &[f64]) -> Summary {
+    assert!(!samples.is_empty(), "summarize on empty sample set");
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut w = Welford::new();
+    for &x in &s {
+        w.push(x);
+    }
+    Summary {
+        count: s.len(),
+        mean: w.mean(),
+        std: w.std(),
+        min: s[0],
+        p50: percentile(&s, 0.50),
+        p90: percentile(&s, 0.90),
+        p99: percentile(&s, 0.99),
+        max: *s.last().unwrap(),
+    }
+}
+
+/// Linear-interpolated percentile on a pre-sorted slice.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Fixed-bucket log-scale latency histogram (ns) — O(1) record, compact.
+#[derive(Clone)]
+pub struct LatencyHist {
+    buckets: Vec<u64>, // bucket i covers [2^i, 2^(i+1)) ns
+    count: u64,
+    sum_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist { buckets: vec![0; 64], count: 0, sum_ns: 0, max_ns: 0 }
+    }
+
+    pub fn record(&mut self, dur: std::time::Duration) {
+        self.record_ns(dur.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        let b = 63 - ns.max(1).leading_zeros() as usize;
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum_ns += ns;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Approximate quantile from bucket midpoints.
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return 1.5 * (1u64 << i) as f64; // bucket midpoint
+            }
+        }
+        self.max_ns as f64
+    }
+
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 3.0).abs() < 1e-12);
+        assert!((w.variance() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let s = summarize(&[5.0, 1.0, 9.0, 3.0, 7.0, 2.0, 8.0]);
+        assert!(s.min <= s.p50 && s.p50 <= s.p90 && s.p90 <= s.p99);
+        assert!(s.p99 <= s.max);
+        assert_eq!(s.count, 7);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [0.0, 10.0];
+        assert!((percentile(&sorted, 0.5) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hist_quantiles_monotone() {
+        let mut h = LatencyHist::new();
+        for i in 1..1000u64 {
+            h.record_ns(i * 1000);
+        }
+        assert!(h.quantile_ns(0.5) <= h.quantile_ns(0.99));
+        assert_eq!(h.count(), 999);
+        assert!(h.mean_ns() > 0.0);
+    }
+
+    #[test]
+    fn hist_merge_adds_counts() {
+        let mut a = LatencyHist::new();
+        let mut b = LatencyHist::new();
+        a.record_ns(100);
+        b.record_ns(200);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+}

@@ -1,0 +1,191 @@
+//! Cross-module integration tests.
+//!
+//! PJRT-dependent tests auto-skip when `artifacts/` has not been built
+//! (run `make artifacts`), so `cargo test` is meaningful both before and
+//! after the python compile step.
+
+use recad::coordinator::engine::{EngineCfg, NativeDlrm};
+use recad::coordinator::pipeline::{self, PipelineCfg};
+use recad::coordinator::platform::CostModel;
+use recad::coordinator::trainer::{evaluate_on, train_ieee118};
+use recad::data::ctr::CtrGenerator;
+use recad::data::schema::DatasetSchema;
+use recad::powersys::dataset::{generate, DatasetCfg, SparseVocab};
+use recad::runtime::{Artifacts, DlrmFwd, DlrmTrainStep, TtLookupExe};
+use recad::tt::shapes::TtShapes;
+use recad::tt::table::{EffTtOptions, EffTtTable, TtScratch};
+use recad::util::check::assert_allclose;
+use recad::util::prng::Rng;
+use std::time::Duration;
+
+fn artifacts() -> Option<Artifacts> {
+    if !std::path::Path::new("artifacts/meta.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Artifacts::load("artifacts").expect("artifacts load"))
+}
+
+/// The central cross-language numeric check: the native rust Eff-TT
+/// engine and the jax/pallas-lowered `tt_lookup` artifact must agree on
+/// pooled embedding bags for identical cores.
+#[test]
+fn native_tt_matches_pjrt_artifact() {
+    let Some(arts) = artifacts() else { return };
+    let m = arts.meta.clone();
+    let shapes = TtShapes::plan(m.lookup_rows, m.emb_dim, m.lookup_rank);
+    assert_eq!(shapes.m, m.lookup_m, "shape plan drifted between languages");
+
+    let mut rng = Rng::new(0xA11CE);
+    let mut table = EffTtTable::new(shapes, EffTtOptions::default(), &mut rng);
+    let (d1, d2, d3) = table.to_jax_cores();
+    let r = m.lookup_rank;
+
+    let idx: Vec<i32> = (0..m.lookup_batch * m.lookup_bag)
+        .map(|_| rng.below(m.lookup_rows) as i32)
+        .collect();
+
+    // PJRT side
+    let exe = TtLookupExe::new(&arts);
+    let pjrt_out = exe
+        .run(
+            (&d1, &[shapes.m[0] as usize, shapes.n[0], r]),
+            (&d2, &[r, shapes.m[1] as usize, shapes.n[1], r]),
+            (&d3, &[r, shapes.m[2] as usize, shapes.n[2]]),
+            &idx,
+        )
+        .expect("pjrt lookup");
+
+    // native side: same bags (bag size = lookup_bag)
+    let flat: Vec<u64> = idx.iter().map(|&i| i as u64).collect();
+    let offsets: Vec<usize> = (0..=m.lookup_batch).map(|b| b * m.lookup_bag).collect();
+    let mut native_out = vec![0.0f32; m.lookup_batch * m.emb_dim];
+    let mut scratch = TtScratch::default();
+    table.embedding_bag(&flat, &offsets, &mut native_out, &mut scratch);
+
+    assert_allclose(&native_out, &pjrt_out, 1e-4, 1e-5);
+}
+
+#[test]
+fn pjrt_train_step_descends_and_fwd_serves() {
+    let Some(arts) = artifacts() else { return };
+    let m = arts.meta.clone();
+    let mut rng = Rng::new(7);
+    let mut dense = vec![0f32; m.train_batch * m.dense_dim];
+    rng.fill_normal(&mut dense, 0.0, 1.0);
+    let idx: Vec<i32> = (0..m.train_batch * m.num_tables)
+        .map(|i| rng.below(m.table_rows[i % m.num_tables]) as i32)
+        .collect();
+    let labels: Vec<f32> = (0..m.train_batch)
+        .map(|_| if rng.coin(0.5) { 1.0 } else { 0.0 })
+        .collect();
+    let mut step = DlrmTrainStep::new(&arts).expect("train step");
+    let mut losses = Vec::new();
+    for _ in 0..6 {
+        losses.push(step.step(&dense, &idx, &labels).expect("step"));
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "no descent: {losses:?}"
+    );
+
+    // serve with the trained params
+    let leaves = step.params_host().expect("params");
+    let fwd = DlrmFwd::with_params(&arts, &leaves).expect("fwd");
+    let mut fdense = vec![0f32; m.fwd_batch * m.dense_dim];
+    rng.fill_normal(&mut fdense, 0.0, 1.0);
+    let fidx: Vec<i32> = (0..m.fwd_batch * m.num_tables)
+        .map(|i| rng.below(m.table_rows[i % m.num_tables]) as i32)
+        .collect();
+    let probs = fwd.predict(&fdense, &fidx).expect("predict");
+    assert_eq!(probs.len(), m.fwd_batch);
+    for &p in &probs {
+        assert!((0.0..=1.0).contains(&p), "prob {p}");
+    }
+
+    // padded batch-1 path (Table VI serving mode)
+    let one = fwd
+        .predict_padded(&fdense[..m.dense_dim], &fidx[..m.num_tables], 1)
+        .expect("padded");
+    assert_eq!(one.len(), 1);
+    assert!((one[0] - probs[0]).abs() < 1e-4, "padding changed numerics");
+}
+
+/// Full system loop: dataset → training → detection quality within reach
+/// of the paper's Table III row, and the trained model transfers across
+/// evaluation paths.
+#[test]
+fn end_to_end_detection_quality() {
+    let ds = generate(&DatasetCfg {
+        n_normal: 2000,
+        n_attack: 500,
+        vocab: SparseVocab::ieee118(1.0 / 2000.0),
+        n_profiles: 60,
+        noise_std: 0.005,
+        seed: 0xE2E,
+    });
+    let (report, mut engine) = train_ieee118(EngineCfg::ieee118(1.0 / 2000.0), &ds, 3, 64, 2);
+    assert!(report.eval.accuracy > 0.9, "accuracy {}", report.eval.accuracy);
+    assert!(report.eval.recall > 0.7, "recall {}", report.eval.recall);
+    // re-evaluation is deterministic
+    let again = evaluate_on(&mut engine, ds.split(0.8).1);
+    assert_eq!(again.confusion, report.eval.confusion);
+}
+
+/// Pipeline over a CTR-shaped workload: pipelined == sequential losses
+/// (RAW protocol), while wall time improves once costs are non-zero.
+#[test]
+fn pipeline_integration_with_costs() {
+    let ecfg = EngineCfg {
+        dense_dim: 4,
+        emb_dim: 8,
+        tables: vec![(3000, true), (600, false), (500, false)],
+        tt_rank: 4,
+        bot_hidden: vec![16],
+        top_hidden: vec![16],
+        lr: 0.05,
+        tt_opts: EffTtOptions::default(),
+    };
+    let schema = DatasetSchema {
+        name: "integration",
+        n_dense: 4,
+        vocabs: vec![3000, 600, 500],
+        emb_dim: 8,
+        zipf_s: 1.2,
+        ft_rank: 8,
+    };
+    let mut gen = CtrGenerator::new(schema, 17);
+    let batches = gen.batches(40, 32);
+
+    // comm cost calibrated to ≈ the measured compute of one batch so that
+    // overlap is visible but bounded
+    let mut probe = NativeDlrm::new(ecfg.clone(), &mut Rng::new(1));
+    let t0 = std::time::Instant::now();
+    probe.train_step(&batches[0]);
+    let compute = t0.elapsed();
+    let cost = CostModel {
+        h2d_bps: 1e12,
+        d2d_bps: 1e12,
+        transfer_latency: compute / 4,
+        ps_row: Duration::ZERO,
+        dispatch: Duration::ZERO,
+    };
+
+    let run_mode = |pipelined: bool| {
+        let mut engine = NativeDlrm::new(ecfg.clone(), &mut Rng::new(1));
+        let host = pipeline::split_to_host(&mut engine, &[1, 2], &mut Rng::new(2));
+        let mut pcfg = PipelineCfg::new(cost, vec![1, 2]);
+        pcfg.pipelined = pipelined;
+        pcfg.lc = 4;
+        pipeline::run(engine, host, &batches, &pcfg)
+    };
+    let (seq, _, _) = run_mode(false);
+    let (pipe, _, _) = run_mode(true);
+    assert_eq!(seq.losses, pipe.losses, "RAW protocol must preserve numerics");
+    assert!(
+        pipe.wall < seq.wall,
+        "pipeline {:?} !< sequential {:?}",
+        pipe.wall,
+        seq.wall
+    );
+}

@@ -1,0 +1,286 @@
+//! Cross-module property tests and failure injection.
+
+use recad::cli::Cli;
+use recad::config::{RecAdConfig, Toml};
+use recad::coordinator::cache::{EmbeddingCache, PrefetchBatch, PrefetchedRow};
+use recad::coordinator::queues::BoundedQueue;
+use recad::data::zipf::Zipf;
+use recad::powersys::dcpf::DcPowerFlow;
+use recad::powersys::ieee118::{Grid, N_BUS};
+use recad::reorder::bijection::IndexBijection;
+use recad::runtime::{ArtifactMeta, Artifacts};
+use recad::tt::shapes::TtShapes;
+use recad::tt::table::{EffTtOptions, EffTtTable, TtScratch};
+use recad::util::check::{assert_allclose, check_cases};
+use recad::util::prng::Rng;
+
+/// Eff-TT must behave exactly like a plain table initialized with its
+/// materialization — across random shapes, ranks, bags and skew.
+#[test]
+fn tt_is_a_plain_table_in_disguise() {
+    check_cases("tt-plain-equiv", 15, |rng, _| {
+        let rows = rng.below(4000) + 64;
+        let dim = [8usize, 16, 32][rng.usize_below(3)];
+        let rank = [2usize, 4, 8][rng.usize_below(3)];
+        let shapes = TtShapes::plan(rows, dim, rank);
+        let mut t = EffTtTable::new(shapes, EffTtOptions::default(), &mut Rng::new(rng.next_u64()));
+        let w = t.materialize();
+        // random multi-bag layout
+        let n_idx = rng.usize_below(24) + 1;
+        let idx: Vec<u64> = (0..n_idx).map(|_| rng.below(rows)).collect();
+        let mut offsets = vec![0usize];
+        let mut at = 0usize;
+        while at < n_idx {
+            at = (at + 1 + rng.usize_below(4)).min(n_idx);
+            offsets.push(at);
+        }
+        let bags = offsets.len() - 1;
+        let mut out = vec![0.0; bags * dim];
+        let mut scratch = TtScratch::default();
+        t.embedding_bag(&idx, &offsets, &mut out, &mut scratch);
+        let mut expect = vec![0.0f32; bags * dim];
+        for b in 0..bags {
+            for k in offsets[b]..offsets[b + 1] {
+                for d in 0..dim {
+                    expect[b * dim + d] += w[idx[k] as usize * dim + d];
+                }
+            }
+        }
+        assert_allclose(&out, &expect, 1e-4, 1e-5);
+    });
+}
+
+/// The dense bijection is a true permutation of the row space.
+#[test]
+fn bijection_is_total_permutation() {
+    check_cases("bijection-perm", 5, |rng, _| {
+        let rows = rng.below(3000) + 200;
+        let batches: Vec<Vec<u64>> = (0..10)
+            .map(|_| (0..32).map(|_| rng.below(rows)).collect())
+            .collect();
+        let refs: Vec<&[u64]> = batches.iter().map(|b| b.as_slice()).collect();
+        let bij = IndexBijection::build(rows, &refs, 0.1);
+        let mut seen = vec![false; rows as usize];
+        for old in 0..rows {
+            let new = bij.apply(old);
+            assert!(new < rows, "out of range");
+            assert!(!seen[new as usize], "collision at old={old}");
+            seen[new as usize] = true;
+        }
+    });
+}
+
+/// DC power flow conserves energy: injections sum to ~0 after solving
+/// a balanced case, and flows are antisymmetric under branch reversal.
+#[test]
+fn power_flow_conservation() {
+    check_cases("pf-conserve", 5, |rng, _| {
+        let pf = DcPowerFlow::new(Grid::ieee118(rng.next_u64()));
+        let mut inj: Vec<f64> = (0..N_BUS).map(|_| rng.normal() * 0.2).collect();
+        let mean = inj.iter().sum::<f64>() / N_BUS as f64;
+        for v in inj.iter_mut() {
+            *v -= mean; // balance
+        }
+        let theta = pf.solve_angles(&inj);
+        let implied = pf.injections(&theta);
+        let total: f64 = implied.iter().sum();
+        assert!(total.abs() < 1e-6, "energy not conserved: {total}");
+    });
+}
+
+/// Zipf CDF dominance: lower ranks always at least as probable.
+#[test]
+fn zipf_rank_dominance() {
+    let z = Zipf::new(1000, 1.3);
+    let mut rng = Rng::new(5);
+    let mut counts = vec![0u64; 1000];
+    for _ in 0..200_000 {
+        counts[z.sample(&mut rng) as usize] += 1;
+    }
+    // coarse bucket comparison to dodge sampling noise
+    let head: u64 = counts[..10].iter().sum();
+    let mid: u64 = counts[10..100].iter().sum();
+    let tail: u64 = counts[100..].iter().sum();
+    assert!(head > mid / 3, "head {head} mid {mid}");
+    assert!(head + mid > tail / 2);
+}
+
+/// Cache RAW property under a random interleaving of writes, prefetches
+/// and lifecycle steps: a synced prefetch must never be older than the
+/// newest device write.
+#[test]
+fn cache_raw_random_interleaving() {
+    check_cases("cache-raw", 10, |rng, _| {
+        let mut cache = EmbeddingCache::new(4 + rng.next_u32() % 8);
+        let rows = 16u64;
+        let mut device_version = vec![0u64; rows as usize];
+        let mut device_value = vec![0.0f32; rows as usize];
+        let mut host_version = 0u64;
+        for step in 1..60u64 {
+            match rng.usize_below(3) {
+                0 => {
+                    // device write
+                    let r = rng.below(rows);
+                    device_version[r as usize] = step;
+                    device_value[r as usize] = step as f32;
+                    cache.record_update(0, r, &[step as f32; 4], step);
+                }
+                1 => {
+                    // host catches up to some earlier version
+                    host_version = host_version.max(step.saturating_sub(rng.below(5)));
+                }
+                _ => {
+                    // prefetch a random row at host_version
+                    let r = rng.below(rows);
+                    // host value reflects all device writes ≤ host_version
+                    let host_val = if device_version[r as usize] <= host_version {
+                        device_value[r as usize]
+                    } else {
+                        -1.0 // stale placeholder the host would serve
+                    };
+                    let mut batch = PrefetchBatch {
+                        step,
+                        rows: vec![(
+                            0usize,
+                            PrefetchedRow { row: r, data: vec![host_val; 4], version: host_version },
+                        )],
+                    };
+                    cache.sync_prefetch(&mut batch);
+                    let got = batch.rows[0].1.data[0];
+                    if device_version[r as usize] > host_version {
+                        // stale at host: cache must have patched IF it
+                        // still holds the row (lifecycle may have evicted;
+                        // eviction only happens for rows untouched for LC
+                        // steps, which the pipeline's queue bound prevents
+                        // — emulate by asserting only when present)
+                        if cache.get(0, r).is_some() {
+                            assert_eq!(
+                                got, device_value[r as usize],
+                                "stale row served at step {step}"
+                            );
+                        }
+                    } else {
+                        assert_eq!(got, host_val);
+                    }
+                }
+            }
+            cache.end_step();
+        }
+    });
+}
+
+/// Queue under concurrent producers/consumers: nothing lost, nothing
+/// duplicated.
+#[test]
+fn queue_mpmc_stress() {
+    let q: std::sync::Arc<BoundedQueue<u64>> = BoundedQueue::new(8);
+    let n_prod = 3;
+    let per = 500u64;
+    let mut handles = Vec::new();
+    for p in 0..n_prod {
+        let q = q.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..per {
+                q.push(p * 10_000 + i);
+            }
+        }));
+    }
+    let qc = q.clone();
+    let consumer = std::thread::spawn(move || {
+        let mut got = Vec::new();
+        while let Some(v) = qc.pop() {
+            got.push(v);
+        }
+        got
+    });
+    for h in handles {
+        h.join().unwrap();
+    }
+    q.close();
+    let got = consumer.join().unwrap();
+    assert_eq!(got.len(), (n_prod * per) as usize);
+    let set: std::collections::HashSet<u64> = got.iter().copied().collect();
+    assert_eq!(set.len(), got.len(), "duplicated items");
+}
+
+// ---------------------------------------------------------------------------
+// failure injection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn artifacts_missing_dir_is_graceful() {
+    let err = match Artifacts::load("/nonexistent/path") {
+        Err(e) => e,
+        Ok(_) => panic!("load of missing dir must fail"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("meta.json"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn meta_json_garbage_rejected() {
+    assert!(ArtifactMeta::parse("{not json").is_err());
+    assert!(ArtifactMeta::parse("{}").is_err()); // missing sections
+    assert!(ArtifactMeta::parse(r#"{"model": {}, "batches": {}, "tt_lookup_spec": {}, "params": []}"#).is_err());
+}
+
+#[test]
+fn config_errors_are_located() {
+    let err = Toml::parse("key = {bad}\n").unwrap_err();
+    assert!(format!("{err:#}").contains("line 1"));
+    assert!(RecAdConfig::load("/no/such/file.toml").is_err());
+}
+
+#[test]
+fn cli_rejects_malformed() {
+    let bad = vec!["train".to_string(), "stray".to_string()];
+    assert!(Cli::parse(&bad).is_err());
+    let none: Vec<String> = vec![];
+    assert!(Cli::parse(&none).is_err());
+}
+
+#[test]
+fn tt_lookup_out_of_range_panics() {
+    let shapes = TtShapes::plan(100, 8, 4);
+    let mut t = EffTtTable::new(shapes, EffTtOptions::default(), &mut Rng::new(1));
+    let mut out = vec![0.0; 8];
+    let mut scratch = TtScratch::default();
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        t.embedding_bag(&[9999], &[0, 1], &mut out, &mut scratch);
+    }));
+    assert!(result.is_err(), "out-of-range index must be rejected");
+}
+
+/// Serving router: micro-batching (max_batch > 1) must preserve verdict
+/// probabilities exactly vs batch-1 serving (the router trade-off is
+/// latency/throughput, never numerics).
+#[test]
+fn router_microbatching_preserves_verdicts() {
+    use recad::coordinator::engine::{EngineCfg, NativeDlrm};
+    use recad::powersys::dataset::{generate, DatasetCfg, SparseVocab};
+    use recad::serve::{Detector, StreamingServer};
+    use std::time::Duration;
+
+    let ds = generate(&DatasetCfg {
+        n_normal: 60,
+        n_attack: 15,
+        vocab: SparseVocab::ieee118(1.0 / 2000.0),
+        n_profiles: 10,
+        noise_std: 0.005,
+        seed: 77,
+    });
+    let cfg = EngineCfg::ieee118(1.0 / 2000.0);
+    let mk = || Detector::new(NativeDlrm::new(cfg.clone(), &mut Rng::new(9)), 0.5);
+
+    let single = StreamingServer::start(mk(), 1, Duration::ZERO);
+    let p1: Vec<f32> = ds.samples[..20].iter().map(|s| single.infer(s).0).collect();
+    let _ = single.run_stream(&ds.samples[20..21], 0);
+
+    let batched = StreamingServer::start(mk(), 8, Duration::ZERO);
+    let p8: Vec<f32> = ds.samples[..20].iter().map(|s| batched.infer(s).0).collect();
+    let _ = batched.run_stream(&ds.samples[20..21], 0);
+
+    for (a, b) in p1.iter().zip(&p8) {
+        assert!((a - b).abs() < 1e-5, "router changed numerics: {a} vs {b}");
+    }
+}
