@@ -64,6 +64,9 @@ fn run_variant(
         top_hidden: vec![32],
         lr: 0.05,
         tt_opts: opts,
+        // serial by default so figures stay comparable to the paper's
+        // single-stream baselines; RECAD_WORKERS opts into the exec arm
+        exec: recad::exec::ExecCfg::from_env(recad::bench_support::WORKERS_ENV),
     };
     let mut engine = NativeDlrm::new(cfg, &mut Rng::new(1));
     let bij = if reorder {

@@ -38,6 +38,9 @@ fn main() {
         top_hidden: vec![64, 32],
         lr: 0.05,
         tt_opts: EffTtOptions::default(),
+        // serial by default so figures stay comparable to the paper's
+        // single-stream baselines; RECAD_WORKERS opts into the exec arm
+        exec: recad::exec::ExecCfg::from_env(recad::bench_support::WORKERS_ENV),
     };
     let schema = DatasetSchema {
         name: "pipeline-bench",

@@ -128,4 +128,31 @@ fn main() {
     }
     t.print();
     println!("\nnote: vocab scale {SCALE}; 4-GPU column composed from measured compute + V100 cost model (DESIGN.md §4).");
+
+    // ---- exec-layer arm: Rec-AD engine training, workers=1 vs N ---------
+    // (intra-step parallelism from the shared exec layer; results are
+    // bit-identical across worker counts, so this is pure speedup)
+    let mut wt = Table::new(
+        "Rec-AD engine training throughput vs exec workers (RECAD_WORKERS)",
+        &["Workers", "samples/s", "speedup"],
+    );
+    let mut base: Option<f64> = None;
+    for w in recad::bench_support::exec_arms() {
+        let mut cfg = cfg_for("Rec-AD");
+        cfg.exec = recad::exec::ExecCfg::with_workers(w);
+        let mut engine = NativeDlrm::new(cfg, &mut Rng::new(1));
+        let mut rng = Rng::new(9);
+        let batches: Vec<_> = EpochIter::new(&ds.samples, 512, &mut rng).take(8).collect();
+        engine.train_step(&batches[0]); // warmup
+        let t0 = Instant::now();
+        for b in &batches {
+            engine.train_step(b);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let n: usize = batches.iter().map(|b| b.batch_size).sum();
+        let tput = n as f64 / dt;
+        let b0 = *base.get_or_insert(tput);
+        wt.row(&[format!("{w}"), format!("{tput:.0}"), format!("{:.2}x", tput / b0)]);
+    }
+    wt.print();
 }

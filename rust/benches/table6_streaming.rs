@@ -113,4 +113,45 @@ fn main() {
     t.print();
     println!("\nnote: vocab scale {SCALE} — absolute MB/ms shrink with it; the reproduced");
     println!("quantities are the DLRM→Rec-AD deltas (right columns).");
+
+    // ---- exec-layer arm: sharded serving, 1 replica vs N ----------------
+    // (one detector clone per worker thread, round-robin dispatch, merged
+    // latency histograms — the streaming analogue of Table VI under load)
+    let n = recad::bench_support::bench_workers();
+    if n > 1 {
+        let cfg = EngineCfg::ieee118(SCALE);
+        let (_, engine) = train_ieee118(cfg, &ds, 2, 64, 3);
+        let deploy = engine.model_bytes();
+        let platform = SimPlatform::rtx2060();
+        let det = recad::serve::Detector::new(engine, 0.5);
+
+        let single = StreamingServer::start(det.clone(), 1, platform.cost.dispatch);
+        let r1 = single.run_stream(&ds.samples[..STREAM_REQUESTS], deploy);
+
+        let mut replicas = Vec::with_capacity(n);
+        for _ in 1..n {
+            replicas.push(det.clone());
+        }
+        replicas.push(det);
+        let sharded = StreamingServer::start_sharded(replicas, 1, platform.cost.dispatch);
+        let rn = sharded.run_stream_concurrent(&ds.samples[..STREAM_REQUESTS], deploy, n * 2);
+
+        let mut st = Table::new(
+            "Sharded streaming serve (RECAD_WORKERS replicas)",
+            &["Replicas", "TPS", "p99 latency", "speedup"],
+        );
+        st.row(&[
+            "1".into(),
+            format!("{:.1}/s", r1.tps),
+            fmt_dur(r1.p99_latency.as_secs_f64()),
+            "1.00x".into(),
+        ]);
+        st.row(&[
+            format!("{n}"),
+            format!("{:.1}/s", rn.tps),
+            fmt_dur(rn.p99_latency.as_secs_f64()),
+            format!("{:.2}x", rn.tps / r1.tps),
+        ]);
+        st.print();
+    }
 }

@@ -1,0 +1,170 @@
+//! L3 perf probe: Eff-TT fwd+bwd at serving-relevant shapes, plus the
+//! engine train-step arm, each at exec workers = 1 vs N.
+//!
+//! Emits a machine-readable `BENCH_perf_probe.json` (throughput, p50/p99
+//! per-iteration latency, workers arm) so the perf trajectory can be
+//! tracked across PRs.  Run: `cargo run --release --example perf_probe`
+//! (`RECAD_WORKERS=N` overrides the parallel arm width).
+
+use std::time::Instant;
+
+use recad::bench_support::bench_workers;
+use recad::coordinator::engine::NativeDlrm;
+use recad::data::batcher::EpochIter;
+use recad::exec::ExecCfg;
+use recad::powersys::dataset::{generate, DatasetCfg, SparseVocab};
+use recad::tt::shapes::TtShapes;
+use recad::tt::table::{EffTtOptions, EffTtTable, TtScratch};
+use recad::util::prng::Rng;
+use recad::util::stats::summarize;
+
+struct Arm {
+    name: String,
+    workers: usize,
+    /// items (lookups or samples) per second
+    throughput: f64,
+    p50_us: f64,
+    p99_us: f64,
+}
+
+fn arm_json(a: &Arm) -> String {
+    format!(
+        "{{\"name\": \"{}\", \"workers\": {}, \"throughput_per_sec\": {:.1}, \
+         \"p50_us\": {:.1}, \"p99_us\": {:.1}}}",
+        a.name, a.workers, a.throughput, a.p50_us, a.p99_us
+    )
+}
+
+/// Time `f` for `reps` iterations x 5 rounds; returns per-iter seconds.
+fn time_iters(mut f: impl FnMut(), reps: usize) -> Vec<f64> {
+    let mut samples = Vec::new();
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        samples.push(t0.elapsed().as_secs_f64() / reps as f64);
+    }
+    samples
+}
+
+fn tt_arm(rows: u64, rank: usize, batch: usize, workers: usize) -> (Arm, Arm) {
+    let shapes = TtShapes::plan(rows, 16, rank);
+    let mut rng = Rng::new(1);
+    let mut t = EffTtTable::new(shapes, EffTtOptions::default(), &mut rng);
+    t.set_pool(recad::exec::ExecPool::new(ExecCfg::with_workers(workers)));
+    let zipf = recad::data::zipf::Zipf::new(rows, 1.2);
+    let idx: Vec<u64> = (0..batch).map(|_| zipf.sample(&mut rng)).collect();
+    let offsets: Vec<usize> = (0..=batch).collect();
+    let mut out = vec![0.0f32; batch * 16];
+    let g = vec![0.05f32; batch * 16];
+    let mut scratch = TtScratch::default();
+    // warmup
+    t.embedding_bag(&idx, &offsets, &mut out, &mut scratch);
+    t.backward_sgd(&idx, &offsets, &g, 0.01, &mut scratch);
+
+    let fwd = time_iters(|| t.embedding_bag(&idx, &offsets, &mut out, &mut scratch), 20);
+    let bwd = time_iters(|| t.backward_sgd(&idx, &offsets, &g, 0.01, &mut scratch), 20);
+    let fs = summarize(&fwd);
+    let bs = summarize(&bwd);
+    let mk = |tag: &str, s: &recad::util::stats::Summary| Arm {
+        name: format!("tt_{tag}_rows{rows}_rank{rank}_batch{batch}"),
+        workers,
+        throughput: batch as f64 / s.p50,
+        p50_us: s.p50 * 1e6,
+        p99_us: s.p99 * 1e6,
+    };
+    (mk("fwd", &fs), mk("bwd", &bs))
+}
+
+fn engine_arm(workers: usize) -> Arm {
+    let scale = 1.0 / 2000.0;
+    let ds = generate(&DatasetCfg {
+        n_normal: 3000,
+        n_attack: 750,
+        vocab: SparseVocab::ieee118(scale),
+        n_profiles: 50,
+        noise_std: 0.005,
+        seed: 7,
+    });
+    let mut cfg = recad::coordinator::engine::EngineCfg::ieee118(scale);
+    cfg.exec = ExecCfg::with_workers(workers);
+    let mut engine = NativeDlrm::new(cfg, &mut Rng::new(1));
+    let mut rng = Rng::new(9);
+    let batches: Vec<_> = EpochIter::new(&ds.samples, 512, &mut rng).take(6).collect();
+    engine.train_step(&batches[0]); // warmup
+    let n: usize = batches.iter().map(|b| b.batch_size).sum();
+    let mut samples = Vec::new();
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        for b in &batches {
+            engine.train_step(b);
+        }
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let s = summarize(&samples);
+    // samples time a whole pass over `batches`; report per-step latency so
+    // every arm in the JSON shares per-iteration units
+    let steps = batches.len() as f64;
+    Arm {
+        name: "engine_train_step_batch512".into(),
+        workers,
+        throughput: n as f64 / s.p50,
+        p50_us: s.p50 * 1e6 / steps,
+        p99_us: s.p99 * 1e6 / steps,
+    }
+}
+
+fn main() {
+    let par = bench_workers();
+    let worker_arms: Vec<usize> = if par > 1 { vec![1, par] } else { vec![1] };
+    let mut arms: Vec<Arm> = Vec::new();
+
+    for &w in &worker_arms {
+        for (rows, rank, batch) in
+            [(100_000u64, 8usize, 4096usize), (100_000, 16, 4096), (1_000_000, 16, 4096)]
+        {
+            let (f, b) = tt_arm(rows, rank, batch, w);
+            println!(
+                "workers={w} rows={rows:>8} rank={rank:>2} batch={batch}: \
+                 fwd {:.0}µs ({:.1} Mlookup/s)  bwd {:.0}µs",
+                f.p50_us,
+                f.throughput / 1e6,
+                b.p50_us
+            );
+            arms.push(f);
+            arms.push(b);
+        }
+        let e = engine_arm(w);
+        println!(
+            "workers={w} engine train_step: {:.0} samples/s (p50 {:.0}µs per step)",
+            e.throughput, e.p50_us
+        );
+        arms.push(e);
+    }
+
+    // speedup headline: engine arm parallel vs serial
+    if worker_arms.len() > 1 {
+        let t1 = arms
+            .iter()
+            .find(|a| a.name.starts_with("engine") && a.workers == 1)
+            .map(|a| a.throughput)
+            .unwrap_or(0.0);
+        let tn = arms
+            .iter()
+            .find(|a| a.name.starts_with("engine") && a.workers == par)
+            .map(|a| a.throughput)
+            .unwrap_or(0.0);
+        if t1 > 0.0 {
+            println!("engine speedup workers={par} vs 1: {:.2}x", tn / t1);
+        }
+    }
+
+    let body: Vec<String> = arms.iter().map(arm_json).collect();
+    let json = format!(
+        "{{\"bench\": \"perf_probe\", \"parallel_workers\": {par}, \"arms\": [\n  {}\n]}}\n",
+        body.join(",\n  ")
+    );
+    std::fs::write("BENCH_perf_probe.json", &json).expect("write BENCH_perf_probe.json");
+    println!("wrote BENCH_perf_probe.json ({} arms)", arms.len());
+}

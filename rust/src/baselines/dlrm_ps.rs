@@ -114,6 +114,7 @@ mod tests {
             top_hidden: vec![8],
             lr: 0.05,
             tt_opts: Default::default(),
+            exec: Default::default(),
         };
         let mut rng = Rng::new(1);
         let arm = DlrmPs::new(cfg, SimPlatform::v100(1), 1000, &mut rng);

@@ -141,6 +141,7 @@ mod tests {
             top_hidden: vec![8],
             lr: 0.05,
             tt_opts: Default::default(),
+            exec: Default::default(),
         };
         let schema = DatasetSchema {
             name: "fae-test",

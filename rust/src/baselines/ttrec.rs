@@ -60,6 +60,7 @@ mod tests {
             top_hidden: vec![8],
             lr: 0.05,
             tt_opts: Default::default(),
+            exec: Default::default(),
         };
         let mut rng = Rng::new(1);
         let mut arm = TtRec::new(cfg, SimPlatform::v100(1), &mut rng);

@@ -7,10 +7,43 @@
 use crate::coordinator::engine::EngineCfg;
 use crate::data::ctr::{Batch, CtrGenerator};
 use crate::data::schema::{self, DatasetSchema};
+use crate::exec::ExecCfg;
 use crate::tt::table::EffTtOptions;
 
 /// Vocabulary scale for bench instantiations.
 pub const BENCH_SCALE: f64 = 1.0 / 1000.0;
+
+/// Env var every bench honors for its parallel arm.
+pub const WORKERS_ENV: &str = "RECAD_WORKERS";
+
+/// Worker count for the parallel arm of a bench: `RECAD_WORKERS` if set
+/// (parsed by `ExecCfg::from_env`; invalid/zero values mean serial), else
+/// all available hardware threads.
+pub fn bench_workers() -> usize {
+    match std::env::var(WORKERS_ENV) {
+        Ok(raw) => {
+            if raw.trim().parse::<usize>().ok().filter(|&w| w >= 1).is_none() {
+                eprintln!(
+                    "warning: {WORKERS_ENV}='{raw}' is not a positive integer; \
+                     running serial (workers=1)"
+                );
+            }
+            ExecCfg::from_env(WORKERS_ENV).workers
+        }
+        Err(_) => ExecCfg::available().workers,
+    }
+}
+
+/// The workers arms a bench should run: always `[1]`, plus the parallel
+/// arm when more than one hardware thread is usable.
+pub fn exec_arms() -> Vec<usize> {
+    let n = bench_workers();
+    if n > 1 {
+        vec![1, n]
+    } else {
+        vec![1]
+    }
+}
 
 /// Scale a schema's vocabularies (min 16 rows each).
 pub fn scaled(s: &DatasetSchema, scale: f64) -> DatasetSchema {
@@ -41,6 +74,7 @@ pub fn engine_for(s: &DatasetSchema, scale: f64, rank: usize) -> EngineCfg {
         top_hidden: vec![64, 32],
         lr: 0.05,
         tt_opts: EffTtOptions::default(),
+        exec: ExecCfg::serial(),
     }
 }
 

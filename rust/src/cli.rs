@@ -79,9 +79,9 @@ USAGE:
 SUBCOMMANDS:
   train        Train the FDIA detector on synthetic IEEE-118 data
                --config file.toml  --epochs N  --batch N  --scale F
-               --no-reorder  --no-reuse  --pipeline
+               --workers N  --no-reorder  --no-reuse  --pipeline
   serve        Stream batch-1 detection over a held-out sample stream
-               --requests N  --threshold F
+               --requests N  --threshold F  --workers N (replica shards)
   gen-data     Generate and summarize the IEEE-118 FDIA dataset
                --normal N  --attack N  --seed N
   runtime      Smoke-run the PJRT artifacts (requires `make artifacts`)

@@ -8,6 +8,7 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::engine::EngineCfg;
+use crate::exec::ExecCfg;
 use crate::tt::table::EffTtOptions;
 
 /// Parsed TOML-subset document: `section.key -> value`.
@@ -138,6 +139,9 @@ pub struct RecAdConfig {
     pub grad_aggregation: bool,
     pub fused_update: bool,
     pub pipeline_lc: usize,
+    /// exec-layer worker count (1 = serial; N-way intra-step parallelism
+    /// is bit-identical to serial by construction).
+    pub workers: usize,
     pub seed: u64,
     pub artifacts_dir: String,
 }
@@ -156,6 +160,7 @@ impl Default for RecAdConfig {
             grad_aggregation: true,
             fused_update: true,
             pipeline_lc: 4,
+            workers: 1,
             seed: 42,
             artifacts_dir: "artifacts".into(),
         }
@@ -177,6 +182,7 @@ impl RecAdConfig {
             grad_aggregation: t.bool_or("tt.grad_aggregation", d.grad_aggregation),
             fused_update: t.bool_or("tt.fused_update", d.fused_update),
             pipeline_lc: t.usize_or("pipeline.lc", d.pipeline_lc),
+            workers: t.usize_or("exec.workers", d.workers).max(1),
             seed: t.num_or("run.seed", d.seed as f64) as u64,
             artifacts_dir: t.str_or("run.artifacts_dir", &d.artifacts_dir).to_string(),
         }
@@ -196,6 +202,7 @@ impl RecAdConfig {
             grad_aggregation: self.grad_aggregation,
             fused_update: self.fused_update,
         };
+        cfg.exec = ExecCfg::with_workers(self.workers);
         cfg
     }
 }
@@ -221,6 +228,9 @@ reorder = false
 
 [pipeline]
 lc = 8
+
+[exec]
+workers = 3
 "#;
         let t = Toml::parse(doc).unwrap();
         let c = RecAdConfig::from_toml(&t);
@@ -232,6 +242,7 @@ lc = 8
         assert!(!c.reorder);
         assert!(c.reuse); // default preserved
         assert_eq!(c.pipeline_lc, 8);
+        assert_eq!(c.workers, 3);
         assert_eq!(c.seed, 7);
     }
 
@@ -252,8 +263,10 @@ lc = 8
     fn engine_cfg_reflects_ablations() {
         let mut c = RecAdConfig::default();
         c.reuse = false;
+        c.workers = 4;
         let e = c.engine_cfg();
         assert!(!e.tt_opts.reuse);
         assert!(e.tt_opts.grad_aggregation);
+        assert_eq!(e.exec.workers, 4);
     }
 }

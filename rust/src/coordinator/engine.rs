@@ -10,13 +10,16 @@
 //! lookups → pairwise-dot interaction → top MLP → BCE.
 
 use crate::data::ctr::Batch;
-use crate::tt::linalg::{axpy, gemm_acc, gemm_at_acc, gemm_bt_acc};
+use crate::exec::par::{par_gemm_at_overwrite, par_gemm_bt_acc, par_row_blocks};
+use crate::exec::{ExecCfg, ExecPool};
+use crate::tt::linalg::{axpy, gemm_acc, gemm_bt_acc};
 use crate::tt::plain::PlainTable;
 use crate::tt::shapes::TtShapes;
 use crate::tt::table::{EffTtOptions, EffTtTable, TtScratch};
 use crate::util::prng::Rng;
 
 /// One dense layer (row-major weights [din, dout]).
+#[derive(Clone)]
 pub struct DenseLayer {
     pub din: usize,
     pub dout: usize,
@@ -32,21 +35,38 @@ impl DenseLayer {
         DenseLayer { din, dout, w, b: vec![0.0; dout] }
     }
 
-    /// out[b, dout] = x[b, din] · W + b.
-    fn forward(&self, x: &[f32], out: &mut [f32], bsz: usize) {
+    /// out[b, dout] = x[b, din] · W + b.  Batch rows sharded over the
+    /// exec pool; bit-identical to serial for any worker count.
+    fn forward(&self, pool: &ExecPool, x: &[f32], out: &mut [f32], bsz: usize) {
+        let (din, dout) = (self.din, self.dout);
         out.fill(0.0);
-        gemm_acc(x, &self.w, out, bsz, self.din, self.dout);
-        for r in 0..bsz {
-            let row = &mut out[r * self.dout..(r + 1) * self.dout];
-            for (o, &bb) in row.iter_mut().zip(&self.b) {
-                *o += bb;
+        if pool.is_serial() || bsz < 2 || bsz * din * dout < crate::exec::par::PAR_MIN_WORK {
+            gemm_acc(x, &self.w, out, bsz, din, dout);
+            for r in 0..bsz {
+                let row = &mut out[r * dout..(r + 1) * dout];
+                for (o, &bb) in row.iter_mut().zip(&self.b) {
+                    *o += bb;
+                }
             }
+            return;
         }
+        par_row_blocks(pool, out, dout, |row0, oblock| {
+            let rows = oblock.len() / dout;
+            gemm_acc(&x[row0 * din..(row0 + rows) * din], &self.w, oblock, rows, din, dout);
+            for orow in oblock.chunks_mut(dout) {
+                for (o, &bb) in orow.iter_mut().zip(&self.b) {
+                    *o += bb;
+                }
+            }
+        });
     }
 
     /// Backward + SGD: given dL/dout, produce dL/dx and update W, b.
+    /// dx is row-sharded; dW is column-sharded (`par_gemm_at_overwrite`),
+    /// both bit-identical to serial; db + the weight update stay serial.
     fn backward_sgd(
         &mut self,
+        pool: &ExecPool,
         x: &[f32],
         dout: &[f32],
         dx: &mut [f32],
@@ -55,10 +75,10 @@ impl DenseLayer {
     ) {
         // dx = dout · Wᵀ
         dx.fill(0.0);
-        gemm_bt_acc(dout, &self.w, dx, bsz, self.dout, self.din);
+        par_gemm_bt_acc(pool, dout, &self.w, dx, bsz, self.dout, self.din);
         // dW = xᵀ · dout ; apply fused with -lr
         let mut dw = vec![0.0; self.din * self.dout];
-        gemm_at_acc(x, dout, &mut dw, self.din, bsz, self.dout);
+        par_gemm_at_overwrite(pool, x, dout, &mut dw, self.din, bsz, self.dout);
         axpy(&mut self.w, -lr, &dw);
         // db = Σ_b dout
         for r in 0..bsz {
@@ -70,7 +90,19 @@ impl DenseLayer {
     }
 }
 
+/// Fall back to a serial pool when the estimated multiply-add volume is
+/// too small for thread spawns to pay off (results are bit-identical
+/// either way; this is purely a perf gate).
+fn work_gated(pool: &ExecPool, work: usize) -> ExecPool {
+    if work < crate::exec::par::PAR_MIN_WORK {
+        ExecPool::serial()
+    } else {
+        *pool
+    }
+}
+
 /// Embedding table slot: the paper's compression policy per table.
+#[derive(Clone)]
 pub enum TableSlot {
     Tt(EffTtTable),
     Plain(PlainTable),
@@ -97,6 +129,9 @@ pub struct EngineCfg {
     pub top_hidden: Vec<usize>,
     pub lr: f32,
     pub tt_opts: EffTtOptions,
+    /// Intra-step parallelism (exec layer); serial by default, and every
+    /// worker count produces bit-identical results.
+    pub exec: ExecCfg,
 }
 
 impl EngineCfg {
@@ -120,6 +155,7 @@ impl EngineCfg {
             top_hidden: vec![64, 32],
             lr: 0.05,
             tt_opts: EffTtOptions::default(),
+            exec: ExecCfg::default(),
         }
     }
 
@@ -138,7 +174,7 @@ impl EngineCfg {
 }
 
 /// Reusable forward/backward scratch (allocation-free steady state).
-#[derive(Default)]
+#[derive(Clone, Default)]
 struct EngineScratch {
     acts_bot: Vec<Vec<f32>>,  // per bot layer output [b, dout]
     acts_top: Vec<Vec<f32>>,  // per top layer output
@@ -152,12 +188,16 @@ struct EngineScratch {
     tt: TtScratch,
 }
 
+#[derive(Clone)]
 pub struct NativeDlrm {
     pub cfg: EngineCfg,
     pub bot: Vec<DenseLayer>,
     pub top: Vec<DenseLayer>,
     pub tables: Vec<TableSlot>,
     scratch: EngineScratch,
+    /// Shared exec pool; threaded into the MLPs, the interaction layer
+    /// and every TT table.
+    pool: ExecPool,
 }
 
 impl NativeDlrm {
@@ -176,19 +216,39 @@ impl NativeDlrm {
         for w in dims.windows(2) {
             top.push(DenseLayer::new(w[0], w[1], rng));
         }
+        let pool = ExecPool::new(cfg.exec);
         let tables = cfg
             .tables
             .iter()
             .map(|&(rows, compressed)| {
                 if compressed {
                     let shapes = TtShapes::plan(rows, cfg.emb_dim, cfg.tt_rank);
-                    TableSlot::Tt(EffTtTable::new(shapes, cfg.tt_opts, rng))
+                    let mut t = EffTtTable::new(shapes, cfg.tt_opts, rng);
+                    t.set_pool(pool);
+                    TableSlot::Tt(t)
                 } else {
                     TableSlot::Plain(PlainTable::new(rows, cfg.emb_dim, rng))
                 }
             })
             .collect();
-        NativeDlrm { cfg, bot, top, tables, scratch: EngineScratch::default() }
+        NativeDlrm { cfg, bot, top, tables, scratch: EngineScratch::default(), pool }
+    }
+
+    /// Re-target the exec layer (e.g. a bench switching workers=1 vs N,
+    /// or serve replicas pinning one worker each).  Results stay
+    /// bit-identical across worker counts by construction.
+    pub fn set_workers(&mut self, workers: usize) {
+        self.cfg.exec = ExecCfg::with_workers(workers);
+        self.pool = ExecPool::new(self.cfg.exec);
+        for t in &mut self.tables {
+            if let TableSlot::Tt(tt) = t {
+                tt.set_pool(self.pool);
+            }
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
     }
 
     /// Total embedding-parameter bytes (Table IV / VI accounting).
@@ -214,6 +274,7 @@ impl NativeDlrm {
         let cfg = &self.cfg;
         let e = cfg.emb_dim;
         let nf = cfg.n_feat();
+        let pool = self.pool;
         let scratch = &mut self.scratch;
 
         // ---- bottom MLP (ReLU after every layer incl. last) -------------
@@ -223,7 +284,7 @@ impl NativeDlrm {
             let input: &[f32] = if li == 0 { &batch.dense } else { &done[li - 1] };
             let out = &mut rest[0];
             out.resize(b * layer.dout, 0.0);
-            layer.forward(input, out, b);
+            layer.forward(&pool, input, out, b);
             for v in out.iter_mut() {
                 *v = v.max(0.0);
             }
@@ -255,13 +316,19 @@ impl NativeDlrm {
             }
         }
 
-        // ---- interaction: gram + lower triangle -------------------------
+        // ---- interaction: gram + lower triangle (row-sharded) -----------
         scratch.gram.resize(b * nf * nf, 0.0);
-        for r in 0..b {
-            let zr = &scratch.z[r * nf * e..(r + 1) * nf * e];
-            let gr = &mut scratch.gram[r * nf * nf..(r + 1) * nf * nf];
-            gr.fill(0.0);
-            gemm_bt_acc(zr, zr, gr, nf, e, nf);
+        {
+            let z = &scratch.z;
+            let pool = work_gated(&pool, b * nf * nf * e);
+            par_row_blocks(&pool, &mut scratch.gram, nf * nf, |r0, gblock| {
+                for (i, gr) in gblock.chunks_mut(nf * nf).enumerate() {
+                    let r = r0 + i;
+                    let zr = &z[r * nf * e..(r + 1) * nf * e];
+                    gr.fill(0.0);
+                    gemm_bt_acc(zr, zr, gr, nf, e, nf);
+                }
+            });
         }
         let ni = cfg.n_inter();
         scratch.x_top.resize(b * (e + ni), 0.0);
@@ -286,7 +353,7 @@ impl NativeDlrm {
             let input: &[f32] = if li == 0 { &scratch.x_top } else { &done[li - 1] };
             let out = &mut rest[0];
             out.resize(b * layer.dout, 0.0);
-            layer.forward(input, out, b);
+            layer.forward(&pool, input, out, b);
             if li + 1 < nl {
                 for v in out.iter_mut() {
                     *v = v.max(0.0);
@@ -313,6 +380,7 @@ impl NativeDlrm {
         let nf = self.cfg.n_feat();
         let ni = self.cfg.n_inter();
         let ns = self.cfg.n_tables();
+        let pool = self.pool;
 
         let mut logits = Vec::new();
         self.forward(batch, &mut logits);
@@ -358,7 +426,7 @@ impl NativeDlrm {
                 }
             }
             dxbuf.resize(b * self.top[li].din, 0.0);
-            self.top[li].backward_sgd(x, &dout, &mut dxbuf, b, lr);
+            self.top[li].backward_sgd(&pool, x, &dout, &mut dxbuf, b, lr);
             std::mem::swap(&mut dout, &mut dxbuf);
         }
         // dout is now d x_top [b, e + ni]
@@ -380,18 +448,25 @@ impl NativeDlrm {
         }
         scratch.dz.resize(b * nf * e, 0.0);
         scratch.dz.fill(0.0);
-        for r in 0..b {
-            let gr = &scratch.dgram[r * nf * nf..(r + 1) * nf * nf];
-            let zr = &scratch.z[r * nf * e..(r + 1) * nf * e];
-            let dzr = &mut scratch.dz[r * nf * e..(r + 1) * nf * e];
-            // sym = G + Gᵀ, then dz = sym · z
-            let mut sym = vec![0.0f32; nf * nf];
-            for i in 0..nf {
-                for j in 0..nf {
-                    sym[i * nf + j] = gr[i * nf + j] + gr[j * nf + i];
+        {
+            let z = &scratch.z;
+            let dgram = &scratch.dgram;
+            let pool = work_gated(&pool, b * nf * nf * e);
+            par_row_blocks(&pool, &mut scratch.dz, nf * e, |r0, dzblock| {
+                // sym = G + Gᵀ, then dz = sym · z — per sample row
+                let mut sym = vec![0.0f32; nf * nf];
+                for (i, dzr) in dzblock.chunks_mut(nf * e).enumerate() {
+                    let r = r0 + i;
+                    let gr = &dgram[r * nf * nf..(r + 1) * nf * nf];
+                    let zr = &z[r * nf * e..(r + 1) * nf * e];
+                    for ii in 0..nf {
+                        for jj in 0..nf {
+                            sym[ii * nf + jj] = gr[ii * nf + jj] + gr[jj * nf + ii];
+                        }
+                    }
+                    gemm_acc(&sym, zr, dzr, nf, nf, e);
                 }
-            }
-            gemm_acc(&sym, zr, dzr, nf, nf, e);
+            });
         }
 
         // ---- embedding backward ------------------------------------------
@@ -443,7 +518,7 @@ impl NativeDlrm {
                 x_owned
             };
             dxbuf.resize(b * self.bot[li].din, 0.0);
-            self.bot[li].backward_sgd(x, &g, &mut dxbuf, b, lr);
+            self.bot[li].backward_sgd(&pool, x, &g, &mut dxbuf, b, lr);
             std::mem::swap(&mut g, &mut dxbuf);
         }
 
@@ -479,6 +554,7 @@ mod tests {
             top_hidden: vec![16],
             lr: 0.1,
             tt_opts: EffTtOptions::default(),
+            exec: ExecCfg::default(),
         }
     }
 

@@ -298,6 +298,7 @@ mod tests {
             top_hidden: vec![16],
             lr: 0.05,
             tt_opts: EffTtOptions::default(),
+            exec: crate::exec::ExecCfg::default(),
         };
         let schema = DatasetSchema {
             name: "pipe-test",

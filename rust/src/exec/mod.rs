@@ -1,0 +1,163 @@
+//! `exec` — the shared parallel execution layer.
+//!
+//! Every hot path in the system (TT contractions, the engine MLPs, the
+//! streaming server, the baseline arms) used to hand-roll its own serial
+//! loops.  This module centralizes intra-step parallelism behind one tiny
+//! abstraction: a work-stealing-free worker pool ([`ExecPool`]) built on
+//! scoped `std::thread` tasks (no dependencies), plus parallel tensor
+//! primitives in [`par`].
+//!
+//! Design rules, in priority order:
+//!
+//! 1. **Determinism** — every primitive produces results *bit-identical*
+//!    to its serial counterpart, for any worker count.  Sharding is always
+//!    by disjoint output blocks whose per-element reduction order matches
+//!    the serial loop; cross-worker reductions, where unavoidable, happen
+//!    serially in worker-id order.  The pipeline's pipeline==sequential
+//!    guarantee and the `workers=N == workers=1` property tests both rest
+//!    on this.
+//! 2. **`workers = 1` is cheap** — the serial configuration never spawns
+//!    a thread, and hot paths reuse caller-provided scratch instead of
+//!    allocating per call.
+//! 3. **Static sharding** — contiguous balanced ranges, no work stealing:
+//!    the workloads here (row-blocked GEMMs, per-distinct-row chains) are
+//!    uniform enough that stealing buys nothing and costs determinism.
+
+pub mod par;
+
+pub use par::{par_gemm_acc, par_gemm_at_overwrite, par_gemm_bt_acc, par_row_blocks};
+
+use std::ops::Range;
+
+/// Parallelism configuration, threaded through `RecAdConfig` → `EngineCfg`
+/// → `NativeDlrm`/`EffTtTable` and the benches' CLI/env arms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecCfg {
+    /// Worker count, >= 1.  1 means fully serial (no threads spawned).
+    pub workers: usize,
+}
+
+impl Default for ExecCfg {
+    fn default() -> Self {
+        ExecCfg { workers: 1 }
+    }
+}
+
+impl ExecCfg {
+    pub fn serial() -> ExecCfg {
+        ExecCfg { workers: 1 }
+    }
+
+    pub fn with_workers(workers: usize) -> ExecCfg {
+        ExecCfg { workers: workers.max(1) }
+    }
+
+    /// One worker per available hardware thread.
+    pub fn available() -> ExecCfg {
+        let w = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ExecCfg { workers: w }
+    }
+
+    /// Read a worker count from an environment variable (benches use
+    /// `RECAD_WORKERS`); unset/invalid falls back to serial.
+    pub fn from_env(var: &str) -> ExecCfg {
+        match std::env::var(var).ok().and_then(|v| v.trim().parse::<usize>().ok()) {
+            Some(w) if w >= 1 => ExecCfg { workers: w },
+            _ => ExecCfg::serial(),
+        }
+    }
+}
+
+/// A work-stealing-free worker pool.  The pool itself is just a target
+/// width; parallel regions are realized as scoped threads per call, so
+/// borrowing inputs/outputs from the caller's stack is safe and there is
+/// no channel/queue machinery to keep consistent.  `Copy` on purpose:
+/// threading it through structs costs nothing.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecPool {
+    workers: usize,
+}
+
+impl Default for ExecPool {
+    fn default() -> Self {
+        ExecPool::serial()
+    }
+}
+
+impl ExecPool {
+    pub fn new(cfg: ExecCfg) -> ExecPool {
+        ExecPool { workers: cfg.workers.max(1) }
+    }
+
+    pub fn serial() -> ExecPool {
+        ExecPool { workers: 1 }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn is_serial(&self) -> bool {
+        self.workers <= 1
+    }
+
+}
+
+/// Split `0..n` into at most `parts` balanced contiguous ranges (the
+/// first `n % parts` ranges get one extra element).  Never returns empty
+/// ranges; returns a single `0..n` range when `n <= 1` or `parts <= 1`.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.max(1).min(n);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_ranges_covers_exactly() {
+        for n in [0usize, 1, 2, 7, 64, 1000] {
+            for parts in [1usize, 2, 3, 8, 1000] {
+                let rs = split_ranges(n, parts);
+                let mut at = 0usize;
+                for r in &rs {
+                    assert_eq!(r.start, at, "gap at n={n} parts={parts}");
+                    assert!(r.end > r.start, "empty range at n={n} parts={parts}");
+                    at = r.end;
+                }
+                assert_eq!(at, n);
+                assert!(rs.len() <= parts.max(1));
+                // balanced: lengths differ by at most one
+                if let (Some(min), Some(max)) = (
+                    rs.iter().map(|r| r.end - r.start).min(),
+                    rs.iter().map(|r| r.end - r.start).max(),
+                ) {
+                    assert!(max - min <= 1);
+                }
+            }
+        }
+    }
+
+
+    #[test]
+    fn cfg_constructors_clamp() {
+        assert_eq!(ExecCfg::with_workers(0).workers, 1);
+        assert!(ExecCfg::available().workers >= 1);
+        assert_eq!(ExecCfg::from_env("RECAD_NO_SUCH_VAR").workers, 1);
+        assert!(ExecPool::new(ExecCfg::with_workers(0)).is_serial());
+    }
+}

@@ -1,0 +1,249 @@
+//! Parallel tensor primitives over [`ExecPool`](crate::exec::ExecPool).
+//!
+//! All primitives are **bit-identical** to their serial counterparts in
+//! `tt::linalg` for any worker count: output is sharded into disjoint
+//! contiguous blocks and each element's reduction order is exactly the
+//! serial loop's.  See the determinism rules in the module docs of
+//! [`crate::exec`].
+
+use std::ops::Range;
+
+use crate::exec::{split_ranges, ExecPool};
+use crate::tt::linalg::{gemm_acc, gemm_at_acc, gemm_at_block, gemm_bt_acc};
+
+/// Below this many multiply-adds a parallel region costs more in thread
+/// spawns than it saves; primitives fall back to the serial kernel.
+pub const PAR_MIN_WORK: usize = 32 * 1024;
+
+/// Shard a `[rows, width]` row-major buffer into at most `workers`
+/// contiguous row blocks and run `f(first_row, block)` on each block in
+/// parallel.  `f` must treat rows independently: the serial pool calls it
+/// once over the whole buffer, parallel pools call it once per block.
+pub fn par_row_blocks<T, F>(pool: &ExecPool, data: &mut [T], width: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(width > 0, "row width must be positive");
+    debug_assert_eq!(data.len() % width, 0);
+    let rows = data.len() / width;
+    if pool.is_serial() || rows < 2 {
+        f(0, data);
+        return;
+    }
+    let ranges = split_ranges(rows, pool.workers());
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest = data;
+        let last = ranges.len() - 1;
+        let mut own: Option<(usize, &mut [T])> = None;
+        for (i, r) in ranges.into_iter().enumerate() {
+            let take = (r.end - r.start) * width;
+            let (block, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            rest = tail;
+            let first_row = r.start;
+            if i == last {
+                // the calling thread works the final shard instead of
+                // idling at the scope join (no spare-thread oversubscribe)
+                own = Some((first_row, block));
+            } else {
+                s.spawn(move || f(first_row, block));
+            }
+        }
+        if let Some((first_row, block)) = own {
+            f(first_row, block);
+        }
+    });
+}
+
+/// C[m,n] += A[m,k] · B[k,n], rows of A/C sharded across workers.
+/// Bit-identical to [`gemm_acc`] (each output row runs the same serial
+/// i-k-j kernel on exactly one worker).
+pub fn par_gemm_acc(
+    pool: &ExecPool,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if pool.is_serial() || m < 2 || m * k * n < PAR_MIN_WORK {
+        gemm_acc(a, b, c, m, k, n);
+        return;
+    }
+    par_row_blocks(pool, c, n, |row0, cblock| {
+        let rows = cblock.len() / n;
+        gemm_acc(&a[row0 * k..(row0 + rows) * k], b, cblock, rows, k, n);
+    });
+}
+
+/// C[m,n] += A[m,k] · Bᵀ (B stored [n,k]), rows of A/C sharded across
+/// workers.  Bit-identical to [`gemm_bt_acc`].
+pub fn par_gemm_bt_acc(
+    pool: &ExecPool,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    if pool.is_serial() || m < 2 || m * k * n < PAR_MIN_WORK {
+        gemm_bt_acc(a, b, c, m, k, n);
+        return;
+    }
+    par_row_blocks(pool, c, n, |row0, cblock| {
+        let rows = cblock.len() / n;
+        gemm_bt_acc(&a[row0 * k..(row0 + rows) * k], b, cblock, rows, k, n);
+    });
+}
+
+/// C[m,n] = Aᵀ·B (A stored [k,m]; overwrite), **columns** of C sharded
+/// across workers — the batch dimension `k` is the long one in the
+/// `dW = xᵀ·dout` use case, and column sharding keeps each element's
+/// k-accumulation order identical to the serial kernel, so the result is
+/// bit-identical to `c.fill(0); gemm_at_acc(a, b, c, m, k, n)`.
+///
+/// Workers accumulate into private column-block buffers (C's columns
+/// interleave in row-major memory, so they cannot be handed out as
+/// disjoint `&mut` slices); the main thread stitches the blocks back —
+/// a pure copy, which cannot perturb values.
+pub fn par_gemm_at_overwrite(
+    pool: &ExecPool,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    if pool.is_serial() || n < 2 || m * k * n < PAR_MIN_WORK {
+        gemm_at_acc(a, b, c, m, k, n);
+        return;
+    }
+    let ranges: Vec<Range<usize>> = split_ranges(n, pool.workers());
+    let mut blocks: Vec<Vec<f32>> =
+        ranges.iter().map(|r| vec![0.0f32; m * (r.end - r.start)]).collect();
+    std::thread::scope(|s| {
+        let last = ranges.len() - 1;
+        let mut own: Option<(usize, usize, &mut Vec<f32>)> = None;
+        for (i, (r, block)) in ranges.iter().zip(blocks.iter_mut()).enumerate() {
+            let (j0, j1) = (r.start, r.end);
+            if i == last {
+                own = Some((j0, j1, block));
+            } else {
+                s.spawn(move || gemm_at_block(a, b, block, m, k, n, j0, j1));
+            }
+        }
+        if let Some((j0, j1, block)) = own {
+            gemm_at_block(a, b, block, m, k, n, j0, j1);
+        }
+    });
+    for (r, block) in ranges.iter().zip(blocks.iter()) {
+        let bw = r.end - r.start;
+        for i in 0..m {
+            c[i * n + r.start..i * n + r.end].copy_from_slice(&block[i * bw..(i + 1) * bw]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::ExecCfg;
+    use crate::util::prng::Rng;
+
+    fn pool(w: usize) -> ExecPool {
+        ExecPool::new(ExecCfg::with_workers(w))
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn par_row_blocks_visits_every_row_once() {
+        let mut data = vec![0u32; 37 * 3];
+        par_row_blocks(&pool(4), &mut data, 3, |row0, block| {
+            for (i, row) in block.chunks_mut(3).enumerate() {
+                for v in row.iter_mut() {
+                    *v += (row0 + i + 1) as u32;
+                }
+            }
+        });
+        for (r, row) in data.chunks(3).enumerate() {
+            assert!(row.iter().all(|&v| v == (r + 1) as u32), "row {r}: {row:?}");
+        }
+    }
+
+    #[test]
+    fn par_gemm_acc_bit_identical_to_serial() {
+        let mut rng = Rng::new(11);
+        // sizes above PAR_MIN_WORK so the parallel path actually runs
+        for (m, k, n) in [(64, 32, 32), (65, 17, 40), (128, 8, 64)] {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let mut c_serial = rand_vec(&mut rng, m * n);
+            let mut c_par = c_serial.clone();
+            gemm_acc(&a, &b, &mut c_serial, m, k, n);
+            par_gemm_acc(&pool(3), &a, &b, &mut c_par, m, k, n);
+            assert_eq!(bits(&c_serial), bits(&c_par), "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn par_gemm_bt_acc_bit_identical_to_serial() {
+        let mut rng = Rng::new(12);
+        for (m, k, n) in [(64, 32, 32), (70, 30, 33)] {
+            let a = rand_vec(&mut rng, m * k);
+            let bt = rand_vec(&mut rng, n * k);
+            let mut c_serial = vec![0.0f32; m * n];
+            let mut c_par = vec![0.0f32; m * n];
+            gemm_bt_acc(&a, &bt, &mut c_serial, m, k, n);
+            par_gemm_bt_acc(&pool(4), &a, &bt, &mut c_par, m, k, n);
+            assert_eq!(bits(&c_serial), bits(&c_par), "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn par_gemm_at_overwrite_bit_identical_to_serial() {
+        let mut rng = Rng::new(13);
+        for (m, k, n) in [(32, 64, 32), (10, 333, 48), (64, 64, 17)] {
+            let at = rand_vec(&mut rng, k * m);
+            let b = rand_vec(&mut rng, k * n);
+            let mut c_serial = vec![0.0f32; m * n];
+            gemm_at_acc(&at, &b, &mut c_serial, m, k, n);
+            let mut c_par = rand_vec(&mut rng, m * n); // junk: must be overwritten
+            par_gemm_at_overwrite(&pool(3), &at, &b, &mut c_par, m, k, n);
+            assert_eq!(bits(&c_serial), bits(&c_par), "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn serial_pool_matches_parallel_pool() {
+        let mut rng = Rng::new(14);
+        let (m, k, n) = (48, 48, 48);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut c1 = vec![0.0f32; m * n];
+        let mut c4 = vec![0.0f32; m * n];
+        par_gemm_acc(&pool(1), &a, &b, &mut c1, m, k, n);
+        par_gemm_acc(&pool(4), &a, &b, &mut c4, m, k, n);
+        assert_eq!(bits(&c1), bits(&c4));
+    }
+}

@@ -7,6 +7,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod metrics;
 pub mod powersys;
 pub mod reorder;

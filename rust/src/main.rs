@@ -63,6 +63,7 @@ fn load_config(cli: &Cli) -> Result<RecAdConfig> {
     cfg.epochs = cli.usize_or("epochs", cfg.epochs)?;
     cfg.batch_size = cli.usize_or("batch", cfg.batch_size)?;
     cfg.scale = cli.f64_or("scale", cfg.scale)?;
+    cfg.workers = cli.usize_or("workers", cfg.workers)?.max(1);
     if cli.flag("no-reorder") {
         cfg.reorder = false;
     }
@@ -155,13 +156,31 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let (report, engine) = trainer::train_ieee118(cfg.engine_cfg(), &ds, 2, 64, cfg.seed);
     print_eval(&report.eval);
     let model_bytes = engine.model_bytes();
+    let mut engine = engine;
+    // Serving shards at the request level (one replica per worker); pin
+    // each replica's intra-step pool to 1 so N replicas don't fan out to
+    // N×N threads.
+    engine.set_workers(1);
     let det = Detector::new(engine, threshold);
-    let server = StreamingServer::start(det, 1, Duration::from_micros(100));
     let stream = &ds.samples[..requests.min(ds.samples.len())];
-    let sr = server.run_stream(stream, model_bytes);
+    let dispatch = Duration::from_micros(100);
+    let sr = if cfg.workers > 1 {
+        // sharded mode: one detector replica per worker, round-robin
+        let mut replicas = Vec::with_capacity(cfg.workers);
+        for _ in 1..cfg.workers {
+            replicas.push(det.clone());
+        }
+        replicas.push(det);
+        let server = StreamingServer::start_sharded(replicas, 1, dispatch);
+        server.run_stream_concurrent(stream, model_bytes, cfg.workers * 2)
+    } else {
+        let server = StreamingServer::start(det, 1, dispatch);
+        server.run_stream(stream, model_bytes)
+    };
     println!(
-        "served {} requests: {:.1} TPS, mean latency {}, p99 {}, model {}",
+        "served {} requests on {} replica(s): {:.1} TPS, mean latency {}, p99 {}, model {}",
         sr.served,
+        sr.replicas,
         sr.tps,
         fmt_dur(sr.mean_latency.as_secs_f64()),
         fmt_dur(sr.p99_latency.as_secs_f64()),

@@ -7,7 +7,9 @@ pub fn auc(probs: &[f32], labels: &[f32]) -> f64 {
     assert_eq!(probs.len(), labels.len());
     let n = probs.len();
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| probs[a].partial_cmp(&probs[b]).unwrap());
+    // total_cmp: NaN scores sort greatest instead of panicking (a NaN
+    // logit would otherwise kill a whole eval run) and ties stay exact.
+    order.sort_by(|&a, &b| probs[a].total_cmp(&probs[b]));
     // midranks over tie groups
     let mut rank = vec![0.0f64; n];
     let mut i = 0usize;
@@ -54,6 +56,19 @@ mod tests {
     #[test]
     fn degenerate_single_class() {
         assert_eq!(auc(&[0.3, 0.7], &[1.0, 1.0]), 0.5);
+    }
+
+    #[test]
+    fn nan_scores_do_not_panic() {
+        // regression: partial_cmp().unwrap() used to panic here
+        let probs = [0.2f32, f32::NAN, 0.8, 0.4, f32::NAN];
+        let labels = [0.0f32, 0.0, 1.0, 1.0, 1.0];
+        let a = auc(&probs, &labels);
+        assert!(a.is_finite(), "{a}");
+        assert!((0.0..=1.0).contains(&a), "{a}");
+        // all-NaN input also stays finite and in range
+        let a = auc(&[f32::NAN; 4], &[1.0, 0.0, 1.0, 0.0]);
+        assert!((0.0..=1.0).contains(&a), "{a}");
     }
 
     #[test]

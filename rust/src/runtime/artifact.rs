@@ -2,11 +2,13 @@
 //! HLO text modules on the PJRT client, and loads the initial parameter
 //! blob exported by `python/compile/aot.py`.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+#[cfg(feature = "pjrt")]
 use crate::runtime::client;
 use crate::util::json::Json;
 
@@ -113,10 +115,12 @@ impl ArtifactMeta {
     }
 }
 
-/// Compiled artifact registry.
+/// Compiled artifact registry.  Without the `pjrt` feature only the
+/// metadata + init-param side is populated (no executables are compiled).
 pub struct Artifacts {
     pub dir: PathBuf,
     pub meta: ArtifactMeta,
+    #[cfg(feature = "pjrt")]
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
     /// Initial parameter leaves (f32, little-endian blob from aot.py).
     pub init_params: Vec<Vec<f32>>,
@@ -131,17 +135,21 @@ impl Artifacts {
             .with_context(|| format!("reading {}/meta.json (run `make artifacts`)", dir.display()))?;
         let meta = ArtifactMeta::parse(&meta_text)?;
 
-        let mut executables = HashMap::new();
-        for name in ["tt_lookup", "dlrm_fwd", "dlrm_train_step"] {
-            let path = dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client()
-                .compile(&comp)
-                .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
-            executables.insert(name.to_string(), exe);
-        }
+        #[cfg(feature = "pjrt")]
+        let executables = {
+            let mut executables = HashMap::new();
+            for name in ["tt_lookup", "dlrm_fwd", "dlrm_train_step"] {
+                let path = dir.join(format!("{name}.hlo.txt"));
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client()
+                    .compile(&comp)
+                    .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+                executables.insert(name.to_string(), exe);
+            }
+            executables
+        };
 
         let blob = std::fs::read(dir.join("init_params.bin")).context("init_params.bin")?;
         let expect = meta.total_param_elems() * 4;
@@ -161,9 +169,14 @@ impl Artifacts {
             init_params.push(v);
         }
 
-        Ok(Artifacts { dir, meta, executables, init_params })
+        #[cfg(feature = "pjrt")]
+        let arts = Artifacts { dir, meta, executables, init_params };
+        #[cfg(not(feature = "pjrt"))]
+        let arts = Artifacts { dir, meta, init_params };
+        Ok(arts)
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
         self.executables
             .get(name)

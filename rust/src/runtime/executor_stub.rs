@@ -1,0 +1,81 @@
+//! API-compatible stand-ins for the PJRT executors, compiled when the
+//! `pjrt` feature is off (the default for offline builds).  Constructors
+//! and entry points return a descriptive error instead of touching PJRT,
+//! so callers keep one code path and fail at runtime only if they
+//! actually try to execute a compiled artifact.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::artifact::Artifacts;
+
+const NO_PJRT: &str = "recad was built without the `pjrt` feature; \
+executing compiled artifacts requires vendoring the xla/PJRT bindings \
+(add the `xla` crate as a dependency) and rebuilding with \
+`--features pjrt`";
+
+/// Stub of the fused train-step executor.
+pub struct DlrmTrainStep<'a> {
+    _arts: &'a Artifacts,
+    pub steps: u64,
+}
+
+impl<'a> DlrmTrainStep<'a> {
+    pub fn new(arts: &'a Artifacts) -> Result<Self> {
+        let _ = arts;
+        bail!(NO_PJRT)
+    }
+
+    pub fn step(&mut self, _dense: &[f32], _idx: &[i32], _labels: &[f32]) -> Result<f32> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn params_host(&self) -> Result<Vec<Vec<f32>>> {
+        bail!(NO_PJRT)
+    }
+}
+
+/// Stub of the serving-path forward executor.
+pub struct DlrmFwd<'a> {
+    _arts: &'a Artifacts,
+}
+
+impl<'a> DlrmFwd<'a> {
+    pub fn with_params(arts: &'a Artifacts, _leaves: &[Vec<f32>]) -> Result<Self> {
+        let _ = arts;
+        bail!(NO_PJRT)
+    }
+
+    pub fn new(arts: &'a Artifacts) -> Result<Self> {
+        let _ = arts;
+        bail!(NO_PJRT)
+    }
+
+    pub fn predict(&self, _dense: &[f32], _idx: &[i32]) -> Result<Vec<f32>> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn predict_padded(&self, _dense: &[f32], _idx: &[i32], _n: usize) -> Result<Vec<f32>> {
+        bail!(NO_PJRT)
+    }
+}
+
+/// Stub of the standalone Eff-TT pooled-lookup executor.
+pub struct TtLookupExe<'a> {
+    _arts: &'a Artifacts,
+}
+
+impl<'a> TtLookupExe<'a> {
+    pub fn new(arts: &'a Artifacts) -> Self {
+        TtLookupExe { _arts: arts }
+    }
+
+    pub fn run(
+        &self,
+        _d1: (&[f32], &[usize]),
+        _d2: (&[f32], &[usize]),
+        _d3: (&[f32], &[usize]),
+        _idx: &[i32],
+    ) -> Result<Vec<f32>> {
+        bail!(NO_PJRT)
+    }
+}

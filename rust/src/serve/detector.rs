@@ -17,6 +17,9 @@ pub struct Verdict {
     pub latency: Duration,
 }
 
+/// `Clone` so a trained detector can be replicated across serving shards
+/// (`StreamingServer::start_sharded`) without retraining.
+#[derive(Clone)]
 pub struct Detector {
     pub engine: NativeDlrm,
     pub threshold: f32,

@@ -1,9 +1,17 @@
-//! Streaming inference server: a worker thread consumes a request channel
-//! and answers with verdicts; the driver measures per-request latency and
+//! Streaming inference server: worker threads consume request channels
+//! and answer with verdicts; the driver measures per-request latency and
 //! sustained TPS (Table VI's configuration: batch size 1, industrial
 //! streaming).  A micro-batching mode (`max_batch > 1`) drains whatever is
 //! queued up to the cap — the standard serving-router trade-off.
+//!
+//! **Sharded mode** (exec refactor): [`StreamingServer::start_sharded`]
+//! runs N detector replicas, one per worker thread, with round-robin
+//! dispatch and merged latency accounting — the serving analogue of the
+//! exec layer's intra-step parallelism, letting a Table VI-style stream
+//! saturate multiple cores.  Replicas are identical trained models, so
+//! verdicts are independent of which shard serves a request.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::thread;
 use std::time::{Duration, Instant};
@@ -21,8 +29,10 @@ struct Request {
 }
 
 pub struct StreamingServer {
-    tx: mpsc::Sender<Request>,
-    handle: Option<thread::JoinHandle<ServerStats>>,
+    txs: Vec<mpsc::Sender<Request>>,
+    handles: Vec<thread::JoinHandle<ServerStats>>,
+    /// Round-robin dispatch cursor.
+    next: AtomicUsize,
 }
 
 struct ServerStats {
@@ -39,50 +49,78 @@ pub struct ServeReport {
     pub p99_latency: Duration,
     /// Peak device memory ≈ model bytes + activation slack.
     pub model_bytes: u64,
+    /// Detector replicas that served the stream.
+    pub replicas: usize,
 }
 
 impl StreamingServer {
-    /// Spawn the serving thread around a trained detector.  `dispatch`
-    /// is charged per inference call (the platform's launch overhead).
-    pub fn start(mut detector: Detector, max_batch: usize, dispatch: Duration) -> StreamingServer {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let handle = thread::spawn(move || {
-            let mut stats = ServerStats { served: 0, hist: LatencyHist::new() };
-            let mut pending: Vec<Request> = Vec::new();
-            loop {
-                // blocking receive for the first request
-                let first = match rx.recv() {
-                    Ok(r) => r,
-                    Err(_) => break,
-                };
-                pending.push(first);
-                // micro-batch: drain whatever is already queued
-                while pending.len() < max_batch {
-                    match rx.try_recv() {
-                        Ok(r) => pending.push(r),
+    /// Spawn a single serving thread around a trained detector.
+    /// `dispatch` is charged per inference call (the platform's launch
+    /// overhead).
+    pub fn start(detector: Detector, max_batch: usize, dispatch: Duration) -> StreamingServer {
+        Self::start_sharded(vec![detector], max_batch, dispatch)
+    }
+
+    /// N-replica sharded serving: one detector per worker thread,
+    /// round-robin request dispatch, latency histograms merged at
+    /// shutdown.  Pass replicas cloned from one trained detector so every
+    /// shard issues identical verdicts.
+    pub fn start_sharded(
+        detectors: Vec<Detector>,
+        max_batch: usize,
+        dispatch: Duration,
+    ) -> StreamingServer {
+        assert!(!detectors.is_empty(), "need at least one detector replica");
+        let mut txs = Vec::with_capacity(detectors.len());
+        let mut handles = Vec::with_capacity(detectors.len());
+        for mut detector in detectors {
+            let (tx, rx) = mpsc::channel::<Request>();
+            let handle = thread::spawn(move || {
+                let mut stats = ServerStats { served: 0, hist: LatencyHist::new() };
+                let mut pending: Vec<Request> = Vec::new();
+                loop {
+                    // blocking receive for the first request
+                    let first = match rx.recv() {
+                        Ok(r) => r,
                         Err(_) => break,
+                    };
+                    pending.push(first);
+                    // micro-batch: drain whatever is already queued
+                    while pending.len() < max_batch {
+                        match rx.try_recv() {
+                            Ok(r) => pending.push(r),
+                            Err(_) => break,
+                        }
+                    }
+                    SimPlatform::charge(dispatch);
+                    let samples: Vec<&Sample> = pending.iter().map(|r| &r.sample).collect();
+                    let probs = detector.score_batch(&samples);
+                    let now = Instant::now();
+                    for (req, p) in pending.drain(..).zip(probs) {
+                        let lat = now.duration_since(req.enqueued);
+                        stats.hist.record(lat);
+                        stats.served += 1;
+                        let _ = req.reply.send((p, lat));
                     }
                 }
-                SimPlatform::charge(dispatch);
-                let samples: Vec<&Sample> = pending.iter().map(|r| &r.sample).collect();
-                let probs = detector.score_batch(&samples);
-                let now = Instant::now();
-                for (req, p) in pending.drain(..).zip(probs) {
-                    let lat = now.duration_since(req.enqueued);
-                    stats.hist.record(lat);
-                    stats.served += 1;
-                    let _ = req.reply.send((p, lat));
-                }
-            }
-            stats
-        });
-        StreamingServer { tx, handle: Some(handle) }
+                stats
+            });
+            txs.push(tx);
+            handles.push(handle);
+        }
+        StreamingServer { txs, handles, next: AtomicUsize::new(0) }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.txs.len()
     }
 
     /// Submit one sample and wait for the verdict (closed-loop client).
+    /// Requests round-robin across replicas.
     pub fn infer(&self, sample: &Sample) -> (f32, Duration) {
+        let shard = self.next.fetch_add(1, Ordering::Relaxed) % self.txs.len();
         let (rtx, rrx) = mpsc::channel();
-        self.tx
+        self.txs[shard]
             .send(Request { sample: sample.clone(), enqueued: Instant::now(), reply: rtx })
             .expect("server alive");
         rrx.recv().expect("server replies")
@@ -90,11 +128,43 @@ impl StreamingServer {
 
     /// Drive a closed-loop stream of samples; returns the Table VI row.
     pub fn run_stream(self, samples: &[Sample], model_bytes: u64) -> ServeReport {
+        let replicas = self.replicas();
         let t0 = Instant::now();
         for s in samples {
             let _ = self.infer(s);
         }
         let wall = t0.elapsed();
+        self.report(wall, model_bytes, replicas)
+    }
+
+    /// Drive the stream from `clients` concurrent closed-loop clients —
+    /// a single closed-loop client can never keep more than one replica
+    /// busy, so this is what the sharded throughput arm measures.
+    pub fn run_stream_concurrent(
+        self,
+        samples: &[Sample],
+        model_bytes: u64,
+        clients: usize,
+    ) -> ServeReport {
+        let replicas = self.replicas();
+        let clients = clients.clamp(1, samples.len().max(1));
+        let chunk = ((samples.len() + clients - 1) / clients).max(1);
+        let t0 = Instant::now();
+        thread::scope(|s| {
+            for part in samples.chunks(chunk) {
+                let srv = &self;
+                s.spawn(move || {
+                    for smp in part {
+                        let _ = srv.infer(smp);
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed();
+        self.report(wall, model_bytes, replicas)
+    }
+
+    fn report(self, wall: Duration, model_bytes: u64, replicas: usize) -> ServeReport {
         let stats = self.finish();
         ServeReport {
             served: stats.served,
@@ -103,12 +173,19 @@ impl StreamingServer {
             mean_latency: Duration::from_nanos(stats.hist.mean_ns() as u64),
             p99_latency: Duration::from_nanos(stats.hist.quantile_ns(0.99) as u64),
             model_bytes,
+            replicas,
         }
     }
 
     fn finish(mut self) -> ServerStats {
-        drop(self.tx);
-        self.handle.take().unwrap().join().unwrap()
+        self.txs.clear(); // drop every sender so the workers exit
+        let mut merged = ServerStats { served: 0, hist: LatencyHist::new() };
+        for h in self.handles.drain(..) {
+            let s = h.join().unwrap();
+            merged.served += s.served;
+            merged.hist.merge(&s.hist);
+        }
+        merged
     }
 }
 
@@ -142,6 +219,7 @@ mod tests {
         let server = StreamingServer::start(detector(), 1, Duration::ZERO);
         let report = server.run_stream(&ss[..25], 1000);
         assert_eq!(report.served, 25);
+        assert_eq!(report.replicas, 1);
         assert!(report.tps > 0.0);
         assert!(report.mean_latency > Duration::ZERO);
         assert!(report.p99_latency >= report.mean_latency / 2);
@@ -158,5 +236,26 @@ mod tests {
         }
         let report = server.run_stream(&ss[5..8], 0);
         assert_eq!(report.served, 8); // 5 singles + 3 streamed
+    }
+
+    #[test]
+    fn sharded_replicas_serve_everything_and_agree() {
+        let ss = samples(16);
+        // verdicts from a single replica…
+        let single = StreamingServer::start(detector(), 1, Duration::ZERO);
+        let want: Vec<f32> = ss[..12].iter().map(|s| single.infer(s).0).collect();
+        let _ = single.run_stream(&ss[12..13], 0);
+        // …must match a 3-replica shard (identical clones, any dispatch)
+        let det = detector();
+        let replicas = vec![det.clone(), det.clone(), det];
+        let sharded = StreamingServer::start_sharded(replicas, 1, Duration::ZERO);
+        assert_eq!(sharded.replicas(), 3);
+        let got: Vec<f32> = ss[..12].iter().map(|s| sharded.infer(s).0).collect();
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-6, "shard changed verdict: {a} vs {b}");
+        }
+        let report = sharded.run_stream_concurrent(&ss[..16], 0, 4);
+        assert_eq!(report.served, 12 + 16);
+        assert_eq!(report.replicas, 3);
     }
 }

@@ -74,6 +74,44 @@ pub fn gemm_bt_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
     }
 }
 
+/// Column-restricted Aᵀ·B: `block[m, j1-j0] += Aᵀ[k,m]ᵀ · B[k, j0..j1]`,
+/// where A is stored [k, m] and `block` is a private dense buffer for the
+/// column range.  The k-loop is outermost and ascending — exactly
+/// [`gemm_at_acc`]'s per-element accumulation order — so stitching column
+/// blocks back together reproduces the serial result bit-for-bit.  This is
+/// the worker kernel behind `exec::par_gemm_at_overwrite`.
+#[inline]
+pub fn gemm_at_block(
+    a: &[f32],
+    b: &[f32],
+    block: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    j0: usize,
+    j1: usize,
+) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert!(j0 < j1 && j1 <= n);
+    let bw = j1 - j0;
+    debug_assert_eq!(block.len(), m * bw);
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n + j0..p * n + j1];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut block[i * bw..(i + 1) * bw];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
 /// Dense dot product with 4-way unrolling.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
@@ -193,6 +231,39 @@ mod tests {
             let mut c1 = vec![0.0; m * n];
             gemm_bt_acc(&a, &bt, &mut c1, m, k, n);
             assert_allclose(&c1, &naive_gemm(&a, &b, m, k, n), 1e-5, 1e-5);
+        });
+    }
+
+    #[test]
+    fn gemm_at_block_stitches_to_full() {
+        check_cases("gemm_at_block", 20, |rng, _| {
+            let (m, k, n) = (
+                rng.usize_below(6) + 2,
+                rng.usize_below(12) + 1,
+                rng.usize_below(8) + 2,
+            );
+            let at = rand_vec(rng, k * m);
+            let b = rand_vec(rng, k * n);
+            let mut full = vec![0.0; m * n];
+            gemm_at_acc(&at, &b, &mut full, m, k, n);
+            // compute in two column blocks and stitch
+            let split = n / 2 + 1;
+            let mut stitched = vec![0.0; m * n];
+            for (j0, j1) in [(0, split), (split, n)] {
+                if j0 >= j1 {
+                    continue;
+                }
+                let bw = j1 - j0;
+                let mut block = vec![0.0; m * bw];
+                gemm_at_block(&at, &b, &mut block, m, k, n, j0, j1);
+                for i in 0..m {
+                    stitched[i * n + j0..i * n + j1]
+                        .copy_from_slice(&block[i * bw..(i + 1) * bw]);
+                }
+            }
+            // bit-identical, not just close
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&full), bits(&stitched));
         });
     }
 

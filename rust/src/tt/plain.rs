@@ -5,6 +5,7 @@
 use crate::tt::linalg::{add_assign, axpy};
 use crate::util::prng::Rng;
 
+#[derive(Clone)]
 pub struct PlainTable {
     pub rows: u64,
     pub dim: usize,

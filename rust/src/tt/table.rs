@@ -23,6 +23,10 @@
 //! ```
 
 
+use std::ops::Range;
+
+use crate::exec::par::{par_row_blocks, PAR_MIN_WORK};
+use crate::exec::{split_ranges, ExecPool};
 use crate::tt::linalg::{add_assign, axpy, gemm_acc, gemm_at_acc, gemm_bt_acc};
 use crate::tt::shapes::TtShapes;
 use crate::util::prng::Rng;
@@ -78,7 +82,7 @@ impl TtStats {
 
 /// Reusable per-batch scratch so the hot path is allocation-free after
 /// warmup (perf pass: §Perf L3).
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct TtScratch {
     /// Reuse Buffer: one [n1·n2, R] partial product per distinct prefix.
     buf: Vec<f32>,
@@ -88,15 +92,31 @@ pub struct TtScratch {
     order: Vec<(u64, u32)>,
     /// per-index slot assignment (parallel to the flat indices).
     index_slot: Vec<u32>,
-    /// row scratch [n1·n2, n3] for hop-2 output.
+    /// distinct-row materialization buffer [uniq_rows, dim].
     row: Vec<f32>,
+    /// ascending distinct row ids of the current batch (sorted sweep).
+    uniq_rows: Vec<u64>,
+    /// indices into `uniq_rows` where a new TT prefix begins — the shard
+    /// boundaries the exec layer may cut at without recomputing a prefix.
+    group_starts: Vec<u32>,
     /// backward: sort-based aggregation workspace ((row, bag) pairs) and
     /// the aggregated per-distinct-row gradient buffer.
     occ: Vec<(u64, u32)>,
     agg_rows: Vec<u64>,
     agg_grads: Vec<f32>,
+    /// backward phase-2 work list: (row, gradient slot).
+    work: Vec<(u64, u32)>,
+    /// backward phase-2 outputs: per-item core-slice gradients (chunked).
+    g1: Vec<f32>,
+    g2: Vec<f32>,
+    g3: Vec<f32>,
+    /// backward chain workspaces for the serial path (parallel workers
+    /// bring their own).
+    chain_p: Vec<f32>,
+    chain_dp: Vec<f32>,
 }
 
+#[derive(Clone)]
 pub struct EffTtTable {
     pub shapes: TtShapes,
     pub opts: EffTtOptions,
@@ -105,6 +125,9 @@ pub struct EffTtTable {
     pub core2: Vec<f32>,
     pub core3: Vec<f32>,
     pub stats: TtStats,
+    /// Shared parallel execution layer; serial by default.  All parallel
+    /// paths are bit-identical to `workers = 1` (see `exec` module docs).
+    pub pool: ExecPool,
 }
 
 impl EffTtTable {
@@ -121,7 +144,20 @@ impl EffTtTable {
         rng.fill_normal(&mut core1, 0.0, sigma);
         rng.fill_normal(&mut core2, 0.0, sigma);
         rng.fill_normal(&mut core3, 0.0, sigma);
-        EffTtTable { shapes, opts, core1, core2, core3, stats: TtStats::default() }
+        EffTtTable {
+            shapes,
+            opts,
+            core1,
+            core2,
+            core3,
+            stats: TtStats::default(),
+            pool: ExecPool::serial(),
+        }
+    }
+
+    /// Attach a worker pool (threaded down from the engine's `ExecCfg`).
+    pub fn set_pool(&mut self, pool: ExecPool) {
+        self.pool = pool;
     }
 
     /// Build from cores in the jax artifact layout:
@@ -162,7 +198,15 @@ impl EffTtTable {
                 }
             }
         }
-        EffTtTable { shapes, opts, core1, core2, core3, stats: TtStats::default() }
+        EffTtTable {
+            shapes,
+            opts,
+            core1,
+            core2,
+            core3,
+            stats: TtStats::default(),
+            pool: ExecPool::serial(),
+        }
     }
 
     /// Export cores back to the jax layout (inverse of `from_jax_cores`).
@@ -315,100 +359,149 @@ impl EffTtTable {
         }
         let plen = s.n[0] * s.n[1] * s.rank;
         if self.opts.reuse {
-            // §Perf L3 iteration 4: sample-level reuse taken to its
-            // conclusion (paper §III-B "intermediate results from each
-            // embedding ROW can be recycled"): sort (index, pos) once,
-            // compute each distinct PREFIX product once (first hop) and
-            // each distinct ROW once (second hop), then scatter-add into
-            // the bags.  Prefix runs are contiguous in sorted order, so
-            // both levels fall out of one sweep.
+            // §Perf L3 iteration 4 + exec refactor: sample-level reuse
+            // (paper §III-B "intermediate results from each embedding ROW
+            // can be recycled") over the shared parallel layer.  One
+            // serial sweep over the sorted (index, pos) pairs dedups rows
+            // and prefixes and records prefix-group boundaries; distinct
+            // rows are then materialized in parallel, sharded ONLY at
+            // group boundaries so each distinct prefix product is still
+            // computed exactly once (TtStats counts identical to serial);
+            // finally rows are scatter-added into bags, sharded by bag.
+            // Every parallel stage is bit-identical to workers=1.
             scratch.order.clear();
             scratch
                 .order
                 .extend(indices.iter().enumerate().map(|(k, &i)| (i, k as u32)));
             scratch.order.sort_unstable();
             scratch.index_slot.resize(indices.len(), 0);
-            // count uniques for buffer sizing
-            let mut uniq_rows = 0usize;
-            let mut uniq_pref = 0usize;
+            scratch.uniq_rows.clear();
+            scratch.group_starts.clear();
             let mut last_row = u64::MAX;
             let mut last_pref = u64::MAX;
-            for &(idx, _) in scratch.order.iter() {
-                if idx != last_row {
-                    uniq_rows += 1;
-                    last_row = idx;
-                    let pf = s.prefix_of(idx);
-                    if pf != last_pref {
-                        uniq_pref += 1;
-                        last_pref = pf;
-                    }
-                }
-            }
-            scratch.buf.resize(plen.max(1), 0.0); // single P (runs are contiguous)
-            scratch.row.resize(uniq_rows * dim, 0.0);
-            let mut row_slot = usize::MAX;
-            last_row = u64::MAX;
-            last_pref = u64::MAX;
-            for oi in 0..scratch.order.len() {
-                let (idx, pos) = scratch.order[oi];
+            for &(idx, pos) in scratch.order.iter() {
                 if idx != last_row {
                     let pf = s.prefix_of(idx);
                     if pf != last_pref {
-                        // split-borrow: buf is scratch.buf, cores are self
-                        let buf = &mut scratch.buf[..plen];
-                        self.prefix_product(pf, buf);
+                        scratch.group_starts.push(scratch.uniq_rows.len() as u32);
                         last_pref = pf;
-                        self.stats.prefix_gemms += 1;
                     }
-                    row_slot = row_slot.wrapping_add(1);
-                    let dst = &mut scratch.row[row_slot * dim..(row_slot + 1) * dim];
-                    dst.fill(0.0);
-                    let i3 = (idx % s.m[2]) as usize;
-                    // [n1·n2, R] · [R, n3] -> row-major [dim]
-                    gemm_acc(
-                        &scratch.buf[..plen],
-                        self.slice3(i3),
-                        dst,
-                        s.n[0] * s.n[1],
-                        s.rank,
-                        s.n[2],
-                    );
-                    self.stats.hop2_gemms += 1;
+                    scratch.uniq_rows.push(idx);
                     last_row = idx;
                 }
-                scratch.index_slot[pos as usize] = row_slot as u32;
+                scratch.index_slot[pos as usize] = (scratch.uniq_rows.len() - 1) as u32;
             }
+            let uniq_rows = scratch.uniq_rows.len();
+            let uniq_pref = scratch.group_starts.len();
+            self.stats.prefix_gemms += uniq_pref as u64;
+            self.stats.hop2_gemms += uniq_rows as u64;
             self.stats.reuse_hits += (indices.len() - uniq_pref) as u64;
-            let _ = uniq_rows;
-            // scatter-add rows into bags
-            out.fill(0.0);
-            for b in 0..bags {
-                let (head, tail) = out.split_at_mut(b * dim);
-                let _ = head;
-                let dst = &mut tail[..dim];
-                for k in offsets[b]..offsets[b + 1] {
-                    let slot = scratch.index_slot[k] as usize;
-                    add_assign(dst, &scratch.row[slot * dim..(slot + 1) * dim]);
-                }
+
+            // materialize each distinct row once (prefix-group sharded);
+            // ~dim*rank multiply-adds per row, so tiny batches stay serial
+            scratch.row.resize(uniq_rows * dim, 0.0);
+            let par_workers = if uniq_rows * dim * s.rank < PAR_MIN_WORK {
+                1
+            } else {
+                self.pool.workers()
+            };
+            let shards = shard_by_groups(&scratch.group_starts, uniq_rows, par_workers);
+            let table = &*self;
+            let rows_list = &scratch.uniq_rows[..];
+            if shards.len() <= 1 {
+                fill_rows(
+                    table,
+                    rows_list,
+                    0..uniq_rows,
+                    &mut scratch.row[..],
+                    plen,
+                    dim,
+                    &mut scratch.buf,
+                );
+            } else {
+                std::thread::scope(|sc| {
+                    let mut rest = &mut scratch.row[..];
+                    let last = shards.len() - 1;
+                    let mut own: Option<(Range<usize>, &mut [f32])> = None;
+                    for (i, r) in shards.into_iter().enumerate() {
+                        let take = (r.end - r.start) * dim;
+                        let (block, tail) = std::mem::take(&mut rest).split_at_mut(take);
+                        rest = tail;
+                        if i == last {
+                            own = Some((r, block));
+                        } else {
+                            sc.spawn(move || {
+                                let mut p = Vec::new();
+                                fill_rows(table, rows_list, r, block, plen, dim, &mut p)
+                            });
+                        }
+                    }
+                    if let Some((r, block)) = own {
+                        let mut p = Vec::new();
+                        fill_rows(table, rows_list, r, block, plen, dim, &mut p);
+                    }
+                });
             }
+
+            // scatter-add distinct rows into bags (bag-sharded; each
+            // bag's accumulation order is exactly the serial one)
+            let rowbuf = &scratch.row[..];
+            let slots = &scratch.index_slot[..];
+            let scatter_pool = if indices.len() * dim < PAR_MIN_WORK {
+                ExecPool::serial()
+            } else {
+                self.pool
+            };
+            par_row_blocks(&scatter_pool, out, dim, |b0, oblock| {
+                for (bi, dst) in oblock.chunks_mut(dim).enumerate() {
+                    let b = b0 + bi;
+                    dst.fill(0.0);
+                    for k in offsets[b]..offsets[b + 1] {
+                        let slot = slots[k] as usize;
+                        add_assign(dst, &rowbuf[slot * dim..(slot + 1) * dim]);
+                    }
+                }
+            });
         } else {
-            // TT-Rec path: recompute everything per occurrence
+            // TT-Rec path: recompute everything per occurrence; bags are
+            // independent, so the pooling loop shards across bags.
             self.prepare_prefixes(indices, scratch);
-            scratch.row.resize(dim, 0.0);
-            let mut row_tmp = std::mem::take(&mut scratch.row);
-            out.fill(0.0);
-            for b in 0..bags {
-                let dst = &mut out[b * dim..(b + 1) * dim];
-                for k in offsets[b]..offsets[b + 1] {
-                    let idx = indices[k];
-                    let slot = scratch.index_slot[k] as usize;
-                    let p = &scratch.buf[slot * plen..(slot + 1) * plen];
-                    let i3 = (idx % s.m[2]) as usize;
-                    self.row_into(p, i3, dst, &mut row_tmp);
-                    self.stats.hop2_gemms += 1;
+            self.stats.hop2_gemms += indices.len() as u64;
+            let m3 = s.m[2];
+            if self.pool.is_serial() || indices.len() * dim * s.rank < PAR_MIN_WORK {
+                // allocation-free steady state: reuse the scratch row
+                scratch.row.resize(dim, 0.0);
+                let mut row_tmp = std::mem::take(&mut scratch.row);
+                out.fill(0.0);
+                for b in 0..bags {
+                    let dst = &mut out[b * dim..(b + 1) * dim];
+                    for k in offsets[b]..offsets[b + 1] {
+                        let idx = indices[k];
+                        let slot = scratch.index_slot[k] as usize;
+                        let p = &scratch.buf[slot * plen..(slot + 1) * plen];
+                        self.row_into(p, (idx % m3) as usize, dst, &mut row_tmp);
+                    }
                 }
+                scratch.row = row_tmp;
+            } else {
+                let table = &*self;
+                let buf = &scratch.buf[..];
+                let slots = &scratch.index_slot[..];
+                par_row_blocks(&self.pool, out, dim, |b0, oblock| {
+                    // one row buffer per block, amortized across its bags
+                    let mut row_tmp = vec![0.0f32; dim];
+                    for (bi, dst) in oblock.chunks_mut(dim).enumerate() {
+                        let b = b0 + bi;
+                        dst.fill(0.0);
+                        for k in offsets[b]..offsets[b + 1] {
+                            let idx = indices[k];
+                            let slot = slots[k] as usize;
+                            let p = &buf[slot * plen..(slot + 1) * plen];
+                            table.row_into(p, (idx % m3) as usize, dst, &mut row_tmp);
+                        }
+                    }
+                });
             }
-            scratch.row = row_tmp;
         }
     }
 
@@ -473,12 +566,43 @@ impl EffTtTable {
                 (scratch.occ.len() - scratch.agg_rows.len()) as u64;
         }
 
-        // ---- step 2: Eq. 8 chain products per work item ------------------
+        // ---- step 2: Eq. 8 chain products per work item (exec-sharded) --
+        // §Perf L3 iteration 3 + exec refactor: the aggregated work list
+        // is sorted by row, so rows sharing a TT prefix are adjacent and
+        // each worker recomputes P only on prefix change within its shard.
+        // Chains are evaluated against the cores as of their CHUNK's start
+        // for every worker count — the compute phase is read-only, the
+        // apply phase runs serially in work order, and chunk boundaries
+        // are a worker-independent constant — so `workers = N` is
+        // bit-identical to `workers = 1`, preserving the
+        // pipeline==sequential guarantee.
         let (n1, n2, n3) = (s.n[0], s.n[1], s.n[2]);
         let r = s.rank;
-        let plen = n1 * n2 * r;
+        let (l1, l2, l3) = (n1 * r, r * n2 * r, r * n3);
 
-        // When the fused update is off, accumulate into shadow grads first.
+        if self.opts.grad_aggregation {
+            scratch.work.clear();
+            scratch
+                .work
+                .extend(scratch.agg_rows.iter().enumerate().map(|(w, &row)| (row, w as u32)));
+        }
+        let n_work = if self.opts.grad_aggregation {
+            scratch.work.len()
+        } else {
+            scratch.occ.len()
+        };
+        // Gradients are staged per CHUNK (not per batch), so the staging
+        // buffers stay bounded regardless of batch size — the fused path
+        // keeps its no-full-materialization property.  The chunk size is a
+        // constant (worker-count independent), so chunk boundaries — and
+        // therefore results — are identical for every worker count.
+        const BACKWARD_CHUNK: usize = 1024;
+        let chunk_cap = n_work.min(BACKWARD_CHUNK);
+        scratch.g1.resize(chunk_cap * l1, 0.0);
+        scratch.g2.resize(chunk_cap * l2, 0.0);
+        scratch.g3.resize(chunk_cap * l3, 0.0);
+
+        // Non-fused arm: full-core shadow grads (TT-Rec's extra traffic).
         let mut shadow: Option<(Vec<f32>, Vec<f32>, Vec<f32>)> = if !self.opts.fused_update {
             Some((
                 vec![0.0; self.core1.len()],
@@ -489,91 +613,116 @@ impl EffTtTable {
             None
         };
 
-        let mut p = vec![0.0; plen];
-        let mut dslice3 = vec![0.0; r * n3];
-        let mut dp = vec![0.0; plen];
-        let mut dslice2 = vec![0.0; r * n2 * r];
-        let mut dslice1 = vec![0.0; n1 * r];
-        // work items: aggregated slots, or raw occurrences (TT-Rec arm)
-        let n_work = if self.opts.grad_aggregation {
-            scratch.agg_rows.len()
-        } else {
-            scratch.occ.len()
-        };
-        // Â§Perf L3 iteration 3: the aggregated work list is sorted by row,
-        // so rows sharing a TT prefix are adjacent â the Reuse-Buffer idea
-        // applied to BACKWARD: recompute P only on prefix change.  (In the
-        // fused path this also means every grad in a same-prefix run is
-        // evaluated at the same parameter point â closer to textbook SGD
-        // than per-item recomputation.)
-        let mut cached_prefix = u64::MAX;
-        for w in 0..n_work {
-            let (row, ge): (u64, &[f32]) = if self.opts.grad_aggregation {
-                (
-                    scratch.agg_rows[w],
-                    &scratch.agg_grads[w * dim..(w + 1) * dim],
-                )
-            } else {
-                let (row, b) = scratch.occ[w];
-                (row, &grad_out[b as usize * dim..(b as usize + 1) * dim])
-            };
-            let (i1u, i2u, i3u) = s.tt_indices(row);
-            let (i1, i2, i3) = (i1u as usize, i2u as usize, i3u as usize);
-            let prefix = s.prefix_of(row);
-            if prefix != cached_prefix {
-                self.prefix_product(prefix, &mut p);
-                cached_prefix = prefix;
-            }
-
-            // dD3[:,i3] += Pᵀ [R, n1n2] · gE [n1n2, n3]
-            dslice3.fill(0.0);
-            gemm_at_acc(&p, ge, &mut dslice3, r, n1 * n2, n3);
-
-            // dP = gE [n1n2, n3] · D3-sliceᵀ [n3, R]
-            dp.fill(0.0);
-            gemm_bt_acc(ge, self.slice3(i3), &mut dp, n1 * n2, n3, r);
-
-            // dD2[:,i2] += D1-sliceᵀ [R, n1] · dP(view [n1, n2R])
-            dslice2.fill(0.0);
-            gemm_at_acc(self.slice1(i1), &dp, &mut dslice2, r, n1, n2 * r);
-
-            // dD1[i1] += dP [n1, n2R] · D2-sliceᵀ [n2R, R]
-            dslice1.fill(0.0);
-            gemm_bt_acc(&dp, self.slice2(i2), &mut dslice1, n1, n2 * r, r);
-
-            self.stats.backward_chains += 1;
-
-            match &mut shadow {
-                Some((g1, g2, g3)) => {
-                    let l1 = n1 * r;
-                    add_assign(&mut g1[i1 * l1..(i1 + 1) * l1], &dslice1);
-                    let l2 = r * n2 * r;
-                    add_assign(&mut g2[i2 * l2..(i2 + 1) * l2], &dslice2);
-                    let l3 = r * n3;
-                    add_assign(&mut g3[i3 * l3..(i3 + 1) * l3], &dslice3);
-                }
-                None => {
-                    // fused: apply immediately
-                    let l1 = n1 * r;
-                    axpy(&mut self.core1[i1 * l1..(i1 + 1) * l1], -lr, &dslice1);
-                    let l2 = r * n2 * r;
-                    axpy(&mut self.core2[i2 * l2..(i2 + 1) * l2], -lr, &dslice2);
-                    let l3 = r * n3;
-                    axpy(&mut self.core3[i3 * l3..(i3 + 1) * l3], -lr, &dslice3);
+        let mut cs = 0usize;
+        while cs < n_work {
+            let ce = (cs + BACKWARD_CHUNK).min(n_work);
+            let clen = ce - cs;
+            // ---- compute the chunk's chains (read-only, exec-sharded) ---
+            {
+                let table = &*self;
+                let (work, grads): (&[(u64, u32)], &[f32]) = if table.opts.grad_aggregation {
+                    (&scratch.work[..], &scratch.agg_grads[..])
+                } else {
+                    (&scratch.occ[..], grad_out)
+                };
+                // ~3 slice GEMMs per item (~dim*rank madds each)
+                let shards = if table.pool.is_serial() || clen * dim * r < PAR_MIN_WORK {
+                    vec![cs..ce]
+                } else {
+                    split_ranges(clen, table.pool.workers())
+                        .into_iter()
+                        .map(|r| cs + r.start..cs + r.end)
+                        .collect()
+                };
+                if shards.len() <= 1 {
+                    compute_chains(
+                        table,
+                        work,
+                        grads,
+                        dim,
+                        cs..ce,
+                        &mut scratch.g1[..clen * l1],
+                        &mut scratch.g2[..clen * l2],
+                        &mut scratch.g3[..clen * l3],
+                        &mut scratch.chain_p,
+                        &mut scratch.chain_dp,
+                    );
+                } else {
+                    std::thread::scope(|sc| {
+                        let mut r1 = &mut scratch.g1[..clen * l1];
+                        let mut r2 = &mut scratch.g2[..clen * l2];
+                        let mut r3 = &mut scratch.g3[..clen * l3];
+                        let last = shards.len() - 1;
+                        let mut own = None;
+                        for (i, rg) in shards.into_iter().enumerate() {
+                            let len = rg.end - rg.start;
+                            let (b1, t1) = std::mem::take(&mut r1).split_at_mut(len * l1);
+                            r1 = t1;
+                            let (b2, t2) = std::mem::take(&mut r2).split_at_mut(len * l2);
+                            r2 = t2;
+                            let (b3, t3) = std::mem::take(&mut r3).split_at_mut(len * l3);
+                            r3 = t3;
+                            if i == last {
+                                // calling thread works the final shard
+                                own = Some((rg, b1, b2, b3));
+                            } else {
+                                sc.spawn(move || {
+                                    let (mut p, mut dp) = (Vec::new(), Vec::new());
+                                    compute_chains(
+                                        table, work, grads, dim, rg, b1, b2, b3, &mut p,
+                                        &mut dp,
+                                    )
+                                });
+                            }
+                        }
+                        if let Some((rg, b1, b2, b3)) = own {
+                            let (mut p, mut dp) = (Vec::new(), Vec::new());
+                            compute_chains(
+                                table, work, grads, dim, rg, b1, b2, b3, &mut p, &mut dp,
+                            );
+                        }
+                    });
                 }
             }
+
+            // ---- apply the chunk serially, in work order ----------------
+            for w in cs..ce {
+                let row = if self.opts.grad_aggregation {
+                    scratch.work[w].0
+                } else {
+                    scratch.occ[w].0
+                };
+                let (i1u, i2u, i3u) = s.tt_indices(row);
+                let (i1, i2, i3) = (i1u as usize, i2u as usize, i3u as usize);
+                let wi = w - cs;
+                let g1 = &scratch.g1[wi * l1..(wi + 1) * l1];
+                let g2 = &scratch.g2[wi * l2..(wi + 1) * l2];
+                let g3 = &scratch.g3[wi * l3..(wi + 1) * l3];
+                match &mut shadow {
+                    None => {
+                        // fused: straight into the cores (paper §III-D)
+                        axpy(&mut self.core1[i1 * l1..(i1 + 1) * l1], -lr, g1);
+                        axpy(&mut self.core2[i2 * l2..(i2 + 1) * l2], -lr, g2);
+                        axpy(&mut self.core3[i3 * l3..(i3 + 1) * l3], -lr, g3);
+                    }
+                    Some((sh1, sh2, sh3)) => {
+                        add_assign(&mut sh1[i1 * l1..(i1 + 1) * l1], g1);
+                        add_assign(&mut sh2[i2 * l2..(i2 + 1) * l2], g2);
+                        add_assign(&mut sh3[i3 * l3..(i3 + 1) * l3], g3);
+                    }
+                }
+            }
+            cs = ce;
         }
-        if let Some((g1, g2, g3)) = shadow {
-            // TT-Rec-style deferred apply: an extra full-core pass.
-            axpy(&mut self.core1, -lr, &g1);
-            axpy(&mut self.core2, -lr, &g2);
-            axpy(&mut self.core3, -lr, &g3);
+        self.stats.backward_chains += n_work as u64;
+
+        if let Some((sh1, sh2, sh3)) = shadow {
+            // TT-Rec-style deferred apply: the extra full-core pass the
+            // paper's fused update removes.
+            axpy(&mut self.core1, -lr, &sh1);
+            axpy(&mut self.core2, -lr, &sh2);
+            axpy(&mut self.core3, -lr, &sh3);
         }
-        // IMPORTANT (fused path): applying a slice update can affect later
-        // chain products only if the same core slice is revisited; the
-        // paper accepts this Hogwild-style race within a batch (grads are
-        // already aggregated per-row, so each (i1,i2,i3) triple is visited
-        // once — only *shared* slices between different rows see it).
     }
 
     /// Materialize the full padded table (test-only; O(M·N)).
@@ -591,6 +740,125 @@ impl EffTtTable {
         }
         out
     }
+}
+
+/// Forward hop-2 worker: materialize the distinct rows `range` (indices
+/// into `rows`) into `out_block`, recomputing the shared prefix product
+/// only on prefix change.  Shard boundaries are prefix-group starts, so
+/// across all workers every distinct prefix is computed exactly once —
+/// the Reuse-Buffer accounting is independent of the worker count.
+fn fill_rows(
+    t: &EffTtTable,
+    rows: &[u64],
+    range: Range<usize>,
+    out_block: &mut [f32],
+    plen: usize,
+    dim: usize,
+    p: &mut Vec<f32>,
+) {
+    let s = &t.shapes;
+    debug_assert_eq!(out_block.len(), (range.end - range.start) * dim);
+    // `p` is caller-provided so the serial path can reuse TtScratch
+    // storage (allocation-free steady state); parallel workers hand in
+    // their own empty vec.
+    p.resize(plen, 0.0);
+    let mut last_pref = u64::MAX;
+    for (bi, ri) in range.enumerate() {
+        let idx = rows[ri];
+        let pf = s.prefix_of(idx);
+        if pf != last_pref {
+            t.prefix_product(pf, &mut p[..plen]);
+            last_pref = pf;
+        }
+        let dst = &mut out_block[bi * dim..(bi + 1) * dim];
+        dst.fill(0.0);
+        // [n1·n2, R] · [R, n3] -> row-major [dim]
+        gemm_acc(
+            &p[..plen],
+            t.slice3((idx % s.m[2]) as usize),
+            dst,
+            s.n[0] * s.n[1],
+            s.rank,
+            s.n[2],
+        );
+    }
+}
+
+/// Backward phase-2 worker: Eq. 8 chain products for work items `range`,
+/// writing per-item core-slice gradients into `g1/g2/g3` (blocks indexed
+/// from the start of `range`).  Reads the cores only; the caller applies
+/// updates afterwards, serially, so results are worker-count-invariant.
+#[allow(clippy::too_many_arguments)]
+fn compute_chains(
+    t: &EffTtTable,
+    work: &[(u64, u32)],
+    grads: &[f32],
+    dim: usize,
+    range: Range<usize>,
+    g1: &mut [f32],
+    g2: &mut [f32],
+    g3: &mut [f32],
+    p: &mut Vec<f32>,
+    dp: &mut Vec<f32>,
+) {
+    let s = &t.shapes;
+    let (n1, n2, n3) = (s.n[0], s.n[1], s.n[2]);
+    let r = s.rank;
+    let plen = n1 * n2 * r;
+    let (l1, l2, l3) = (n1 * r, r * n2 * r, r * n3);
+    // workspaces are caller-provided so the serial path reuses TtScratch
+    // storage (allocation-free steady state)
+    p.resize(plen, 0.0);
+    dp.resize(plen, 0.0);
+    let mut cached_prefix = u64::MAX;
+    for (wi, w) in range.enumerate() {
+        let (row, gslot) = work[w];
+        let ge = &grads[gslot as usize * dim..(gslot as usize + 1) * dim];
+        let (i1u, i2u, i3u) = s.tt_indices(row);
+        let (i1, i2, i3) = (i1u as usize, i2u as usize, i3u as usize);
+        let prefix = s.prefix_of(row);
+        if prefix != cached_prefix {
+            t.prefix_product(prefix, &mut p[..plen]);
+            cached_prefix = prefix;
+        }
+        // dD3[:,i3] = Pᵀ [R, n1n2] · gE [n1n2, n3]
+        let d3 = &mut g3[wi * l3..(wi + 1) * l3];
+        d3.fill(0.0);
+        gemm_at_acc(&p[..plen], ge, d3, r, n1 * n2, n3);
+        // dP = gE [n1n2, n3] · D3-sliceᵀ [n3, R]
+        dp[..plen].fill(0.0);
+        gemm_bt_acc(ge, t.slice3(i3), &mut dp[..plen], n1 * n2, n3, r);
+        // dD2[:,i2] = D1-sliceᵀ [R, n1] · dP(view [n1, n2R])
+        let d2 = &mut g2[wi * l2..(wi + 1) * l2];
+        d2.fill(0.0);
+        gemm_at_acc(t.slice1(i1), &dp[..plen], d2, r, n1, n2 * r);
+        // dD1[i1] = dP [n1, n2R] · D2-sliceᵀ [n2R, R]
+        let d1 = &mut g1[wi * l1..(wi + 1) * l1];
+        d1.fill(0.0);
+        gemm_bt_acc(&dp[..plen], t.slice2(i2), d1, n1, n2 * r, r);
+    }
+}
+
+/// Split `n_rows` distinct rows into at most `workers` contiguous shards
+/// whose boundaries are prefix-group starts (`group_starts`, ascending,
+/// first element 0) — cutting anywhere else would recompute a shared
+/// prefix and perturb the `TtStats` accounting.
+fn shard_by_groups(group_starts: &[u32], n_rows: usize, workers: usize) -> Vec<Range<usize>> {
+    if workers <= 1 || group_starts.len() <= 1 || n_rows < 64 {
+        return vec![0..n_rows];
+    }
+    let mut cuts: Vec<usize> = vec![0];
+    for w in 1..workers {
+        let target = n_rows * w / workers;
+        let gi = group_starts.partition_point(|&g| (g as usize) < target);
+        let cut = group_starts.get(gi).map(|&g| g as usize).unwrap_or(n_rows);
+        let last = *cuts.last().unwrap();
+        if cut > last && cut < n_rows {
+            cuts.push(cut);
+        }
+    }
+    cuts.push(n_rows);
+    cuts.windows(2).map(|w| w[0]..w[1]).collect()
 }
 
 #[cfg(test)]
@@ -706,6 +974,7 @@ mod tests {
             core2: t0.core2.clone(),
             core3: t0.core3.clone(),
             stats: TtStats::default(),
+            pool: ExecPool::serial(),
         };
         let mut out = vec![0.0; 16];
         let mut scr = TtScratch::default();
@@ -722,6 +991,7 @@ mod tests {
                 core2: t0.core2.clone(),
                 core3: t0.core3.clone(),
                 stats: TtStats::default(),
+                pool: ExecPool::serial(),
             };
             tp.core1[probe] += eps;
             let fp = loss(&mut tp);
@@ -737,6 +1007,7 @@ mod tests {
                 core2: t0.core2.clone(),
                 core3: t0.core3.clone(),
                 stats: TtStats::default(),
+                pool: ExecPool::serial(),
             };
             ta.backward_sgd(&idx, &offsets, &g, 1.0, &mut scr);
             let analytic = t0.core1[probe] - ta.core1[probe]; // lr=1 ⇒ grad

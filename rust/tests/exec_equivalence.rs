@@ -1,0 +1,156 @@
+//! Exec-layer equivalence properties: running the engine or the Eff-TT
+//! table with `workers = N` must be **bit-identical** to `workers = 1`.
+//! The exec layer shards work only along disjoint output blocks whose
+//! per-element reduction order matches the serial loop, and applies every
+//! cross-item update serially in a fixed order — these tests pin that
+//! contract across random shapes, batches and optimization switches.
+
+use recad::coordinator::engine::{EngineCfg, NativeDlrm, TableSlot};
+use recad::data::ctr::Batch;
+use recad::exec::ExecCfg;
+use recad::exec::ExecPool;
+use recad::tt::shapes::TtShapes;
+use recad::tt::table::{EffTtOptions, EffTtTable, TtScratch};
+use recad::util::prng::Rng;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Batch/layer sizes are chosen to clear the exec layer's PAR_MIN_WORK
+/// gates, so `workers > 1` really does take the parallel code paths.
+fn tiny_cfg(workers: usize) -> EngineCfg {
+    EngineCfg {
+        dense_dim: 4,
+        emb_dim: 8,
+        tables: vec![(900, true), (300, true), (40, false)],
+        tt_rank: 4,
+        bot_hidden: vec![32],
+        top_hidden: vec![32],
+        lr: 0.05,
+        tt_opts: EffTtOptions::default(),
+        exec: ExecCfg::with_workers(workers),
+    }
+}
+
+fn tiny_batch(cfg: &EngineCfg, b: usize, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let ns = cfg.tables.len();
+    let mut dense = vec![0.0; b * cfg.dense_dim];
+    rng.fill_normal(&mut dense, 0.0, 1.0);
+    // skewed indices so prefixes and rows repeat (exercises the dedup,
+    // aggregation and shard-boundary paths)
+    let sparse: Vec<u64> = (0..b * ns)
+        .map(|i| rng.below(cfg.tables[i % ns].0.min(60)))
+        .collect();
+    let labels: Vec<f32> = (0..b).map(|_| if rng.coin(0.5) { 1.0 } else { 0.0 }).collect();
+    Batch { dense, sparse, labels, batch_size: b }
+}
+
+/// Train the same model with different worker counts; loss trajectories
+/// and every parameter must match bit-for-bit.
+#[test]
+fn engine_training_bit_identical_across_workers() {
+    for seed in [1u64, 7, 23] {
+        let run = |workers: usize| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+            let cfg = tiny_cfg(workers);
+            let mut m = NativeDlrm::new(cfg.clone(), &mut Rng::new(seed));
+            assert_eq!(m.workers(), workers);
+            let mut losses = Vec::new();
+            for step in 0..4u64 {
+                let batch = tiny_batch(&cfg, 512, seed ^ (step + 1));
+                losses.push(m.train_step(&batch));
+            }
+            let w0 = m.bot[0].w.clone();
+            let cores = match &m.tables[0] {
+                TableSlot::Tt(t) => t.core2.clone(),
+                TableSlot::Plain(_) => unreachable!("slot 0 is TT"),
+            };
+            (losses, w0, cores)
+        };
+        let (l1, w1, c1) = run(1);
+        for workers in [2usize, 4] {
+            let (ln, wn, cn) = run(workers);
+            assert_eq!(bits(&l1), bits(&ln), "loss curve diverged (workers={workers}, seed={seed})");
+            assert_eq!(bits(&w1), bits(&wn), "MLP weights diverged (workers={workers})");
+            assert_eq!(bits(&c1), bits(&cn), "TT cores diverged (workers={workers})");
+        }
+    }
+}
+
+/// Forward outputs, post-backward cores AND TtStats counters must be
+/// invariant to the worker count, across random shapes and both the
+/// Eff-TT and TT-Rec-baseline option sets.
+#[test]
+fn tt_table_forward_backward_bit_identical_across_workers() {
+    let mut meta = Rng::new(0xE8EC);
+    for case in 0..10 {
+        let rows = meta.below(3000) + 700;
+        let dim = 16usize;
+        let rank = [4usize, 8][meta.usize_below(2)];
+        let opts = if case % 3 == 2 {
+            EffTtOptions::ttrec_baseline()
+        } else {
+            EffTtOptions::default()
+        };
+        let seed = meta.next_u64();
+        let shapes = TtShapes::plan(rows, dim, rank);
+
+        // big enough that fill/scatter/backward clear PAR_MIN_WORK and the
+        // parallel shards genuinely run when workers > 1
+        let n_idx = meta.usize_below(1024) + 3072;
+        let hot = rows.min(600); // heavy repetition => shared prefixes
+        let idx: Vec<u64> = (0..n_idx).map(|_| meta.below(hot)).collect();
+        let bag = 4usize;
+        let bags = n_idx / bag;
+        let used = bags * bag;
+        let offsets: Vec<usize> = (0..=bags).map(|b| b * bag).collect();
+        let grad: Vec<f32> = (0..bags * dim).map(|i| (i as f32 * 0.13).sin()).collect();
+
+        let run = |workers: usize| -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, u64, u64, u64) {
+            let mut t = EffTtTable::new(shapes, opts, &mut Rng::new(seed));
+            t.set_pool(ExecPool::new(ExecCfg::with_workers(workers)));
+            let mut out = vec![0.0f32; bags * dim];
+            let mut scratch = TtScratch::default();
+            t.embedding_bag(&idx[..used], &offsets, &mut out, &mut scratch);
+            t.backward_sgd(&idx[..used], &offsets, &grad, 0.05, &mut scratch);
+            (
+                out,
+                t.core1,
+                t.core2,
+                t.core3,
+                t.stats.prefix_gemms,
+                t.stats.hop2_gemms,
+                t.stats.backward_chains,
+            )
+        };
+
+        let (o1, a1, b1, c1, p1, h1, bc1) = run(1);
+        for workers in [3usize, 5] {
+            let (on, an, bn, cn, pn, hn, bcn) = run(workers);
+            assert_eq!(bits(&o1), bits(&on), "forward diverged (case {case}, workers {workers})");
+            assert_eq!(bits(&a1), bits(&an), "core1 diverged (case {case})");
+            assert_eq!(bits(&b1), bits(&bn), "core2 diverged (case {case})");
+            assert_eq!(bits(&c1), bits(&cn), "core3 diverged (case {case})");
+            assert_eq!(p1, pn, "prefix_gemms changed with workers (case {case})");
+            assert_eq!(h1, hn, "hop2_gemms changed with workers (case {case})");
+            assert_eq!(bc1, bcn, "backward_chains changed with workers (case {case})");
+        }
+    }
+}
+
+/// The serving path (predict) is also worker-invariant — batch-1 requests
+/// and full batches alike.
+#[test]
+fn engine_predict_bit_identical_across_workers() {
+    let seed = 99u64;
+    let run = |workers: usize| -> Vec<f32> {
+        let cfg = tiny_cfg(workers);
+        let mut m = NativeDlrm::new(cfg.clone(), &mut Rng::new(seed));
+        let batch = tiny_batch(&cfg, 512, 5);
+        m.predict(&batch)
+    };
+    let p1 = run(1);
+    let p4 = run(4);
+    assert_eq!(bits(&p1), bits(&p4));
+}

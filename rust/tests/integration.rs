@@ -145,6 +145,7 @@ fn pipeline_integration_with_costs() {
         top_hidden: vec![16],
         lr: 0.05,
         tt_opts: EffTtOptions::default(),
+        exec: recad::exec::ExecCfg::default(),
     };
     let schema = DatasetSchema {
         name: "integration",

@@ -1,0 +1,164 @@
+//! Minimal offline stand-in for the `anyhow` crate (the real crates.io
+//! dependency is unavailable in this build environment).  Implements the
+//! subset recad uses: [`Error`] with a context chain, [`Result`],
+//! [`Context`] for `Result` and `Option`, and the `anyhow!` / `bail!` /
+//! `ensure!` macros.  `{:#}` formatting prints the full chain
+//! outermost-first, `{}` prints the outermost message only — matching the
+//! real crate's behaviour for the formatting the callers rely on.
+
+use std::fmt;
+
+/// A context-carrying error value.  Deliberately does NOT implement
+/// `std::error::Error` so the blanket `From<E: Error>` conversion below
+/// stays coherent (same trick the real anyhow uses).
+pub struct Error {
+    /// Context chain, outermost message first.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// Iterate the context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures, for both `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("fmt {args}")` / `anyhow!(expr)` — build an [`Error`].
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// `bail!(...)` — return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// `ensure!(cond, ...)` — bail unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn context_chain_formats_outermost_first() {
+        let e: Error = Err::<(), std::io::Error>(io_err())
+            .context("reading meta.json")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading meta.json");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("reading meta.json: "), "{full}");
+        assert!(full.contains("missing thing"), "{full}");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let e = None::<u32>.context("missing key").unwrap_err();
+        assert_eq!(format!("{e:#}"), "missing key");
+        let v = 7;
+        let e = anyhow!("bad value {v}");
+        assert_eq!(format!("{e}"), "bad value 7");
+        let e = anyhow!("bad value {}", v + 1);
+        assert_eq!(format!("{e}"), "bad value 8");
+
+        fn f(x: bool) -> Result<u32> {
+            ensure!(x, "x was false");
+            if !x {
+                bail!("unreachable {x}");
+            }
+            Ok(1)
+        }
+        assert!(f(true).is_ok());
+        assert!(format!("{:#}", f(false).unwrap_err()).contains("x was false"));
+    }
+}
