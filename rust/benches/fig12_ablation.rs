@@ -6,6 +6,8 @@
 
 use std::time::Instant;
 
+use recad::access::{replay_fill, run_prefetched_fill, AccessPlanner};
+use recad::bench_support::{write_bench_json, BenchArm};
 use recad::coordinator::engine::{EngineCfg, NativeDlrm};
 use recad::data::ctr::{Batch, CtrGenerator};
 use recad::data::schema::DatasetSchema;
@@ -49,12 +51,16 @@ fn themed_batches(rows: u64, n: usize, seed: u64) -> Vec<Batch> {
         .collect()
 }
 
+/// One ablation variant.  `plan_ahead`: 0 trains through the legacy
+/// inline-plan wrappers; N>0 routes ingest through the access layer's
+/// prefetch stage (bit-identical math, overlapped planning).
 fn run_variant(
     rows: u64,
     opts: EffTtOptions,
     reorder: bool,
+    plan_ahead: usize,
     batches: &[Batch],
-) -> (f64, recad::tt::table::TtStats) {
+) -> (f64, Vec<f64>, recad::tt::table::TtStats) {
     let cfg = EngineCfg {
         dense_dim: 4,
         emb_dim: 16,
@@ -85,38 +91,61 @@ fn run_variant(
     engine.train_step(&remapped[0]); // warmup
     // single-core box: take the best of 3 repetitions to shed scheduler
     // noise (standard min-of-N for microbenches)
-    let mut best = f64::INFINITY;
+    let mut planner = AccessPlanner::for_engine_cfg(&engine.cfg);
+    let mut reps = Vec::new();
     for _ in 0..3 {
         let t0 = Instant::now();
-        for b in &remapped[..STEPS] {
-            engine.train_step(b);
+        if plan_ahead > 0 {
+            run_prefetched_fill(replay_fill(&remapped[..STEPS]), &mut planner, plan_ahead, |b, p| {
+                engine.train_step_planned(b, p);
+            });
+        } else {
+            for b in &remapped[..STEPS] {
+                engine.train_step(b);
+            }
         }
-        best = best.min(t0.elapsed().as_secs_f64());
+        reps.push(t0.elapsed().as_secs_f64());
     }
-    ((STEPS * BATCH) as f64 / best, engine.tt_stats())
+    let best = reps.iter().cloned().fold(f64::INFINITY, f64::min);
+    ((STEPS * BATCH) as f64 / best, reps, engine.tt_stats())
 }
 
 fn main() {
     let mut t = Table::new(
         "Fig. 12 — throughput drop when disabling one optimization",
-        &["Table rows", "full (samples/s)", "w/o grad-agg", "w/o reorder", "w/o reuse", "paper"],
+        &["Table rows", "full (samples/s)", "w/o grad-agg", "w/o reorder", "w/o reuse", "planned ingest", "paper"],
     );
+    let mut arms: Vec<BenchArm> = Vec::new();
+    let mut arm_of = |rows: u64, tag: &str, tput: f64, reps: &[f64]| {
+        let per_iter: Vec<f64> = reps.iter().map(|r| r / STEPS as f64).collect();
+        let mut a = BenchArm::from_iters(format!("fig12_rows{rows}_{tag}"), 1, &per_iter, BATCH);
+        // the table reports best-of-N; keep the JSON headline consistent
+        a.throughput = tput;
+        arms.push(a);
+    };
     for rows in TABLE_ROWS {
         let batches = themed_batches(rows, STEPS + 2, rows ^ 7);
-        let (full, _) = run_variant(rows, EffTtOptions::default(), true, &batches);
-        let (no_agg, _) = run_variant(
+        let (full, reps_full, _) =
+            run_variant(rows, EffTtOptions::default(), true, 0, &batches);
+        let (no_agg, reps_na, _) = run_variant(
             rows,
             EffTtOptions { grad_aggregation: false, ..Default::default() },
             true,
+            0,
             &batches,
         );
-        let (no_reorder, _) = run_variant(rows, EffTtOptions::default(), false, &batches);
-        let (no_reuse, _) = run_variant(
+        let (no_reorder, reps_nr, _) =
+            run_variant(rows, EffTtOptions::default(), false, 0, &batches);
+        let (no_reuse, reps_nu, _) = run_variant(
             rows,
             EffTtOptions { reuse: false, ..Default::default() },
             true,
+            0,
             &batches,
         );
+        // access-layer arm: full optimizations + prefetch-planned ingest
+        let (planned, reps_pl, _) =
+            run_variant(rows, EffTtOptions::default(), true, 2, &batches);
         let drop = |x: f64| 100.0 * (x - full) / full;
         t.row(&[
             format!("{rows}"),
@@ -124,10 +153,18 @@ fn main() {
             format!("{:+.1}%", drop(no_agg)),
             format!("{:+.1}%", drop(no_reorder)),
             format!("{:+.1}%", drop(no_reuse)),
+            format!("{:+.1}%", drop(planned)),
             "-52% / -13% / -10%".into(),
         ]);
+        arm_of(rows, "full_unplanned", full, &reps_full);
+        arm_of(rows, "no_grad_agg", no_agg, &reps_na);
+        arm_of(rows, "no_reorder", no_reorder, &reps_nr);
+        arm_of(rows, "no_reuse", no_reuse, &reps_nu);
+        arm_of(rows, "full_planned", planned, &reps_pl);
     }
     t.print();
     println!("\nnote: batch {BATCH}, zipf-skewed themed streams; rows scaled 1/100 of the");
     println!("paper's 2.5M-10M tables (structure-preserving).");
+    let path = write_bench_json("fig12", recad::bench_support::bench_workers(), &arms);
+    println!("wrote {path}");
 }

@@ -7,7 +7,9 @@
 
 use std::time::{Duration, Instant};
 
+use recad::access::{replay_fill, run_prefetched_fill, AccessPlanner};
 use recad::baselines::multi_gpu::{recad_step, MultiGpuWorkload};
+use recad::bench_support::{write_bench_json, BenchArm};
 use recad::coordinator::engine::{EngineCfg, NativeDlrm};
 use recad::coordinator::platform::SimPlatform;
 use recad::coordinator::trainer::train_ieee118;
@@ -136,6 +138,7 @@ fn main() {
         "Rec-AD engine training throughput vs exec workers (RECAD_WORKERS)",
         &["Workers", "samples/s", "speedup"],
     );
+    let mut json_arms: Vec<BenchArm> = Vec::new();
     let mut base: Option<f64> = None;
     for w in recad::bench_support::exec_arms() {
         let mut cfg = cfg_for("Rec-AD");
@@ -153,6 +156,63 @@ fn main() {
         let tput = n as f64 / dt;
         let b0 = *base.get_or_insert(tput);
         wt.row(&[format!("{w}"), format!("{tput:.0}"), format!("{:.2}x", tput / b0)]);
+        // per-step units, matching perf_probe's schema
+        json_arms.push(BenchArm::from_iters(
+            "recad_train_step_batch512".to_string(),
+            w,
+            &[dt / batches.len() as f64],
+            n / batches.len(),
+        ));
     }
     wt.print();
+
+    // ---- access-layer arm: planned-prefetch vs unplanned inline ingest --
+    // (same Rec-AD config, same batches; planned assembles + plans batch
+    // N+1 on the ingest worker while batch N trains — bit-identical math)
+    let mut pt = Table::new(
+        "Rec-AD ingest: unplanned inline vs planned prefetch (plan_ahead=2)",
+        &["Ingest", "samples/s", "speedup"],
+    );
+    let mut rng = Rng::new(9);
+    let batches: Vec<_> = EpochIter::new(&ds.samples, 256, &mut rng).take(16).collect();
+    let n: usize = batches.iter().map(|b| b.batch_size).sum();
+    let mut ingest_base: Option<f64> = None;
+    for planned in [false, true] {
+        let cfg = cfg_for("Rec-AD");
+        let mut engine = NativeDlrm::new(cfg.clone(), &mut Rng::new(1));
+        let mut planner = AccessPlanner::for_engine_cfg(&cfg);
+        engine.train_step(&batches[0]); // warmup
+        let mut reps = Vec::new();
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            if planned {
+                run_prefetched_fill(replay_fill(&batches), &mut planner, 2, |b, p| {
+                    engine.train_step_planned(b, p);
+                });
+            } else {
+                for b in &batches {
+                    engine.train_step(b);
+                }
+            }
+            // per-step units, matching perf_probe's schema
+            reps.push(t0.elapsed().as_secs_f64() / batches.len() as f64);
+        }
+        let arm = BenchArm::from_iters(
+            format!("ingest_{}", if planned { "planned" } else { "unplanned" }),
+            1,
+            &reps,
+            n / batches.len(),
+        );
+        let b0 = *ingest_base.get_or_insert(arm.throughput);
+        pt.row(&[
+            if planned { "planned(2)".into() } else { "unplanned".to_string() },
+            format!("{:.0}", arm.throughput),
+            format!("{:.2}x", arm.throughput / b0),
+        ]);
+        json_arms.push(arm);
+    }
+    pt.print();
+
+    let path = write_bench_json("table3", recad::bench_support::bench_workers(), &json_arms);
+    println!("wrote {path}");
 }

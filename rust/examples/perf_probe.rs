@@ -1,14 +1,20 @@
-//! L3 perf probe: Eff-TT fwd+bwd at serving-relevant shapes, plus the
-//! engine train-step arm, each at exec workers = 1 vs N.
+//! L3 perf probe: Eff-TT fwd+bwd at serving-relevant shapes, the engine
+//! train-step arm (exec workers = 1 vs N), and the access-layer ingest
+//! arm (planned-prefetch vs unplanned inline).
 //!
 //! Emits a machine-readable `BENCH_perf_probe.json` (throughput, p50/p99
-//! per-iteration latency, workers arm) so the perf trajectory can be
-//! tracked across PRs.  Run: `cargo run --release --example perf_probe`
-//! (`RECAD_WORKERS=N` overrides the parallel arm width).
+//! per-iteration latency, workers arm; schema shared with
+//! `BENCH_table3.json` / `BENCH_fig12.json`) so the perf trajectory can
+//! be tracked across PRs.  Run: `cargo run --release --example perf_probe`
+//! (`RECAD_WORKERS=N` overrides the parallel arm width; `RECAD_SMOKE=1`
+//! shrinks the workload to CI-smoke size).  The JSON is re-parsed after
+//! writing — malformed output fails the run, which is what the CI smoke
+//! job asserts.
 
 use std::time::Instant;
 
-use recad::bench_support::bench_workers;
+use recad::access::{replay_fill, run_prefetched_fill, AccessPlanner};
+use recad::bench_support::{bench_workers, write_bench_json, BenchArm};
 use recad::coordinator::engine::NativeDlrm;
 use recad::data::batcher::EpochIter;
 use recad::exec::ExecCfg;
@@ -16,29 +22,15 @@ use recad::powersys::dataset::{generate, DatasetCfg, SparseVocab};
 use recad::tt::shapes::TtShapes;
 use recad::tt::table::{EffTtOptions, EffTtTable, TtScratch};
 use recad::util::prng::Rng;
-use recad::util::stats::summarize;
 
-struct Arm {
-    name: String,
-    workers: usize,
-    /// items (lookups or samples) per second
-    throughput: f64,
-    p50_us: f64,
-    p99_us: f64,
+fn smoke() -> bool {
+    std::env::var("RECAD_SMOKE").map(|v| v == "1").unwrap_or(false)
 }
 
-fn arm_json(a: &Arm) -> String {
-    format!(
-        "{{\"name\": \"{}\", \"workers\": {}, \"throughput_per_sec\": {:.1}, \
-         \"p50_us\": {:.1}, \"p99_us\": {:.1}}}",
-        a.name, a.workers, a.throughput, a.p50_us, a.p99_us
-    )
-}
-
-/// Time `f` for `reps` iterations x 5 rounds; returns per-iter seconds.
-fn time_iters(mut f: impl FnMut(), reps: usize) -> Vec<f64> {
+/// Time `f` for `reps` iterations x `rounds` rounds; per-iter seconds.
+fn time_iters(mut f: impl FnMut(), reps: usize, rounds: usize) -> Vec<f64> {
     let mut samples = Vec::new();
-    for _ in 0..5 {
+    for _ in 0..rounds {
         let t0 = Instant::now();
         for _ in 0..reps {
             f();
@@ -48,7 +40,7 @@ fn time_iters(mut f: impl FnMut(), reps: usize) -> Vec<f64> {
     samples
 }
 
-fn tt_arm(rows: u64, rank: usize, batch: usize, workers: usize) -> (Arm, Arm) {
+fn tt_arm(rows: u64, rank: usize, batch: usize, workers: usize) -> (BenchArm, BenchArm) {
     let shapes = TtShapes::plan(rows, 16, rank);
     let mut rng = Rng::new(1);
     let mut t = EffTtTable::new(shapes, EffTtOptions::default(), &mut rng);
@@ -63,67 +55,108 @@ fn tt_arm(rows: u64, rank: usize, batch: usize, workers: usize) -> (Arm, Arm) {
     t.embedding_bag(&idx, &offsets, &mut out, &mut scratch);
     t.backward_sgd(&idx, &offsets, &g, 0.01, &mut scratch);
 
-    let fwd = time_iters(|| t.embedding_bag(&idx, &offsets, &mut out, &mut scratch), 20);
-    let bwd = time_iters(|| t.backward_sgd(&idx, &offsets, &g, 0.01, &mut scratch), 20);
-    let fs = summarize(&fwd);
-    let bs = summarize(&bwd);
-    let mk = |tag: &str, s: &recad::util::stats::Summary| Arm {
-        name: format!("tt_{tag}_rows{rows}_rank{rank}_batch{batch}"),
-        workers,
-        throughput: batch as f64 / s.p50,
-        p50_us: s.p50 * 1e6,
-        p99_us: s.p99 * 1e6,
+    let (reps, rounds) = if smoke() { (2, 2) } else { (20, 5) };
+    let fwd =
+        time_iters(|| t.embedding_bag(&idx, &offsets, &mut out, &mut scratch), reps, rounds);
+    let bwd = time_iters(|| t.backward_sgd(&idx, &offsets, &g, 0.01, &mut scratch), reps, rounds);
+    let mk = |tag: &str, iters: &[f64]| {
+        BenchArm::from_iters(
+            format!("tt_{tag}_rows{rows}_rank{rank}_batch{batch}"),
+            workers,
+            iters,
+            batch,
+        )
     };
-    (mk("fwd", &fs), mk("bwd", &bs))
+    (mk("fwd", &fwd), mk("bwd", &bwd))
 }
 
-fn engine_arm(workers: usize) -> Arm {
+fn ieee118_batches(batch: usize, n: usize) -> Vec<recad::data::ctr::Batch> {
     let scale = 1.0 / 2000.0;
+    let (n_normal, n_attack) = if smoke() { (600, 150) } else { (3000, 750) };
     let ds = generate(&DatasetCfg {
-        n_normal: 3000,
-        n_attack: 750,
+        n_normal,
+        n_attack,
         vocab: SparseVocab::ieee118(scale),
         n_profiles: 50,
         noise_std: 0.005,
         seed: 7,
     });
-    let mut cfg = recad::coordinator::engine::EngineCfg::ieee118(scale);
-    cfg.exec = ExecCfg::with_workers(workers);
-    let mut engine = NativeDlrm::new(cfg, &mut Rng::new(1));
     let mut rng = Rng::new(9);
-    let batches: Vec<_> = EpochIter::new(&ds.samples, 512, &mut rng).take(6).collect();
+    EpochIter::new(&ds.samples, batch, &mut rng).take(n).collect()
+}
+
+fn engine_cfg(workers: usize) -> recad::coordinator::engine::EngineCfg {
+    let mut cfg = recad::coordinator::engine::EngineCfg::ieee118(1.0 / 2000.0);
+    cfg.exec = ExecCfg::with_workers(workers);
+    cfg
+}
+
+fn engine_arm(workers: usize) -> BenchArm {
+    let (batch, n_batches, rounds) = if smoke() { (64, 3, 2) } else { (512, 6, 3) };
+    let batches = ieee118_batches(batch, n_batches);
+    let mut engine = NativeDlrm::new(engine_cfg(workers), &mut Rng::new(1));
     engine.train_step(&batches[0]); // warmup
-    let n: usize = batches.iter().map(|b| b.batch_size).sum();
+    let per_step: usize =
+        batches.iter().map(|b| b.batch_size).sum::<usize>() / batches.len();
+    let steps = batches.len() as f64;
     let mut samples = Vec::new();
-    for _ in 0..3 {
+    for _ in 0..rounds {
         let t0 = Instant::now();
         for b in &batches {
             engine.train_step(b);
         }
-        samples.push(t0.elapsed().as_secs_f64());
+        // per-step latency so every arm shares per-iteration units
+        samples.push(t0.elapsed().as_secs_f64() / steps);
     }
-    let s = summarize(&samples);
-    // samples time a whole pass over `batches`; report per-step latency so
-    // every arm in the JSON shares per-iteration units
+    BenchArm::from_iters(format!("engine_train_step_batch{batch}"), workers, &samples, per_step)
+}
+
+/// Access-layer arm: full-epoch training throughput with ingest either
+/// inline-unplanned (legacy wrappers: plan built on the training thread)
+/// or prefetch-planned (`plan_ahead = 2`: assembled + planned on the
+/// ingest worker, plan shared by fwd+bwd).  Identical math both ways —
+/// the acceptance gate is planned >= unplanned throughput.
+fn ingest_arm(planned: bool) -> BenchArm {
+    let (batch, n_batches, rounds) = if smoke() { (64, 4, 2) } else { (256, 16, 3) };
+    let batches = ieee118_batches(batch, n_batches);
+    let cfg = engine_cfg(1);
+    let mut engine = NativeDlrm::new(cfg.clone(), &mut Rng::new(1));
+    let mut planner = AccessPlanner::for_engine_cfg(&cfg);
+    engine.train_step(&batches[0]); // warmup
+    let per_step: usize =
+        batches.iter().map(|b| b.batch_size).sum::<usize>() / batches.len();
     let steps = batches.len() as f64;
-    Arm {
-        name: "engine_train_step_batch512".into(),
-        workers,
-        throughput: n as f64 / s.p50,
-        p50_us: s.p50 * 1e6 / steps,
-        p99_us: s.p99 * 1e6 / steps,
+    let mut samples = Vec::new();
+    for _ in 0..rounds {
+        let t0 = Instant::now();
+        if planned {
+            run_prefetched_fill(replay_fill(&batches), &mut planner, 2, |b, p| {
+                engine.train_step_planned(b, p);
+            });
+        } else {
+            for b in &batches {
+                engine.train_step(b);
+            }
+        }
+        // per-step latency so every arm shares per-iteration units
+        samples.push(t0.elapsed().as_secs_f64() / steps);
     }
+    let tag = if planned { "planned" } else { "unplanned" };
+    BenchArm::from_iters(format!("ingest_{tag}_batch{batch}x{n_batches}"), 1, &samples, per_step)
 }
 
 fn main() {
     let par = bench_workers();
     let worker_arms: Vec<usize> = if par > 1 { vec![1, par] } else { vec![1] };
-    let mut arms: Vec<Arm> = Vec::new();
+    let mut arms: Vec<BenchArm> = Vec::new();
 
+    let tt_shapes: &[(u64, usize, usize)] = if smoke() {
+        &[(10_000, 8, 512)]
+    } else {
+        &[(100_000, 8, 4096), (100_000, 16, 4096), (1_000_000, 16, 4096)]
+    };
     for &w in &worker_arms {
-        for (rows, rank, batch) in
-            [(100_000u64, 8usize, 4096usize), (100_000, 16, 4096), (1_000_000, 16, 4096)]
-        {
+        for &(rows, rank, batch) in tt_shapes {
             let (f, b) = tt_arm(rows, rank, batch, w);
             println!(
                 "workers={w} rows={rows:>8} rank={rank:>2} batch={batch}: \
@@ -160,11 +193,18 @@ fn main() {
         }
     }
 
-    let body: Vec<String> = arms.iter().map(arm_json).collect();
-    let json = format!(
-        "{{\"bench\": \"perf_probe\", \"parallel_workers\": {par}, \"arms\": [\n  {}\n]}}\n",
-        body.join(",\n  ")
+    // access-layer arm: planned prefetch ingest vs unplanned inline
+    let unplanned = ingest_arm(false);
+    let planned = ingest_arm(true);
+    println!(
+        "ingest unplanned {:.0} samples/s | planned(prefetch=2) {:.0} samples/s ({:.2}x)",
+        unplanned.throughput,
+        planned.throughput,
+        planned.throughput / unplanned.throughput
     );
-    std::fs::write("BENCH_perf_probe.json", &json).expect("write BENCH_perf_probe.json");
-    println!("wrote BENCH_perf_probe.json ({} arms)", arms.len());
+    arms.push(unplanned);
+    arms.push(planned);
+
+    let path = write_bench_json("perf_probe", par, &arms);
+    println!("wrote {path} ({} arms, JSON round-trip checked)", arms.len());
 }

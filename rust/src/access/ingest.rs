@@ -1,0 +1,198 @@
+//! Prefetch-overlapped ingest: assemble + remap + plan batch N+1 on a
+//! worker thread while batch N trains — the paper's pipeline mechanism
+//! (§IV) applied to *data access* rather than embedding/MLP overlap.
+//!
+//! Determinism: batches and plans are computed by pure functions of the
+//! source stream and planner state, and the consumer sees them in source
+//! order, so `plan_ahead = N` is bit-identical to `plan_ahead = 0`
+//! (pinned by `tests/plan_equivalence.rs`).  Buffer shells circulate
+//! through a recycle channel, so the steady state is allocation-free:
+//! with `plan_ahead = 1` exactly the classic double buffer.
+
+use std::sync::mpsc;
+
+use crate::access::plan::BatchPlan;
+use crate::access::planner::AccessPlanner;
+use crate::data::ctr::Batch;
+
+/// One assembled batch plus its access plan (the queue item).
+#[derive(Clone, Default)]
+pub struct PlannedBatch {
+    pub batch: Batch,
+    pub plan: BatchPlan,
+}
+
+/// What a run of the ingest stage did.
+#[derive(Clone, Copy, Debug)]
+pub struct IngestReport {
+    pub batches: u64,
+    /// Whether an overlap thread ran (`plan_ahead > 0`).
+    pub overlapped: bool,
+}
+
+/// Drive `consume` over a refillable batch source with `plan_ahead`
+/// batches of lookahead.
+///
+/// `fill` writes the next batch into reusable scratch and returns `false`
+/// when the stream is exhausted (e.g. `EpochIter::next_into`); it runs on
+/// the ingest worker when `plan_ahead > 0`.  `consume` always runs on the
+/// calling thread.
+pub fn run_prefetched_fill<F, C>(
+    mut fill: F,
+    planner: &mut AccessPlanner,
+    plan_ahead: usize,
+    mut consume: C,
+) -> IngestReport
+where
+    F: FnMut(&mut Batch) -> bool + Send,
+    C: FnMut(&Batch, &BatchPlan),
+{
+    let mut n = 0u64;
+    if plan_ahead == 0 {
+        // inline mode: one reusable shell, no threads
+        let mut pb = PlannedBatch::default();
+        while fill(&mut pb.batch) {
+            planner.plan_into(&pb.batch, &mut pb.plan);
+            consume(&pb.batch, &pb.plan);
+            n += 1;
+        }
+        return IngestReport { batches: n, overlapped: false };
+    }
+    let (tx, rx) = mpsc::sync_channel::<PlannedBatch>(plan_ahead);
+    let (recycle_tx, recycle_rx) = mpsc::channel::<PlannedBatch>();
+    std::thread::scope(|sc| {
+        let planner = &mut *planner;
+        sc.spawn(move || {
+            loop {
+                // reuse a spent shell when one has come back
+                let mut pb = recycle_rx.try_recv().unwrap_or_default();
+                if !fill(&mut pb.batch) {
+                    break;
+                }
+                planner.plan_into(&pb.batch, &mut pb.plan);
+                if tx.send(pb).is_err() {
+                    break;
+                }
+            }
+            // tx drops here; rx.iter() below then terminates
+        });
+        for pb in rx.iter() {
+            consume(&pb.batch, &pb.plan);
+            n += 1;
+            let _ = recycle_tx.send(pb);
+        }
+    });
+    IngestReport { batches: n, overlapped: true }
+}
+
+/// A `fill` source that replays a pre-built batch slice via `clone_from`
+/// (recycled shells keep their allocations) — the benches' standard way
+/// to drive [`run_prefetched_fill`] over a fixed workload repeatedly.
+pub fn replay_fill(batches: &[Batch]) -> impl FnMut(&mut Batch) -> bool + Send + '_ {
+    let mut cursor = 0usize;
+    move |out| {
+        if cursor >= batches.len() {
+            return false;
+        }
+        out.clone_from(&batches[cursor]);
+        cursor += 1;
+        true
+    }
+}
+
+/// Iterator-source convenience wrapper around [`run_prefetched_fill`].
+pub fn run_prefetched<I, C>(
+    mut source: I,
+    planner: &mut AccessPlanner,
+    plan_ahead: usize,
+    consume: C,
+) -> IngestReport
+where
+    I: Iterator<Item = Batch> + Send,
+    C: FnMut(&Batch, &BatchPlan),
+{
+    run_prefetched_fill(
+        move |out| match source.next() {
+            Some(b) => {
+                *out = b;
+                true
+            }
+            None => false,
+        },
+        planner,
+        plan_ahead,
+        consume,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::EngineCfg;
+    use crate::data::ctr::CtrGenerator;
+    use crate::data::schema::DatasetSchema;
+
+    fn tiny_cfg_and_batches() -> (EngineCfg, Vec<Batch>) {
+        let cfg = EngineCfg {
+            dense_dim: 2,
+            emb_dim: 8,
+            tables: vec![(2000, true), (40, false)],
+            tt_rank: 4,
+            bot_hidden: vec![8],
+            top_hidden: vec![8],
+            lr: 0.05,
+            tt_opts: Default::default(),
+            exec: Default::default(),
+        };
+        let schema = DatasetSchema {
+            name: "ingest-test",
+            n_dense: 2,
+            vocabs: vec![2000, 40],
+            emb_dim: 8,
+            zipf_s: 1.2,
+            ft_rank: 8,
+        };
+        let mut gen = CtrGenerator::new(schema, 11);
+        let batches = gen.batches(12, 32);
+        (cfg, batches)
+    }
+
+    #[test]
+    fn overlapped_stream_matches_inline_order_and_content() {
+        let (cfg, batches) = tiny_cfg_and_batches();
+        let collect = |plan_ahead: usize| -> (Vec<Vec<u64>>, Vec<usize>, u64) {
+            let mut planner = AccessPlanner::for_engine_cfg(&cfg);
+            let mut cols = Vec::new();
+            let mut prefixes = Vec::new();
+            let report = run_prefetched(
+                batches.iter().cloned(),
+                &mut planner,
+                plan_ahead,
+                |b, p| {
+                    assert_eq!(p.batch_size(), b.batch_size);
+                    cols.push(p.col(0).to_vec());
+                    prefixes.push(p.tt_plan(0).unwrap().distinct_prefixes());
+                },
+            );
+            (cols, prefixes, report.batches)
+        };
+        let (c0, p0, n0) = collect(0);
+        for ahead in [1usize, 3] {
+            let (c, p, n) = collect(ahead);
+            assert_eq!(n, n0);
+            assert_eq!(c, c0, "plan_ahead={ahead} changed column content/order");
+            assert_eq!(p, p0, "plan_ahead={ahead} changed plans");
+        }
+        assert_eq!(n0 as usize, batches.len());
+    }
+
+    #[test]
+    fn empty_source_is_fine() {
+        let (cfg, _) = tiny_cfg_and_batches();
+        let mut planner = AccessPlanner::for_engine_cfg(&cfg);
+        let report =
+            run_prefetched(std::iter::empty(), &mut planner, 2, |_, _| panic!("no batches"));
+        assert_eq!(report.batches, 0);
+        assert!(report.overlapped);
+    }
+}

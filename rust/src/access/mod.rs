@@ -1,0 +1,35 @@
+//! `access` — the unified access-planning layer (paper §III-G/H lifted to
+//! a pipeline stage).
+//!
+//! The Rec-AD paper's second pillar, "optimized data access via index
+//! reordering", used to live as an offline bijection wired into one
+//! baseline arm, while the engine, pipeline trainer, TT table and
+//! streaming server each re-derived per-batch index work (dedup,
+//! prefix-group sort, scatter map, remap) on the compute hot path.  This
+//! module makes that work a first-class, reusable artifact:
+//!
+//! * [`TtPlan`] / [`BatchPlan`] (`plan`) — the per-batch, per-table index
+//!   plan: distinct-row set, prefix-group layout, scatter map, backward
+//!   aggregation order, remapped columns, cached unit-bag offsets.  Built
+//!   once per batch; consumed by `EffTtTable::{embedding_bag,
+//!   backward_sgd}_planned` and `NativeDlrm::{forward, train_step,
+//!   predict}_planned`.
+//! * [`AccessPlanner`] (`planner`) — owns the per-table bijections
+//!   (offline-profiled and/or online-refreshed via
+//!   `reorder::OnlineReorderer`) and turns raw batches into plans.
+//! * [`run_prefetched`] / [`run_prefetched_fill`] (`ingest`) — the
+//!   double-buffered ingest stage: batch N+1 is assembled + remapped +
+//!   planned on a worker thread while batch N trains.
+//!
+//! Invariant: the planned path is **bit-identical** to the pre-refactor
+//! unplanned path (the unplanned APIs are now thin wrappers that build a
+//! plan inline), for any worker count and any `plan_ahead` depth —
+//! pinned by `tests/plan_equivalence.rs`.
+
+pub mod ingest;
+pub mod plan;
+pub mod planner;
+
+pub use ingest::{replay_fill, run_prefetched, run_prefetched_fill, IngestReport, PlannedBatch};
+pub use plan::{BagLayout, BatchPlan, TtPlan, UnitOffsets};
+pub use planner::{table_shapes, AccessCfg, AccessPlanner};

@@ -1,0 +1,392 @@
+//! Access-plan types: the per-batch, per-table index preprocessing
+//! artifact (dedup, prefix-group layout, scatter map, backward
+//! aggregation order) computed ONCE during ingest and consumed by the
+//! Eff-TT forward/backward, the engine, the pipeline and the server.
+//!
+//! The plan builders replicate the exact sweeps the Eff-TT hot path used
+//! to run inline (same sorts, same sentinel logic), so planned execution
+//! is bit-identical to the pre-refactor unplanned path — pinned by
+//! `tests/plan_equivalence.rs`.
+
+use std::ops::Range;
+
+use crate::data::ctr::Batch;
+use crate::reorder::bijection::IndexBijection;
+use crate::tt::shapes::TtShapes;
+
+/// Bag layout of an EmbeddingBag call.  `Unit(n)` is the CTR-standard
+/// one-index-per-bag case (bag b == position b); it exists so consumers
+/// never materialize the `0..=n` offset vector on the hot path.
+#[derive(Clone, Copy, Debug)]
+pub enum BagLayout<'a> {
+    /// `n` bags of exactly one index each (offsets would be `0..=n`).
+    Unit(usize),
+    /// Explicit offsets: bag b covers `indices[offsets[b]..offsets[b+1]]`.
+    Offsets(&'a [usize]),
+}
+
+impl<'a> BagLayout<'a> {
+    #[inline]
+    pub fn num_bags(&self) -> usize {
+        match self {
+            BagLayout::Unit(n) => *n,
+            BagLayout::Offsets(o) => o.len() - 1,
+        }
+    }
+
+    /// Total number of indices covered.
+    #[inline]
+    pub fn total(&self) -> usize {
+        match self {
+            BagLayout::Unit(n) => *n,
+            BagLayout::Offsets(o) => *o.last().unwrap(),
+        }
+    }
+
+    /// Index range of bag `b`.
+    #[inline]
+    pub fn range(&self, b: usize) -> Range<usize> {
+        match self {
+            BagLayout::Unit(_) => b..b + 1,
+            BagLayout::Offsets(o) => o[b]..o[b + 1],
+        }
+    }
+}
+
+/// Per-table TT access plan for one batch: everything the Eff-TT
+/// forward/backward needs that depends only on the index stream, not on
+/// values or gradients.
+///
+/// Built once per (batch, table); the forward path consumes the
+/// distinct-row set + scatter map, the backward path the sorted
+/// occurrence list.  All buffers are reused across batches
+/// (`build*` clears, never reallocates in steady state).
+#[derive(Clone, Default)]
+pub struct TtPlan {
+    shapes: Option<TtShapes>,
+    n_indices: usize,
+    n_bags: usize,
+    unit_bags: bool,
+    fwd_ready: bool,
+    bwd_ready: bool,
+    /// backward reads `order` instead of `occ` (unit bags: bag == pos).
+    bwd_via_order: bool,
+    /// sorted (row, original position) pairs — the forward dedup sweep.
+    order: Vec<(u64, u32)>,
+    /// per-position slot into `uniq_rows` (the scatter map).
+    pub index_slot: Vec<u32>,
+    /// ascending distinct rows of the batch.
+    pub uniq_rows: Vec<u64>,
+    /// indices into `uniq_rows` where a new TT prefix begins.
+    pub group_starts: Vec<u32>,
+    /// sorted (row, bag) pairs — the backward aggregation order
+    /// (empty when `bwd_via_order`).
+    occ: Vec<(u64, u32)>,
+}
+
+impl TtPlan {
+    fn reset(&mut self, shapes: TtShapes, indices: usize, bags: BagLayout) {
+        self.shapes = Some(shapes);
+        self.n_indices = indices;
+        self.n_bags = bags.num_bags();
+        self.unit_bags = matches!(bags, BagLayout::Unit(_));
+        self.fwd_ready = false;
+        self.bwd_ready = false;
+        self.bwd_via_order = false;
+    }
+
+    /// Forward section: sorted dedup of rows + prefix-group boundaries +
+    /// scatter map.  Exactly the sweep `EffTtTable::embedding_bag` ran
+    /// inline pre-refactor (same sort, same `u64::MAX` sentinels), so
+    /// consuming it is bit-identical.
+    pub fn build_forward(&mut self, shapes: TtShapes, indices: &[u64], bags: BagLayout) {
+        debug_assert_eq!(bags.total(), indices.len());
+        self.reset(shapes, indices.len(), bags);
+        self.order.clear();
+        self.order
+            .extend(indices.iter().enumerate().map(|(k, &i)| (i, k as u32)));
+        self.order.sort_unstable();
+        self.index_slot.clear();
+        self.index_slot.resize(indices.len(), 0);
+        self.uniq_rows.clear();
+        self.group_starts.clear();
+        let mut last_row = u64::MAX;
+        let mut last_pref = u64::MAX;
+        for &(idx, pos) in self.order.iter() {
+            if idx != last_row {
+                let pf = shapes.prefix_of(idx);
+                if pf != last_pref {
+                    self.group_starts.push(self.uniq_rows.len() as u32);
+                    last_pref = pf;
+                }
+                self.uniq_rows.push(idx);
+                last_row = idx;
+            }
+            self.index_slot[pos as usize] = (self.uniq_rows.len() - 1) as u32;
+        }
+        self.fwd_ready = true;
+        if self.unit_bags {
+            // (row, pos) == (row, bag) when every bag holds one index, so
+            // the forward sort doubles as the backward aggregation order.
+            self.bwd_ready = true;
+            self.bwd_via_order = true;
+            self.occ.clear();
+        }
+    }
+
+    /// Backward section: the sorted (row, bag) occurrence list gradient
+    /// aggregation sweeps over.  Construction + sort match
+    /// `EffTtTable::backward_sgd`'s inline version exactly.
+    pub fn build_backward(&mut self, shapes: TtShapes, indices: &[u64], bags: BagLayout) {
+        debug_assert_eq!(bags.total(), indices.len());
+        if !self.fwd_ready {
+            self.reset(shapes, indices.len(), bags);
+        }
+        self.occ.clear();
+        for b in 0..bags.num_bags() {
+            for k in bags.range(b) {
+                self.occ.push((indices[k], b as u32));
+            }
+        }
+        self.occ.sort_unstable();
+        self.bwd_ready = true;
+        self.bwd_via_order = false;
+    }
+
+    /// Build both sections.  For unit bags this is a single sort (the
+    /// forward order serves backward aggregation too).
+    pub fn build(&mut self, shapes: TtShapes, indices: &[u64], bags: BagLayout) {
+        self.build_forward(shapes, indices, bags);
+        if !self.unit_bags {
+            self.build_backward(shapes, indices, bags);
+        }
+    }
+
+    #[inline]
+    pub fn shapes(&self) -> Option<TtShapes> {
+        self.shapes
+    }
+
+    #[inline]
+    pub fn n_indices(&self) -> usize {
+        self.n_indices
+    }
+
+    #[inline]
+    pub fn num_bags(&self) -> usize {
+        self.n_bags
+    }
+
+    #[inline]
+    pub fn forward_ready(&self) -> bool {
+        self.fwd_ready
+    }
+
+    #[inline]
+    pub fn backward_ready(&self) -> bool {
+        self.bwd_ready
+    }
+
+    /// The sorted (row, bag) occurrence list (gradient-aggregation order).
+    #[inline]
+    pub fn occ_sorted(&self) -> &[(u64, u32)] {
+        if self.bwd_via_order {
+            &self.order
+        } else {
+            &self.occ
+        }
+    }
+
+    /// Distinct rows in the batch (hop-2 GEMM count under reuse).
+    pub fn distinct_rows(&self) -> usize {
+        self.uniq_rows.len()
+    }
+
+    /// Distinct TT prefixes in the batch (first-hop GEMM count under
+    /// reuse); the quantity index reordering minimizes (§III-G).
+    pub fn distinct_prefixes(&self) -> usize {
+        self.group_starts.len()
+    }
+
+    /// Fraction of first-hop GEMMs saved by the Reuse Buffer on this
+    /// batch: `1 - distinct_prefixes / indices`.
+    pub fn reuse_rate(&self) -> f64 {
+        if self.n_indices == 0 {
+            return 0.0;
+        }
+        1.0 - self.distinct_prefixes() as f64 / self.n_indices as f64
+    }
+}
+
+/// Grow-only cache of the `[0, 1, …, n]` unit-bag offset vector, so
+/// consumers that still need a materialized `&[usize]` (plain tables)
+/// never rebuild it per call.
+#[derive(Clone, Default)]
+pub struct UnitOffsets {
+    buf: Vec<usize>,
+}
+
+impl UnitOffsets {
+    /// `&[0, 1, …, n]` (length n+1), extending the backing store only
+    /// when `n` grows past every previous request.
+    pub fn get(&mut self, n: usize) -> &[usize] {
+        if self.buf.len() < n + 1 {
+            let start = self.buf.len();
+            self.buf.extend(start..=n);
+        }
+        &self.buf[..n + 1]
+    }
+}
+
+/// Whole-batch access plan: per-table remapped index columns plus the
+/// TT plan for every compressed slot.  The engine, pipeline and server
+/// consume this instead of re-slicing `Batch::sparse` per table per pass.
+#[derive(Clone, Default)]
+pub struct BatchPlan {
+    batch_size: usize,
+    /// Per-table index column, already passed through the table's
+    /// bijection (identity when reordering is off).
+    cols: Vec<Vec<u64>>,
+    /// Per-table TT access plan; `None` for plain (uncompressed) slots.
+    tt: Vec<Option<TtPlan>>,
+    unit_offsets: UnitOffsets,
+}
+
+impl BatchPlan {
+    /// Plan one batch: extract + remap every sparse column, build the TT
+    /// plan for each compressed slot (`shapes[t] = Some(..)`), refresh
+    /// the unit-offset cache.  `bijections` may be shorter than `shapes`
+    /// (missing/`None` entries mean identity).  All buffers are reused.
+    pub fn build_into(
+        &mut self,
+        batch: &Batch,
+        shapes: &[Option<TtShapes>],
+        bijections: &[Option<IndexBijection>],
+    ) {
+        let ns = shapes.len();
+        let b = batch.batch_size;
+        debug_assert_eq!(batch.sparse.len(), b * ns);
+        self.batch_size = b;
+        self.cols.resize_with(ns, Vec::new);
+        self.tt.resize_with(ns, || None);
+        for t in 0..ns {
+            let col = &mut self.cols[t];
+            col.clear();
+            col.extend(batch.sparse_col(t, ns));
+            if let Some(Some(bij)) = bijections.get(t).map(|b| b.as_ref()) {
+                for v in col.iter_mut() {
+                    *v = bij.apply(*v);
+                }
+            }
+            match shapes[t] {
+                Some(sh) => {
+                    let plan = self.tt[t].get_or_insert_with(TtPlan::default);
+                    plan.build(sh, col, BagLayout::Unit(b));
+                }
+                None => self.tt[t] = None,
+            }
+        }
+        self.unit_offsets.get(b);
+    }
+
+    #[inline]
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    #[inline]
+    pub fn n_tables(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// The (remapped) index column of table `t`.
+    #[inline]
+    pub fn col(&self, t: usize) -> &[u64] {
+        &self.cols[t]
+    }
+
+    /// The TT plan of table `t` (`None` for plain slots).
+    #[inline]
+    pub fn tt_plan(&self, t: usize) -> Option<&TtPlan> {
+        self.tt[t].as_ref()
+    }
+
+    /// Cached unit-bag offsets `[0, 1, …, batch_size]` for consumers that
+    /// need a materialized slice (plain tables).
+    #[inline]
+    pub fn offsets(&self) -> &[usize] {
+        &self.unit_offsets.buf[..self.batch_size + 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn unit_offsets_grow_only() {
+        let mut u = UnitOffsets::default();
+        assert_eq!(u.get(3), &[0, 1, 2, 3]);
+        let cap_after_big = {
+            u.get(100);
+            u.buf.capacity()
+        };
+        assert_eq!(u.get(5), &[0, 1, 2, 3, 4, 5]);
+        assert_eq!(u.buf.capacity(), cap_after_big, "shrank instead of caching");
+        assert_eq!(u.get(100).len(), 101);
+        for (i, &v) in u.get(100).iter().enumerate() {
+            assert_eq!(v, i);
+        }
+    }
+
+    #[test]
+    fn tt_plan_dedups_rows_and_prefixes() {
+        let shapes = TtShapes::plan(1000, 8, 4);
+        let m3 = shapes.m[2];
+        // 4 indices, 3 distinct rows, 2 distinct prefixes
+        let idx = vec![5 * m3, 5 * m3 + 1, 7 * m3 + 2, 7 * m3 + 2];
+        let mut plan = TtPlan::default();
+        plan.build(shapes, &idx, BagLayout::Unit(4));
+        assert_eq!(plan.distinct_rows(), 3);
+        assert_eq!(plan.distinct_prefixes(), 2);
+        assert!(plan.forward_ready() && plan.backward_ready());
+        // scatter map points every position at its distinct row
+        for (k, &i) in idx.iter().enumerate() {
+            assert_eq!(plan.uniq_rows[plan.index_slot[k] as usize], i);
+        }
+        // unit bags: backward order is the forward order
+        assert_eq!(plan.occ_sorted().len(), 4);
+        assert!(plan.occ_sorted().windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn tt_plan_multibag_occ_matches_manual_sort(){
+        let shapes = TtShapes::plan(500, 8, 4);
+        let mut rng = Rng::new(3);
+        let idx: Vec<u64> = (0..32).map(|_| rng.below(500)).collect();
+        let offsets: Vec<usize> = vec![0, 5, 5, 20, 32];
+        let mut plan = TtPlan::default();
+        plan.build(shapes, &idx, BagLayout::Offsets(&offsets[..]));
+        let mut manual: Vec<(u64, u32)> = Vec::new();
+        for b in 0..offsets.len() - 1 {
+            for k in offsets[b]..offsets[b + 1] {
+                manual.push((idx[k], b as u32));
+            }
+        }
+        manual.sort_unstable();
+        assert_eq!(plan.occ_sorted(), &manual[..]);
+    }
+
+    #[test]
+    fn bag_layout_unit_equivalent_to_offsets() {
+        let offsets: Vec<usize> = (0..=6).collect();
+        let unit = BagLayout::Unit(6);
+        let off = BagLayout::Offsets(&offsets[..]);
+        assert_eq!(unit.num_bags(), off.num_bags());
+        assert_eq!(unit.total(), off.total());
+        for b in 0..6 {
+            assert_eq!(unit.range(b), off.range(b));
+        }
+    }
+}

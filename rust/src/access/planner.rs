@@ -1,0 +1,257 @@
+//! The access planner: per-table bijections (offline-profiled and/or
+//! online-refreshed) + plan construction for whole batches.  This is the
+//! single owner of "index preprocessing" — the Rec-AD baseline arm, the
+//! trainer, the pipeline and the server all configure one of these
+//! instead of hand-rolling remap/dedup on their hot paths.
+
+use crate::access::plan::BatchPlan;
+use crate::coordinator::engine::EngineCfg;
+use crate::data::ctr::Batch;
+use crate::reorder::bijection::IndexBijection;
+use crate::reorder::online::OnlineReorderer;
+use crate::tt::shapes::TtShapes;
+
+/// `[access]` section of the run config.
+#[derive(Clone, Copy, Debug)]
+pub struct AccessCfg {
+    /// Ingest lookahead: how many batches may be assembled + planned
+    /// ahead of training on the ingest worker.  0 = plan inline on the
+    /// training thread (no overlap thread).
+    pub plan_ahead: usize,
+    /// Refresh the bijection online every `refresh_every` batches.
+    pub online_reorder: bool,
+    /// Batches between online bijection rebuilds (K).
+    pub refresh_every: usize,
+    /// Hot-set access-mass ratio for (re)built bijections.
+    pub hot_ratio: f64,
+    /// Co-occurrence window kept for online rebuilds, in batches.
+    pub window: usize,
+}
+
+impl Default for AccessCfg {
+    fn default() -> Self {
+        AccessCfg {
+            plan_ahead: 1,
+            online_reorder: false,
+            refresh_every: 64,
+            hot_ratio: 0.05,
+            window: 32,
+        }
+    }
+}
+
+/// Plans batches for one engine configuration.
+#[derive(Clone)]
+pub struct AccessPlanner {
+    /// Per-slot TT shapes (`None` = plain table).
+    shapes: Vec<Option<TtShapes>>,
+    /// Per-slot remap (`None` = identity).
+    bijections: Vec<Option<IndexBijection>>,
+    /// Per-slot online refresh state (TT slots only, when enabled).
+    online: Vec<Option<OnlineReorderer>>,
+    /// Scratch for online observation of raw columns.
+    obs: Vec<u64>,
+    /// Batches planned so far.
+    pub batches_planned: u64,
+    /// Online bijection refreshes across all slots.
+    pub refreshes: u64,
+}
+
+/// TT shapes per engine table slot, straight from the config (must match
+/// `NativeDlrm::new`, which calls the same `TtShapes::plan`).  Slots whose
+/// configuration never consults a plan (TT-Rec baseline: reuse AND
+/// gradient aggregation both off) come back `None`, so the baseline arms
+/// don't pay for sorts they would ignore — the engine falls back to the
+/// per-occurrence path for plan-less TT slots.
+pub fn table_shapes(cfg: &EngineCfg) -> Vec<Option<TtShapes>> {
+    let plan_useful = cfg.tt_opts.reuse || cfg.tt_opts.grad_aggregation;
+    cfg.tables
+        .iter()
+        .map(|&(rows, compressed)| {
+            (compressed && plan_useful)
+                .then(|| TtShapes::plan(rows, cfg.emb_dim, cfg.tt_rank))
+        })
+        .collect()
+}
+
+impl AccessPlanner {
+    /// Identity planner (no reordering) for an engine config.
+    pub fn for_engine_cfg(cfg: &EngineCfg) -> AccessPlanner {
+        let shapes = table_shapes(cfg);
+        let n = shapes.len();
+        AccessPlanner {
+            shapes,
+            bijections: (0..n).map(|_| None).collect(),
+            online: (0..n).map(|_| None).collect(),
+            obs: Vec::new(),
+            batches_planned: 0,
+            refreshes: 0,
+        }
+    }
+
+    /// Offline profiling construction (paper §III-H): build a bijection
+    /// per compressed slot from a sample of training batches.  This is
+    /// what the Rec-AD baseline arm used to own privately.
+    pub fn with_profile(
+        cfg: &EngineCfg,
+        profile: &[Batch],
+        hot_ratio: f64,
+    ) -> AccessPlanner {
+        let mut p = Self::for_engine_cfg(cfg);
+        let ns = cfg.tables.len();
+        for (slot, &(rows, compressed)) in cfg.tables.iter().enumerate() {
+            if !compressed {
+                continue; // reordering pays off on the TT tables
+            }
+            let cols: Vec<Vec<u64>> = profile
+                .iter()
+                .map(|b| b.sparse_col(slot, ns).collect())
+                .collect();
+            let refs: Vec<&[u64]> = cols.iter().map(|c| c.as_slice()).collect();
+            p.bijections[slot] = Some(IndexBijection::build(rows, &refs, hot_ratio));
+        }
+        p
+    }
+
+    /// Enable online bijection refresh on every compressed slot.
+    pub fn enable_online(&mut self, cfg: &EngineCfg, access: &AccessCfg) {
+        for (slot, &(rows, compressed)) in cfg.tables.iter().enumerate() {
+            if compressed {
+                self.online[slot] = Some(OnlineReorderer::new(
+                    rows,
+                    access.hot_ratio,
+                    access.refresh_every.max(1),
+                    access.window,
+                ));
+            }
+        }
+    }
+
+    /// Apply [`AccessCfg`] policy: online refresh when requested.
+    pub fn configure(&mut self, cfg: &EngineCfg, access: &AccessCfg) {
+        if access.online_reorder {
+            self.enable_online(cfg, access);
+        }
+    }
+
+    /// The bijection currently applied to slot `t` (`None` = identity).
+    pub fn bijection(&self, t: usize) -> Option<&IndexBijection> {
+        self.bijections[t].as_ref()
+    }
+
+    /// Plan one batch into reusable scratch: observe raw columns (online
+    /// mode), maybe refresh bijections, then remap + dedup + group into
+    /// `out`.
+    pub fn plan_into(&mut self, batch: &Batch, out: &mut BatchPlan) {
+        let ns = self.shapes.len();
+        for t in 0..ns {
+            let Some(online) = self.online[t].as_mut() else { continue };
+            self.obs.clear();
+            self.obs.extend(batch.sparse_col(t, ns));
+            if online.observe(&self.obs) {
+                self.bijections[t] = Some(online.bijection.clone());
+                self.refreshes += 1;
+            }
+        }
+        out.build_into(batch, &self.shapes, &self.bijections);
+        self.batches_planned += 1;
+    }
+
+    /// Plan with the CURRENT bijections, without observing or refreshing
+    /// — the evaluation/serving path: a model trained under a (possibly
+    /// online-refreshed) remap must be read back through the same remap,
+    /// and read-only traffic must not advance the online state.
+    pub fn plan_frozen_into(&self, batch: &Batch, out: &mut BatchPlan) {
+        out.build_into(batch, &self.shapes, &self.bijections);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ctr::CtrGenerator;
+    use crate::data::schema::DatasetSchema;
+    use crate::tt::table::EffTtOptions;
+
+    fn cfg() -> EngineCfg {
+        EngineCfg {
+            dense_dim: 2,
+            emb_dim: 8,
+            tables: vec![(4000, true), (40, false)],
+            tt_rank: 4,
+            bot_hidden: vec![8],
+            top_hidden: vec![8],
+            lr: 0.05,
+            tt_opts: EffTtOptions::default(),
+            exec: crate::exec::ExecCfg::default(),
+        }
+    }
+
+    fn gen() -> CtrGenerator {
+        CtrGenerator::new(
+            DatasetSchema {
+                name: "planner-test",
+                n_dense: 2,
+                vocabs: vec![4000, 40],
+                emb_dim: 8,
+                zipf_s: 1.2,
+                ft_rank: 8,
+            },
+            5,
+        )
+    }
+
+    #[test]
+    fn identity_planner_plans_tt_slots_only() {
+        let cfg = cfg();
+        let mut g = gen();
+        let batch = g.next_batch(16);
+        let mut p = AccessPlanner::for_engine_cfg(&cfg);
+        let mut plan = BatchPlan::default();
+        p.plan_into(&batch, &mut plan);
+        assert_eq!(plan.n_tables(), 2);
+        assert!(plan.tt_plan(0).is_some());
+        assert!(plan.tt_plan(1).is_none());
+        // identity: columns equal the raw batch slices
+        let raw: Vec<u64> = batch.sparse_col(0, 2).collect();
+        assert_eq!(plan.col(0), &raw[..]);
+        assert_eq!(plan.offsets().len(), 17);
+    }
+
+    #[test]
+    fn profiled_planner_remaps_compressed_slot_in_vocab() {
+        let cfg = cfg();
+        let mut g = gen();
+        let profile = g.batches(15, 32);
+        let mut p = AccessPlanner::with_profile(&cfg, &profile, 0.05);
+        assert!(p.bijection(0).is_some());
+        assert!(p.bijection(1).is_none());
+        let batch = g.next_batch(16);
+        let mut plan = BatchPlan::default();
+        p.plan_into(&batch, &mut plan);
+        let raw0: Vec<u64> = batch.sparse_col(0, 2).collect();
+        let raw1: Vec<u64> = batch.sparse_col(1, 2).collect();
+        for (&mapped, &old) in plan.col(0).iter().zip(&raw0) {
+            assert!(mapped < 4000);
+            assert_eq!(mapped, p.bijection(0).unwrap().apply(old));
+        }
+        assert_eq!(plan.col(1), &raw1[..], "plain slot must stay untouched");
+    }
+
+    #[test]
+    fn online_refresh_updates_bijection() {
+        let cfg = cfg();
+        let mut g = gen();
+        let mut p = AccessPlanner::for_engine_cfg(&cfg);
+        let access = AccessCfg { refresh_every: 4, window: 8, ..Default::default() };
+        p.enable_online(&cfg, &access);
+        let mut plan = BatchPlan::default();
+        for _ in 0..8 {
+            let b = g.next_batch(64);
+            p.plan_into(&b, &mut plan);
+        }
+        assert_eq!(p.refreshes, 2);
+        assert!(p.bijection(0).is_some());
+        assert!(p.bijection(1).is_none(), "plain slots never reorder");
+    }
+}

@@ -1,23 +1,28 @@
 //! The Rec-AD arm: Eff-TT embeddings (reuse + aggregation + fused update)
-//! plus the offline index bijection applied per batch (§III-G/H).  All
-//! compressed tables are device-resident — no CPU↔GPU embedding traffic.
+//! plus the index bijection applied per batch (§III-G/H).  All compressed
+//! tables are device-resident — no CPU↔GPU embedding traffic.
+//!
+//! Since the access refactor this arm is pure *configuration* over the
+//! shared `access` layer: an [`AccessPlanner`] profiled offline owns the
+//! bijections and the per-batch remap/dedup; the arm itself just feeds
+//! plans to the engine.
 
 use std::time::Instant;
 
+use crate::access::{AccessPlanner, BatchPlan};
 use crate::baselines::{StepCost, TrainArm};
 use crate::coordinator::engine::{EngineCfg, NativeDlrm, TableSlot};
 use crate::coordinator::platform::SimPlatform;
 use crate::data::ctr::Batch;
-use crate::reorder::bijection::IndexBijection;
 use crate::util::prng::Rng;
 
 pub struct RecAd {
     pub engine: NativeDlrm,
     pub platform: SimPlatform,
-    /// Per-table bijection (None = identity; built offline from a
-    /// profiling sample, paper §III-H).
-    bijections: Vec<Option<IndexBijection>>,
-    scratch_batch: Batch,
+    /// Shared access-planning layer (bijections built offline from the
+    /// profiling sample, paper §III-H; identity when `reorder=false`).
+    pub planner: AccessPlanner,
+    plan: BatchPlan,
 }
 
 impl RecAd {
@@ -30,56 +35,26 @@ impl RecAd {
         reorder: bool,
         rng: &mut Rng,
     ) -> RecAd {
-        let ns = cfg.tables.len();
-        let mut bijections: Vec<Option<IndexBijection>> = (0..ns).map(|_| None).collect();
-        if reorder {
-            for (slot, &(rows, compressed)) in cfg.tables.iter().enumerate() {
-                if !compressed {
-                    continue; // reordering pays off on the TT tables
-                }
-                let cols: Vec<Vec<u64>> = profile
-                    .iter()
-                    .map(|b| b.sparse_col(slot, ns).collect())
-                    .collect();
-                let refs: Vec<&[u64]> = cols.iter().map(|c| c.as_slice()).collect();
-                bijections[slot] = Some(IndexBijection::build(rows, &refs, 0.05));
-            }
-        }
+        let planner = if reorder {
+            AccessPlanner::with_profile(&cfg, profile, 0.05)
+        } else {
+            AccessPlanner::for_engine_cfg(&cfg)
+        };
         RecAd {
             engine: NativeDlrm::new(cfg, rng),
             platform,
-            bijections,
-            scratch_batch: Batch { dense: vec![], sparse: vec![], labels: vec![], batch_size: 0 },
-        }
-    }
-
-    /// Apply the per-table bijections into the scratch batch (free-standing
-    /// borrow shape so the engine can be borrowed mutably afterwards).
-    fn remap_into(
-        scratch: &mut Batch,
-        bijections: &[Option<IndexBijection>],
-        batch: &Batch,
-        ns: usize,
-    ) {
-        scratch.dense.clear();
-        scratch.dense.extend_from_slice(&batch.dense);
-        scratch.labels.clear();
-        scratch.labels.extend_from_slice(&batch.labels);
-        scratch.sparse.clear();
-        scratch.sparse.extend_from_slice(&batch.sparse);
-        scratch.batch_size = batch.batch_size;
-        for (slot, bij) in bijections.iter().enumerate() {
-            if let Some(bij) = bij {
-                for r in 0..scratch.batch_size {
-                    let k = r * ns + slot;
-                    scratch.sparse[k] = bij.apply(scratch.sparse[k]);
-                }
-            }
+            planner,
+            plan: BatchPlan::default(),
         }
     }
 
     pub fn tt_stats(&self) -> crate::tt::table::TtStats {
         self.engine.tt_stats()
+    }
+
+    /// The plan of the most recent step (tests / instrumentation).
+    pub fn last_plan(&self) -> &BatchPlan {
+        &self.plan
     }
 }
 
@@ -91,14 +66,10 @@ impl TrainArm for RecAd {
     fn step(&mut self, batch: &Batch) -> StepCost {
         let dispatch = self.platform.cost.dispatch;
         let t = Instant::now();
-        // bijection application is part of the input pipeline (measured)
-        Self::remap_into(
-            &mut self.scratch_batch,
-            &self.bijections,
-            batch,
-            self.engine.cfg.n_tables(),
-        );
-        let loss = self.engine.train_step(&self.scratch_batch);
+        // access planning (remap + dedup) is part of the input pipeline
+        // (measured)
+        self.planner.plan_into(batch, &mut self.plan);
+        let loss = self.engine.train_step_planned(batch, &self.plan);
         StepCost { loss, compute: t.elapsed(), comm: dispatch }
     }
 
@@ -201,11 +172,16 @@ mod tests {
         let rows0 = arm.engine.cfg.tables[0].0;
         let before: Vec<u64> = eval[0].sparse.clone();
         arm.step(&eval[0]);
-        let remapped = arm.scratch_batch.sparse.clone();
-        // table-0 entries remapped within vocab, table-1 untouched
+        let plan = arm.last_plan();
+        // table-0 column remapped within vocab, table-1 untouched
         for r in 0..eval[0].batch_size {
-            assert!(remapped[r * ns] < rows0);
-            assert_eq!(remapped[r * ns + 1], before[r * ns + 1]);
+            assert!(plan.col(0)[r] < rows0);
+            assert_eq!(plan.col(1)[r], before[r * ns + 1]);
+        }
+        // remap is a function: same raw id -> same new id, every step
+        let bij = arm.planner.bijection(0).expect("profiled bijection");
+        for r in 0..eval[0].batch_size {
+            assert_eq!(arm.last_plan().col(0)[r], bij.apply(before[r * ns]));
         }
     }
 }

@@ -45,6 +45,63 @@ pub fn exec_arms() -> Vec<usize> {
     }
 }
 
+/// One measured bench arm, in `perf_probe`'s JSON schema: throughput +
+/// p50/p99 per-iteration latency at a worker count.
+pub struct BenchArm {
+    pub name: String,
+    pub workers: usize,
+    /// items (lookups or samples) per second
+    pub throughput: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+impl BenchArm {
+    /// Build an arm from repeated per-iteration wall times (seconds) and
+    /// the items processed per iteration.
+    pub fn from_iters(name: String, workers: usize, iters: &[f64], items: usize) -> BenchArm {
+        let s = crate::util::stats::summarize(iters);
+        BenchArm {
+            name,
+            workers,
+            throughput: items as f64 / s.p50,
+            p50_us: s.p50 * 1e6,
+            p99_us: s.p99 * 1e6,
+        }
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"name\": \"{}\", \"workers\": {}, \"throughput_per_sec\": {:.1}, \
+             \"p50_us\": {:.1}, \"p99_us\": {:.1}}}",
+            self.name, self.workers, self.throughput, self.p50_us, self.p99_us
+        )
+    }
+}
+
+/// Write `BENCH_<bench>.json` in `perf_probe`'s schema, then parse it
+/// back with the crate's JSON parser as a self-check (the CI smoke job
+/// relies on this failing loudly on malformed output).  Returns the path.
+pub fn write_bench_json(bench: &str, parallel_workers: usize, arms: &[BenchArm]) -> String {
+    let body: Vec<String> = arms.iter().map(|a| a.json()).collect();
+    let json = format!(
+        "{{\"bench\": \"{bench}\", \"parallel_workers\": {parallel_workers}, \
+         \"arms\": [\n  {}\n]}}\n",
+        body.join(",\n  ")
+    );
+    let path = format!("BENCH_{bench}.json");
+    std::fs::write(&path, &json).unwrap_or_else(|e| panic!("write {path}: {e}"));
+    let parsed = crate::util::json::Json::parse(&json)
+        .unwrap_or_else(|e| panic!("{path} is not valid JSON: {e:?}"));
+    let n = parsed
+        .get("arms")
+        .and_then(|a| a.as_arr())
+        .map(|a| a.len())
+        .unwrap_or(0);
+    assert_eq!(n, arms.len(), "{path}: arm count mismatch after round-trip");
+    path
+}
+
 /// Scale a schema's vocabularies (min 16 rows each).
 pub fn scaled(s: &DatasetSchema, scale: f64) -> DatasetSchema {
     DatasetSchema {

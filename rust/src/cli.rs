@@ -80,6 +80,8 @@ SUBCOMMANDS:
   train        Train the FDIA detector on synthetic IEEE-118 data
                --config file.toml  --epochs N  --batch N  --scale F
                --workers N  --no-reorder  --no-reuse  --pipeline
+               --plan-ahead N (ingest lookahead, 0 = inline planning)
+               --online-reorder (refresh the index bijection online)
   serve        Stream batch-1 detection over a held-out sample stream
                --requests N  --threshold F  --workers N (replica shards)
   gen-data     Generate and summarize the IEEE-118 FDIA dataset

@@ -7,6 +7,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
+use crate::access::AccessCfg;
 use crate::coordinator::engine::EngineCfg;
 use crate::exec::ExecCfg;
 use crate::tt::table::EffTtOptions;
@@ -142,6 +143,15 @@ pub struct RecAdConfig {
     /// exec-layer worker count (1 = serial; N-way intra-step parallelism
     /// is bit-identical to serial by construction).
     pub workers: usize,
+    /// access-layer ingest lookahead (`[access] plan_ahead` /
+    /// `--plan-ahead N`): batches assembled + planned ahead of training
+    /// on the ingest worker; 0 plans inline.  Bit-identical either way.
+    pub plan_ahead: usize,
+    /// refresh the index bijection online every `reorder_refresh` batches
+    /// (`[access] online_reorder` / `--online-reorder`).
+    pub online_reorder: bool,
+    /// batches between online bijection rebuilds.
+    pub reorder_refresh: usize,
     pub seed: u64,
     pub artifacts_dir: String,
 }
@@ -161,6 +171,9 @@ impl Default for RecAdConfig {
             fused_update: true,
             pipeline_lc: 4,
             workers: 1,
+            plan_ahead: AccessCfg::default().plan_ahead,
+            online_reorder: false,
+            reorder_refresh: AccessCfg::default().refresh_every,
             seed: 42,
             artifacts_dir: "artifacts".into(),
         }
@@ -183,6 +196,9 @@ impl RecAdConfig {
             fused_update: t.bool_or("tt.fused_update", d.fused_update),
             pipeline_lc: t.usize_or("pipeline.lc", d.pipeline_lc),
             workers: t.usize_or("exec.workers", d.workers).max(1),
+            plan_ahead: t.usize_or("access.plan_ahead", d.plan_ahead),
+            online_reorder: t.bool_or("access.online_reorder", d.online_reorder),
+            reorder_refresh: t.usize_or("access.refresh_every", d.reorder_refresh).max(1),
             seed: t.num_or("run.seed", d.seed as f64) as u64,
             artifacts_dir: t.str_or("run.artifacts_dir", &d.artifacts_dir).to_string(),
         }
@@ -204,6 +220,16 @@ impl RecAdConfig {
         };
         cfg.exec = ExecCfg::with_workers(self.workers);
         cfg
+    }
+
+    /// The `[access]` section as an [`AccessCfg`] for the ingest stage.
+    pub fn access_cfg(&self) -> AccessCfg {
+        AccessCfg {
+            plan_ahead: self.plan_ahead,
+            online_reorder: self.online_reorder,
+            refresh_every: self.reorder_refresh,
+            ..AccessCfg::default()
+        }
     }
 }
 
@@ -231,6 +257,11 @@ lc = 8
 
 [exec]
 workers = 3
+
+[access]
+plan_ahead = 2
+online_reorder = true
+refresh_every = 16
 "#;
         let t = Toml::parse(doc).unwrap();
         let c = RecAdConfig::from_toml(&t);
@@ -244,6 +275,23 @@ workers = 3
         assert_eq!(c.pipeline_lc, 8);
         assert_eq!(c.workers, 3);
         assert_eq!(c.seed, 7);
+        assert_eq!(c.plan_ahead, 2);
+        assert!(c.online_reorder);
+        assert_eq!(c.reorder_refresh, 16);
+        let a = c.access_cfg();
+        assert_eq!(a.plan_ahead, 2);
+        assert!(a.online_reorder);
+        assert_eq!(a.refresh_every, 16);
+    }
+
+    #[test]
+    fn access_defaults_without_section() {
+        let t = Toml::parse("[run]\nepochs = 1\n").unwrap();
+        let c = RecAdConfig::from_toml(&t);
+        let d = crate::access::AccessCfg::default();
+        assert_eq!(c.plan_ahead, d.plan_ahead);
+        assert!(!c.online_reorder);
+        assert_eq!(c.reorder_refresh, d.refresh_every);
     }
 
     #[test]

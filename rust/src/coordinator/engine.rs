@@ -9,6 +9,7 @@
 //! Architecture (paper Fig. 2): bottom MLP → [Eff-TT | plain] embedding
 //! lookups → pairwise-dot interaction → top MLP → BCE.
 
+use crate::access::plan::{BagLayout, BatchPlan};
 use crate::data::ctr::Batch;
 use crate::exec::par::{par_gemm_at_overwrite, par_gemm_bt_acc, par_row_blocks};
 use crate::exec::{ExecCfg, ExecPool};
@@ -185,7 +186,13 @@ struct EngineScratch {
     dz: Vec<f32>,
     dgram: Vec<f32>,
     dx: Vec<Vec<f32>>,        // ping-pong grads for MLP backward
+    pooled: Vec<f32>,         // [b, E] per-table lookup output
+    gemb: Vec<f32>,           // [b, E] per-table embedding grad
     tt: TtScratch,
+    /// Inline access plan for the unplanned-API wrappers; built once per
+    /// batch and shared by forward AND backward (the pre-refactor code
+    /// re-derived the index work in each).
+    plan: BatchPlan,
 }
 
 #[derive(Clone)]
@@ -195,6 +202,8 @@ pub struct NativeDlrm {
     pub top: Vec<DenseLayer>,
     pub tables: Vec<TableSlot>,
     scratch: EngineScratch,
+    /// Per-slot TT shapes (`None` = plain) for inline plan building.
+    table_shapes: Vec<Option<TtShapes>>,
     /// Shared exec pool; threaded into the MLPs, the interaction layer
     /// and every TT table.
     pool: ExecPool,
@@ -231,7 +240,22 @@ impl NativeDlrm {
                 }
             })
             .collect();
-        NativeDlrm { cfg, bot, top, tables, scratch: EngineScratch::default(), pool }
+        let table_shapes = crate::access::planner::table_shapes(&cfg);
+        NativeDlrm {
+            cfg,
+            bot,
+            top,
+            tables,
+            scratch: EngineScratch::default(),
+            table_shapes,
+            pool,
+        }
+    }
+
+    /// Per-slot TT shapes (`None` = plain slot) — what an external
+    /// `AccessPlanner` must plan against to feed this engine.
+    pub fn table_shapes(&self) -> &[Option<TtShapes>] {
+        &self.table_shapes
     }
 
     /// Re-target the exec layer (e.g. a bench switching workers=1 vs N,
@@ -267,10 +291,24 @@ impl NativeDlrm {
         self.embedding_bytes() + mlp as u64
     }
 
-    /// Forward pass; fills logits [b].  Indices may be pre-transformed by
-    /// the reordering bijection before this call.
+    /// Forward pass; fills logits [b].  Thin wrapper over
+    /// [`NativeDlrm::forward_planned`]: builds the access plan inline
+    /// (identity remap) into reusable scratch — bit-identical to feeding
+    /// a plan from the ingest stage.
     pub fn forward(&mut self, batch: &Batch, logits: &mut Vec<f32>) {
+        let mut plan = std::mem::take(&mut self.scratch.plan);
+        plan.build_into(batch, &self.table_shapes, &[]);
+        self.forward_planned(batch, &plan, logits);
+        self.scratch.plan = plan;
+    }
+
+    /// Plan-accepting forward pass.  `plan` must have been built over
+    /// this `batch` (columns remapped by whatever bijections the planner
+    /// holds) against this engine's [`NativeDlrm::table_shapes`]; the
+    /// engine reads sparse indices exclusively through it.
+    pub fn forward_planned(&mut self, batch: &Batch, plan: &BatchPlan, logits: &mut Vec<f32>) {
         let b = batch.batch_size;
+        debug_assert_eq!(plan.batch_size(), b, "plan built for a different batch");
         let cfg = &self.cfg;
         let e = cfg.emb_dim;
         let nf = cfg.n_feat();
@@ -297,22 +335,38 @@ impl NativeDlrm {
             scratch.z[r * nf * e..r * nf * e + e].copy_from_slice(&z0[r * e..(r + 1) * e]);
         }
         let ns = cfg.n_tables();
-        let mut col = vec![0u64; b];
-        let offsets: Vec<usize> = (0..=b).collect();
-        let mut pooled = vec![0.0f32; b * e];
+        scratch.pooled.resize(b * e, 0.0);
         for t in 0..ns {
-            for (r, v) in batch.sparse_col(t, ns).enumerate() {
-                col[r] = v;
-            }
+            // sparse indices come exclusively from the plan: columns are
+            // pre-extracted (and pre-remapped), TT dedup is precomputed,
+            // and unit-bag offsets are a cached slice instead of a fresh
+            // `(0..=b)` vector per call.  A TT slot without a plan (the
+            // planner skips slots whose opts never consult one) falls
+            // back to the inline-wrapper path.
             match &mut self.tables[t] {
-                TableSlot::Tt(tab) => {
-                    tab.embedding_bag(&col, &offsets, &mut pooled, &mut scratch.tt)
+                TableSlot::Tt(tab) => match plan.tt_plan(t) {
+                    Some(tp) => tab.embedding_bag_planned(
+                        plan.col(t),
+                        BagLayout::Unit(b),
+                        tp,
+                        &mut scratch.pooled,
+                        &mut scratch.tt,
+                    ),
+                    None => tab.embedding_bag(
+                        plan.col(t),
+                        plan.offsets(),
+                        &mut scratch.pooled,
+                        &mut scratch.tt,
+                    ),
+                },
+                TableSlot::Plain(tab) => {
+                    tab.embedding_bag(plan.col(t), plan.offsets(), &mut scratch.pooled)
                 }
-                TableSlot::Plain(tab) => tab.embedding_bag(&col, &offsets, &mut pooled),
             }
             for r in 0..b {
                 let dst = r * nf * e + (t + 1) * e;
-                scratch.z[dst..dst + e].copy_from_slice(&pooled[r * e..(r + 1) * e]);
+                scratch.z[dst..dst + e]
+                    .copy_from_slice(&scratch.pooled[r * e..(r + 1) * e]);
             }
         }
 
@@ -371,9 +425,32 @@ impl NativeDlrm {
         logits.iter().map(|&l| 1.0 / (1.0 + (-l).exp())).collect()
     }
 
+    /// Plan-accepting predictions: the serving path hands in per-replica
+    /// plan scratch so batch-1 requests allocate nothing.
+    pub fn predict_planned(&mut self, batch: &Batch, plan: &BatchPlan) -> Vec<f32> {
+        let mut logits = Vec::new();
+        self.forward_planned(batch, plan, &mut logits);
+        logits.iter().map(|&l| 1.0 / (1.0 + (-l).exp())).collect()
+    }
+
     /// One SGD step: forward, BCE, backward through every component.
     /// Returns the mean batch loss.
+    ///
+    /// Thin wrapper over [`NativeDlrm::train_step_planned`]: the plan is
+    /// built inline ONCE and shared by the forward and backward passes
+    /// (the pre-refactor code re-extracted columns and re-sorted the
+    /// occurrence list in each).
     pub fn train_step(&mut self, batch: &Batch) -> f32 {
+        let mut plan = std::mem::take(&mut self.scratch.plan);
+        plan.build_into(batch, &self.table_shapes, &[]);
+        let loss = self.train_step_planned(batch, &plan);
+        self.scratch.plan = plan;
+        loss
+    }
+
+    /// Plan-accepting SGD step (see [`NativeDlrm::forward_planned`] for
+    /// the plan contract).
+    pub fn train_step_planned(&mut self, batch: &Batch, plan: &BatchPlan) -> f32 {
         let b = batch.batch_size;
         let lr = self.cfg.lr;
         let e = self.cfg.emb_dim;
@@ -383,7 +460,7 @@ impl NativeDlrm {
         let pool = self.pool;
 
         let mut logits = Vec::new();
-        self.forward(batch, &mut logits);
+        self.forward_planned(batch, plan, &mut logits);
 
         // BCE-with-logits loss + dL/dlogit = (σ(l) − y)/b
         let mut loss = 0.0f32;
@@ -470,22 +547,36 @@ impl NativeDlrm {
         }
 
         // ---- embedding backward ------------------------------------------
-        let offsets: Vec<usize> = (0..=b).collect();
-        let mut col = vec![0u64; b];
-        let mut gemb = vec![0.0f32; b * e];
+        // columns, dedup and aggregation order all come from the plan —
+        // built once per batch, shared with the forward pass
+        scratch.gemb.resize(b * e, 0.0);
         for t in 0..ns {
-            for (r, v) in batch.sparse_col(t, ns).enumerate() {
-                col[r] = v;
-            }
             for r in 0..b {
                 let src = r * nf * e + (t + 1) * e;
-                gemb[r * e..(r + 1) * e].copy_from_slice(&scratch.dz[src..src + e]);
+                scratch.gemb[r * e..(r + 1) * e]
+                    .copy_from_slice(&scratch.dz[src..src + e]);
             }
             match &mut self.tables[t] {
-                TableSlot::Tt(tab) => {
-                    tab.backward_sgd(&col, &offsets, &gemb, lr, &mut scratch.tt)
+                TableSlot::Tt(tab) => match plan.tt_plan(t) {
+                    Some(tp) => tab.backward_sgd_planned(
+                        plan.col(t),
+                        BagLayout::Unit(b),
+                        tp,
+                        &scratch.gemb,
+                        lr,
+                        &mut scratch.tt,
+                    ),
+                    None => tab.backward_sgd(
+                        plan.col(t),
+                        plan.offsets(),
+                        &scratch.gemb,
+                        lr,
+                        &mut scratch.tt,
+                    ),
+                },
+                TableSlot::Plain(tab) => {
+                    tab.backward_sgd(plan.col(t), plan.offsets(), &scratch.gemb, lr)
                 }
-                TableSlot::Plain(tab) => tab.backward_sgd(&col, &offsets, &gemb, lr),
             }
         }
 

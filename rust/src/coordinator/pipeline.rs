@@ -19,6 +19,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::access::{AccessPlanner, BatchPlan};
 use crate::coordinator::cache::EmbeddingCache;
 use crate::coordinator::engine::{NativeDlrm, TableSlot};
 use crate::coordinator::params::{GradPacket, HostParams};
@@ -104,6 +105,8 @@ pub fn run(
         // -------- sequential arm: one thread, no overlap ----------------
         let n_sparse = engine.cfg.n_tables();
         let dim = engine.cfg.emb_dim;
+        let mut planner = AccessPlanner::for_engine_cfg(&engine.cfg);
+        let mut plan = BatchPlan::default();
         let mut cache = EmbeddingCache::new(cfg.cache_lc);
         let mut losses = Vec::with_capacity(batches.len());
         let mut moved = 0u64;
@@ -115,7 +118,8 @@ pub fn run(
             moved += bytes;
             cache.sync_prefetch(&mut pf); // no conflicts possible here
             install_rows(&mut engine, &pf.rows);
-            losses.push(engine.train_step(batch));
+            planner.plan_into(batch, &mut plan);
+            losses.push(engine.train_step_planned(batch, &plan));
             let packet = collect_updates(&engine, batch, &cfg.host_slots, n_sparse, step as u64);
             let pbytes = packet.bytes();
             SimPlatform::charge(cfg.cost.h2d_time(pbytes)); // D2H, same link
@@ -154,7 +158,16 @@ fn run_pipelined(
     let n_sparse = engine.cfg.n_tables();
     let dim = engine.cfg.emb_dim;
     let n = batches.len();
-    let prefetch_q = BoundedQueue::new(cfg.lc.max(1));
+    // The PS thread is also the ingest stage: it plans batch access
+    // (column extraction + TT dedup) alongside the parameter snapshot,
+    // overlapping both with the worker's compute.  Plans are pure
+    // functions of the batch, so pipeline == sequential still holds.
+    let mut planner = AccessPlanner::for_engine_cfg(&engine.cfg);
+    let prefetch_q: std::sync::Arc<BoundedQueue<(crate::coordinator::cache::PrefetchBatch, BatchPlan)>> =
+        BoundedQueue::new(cfg.lc.max(1));
+    // spent plan shells flow back worker → PS so the steady state reuses
+    // ~lc plan buffers instead of allocating one per step
+    let (plan_recycle_tx, plan_recycle_rx) = std::sync::mpsc::channel::<BatchPlan>();
     // grad queue effectively unbounded to keep the two blocking pushes
     // deadlock-free (PS only drains between prefetches)
     let grad_q: std::sync::Arc<BoundedQueue<GradPacket>> = BoundedQueue::new(n + 1);
@@ -166,6 +179,7 @@ fn run_pipelined(
         let ps_gq = grad_q.clone_arc();
         let ps_cost = cfg.cost;
         let ps_batches = batches;
+        let ps_planner = &mut planner;
         let ps_handle = scope.spawn(move || {
             let mut moved = 0u64;
             for (step, batch) in ps_batches.iter().enumerate() {
@@ -179,7 +193,9 @@ fn run_pipelined(
                 let bytes = (pf.rows.len() * dim * 4) as u64;
                 SimPlatform::charge(ps_cost.gather_time(pf.rows.len()) + ps_cost.h2d_time(bytes));
                 moved += bytes;
-                if !ps_pf.push(pf) {
+                let mut plan = plan_recycle_rx.try_recv().unwrap_or_default();
+                ps_planner.plan_into(batch, &mut plan);
+                if !ps_pf.push((pf, plan)) {
                     break;
                 }
             }
@@ -204,7 +220,7 @@ fn run_pipelined(
             let mut losses = Vec::with_capacity(n);
             let mut moved = 0u64;
             for (step, batch) in batches.iter().enumerate() {
-                let mut pf = match wk_pf.pop() {
+                let (mut pf, plan) = match wk_pf.pop() {
                     Some(p) => p,
                     None => break,
                 };
@@ -212,7 +228,7 @@ fn run_pipelined(
                     cache.sync_prefetch(&mut pf);
                 }
                 install_rows(&mut engine, &pf.rows);
-                losses.push(engine.train_step(batch));
+                losses.push(engine.train_step_planned(batch, &plan));
                 let packet =
                     collect_updates(&engine, batch, &host_slots, n_sparse, step as u64);
                 for (slot, row, vals) in &packet.rows {
@@ -223,6 +239,7 @@ fn run_pipelined(
                 moved += pbytes;
                 wk_gq.push(packet);
                 cache.end_step();
+                let _ = plan_recycle_tx.send(plan);
             }
             wk_gq.close();
             (engine, cache, losses, moved)

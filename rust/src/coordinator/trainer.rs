@@ -4,8 +4,10 @@
 
 use std::time::{Duration, Instant};
 
+use crate::access::{run_prefetched_fill, AccessCfg, AccessPlanner, BatchPlan};
 use crate::coordinator::engine::{EngineCfg, NativeDlrm};
-use crate::data::batcher::{to_batch, EpochIter};
+use crate::data::batcher::{fill_batch, EpochIter};
+use crate::data::ctr::Batch;
 use crate::metrics::classify::{evaluate, ClassifyReport};
 use crate::powersys::dataset::{Ieee118Dataset, Sample};
 use crate::util::prng::Rng;
@@ -21,7 +23,9 @@ pub struct TrainReport {
 }
 
 /// Train a detector on the IEEE118 dataset and evaluate on the held-out
-/// split.  Returns the trained engine for serving.
+/// split.  Returns the trained engine for serving.  Ingest runs through
+/// the access layer with the default lookahead; see
+/// [`train_ieee118_with`] for explicit access-layer policy.
 pub fn train_ieee118(
     cfg: EngineCfg,
     dataset: &Ieee118Dataset,
@@ -29,21 +33,46 @@ pub fn train_ieee118(
     batch_size: usize,
     seed: u64,
 ) -> (TrainReport, NativeDlrm) {
+    train_ieee118_with(cfg, &AccessCfg::default(), dataset, epochs, batch_size, seed)
+}
+
+/// [`train_ieee118`] with an explicit access-layer policy: batches are
+/// assembled + remapped + planned by the ingest stage (`access::ingest`)
+/// — with `plan_ahead > 0` on a worker thread overlapping training, which
+/// is bit-identical to inline planning by construction.
+pub fn train_ieee118_with(
+    cfg: EngineCfg,
+    access: &AccessCfg,
+    dataset: &Ieee118Dataset,
+    epochs: usize,
+    batch_size: usize,
+    seed: u64,
+) -> (TrainReport, NativeDlrm) {
     let (train, test) = dataset.split(0.8);
     let mut engine = NativeDlrm::new(cfg, &mut Rng::new(seed));
+    let mut planner = AccessPlanner::for_engine_cfg(&engine.cfg);
+    planner.configure(&engine.cfg, access);
     let mut rng = Rng::new(seed ^ 0xE90C);
     let mut loss_curve = Vec::new();
     let mut steps = 0u64;
     let t0 = Instant::now();
     for _ in 0..epochs {
-        let iter = EpochIter::new(train, batch_size, &mut rng);
-        for batch in iter {
-            loss_curve.push(engine.train_step(&batch));
-            steps += 1;
-        }
+        let mut iter = EpochIter::new(train, batch_size, &mut rng);
+        run_prefetched_fill(
+            |out| iter.next_into(out),
+            &mut planner,
+            access.plan_ahead,
+            |batch, plan| {
+                loss_curve.push(engine.train_step_planned(batch, plan));
+                steps += 1;
+            },
+        );
     }
     let wall = t0.elapsed();
-    let eval = evaluate_on(&mut engine, test);
+    // evaluate through the SAME (now frozen) remap the model was trained
+    // under — with online reordering the bijection the trainer ended on
+    // is the only one the learned embedding rows are consistent with
+    let eval = evaluate_on_with(&mut engine, &planner, test);
     let report = TrainReport {
         epochs,
         steps,
@@ -55,14 +84,29 @@ pub fn train_ieee118(
     (report, engine)
 }
 
-/// Evaluate a trained engine on a sample slice.
+/// Evaluate a trained engine on a sample slice (identity index mapping).
 pub fn evaluate_on(engine: &mut NativeDlrm, samples: &[Sample]) -> ClassifyReport {
+    let planner = AccessPlanner::for_engine_cfg(&engine.cfg);
+    evaluate_on_with(engine, &planner, samples)
+}
+
+/// Evaluate through a planner's CURRENT bijections (frozen — evaluation
+/// never advances online-reorder state).  Must be the planner the engine
+/// trained under whenever reordering is active; with an identity planner
+/// this is bit-identical to [`evaluate_on`]'s historical behavior.
+pub fn evaluate_on_with(
+    engine: &mut NativeDlrm,
+    planner: &AccessPlanner,
+    samples: &[Sample],
+) -> ClassifyReport {
     let mut probs = Vec::with_capacity(samples.len());
     let mut labels = Vec::with_capacity(samples.len());
+    let mut batch = Batch::default();
+    let mut plan = BatchPlan::default();
     for chunk in samples.chunks(256) {
-        let owned: Vec<Sample> = chunk.to_vec();
-        let batch = to_batch(&owned);
-        probs.extend(engine.predict(&batch));
+        fill_batch(chunk, &mut batch);
+        planner.plan_frozen_into(&batch, &mut plan);
+        probs.extend(engine.predict_planned(&batch, &plan));
         labels.extend(chunk.iter().map(|s| s.label));
     }
     evaluate(&probs, &labels, 0.5)

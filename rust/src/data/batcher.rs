@@ -1,22 +1,34 @@
 //! Mini-batch assembly from the IEEE118 dataset + EmbeddingBag layout
-//! helpers shared by the trainers.
+//! helpers shared by the trainers.  Assembly writes straight into
+//! caller-owned `Batch` scratch (`fill_batch` / `EpochIter::next_into`)
+//! so the ingest stage can recycle buffers instead of cloning samples
+//! twice per batch.
 
+use crate::access::plan::UnitOffsets;
 use crate::data::ctr::Batch;
 use crate::powersys::dataset::{Sample, N_DENSE, N_SPARSE};
 use crate::util::prng::Rng;
 
+/// Assemble samples into `out` (reused scratch: clears, never shrinks).
+pub fn fill_batch<'a, I: IntoIterator<Item = &'a Sample>>(samples: I, out: &mut Batch) {
+    out.dense.clear();
+    out.sparse.clear();
+    out.labels.clear();
+    for s in samples {
+        out.dense.extend_from_slice(&s.dense);
+        out.sparse.extend_from_slice(&s.sparse);
+        out.labels.push(s.label);
+    }
+    out.batch_size = out.labels.len();
+    debug_assert_eq!(out.dense.len(), out.batch_size * N_DENSE);
+    debug_assert_eq!(out.sparse.len(), out.batch_size * N_SPARSE);
+}
+
 /// Convert a window of IEEE118 samples into the DLRM batch layout.
 pub fn to_batch(samples: &[Sample]) -> Batch {
-    let b = samples.len();
-    let mut dense = Vec::with_capacity(b * N_DENSE);
-    let mut sparse = Vec::with_capacity(b * N_SPARSE);
-    let mut labels = Vec::with_capacity(b);
-    for s in samples {
-        dense.extend_from_slice(&s.dense);
-        sparse.extend_from_slice(&s.sparse);
-        labels.push(s.label);
-    }
-    Batch { dense, sparse, labels, batch_size: b }
+    let mut b = Batch::default();
+    fill_batch(samples, &mut b);
+    b
 }
 
 /// Epoch iterator: shuffled fixed-size batches over a sample slice.
@@ -37,31 +49,60 @@ impl<'a> EpochIter<'a> {
     pub fn num_batches(&self) -> usize {
         self.samples.len() / self.batch_size
     }
+
+    /// Assemble the next batch directly into reusable scratch (no
+    /// intermediate `Vec<&Sample>` / owned clone per batch); returns
+    /// `false` when the epoch is exhausted.  This is the ingest stage's
+    /// `fill` entry point (`access::ingest::run_prefetched_fill`).
+    pub fn next_into(&mut self, out: &mut Batch) -> bool {
+        if self.cursor + self.batch_size > self.order.len() {
+            return false;
+        }
+        let sel = &self.order[self.cursor..self.cursor + self.batch_size];
+        self.cursor += self.batch_size;
+        fill_batch(sel.iter().map(|&i| &self.samples[i]), out);
+        true
+    }
 }
 
 impl<'a> Iterator for EpochIter<'a> {
     type Item = Batch;
 
     fn next(&mut self) -> Option<Batch> {
-        if self.cursor + self.batch_size > self.order.len() {
-            return None;
+        let mut b = Batch::default();
+        if self.next_into(&mut b) {
+            Some(b)
+        } else {
+            None
         }
-        let sel: Vec<&Sample> = self.order[self.cursor..self.cursor + self.batch_size]
-            .iter()
-            .map(|&i| &self.samples[i])
-            .collect();
-        self.cursor += self.batch_size;
-        let owned: Vec<Sample> = sel.into_iter().cloned().collect();
-        Some(to_batch(&owned))
     }
 }
 
 /// Extract one sparse column of a batch as (indices, unit-bag offsets) —
 /// the EmbeddingBag calling convention for per-feature tables.
+/// Allocates both vectors; hot paths should use `column_bags_into` (or a
+/// `BatchPlan`, which caches the unit offsets and the dedup work too).
 pub fn column_bags(batch: &Batch, table: usize, n_sparse: usize) -> (Vec<u64>, Vec<usize>) {
-    let indices: Vec<u64> = batch.sparse_col(table, n_sparse).collect();
-    let offsets: Vec<usize> = (0..=indices.len()).collect();
-    (indices, offsets)
+    let mut indices = Vec::new();
+    let mut offsets = UnitOffsets::default();
+    column_bags_into(batch, table, n_sparse, &mut indices, &mut offsets);
+    let off = offsets.get(indices.len()).to_vec();
+    (indices, off)
+}
+
+/// Reusable-scratch variant of [`column_bags`]: the index column lands in
+/// `indices` and the `0..=len` unit-offset vector comes from the shared
+/// grow-only [`UnitOffsets`] cache instead of being rebuilt per call.
+pub fn column_bags_into<'a>(
+    batch: &Batch,
+    table: usize,
+    n_sparse: usize,
+    indices: &mut Vec<u64>,
+    offsets: &'a mut UnitOffsets,
+) -> &'a [usize] {
+    indices.clear();
+    indices.extend(batch.sparse_col(table, n_sparse));
+    offsets.get(indices.len())
 }
 
 #[cfg(test)]
@@ -103,6 +144,42 @@ mod tests {
         for b in &batches {
             assert_eq!(b.batch_size, 16);
         }
+    }
+
+    #[test]
+    fn next_into_reuses_scratch_and_matches_iterator() {
+        let ds = tiny_ds();
+        let mut rng_a = Rng::new(3);
+        let mut rng_b = Rng::new(3);
+        let mut a = EpochIter::new(&ds, 16, &mut rng_a);
+        let mut b = EpochIter::new(&ds, 16, &mut rng_b);
+        let mut scratch = Batch::default();
+        let mut seen = 0;
+        while b.next_into(&mut scratch) {
+            let owned = a.next().expect("iterator ended early");
+            assert_eq!(owned.dense, scratch.dense);
+            assert_eq!(owned.sparse, scratch.sparse);
+            assert_eq!(owned.labels, scratch.labels);
+            assert_eq!(owned.batch_size, scratch.batch_size);
+            seen += 1;
+        }
+        assert!(a.next().is_none());
+        assert_eq!(seen, 100 / 16);
+    }
+
+    #[test]
+    fn column_bags_into_uses_cached_offsets() {
+        let ds = tiny_ds();
+        let b = to_batch(&ds[..8]);
+        let mut idx = Vec::new();
+        let mut cache = crate::access::plan::UnitOffsets::default();
+        let off = column_bags_into(&b, 2, N_SPARSE, &mut idx, &mut cache).to_vec();
+        assert_eq!(off, (0..=8).collect::<Vec<_>>());
+        // second call on a smaller batch reuses the same backing store
+        let b2 = to_batch(&ds[..4]);
+        let off2 = column_bags_into(&b2, 0, N_SPARSE, &mut idx, &mut cache);
+        assert_eq!(off2, &[0, 1, 2, 3, 4]);
+        assert_eq!(idx.len(), 4);
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::data::zipf::Zipf;
 use crate::util::prng::Rng;
 
 /// A mini-batch in DLRM layout (bag size 1 per table, the CTR standard).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct Batch {
     pub dense: Vec<f32>,    // [b, n_dense] row-major
     pub sparse: Vec<u64>,   // [b, n_sparse] row-major

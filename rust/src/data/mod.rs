@@ -8,4 +8,4 @@ pub mod zipf;
 
 pub use ctr::{Batch, CtrGenerator};
 pub use schema::DatasetSchema;
-pub use zipf::Zipf;
+pub use zipf::{DriftingZipf, Zipf};

@@ -54,6 +54,51 @@ impl Zipf {
     }
 }
 
+/// Drifting Zipf stream — the online-reordering scenario generator.
+///
+/// Ids are Zipf-skewed, scrambled through a fixed random permutation
+/// (production realism: sparse ids are hash-assigned, so raw adjacency
+/// carries no locality — the §III-G premise), and the hot head can be
+/// **rotated** mid-stream: after `drift(delta)` the access mass moves to
+/// a previously cold region of the id space.  An offline-built bijection
+/// goes stale at that point; the online reorderer's periodic refresh is
+/// what recovers the reuse-hit rate (see `tests/plan_equivalence.rs`).
+///
+/// The permutation is materialized (8 bytes/row), so this is a
+/// test/bench-scale generator — not for Criteo-scale vocabularies.
+#[derive(Clone, Debug)]
+pub struct DriftingZipf {
+    z: Zipf,
+    perm: Vec<u64>,
+    n: u64,
+    rotation: u64,
+}
+
+impl DriftingZipf {
+    pub fn new(n: u64, s: f64, seed: u64) -> DriftingZipf {
+        assert!(n > 0);
+        let mut perm: Vec<u64> = (0..n).collect();
+        Rng::new(seed).shuffle(&mut perm);
+        DriftingZipf { z: Zipf::new(n, s), perm, n, rotation: 0 }
+    }
+
+    /// Shift the distribution: rank r now lands where rank r−delta used
+    /// to — the old hot set goes cold and a scrambled cold region heats.
+    pub fn drift(&mut self, delta: u64) {
+        self.rotation = (self.rotation + delta) % self.n;
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        self.perm[((self.z.sample(rng) + self.rotation) % self.n) as usize]
+    }
+
+    pub fn sample_many(&self, rng: &mut Rng, out: &mut [u64]) {
+        for v in out.iter_mut() {
+            *v = self.sample(rng);
+        }
+    }
+}
+
 /// H(x) = ∫ x^-s dx antiderivative (s ≠ 1 branch handled via expm1).
 fn h(x: f64, s: f64) -> f64 {
     let log_x = x.ln();
@@ -137,5 +182,29 @@ mod tests {
         let z = Zipf::new(1, 1.0);
         let mut rng = Rng::new(5);
         assert_eq!(z.sample(&mut rng), 0);
+    }
+
+    #[test]
+    fn drift_moves_the_hot_set() {
+        let mut dz = DriftingZipf::new(5000, 1.3, 7);
+        let mut rng = Rng::new(6);
+        let hot_ids = |dz: &DriftingZipf, rng: &mut Rng| -> std::collections::HashSet<u64> {
+            let mut counts = std::collections::HashMap::new();
+            for _ in 0..8000 {
+                *counts.entry(dz.sample(rng)).or_insert(0u64) += 1;
+            }
+            let mut v: Vec<(u64, u64)> = counts.into_iter().collect();
+            v.sort_by_key(|&(id, c)| (std::cmp::Reverse(c), id));
+            v.into_iter().take(20).map(|(id, _)| id).collect()
+        };
+        let before = hot_ids(&dz, &mut rng);
+        dz.drift(2500);
+        let after = hot_ids(&dz, &mut rng);
+        let overlap = before.intersection(&after).count();
+        assert!(overlap <= 2, "hot set barely moved: overlap {overlap}/20");
+        // samples stay in range after drift
+        for _ in 0..2000 {
+            assert!(dz.sample(&mut rng) < 5000);
+        }
     }
 }

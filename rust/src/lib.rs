@@ -1,6 +1,7 @@
 //! Rec-AD: Tensor-Train-compressed DLRM for FDIA detection.
 #![allow(clippy::needless_range_loop)]
 
+pub mod access;
 pub mod baselines;
 pub mod bench_support;
 pub mod cli;

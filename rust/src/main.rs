@@ -64,6 +64,10 @@ fn load_config(cli: &Cli) -> Result<RecAdConfig> {
     cfg.batch_size = cli.usize_or("batch", cfg.batch_size)?;
     cfg.scale = cli.f64_or("scale", cfg.scale)?;
     cfg.workers = cli.usize_or("workers", cfg.workers)?.max(1);
+    cfg.plan_ahead = cli.usize_or("plan-ahead", cfg.plan_ahead)?;
+    if cli.flag("online-reorder") {
+        cfg.online_reorder = true;
+    }
     if cli.flag("no-reorder") {
         cfg.reorder = false;
     }
@@ -106,18 +110,22 @@ fn cmd_train(cli: &Cli) -> Result<()> {
         let eval = trainer::evaluate_on(&mut engine, ds.split(0.8).1);
         print_eval(&eval);
     } else {
-        let (report, _) = trainer::train_ieee118(
+        let access = cfg.access_cfg();
+        let (report, _) = trainer::train_ieee118_with(
             cfg.engine_cfg(),
+            &access,
             &ds,
             cfg.epochs,
             cfg.batch_size,
             cfg.seed,
         );
         println!(
-            "trained {} steps in {} ({:.0} samples/s)",
+            "trained {} steps in {} ({:.0} samples/s; ingest plan-ahead {}{})",
             report.steps,
             fmt_dur(report.wall.as_secs_f64()),
-            report.samples_per_sec
+            report.samples_per_sec,
+            access.plan_ahead,
+            if access.online_reorder { ", online reorder" } else { "" }
         );
         let show = report.loss_curve.len().min(10);
         let stride = (report.loss_curve.len() / show).max(1);

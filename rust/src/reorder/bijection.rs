@@ -27,6 +27,7 @@ use crate::reorder::louvain::louvain;
 /// materialize (≤ `DENSE_LIMIT` rows) the permutation is a flat array —
 /// O(1) lookup on the hot path; larger tables keep the sparse map and
 /// fall back to identity for unprofiled ids.
+#[derive(Clone)]
 pub struct IndexBijection {
     /// old index -> new index (sparse: only remapped ids stored)
     map: HashMap<u64, u64>,
@@ -65,6 +66,19 @@ impl IndexBijection {
         for b in batches {
             freq.observe(b);
         }
+        Self::build_with_freq(rows, &freq, batches, hot_ratio)
+    }
+
+    /// Like [`IndexBijection::build`], but with the frequency statistics
+    /// supplied by the caller — the online reorderer maintains them
+    /// incrementally (with decay) across a longer horizon than the
+    /// co-occurrence `batches` window.
+    pub fn build_with_freq(
+        rows: u64,
+        freq: &FreqCounter,
+        batches: &[&[u64]],
+        hot_ratio: f64,
+    ) -> IndexBijection {
         let hot = freq.hot_set(hot_ratio);
 
         let mut gb = GraphBuilder::new(&hot);

@@ -9,7 +9,7 @@
 use std::collections::HashMap;
 
 /// Frequency statistics over a stream of index batches.
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct FreqCounter {
     counts: HashMap<u64, u64>,
     total: u64,
@@ -64,6 +64,19 @@ impl FreqCounter {
         out
     }
 
+    /// Exponentially age the counts (online reordering: stale access mass
+    /// must fade under drift).  Counts are scaled by `factor` with floor
+    /// division; ids decayed to zero are dropped.
+    pub fn decay(&mut self, factor: f64) {
+        let factor = factor.clamp(0.0, 1.0);
+        self.total = 0;
+        self.counts.retain(|_, c| {
+            *c = (*c as f64 * factor) as u64;
+            *c > 0
+        });
+        self.total = self.counts.values().sum();
+    }
+
     /// Fraction of total accesses covered by the `k` most frequent ids
     /// (the power-law diagnostic the paper cites).
     pub fn coverage_topk(&self, k: usize) -> f64 {
@@ -100,6 +113,18 @@ mod tests {
         assert_eq!(hot, vec![1]);
         let hot = f.hot_set(0.9);
         assert_eq!(hot, vec![1, 2]);
+    }
+
+    #[test]
+    fn decay_halves_and_drops_zeros() {
+        let mut f = FreqCounter::new();
+        f.observe(&[1, 1, 1, 1, 2, 2, 3]);
+        f.decay(0.5);
+        assert_eq!(f.count_of(1), 2);
+        assert_eq!(f.count_of(2), 1);
+        assert_eq!(f.count_of(3), 0, "count 1 must floor-decay to zero");
+        assert_eq!(f.distinct(), 2);
+        assert_eq!(f.total(), 3);
     }
 
     #[test]

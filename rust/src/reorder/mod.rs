@@ -5,8 +5,10 @@ pub mod bijection;
 pub mod freq;
 pub mod graph;
 pub mod louvain;
+pub mod online;
 
 pub use bijection::IndexBijection;
 pub use freq::FreqCounter;
+pub use online::OnlineReorderer;
 pub use graph::{GraphBuilder, IndexGraph};
 pub use louvain::{louvain, modularity, Communities};

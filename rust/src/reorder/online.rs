@@ -1,0 +1,148 @@
+//! Online index reordering: an incremental frequency tracker that
+//! refreshes the dual-projection bijection every K batches, so the
+//! reuse-buffer hit rate tracks *drifting* index distributions instead of
+//! being pinned to an offline profiling sample (paper §III-H builds the
+//! bijection offline; this is the streaming extension the access layer
+//! enables).
+//!
+//! Semantics note: refreshing the bijection mid-training re-assigns
+//! embedding rows to entities that moved (the standard re-bucketing
+//! trade-off of hot/cold systems like FAE); it is a *systems*
+//! optimization — the drift test in `tests/plan_equivalence.rs` measures
+//! its effect on prefix sharing, not on model accuracy.
+
+use std::collections::VecDeque;
+
+use crate::reorder::bijection::IndexBijection;
+use crate::reorder::freq::FreqCounter;
+
+/// Per-table online reorder state.
+#[derive(Clone)]
+pub struct OnlineReorderer {
+    rows: u64,
+    hot_ratio: f64,
+    refresh_every: usize,
+    window_cap: usize,
+    /// Incremental frequency counts, exponentially decayed at each
+    /// refresh so stale mass ages out under drift.
+    freq: FreqCounter,
+    /// Recent raw index batches — the co-occurrence sample the next
+    /// refresh builds its community graph from.
+    window: VecDeque<Vec<u64>>,
+    since_refresh: usize,
+    /// Current bijection (identity until the first refresh).
+    pub bijection: IndexBijection,
+    /// Number of rebuilds performed.
+    pub refreshes: u64,
+}
+
+impl OnlineReorderer {
+    /// `refresh_every`: batches between bijection rebuilds (K).
+    /// `window_cap`: co-occurrence sample size kept for the rebuild.
+    pub fn new(rows: u64, hot_ratio: f64, refresh_every: usize, window_cap: usize) -> Self {
+        assert!(refresh_every >= 1, "refresh interval must be >= 1");
+        OnlineReorderer {
+            rows,
+            hot_ratio,
+            refresh_every,
+            window_cap: window_cap.max(1),
+            freq: FreqCounter::new(),
+            window: VecDeque::new(),
+            since_refresh: 0,
+            bijection: IndexBijection::identity(rows),
+            refreshes: 0,
+        }
+    }
+
+    /// Feed one RAW (pre-remap) index column; returns `true` when this
+    /// call triggered a bijection refresh.
+    pub fn observe(&mut self, col: &[u64]) -> bool {
+        self.freq.observe(col);
+        if self.window.len() == self.window_cap {
+            self.window.pop_front();
+        }
+        self.window.push_back(col.to_vec());
+        self.since_refresh += 1;
+        if self.since_refresh < self.refresh_every {
+            return false;
+        }
+        self.since_refresh = 0;
+        let refs: Vec<&[u64]> = self.window.iter().map(|v| v.as_slice()).collect();
+        self.bijection =
+            IndexBijection::build_with_freq(self.rows, &self.freq, &refs, self.hot_ratio);
+        // half-life = one refresh interval: old hot sets fade instead of
+        // anchoring the layout forever
+        self.freq.decay(0.5);
+        self.refreshes += 1;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::zipf::Zipf;
+    use crate::tt::shapes::TtShapes;
+    use crate::util::prng::Rng;
+
+    fn distinct_prefixes(shapes: &TtShapes, batch: &[u64]) -> usize {
+        let s: std::collections::HashSet<u64> =
+            batch.iter().map(|&i| shapes.prefix_of(i)).collect();
+        s.len()
+    }
+
+    #[test]
+    fn identity_until_first_refresh() {
+        let mut o = OnlineReorderer::new(1000, 0.1, 4, 8);
+        assert!(!o.observe(&[1, 2, 3]));
+        assert_eq!(o.refreshes, 0);
+        for i in 0..1000 {
+            assert_eq!(o.bijection.apply(i), i);
+        }
+    }
+
+    #[test]
+    fn refresh_fires_every_k_batches() {
+        let mut o = OnlineReorderer::new(4000, 0.1, 3, 8);
+        let mut rng = Rng::new(1);
+        let z = Zipf::new(4000, 1.2);
+        let mut fired = Vec::new();
+        for step in 0..9 {
+            let col: Vec<u64> = (0..64).map(|_| z.sample(&mut rng)).collect();
+            if o.observe(&col) {
+                fired.push(step);
+            }
+        }
+        assert_eq!(fired, vec![2, 5, 8]);
+        assert_eq!(o.refreshes, 3);
+    }
+
+    #[test]
+    fn refreshed_bijection_improves_prefix_sharing_on_scrambled_stream() {
+        // scrambled ids (hash realism): raw adjacency carries no locality
+        let vocab = 6000u64;
+        let shapes = TtShapes::plan(vocab, 16, 8);
+        let mut perm: Vec<u64> = (0..vocab).collect();
+        Rng::new(0xD15C).shuffle(&mut perm);
+        let z = Zipf::new(vocab, 1.2);
+        let mut rng = Rng::new(2);
+        let mut o = OnlineReorderer::new(vocab, 0.1, 16, 16);
+        for _ in 0..16 {
+            let col: Vec<u64> =
+                (0..128).map(|_| perm[z.sample(&mut rng) as usize]).collect();
+            o.observe(&col);
+        }
+        assert_eq!(o.refreshes, 1);
+        // fresh batches from the same distribution
+        let mut before = 0usize;
+        let mut after = 0usize;
+        for _ in 0..8 {
+            let col: Vec<u64> =
+                (0..128).map(|_| perm[z.sample(&mut rng) as usize]).collect();
+            before += distinct_prefixes(&shapes, &col);
+            let remapped: Vec<u64> = col.iter().map(|&i| o.bijection.apply(i)).collect();
+            after += distinct_prefixes(&shapes, &remapped);
+        }
+        assert!(after < before, "online bijection did not help: {after} !< {before}");
+    }
+}

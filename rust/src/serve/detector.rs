@@ -4,6 +4,7 @@
 
 use std::time::Duration;
 
+use crate::access::{AccessPlanner, BatchPlan};
 use crate::coordinator::engine::NativeDlrm;
 use crate::data::ctr::Batch;
 use crate::powersys::dataset::{Sample, N_DENSE, N_SPARSE};
@@ -18,21 +19,34 @@ pub struct Verdict {
 }
 
 /// `Clone` so a trained detector can be replicated across serving shards
-/// (`StreamingServer::start_sharded`) without retraining.
+/// (`StreamingServer::start_sharded`) without retraining.  Each clone
+/// carries its own batch + access-plan scratch, so every serving replica
+/// plans requests allocation-free with zero cross-replica sharing.
 #[derive(Clone)]
 pub struct Detector {
     pub engine: NativeDlrm,
     pub threshold: f32,
     scratch: Batch,
+    planner: AccessPlanner,
+    plan: BatchPlan,
 }
 
 impl Detector {
     pub fn new(engine: NativeDlrm, threshold: f32) -> Detector {
+        let planner = AccessPlanner::for_engine_cfg(&engine.cfg);
         Detector {
             engine,
             threshold,
-            scratch: Batch { dense: vec![], sparse: vec![], labels: vec![], batch_size: 0 },
+            scratch: Batch::default(),
+            planner,
+            plan: BatchPlan::default(),
         }
+    }
+
+    /// Run the assembled scratch batch through the planned predict path.
+    fn predict_scratch(&mut self) -> Vec<f32> {
+        self.planner.plan_into(&self.scratch, &mut self.plan);
+        self.engine.predict_planned(&self.scratch, &self.plan)
     }
 
     /// Score one sample (batch-1 streaming path).
@@ -44,7 +58,7 @@ impl Detector {
         self.scratch.labels.clear();
         self.scratch.labels.push(0.0);
         self.scratch.batch_size = 1;
-        self.engine.predict(&self.scratch)[0]
+        self.predict_scratch()[0]
     }
 
     /// Score a micro-batch of samples at once (router path).
@@ -61,7 +75,7 @@ impl Detector {
         debug_assert_eq!(self.scratch.dense.len(), b * N_DENSE);
         debug_assert_eq!(self.scratch.sparse.len(), b * N_SPARSE);
         self.scratch.batch_size = b;
-        self.engine.predict(&self.scratch)
+        self.predict_scratch()
     }
 
     pub fn verdict(&mut self, sample: &Sample, latency: Duration) -> Verdict {

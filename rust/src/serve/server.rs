@@ -10,6 +10,12 @@
 //! exec layer's intra-step parallelism, letting a Table VI-style stream
 //! saturate multiple cores.  Replicas are identical trained models, so
 //! verdicts are independent of which shard serves a request.
+//!
+//! **Access planning** (access refactor): each replica's [`Detector`]
+//! owns its batch + `BatchPlan` scratch, so request handling reuses
+//! per-replica plan buffers (column extraction, dedup, unit-bag offsets)
+//! instead of re-deriving index work per request — allocation-free in
+//! steady state, with no cross-replica synchronization.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;

@@ -25,6 +25,7 @@
 
 use std::ops::Range;
 
+use crate::access::plan::{BagLayout, TtPlan};
 use crate::exec::par::{par_row_blocks, PAR_MIN_WORK};
 use crate::exec::{split_ranges, ExecPool};
 use crate::tt::linalg::{add_assign, axpy, gemm_acc, gemm_at_acc, gemm_bt_acc};
@@ -94,13 +95,10 @@ pub struct TtScratch {
     index_slot: Vec<u32>,
     /// distinct-row materialization buffer [uniq_rows, dim].
     row: Vec<f32>,
-    /// ascending distinct row ids of the current batch (sorted sweep).
-    uniq_rows: Vec<u64>,
-    /// indices into `uniq_rows` where a new TT prefix begins — the shard
-    /// boundaries the exec layer may cut at without recomputing a prefix.
-    group_starts: Vec<u32>,
-    /// backward: sort-based aggregation workspace ((row, bag) pairs) and
-    /// the aggregated per-distinct-row gradient buffer.
+    /// inline access plan for the unplanned-API wrappers (dedup, prefix
+    /// groups, scatter map, aggregation order — see `access::plan`).
+    plan: TtPlan,
+    /// backward non-aggregated work list ((row, bag) pairs in bag order).
     occ: Vec<(u64, u32)>,
     agg_rows: Vec<u64>,
     agg_grads: Vec<f32>,
@@ -342,6 +340,12 @@ impl EffTtTable {
     ///
     /// `offsets` has `num_bags + 1` entries; bag b pools
     /// `indices[offsets[b]..offsets[b+1]]`.
+    ///
+    /// Thin wrapper over [`EffTtTable::embedding_bag_planned`]: builds the
+    /// access plan inline (into `scratch.plan`, reused across calls) with
+    /// the exact sweeps the pre-refactor code ran, so results are
+    /// bit-identical.  Callers with a plan from the ingest stage skip the
+    /// inline build entirely.
     pub fn embedding_bag(
         &mut self,
         indices: &[u64],
@@ -349,50 +353,51 @@ impl EffTtTable {
         out: &mut [f32],
         scratch: &mut TtScratch,
     ) {
+        let mut plan = std::mem::take(&mut scratch.plan);
+        if self.opts.reuse {
+            plan.build_forward(self.shapes, indices, BagLayout::Offsets(offsets));
+        }
+        self.embedding_bag_planned(indices, BagLayout::Offsets(offsets), &plan, out, scratch);
+        scratch.plan = plan;
+    }
+
+    /// Plan-accepting EmbeddingBag(sum) forward.  `plan` must have been
+    /// built (`build_forward`/`build`) over exactly these `indices` and
+    /// this table's shapes when `opts.reuse` is on; the TT-Rec
+    /// (no-reuse) arm recomputes per occurrence and ignores the plan.
+    pub fn embedding_bag_planned(
+        &mut self,
+        indices: &[u64],
+        bags: BagLayout,
+        plan: &TtPlan,
+        out: &mut [f32],
+        scratch: &mut TtScratch,
+    ) {
         let s = self.shapes;
         let dim = s.dim;
-        let bags = offsets.len() - 1;
-        assert_eq!(out.len(), bags * dim);
-        assert_eq!(*offsets.last().unwrap(), indices.len());
+        let n_bags = bags.num_bags();
+        assert_eq!(out.len(), n_bags * dim);
+        assert_eq!(bags.total(), indices.len());
         for &i in indices {
             assert!(i < s.rows, "index {i} out of range {}", s.rows);
         }
         let plen = s.n[0] * s.n[1] * s.rank;
         if self.opts.reuse {
-            // §Perf L3 iteration 4 + exec refactor: sample-level reuse
-            // (paper §III-B "intermediate results from each embedding ROW
-            // can be recycled") over the shared parallel layer.  One
-            // serial sweep over the sorted (index, pos) pairs dedups rows
-            // and prefixes and records prefix-group boundaries; distinct
-            // rows are then materialized in parallel, sharded ONLY at
-            // group boundaries so each distinct prefix product is still
+            // §Perf L3 iteration 4 + exec refactor + access layer:
+            // sample-level reuse (paper §III-B "intermediate results from
+            // each embedding ROW can be recycled") over the shared
+            // parallel layer, driven by the precomputed plan (distinct
+            // rows, prefix-group boundaries, scatter map).  Distinct rows
+            // are materialized in parallel, sharded ONLY at group
+            // boundaries so each distinct prefix product is still
             // computed exactly once (TtStats counts identical to serial);
-            // finally rows are scatter-added into bags, sharded by bag.
+            // then rows are scatter-added into bags, sharded by bag.
             // Every parallel stage is bit-identical to workers=1.
-            scratch.order.clear();
-            scratch
-                .order
-                .extend(indices.iter().enumerate().map(|(k, &i)| (i, k as u32)));
-            scratch.order.sort_unstable();
-            scratch.index_slot.resize(indices.len(), 0);
-            scratch.uniq_rows.clear();
-            scratch.group_starts.clear();
-            let mut last_row = u64::MAX;
-            let mut last_pref = u64::MAX;
-            for &(idx, pos) in scratch.order.iter() {
-                if idx != last_row {
-                    let pf = s.prefix_of(idx);
-                    if pf != last_pref {
-                        scratch.group_starts.push(scratch.uniq_rows.len() as u32);
-                        last_pref = pf;
-                    }
-                    scratch.uniq_rows.push(idx);
-                    last_row = idx;
-                }
-                scratch.index_slot[pos as usize] = (scratch.uniq_rows.len() - 1) as u32;
-            }
-            let uniq_rows = scratch.uniq_rows.len();
-            let uniq_pref = scratch.group_starts.len();
+            assert!(plan.forward_ready(), "plan missing forward section");
+            debug_assert_eq!(plan.shapes(), Some(s), "plan built for different shapes");
+            assert_eq!(plan.n_indices(), indices.len(), "plan/indices length mismatch");
+            let uniq_rows = plan.uniq_rows.len();
+            let uniq_pref = plan.group_starts.len();
             self.stats.prefix_gemms += uniq_pref as u64;
             self.stats.hop2_gemms += uniq_rows as u64;
             self.stats.reuse_hits += (indices.len() - uniq_pref) as u64;
@@ -405,9 +410,9 @@ impl EffTtTable {
             } else {
                 self.pool.workers()
             };
-            let shards = shard_by_groups(&scratch.group_starts, uniq_rows, par_workers);
+            let shards = shard_by_groups(&plan.group_starts, uniq_rows, par_workers);
             let table = &*self;
-            let rows_list = &scratch.uniq_rows[..];
+            let rows_list = &plan.uniq_rows[..];
             if shards.len() <= 1 {
                 fill_rows(
                     table,
@@ -444,24 +449,38 @@ impl EffTtTable {
             }
 
             // scatter-add distinct rows into bags (bag-sharded; each
-            // bag's accumulation order is exactly the serial one)
+            // bag's accumulation order is exactly the serial one).  The
+            // unit-bag case skips the offsets indirection entirely.
             let rowbuf = &scratch.row[..];
-            let slots = &scratch.index_slot[..];
+            let slots = &plan.index_slot[..];
             let scatter_pool = if indices.len() * dim < PAR_MIN_WORK {
                 ExecPool::serial()
             } else {
                 self.pool
             };
-            par_row_blocks(&scatter_pool, out, dim, |b0, oblock| {
-                for (bi, dst) in oblock.chunks_mut(dim).enumerate() {
-                    let b = b0 + bi;
-                    dst.fill(0.0);
-                    for k in offsets[b]..offsets[b + 1] {
-                        let slot = slots[k] as usize;
-                        add_assign(dst, &rowbuf[slot * dim..(slot + 1) * dim]);
-                    }
+            match bags {
+                BagLayout::Unit(_) => {
+                    par_row_blocks(&scatter_pool, out, dim, |b0, oblock| {
+                        for (bi, dst) in oblock.chunks_mut(dim).enumerate() {
+                            let slot = slots[b0 + bi] as usize;
+                            dst.fill(0.0);
+                            add_assign(dst, &rowbuf[slot * dim..(slot + 1) * dim]);
+                        }
+                    });
                 }
-            });
+                BagLayout::Offsets(offsets) => {
+                    par_row_blocks(&scatter_pool, out, dim, |b0, oblock| {
+                        for (bi, dst) in oblock.chunks_mut(dim).enumerate() {
+                            let b = b0 + bi;
+                            dst.fill(0.0);
+                            for k in offsets[b]..offsets[b + 1] {
+                                let slot = slots[k] as usize;
+                                add_assign(dst, &rowbuf[slot * dim..(slot + 1) * dim]);
+                            }
+                        }
+                    });
+                }
+            }
         } else {
             // TT-Rec path: recompute everything per occurrence; bags are
             // independent, so the pooling loop shards across bags.
@@ -473,9 +492,9 @@ impl EffTtTable {
                 scratch.row.resize(dim, 0.0);
                 let mut row_tmp = std::mem::take(&mut scratch.row);
                 out.fill(0.0);
-                for b in 0..bags {
+                for b in 0..n_bags {
                     let dst = &mut out[b * dim..(b + 1) * dim];
-                    for k in offsets[b]..offsets[b + 1] {
+                    for k in bags.range(b) {
                         let idx = indices[k];
                         let slot = scratch.index_slot[k] as usize;
                         let p = &scratch.buf[slot * plen..(slot + 1) * plen];
@@ -493,7 +512,7 @@ impl EffTtTable {
                     for (bi, dst) in oblock.chunks_mut(dim).enumerate() {
                         let b = b0 + bi;
                         dst.fill(0.0);
-                        for k in offsets[b]..offsets[b + 1] {
+                        for k in bags.range(b) {
                             let idx = indices[k];
                             let slot = slots[k] as usize;
                             let p = &buf[slot * plen..(slot + 1) * plen];
@@ -518,6 +537,10 @@ impl EffTtTable {
     /// updated in place with learning rate `lr` (the paper's fused update);
     /// when `fused_update` is off the grads are first fully materialized
     /// per-core and then applied (extra traffic, as in TT-Rec).
+    ///
+    /// Thin wrapper over [`EffTtTable::backward_sgd_planned`]: builds the
+    /// plan's backward section inline (same occurrence sort as the
+    /// pre-refactor code → bit-identical results).
     pub fn backward_sgd(
         &mut self,
         indices: &[u64],
@@ -526,30 +549,58 @@ impl EffTtTable {
         lr: f32,
         scratch: &mut TtScratch,
     ) {
+        let mut plan = std::mem::take(&mut scratch.plan);
+        if self.opts.grad_aggregation {
+            plan.build_backward(self.shapes, indices, BagLayout::Offsets(offsets));
+        }
+        self.backward_sgd_planned(
+            indices,
+            BagLayout::Offsets(offsets),
+            &plan,
+            grad_out,
+            lr,
+            scratch,
+        );
+        scratch.plan = plan;
+    }
+
+    /// Plan-accepting backward + (optionally fused) SGD update.  With
+    /// gradient aggregation on, `plan` supplies the sorted occurrence
+    /// list (its backward section must cover exactly these `indices`);
+    /// without aggregation the occurrence list is the natural bag order
+    /// and the plan is not consulted.
+    pub fn backward_sgd_planned(
+        &mut self,
+        indices: &[u64],
+        bags: BagLayout,
+        plan: &TtPlan,
+        grad_out: &[f32],
+        lr: f32,
+        scratch: &mut TtScratch,
+    ) {
         let s = self.shapes;
         let dim = s.dim;
-        let bags = offsets.len() - 1;
-        assert_eq!(grad_out.len(), bags * dim);
+        let n_bags = bags.num_bags();
+        assert_eq!(grad_out.len(), n_bags * dim);
+        debug_assert_eq!(bags.total(), indices.len());
 
         // ---- step 1: advance gradient aggregation (Fig. 5b) -------------
-        // Sort-based segmented accumulation (§Perf L3 iteration 2): the
-        // occurrence list (row, bag) is sorted by row and gradients are
-        // summed into ONE flat reusable buffer — no HashMap, no per-row
-        // Vec allocations.  Sorted order also keeps fused updates to
-        // shared core slices bit-for-bit reproducible across runs (the
-        // pipeline == sequential guarantee relies on it).
-        scratch.occ.clear();
-        for b in 0..bags {
-            for k in offsets[b]..offsets[b + 1] {
-                scratch.occ.push((indices[k], b as u32));
-            }
-        }
+        // Sort-based segmented accumulation (§Perf L3 iteration 2), with
+        // the sort hoisted into the access plan: gradients of repeated
+        // rows are summed into ONE flat reusable buffer by sweeping the
+        // plan's sorted (row, bag) occurrence list — no HashMap, no
+        // per-row Vec allocations, and no per-call sort when the plan
+        // comes from the ingest stage.  Sorted order also keeps fused
+        // updates to shared core slices bit-for-bit reproducible across
+        // runs (the pipeline == sequential guarantee relies on it).
         if self.opts.grad_aggregation {
-            scratch.occ.sort_unstable();
+            assert!(plan.backward_ready(), "plan missing backward section");
+            let occ = plan.occ_sorted();
+            assert_eq!(occ.len(), indices.len(), "plan/indices length mismatch");
             scratch.agg_rows.clear();
             scratch.agg_grads.clear();
             let mut last = u64::MAX;
-            for &(row, b) in scratch.occ.iter() {
+            for &(row, b) in occ.iter() {
                 if row != last {
                     scratch.agg_rows.push(row);
                     let start = scratch.agg_grads.len();
@@ -562,8 +613,15 @@ impl EffTtTable {
                     &grad_out[b as usize * dim..(b as usize + 1) * dim],
                 );
             }
-            self.stats.grads_aggregated +=
-                (scratch.occ.len() - scratch.agg_rows.len()) as u64;
+            self.stats.grads_aggregated += (occ.len() - scratch.agg_rows.len()) as u64;
+        } else {
+            // no aggregation: one chain per occurrence, natural bag order
+            scratch.occ.clear();
+            for b in 0..n_bags {
+                for k in bags.range(b) {
+                    scratch.occ.push((indices[k], b as u32));
+                }
+            }
         }
 
         // ---- step 2: Eq. 8 chain products per work item (exec-sharded) --

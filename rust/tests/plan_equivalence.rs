@@ -1,0 +1,310 @@
+//! Access-layer equivalence properties.
+//!
+//! The refactor's contract: the PLANNED path (plans built by the access
+//! layer, possibly on an overlapped ingest thread, possibly with the
+//! bijection refreshed online mid-epoch) is **bit-identical** to the
+//! UNPLANNED path (the legacy per-call APIs, which now build plans
+//! inline) — for workers = 1 and N, reuse on and off, unit and multi
+//! bags.  Plus the drift property the online mode exists for: after a
+//! distribution shift, the refreshed bijection recovers the reuse-hit
+//! rate that a stale offline bijection loses.
+
+use recad::access::plan::{BagLayout, TtPlan};
+use recad::access::{run_prefetched, AccessCfg, AccessPlanner, BatchPlan};
+use recad::coordinator::engine::{EngineCfg, NativeDlrm, TableSlot};
+use recad::data::ctr::Batch;
+use recad::data::zipf::DriftingZipf;
+use recad::exec::{ExecCfg, ExecPool};
+use recad::tt::shapes::TtShapes;
+use recad::tt::table::{EffTtOptions, EffTtTable, TtScratch};
+use recad::util::prng::Rng;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// TT table: planned forward/backward with an externally-built plan must
+/// be bit-identical to the unplanned API, across worker counts, reuse
+/// on/off, and unit vs multi-bag layouts.
+#[test]
+fn tt_planned_matches_unplanned_bitwise() {
+    let mut meta = Rng::new(0xACCE55);
+    for case in 0..8 {
+        let rows = meta.below(2500) + 600;
+        let rank = [4usize, 8][meta.usize_below(2)];
+        let opts = if case % 3 == 2 {
+            EffTtOptions::ttrec_baseline()
+        } else {
+            EffTtOptions::default()
+        };
+        let seed = meta.next_u64();
+        let shapes = TtShapes::plan(rows, 16, rank);
+        let dim = 16usize;
+
+        // skewed stream above the exec layer's PAR_MIN_WORK gates
+        let n_idx = meta.usize_below(512) + 3584;
+        let hot = rows.min(500);
+        let idx: Vec<u64> = (0..n_idx).map(|_| meta.below(hot)).collect();
+        let unit_bags = case % 2 == 0;
+        let (used, offsets): (usize, Vec<usize>) = if unit_bags {
+            (n_idx, (0..=n_idx).collect())
+        } else {
+            let bag = 4usize;
+            let bags = n_idx / bag;
+            (bags * bag, (0..=bags).map(|b| b * bag).collect())
+        };
+        let bags = offsets.len() - 1;
+        let grad: Vec<f32> = (0..bags * dim).map(|i| (i as f32 * 0.21).sin()).collect();
+
+        for workers in [1usize, 4] {
+            let pool = ExecPool::new(ExecCfg::with_workers(workers));
+            // ---- unplanned (legacy API, inline plan) --------------------
+            let mut a = EffTtTable::new(shapes, opts, &mut Rng::new(seed));
+            a.set_pool(pool);
+            let mut out_a = vec![0.0f32; bags * dim];
+            let mut scr_a = TtScratch::default();
+            a.embedding_bag(&idx[..used], &offsets, &mut out_a, &mut scr_a);
+            a.backward_sgd(&idx[..used], &offsets, &grad, 0.05, &mut scr_a);
+
+            // ---- planned (external plan, built once for fwd + bwd) ------
+            let mut b = EffTtTable::new(shapes, opts, &mut Rng::new(seed));
+            b.set_pool(pool);
+            let layout = if unit_bags {
+                BagLayout::Unit(bags)
+            } else {
+                BagLayout::Offsets(&offsets[..])
+            };
+            let mut plan = TtPlan::default();
+            plan.build(shapes, &idx[..used], layout);
+            let mut out_b = vec![0.0f32; bags * dim];
+            let mut scr_b = TtScratch::default();
+            b.embedding_bag_planned(&idx[..used], layout, &plan, &mut out_b, &mut scr_b);
+            b.backward_sgd_planned(&idx[..used], layout, &plan, &grad, 0.05, &mut scr_b);
+
+            assert_eq!(
+                bits(&out_a),
+                bits(&out_b),
+                "forward diverged (case {case}, workers {workers})"
+            );
+            assert_eq!(bits(&a.core1), bits(&b.core1), "core1 (case {case})");
+            assert_eq!(bits(&a.core2), bits(&b.core2), "core2 (case {case})");
+            assert_eq!(bits(&a.core3), bits(&b.core3), "core3 (case {case})");
+            assert_eq!(a.stats.prefix_gemms, b.stats.prefix_gemms, "stats (case {case})");
+            assert_eq!(a.stats.hop2_gemms, b.stats.hop2_gemms);
+            assert_eq!(a.stats.reuse_hits, b.stats.reuse_hits);
+            assert_eq!(a.stats.backward_chains, b.stats.backward_chains);
+            assert_eq!(a.stats.grads_aggregated, b.stats.grads_aggregated);
+        }
+    }
+}
+
+fn tiny_cfg(workers: usize) -> EngineCfg {
+    EngineCfg {
+        dense_dim: 4,
+        emb_dim: 8,
+        tables: vec![(900, true), (300, true), (40, false)],
+        tt_rank: 4,
+        bot_hidden: vec![32],
+        top_hidden: vec![32],
+        lr: 0.05,
+        tt_opts: EffTtOptions::default(),
+        exec: ExecCfg::with_workers(workers),
+    }
+}
+
+fn tiny_batches(cfg: &EngineCfg, n: usize, b: usize, seed: u64) -> Vec<Batch> {
+    let mut rng = Rng::new(seed);
+    let ns = cfg.tables.len();
+    (0..n)
+        .map(|_| {
+            let mut dense = vec![0.0; b * cfg.dense_dim];
+            rng.fill_normal(&mut dense, 0.0, 1.0);
+            let sparse: Vec<u64> = (0..b * ns)
+                .map(|i| rng.below(cfg.tables[i % ns].0.min(80)))
+                .collect();
+            let labels: Vec<f32> =
+                (0..b).map(|_| if rng.coin(0.5) { 1.0 } else { 0.0 }).collect();
+            Batch { dense, sparse, labels, batch_size: b }
+        })
+        .collect()
+}
+
+/// Engine: `train_step` (inline plan) == external planner + ingest stage
+/// at every plan-ahead depth, bit-for-bit, for workers 1 and N.
+#[test]
+fn engine_training_planned_matches_unplanned_across_plan_ahead() {
+    for workers in [1usize, 3] {
+        let cfg = tiny_cfg(workers);
+        let batches = tiny_batches(&cfg, 6, 384, 17);
+
+        // reference: the legacy unplanned API (inline plans)
+        let mut reference = NativeDlrm::new(cfg.clone(), &mut Rng::new(5));
+        let unplanned: Vec<f32> = batches.iter().map(|b| reference.train_step(b)).collect();
+        for plan_ahead in [0usize, 1, 3] {
+            let mut m = NativeDlrm::new(cfg.clone(), &mut Rng::new(5));
+            let mut planner = AccessPlanner::for_engine_cfg(&cfg);
+            let mut losses = Vec::new();
+            run_prefetched(
+                batches.iter().cloned(),
+                &mut planner,
+                plan_ahead,
+                |batch, plan| losses.push(m.train_step_planned(batch, plan)),
+            );
+            assert_eq!(
+                bits(&unplanned),
+                bits(&losses),
+                "loss curve diverged (workers {workers}, plan_ahead {plan_ahead})"
+            );
+            // parameters too, not just losses
+            match (&m.tables[0], &reference.tables[0]) {
+                (TableSlot::Tt(x), TableSlot::Tt(y)) => {
+                    assert_eq!(bits(&x.core2), bits(&y.core2), "TT cores diverged");
+                }
+                _ => panic!("slot 0 must be TT"),
+            }
+            assert_eq!(bits(&m.bot[0].w), bits(&reference.bot[0].w));
+        }
+    }
+}
+
+/// Remap path: a planner holding a bijection must equal manually
+/// remapping the batch and running the identity path.
+#[test]
+fn planner_remap_matches_manual_remap_bitwise() {
+    let cfg = tiny_cfg(1);
+    let profile = tiny_batches(&cfg, 8, 128, 99);
+    let batches = tiny_batches(&cfg, 5, 256, 100);
+    let planner_ref = AccessPlanner::with_profile(&cfg, &profile, 0.1);
+
+    // manual: remap sparse columns with the same bijections, then train
+    // through the legacy API
+    let manual: Vec<f32> = {
+        let mut m = NativeDlrm::new(cfg.clone(), &mut Rng::new(8));
+        let ns = cfg.tables.len();
+        batches
+            .iter()
+            .map(|b| {
+                let mut rb = b.clone();
+                for t in 0..ns {
+                    if let Some(bij) = planner_ref.bijection(t) {
+                        for r in 0..rb.batch_size {
+                            rb.sparse[r * ns + t] = bij.apply(rb.sparse[r * ns + t]);
+                        }
+                    }
+                }
+                m.train_step(&rb)
+            })
+            .collect()
+    };
+
+    // planned: the planner applies the bijection inside plan_into
+    let mut planner = planner_ref.clone();
+    let mut m = NativeDlrm::new(cfg.clone(), &mut Rng::new(8));
+    let mut planned = Vec::new();
+    run_prefetched(batches.iter().cloned(), &mut planner, 2, |batch, plan| {
+        planned.push(m.train_step_planned(batch, plan))
+    });
+    assert_eq!(bits(&manual), bits(&planned), "remap path diverged");
+}
+
+/// Online refresh mid-epoch: overlapped ingest must be bit-identical to
+/// inline planning even while the bijection is being swapped under the
+/// stream every K batches.
+#[test]
+fn online_refresh_mid_epoch_deterministic_under_overlap() {
+    let cfg = tiny_cfg(1);
+    let batches = tiny_batches(&cfg, 12, 128, 33);
+    let access = AccessCfg { refresh_every: 4, window: 8, ..AccessCfg::default() };
+    let run = |plan_ahead: usize| -> (Vec<f32>, u64) {
+        let mut planner = AccessPlanner::for_engine_cfg(&cfg);
+        planner.enable_online(&cfg, &access);
+        let mut m = NativeDlrm::new(cfg.clone(), &mut Rng::new(21));
+        let mut losses = Vec::new();
+        run_prefetched(batches.iter().cloned(), &mut planner, plan_ahead, |b, p| {
+            losses.push(m.train_step_planned(b, p))
+        });
+        (losses, planner.refreshes)
+    };
+    let (inline, r0) = run(0);
+    // two TT slots refresh every 4 batches over 12 batches = 3 each
+    assert_eq!(r0, 6, "online refresh did not fire mid-epoch");
+    for plan_ahead in [1usize, 4] {
+        let (overlapped, rn) = run(plan_ahead);
+        assert_eq!(r0, rn, "refresh count changed under overlap");
+        assert_eq!(
+            bits(&inline),
+            bits(&overlapped),
+            "online-reorder training diverged at plan_ahead {plan_ahead}"
+        );
+    }
+}
+
+/// The drift property (new `zipf` drift scenario): after the hot set
+/// moves, a stale offline bijection loses prefix sharing; the online
+/// refresh recovers it.  Measured at the plan level (distinct prefixes
+/// per batch == first-hop GEMMs the reuse buffer must pay).
+#[test]
+fn online_reorder_recovers_reuse_after_drift() {
+    let vocab = 8000u64;
+    let cfg = EngineCfg {
+        dense_dim: 2,
+        emb_dim: 16,
+        tables: vec![(vocab, true)],
+        tt_rank: 8,
+        bot_hidden: vec![8],
+        top_hidden: vec![8],
+        lr: 0.05,
+        tt_opts: EffTtOptions::default(),
+        exec: ExecCfg::serial(),
+    };
+    let mut stream = DriftingZipf::new(vocab, 1.25, 0xD21F7);
+    let mut rng = Rng::new(41);
+    let batch_of = |stream: &DriftingZipf, rng: &mut Rng| -> Batch {
+        let b = 256usize;
+        let sparse: Vec<u64> = (0..b).map(|_| stream.sample(rng)).collect();
+        Batch { dense: vec![0.0; b * 2], sparse, labels: vec![0.0; b], batch_size: b }
+    };
+
+    // offline profile on the pre-drift distribution
+    let profile: Vec<Batch> = (0..24).map(|_| batch_of(&stream, &mut rng)).collect();
+    let mean_prefixes = |planner: &mut AccessPlanner, batches: &[Batch]| -> f64 {
+        let mut plan = BatchPlan::default();
+        let mut total = 0usize;
+        for b in batches {
+            planner.plan_into(b, &mut plan);
+            total += plan.tt_plan(0).unwrap().distinct_prefixes();
+        }
+        total as f64 / batches.len() as f64
+    };
+
+    let mut offline = AccessPlanner::with_profile(&cfg, &profile, 0.1);
+    let access =
+        AccessCfg { refresh_every: 8, window: 16, hot_ratio: 0.1, ..AccessCfg::default() };
+    let mut online = offline.clone();
+    online.enable_online(&cfg, &access);
+
+    // pre-drift: both planners share the profiled bijection
+    let pre: Vec<Batch> = (0..8).map(|_| batch_of(&stream, &mut rng)).collect();
+    let pre_offline = mean_prefixes(&mut offline, &pre);
+
+    // drift: the hot mass moves to a scrambled cold region
+    stream.drift(vocab / 2);
+    let post: Vec<Batch> = (0..8).map(|_| batch_of(&stream, &mut rng)).collect();
+    let post_offline = mean_prefixes(&mut offline, &post);
+    assert!(
+        post_offline > 1.15 * pre_offline,
+        "drift did not hurt the stale bijection: {pre_offline:.1} -> {post_offline:.1}"
+    );
+
+    // online: feed enough post-drift batches to trigger refreshes, then
+    // measure on fresh batches from the drifted distribution
+    let warm: Vec<Batch> = (0..16).map(|_| batch_of(&stream, &mut rng)).collect();
+    mean_prefixes(&mut online, &warm);
+    assert!(online.refreshes >= 1, "online refresh never fired");
+    let eval: Vec<Batch> = (0..8).map(|_| batch_of(&stream, &mut rng)).collect();
+    let post_online = mean_prefixes(&mut online, &eval);
+    assert!(
+        post_online < 0.9 * post_offline,
+        "online refresh failed to recover reuse: online {post_online:.1} vs stale {post_offline:.1}"
+    );
+}
