@@ -13,10 +13,12 @@
 
 use std::time::Instant;
 
-use recad::access::{replay_fill, run_prefetched_fill, AccessPlanner};
+use recad::access::{replay_fill, run_prefetched_fill, AccessCfg, AccessPlanner, BatchPlan};
 use recad::bench_support::{bench_workers, write_bench_json, BenchArm};
-use recad::coordinator::engine::NativeDlrm;
+use recad::coordinator::engine::{EngineCfg, NativeDlrm};
 use recad::data::batcher::EpochIter;
+use recad::data::ctr::Batch;
+use recad::data::zipf::{GradualDriftZipf, GrowingVocabZipf, Zipf};
 use recad::exec::ExecCfg;
 use recad::powersys::dataset::{generate, DatasetCfg, SparseVocab};
 use recad::tt::shapes::TtShapes;
@@ -122,6 +124,10 @@ fn ingest_arm(planned: bool) -> BenchArm {
     let cfg = engine_cfg(1);
     let mut engine = NativeDlrm::new(cfg.clone(), &mut Rng::new(1));
     let mut planner = AccessPlanner::for_engine_cfg(&cfg);
+    // pin PR-2 planning semantics (no tiled layout) so this arm's
+    // cross-PR trajectory keeps measuring what it always measured;
+    // tiled-vs-planned lives in BENCH_cache_layout.json
+    planner.set_layout_policy(0, false);
     engine.train_step(&batches[0]); // warmup
     let per_step: usize =
         batches.iter().map(|b| b.batch_size).sum::<usize>() / batches.len();
@@ -143,6 +149,145 @@ fn ingest_arm(planned: bool) -> BenchArm {
     }
     let tag = if planned { "planned" } else { "unplanned" };
     BenchArm::from_iters(format!("ingest_{tag}_batch{batch}x{n_batches}"), 1, &samples, per_step)
+}
+
+/// Training-throughput arm at the IEEE-118 scale: ingest-planned
+/// execution with the plan layout at `cache_kb` (0 = the PR-2 planned
+/// baseline, >0 = hottest-first tiled).  Identical math either way — the
+/// acceptance gate is tiled ≥ planned throughput.
+fn cache_layout_train_arm(cache_kb: usize, tag: &str) -> BenchArm {
+    let (batch, n_batches, rounds) = if smoke() { (64, 4, 2) } else { (256, 16, 3) };
+    let batches = ieee118_batches(batch, n_batches);
+    let cfg = engine_cfg(1);
+    let mut engine = NativeDlrm::new(cfg.clone(), &mut Rng::new(1));
+    let mut planner = AccessPlanner::for_engine_cfg(&cfg);
+    planner.set_layout_policy(cache_kb, false);
+    engine.train_step(&batches[0]); // warmup
+    let per_step: usize =
+        batches.iter().map(|b| b.batch_size).sum::<usize>() / batches.len();
+    let steps = batches.len() as f64;
+    let mut samples = Vec::new();
+    for _ in 0..rounds {
+        let t0 = Instant::now();
+        run_prefetched_fill(replay_fill(&batches), &mut planner, 2, |b, p| {
+            engine.train_step_planned(b, p);
+        });
+        samples.push(t0.elapsed().as_secs_f64() / steps);
+    }
+    BenchArm::from_iters(format!("train_{tag}_ieee118_batch{batch}"), 1, &samples, per_step)
+}
+
+/// Planning-throughput arm on a shared-vocabulary workload: three sparse
+/// features drawing from ONE id space (plus a small host slot), planned
+/// per-slot vs through the fused cross-table sweep.
+fn fused_plan_arm(fuse: bool) -> BenchArm {
+    let (vocab, b, n, rounds) = if smoke() {
+        (4000u64, 128usize, 6usize, 2usize)
+    } else {
+        (60_000, 1024, 12, 4)
+    };
+    let mut tables = vec![(vocab, true); 3];
+    tables.push((40, false));
+    let cfg = EngineCfg {
+        dense_dim: 2,
+        emb_dim: 16,
+        tables,
+        tt_rank: 8,
+        bot_hidden: vec![16],
+        top_hidden: vec![16],
+        lr: 0.05,
+        tt_opts: EffTtOptions::default(),
+        exec: ExecCfg::serial(),
+    };
+    let z = Zipf::new(vocab, 1.2);
+    let mut rng = Rng::new(5);
+    let batches: Vec<Batch> = (0..n)
+        .map(|_| {
+            let sparse: Vec<u64> = (0..b)
+                .flat_map(|_| {
+                    [z.sample(&mut rng), z.sample(&mut rng), z.sample(&mut rng), rng.below(40)]
+                })
+                .collect();
+            Batch { dense: vec![0.0; b * 2], sparse, labels: vec![0.0; b], batch_size: b }
+        })
+        .collect();
+    let mut planner = AccessPlanner::for_engine_cfg(&cfg);
+    planner.set_layout_policy(256, fuse);
+    let mut plan = BatchPlan::default();
+    planner.plan_into(&batches[0], &mut plan); // warmup
+    let mut samples = Vec::new();
+    for _ in 0..rounds {
+        let t0 = Instant::now();
+        for batch in &batches {
+            planner.plan_into(batch, &mut plan);
+        }
+        samples.push(t0.elapsed().as_secs_f64() / n as f64);
+    }
+    let tag = if fuse { "fused" } else { "unfused" };
+    BenchArm::from_iters(format!("plan_{tag}_3x{vocab}v_batch{b}"), 1, &samples, b * 3)
+}
+
+/// The online-reorder recovery workload: a gradually drifting Zipf
+/// stream (mixture interpolation) for the first half, vocabulary growth
+/// for the second — both scenarios where only periodic refresh keeps the
+/// bijection useful.  Built once so the sync and background arms replay
+/// IDENTICAL batches.
+fn drift_batches(vocab: u64, n: usize, b: usize) -> Vec<Batch> {
+    let mut rng = Rng::new(11);
+    let mut gd = GradualDriftZipf::new(vocab, 1.2, 7);
+    gd.begin_drift(vocab / 2);
+    let mut gv = GrowingVocabZipf::new(vocab, vocab / 3, 1.2, 9);
+    (0..n)
+        .map(|i| {
+            let from_growth = i >= n / 2;
+            if from_growth {
+                gv.grow(vocab / n as u64);
+            } else {
+                gd.advance(2.0 / n as f64);
+            }
+            let sparse: Vec<u64> = (0..b)
+                .flat_map(|_| {
+                    let id = if from_growth { gv.sample(&mut rng) } else { gd.sample(&mut rng) };
+                    [id, rng.below(40)]
+                })
+                .collect();
+            Batch { dense: vec![0.0; b * 4], sparse, labels: vec![0.0; b], batch_size: b }
+        })
+        .collect()
+}
+
+/// Train over the drift workload with scheduled online reordering and
+/// report the per-refresh ingest-thread stall samples.  `background`
+/// arms vs the synchronous-compute twin are bit-identical in loss (the
+/// caller asserts it); only the stall profile differs.
+fn reorder_stall_arm(
+    cfg: &EngineCfg,
+    batches: &[Batch],
+    refresh_every: usize,
+    window: usize,
+    background: bool,
+) -> (BenchArm, Vec<f32>) {
+    let access = AccessCfg {
+        refresh_every,
+        window,
+        hot_ratio: 0.1,
+        ..AccessCfg::default()
+    };
+    let mut planner = AccessPlanner::for_engine_cfg(cfg);
+    planner.enable_scheduled_online(cfg, &access, background);
+    let mut engine = NativeDlrm::new(cfg.clone(), &mut Rng::new(3));
+    let mut losses = Vec::new();
+    run_prefetched_fill(replay_fill(batches), &mut planner, 0, |b, p| {
+        losses.push(engine.train_step_planned(b, p));
+    });
+    let stalls = planner.reorder_stall_samples();
+    assert!(
+        !stalls.is_empty(),
+        "no online refresh fired — the stall arm measured nothing"
+    );
+    let tag = if background { "background" } else { "sync" };
+    let arm = BenchArm::from_iters(format!("reorder_stall_{tag}"), 1, &stalls, 1);
+    (arm, losses)
 }
 
 fn main() {
@@ -207,4 +352,64 @@ fn main() {
 
     let path = write_bench_json("perf_probe", par, &arms);
     println!("wrote {path} ({} arms, JSON round-trip checked)", arms.len());
+
+    // ---- cache-resident plan execution (BENCH_cache_layout.json) --------
+    let mut cl_arms: Vec<BenchArm> = Vec::new();
+    let planned_pr2 = cache_layout_train_arm(0, "planned_pr2");
+    let tiled = cache_layout_train_arm(256, "tiled");
+    println!(
+        "train planned(PR2) {:.0} samples/s | tiled hottest-first {:.0} samples/s ({:.2}x)",
+        planned_pr2.throughput,
+        tiled.throughput,
+        tiled.throughput / planned_pr2.throughput
+    );
+    cl_arms.push(planned_pr2);
+    cl_arms.push(tiled);
+
+    let unfused = fused_plan_arm(false);
+    let fused = fused_plan_arm(true);
+    println!(
+        "plan 3-table sweep unfused {:.0}µs/batch | fused {:.0}µs/batch ({:.2}x)",
+        unfused.p50_us,
+        fused.p50_us,
+        unfused.p50_us / fused.p50_us
+    );
+    cl_arms.push(unfused);
+    cl_arms.push(fused);
+
+    let (vocab, n_drift, b_drift, refresh, window) = if smoke() {
+        (6_000u64, 14usize, 128usize, 4usize, 8usize)
+    } else {
+        (60_000, 48, 512, 8, 16)
+    };
+    let dcfg = EngineCfg {
+        dense_dim: 4,
+        emb_dim: 16,
+        tables: vec![(vocab, true), (40, false)],
+        tt_rank: 8,
+        bot_hidden: vec![32],
+        top_hidden: vec![32],
+        lr: 0.05,
+        tt_opts: EffTtOptions::default(),
+        exec: ExecCfg::serial(),
+    };
+    let drift = drift_batches(vocab, n_drift, b_drift);
+    let (sync_arm, sync_losses) = reorder_stall_arm(&dcfg, &drift, refresh, window, false);
+    let (bg_arm, bg_losses) = reorder_stall_arm(&dcfg, &drift, refresh, window, true);
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(
+        bits(&sync_losses),
+        bits(&bg_losses),
+        "background refresh diverged from its synchronous twin"
+    );
+    println!(
+        "reorder ingest stall (per refresh, n={}): sync p50 {:.0}µs p99 {:.0}µs | \
+         background p50 {:.0}µs p99 {:.0}µs (losses bit-identical)",
+        sync_arm.n, sync_arm.p50_us, sync_arm.p99_us, bg_arm.p50_us, bg_arm.p99_us
+    );
+    cl_arms.push(sync_arm);
+    cl_arms.push(bg_arm);
+
+    let cl_path = write_bench_json("cache_layout", par, &cl_arms);
+    println!("wrote {cl_path} ({} arms, JSON round-trip checked)", cl_arms.len());
 }

@@ -1,0 +1,196 @@
+//! Cross-table fused plan sweeps.
+//!
+//! DLRM feature columns frequently share an id space (user/item ids
+//! appearing in several sparse features), so their TT slots share
+//! `TtShapes` — yet PR 2 planned every slot in isolation: one sort, one
+//! dedup sweep and one set of scratch buffers per slot per batch.  The
+//! fused sweep concatenates all same-shapes columns into a single
+//! `(row, slot, pos)` stream, sorts it ONCE, and peels the per-slot plans
+//! off the shared sorted order.  Each slot's subsequence is ordered by
+//! `(row, pos)` — exactly what its private sort would have produced — so
+//! the per-slot plans are **bitwise identical** to independently built
+//! ones (pinned by `tests/plan_equivalence.rs`); the win is one
+//! prefix-sorted pass (and one pass of cache traffic) instead of S.
+//!
+//! The sweep also counts rows occurring in more than one slot of a class
+//! (`FusedStats::cross_shared_rows`) — the dedup mass that makes fusion
+//! worthwhile on a workload.
+
+use crate::access::plan::{BagLayout, TtPlan};
+use crate::tt::shapes::TtShapes;
+
+/// Counters from the fused sweep of one batch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FusedStats {
+    /// TT slots planned through a fused (multi-slot) sweep.
+    pub fused_slots: u64,
+    /// Fused sweeps executed (one per same-shapes class with ≥ 2 slots).
+    pub sweeps: u64,
+    /// Distinct rows observed in more than one slot of a fused class —
+    /// the cross-table sharing the fusion exploits.
+    pub cross_shared_rows: u64,
+}
+
+/// Reusable scratch for the fused sweep (allocation-free steady state).
+#[derive(Clone, Default)]
+pub struct FusedSweep {
+    /// concatenated (row, class-member, position) stream of one class.
+    entries: Vec<(u64, u32, u32)>,
+    /// per-class-member sorted (row, pos) pairs peeled off `entries`.
+    per_slot: Vec<Vec<(u64, u32)>>,
+    /// class grouping scratch: (shapes, member slot indices).
+    classes: Vec<(TtShapes, Vec<usize>)>,
+}
+
+impl FusedSweep {
+    /// Plan every compressed slot of the batch: slots sharing `TtShapes`
+    /// (same padded vocabulary, dim and rank) are planned through one
+    /// fused sorted sweep; singleton classes fall back to the private
+    /// per-slot build (identical output, less bookkeeping).
+    pub(crate) fn build_classes(
+        &mut self,
+        shapes: &[Option<TtShapes>],
+        cols: &[Vec<u64>],
+        tt: &mut [Option<TtPlan>],
+        batch: usize,
+        stats: &mut FusedStats,
+    ) {
+        // group slot indices by shapes, first-seen order (ns is small)
+        for (_, members) in self.classes.iter_mut() {
+            members.clear();
+        }
+        let mut n_classes = 0usize;
+        for (t, sh) in shapes.iter().enumerate() {
+            let Some(sh) = sh else { continue };
+            let found = self.classes[..n_classes]
+                .iter()
+                .position(|(csh, _)| csh == sh);
+            match found {
+                Some(ci) => self.classes[ci].1.push(t),
+                None => {
+                    if n_classes == self.classes.len() {
+                        self.classes.push((*sh, Vec::new()));
+                    } else {
+                        self.classes[n_classes].0 = *sh;
+                    }
+                    self.classes[n_classes].1.push(t);
+                    n_classes += 1;
+                }
+            }
+        }
+        let classes = std::mem::take(&mut self.classes);
+        for (sh, members) in classes[..n_classes].iter() {
+            if members.len() == 1 {
+                let t = members[0];
+                let plan = tt[t].get_or_insert_with(TtPlan::default);
+                plan.build(*sh, &cols[t], BagLayout::Unit(batch));
+            } else {
+                self.fuse_class(*sh, members, cols, tt, batch, stats);
+            }
+        }
+        self.classes = classes;
+    }
+
+    /// One fused class: concatenate, sort once, peel per-slot plans.
+    fn fuse_class(
+        &mut self,
+        sh: TtShapes,
+        members: &[usize],
+        cols: &[Vec<u64>],
+        tt: &mut [Option<TtPlan>],
+        batch: usize,
+        stats: &mut FusedStats,
+    ) {
+        self.entries.clear();
+        for (ci, &t) in members.iter().enumerate() {
+            self.entries.extend(
+                cols[t]
+                    .iter()
+                    .enumerate()
+                    .map(|(pos, &row)| (row, ci as u32, pos as u32)),
+            );
+        }
+        // THE single prefix-sorted pass: (row, member, pos) order means
+        // each member's subsequence is (row, pos)-sorted — identical to
+        // its private sort — while equal rows from different members sit
+        // adjacent for the cross-sharing count below.
+        self.entries.sort_unstable();
+        self.per_slot.resize_with(members.len(), Vec::new);
+        for v in self.per_slot.iter_mut() {
+            v.clear();
+        }
+        let mut run_start = 0usize;
+        let mut shared = 0u64;
+        for (k, &(row, ci, pos)) in self.entries.iter().enumerate() {
+            self.per_slot[ci as usize].push((row, pos));
+            // close a row-run: count it as shared when it spans members
+            let next_row = self.entries.get(k + 1).map(|e| e.0);
+            if next_row != Some(row) {
+                let first_ci = self.entries[run_start].1;
+                if self.entries[run_start..=k].iter().any(|e| e.1 != first_ci) {
+                    shared += 1;
+                }
+                run_start = k + 1;
+            }
+        }
+        for (ci, &t) in members.iter().enumerate() {
+            let plan = tt[t].get_or_insert_with(TtPlan::default);
+            plan.build_forward_sorted(sh, &self.per_slot[ci], BagLayout::Unit(batch));
+        }
+        stats.sweeps += 1;
+        stats.fused_slots += members.len() as u64;
+        stats.cross_shared_rows += shared;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn col(vals: &[u64]) -> Vec<u64> {
+        vals.to_vec()
+    }
+
+    #[test]
+    fn fused_class_plans_match_private_builds() {
+        let sh = TtShapes::plan(4000, 8, 4);
+        let shapes = vec![Some(sh), Some(sh), None];
+        let cols = vec![col(&[5, 7, 7, 900, 5]), col(&[7, 11, 5, 2000, 2000]), col(&[0; 5])];
+        let mut fused_tt: Vec<Option<TtPlan>> = vec![None, None, None];
+        let mut sweep = FusedSweep::default();
+        let mut stats = FusedStats::default();
+        sweep.build_classes(&shapes, &cols, &mut fused_tt, 5, &mut stats);
+        assert_eq!(stats.sweeps, 1);
+        assert_eq!(stats.fused_slots, 2);
+        // rows 5 and 7 occur in both slots
+        assert_eq!(stats.cross_shared_rows, 2);
+
+        for t in 0..2 {
+            let mut private = TtPlan::default();
+            private.build(sh, &cols[t], BagLayout::Unit(5));
+            let f = fused_tt[t].as_ref().unwrap();
+            assert_eq!(f.uniq_rows, private.uniq_rows, "slot {t} uniq");
+            assert_eq!(f.index_slot, private.index_slot, "slot {t} scatter");
+            assert_eq!(f.group_starts, private.group_starts, "slot {t} groups");
+            assert_eq!(f.occ_sorted(), private.occ_sorted(), "slot {t} occ");
+            assert!(f.forward_ready() && f.backward_ready());
+        }
+        assert!(fused_tt[2].is_none());
+    }
+
+    #[test]
+    fn singleton_classes_take_private_path() {
+        let a = TtShapes::plan(1000, 8, 4);
+        let b = TtShapes::plan(50_000, 8, 4);
+        let shapes = vec![Some(a), Some(b)];
+        let cols = vec![col(&[1, 2, 3]), col(&[9, 9, 40_000])];
+        let mut tt: Vec<Option<TtPlan>> = vec![None, None];
+        let mut sweep = FusedSweep::default();
+        let mut stats = FusedStats::default();
+        sweep.build_classes(&shapes, &cols, &mut tt, 3, &mut stats);
+        assert_eq!(stats.sweeps, 0);
+        assert_eq!(stats.fused_slots, 0);
+        assert_eq!(tt[0].as_ref().unwrap().distinct_rows(), 3);
+        assert_eq!(tt[1].as_ref().unwrap().distinct_rows(), 2);
+    }
+}

@@ -10,6 +10,7 @@
 //! with `plan_ahead = 1` exactly the classic double buffer.
 
 use std::sync::mpsc;
+use std::time::Instant;
 
 use crate::access::plan::BatchPlan;
 use crate::access::planner::AccessPlanner;
@@ -28,6 +29,12 @@ pub struct IngestReport {
     pub batches: u64,
     /// Whether an overlap thread ran (`plan_ahead > 0`).
     pub overlapped: bool,
+    /// Longest single `plan_into` call on the ingest thread (seconds) —
+    /// dominated by inline bijection rebuilds when online reordering is
+    /// on; the background refresh engine exists to bound this.
+    pub plan_stall_max_s: f64,
+    /// Total ingest-thread planning seconds across the run.
+    pub plan_time_total_s: f64,
 }
 
 /// Drive `consume` over a refillable batch source with `plan_ahead`
@@ -51,38 +58,60 @@ where
     if plan_ahead == 0 {
         // inline mode: one reusable shell, no threads
         let mut pb = PlannedBatch::default();
+        let (mut stall_max, mut total) = (0.0f64, 0.0f64);
         while fill(&mut pb.batch) {
+            let t0 = Instant::now();
             planner.plan_into(&pb.batch, &mut pb.plan);
+            let dt = t0.elapsed().as_secs_f64();
+            stall_max = stall_max.max(dt);
+            total += dt;
             consume(&pb.batch, &pb.plan);
             n += 1;
         }
-        return IngestReport { batches: n, overlapped: false };
+        return IngestReport {
+            batches: n,
+            overlapped: false,
+            plan_stall_max_s: stall_max,
+            plan_time_total_s: total,
+        };
     }
     let (tx, rx) = mpsc::sync_channel::<PlannedBatch>(plan_ahead);
     let (recycle_tx, recycle_rx) = mpsc::channel::<PlannedBatch>();
-    std::thread::scope(|sc| {
+    let (stall_max, total) = std::thread::scope(|sc| {
         let planner = &mut *planner;
-        sc.spawn(move || {
+        let ingest = sc.spawn(move || {
+            let (mut stall_max, mut total) = (0.0f64, 0.0f64);
             loop {
                 // reuse a spent shell when one has come back
                 let mut pb = recycle_rx.try_recv().unwrap_or_default();
                 if !fill(&mut pb.batch) {
                     break;
                 }
+                let t0 = Instant::now();
                 planner.plan_into(&pb.batch, &mut pb.plan);
+                let dt = t0.elapsed().as_secs_f64();
+                stall_max = stall_max.max(dt);
+                total += dt;
                 if tx.send(pb).is_err() {
                     break;
                 }
             }
             // tx drops here; rx.iter() below then terminates
+            (stall_max, total)
         });
         for pb in rx.iter() {
             consume(&pb.batch, &pb.plan);
             n += 1;
             let _ = recycle_tx.send(pb);
         }
+        ingest.join().expect("ingest worker panicked")
     });
-    IngestReport { batches: n, overlapped: true }
+    IngestReport {
+        batches: n,
+        overlapped: true,
+        plan_stall_max_s: stall_max,
+        plan_time_total_s: total,
+    }
 }
 
 /// A `fill` source that replays a pre-built batch slice via `clone_from`

@@ -13,23 +13,36 @@
 //!   aggregation order, remapped columns, cached unit-bag offsets.  Built
 //!   once per batch; consumed by `EffTtTable::{embedding_bag,
 //!   backward_sgd}_planned` and `NativeDlrm::{forward, train_step,
-//!   predict}_planned`.
+//!   predict}_planned`.  `TtPlan::build_layout` additionally attaches a
+//!   **cache-resident execution schedule**: prefix groups ordered
+//!   hottest-first and cut into L2-sized tiles (`[access] cache_kb`)
+//!   that the TT walks shard and iterate.
+//! * [`fused::FusedSweep`] (`fused`) — **cross-table fused planning**:
+//!   TT slots sharing a vocabulary are planned through ONE concatenated
+//!   `(row, slot, pos)` sort (`[access] fuse_tables`); per-slot plans
+//!   are bitwise identical to private builds.
 //! * [`AccessPlanner`] (`planner`) — owns the per-table bijections
 //!   (offline-profiled and/or online-refreshed via
-//!   `reorder::OnlineReorderer`) and turns raw batches into plans.
+//!   `reorder::OnlineReorderer`, or non-blockingly via
+//!   `reorder::BackgroundReorderer` with `[access] background_reorder`)
+//!   and turns raw batches into plans.
 //! * [`run_prefetched`] / [`run_prefetched_fill`] (`ingest`) — the
 //!   double-buffered ingest stage: batch N+1 is assembled + remapped +
-//!   planned on a worker thread while batch N trains.
+//!   planned on a worker thread while batch N trains; per-batch planning
+//!   stall is reported (`IngestReport::plan_stall_max_s`).
 //!
 //! Invariant: the planned path is **bit-identical** to the pre-refactor
 //! unplanned path (the unplanned APIs are now thin wrappers that build a
-//! plan inline), for any worker count and any `plan_ahead` depth —
+//! plan inline), for any worker count, any `plan_ahead` depth, tiled or
+//! untiled, fused or per-slot, background or synchronous refresh —
 //! pinned by `tests/plan_equivalence.rs`.
 
+pub mod fused;
 pub mod ingest;
 pub mod plan;
 pub mod planner;
 
+pub use fused::FusedStats;
 pub use ingest::{replay_fill, run_prefetched, run_prefetched_fill, IngestReport, PlannedBatch};
 pub use plan::{BagLayout, BatchPlan, TtPlan, UnitOffsets};
 pub use planner::{table_shapes, AccessCfg, AccessPlanner};

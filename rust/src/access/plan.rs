@@ -82,6 +82,26 @@ pub struct TtPlan {
     /// sorted (row, bag) pairs — the backward aggregation order
     /// (empty when `bwd_via_order`).
     occ: Vec<(u64, u32)>,
+    // ---- cache-resident execution layout (optional; `build_layout`) ----
+    layout_ready: bool,
+    /// hottest-first schedule: `sched[p]` is the slot into `uniq_rows`
+    /// materialized at scheduled position p.  Prefix groups are ordered
+    /// by descending size (ties by ascending first slot — deterministic),
+    /// rows stay ascending within a group, so every scheduled group is a
+    /// contiguous run with a distinct prefix.
+    sched: Vec<u32>,
+    /// inverse of `sched`: scheduled position of each distinct-row slot
+    /// (the scatter map indirection of the tiled walk).
+    pub slot_pos: Vec<u32>,
+    /// scheduled positions where an L2 tile begins (first element 0; the
+    /// final tile ends at `uniq_rows.len()`).  Tiles are whole groups, so
+    /// sharding at tile boundaries preserves the compute-each-prefix-once
+    /// invariant.
+    tile_starts: Vec<u32>,
+    /// scheduled positions where each group begins (the schedule's
+    /// equivalent of `group_starts`) — the fine-grained shard cuts when
+    /// there are fewer tiles than workers.
+    sched_group_starts: Vec<u32>,
 }
 
 impl TtPlan {
@@ -93,6 +113,7 @@ impl TtPlan {
         self.fwd_ready = false;
         self.bwd_ready = false;
         self.bwd_via_order = false;
+        self.layout_ready = false;
     }
 
     /// Forward section: sorted dedup of rows + prefix-group boundaries +
@@ -106,8 +127,35 @@ impl TtPlan {
         self.order
             .extend(indices.iter().enumerate().map(|(k, &i)| (i, k as u32)));
         self.order.sort_unstable();
+        self.finish_forward(shapes);
+    }
+
+    /// Forward section from an ALREADY-SORTED (row, position) pair list —
+    /// the fused cross-table sweep's entry point: one concatenated sort
+    /// across all same-vocabulary slots replaces the per-slot sorts, and
+    /// each slot's (row, pos)-ordered subsequence lands here.  The sweep
+    /// after the sort is byte-for-byte `build_forward`'s, so the
+    /// resulting plan is bitwise identical to an independently built one.
+    pub(crate) fn build_forward_sorted(
+        &mut self,
+        shapes: TtShapes,
+        sorted: &[(u64, u32)],
+        bags: BagLayout,
+    ) {
+        debug_assert_eq!(bags.total(), sorted.len());
+        debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "pairs must be sorted");
+        self.reset(shapes, sorted.len(), bags);
+        self.order.clear();
+        self.order.extend_from_slice(sorted);
+        self.finish_forward(shapes);
+    }
+
+    /// The post-sort dedup sweep shared by [`TtPlan::build_forward`] and
+    /// the fused path: prefix-group boundaries + scatter map over the
+    /// sorted `order` pairs.
+    fn finish_forward(&mut self, shapes: TtShapes) {
         self.index_slot.clear();
-        self.index_slot.resize(indices.len(), 0);
+        self.index_slot.resize(self.n_indices, 0);
         self.uniq_rows.clear();
         self.group_starts.clear();
         let mut last_row = u64::MAX;
@@ -160,6 +208,96 @@ impl TtPlan {
         if !self.unit_bags {
             self.build_backward(shapes, indices, bags);
         }
+    }
+
+    /// Build the cache-resident execution layout over a ready forward
+    /// section: prefix groups scheduled hottest-first (descending size,
+    /// ties by ascending slot) and cut into L2-sized tiles.  `cache_kb`
+    /// is the per-core cache budget in KiB (0 disables the layout); the
+    /// rows-per-tile bound keeps one prefix partial product plus each
+    /// row's output and third-core slice resident while the tile is
+    /// walked.
+    ///
+    /// Pure scheduling metadata: consumers that walk the schedule produce
+    /// bit-identical outputs to the unscheduled walk (rows are
+    /// materialized independently and the scatter/apply orders are
+    /// unchanged) — pinned by `tests/plan_equivalence.rs`.
+    pub fn build_layout(&mut self, cache_kb: usize) {
+        self.layout_ready = false;
+        self.sched.clear();
+        self.slot_pos.clear();
+        self.tile_starts.clear();
+        self.sched_group_starts.clear();
+        if cache_kb == 0 || !self.fwd_ready {
+            return;
+        }
+        let Some(s) = self.shapes else { return };
+        let n_rows = self.uniq_rows.len();
+        if n_rows == 0 {
+            return;
+        }
+        let n_groups = self.group_starts.len();
+        let starts = &self.group_starts;
+        let size_of = |gi: usize| -> usize {
+            let lo = starts[gi] as usize;
+            let hi = starts.get(gi + 1).map(|&x| x as usize).unwrap_or(n_rows);
+            hi - lo
+        };
+        let mut order: Vec<u32> = (0..n_groups as u32).collect();
+        order.sort_by(|&x, &y| {
+            size_of(y as usize).cmp(&size_of(x as usize)).then(x.cmp(&y))
+        });
+        // rows per tile: cache_kb minus the shared partial product, spread
+        // over the per-row working set (output row + D3 slice), in floats
+        let plen = s.n[0] * s.n[1] * s.rank;
+        let per_row = s.dim + s.rank * s.n[2];
+        let budget_rows =
+            ((cache_kb * 1024 / 4).saturating_sub(plen) / per_row.max(1)).max(8);
+        self.sched.reserve(n_rows);
+        self.tile_starts.push(0);
+        let mut in_tile = 0usize;
+        for &gi in &order {
+            let lo = starts[gi as usize] as usize;
+            let sz = size_of(gi as usize);
+            if in_tile > 0 && in_tile + sz > budget_rows {
+                self.tile_starts.push(self.sched.len() as u32);
+                in_tile = 0;
+            }
+            self.sched_group_starts.push(self.sched.len() as u32);
+            self.sched.extend((lo..lo + sz).map(|r| r as u32));
+            in_tile += sz;
+        }
+        debug_assert_eq!(self.sched.len(), n_rows);
+        self.slot_pos.resize(n_rows, 0);
+        for (p, &slot) in self.sched.iter().enumerate() {
+            self.slot_pos[slot as usize] = p as u32;
+        }
+        self.layout_ready = true;
+    }
+
+    /// Whether a cache-resident layout is attached (tiled execution).
+    #[inline]
+    pub fn tiled(&self) -> bool {
+        self.layout_ready
+    }
+
+    /// The hottest-first schedule (slots into `uniq_rows` per position).
+    #[inline]
+    pub fn sched(&self) -> &[u32] {
+        &self.sched
+    }
+
+    /// Scheduled positions where each L2 tile begins (first is 0).
+    #[inline]
+    pub fn tile_starts(&self) -> &[u32] {
+        &self.tile_starts
+    }
+
+    /// Scheduled positions where each prefix group begins — the valid
+    /// fine-grained shard cuts of the tiled walk.
+    #[inline]
+    pub fn sched_group_starts(&self) -> &[u32] {
+        &self.sched_group_starts
     }
 
     #[inline]
@@ -250,9 +388,26 @@ pub struct BatchPlan {
     /// Per-table TT access plan; `None` for plain (uncompressed) slots.
     tt: Vec<Option<TtPlan>>,
     unit_offsets: UnitOffsets,
+    /// L2 budget (KiB) for hottest-first tiled layouts; 0 = untiled.
+    cache_kb: usize,
+    /// Dedup across same-vocabulary TT slots in one fused sorted sweep.
+    fuse_tables: bool,
+    fused: crate::access::fused::FusedSweep,
+    /// Counters from the fused sweep (zeroed per build).
+    pub fused_stats: crate::access::fused::FusedStats,
 }
 
 impl BatchPlan {
+    /// Set the execution policy applied by subsequent builds: `cache_kb`
+    /// attaches hottest-first tiled layouts to every TT plan (0 = off),
+    /// `fuse_tables` plans same-vocabulary TT slots through one fused
+    /// prefix-sorted sweep.  Both are bit-identity-preserving; they only
+    /// change how (and how fast) the same plans are built and walked.
+    pub fn set_policy(&mut self, cache_kb: usize, fuse_tables: bool) {
+        self.cache_kb = cache_kb;
+        self.fuse_tables = fuse_tables;
+    }
+
     /// Plan one batch: extract + remap every sparse column, build the TT
     /// plan for each compressed slot (`shapes[t] = Some(..)`), refresh
     /// the unit-offset cache.  `bijections` may be shorter than `shapes`
@@ -278,12 +433,34 @@ impl BatchPlan {
                     *v = bij.apply(*v);
                 }
             }
-            match shapes[t] {
-                Some(sh) => {
+            if shapes[t].is_none() {
+                self.tt[t] = None;
+            }
+        }
+        self.fused_stats = Default::default();
+        if self.fuse_tables {
+            // one prefix-sorted sweep per same-shapes class (plans are
+            // bitwise identical to the per-slot builds below)
+            let mut fused = std::mem::take(&mut self.fused);
+            fused.build_classes(
+                shapes,
+                &self.cols,
+                &mut self.tt,
+                b,
+                &mut self.fused_stats,
+            );
+            self.fused = fused;
+        } else {
+            for t in 0..ns {
+                if let Some(sh) = shapes[t] {
                     let plan = self.tt[t].get_or_insert_with(TtPlan::default);
-                    plan.build(sh, col, BagLayout::Unit(b));
+                    plan.build(sh, &self.cols[t], BagLayout::Unit(b));
                 }
-                None => self.tt[t] = None,
+            }
+        }
+        if self.cache_kb > 0 {
+            for plan in self.tt.iter_mut().flatten() {
+                plan.build_layout(self.cache_kb);
             }
         }
         self.unit_offsets.get(b);
@@ -358,6 +535,61 @@ mod tests {
         // unit bags: backward order is the forward order
         assert_eq!(plan.occ_sorted().len(), 4);
         assert!(plan.occ_sorted().windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn layout_schedules_hottest_first_in_valid_tiles() {
+        let shapes = TtShapes::plan(5000, 16, 8);
+        let mut rng = Rng::new(7);
+        // skewed: many repeats => groups of very different sizes
+        let idx: Vec<u64> = (0..2048).map(|_| rng.below(300)).collect();
+        let mut plan = TtPlan::default();
+        plan.build(shapes, &idx, BagLayout::Unit(idx.len()));
+        assert!(!plan.tiled());
+        plan.build_layout(1); // 1 KiB => many small tiles
+        assert!(plan.tiled());
+        let n = plan.uniq_rows.len();
+        // sched is a permutation of 0..n and slot_pos its inverse
+        let mut seen = vec![false; n];
+        for (p, &slot) in plan.sched().iter().enumerate() {
+            assert!(!seen[slot as usize], "slot {slot} scheduled twice");
+            seen[slot as usize] = true;
+            assert_eq!(plan.slot_pos[slot as usize] as usize, p);
+        }
+        assert!(seen.iter().all(|&s| s));
+        // group sizes are non-increasing along the schedule
+        let group_of = |slot: u32| {
+            plan.group_starts.partition_point(|&g| g <= slot) - 1
+        };
+        let size_of = |g: usize| {
+            let lo = plan.group_starts[g] as usize;
+            let hi =
+                plan.group_starts.get(g + 1).map(|&x| x as usize).unwrap_or(n);
+            hi - lo
+        };
+        let mut sizes = Vec::new();
+        let mut last_group = usize::MAX;
+        for &slot in plan.sched() {
+            let g = group_of(slot);
+            if g != last_group {
+                sizes.push(size_of(g));
+                last_group = g;
+            }
+        }
+        assert_eq!(sizes.len(), plan.group_starts.len());
+        assert!(sizes.windows(2).all(|w| w[0] >= w[1]), "not hottest-first: {sizes:?}");
+        // tile boundaries are scheduled-group boundaries
+        assert!(plan.tile_starts().len() > 1, "1 KiB budget must emit several tiles");
+        for &t in plan.tile_starts() {
+            assert!(
+                plan.sched_group_starts().contains(&t),
+                "tile start {t} not at a group boundary"
+            );
+        }
+        // disabling the layout clears it
+        plan.build_layout(0);
+        assert!(!plan.tiled());
+        assert!(plan.sched().is_empty() && plan.tile_starts().is_empty());
     }
 
     #[test]

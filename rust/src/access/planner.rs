@@ -8,7 +8,7 @@ use crate::access::plan::BatchPlan;
 use crate::coordinator::engine::EngineCfg;
 use crate::data::ctr::Batch;
 use crate::reorder::bijection::IndexBijection;
-use crate::reorder::online::OnlineReorderer;
+use crate::reorder::online::{BackgroundReorderer, OnlineReorderer, DEFAULT_ADOPT_LAG};
 use crate::tt::shapes::TtShapes;
 
 /// `[access]` section of the run config.
@@ -26,6 +26,17 @@ pub struct AccessCfg {
     pub hot_ratio: f64,
     /// Co-occurrence window kept for online rebuilds, in batches.
     pub window: usize,
+    /// L2 budget (KiB) for hottest-first tiled plan layouts; 0 disables
+    /// tiling.  Bit-identity-preserving — tiles only reorder independent
+    /// row materializations and chain computations.
+    pub cache_kb: usize,
+    /// Plan same-vocabulary TT slots through one fused prefix-sorted
+    /// sweep (per-slot plans stay bitwise identical).
+    pub fuse_tables: bool,
+    /// Run online bijection rebuilds on a background worker with an
+    /// epoch-tagged swap (adopted at a fixed one-batch lag) instead of
+    /// inline on the ingest thread.
+    pub background_reorder: bool,
 }
 
 impl Default for AccessCfg {
@@ -36,6 +47,29 @@ impl Default for AccessCfg {
             refresh_every: 64,
             hot_ratio: 0.05,
             window: 32,
+            cache_kb: 256,
+            fuse_tables: false,
+            background_reorder: false,
+        }
+    }
+}
+
+/// Per-slot online refresh engine (see `reorder::online` module docs).
+#[derive(Clone)]
+enum OnlineSlot {
+    /// PR-2 inline engine: rebuild on the ingest thread at the trigger.
+    Inline(OnlineReorderer),
+    /// Scheduled engine: background worker (or its synchronous-compute
+    /// twin) with a fixed adoption lag and stall accounting.
+    Scheduled(BackgroundReorderer),
+}
+
+impl OnlineSlot {
+    /// Feed one raw column; `Some(bijection)` when this call refreshed.
+    fn observe(&mut self, col: &[u64]) -> Option<&IndexBijection> {
+        match self {
+            OnlineSlot::Inline(o) => o.observe(col).then(|| &o.bijection),
+            OnlineSlot::Scheduled(b) => b.observe(col).then(|| &b.bijection),
         }
     }
 }
@@ -48,13 +82,31 @@ pub struct AccessPlanner {
     /// Per-slot remap (`None` = identity).
     bijections: Vec<Option<IndexBijection>>,
     /// Per-slot online refresh state (TT slots only, when enabled).
-    online: Vec<Option<OnlineReorderer>>,
+    online: Vec<Option<OnlineSlot>>,
     /// Scratch for online observation of raw columns.
     obs: Vec<u64>,
+    /// L2 tile budget (KiB) stamped onto every plan built (0 = untiled).
+    cache_kb: usize,
+    /// Fused cross-table sweep policy stamped onto every plan built.
+    fuse_tables: bool,
     /// Batches planned so far.
     pub batches_planned: u64,
     /// Online bijection refreshes across all slots.
     pub refreshes: u64,
+}
+
+impl std::fmt::Debug for AccessPlanner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AccessPlanner")
+            .field("slots", &self.shapes.len())
+            .field("remapped", &self.bijections.iter().filter(|b| b.is_some()).count())
+            .field("online", &self.online.iter().filter(|o| o.is_some()).count())
+            .field("cache_kb", &self.cache_kb)
+            .field("fuse_tables", &self.fuse_tables)
+            .field("batches_planned", &self.batches_planned)
+            .field("refreshes", &self.refreshes)
+            .finish()
+    }
 }
 
 /// TT shapes per engine table slot, straight from the config (must match
@@ -75,7 +127,8 @@ pub fn table_shapes(cfg: &EngineCfg) -> Vec<Option<TtShapes>> {
 }
 
 impl AccessPlanner {
-    /// Identity planner (no reordering) for an engine config.
+    /// Identity planner (no reordering) for an engine config.  Plans are
+    /// tiled at the default cache budget (bit-identity-preserving).
     pub fn for_engine_cfg(cfg: &EngineCfg) -> AccessPlanner {
         let shapes = table_shapes(cfg);
         let n = shapes.len();
@@ -84,9 +137,17 @@ impl AccessPlanner {
             bijections: (0..n).map(|_| None).collect(),
             online: (0..n).map(|_| None).collect(),
             obs: Vec::new(),
+            cache_kb: AccessCfg::default().cache_kb,
+            fuse_tables: false,
             batches_planned: 0,
             refreshes: 0,
         }
+    }
+
+    /// Override the plan-layout policy (tile budget + fused sweeps).
+    pub fn set_layout_policy(&mut self, cache_kb: usize, fuse_tables: bool) {
+        self.cache_kb = cache_kb;
+        self.fuse_tables = fuse_tables;
     }
 
     /// Offline profiling construction (paper §III-H): build a bijection
@@ -113,25 +174,71 @@ impl AccessPlanner {
         p
     }
 
-    /// Enable online bijection refresh on every compressed slot.
+    /// Enable online bijection refresh on every compressed slot: the
+    /// inline (PR-2) engine by default, the background engine when
+    /// `access.background_reorder` is set.
     pub fn enable_online(&mut self, cfg: &EngineCfg, access: &AccessCfg) {
+        if access.background_reorder {
+            self.enable_scheduled_online(cfg, access, true);
+            return;
+        }
         for (slot, &(rows, compressed)) in cfg.tables.iter().enumerate() {
             if compressed {
-                self.online[slot] = Some(OnlineReorderer::new(
+                self.online[slot] = Some(OnlineSlot::Inline(OnlineReorderer::new(
                     rows,
                     access.hot_ratio,
                     access.refresh_every.max(1),
                     access.window,
-                ));
+                )));
             }
         }
     }
 
-    /// Apply [`AccessCfg`] policy: online refresh when requested.
+    /// Enable the SCHEDULED refresh engine on every compressed slot:
+    /// `background = true` rebuilds on a worker thread, `false` is its
+    /// synchronous-compute twin (identical trigger/adoption schedule ⇒
+    /// bit-identical outputs; it exists as the stall baseline).
+    pub fn enable_scheduled_online(
+        &mut self,
+        cfg: &EngineCfg,
+        access: &AccessCfg,
+        background: bool,
+    ) {
+        for (slot, &(rows, compressed)) in cfg.tables.iter().enumerate() {
+            if compressed {
+                self.online[slot] = Some(OnlineSlot::Scheduled(BackgroundReorderer::new(
+                    rows,
+                    access.hot_ratio,
+                    access.refresh_every.max(1),
+                    access.window,
+                    DEFAULT_ADOPT_LAG,
+                    background,
+                )));
+            }
+        }
+    }
+
+    /// Apply [`AccessCfg`] policy: plan-layout knobs always, online
+    /// refresh when requested (`background_reorder` alone implies it —
+    /// a background engine with nothing to refresh would be inert).
     pub fn configure(&mut self, cfg: &EngineCfg, access: &AccessCfg) {
-        if access.online_reorder {
+        self.set_layout_policy(access.cache_kb, access.fuse_tables);
+        if access.online_reorder || access.background_reorder {
             self.enable_online(cfg, access);
         }
+    }
+
+    /// Per-refresh ingest-thread stall samples (seconds) accumulated by
+    /// the scheduled online engines across all slots (empty for the
+    /// inline engine, which has no stall accounting).
+    pub fn reorder_stall_samples(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        for slot in self.online.iter().flatten() {
+            if let OnlineSlot::Scheduled(b) = slot {
+                out.extend_from_slice(&b.stall_samples);
+            }
+        }
+        out
     }
 
     /// The bijection currently applied to slot `t` (`None` = identity).
@@ -148,11 +255,12 @@ impl AccessPlanner {
             let Some(online) = self.online[t].as_mut() else { continue };
             self.obs.clear();
             self.obs.extend(batch.sparse_col(t, ns));
-            if online.observe(&self.obs) {
-                self.bijections[t] = Some(online.bijection.clone());
+            if let Some(bij) = online.observe(&self.obs) {
+                self.bijections[t] = Some(bij.clone());
                 self.refreshes += 1;
             }
         }
+        out.set_policy(self.cache_kb, self.fuse_tables);
         out.build_into(batch, &self.shapes, &self.bijections);
         self.batches_planned += 1;
     }
@@ -162,6 +270,7 @@ impl AccessPlanner {
     /// online-refreshed) remap must be read back through the same remap,
     /// and read-only traffic must not advance the online state.
     pub fn plan_frozen_into(&self, batch: &Batch, out: &mut BatchPlan) {
+        out.set_policy(self.cache_kb, self.fuse_tables);
         out.build_into(batch, &self.shapes, &self.bijections);
     }
 }
@@ -236,6 +345,32 @@ mod tests {
             assert_eq!(mapped, p.bijection(0).unwrap().apply(old));
         }
         assert_eq!(plan.col(1), &raw1[..], "plain slot must stay untouched");
+    }
+
+    #[test]
+    fn background_reorder_alone_enables_refresh() {
+        // `[access] background_reorder = true` without `online_reorder`
+        // must still enable the (background) refresh engine
+        let cfg = cfg();
+        let mut p = AccessPlanner::for_engine_cfg(&cfg);
+        let access = AccessCfg {
+            background_reorder: true,
+            refresh_every: 2,
+            window: 4,
+            ..Default::default()
+        };
+        p.configure(&cfg, &access);
+        let mut g = gen();
+        let mut plan = BatchPlan::default();
+        for _ in 0..6 {
+            let b = g.next_batch(64);
+            p.plan_into(&b, &mut plan);
+        }
+        assert!(p.refreshes >= 1, "background_reorder alone was inert");
+        assert!(
+            !p.reorder_stall_samples().is_empty(),
+            "scheduled engine must record stall samples"
+        );
     }
 
     #[test]

@@ -54,6 +54,9 @@ pub struct BenchArm {
     pub throughput: f64,
     pub p50_us: f64,
     pub p99_us: f64,
+    /// number of measured samples behind the percentiles (lets CI assert
+    /// an arm — e.g. the ingest-stall arms — actually collected data)
+    pub n: usize,
 }
 
 impl BenchArm {
@@ -67,14 +70,15 @@ impl BenchArm {
             throughput: items as f64 / s.p50,
             p50_us: s.p50 * 1e6,
             p99_us: s.p99 * 1e6,
+            n: iters.len(),
         }
     }
 
     fn json(&self) -> String {
         format!(
             "{{\"name\": \"{}\", \"workers\": {}, \"throughput_per_sec\": {:.1}, \
-             \"p50_us\": {:.1}, \"p99_us\": {:.1}}}",
-            self.name, self.workers, self.throughput, self.p50_us, self.p99_us
+             \"p50_us\": {:.1}, \"p99_us\": {:.1}, \"n\": {}}}",
+            self.name, self.workers, self.throughput, self.p50_us, self.p99_us, self.n
         )
     }
 }

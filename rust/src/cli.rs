@@ -82,6 +82,9 @@ SUBCOMMANDS:
                --workers N  --no-reorder  --no-reuse  --pipeline
                --plan-ahead N (ingest lookahead, 0 = inline planning)
                --online-reorder (refresh the index bijection online)
+               --background-reorder (rebuilds on a worker, epoch swap)
+               --cache-kb N (L2 tile budget for plan layouts; 0 = off)
+               --fuse-tables (fused same-vocab planning sweep)
   serve        Stream batch-1 detection over a held-out sample stream
                --requests N  --threshold F  --workers N (replica shards)
   gen-data     Generate and summarize the IEEE-118 FDIA dataset

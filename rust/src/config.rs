@@ -152,6 +152,15 @@ pub struct RecAdConfig {
     pub online_reorder: bool,
     /// batches between online bijection rebuilds.
     pub reorder_refresh: usize,
+    /// L2 budget in KiB for hottest-first tiled plan layouts
+    /// (`[access] cache_kb` / `--cache-kb N`); 0 disables tiling.
+    pub cache_kb: usize,
+    /// plan same-vocabulary TT slots through one fused sorted sweep
+    /// (`[access] fuse_tables` / `--fuse-tables`).
+    pub fuse_tables: bool,
+    /// run online bijection rebuilds on a background worker
+    /// (`[access] background_reorder` / `--background-reorder`).
+    pub background_reorder: bool,
     pub seed: u64,
     pub artifacts_dir: String,
 }
@@ -174,6 +183,9 @@ impl Default for RecAdConfig {
             plan_ahead: AccessCfg::default().plan_ahead,
             online_reorder: false,
             reorder_refresh: AccessCfg::default().refresh_every,
+            cache_kb: AccessCfg::default().cache_kb,
+            fuse_tables: false,
+            background_reorder: false,
             seed: 42,
             artifacts_dir: "artifacts".into(),
         }
@@ -199,6 +211,9 @@ impl RecAdConfig {
             plan_ahead: t.usize_or("access.plan_ahead", d.plan_ahead),
             online_reorder: t.bool_or("access.online_reorder", d.online_reorder),
             reorder_refresh: t.usize_or("access.refresh_every", d.reorder_refresh).max(1),
+            cache_kb: t.usize_or("access.cache_kb", d.cache_kb),
+            fuse_tables: t.bool_or("access.fuse_tables", d.fuse_tables),
+            background_reorder: t.bool_or("access.background_reorder", d.background_reorder),
             seed: t.num_or("run.seed", d.seed as f64) as u64,
             artifacts_dir: t.str_or("run.artifacts_dir", &d.artifacts_dir).to_string(),
         }
@@ -228,6 +243,9 @@ impl RecAdConfig {
             plan_ahead: self.plan_ahead,
             online_reorder: self.online_reorder,
             refresh_every: self.reorder_refresh,
+            cache_kb: self.cache_kb,
+            fuse_tables: self.fuse_tables,
+            background_reorder: self.background_reorder,
             ..AccessCfg::default()
         }
     }
@@ -262,6 +280,9 @@ workers = 3
 plan_ahead = 2
 online_reorder = true
 refresh_every = 16
+cache_kb = 512
+fuse_tables = true
+background_reorder = true
 "#;
         let t = Toml::parse(doc).unwrap();
         let c = RecAdConfig::from_toml(&t);
@@ -282,6 +303,9 @@ refresh_every = 16
         assert_eq!(a.plan_ahead, 2);
         assert!(a.online_reorder);
         assert_eq!(a.refresh_every, 16);
+        assert_eq!(a.cache_kb, 512);
+        assert!(a.fuse_tables);
+        assert!(a.background_reorder);
     }
 
     #[test]

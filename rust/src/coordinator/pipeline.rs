@@ -41,6 +41,12 @@ pub struct PipelineCfg {
     pub host_slots: Vec<usize>,
     /// Disable the RAW synchronizer (correctness ablation: stale reads).
     pub disable_raw_sync: bool,
+    /// Access planner the PS/ingest stage plans batches with — profiled
+    /// and/or online-reordering planners slot in here (host-slot columns
+    /// stay raw: `AccessPlanner` only ever remaps compressed slots, which
+    /// is exactly what the prefetch/gradient row keys rely on).  `None`
+    /// falls back to the identity planner for the engine config.
+    pub planner: Option<AccessPlanner>,
 }
 
 impl PipelineCfg {
@@ -52,6 +58,7 @@ impl PipelineCfg {
             cost,
             host_slots,
             disable_raw_sync: false,
+            planner: None,
         }
     }
 }
@@ -105,7 +112,10 @@ pub fn run(
         // -------- sequential arm: one thread, no overlap ----------------
         let n_sparse = engine.cfg.n_tables();
         let dim = engine.cfg.emb_dim;
-        let mut planner = AccessPlanner::for_engine_cfg(&engine.cfg);
+        let mut planner = cfg
+            .planner
+            .clone()
+            .unwrap_or_else(|| AccessPlanner::for_engine_cfg(&engine.cfg));
         let mut plan = BatchPlan::default();
         let mut cache = EmbeddingCache::new(cfg.cache_lc);
         let mut losses = Vec::with_capacity(batches.len());
@@ -160,9 +170,14 @@ fn run_pipelined(
     let n = batches.len();
     // The PS thread is also the ingest stage: it plans batch access
     // (column extraction + TT dedup) alongside the parameter snapshot,
-    // overlapping both with the worker's compute.  Plans are pure
-    // functions of the batch, so pipeline == sequential still holds.
-    let mut planner = AccessPlanner::for_engine_cfg(&engine.cfg);
+    // overlapping both with the worker's compute.  Plans (and online
+    // bijection refreshes, whose adoption points are functions of the
+    // batch index alone) are deterministic in the batch sequence, so
+    // pipeline == sequential still holds for any configured planner.
+    let mut planner = cfg
+        .planner
+        .clone()
+        .unwrap_or_else(|| AccessPlanner::for_engine_cfg(&engine.cfg));
     let prefetch_q: std::sync::Arc<BoundedQueue<(crate::coordinator::cache::PrefetchBatch, BatchPlan)>> =
         BoundedQueue::new(cfg.lc.max(1));
     // spent plan shells flow back worker → PS so the steady state reuses
@@ -360,6 +375,42 @@ mod tests {
         for (i, (a, b)) in seq.iter().zip(&pipe).enumerate() {
             assert_eq!(a, b, "divergence at step {i}: {a} vs {b}");
         }
+    }
+
+    /// A profiled (remapping) planner threaded through `PipelineCfg` must
+    /// keep the pipeline == sequential guarantee AND leave host-slot rows
+    /// raw (the planner only remaps compressed slots, so the prefetch /
+    /// gradient row keys still address the host tables correctly).
+    #[test]
+    fn pipeline_with_profiled_planner_matches_sequential_bitwise() {
+        let (ecfg, batches) = cfg_and_batches();
+        let profile = &batches[..8];
+        let planner = AccessPlanner::with_profile(&ecfg, profile, 0.1);
+        assert!(planner.bijection(0).is_some(), "TT slot must be remapped");
+        assert!(planner.bijection(1).is_none(), "host slots must stay raw");
+        let run_mode = |pipelined: bool| -> Vec<f32> {
+            let mut engine = NativeDlrm::new(ecfg.clone(), &mut Rng::new(31));
+            let host = split_to_host(&mut engine, &[1, 2], &mut Rng::new(32));
+            let mut pcfg = PipelineCfg::new(zero_cost(), vec![1, 2]);
+            pcfg.pipelined = pipelined;
+            pcfg.lc = 4;
+            pcfg.planner = Some(planner.clone());
+            let (report, _, _) = run(engine, host, &batches, &pcfg);
+            report.losses
+        };
+        let seq = run_mode(false);
+        let pipe = run_mode(true);
+        assert_eq!(seq.len(), pipe.len());
+        for (i, (a, b)) in seq.iter().zip(&pipe).enumerate() {
+            assert_eq!(a, b, "divergence at step {i}: {a} vs {b}");
+        }
+        // and the remap must actually change training vs identity
+        let mut engine = NativeDlrm::new(ecfg.clone(), &mut Rng::new(31));
+        let host = split_to_host(&mut engine, &[1, 2], &mut Rng::new(32));
+        let mut pcfg = PipelineCfg::new(zero_cost(), vec![1, 2]);
+        pcfg.pipelined = false;
+        let (ident, _, _) = run(engine, host, &batches, &pcfg);
+        assert_ne!(ident.losses, seq, "profiled remap had no effect");
     }
 
     #[test]

@@ -20,6 +20,10 @@ pub struct TrainReport {
     pub samples_per_sec: f64,
     pub loss_curve: Vec<f32>,
     pub eval: ClassifyReport,
+    /// Longest single planning call on the ingest thread (seconds) —
+    /// spikes when inline bijection rebuilds fire; the background
+    /// refresh engine (`[access] background_reorder`) bounds it.
+    pub plan_stall_max_s: f64,
 }
 
 /// Train a detector on the IEEE118 dataset and evaluate on the held-out
@@ -48,6 +52,24 @@ pub fn train_ieee118_with(
     batch_size: usize,
     seed: u64,
 ) -> (TrainReport, NativeDlrm) {
+    let (report, engine, _) =
+        train_ieee118_full(cfg, access, dataset, epochs, batch_size, seed);
+    (report, engine)
+}
+
+/// [`train_ieee118_with`], additionally returning the planner the model
+/// trained under — REQUIRED for serving whenever reordering is active
+/// (profiled or online): the learned embedding rows are only consistent
+/// with that planner's bijections, so hand it to
+/// [`Detector::with_planner`](crate::serve::Detector::with_planner).
+pub fn train_ieee118_full(
+    cfg: EngineCfg,
+    access: &AccessCfg,
+    dataset: &Ieee118Dataset,
+    epochs: usize,
+    batch_size: usize,
+    seed: u64,
+) -> (TrainReport, NativeDlrm, AccessPlanner) {
     let (train, test) = dataset.split(0.8);
     let mut engine = NativeDlrm::new(cfg, &mut Rng::new(seed));
     let mut planner = AccessPlanner::for_engine_cfg(&engine.cfg);
@@ -55,10 +77,11 @@ pub fn train_ieee118_with(
     let mut rng = Rng::new(seed ^ 0xE90C);
     let mut loss_curve = Vec::new();
     let mut steps = 0u64;
+    let mut plan_stall_max_s = 0.0f64;
     let t0 = Instant::now();
     for _ in 0..epochs {
         let mut iter = EpochIter::new(train, batch_size, &mut rng);
-        run_prefetched_fill(
+        let report = run_prefetched_fill(
             |out| iter.next_into(out),
             &mut planner,
             access.plan_ahead,
@@ -67,6 +90,7 @@ pub fn train_ieee118_with(
                 steps += 1;
             },
         );
+        plan_stall_max_s = plan_stall_max_s.max(report.plan_stall_max_s);
     }
     let wall = t0.elapsed();
     // evaluate through the SAME (now frozen) remap the model was trained
@@ -80,8 +104,9 @@ pub fn train_ieee118_with(
         samples_per_sec: (steps as usize * batch_size) as f64 / wall.as_secs_f64(),
         loss_curve,
         eval,
+        plan_stall_max_s,
     };
-    (report, engine)
+    (report, engine, planner)
 }
 
 /// Evaluate a trained engine on a sample slice (identity index mapping).

@@ -99,6 +99,124 @@ impl DriftingZipf {
     }
 }
 
+/// Gradually drifting Zipf stream — mixture interpolation between two
+/// rotations of the same scrambled Zipf.
+///
+/// Where [`DriftingZipf::drift`] SNAPS the hot set to a cold region,
+/// real workloads usually migrate: at mixing weight `alpha` a sample
+/// comes from the new rotation with probability `alpha` and the old one
+/// otherwise, so `P_t = (1-α)·P_old + α·P_new` sweeps smoothly from the
+/// old distribution to the new as the caller advances `alpha`.  This is
+/// the scenario where refresh cadence matters most: every intermediate
+/// mixture is a distribution no offline profile ever saw.
+#[derive(Clone, Debug)]
+pub struct GradualDriftZipf {
+    z: Zipf,
+    perm: Vec<u64>,
+    n: u64,
+    from_rot: u64,
+    to_rot: u64,
+    alpha: f64,
+}
+
+impl GradualDriftZipf {
+    pub fn new(n: u64, s: f64, seed: u64) -> GradualDriftZipf {
+        assert!(n > 0);
+        let mut perm: Vec<u64> = (0..n).collect();
+        Rng::new(seed).shuffle(&mut perm);
+        GradualDriftZipf { z: Zipf::new(n, s), perm, n, from_rot: 0, to_rot: 0, alpha: 0.0 }
+    }
+
+    /// Start a new drift episode: the target distribution is the current
+    /// target rotated by `delta`; mixing restarts at `alpha = 0`.  An
+    /// in-progress episode is committed first (its target becomes the
+    /// new base) — chaining episodes therefore never snaps BACK to a
+    /// stale base; finish an episode with `advance` up to 1.0 first if
+    /// the jump-forward matters to the scenario.
+    pub fn begin_drift(&mut self, delta: u64) {
+        self.from_rot = self.to_rot;
+        self.to_rot = (self.from_rot + delta) % self.n;
+        self.alpha = 0.0;
+    }
+
+    /// Advance the mixture by `d_alpha` (clamped to 1; at 1 the target
+    /// becomes the new base so a later `begin_drift` chains episodes).
+    pub fn advance(&mut self, d_alpha: f64) {
+        self.alpha = (self.alpha + d_alpha).min(1.0);
+        if self.alpha >= 1.0 {
+            self.from_rot = self.to_rot;
+        }
+    }
+
+    /// Current mixing weight of the target distribution.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let rot = if self.alpha > 0.0 && rng.f64() < self.alpha {
+            self.to_rot
+        } else {
+            self.from_rot
+        };
+        self.perm[((self.z.sample(rng) + rot) % self.n) as usize]
+    }
+
+    pub fn sample_many(&self, rng: &mut Rng, out: &mut [u64]) {
+        for v in out.iter_mut() {
+            *v = self.sample(rng);
+        }
+    }
+}
+
+/// Vocabulary-growth stream — the active id set expands over time (new
+/// users/entities appearing), Zipf-skewed over the currently active
+/// prefix of a scrambled id space.  Newly activated ids join at the TAIL
+/// of the rank order, but the scramble means they land anywhere in the
+/// raw id space — so a stale bijection has never seen them at all, the
+/// second failure mode (besides drift) that online refresh covers.
+#[derive(Clone, Debug)]
+pub struct GrowingVocabZipf {
+    s: f64,
+    perm: Vec<u64>,
+    n_max: u64,
+    active: u64,
+    z: Zipf,
+}
+
+impl GrowingVocabZipf {
+    /// Stream over `n_max` total ids, of which `active0` are live at t=0.
+    pub fn new(n_max: u64, active0: u64, s: f64, seed: u64) -> GrowingVocabZipf {
+        assert!(n_max > 0 && active0 > 0 && active0 <= n_max);
+        let mut perm: Vec<u64> = (0..n_max).collect();
+        Rng::new(seed).shuffle(&mut perm);
+        GrowingVocabZipf { s, perm, n_max, active: active0, z: Zipf::new(active0, s) }
+    }
+
+    /// Activate `delta` more ids (clamped to the full vocabulary).
+    pub fn grow(&mut self, delta: u64) {
+        let next = (self.active + delta).min(self.n_max);
+        if next != self.active {
+            self.active = next;
+            self.z = Zipf::new(next, self.s);
+        }
+    }
+
+    pub fn active(&self) -> u64 {
+        self.active
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        self.perm[self.z.sample(rng) as usize]
+    }
+
+    pub fn sample_many(&self, rng: &mut Rng, out: &mut [u64]) {
+        for v in out.iter_mut() {
+            *v = self.sample(rng);
+        }
+    }
+}
+
 /// H(x) = ∫ x^-s dx antiderivative (s ≠ 1 branch handled via expm1).
 fn h(x: f64, s: f64) -> f64 {
     let log_x = x.ln();
@@ -182,6 +300,65 @@ mod tests {
         let z = Zipf::new(1, 1.0);
         let mut rng = Rng::new(5);
         assert_eq!(z.sample(&mut rng), 0);
+    }
+
+    fn hot20(samples: impl Fn(&mut Rng) -> u64, rng: &mut Rng) -> std::collections::HashSet<u64> {
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..8000 {
+            *counts.entry(samples(rng)).or_insert(0u64) += 1;
+        }
+        let mut v: Vec<(u64, u64)> = counts.into_iter().collect();
+        v.sort_by_key(|&(id, c)| (std::cmp::Reverse(c), id));
+        v.into_iter().take(20).map(|(id, _)| id).collect()
+    }
+
+    #[test]
+    fn gradual_drift_interpolates_between_endpoints() {
+        let mut gz = GradualDriftZipf::new(5000, 1.3, 17);
+        let mut rng = Rng::new(18);
+        let start = hot20(|r| gz.sample(r), &mut rng);
+        gz.begin_drift(2500);
+        assert_eq!(gz.alpha(), 0.0);
+        // alpha = 0: still the old distribution
+        let at0 = hot20(|r| gz.sample(r), &mut rng);
+        assert!(start.intersection(&at0).count() >= 12, "alpha=0 already drifted");
+        // alpha = 0.5: genuinely mixed — hot ids from BOTH endpoints
+        gz.advance(0.5);
+        let mid = hot20(|r| gz.sample(r), &mut rng);
+        gz.advance(0.5);
+        assert_eq!(gz.alpha(), 1.0);
+        let end = hot20(|r| gz.sample(r), &mut rng);
+        assert!(
+            start.intersection(&end).count() <= 2,
+            "endpoints barely moved: {}",
+            start.intersection(&end).count()
+        );
+        assert!(mid.intersection(&start).count() >= 3, "mid lost the old mode");
+        assert!(mid.intersection(&end).count() >= 3, "mid never gained the new mode");
+        for _ in 0..2000 {
+            assert!(gz.sample(&mut rng) < 5000);
+        }
+    }
+
+    #[test]
+    fn vocab_growth_activates_new_ids() {
+        let mut gv = GrowingVocabZipf::new(10_000, 500, 1.2, 23);
+        let mut rng = Rng::new(24);
+        let before: std::collections::HashSet<u64> =
+            (0..4000).map(|_| gv.sample(&mut rng)).collect();
+        assert!(before.len() <= 500, "sampled outside the active set");
+        gv.grow(4500);
+        assert_eq!(gv.active(), 5000);
+        let after: std::collections::HashSet<u64> =
+            (0..40_000).map(|_| gv.sample(&mut rng)).collect();
+        let novel = after.difference(&before).count();
+        assert!(novel > 100, "growth produced almost no new ids: {novel}");
+        // clamped at the vocabulary ceiling
+        gv.grow(1 << 40);
+        assert_eq!(gv.active(), 10_000);
+        for _ in 0..2000 {
+            assert!(gv.sample(&mut rng) < 10_000);
+        }
     }
 
     #[test]

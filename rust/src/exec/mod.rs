@@ -25,7 +25,7 @@
 
 pub mod par;
 
-pub use par::{par_gemm_acc, par_gemm_at_overwrite, par_gemm_bt_acc, par_row_blocks};
+pub use par::{par_gemm_acc, par_gemm_at_overwrite, par_gemm_bt_acc, par_row_blocks, split_at_cuts};
 
 use std::ops::Range;
 

@@ -56,6 +56,32 @@ where
     });
 }
 
+/// Split `0..n` into at most `parts` balanced contiguous shards whose
+/// boundaries are drawn from `cuts` (ascending positions, first element
+/// 0) — the generalized boundary-constrained sharding behind the TT plan
+/// walks.  Cutting anywhere else would split a prefix group (recomputing
+/// a shared partial product and perturbing the `TtStats` accounting) or
+/// an L2 tile (evicting its working set mid-walk), so shard edges snap to
+/// the next cut at or after each balanced target.  Below `min_n` elements
+/// the whole range stays on one worker (thread spawns would dominate).
+pub fn split_at_cuts(n: usize, cuts: &[u32], parts: usize, min_n: usize) -> Vec<Range<usize>> {
+    if parts <= 1 || cuts.len() <= 1 || n < min_n {
+        return vec![0..n];
+    }
+    let mut edges: Vec<usize> = vec![0];
+    for w in 1..parts {
+        let target = n * w / parts;
+        let gi = cuts.partition_point(|&g| (g as usize) < target);
+        let cut = cuts.get(gi).map(|&g| g as usize).unwrap_or(n);
+        let last = *edges.last().unwrap();
+        if cut > last && cut < n {
+            edges.push(cut);
+        }
+    }
+    edges.push(n);
+    edges.windows(2).map(|w| w[0]..w[1]).collect()
+}
+
 /// C[m,n] += A[m,k] · B[k,n], rows of A/C sharded across workers.
 /// Bit-identical to [`gemm_acc`] (each output row runs the same serial
 /// i-k-j kernel on exactly one worker).
@@ -189,6 +215,31 @@ mod tests {
         for (r, row) in data.chunks(3).enumerate() {
             assert!(row.iter().all(|&v| v == (r + 1) as u32), "row {r}: {row:?}");
         }
+    }
+
+    #[test]
+    fn split_at_cuts_respects_boundaries() {
+        // cuts at 0, 10, 50, 90 over 100 elements
+        let cuts = [0u32, 10, 50, 90];
+        for parts in [1usize, 2, 3, 8] {
+            let shards = split_at_cuts(100, &cuts, parts, 64);
+            let mut at = 0usize;
+            for s in &shards {
+                assert_eq!(s.start, at, "gap at parts={parts}");
+                assert!(s.end > s.start);
+                at = s.end;
+            }
+            assert_eq!(at, 100);
+            assert!(shards.len() <= parts.max(1));
+            // every interior edge is a declared cut
+            for s in &shards[1..] {
+                assert!(cuts.contains(&(s.start as u32)), "edge {} not a cut", s.start);
+            }
+        }
+        // below min_n: single shard regardless of parts
+        assert_eq!(split_at_cuts(40, &cuts, 4, 64), vec![0..40]);
+        // degenerate cut list: single shard
+        assert_eq!(split_at_cuts(100, &[0], 4, 64), vec![0..100]);
     }
 
     #[test]

@@ -65,8 +65,16 @@ fn load_config(cli: &Cli) -> Result<RecAdConfig> {
     cfg.scale = cli.f64_or("scale", cfg.scale)?;
     cfg.workers = cli.usize_or("workers", cfg.workers)?.max(1);
     cfg.plan_ahead = cli.usize_or("plan-ahead", cfg.plan_ahead)?;
+    cfg.cache_kb = cli.usize_or("cache-kb", cfg.cache_kb)?;
     if cli.flag("online-reorder") {
         cfg.online_reorder = true;
+    }
+    if cli.flag("background-reorder") {
+        cfg.online_reorder = true;
+        cfg.background_reorder = true;
+    }
+    if cli.flag("fuse-tables") {
+        cfg.fuse_tables = true;
     }
     if cli.flag("no-reorder") {
         cfg.reorder = false;
@@ -120,12 +128,21 @@ fn cmd_train(cli: &Cli) -> Result<()> {
             cfg.seed,
         );
         println!(
-            "trained {} steps in {} ({:.0} samples/s; ingest plan-ahead {}{})",
+            "trained {} steps in {} ({:.0} samples/s; ingest plan-ahead {}{}{}; \
+             max ingest plan stall {})",
             report.steps,
             fmt_dur(report.wall.as_secs_f64()),
             report.samples_per_sec,
             access.plan_ahead,
-            if access.online_reorder { ", online reorder" } else { "" }
+            if access.background_reorder {
+                ", background reorder"
+            } else if access.online_reorder {
+                ", online reorder"
+            } else {
+                ""
+            },
+            if access.fuse_tables { ", fused plans" } else { "" },
+            fmt_dur(report.plan_stall_max_s)
         );
         let show = report.loss_curve.len().min(10);
         let stride = (report.loss_curve.len() / show).max(1);
@@ -161,7 +178,12 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         seed: cfg.seed,
     });
     println!("training detector before serving…");
-    let (report, engine) = trainer::train_ieee118(cfg.engine_cfg(), &ds, 2, 64, cfg.seed);
+    // Serve honors the [access] policy end to end: the detector must
+    // read back through the SAME planner (bijections + layout knobs) the
+    // model trained under.
+    let access = cfg.access_cfg();
+    let (report, engine, planner) =
+        trainer::train_ieee118_full(cfg.engine_cfg(), &access, &ds, 2, 64, cfg.seed);
     print_eval(&report.eval);
     let model_bytes = engine.model_bytes();
     let mut engine = engine;
@@ -169,7 +191,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     // each replica's intra-step pool to 1 so N replicas don't fan out to
     // N×N threads.
     engine.set_workers(1);
-    let det = Detector::new(engine, threshold);
+    let det = Detector::with_planner(engine, threshold, planner);
     let stream = &ds.samples[..requests.min(ds.samples.len())];
     let dispatch = Duration::from_micros(100);
     let sr = if cfg.workers > 1 {

@@ -75,8 +75,18 @@ impl GraphBuilder {
                 nodes.len() - 1
             })
         };
-        let mut edges: Vec<(usize, usize, f64)> = Vec::with_capacity(self.pairs.len());
-        for (&(a, b), &w) in &self.pairs {
+        // Canonical edge order: HashMap iteration order varies PER
+        // INSTANCE, so interning in it would assign different dense node
+        // ids (and different f64 accumulation orders) to identical
+        // inputs on every build — and the whole reorder stack must be a
+        // pure function of its inputs (the background refresh engine is
+        // asserted bit-identical to its synchronous twin, and pipeline ==
+        // sequential replays rebuilds).  Sorting by the (a, b) key
+        // restores that.
+        let mut pairs: Vec<((u64, u64), f64)> = self.pairs.into_iter().collect();
+        pairs.sort_unstable_by_key(|&(k, _)| k);
+        let mut edges: Vec<(usize, usize, f64)> = Vec::with_capacity(pairs.len());
+        for ((a, b), w) in pairs {
             let ia = intern(a, &mut nodes, &mut node_of);
             let ib = intern(b, &mut nodes, &mut node_of);
             edges.push((ia, ib, w));

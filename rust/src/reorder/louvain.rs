@@ -25,11 +25,19 @@ pub fn louvain(g: &IndexGraph) -> Communities {
     if n == 0 {
         return Communities { assign: vec![], n_comms: 0, modularity: 0.0 };
     }
-    // current (flattened) adjacency in plain vectors
+    // current (flattened) adjacency in plain vectors, neighbors in
+    // ascending id order — HashMap iteration order varies per instance,
+    // and both the f64 degree sums and the ΔQ tie-breaks below must be
+    // pure functions of the graph (the online-reorder engines are
+    // asserted bit-identical across rebuild invocations)
     let mut adj: Vec<Vec<(usize, f64)>> = g
         .adj
         .iter()
-        .map(|m| m.iter().map(|(&v, &w)| (v, w)).collect())
+        .map(|m| {
+            let mut a: Vec<(usize, f64)> = m.iter().map(|(&v, &w)| (v, w)).collect();
+            a.sort_unstable_by_key(|&(v, _)| v);
+            a
+        })
         .collect();
     // node -> original nodes it represents (for unfolding)
     let mut members: Vec<Vec<usize>> = (0..n).map(|v| vec![v]).collect();
@@ -42,16 +50,20 @@ pub fn louvain(g: &IndexGraph) -> Communities {
         let mut comm: Vec<usize> = (0..nn).collect();
         let mut comm_deg = degree.clone();
 
-        // local moving phase
+        // local moving phase.  `w_to`/`cand` are hoisted: this loop runs
+        // per node per sweep per level, and it sits exactly on the
+        // rebuild path whose latency the access layer instruments.
         let mut moved = true;
         let mut rounds = 0;
+        let mut w_to: HashMap<usize, f64> = HashMap::new();
+        let mut cand: Vec<(usize, f64)> = Vec::new();
         while moved && rounds < 32 {
             moved = false;
             rounds += 1;
             for v in 0..nn {
                 let cur = comm[v];
                 // weights from v into each neighboring community
-                let mut w_to: HashMap<usize, f64> = HashMap::new();
+                w_to.clear();
                 for &(u, w) in &adj[v] {
                     if u != v {
                         *w_to.entry(comm[u]).or_insert(0.0) += w;
@@ -60,8 +72,14 @@ pub fn louvain(g: &IndexGraph) -> Communities {
                 comm_deg[cur] -= degree[v];
                 let base = w_to.get(&cur).copied().unwrap_or(0.0)
                     - comm_deg[cur] * degree[v] / two_m;
+                // candidates in ascending community id: near-ties (within
+                // the 1e-12 deadband) resolve to the lowest id instead of
+                // whatever the map yields first — deterministic rebuilds
+                cand.clear();
+                cand.extend(w_to.iter().map(|(&c, &w)| (c, w)));
+                cand.sort_unstable_by_key(|&(c, _)| c);
                 let (mut best_c, mut best_gain) = (cur, 0.0f64);
-                for (&c, &w) in &w_to {
+                for &(c, w) in &cand {
                     if c == cur {
                         continue;
                     }
@@ -116,7 +134,11 @@ pub fn louvain(g: &IndexGraph) -> Communities {
         }
         adj = new_adj_maps
             .into_iter()
-            .map(|m| m.into_iter().collect())
+            .map(|m| {
+                let mut a: Vec<(usize, f64)> = m.into_iter().collect();
+                a.sort_unstable_by_key(|&(v, _)| v);
+                a
+            })
             .collect();
         members = new_members;
     }

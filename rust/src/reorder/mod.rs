@@ -9,6 +9,6 @@ pub mod online;
 
 pub use bijection::IndexBijection;
 pub use freq::FreqCounter;
-pub use online::OnlineReorderer;
+pub use online::{BackgroundReorderer, OnlineReorderer, DEFAULT_ADOPT_LAG};
 pub use graph::{GraphBuilder, IndexGraph};
 pub use louvain::{louvain, modularity, Communities};

@@ -5,6 +5,19 @@
 //! bijection offline; this is the streaming extension the access layer
 //! enables).
 //!
+//! Two refresh engines share the window/decay semantics:
+//!
+//! * [`OnlineReorderer`] — the PR-2 inline engine: the O(window·Louvain)
+//!   rebuild runs ON the ingest thread at the trigger batch (full stall).
+//! * [`BackgroundReorderer`] — the rebuild runs on a worker thread and
+//!   lands through an epoch-tagged double-buffer swap; the ingest thread
+//!   adopts the new bijection at a FIXED batch lag after the trigger
+//!   (blocking only if the worker hasn't finished by then).  Because the
+//!   adoption point is a function of the batch index — never of timing —
+//!   background refresh is **bit-identical** to its synchronous-compute
+//!   twin (`synchronous = true`, same lag) while its per-batch ingest
+//!   stall shrinks from the full rebuild to the residual join wait.
+//!
 //! Semantics note: refreshing the bijection mid-training re-assigns
 //! embedding rows to entities that moved (the standard re-bucketing
 //! trade-off of hot/cold systems like FAE); it is a *systems*
@@ -12,6 +25,8 @@
 //! its effect on prefix sharing, not on model accuracy.
 
 use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use crate::reorder::bijection::IndexBijection;
 use crate::reorder::freq::FreqCounter;
@@ -78,6 +93,287 @@ impl OnlineReorderer {
     }
 }
 
+/// Default adoption lag of the scheduled refresh engines: the rebuild
+/// overlaps one training batch before its result is required.
+pub const DEFAULT_ADOPT_LAG: usize = 1;
+
+/// One rebuild request shipped to the background worker.
+struct RefreshJob {
+    epoch: u64,
+    rows: u64,
+    hot_ratio: f64,
+    freq: FreqCounter,
+    window: Vec<Vec<u64>>,
+}
+
+/// The epoch-tagged double buffer the worker publishes into (hand-rolled
+/// arc-swap over `std::sync`): worker overwrites under the mutex and
+/// notifies; the ingest thread reads — or waits, at the adoption point —
+/// for the epoch it scheduled.
+struct SwapSlot {
+    slot: Mutex<Option<(u64, IndexBijection)>>,
+    ready: Condvar,
+}
+
+impl Default for SwapSlot {
+    fn default() -> Self {
+        SwapSlot { slot: Mutex::new(None), ready: Condvar::new() }
+    }
+}
+
+/// A scheduled (not yet adopted) refresh.
+struct PendingRefresh {
+    epoch: u64,
+    /// batches until adoption (0 = adopt on the current batch).
+    countdown: usize,
+    /// synchronous twin: the bijection computed inline at the trigger.
+    done: Option<IndexBijection>,
+    /// ingest-thread seconds already spent on this refresh (inline
+    /// rebuild for the synchronous twin, snapshot+dispatch otherwise).
+    stall_so_far: f64,
+}
+
+/// Per-table scheduled online-reorder state (see module docs).
+pub struct BackgroundReorderer {
+    rows: u64,
+    hot_ratio: f64,
+    refresh_every: usize,
+    window_cap: usize,
+    adopt_lag: usize,
+    /// true = compute inline at the trigger (the stall BASELINE with the
+    /// same adoption schedule); false = compute on the worker thread.
+    synchronous: bool,
+    freq: FreqCounter,
+    window: VecDeque<Vec<u64>>,
+    since_refresh: usize,
+    epoch: u64,
+    pending: Option<PendingRefresh>,
+    tx: Option<mpsc::Sender<RefreshJob>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    swap: Arc<SwapSlot>,
+    /// Current bijection (identity until the first adoption).
+    pub bijection: IndexBijection,
+    /// Number of adoptions performed.
+    pub refreshes: u64,
+    /// Per-refresh ingest-thread stall seconds (trigger + adoption work).
+    /// Bounded telemetry: when it reaches [`STALL_SAMPLE_CAP`] the oldest
+    /// half is dropped, so steady-state memory stays flat on long runs.
+    pub stall_samples: Vec<f64>,
+}
+
+/// Cap on retained stall samples (halved when reached).
+const STALL_SAMPLE_CAP: usize = 8192;
+
+impl BackgroundReorderer {
+    /// `background = false` builds the synchronous-compute twin: same
+    /// trigger points, same adoption schedule (so outputs are
+    /// bit-identical to `background = true`), but the rebuild stalls the
+    /// ingest thread at the trigger batch — the baseline the stall
+    /// comparison in `BENCH_cache_layout.json` measures against.
+    pub fn new(
+        rows: u64,
+        hot_ratio: f64,
+        refresh_every: usize,
+        window_cap: usize,
+        adopt_lag: usize,
+        background: bool,
+    ) -> Self {
+        assert!(refresh_every >= 1, "refresh interval must be >= 1");
+        BackgroundReorderer {
+            rows,
+            hot_ratio,
+            refresh_every,
+            window_cap: window_cap.max(1),
+            adopt_lag,
+            synchronous: !background,
+            freq: FreqCounter::new(),
+            window: VecDeque::new(),
+            since_refresh: 0,
+            epoch: 0,
+            pending: None,
+            tx: None,
+            worker: None,
+            swap: Arc::new(SwapSlot::default()),
+            bijection: IndexBijection::identity(rows),
+            refreshes: 0,
+            stall_samples: Vec::new(),
+        }
+    }
+
+    /// Feed one RAW (pre-remap) index column; returns `true` when this
+    /// call ADOPTED a refreshed bijection.  Triggers fire every
+    /// `refresh_every` observed batches (skipped while a refresh is in
+    /// flight); adoption happens exactly `adopt_lag` batches later —
+    /// a pure function of the batch index, so streams replayed through
+    /// background and synchronous engines see identical bijections on
+    /// identical batches.
+    pub fn observe(&mut self, col: &[u64]) -> bool {
+        self.freq.observe(col);
+        if self.window.len() == self.window_cap {
+            self.window.pop_front();
+        }
+        self.window.push_back(col.to_vec());
+        self.since_refresh += 1;
+        if self.since_refresh >= self.refresh_every && self.pending.is_none() {
+            self.since_refresh = 0;
+            self.epoch += 1;
+            let t0 = Instant::now();
+            let done = if self.synchronous {
+                let refs: Vec<&[u64]> = self.window.iter().map(|v| v.as_slice()).collect();
+                Some(IndexBijection::build_with_freq(
+                    self.rows,
+                    &self.freq,
+                    &refs,
+                    self.hot_ratio,
+                ))
+            } else {
+                self.dispatch();
+                None
+            };
+            let stall_so_far = t0.elapsed().as_secs_f64();
+            // half-life = one refresh interval, same as the inline engine
+            self.freq.decay(0.5);
+            self.pending = Some(PendingRefresh {
+                epoch: self.epoch,
+                countdown: self.adopt_lag,
+                done,
+                stall_so_far,
+            });
+        }
+        let adopt_now = matches!(self.pending.as_ref(), Some(p) if p.countdown == 0);
+        if adopt_now {
+            let mut p = self.pending.take().unwrap();
+            let t0 = Instant::now();
+            let bij = match p.done.take() {
+                Some(b) => b,
+                None => self.wait_for(p.epoch),
+            };
+            if self.stall_samples.len() >= STALL_SAMPLE_CAP {
+                self.stall_samples.drain(..STALL_SAMPLE_CAP / 2);
+            }
+            self.stall_samples.push(p.stall_so_far + t0.elapsed().as_secs_f64());
+            self.bijection = bij;
+            self.refreshes += 1;
+            return true;
+        }
+        if let Some(p) = self.pending.as_mut() {
+            p.countdown -= 1;
+        }
+        false
+    }
+
+    /// Maximum per-refresh ingest stall observed so far (seconds).
+    pub fn max_stall(&self) -> f64 {
+        self.stall_samples.iter().cloned().fold(0.0, f64::max)
+    }
+
+    fn dispatch(&mut self) {
+        if self.tx.is_none() {
+            let (tx, rx) = mpsc::channel::<RefreshJob>();
+            let swap = self.swap.clone();
+            let handle = std::thread::spawn(move || {
+                for job in rx {
+                    let refs: Vec<&[u64]> = job.window.iter().map(|v| v.as_slice()).collect();
+                    let bij = IndexBijection::build_with_freq(
+                        job.rows,
+                        &job.freq,
+                        &refs,
+                        job.hot_ratio,
+                    );
+                    let mut slot = swap.slot.lock().unwrap();
+                    *slot = Some((job.epoch, bij));
+                    swap.ready.notify_all();
+                }
+            });
+            self.tx = Some(tx);
+            self.worker = Some(handle);
+        }
+        let job = RefreshJob {
+            epoch: self.epoch,
+            rows: self.rows,
+            hot_ratio: self.hot_ratio,
+            freq: self.freq.clone(),
+            window: self.window.iter().cloned().collect(),
+        };
+        // a send can only fail if the worker panicked; surface that at
+        // the adoption point (wait_for would hang), not silently here
+        self.tx.as_ref().unwrap().send(job).expect("background reorder worker died");
+    }
+
+    /// Block until the worker has published `epoch` (or newer), and read
+    /// the bijection WITHOUT consuming the slot (clones keep it valid).
+    /// Waits with a timeout so a worker that died mid-rebuild (panic in
+    /// the Louvain stack, unwind on OOM) fails the adoption loudly
+    /// instead of hanging ingest forever.
+    fn wait_for(&self, epoch: u64) -> IndexBijection {
+        let mut slot = self.swap.slot.lock().unwrap();
+        loop {
+            if let Some((e, bij)) = slot.as_ref() {
+                if *e >= epoch {
+                    return bij.clone();
+                }
+            }
+            assert!(
+                self.worker.as_ref().is_some_and(|h| !h.is_finished()),
+                "background reorder worker died before publishing epoch {epoch}"
+            );
+            let (guard, _timed_out) = self
+                .swap
+                .ready
+                .wait_timeout(slot, std::time::Duration::from_millis(20))
+                .unwrap();
+            slot = guard;
+        }
+    }
+}
+
+impl Clone for BackgroundReorderer {
+    /// Clones carry the full deterministic state but no worker thread
+    /// (it respawns lazily).  An in-flight background rebuild is resolved
+    /// (briefly blocking) so the clone starts from a settled pending.
+    fn clone(&self) -> Self {
+        let pending = self.pending.as_ref().map(|p| PendingRefresh {
+            epoch: p.epoch,
+            countdown: p.countdown,
+            stall_so_far: p.stall_so_far,
+            done: Some(match &p.done {
+                Some(b) => b.clone(),
+                None => self.wait_for(p.epoch),
+            }),
+        });
+        BackgroundReorderer {
+            rows: self.rows,
+            hot_ratio: self.hot_ratio,
+            refresh_every: self.refresh_every,
+            window_cap: self.window_cap,
+            adopt_lag: self.adopt_lag,
+            synchronous: self.synchronous,
+            freq: self.freq.clone(),
+            window: self.window.clone(),
+            since_refresh: self.since_refresh,
+            epoch: self.epoch,
+            pending,
+            tx: None,
+            worker: None,
+            swap: Arc::new(SwapSlot::default()),
+            bijection: self.bijection.clone(),
+            refreshes: self.refreshes,
+            stall_samples: self.stall_samples.clone(),
+        }
+    }
+}
+
+impl Drop for BackgroundReorderer {
+    fn drop(&mut self) {
+        // closing the channel ends the worker loop; join so no rebuild
+        // outlives the owning planner
+        self.tx.take();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -115,6 +411,80 @@ mod tests {
         }
         assert_eq!(fired, vec![2, 5, 8]);
         assert_eq!(o.refreshes, 3);
+    }
+
+    /// The background engine's whole contract: identical bijections on
+    /// identical batches vs its synchronous-compute twin, regardless of
+    /// worker timing.
+    #[test]
+    fn background_matches_synchronous_twin_bitwise() {
+        let vocab = 3000u64;
+        let z = Zipf::new(vocab, 1.2);
+        let mut rng = Rng::new(9);
+        let batches: Vec<Vec<u64>> = (0..20)
+            .map(|_| (0..96).map(|_| z.sample(&mut rng)).collect())
+            .collect();
+        let run = |background: bool| -> (Vec<(usize, Vec<u64>)>, u64) {
+            let mut r = BackgroundReorderer::new(vocab, 0.1, 4, 8, 1, background);
+            let mut adoptions = Vec::new();
+            for (step, col) in batches.iter().enumerate() {
+                if r.observe(col) {
+                    let snap: Vec<u64> = (0..vocab).map(|i| r.bijection.apply(i)).collect();
+                    adoptions.push((step, snap));
+                }
+            }
+            (adoptions, r.refreshes)
+        };
+        let (sync_adopt, sync_n) = run(false);
+        let (bg_adopt, bg_n) = run(true);
+        assert!(sync_n >= 2, "not enough refreshes to be interesting");
+        assert_eq!(sync_n, bg_n, "refresh counts diverged");
+        assert_eq!(sync_adopt.len(), bg_adopt.len());
+        for ((ss, sb), (bs, bb)) in sync_adopt.iter().zip(&bg_adopt) {
+            assert_eq!(ss, bs, "adoption batch diverged");
+            assert_eq!(sb, bb, "bijection diverged at step {ss}");
+        }
+    }
+
+    #[test]
+    fn background_adoption_lags_trigger_by_fixed_batches() {
+        let vocab = 2000u64;
+        let z = Zipf::new(vocab, 1.2);
+        let mut rng = Rng::new(11);
+        let mut r = BackgroundReorderer::new(vocab, 0.1, 3, 6, 1, true);
+        let mut adopted_at = Vec::new();
+        for step in 0..10 {
+            let col: Vec<u64> = (0..64).map(|_| z.sample(&mut rng)).collect();
+            if r.observe(&col) {
+                adopted_at.push(step);
+            }
+        }
+        // triggers fire at steps 2, 5, 8 (the inline engine's schedule);
+        // adoption lands exactly one batch later
+        assert_eq!(adopted_at, vec![3, 6, 9]);
+        assert_eq!(r.stall_samples.len(), 3, "every adoption must record a stall sample");
+        assert!(r.max_stall() >= 0.0);
+    }
+
+    #[test]
+    fn background_clone_resolves_pending_and_stays_deterministic() {
+        let vocab = 1500u64;
+        let z = Zipf::new(vocab, 1.2);
+        let mut rng = Rng::new(13);
+        let mut r = BackgroundReorderer::new(vocab, 0.1, 2, 4, 1, true);
+        // two batches: trigger fires on the second, adoption still pending
+        for _ in 0..2 {
+            let col: Vec<u64> = (0..64).map(|_| z.sample(&mut rng)).collect();
+            r.observe(&col);
+        }
+        let mut c = r.clone();
+        let col: Vec<u64> = (0..64).map(|_| z.sample(&mut rng)).collect();
+        let a = r.observe(&col);
+        let b = c.observe(&col);
+        assert!(a && b, "both must adopt on the lagged batch");
+        for i in 0..vocab {
+            assert_eq!(r.bijection.apply(i), c.bijection.apply(i), "clone diverged at {i}");
+        }
     }
 
     #[test]

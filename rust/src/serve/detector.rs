@@ -34,6 +34,16 @@ pub struct Detector {
 impl Detector {
     pub fn new(engine: NativeDlrm, threshold: f32) -> Detector {
         let planner = AccessPlanner::for_engine_cfg(&engine.cfg);
+        Detector::with_planner(engine, threshold, planner)
+    }
+
+    /// Serve through a SPECIFIC planner — required when the engine was
+    /// trained under a profiled or online-refreshed bijection: the
+    /// learned embedding rows are only consistent with that remap, so
+    /// serving must read back through it.  The planner is frozen here
+    /// (scoring never advances online-reorder state); its layout policy
+    /// (tiling / fusion) carries over to the serving plans.
+    pub fn with_planner(engine: NativeDlrm, threshold: f32, planner: AccessPlanner) -> Detector {
         Detector {
             engine,
             threshold,
@@ -44,8 +54,10 @@ impl Detector {
     }
 
     /// Run the assembled scratch batch through the planned predict path.
+    /// Serving is read-only traffic: plans are built FROZEN (current
+    /// bijections, no online observation) so replicas never drift apart.
     fn predict_scratch(&mut self) -> Vec<f32> {
-        self.planner.plan_into(&self.scratch, &mut self.plan);
+        self.planner.plan_frozen_into(&self.scratch, &mut self.plan);
         self.engine.predict_planned(&self.scratch, &self.plan)
     }
 

@@ -74,6 +74,131 @@ pub fn gemm_bt_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
     }
 }
 
+/// C[m,n] += A[m,k] · B[k,n], k-loop unrolled ×4 — the tile inner-loop
+/// microkernel of the cache-resident (hottest-first tiled) plan walk.
+///
+/// **Bit-identical** to [`gemm_acc`]: each output element accumulates its
+/// k-terms in the same ascending order, one `+=` per term (no FMA
+/// contraction, no reassociation); the unroll only widens the instruction
+/// window so 4 rows of B stream per pass.  A rare zero in the unrolled
+/// A-quad falls back to the guarded serial step so the `av == 0.0` skip
+/// semantics match exactly.
+#[inline]
+pub fn gemm_acc_ku(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let k4 = k / 4 * 4;
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut p = 0;
+        while p < k4 {
+            let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
+            if a0 != 0.0 && a1 != 0.0 && a2 != 0.0 && a3 != 0.0 {
+                let b0 = &b[p * n..(p + 1) * n];
+                let b1 = &b[(p + 1) * n..(p + 2) * n];
+                let b2 = &b[(p + 2) * n..(p + 3) * n];
+                let b3 = &b[(p + 3) * n..(p + 4) * n];
+                for j in 0..n {
+                    let mut cv = crow[j];
+                    cv += a0 * b0[j];
+                    cv += a1 * b1[j];
+                    cv += a2 * b2[j];
+                    cv += a3 * b3[j];
+                    crow[j] = cv;
+                }
+            } else {
+                for q in 0..4 {
+                    let av = arow[p + q];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[(p + q) * n..(p + q + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+            p += 4;
+        }
+        for pp in k4..k {
+            let av = arow[pp];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[pp * n..(pp + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// C[m,n] += Aᵀ·B (A stored [k,m]), k-loop unrolled ×4 — the tiled
+/// backward's chain-product microkernel (dD3 / dD2 hops).
+///
+/// **Bit-identical** to [`gemm_at_acc`]: per output element the k-terms
+/// accumulate in the same ascending order with one `+=` per term; a zero
+/// in the unrolled quad falls back to the guarded serial step so the skip
+/// semantics match exactly.
+#[inline]
+pub fn gemm_at_tiled(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let k4 = k / 4 * 4;
+    let mut p = 0;
+    while p < k4 {
+        let a0 = &a[p * m..(p + 1) * m];
+        let a1 = &a[(p + 1) * m..(p + 2) * m];
+        let a2 = &a[(p + 2) * m..(p + 3) * m];
+        let a3 = &a[(p + 3) * m..(p + 4) * m];
+        let b0 = &b[p * n..(p + 1) * n];
+        let b1 = &b[(p + 1) * n..(p + 2) * n];
+        let b2 = &b[(p + 2) * n..(p + 3) * n];
+        let b3 = &b[(p + 3) * n..(p + 4) * n];
+        for i in 0..m {
+            let (x0, x1, x2, x3) = (a0[i], a1[i], a2[i], a3[i]);
+            let crow = &mut c[i * n..(i + 1) * n];
+            if x0 != 0.0 && x1 != 0.0 && x2 != 0.0 && x3 != 0.0 {
+                for j in 0..n {
+                    let mut cv = crow[j];
+                    cv += x0 * b0[j];
+                    cv += x1 * b1[j];
+                    cv += x2 * b2[j];
+                    cv += x3 * b3[j];
+                    crow[j] = cv;
+                }
+            } else {
+                for (xv, brow) in [(x0, b0), (x1, b1), (x2, b2), (x3, b3)] {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += xv * bv;
+                    }
+                }
+            }
+        }
+        p += 4;
+    }
+    for pp in k4..k {
+        let arow = &a[pp * m..(pp + 1) * m];
+        let brow = &b[pp * n..(pp + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
 /// Column-restricted Aᵀ·B: `block[m, j1-j0] += Aᵀ[k,m]ᵀ · B[k, j0..j1]`,
 /// where A is stored [k, m] and `block` is a private dense buffer for the
 /// column range.  The k-loop is outermost and ascending — exactly
@@ -264,6 +389,53 @@ mod tests {
             // bit-identical, not just close
             let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
             assert_eq!(bits(&full), bits(&stitched));
+        });
+    }
+
+    #[test]
+    fn gemm_acc_ku_bit_identical_to_gemm_acc() {
+        check_cases("gemm_ku", 40, |rng, case| {
+            let (m, k, n) = (
+                rng.usize_below(10) + 1,
+                rng.usize_below(13) + 1,
+                rng.usize_below(10) + 1,
+            );
+            let mut a = rand_vec(rng, m * k);
+            if case % 3 == 0 && !a.is_empty() {
+                // exercise the zero-skip fallback inside an unrolled quad
+                let z = rng.usize_below(a.len());
+                a[z] = 0.0;
+            }
+            let b = rand_vec(rng, k * n);
+            let mut c_ref = rand_vec(rng, m * n);
+            let mut c_ku = c_ref.clone();
+            gemm_acc(&a, &b, &mut c_ref, m, k, n);
+            gemm_acc_ku(&a, &b, &mut c_ku, m, k, n);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&c_ref), bits(&c_ku), "m={m} k={k} n={n}");
+        });
+    }
+
+    #[test]
+    fn gemm_at_tiled_bit_identical_to_gemm_at_acc() {
+        check_cases("gemm_at_tiled", 40, |rng, case| {
+            let (m, k, n) = (
+                rng.usize_below(10) + 1,
+                rng.usize_below(13) + 1,
+                rng.usize_below(10) + 1,
+            );
+            let mut at = rand_vec(rng, k * m);
+            if case % 3 == 0 && !at.is_empty() {
+                let z = rng.usize_below(at.len());
+                at[z] = 0.0;
+            }
+            let b = rand_vec(rng, k * n);
+            let mut c_ref = rand_vec(rng, m * n);
+            let mut c_t = c_ref.clone();
+            gemm_at_acc(&at, &b, &mut c_ref, m, k, n);
+            gemm_at_tiled(&at, &b, &mut c_t, m, k, n);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&c_ref), bits(&c_t), "m={m} k={k} n={n}");
         });
     }
 

@@ -26,9 +26,11 @@
 use std::ops::Range;
 
 use crate::access::plan::{BagLayout, TtPlan};
-use crate::exec::par::{par_row_blocks, PAR_MIN_WORK};
+use crate::exec::par::{par_row_blocks, split_at_cuts, PAR_MIN_WORK};
 use crate::exec::{split_ranges, ExecPool};
-use crate::tt::linalg::{add_assign, axpy, gemm_acc, gemm_at_acc, gemm_bt_acc};
+use crate::tt::linalg::{
+    add_assign, axpy, gemm_acc, gemm_acc_ku, gemm_at_acc, gemm_at_tiled, gemm_bt_acc,
+};
 use crate::tt::shapes::TtShapes;
 use crate::util::prng::Rng;
 
@@ -108,10 +110,20 @@ pub struct TtScratch {
     g1: Vec<f32>,
     g2: Vec<f32>,
     g3: Vec<f32>,
-    /// backward chain workspaces for the serial path (parallel workers
-    /// bring their own).
+    /// backward chain workspaces for the serial path.
     chain_p: Vec<f32>,
     chain_dp: Vec<f32>,
+    /// per-worker partial-product workspaces for the parallel forward and
+    /// backward shards — handed out per spawn so steady state is
+    /// allocation-free (the shards used to `Vec::new()` per call).
+    wp: Vec<Vec<f32>>,
+    wdp: Vec<Vec<f32>>,
+    /// tiled backward: per-chunk hottest-first compute order (absolute
+    /// work indices, grouped by chunk) and its inverse (work index →
+    /// gradient slot within the chunk), plus the bucketing cursors.
+    chunk_order: Vec<u32>,
+    chunk_slot: Vec<u32>,
+    chunk_cursors: Vec<usize>,
 }
 
 #[derive(Clone)]
@@ -402,57 +414,84 @@ impl EffTtTable {
             self.stats.hop2_gemms += uniq_rows as u64;
             self.stats.reuse_hits += (indices.len() - uniq_pref) as u64;
 
-            // materialize each distinct row once (prefix-group sharded);
-            // ~dim*rank multiply-adds per row, so tiny batches stay serial
+            // materialize each distinct row once.  When the plan carries a
+            // cache-resident layout the walk is tiled hottest-first: rows
+            // land at their *scheduled* positions (big prefix groups
+            // first, L2-sized tiles) and the scatter reads back through
+            // `slot_pos`.  Shards cut at tile (resp. group) boundaries so
+            // every distinct prefix product is still computed exactly
+            // once across workers — TtStats are worker- AND layout-
+            // invariant, and per-bag accumulation order is untouched, so
+            // tiled execution is bit-identical to untiled (pinned by
+            // `tests/plan_equivalence.rs`).
             scratch.row.resize(uniq_rows * dim, 0.0);
+            let tiled = plan.tiled();
+            debug_assert!(!tiled || plan.sched().len() == uniq_rows);
             let par_workers = if uniq_rows * dim * s.rank < PAR_MIN_WORK {
                 1
             } else {
                 self.pool.workers()
             };
-            let shards = shard_by_groups(&plan.group_starts, uniq_rows, par_workers);
+            // shard cuts: tile boundaries when there are enough tiles to
+            // feed every worker (shards then align to cache-coherent
+            // units), else scheduled-group boundaries (same granularity
+            // as the untiled path; any group boundary preserves the
+            // compute-each-prefix-once invariant)
+            let cuts: &[u32] = if tiled {
+                if plan.tile_starts().len() > par_workers {
+                    plan.tile_starts()
+                } else {
+                    plan.sched_group_starts()
+                }
+            } else {
+                &plan.group_starts
+            };
+            let shards = split_at_cuts(uniq_rows, cuts, par_workers, 64);
             let table = &*self;
             let rows_list = &plan.uniq_rows[..];
+            let sched: Option<&[u32]> = if tiled { Some(plan.sched()) } else { None };
+            let fill = |rg: Range<usize>, block: &mut [f32], p: &mut Vec<f32>| match sched {
+                Some(order) => fill_rows_sched(table, rows_list, order, rg, block, plen, dim, p),
+                None => fill_rows(table, rows_list, rg, block, plen, dim, p),
+            };
             if shards.len() <= 1 {
-                fill_rows(
-                    table,
-                    rows_list,
-                    0..uniq_rows,
-                    &mut scratch.row[..],
-                    plen,
-                    dim,
-                    &mut scratch.buf,
-                );
+                fill(0..uniq_rows, &mut scratch.row[..], &mut scratch.buf);
             } else {
+                // per-worker prefix buffers come from scratch (no
+                // per-call allocations in the spawned shards)
+                if scratch.wp.len() < shards.len() {
+                    scratch.wp.resize_with(shards.len(), Vec::new);
+                }
                 std::thread::scope(|sc| {
+                    let fill = &fill;
                     let mut rest = &mut scratch.row[..];
+                    let mut pbufs = scratch.wp.iter_mut();
                     let last = shards.len() - 1;
-                    let mut own: Option<(Range<usize>, &mut [f32])> = None;
+                    let mut own: Option<(Range<usize>, &mut [f32], &mut Vec<f32>)> = None;
                     for (i, r) in shards.into_iter().enumerate() {
                         let take = (r.end - r.start) * dim;
                         let (block, tail) = std::mem::take(&mut rest).split_at_mut(take);
                         rest = tail;
+                        let p = pbufs.next().unwrap();
                         if i == last {
-                            own = Some((r, block));
+                            own = Some((r, block, p));
                         } else {
-                            sc.spawn(move || {
-                                let mut p = Vec::new();
-                                fill_rows(table, rows_list, r, block, plen, dim, &mut p)
-                            });
+                            sc.spawn(move || fill(r, block, p));
                         }
                     }
-                    if let Some((r, block)) = own {
-                        let mut p = Vec::new();
-                        fill_rows(table, rows_list, r, block, plen, dim, &mut p);
+                    if let Some((r, block, p)) = own {
+                        fill(r, block, p);
                     }
                 });
             }
 
             // scatter-add distinct rows into bags (bag-sharded; each
             // bag's accumulation order is exactly the serial one).  The
-            // unit-bag case skips the offsets indirection entirely.
+            // unit-bag case skips the offsets indirection entirely; the
+            // tiled layout adds only a position lookup per read.
             let rowbuf = &scratch.row[..];
             let slots = &plan.index_slot[..];
+            let pos_map: Option<&[u32]> = if tiled { Some(&plan.slot_pos[..]) } else { None };
             let scatter_pool = if indices.len() * dim < PAR_MIN_WORK {
                 ExecPool::serial()
             } else {
@@ -463,8 +502,12 @@ impl EffTtTable {
                     par_row_blocks(&scatter_pool, out, dim, |b0, oblock| {
                         for (bi, dst) in oblock.chunks_mut(dim).enumerate() {
                             let slot = slots[b0 + bi] as usize;
+                            let pos = match pos_map {
+                                Some(m) => m[slot] as usize,
+                                None => slot,
+                            };
                             dst.fill(0.0);
-                            add_assign(dst, &rowbuf[slot * dim..(slot + 1) * dim]);
+                            add_assign(dst, &rowbuf[pos * dim..(pos + 1) * dim]);
                         }
                     });
                 }
@@ -475,7 +518,11 @@ impl EffTtTable {
                             dst.fill(0.0);
                             for k in offsets[b]..offsets[b + 1] {
                                 let slot = slots[k] as usize;
-                                add_assign(dst, &rowbuf[slot * dim..(slot + 1) * dim]);
+                                let pos = match pos_map {
+                                    Some(m) => m[slot] as usize,
+                                    None => slot,
+                                };
+                                add_assign(dst, &rowbuf[pos * dim..(pos + 1) * dim]);
                             }
                         }
                     });
@@ -671,6 +718,49 @@ impl EffTtTable {
             None
         };
 
+        // Tiled backward: with aggregation on, the work list IS the
+        // plan's ascending distinct-row list, so the forward layout's
+        // hottest-first schedule drives the chunk's (read-only) chain
+        // computation too — core slices of the big prefix groups stay
+        // hot, and the tile microkernels take the inner hops.  Gradient
+        // slots follow the schedule; the serial APPLY phase still walks
+        // the original ascending work order through the inverse map, so
+        // updates land in exactly the untiled order ⇒ bit-identical.
+        let tiled_bwd = self.opts.grad_aggregation && plan.tiled()
+            && plan.sched().len() == n_work;
+        debug_assert!(
+            !tiled_bwd
+                || scratch
+                    .work
+                    .iter()
+                    .zip(plan.uniq_rows.iter())
+                    .all(|(&(row, _), &u)| row == u),
+            "plan layout does not cover this work list"
+        );
+
+        if tiled_bwd {
+            // One O(n_work) bucketing pass builds EVERY chunk's scheduled
+            // compute order: work indices land in their chunk's region of
+            // `chunk_order` (chunk c owns [c·CHUNK, ...)) in schedule
+            // order, and `chunk_slot[w]` records each item's gradient
+            // slot within its chunk.
+            let n_chunks = n_work.div_ceil(BACKWARD_CHUNK);
+            scratch.chunk_order.resize(n_work, 0);
+            scratch.chunk_slot.resize(n_work, 0);
+            scratch.chunk_cursors.clear();
+            scratch
+                .chunk_cursors
+                .extend((0..n_chunks).map(|c| c * BACKWARD_CHUNK));
+            for &slot in plan.sched() {
+                let w = slot as usize;
+                let c = w / BACKWARD_CHUNK;
+                let at = scratch.chunk_cursors[c];
+                scratch.chunk_cursors[c] = at + 1;
+                scratch.chunk_order[at] = w as u32;
+                scratch.chunk_slot[w] = (at - c * BACKWARD_CHUNK) as u32;
+            }
+        }
+
         let mut cs = 0usize;
         while cs < n_work {
             let ce = (cs + BACKWARD_CHUNK).min(n_work);
@@ -684,21 +774,47 @@ impl EffTtTable {
                     (&scratch.occ[..], grad_out)
                 };
                 // ~3 slice GEMMs per item (~dim*rank madds each)
-                let shards = if table.pool.is_serial() || clen * dim * r < PAR_MIN_WORK {
-                    vec![cs..ce]
+                let serial = table.pool.is_serial() || clen * dim * r < PAR_MIN_WORK;
+                let shards: Vec<Range<usize>> = if serial {
+                    vec![0..clen]
                 } else {
                     split_ranges(clen, table.pool.workers())
-                        .into_iter()
-                        .map(|r| cs + r.start..cs + r.end)
-                        .collect()
                 };
-                if shards.len() <= 1 {
-                    compute_chains(
+                if shards.len() > 1 {
+                    if scratch.wp.len() < shards.len() {
+                        scratch.wp.resize_with(shards.len(), Vec::new);
+                    }
+                    if scratch.wdp.len() < shards.len() {
+                        scratch.wdp.resize_with(shards.len(), Vec::new);
+                    }
+                }
+                let order: Option<&[u32]> =
+                    if tiled_bwd { Some(&scratch.chunk_order[cs..ce]) } else { None };
+                let run = |rg: Range<usize>,
+                           b1: &mut [f32],
+                           b2: &mut [f32],
+                           b3: &mut [f32],
+                           p: &mut Vec<f32>,
+                           dp: &mut Vec<f32>| match order {
+                    Some(ord) => compute_chains_order(
+                        table, work, ord, grads, dim, rg, b1, b2, b3, p, dp,
+                    ),
+                    None => compute_chains(
                         table,
                         work,
                         grads,
                         dim,
-                        cs..ce,
+                        cs + rg.start..cs + rg.end,
+                        b1,
+                        b2,
+                        b3,
+                        p,
+                        dp,
+                    ),
+                };
+                if shards.len() <= 1 {
+                    run(
+                        0..clen,
                         &mut scratch.g1[..clen * l1],
                         &mut scratch.g2[..clen * l2],
                         &mut scratch.g3[..clen * l3],
@@ -707,9 +823,12 @@ impl EffTtTable {
                     );
                 } else {
                     std::thread::scope(|sc| {
+                        let run = &run;
                         let mut r1 = &mut scratch.g1[..clen * l1];
                         let mut r2 = &mut scratch.g2[..clen * l2];
                         let mut r3 = &mut scratch.g3[..clen * l3];
+                        let mut pbufs = scratch.wp.iter_mut();
+                        let mut dpbufs = scratch.wdp.iter_mut();
                         let last = shards.len() - 1;
                         let mut own = None;
                         for (i, rg) in shards.into_iter().enumerate() {
@@ -720,24 +839,17 @@ impl EffTtTable {
                             r2 = t2;
                             let (b3, t3) = std::mem::take(&mut r3).split_at_mut(len * l3);
                             r3 = t3;
+                            let p = pbufs.next().unwrap();
+                            let dp = dpbufs.next().unwrap();
                             if i == last {
                                 // calling thread works the final shard
-                                own = Some((rg, b1, b2, b3));
+                                own = Some((rg, b1, b2, b3, p, dp));
                             } else {
-                                sc.spawn(move || {
-                                    let (mut p, mut dp) = (Vec::new(), Vec::new());
-                                    compute_chains(
-                                        table, work, grads, dim, rg, b1, b2, b3, &mut p,
-                                        &mut dp,
-                                    )
-                                });
+                                sc.spawn(move || run(rg, b1, b2, b3, p, dp));
                             }
                         }
-                        if let Some((rg, b1, b2, b3)) = own {
-                            let (mut p, mut dp) = (Vec::new(), Vec::new());
-                            compute_chains(
-                                table, work, grads, dim, rg, b1, b2, b3, &mut p, &mut dp,
-                            );
+                        if let Some((rg, b1, b2, b3, p, dp)) = own {
+                            run(rg, b1, b2, b3, p, dp);
                         }
                     });
                 }
@@ -752,7 +864,7 @@ impl EffTtTable {
                 };
                 let (i1u, i2u, i3u) = s.tt_indices(row);
                 let (i1, i2, i3) = (i1u as usize, i2u as usize, i3u as usize);
-                let wi = w - cs;
+                let wi = if tiled_bwd { scratch.chunk_slot[w] as usize } else { w - cs };
                 let g1 = &scratch.g1[wi * l1..(wi + 1) * l1];
                 let g2 = &scratch.g2[wi * l2..(wi + 1) * l2];
                 let g3 = &scratch.g3[wi * l3..(wi + 1) * l3];
@@ -897,26 +1009,115 @@ fn compute_chains(
     }
 }
 
-/// Split `n_rows` distinct rows into at most `workers` contiguous shards
-/// whose boundaries are prefix-group starts (`group_starts`, ascending,
-/// first element 0) — cutting anywhere else would recompute a shared
-/// prefix and perturb the `TtStats` accounting.
-fn shard_by_groups(group_starts: &[u32], n_rows: usize, workers: usize) -> Vec<Range<usize>> {
-    if workers <= 1 || group_starts.len() <= 1 || n_rows < 64 {
-        return vec![0..n_rows];
-    }
-    let mut cuts: Vec<usize> = vec![0];
-    for w in 1..workers {
-        let target = n_rows * w / workers;
-        let gi = group_starts.partition_point(|&g| (g as usize) < target);
-        let cut = group_starts.get(gi).map(|&g| g as usize).unwrap_or(n_rows);
-        let last = *cuts.last().unwrap();
-        if cut > last && cut < n_rows {
-            cuts.push(cut);
+/// Tiled backward worker: Eq. 8 chain products for scheduled positions
+/// `range` of the chunk's hottest-first `order` (absolute work indices),
+/// writing per-item gradients at their SCHEDULED slots (the apply phase
+/// reads them back through the inverse map, in original work order).
+/// Chains are pure reads of the cores, so walking them in schedule order
+/// cannot change any value; the dD3/dD2 hops run the k-unrolled tile
+/// microkernel ([`gemm_at_tiled`], bit-identical to [`gemm_at_acc`]).
+///
+/// MIRROR of [`compute_chains`] (indirection + kernels are the ONLY
+/// differences).  The untiled original is kept byte-identical to PR-2
+/// execution so the `train_planned_pr2` bench arm stays an honest
+/// baseline — any change to the chain sequence here must be applied
+/// there too (and vice versa), or the equivalence tests will catch the
+/// divergence.
+#[allow(clippy::too_many_arguments)]
+fn compute_chains_order(
+    t: &EffTtTable,
+    work: &[(u64, u32)],
+    order: &[u32],
+    grads: &[f32],
+    dim: usize,
+    range: Range<usize>,
+    g1: &mut [f32],
+    g2: &mut [f32],
+    g3: &mut [f32],
+    p: &mut Vec<f32>,
+    dp: &mut Vec<f32>,
+) {
+    let s = &t.shapes;
+    let (n1, n2, n3) = (s.n[0], s.n[1], s.n[2]);
+    let r = s.rank;
+    let plen = n1 * n2 * r;
+    let (l1, l2, l3) = (n1 * r, r * n2 * r, r * n3);
+    p.resize(plen, 0.0);
+    dp.resize(plen, 0.0);
+    let mut cached_prefix = u64::MAX;
+    for (wi, oi) in range.enumerate() {
+        let (row, gslot) = work[order[oi] as usize];
+        let ge = &grads[gslot as usize * dim..(gslot as usize + 1) * dim];
+        let (i1u, i2u, i3u) = s.tt_indices(row);
+        let (i1, i2, i3) = (i1u as usize, i2u as usize, i3u as usize);
+        let prefix = s.prefix_of(row);
+        if prefix != cached_prefix {
+            t.prefix_product(prefix, &mut p[..plen]);
+            cached_prefix = prefix;
         }
+        // dD3[:,i3] = Pᵀ [R, n1n2] · gE [n1n2, n3]
+        let d3 = &mut g3[wi * l3..(wi + 1) * l3];
+        d3.fill(0.0);
+        gemm_at_tiled(&p[..plen], ge, d3, r, n1 * n2, n3);
+        // dP = gE [n1n2, n3] · D3-sliceᵀ [n3, R]
+        dp[..plen].fill(0.0);
+        gemm_bt_acc(ge, t.slice3(i3), &mut dp[..plen], n1 * n2, n3, r);
+        // dD2[:,i2] = D1-sliceᵀ [R, n1] · dP(view [n1, n2R])
+        let d2 = &mut g2[wi * l2..(wi + 1) * l2];
+        d2.fill(0.0);
+        gemm_at_tiled(t.slice1(i1), &dp[..plen], d2, r, n1, n2 * r);
+        // dD1[i1] = dP [n1, n2R] · D2-sliceᵀ [n2R, R]
+        let d1 = &mut g1[wi * l1..(wi + 1) * l1];
+        d1.fill(0.0);
+        gemm_bt_acc(&dp[..plen], t.slice2(i2), d1, n1, n2 * r, r);
     }
-    cuts.push(n_rows);
-    cuts.windows(2).map(|w| w[0]..w[1]).collect()
+}
+
+/// Tiled forward hop-2 worker: like [`fill_rows`], but walks scheduled
+/// positions `range` of the plan's hottest-first `order` (slots into
+/// `rows`), writing each row at its SCHEDULED position in `out_block`.
+/// Scheduled groups are contiguous runs with distinct prefixes, so the
+/// prefix product still recomputes exactly on group change; the hop-2
+/// contraction runs the k-unrolled tile microkernel ([`gemm_acc_ku`],
+/// bit-identical to [`gemm_acc`]).
+///
+/// MIRROR of [`fill_rows`] (indirection + kernel are the ONLY
+/// differences); see the mirror note on [`compute_chains_order`] for why
+/// the untiled original is intentionally left byte-identical to PR-2.
+#[allow(clippy::too_many_arguments)]
+fn fill_rows_sched(
+    t: &EffTtTable,
+    rows: &[u64],
+    order: &[u32],
+    range: Range<usize>,
+    out_block: &mut [f32],
+    plen: usize,
+    dim: usize,
+    p: &mut Vec<f32>,
+) {
+    let s = &t.shapes;
+    debug_assert_eq!(out_block.len(), (range.end - range.start) * dim);
+    p.resize(plen, 0.0);
+    let mut last_pref = u64::MAX;
+    for (bi, pos) in range.enumerate() {
+        let idx = rows[order[pos] as usize];
+        let pf = s.prefix_of(idx);
+        if pf != last_pref {
+            t.prefix_product(pf, &mut p[..plen]);
+            last_pref = pf;
+        }
+        let dst = &mut out_block[bi * dim..(bi + 1) * dim];
+        dst.fill(0.0);
+        // [n1·n2, R] · [R, n3] -> row-major [dim] (tile microkernel)
+        gemm_acc_ku(
+            &p[..plen],
+            t.slice3((idx % s.m[2]) as usize),
+            dst,
+            s.n[0] * s.n[1],
+            s.rank,
+            s.n[2],
+        );
+    }
 }
 
 #[cfg(test)]

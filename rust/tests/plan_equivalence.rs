@@ -98,6 +98,76 @@ fn tt_planned_matches_unplanned_bitwise() {
     }
 }
 
+/// Tiled (hottest-first, L2-tiled) plan execution must be bit-identical
+/// to untiled planned execution: same outputs, same cores after the
+/// update, same TtStats — for workers 1 and N, unit and multi bags, and
+/// tile budgets from "everything in one tile" down to "a tile per tiny
+/// group".
+#[test]
+fn tt_tiled_matches_untiled_bitwise() {
+    let mut meta = Rng::new(0x711E);
+    for case in 0..6 {
+        let rows = meta.below(2500) + 600;
+        let shapes = TtShapes::plan(rows, 16, 8);
+        let dim = 16usize;
+        let seed = meta.next_u64();
+        let n_idx = meta.usize_below(512) + 3584;
+        let hot = rows.min(400);
+        let idx: Vec<u64> = (0..n_idx).map(|_| meta.below(hot)).collect();
+        let unit_bags = case % 2 == 0;
+        let (used, offsets): (usize, Vec<usize>) = if unit_bags {
+            (n_idx, (0..=n_idx).collect())
+        } else {
+            let bag = 4usize;
+            let bags = n_idx / bag;
+            (bags * bag, (0..=bags).map(|b| b * bag).collect())
+        };
+        let bags = offsets.len() - 1;
+        let layout = if unit_bags {
+            BagLayout::Unit(bags)
+        } else {
+            BagLayout::Offsets(&offsets[..])
+        };
+        let grad: Vec<f32> = (0..bags * dim).map(|i| (i as f32 * 0.13).sin()).collect();
+        // 1 KiB forces many tiny tiles; 256 KiB is the default budget
+        let cache_kb = [1usize, 256][case % 2];
+
+        for workers in [1usize, 4] {
+            let pool = ExecPool::new(ExecCfg::with_workers(workers));
+            let run = |tiled: bool| {
+                let mut t = EffTtTable::new(shapes, EffTtOptions::default(), &mut Rng::new(seed));
+                t.set_pool(pool);
+                let mut plan = TtPlan::default();
+                plan.build(shapes, &idx[..used], layout);
+                if tiled {
+                    plan.build_layout(cache_kb);
+                    assert!(plan.tiled(), "layout did not build");
+                }
+                let mut out = vec![0.0f32; bags * dim];
+                let mut scr = TtScratch::default();
+                t.embedding_bag_planned(&idx[..used], layout, &plan, &mut out, &mut scr);
+                t.backward_sgd_planned(&idx[..used], layout, &plan, &grad, 0.05, &mut scr);
+                (out, t)
+            };
+            let (out_u, t_u) = run(false);
+            let (out_t, t_t) = run(true);
+            assert_eq!(
+                bits(&out_u),
+                bits(&out_t),
+                "forward diverged (case {case}, workers {workers}, cache_kb {cache_kb})"
+            );
+            assert_eq!(bits(&t_u.core1), bits(&t_t.core1), "core1 (case {case})");
+            assert_eq!(bits(&t_u.core2), bits(&t_t.core2), "core2 (case {case})");
+            assert_eq!(bits(&t_u.core3), bits(&t_t.core3), "core3 (case {case})");
+            assert_eq!(t_u.stats.prefix_gemms, t_t.stats.prefix_gemms);
+            assert_eq!(t_u.stats.hop2_gemms, t_t.stats.hop2_gemms);
+            assert_eq!(t_u.stats.reuse_hits, t_t.stats.reuse_hits);
+            assert_eq!(t_u.stats.backward_chains, t_t.stats.backward_chains);
+            assert_eq!(t_u.stats.grads_aggregated, t_t.stats.grads_aggregated);
+        }
+    }
+}
+
 fn tiny_cfg(workers: usize) -> EngineCfg {
     EngineCfg {
         dense_dim: 4,
@@ -164,6 +234,160 @@ fn engine_training_planned_matches_unplanned_across_plan_ahead() {
             }
             assert_eq!(bits(&m.bot[0].w), bits(&reference.bot[0].w));
         }
+    }
+}
+
+/// Engine training through a tiled planner (default cache budget) must
+/// be bit-identical to the untiled (PR-2) planner — losses and
+/// parameters — for workers 1 and N.
+#[test]
+fn engine_training_tiled_matches_untiled_bitwise() {
+    for workers in [1usize, 3] {
+        let cfg = tiny_cfg(workers);
+        let batches = tiny_batches(&cfg, 6, 384, 71);
+        let run = |cache_kb: usize, fuse: bool| -> (Vec<f32>, NativeDlrm) {
+            let mut m = NativeDlrm::new(cfg.clone(), &mut Rng::new(9));
+            let mut planner = AccessPlanner::for_engine_cfg(&cfg);
+            planner.set_layout_policy(cache_kb, fuse);
+            let mut losses = Vec::new();
+            run_prefetched(batches.iter().cloned(), &mut planner, 1, |b, p| {
+                losses.push(m.train_step_planned(b, p))
+            });
+            (losses, m)
+        };
+        let (base, m_base) = run(0, false);
+        for (cache_kb, fuse) in [(256usize, false), (1, false), (256, true)] {
+            let (losses, m) = run(cache_kb, fuse);
+            assert_eq!(
+                bits(&base),
+                bits(&losses),
+                "losses diverged (workers {workers}, cache_kb {cache_kb}, fuse {fuse})"
+            );
+            match (&m.tables[0], &m_base.tables[0]) {
+                (TableSlot::Tt(x), TableSlot::Tt(y)) => {
+                    assert_eq!(bits(&x.core2), bits(&y.core2), "TT cores diverged");
+                }
+                _ => panic!("slot 0 must be TT"),
+            }
+        }
+    }
+}
+
+/// Fused cross-table sweeps: a config whose TT slots share a vocabulary
+/// must produce per-slot plans bitwise identical to per-table planning,
+/// and identical training.
+#[test]
+fn fused_plans_match_per_table_bitwise() {
+    let vocab = 1200u64;
+    let cfg = EngineCfg {
+        dense_dim: 4,
+        emb_dim: 8,
+        tables: vec![(vocab, true), (vocab, true), (vocab, true), (40, false)],
+        tt_rank: 4,
+        bot_hidden: vec![16],
+        top_hidden: vec![16],
+        lr: 0.05,
+        tt_opts: EffTtOptions::default(),
+        exec: ExecCfg::serial(),
+    };
+    let batches = tiny_batches(&cfg, 5, 256, 123);
+
+    // plan-level equivalence
+    let mut p_fused = AccessPlanner::for_engine_cfg(&cfg);
+    p_fused.set_layout_policy(0, true);
+    let mut p_solo = AccessPlanner::for_engine_cfg(&cfg);
+    p_solo.set_layout_policy(0, false);
+    let mut plan_f = BatchPlan::default();
+    let mut plan_s = BatchPlan::default();
+    for batch in &batches {
+        p_fused.plan_into(batch, &mut plan_f);
+        p_solo.plan_into(batch, &mut plan_s);
+        assert!(plan_f.fused_stats.sweeps >= 1, "fusion never engaged");
+        assert_eq!(plan_f.fused_stats.fused_slots, 3);
+        for t in 0..3 {
+            let (f, s) = (plan_f.tt_plan(t).unwrap(), plan_s.tt_plan(t).unwrap());
+            assert_eq!(f.uniq_rows, s.uniq_rows, "slot {t} distinct rows");
+            assert_eq!(f.index_slot, s.index_slot, "slot {t} scatter map");
+            assert_eq!(f.group_starts, s.group_starts, "slot {t} groups");
+            assert_eq!(f.occ_sorted(), s.occ_sorted(), "slot {t} backward order");
+        }
+        assert!(plan_f.tt_plan(3).is_none());
+    }
+
+    // end-to-end training equivalence (fused + tiled vs neither)
+    let run = |fuse: bool| -> Vec<f32> {
+        let mut m = NativeDlrm::new(cfg.clone(), &mut Rng::new(4));
+        let mut planner = AccessPlanner::for_engine_cfg(&cfg);
+        planner.set_layout_policy(if fuse { 256 } else { 0 }, fuse);
+        let mut losses = Vec::new();
+        run_prefetched(batches.iter().cloned(), &mut planner, 2, |b, p| {
+            losses.push(m.train_step_planned(b, p))
+        });
+        losses
+    };
+    assert_eq!(bits(&run(false)), bits(&run(true)), "fused training diverged");
+}
+
+/// Background bijection refresh mid-epoch must produce the same losses
+/// AND the same detections as the synchronous-compute twin with the same
+/// adoption schedule — while actually recording ingest stall samples.
+#[test]
+fn background_refresh_matches_synchronous_detections() {
+    let vocab = 6000u64;
+    let cfg = EngineCfg {
+        dense_dim: 2,
+        emb_dim: 16,
+        tables: vec![(vocab, true), (40, false)],
+        tt_rank: 8,
+        bot_hidden: vec![16],
+        top_hidden: vec![16],
+        lr: 0.05,
+        tt_opts: EffTtOptions::default(),
+        exec: ExecCfg::serial(),
+    };
+    let mut stream = DriftingZipf::new(vocab, 1.25, 0xBEEF);
+    let mut rng = Rng::new(55);
+    let batch_of = |stream: &DriftingZipf, rng: &mut Rng| -> Batch {
+        let b = 128usize;
+        let sparse: Vec<u64> =
+            (0..b).flat_map(|_| [stream.sample(rng), rng.below(40)]).collect();
+        let labels: Vec<f32> = (0..b).map(|_| if rng.coin(0.5) { 1.0 } else { 0.0 }).collect();
+        Batch { dense: vec![0.0; b * 2], sparse, labels, batch_size: b }
+    };
+    let mut train: Vec<Batch> = (0..10).map(|_| batch_of(&stream, &mut rng)).collect();
+    stream.drift(vocab / 2); // force the refreshes to matter
+    train.extend((0..10).map(|_| batch_of(&stream, &mut rng)));
+    let held_out: Vec<Batch> = (0..4).map(|_| batch_of(&stream, &mut rng)).collect();
+
+    let access = AccessCfg { refresh_every: 4, window: 8, hot_ratio: 0.1, ..AccessCfg::default() };
+    let run = |background: bool| -> (Vec<f32>, Vec<Vec<f32>>, u64, usize) {
+        let mut planner = AccessPlanner::for_engine_cfg(&cfg);
+        planner.enable_scheduled_online(&cfg, &access, background);
+        let mut m = NativeDlrm::new(cfg.clone(), &mut Rng::new(77));
+        let mut losses = Vec::new();
+        run_prefetched(train.iter().cloned(), &mut planner, 1, |b, p| {
+            losses.push(m.train_step_planned(b, p))
+        });
+        // detections: frozen planner, same remap the model trained under
+        let mut plan = BatchPlan::default();
+        let probs: Vec<Vec<f32>> = held_out
+            .iter()
+            .map(|b| {
+                planner.plan_frozen_into(b, &mut plan);
+                m.predict_planned(b, &plan)
+            })
+            .collect();
+        let stalls = planner.reorder_stall_samples().len();
+        (losses, probs, planner.refreshes, stalls)
+    };
+    let (l_sync, d_sync, r_sync, s_sync) = run(false);
+    let (l_bg, d_bg, r_bg, s_bg) = run(true);
+    assert!(r_sync >= 4, "not enough refreshes to exercise the swap: {r_sync}");
+    assert_eq!(r_sync, r_bg, "refresh counts diverged");
+    assert!(s_sync > 0 && s_bg > 0, "stall samples missing: {s_sync}/{s_bg}");
+    assert_eq!(bits(&l_sync), bits(&l_bg), "losses diverged under background refresh");
+    for (i, (a, b)) in d_sync.iter().zip(&d_bg).enumerate() {
+        assert_eq!(bits(a), bits(b), "detections diverged on held-out batch {i}");
     }
 }
 
