@@ -5,11 +5,11 @@
 //! Paper: latency 25→21.5 ms (−14%), TPS 40→46.5 (+16%), GPU memory
 //! 320→210 MB (−34%), deployment 180→95 MB (−47%), total 3.47→3.0 h.
 
-use recad::coordinator::engine::{EngineCfg, NativeDlrm};
+use recad::coordinator::engine::EngineCfg;
 use recad::coordinator::platform::SimPlatform;
 use recad::coordinator::trainer::train_ieee118;
 use recad::powersys::dataset::{generate, DatasetCfg, SparseVocab};
-use recad::serve::{Detector, StreamingServer};
+use recad::serve::{Policy, ServeSession};
 use recad::util::bench::{fmt_bytes, fmt_dur, Table};
 
 const SCALE: f64 = 1.0 / 2000.0;
@@ -43,8 +43,7 @@ fn serve_arm(name: &str, compressed: bool, ds: &recad::powersys::dataset::Ieee11
             + platform.cost.gather_time(2)
             + platform.cost.h2d_time(2 * 16 * 4)
     };
-    let det = Detector::new(engine, 0.5);
-    let server = StreamingServer::start(det, 1, per_request);
+    let server = ServeSession::from_engine(engine).dispatch(per_request).start();
     let report = server.run_stream(&ds.samples[..STREAM_REQUESTS], deploy);
     (
         name.to_string(),
@@ -114,40 +113,42 @@ fn main() {
     println!("\nnote: vocab scale {SCALE} — absolute MB/ms shrink with it; the reproduced");
     println!("quantities are the DLRM→Rec-AD deltas (right columns).");
 
-    // ---- exec-layer arm: sharded serving, 1 replica vs N ----------------
-    // (one detector clone per worker thread, round-robin dispatch, merged
-    // latency histograms — the streaming analogue of Table VI under load)
+    // ---- sharded serving arm: 1 replica vs N, plan-affinity routing -----
+    // (one detector clone per replica worker; the ServeSession builder
+    // threads the planner + policy — the streaming analogue of Table VI
+    // under load)
     let n = recad::bench_support::bench_workers();
     if n > 1 {
         let cfg = EngineCfg::ieee118(SCALE);
         let (_, engine) = train_ieee118(cfg, &ds, 2, 64, 3);
         let deploy = engine.model_bytes();
         let platform = SimPlatform::rtx2060();
-        let det = recad::serve::Detector::new(engine, 0.5);
+        let session = ServeSession::from_engine(engine).dispatch(platform.cost.dispatch);
 
-        let single = StreamingServer::start(det.clone(), 1, platform.cost.dispatch);
-        let r1 = single.run_stream(&ds.samples[..STREAM_REQUESTS], deploy);
-
-        let mut replicas = Vec::with_capacity(n);
-        for _ in 1..n {
-            replicas.push(det.clone());
-        }
-        replicas.push(det);
-        let sharded = StreamingServer::start_sharded(replicas, 1, platform.cost.dispatch);
-        let rn = sharded.run_stream_concurrent(&ds.samples[..STREAM_REQUESTS], deploy, n * 2);
+        let r1 = session
+            .clone()
+            .start()
+            .run_stream(&ds.samples[..STREAM_REQUESTS], deploy);
+        let rn = session
+            .replicas(n)
+            .policy(Policy::PlanAffinity)
+            .start()
+            .run_stream_concurrent(&ds.samples[..STREAM_REQUESTS], deploy, n * 2);
 
         let mut st = Table::new(
             "Sharded streaming serve (RECAD_WORKERS replicas)",
-            &["Replicas", "TPS", "p99 latency", "speedup"],
+            &["Replicas", "Policy", "TPS", "p99 latency", "speedup"],
         );
         st.row(&[
             "1".into(),
+            r1.policy.into(),
             format!("{:.1}/s", r1.tps),
             fmt_dur(r1.p99_latency.as_secs_f64()),
             "1.00x".into(),
         ]);
         st.row(&[
             format!("{n}"),
+            rn.policy.into(),
             format!("{:.1}/s", rn.tps),
             fmt_dur(rn.p99_latency.as_secs_f64()),
             format!("{:.2}x", rn.tps / r1.tps),

@@ -16,6 +16,8 @@ use std::time::Instant;
 use recad::access::{replay_fill, run_prefetched_fill, AccessCfg, AccessPlanner, BatchPlan};
 use recad::bench_support::{bench_workers, write_bench_json, BenchArm};
 use recad::coordinator::engine::{EngineCfg, NativeDlrm};
+use recad::coordinator::trainer::train_ieee118_full;
+use recad::serve::{run_open_loop, OpenLoopCfg, Policy, ServeSession};
 use recad::data::batcher::EpochIter;
 use recad::data::ctr::Batch;
 use recad::data::zipf::{GradualDriftZipf, GrowingVocabZipf, Zipf};
@@ -290,6 +292,61 @@ fn reorder_stall_arm(
     (arm, losses)
 }
 
+/// Serving-router arms (BENCH_serving.json): every route policy at
+/// replicas 1/2/4, measured both closed-loop (TPS: per-request wall over
+/// a concurrent stream) and open-loop (attack window: per-request
+/// latency percentiles under Poisson load).  Replicas are clones, so the
+/// arms measure ROUTING, not model variance.
+fn serving_arms() -> Vec<BenchArm> {
+    let (requests, rounds, rate) = if smoke() { (48, 2, 800.0) } else { (300, 3, 2500.0) };
+    let (n_normal, n_attack, epochs) = if smoke() { (400, 100, 1) } else { (1500, 375, 2) };
+    let ds = generate(&DatasetCfg {
+        n_normal,
+        n_attack,
+        vocab: SparseVocab::ieee118(1.0 / 2000.0),
+        n_profiles: 50,
+        noise_std: 0.005,
+        seed: 13,
+    });
+    let (_, engine, planner) =
+        train_ieee118_full(engine_cfg(1), &AccessCfg::default(), &ds, epochs, 64, 5);
+    let base = ServeSession::from_trained(engine, planner);
+    let stream = &ds.samples[..requests.min(ds.samples.len())];
+    let mut arms = Vec::new();
+    for policy in [Policy::RoundRobin, Policy::PlanAffinity, Policy::LeastQueued] {
+        for replicas in [1usize, 2, 4] {
+            // closed loop: per-request wall time; throughput = TPS
+            let mut iters = Vec::new();
+            for _ in 0..rounds {
+                let server = base.clone().replicas(replicas).policy(policy).start();
+                let r = server.run_stream_concurrent(stream, 0, replicas * 2);
+                iters.push(r.wall.as_secs_f64() / r.served.max(1) as f64);
+            }
+            arms.push(BenchArm::from_iters(
+                format!("serve_closed_{}_r{replicas}", policy.as_str()),
+                replicas,
+                &iters,
+                1,
+            ));
+            // open loop: per-request attack windows under Poisson load;
+            // p99_us of this arm IS the p99 attack window
+            let server = base.clone().replicas(replicas).policy(policy).start();
+            let ol = run_open_loop(
+                server,
+                stream,
+                &OpenLoopCfg { rate_per_sec: rate, seed: 17 },
+            );
+            arms.push(BenchArm::from_iters(
+                format!("serve_open_{}_r{replicas}", policy.as_str()),
+                replicas,
+                &ol.window_samples,
+                1,
+            ));
+        }
+    }
+    arms
+}
+
 fn main() {
     let par = bench_workers();
     let worker_arms: Vec<usize> = if par > 1 { vec![1, par] } else { vec![1] };
@@ -412,4 +469,37 @@ fn main() {
 
     let cl_path = write_bench_json("cache_layout", par, &cl_arms);
     println!("wrote {cl_path} ({} arms, JSON round-trip checked)", cl_arms.len());
+
+    // ---- serving router arms (BENCH_serving.json) -----------------------
+    let sv_arms = serving_arms();
+    let tps = |name: &str| {
+        sv_arms
+            .iter()
+            .find(|a| a.name == name)
+            .map(|a| a.throughput)
+            .unwrap_or(0.0)
+    };
+    let p99 = |name: &str| {
+        sv_arms
+            .iter()
+            .find(|a| a.name == name)
+            .map(|a| a.p99_us)
+            .unwrap_or(0.0)
+    };
+    println!(
+        "serve closed r4: round_robin {:.0} TPS | plan_affinity {:.0} TPS | \
+         least_queued {:.0} TPS",
+        tps("serve_closed_round_robin_r4"),
+        tps("serve_closed_plan_affinity_r4"),
+        tps("serve_closed_least_queued_r4"),
+    );
+    println!(
+        "serve open-loop p99 attack window r4: round_robin {:.0}µs | \
+         plan_affinity {:.0}µs | least_queued {:.0}µs",
+        p99("serve_open_round_robin_r4"),
+        p99("serve_open_plan_affinity_r4"),
+        p99("serve_open_least_queued_r4"),
+    );
+    let sv_path = write_bench_json("serving", par, &sv_arms);
+    println!("wrote {sv_path} ({} arms, JSON round-trip checked)", sv_arms.len());
 }

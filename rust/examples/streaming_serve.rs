@@ -1,6 +1,8 @@
 //! Streaming detection service demo (paper §V-M / Table VI): train a
-//! detector, then serve a batch-1 closed-loop request stream and report
-//! latency / TPS / memory — the edge-deployment scenario.
+//! detector, then drive the redesigned serving stack three ways —
+//! closed-loop batch-1 (the Table VI row), plan-affinity sharded
+//! serving, and an open-loop Poisson stream whose latency percentiles
+//! ARE the attack window under load.
 //!
 //! Run: `cargo run --release --example streaming_serve`
 
@@ -10,7 +12,7 @@ use recad::coordinator::engine::EngineCfg;
 use recad::coordinator::platform::SimPlatform;
 use recad::coordinator::trainer::train_ieee118;
 use recad::powersys::dataset::{generate, DatasetCfg, SparseVocab};
-use recad::serve::{Detector, StreamingServer};
+use recad::serve::{run_open_loop, OpenLoopCfg, Policy, ServeSession};
 use recad::util::bench::{fmt_bytes, fmt_dur};
 
 const SCALE: f64 = 1.0 / 2000.0;
@@ -36,22 +38,57 @@ fn main() {
 
     // Table VI scenario: batch size 1, RTX-2060-class edge box.
     let platform = SimPlatform::rtx2060();
-    let det = Detector::new(engine, 0.5);
-    let server = StreamingServer::start(det, 1, platform.cost.dispatch);
+    let session = ServeSession::from_engine(engine).dispatch(platform.cost.dispatch);
     let stream = &ds.samples[..1000];
-    println!("serving {} requests (batch size 1, closed loop)…", stream.len());
-    let sr = server.run_stream(stream, model_bytes);
 
+    println!("serving {} requests (batch size 1, closed loop)…", stream.len());
+    let sr = session.clone().start().run_stream(stream, model_bytes);
     println!("\n=== Table VI row (streaming real-time detection) ===");
-    println!("  requests served      : {}", sr.served);
+    println!("  requests served      : {} (lifetime {})", sr.served, sr.lifetime_served);
     println!("  throughput           : {:.1} samples/s", sr.tps);
     println!("  mean latency         : {}", fmt_dur(sr.mean_latency.as_secs_f64()));
     println!("  p99 latency          : {}", fmt_dur(sr.p99_latency.as_secs_f64()));
     println!("  model deployment size: {}", fmt_bytes(sr.model_bytes));
 
+    // Plan-driven shard routing: requests hash through the planner's
+    // bijection + TT-prefix map, so hot rows stay on warm replicas.
+    let sharded = session
+        .clone()
+        .replicas(3)
+        .policy(Policy::PlanAffinity)
+        .start()
+        .run_stream_concurrent(stream, model_bytes, 6);
+    println!(
+        "\nsharded [{} x{} replicas]: {:.1} TPS, p99 {}",
+        sharded.policy,
+        sharded.replicas,
+        sharded.tps,
+        fmt_dur(sharded.p99_latency.as_secs_f64())
+    );
+
+    // Open loop: Poisson arrivals measure what closed-loop clients
+    // can't — the queueing share of the attack window.
+    let rate = (sr.tps * 0.8).max(100.0);
+    let ol = run_open_loop(
+        session.replicas(2).policy(Policy::LeastQueued).start(),
+        &ds.samples[..600],
+        &OpenLoopCfg { rate_per_sec: rate, seed: 23 },
+    );
+    println!(
+        "\nopen loop [{}]: offered {:.0}/s, achieved {:.0}/s over {} requests",
+        ol.policy, ol.offered_rate, ol.achieved_rate, ol.served
+    );
+    println!(
+        "attack window p50 {} / p99 {} (queue-delay p99 {}, service p99 {})",
+        fmt_dur(ol.p50_window.as_secs_f64()),
+        fmt_dur(ol.p99_window.as_secs_f64()),
+        fmt_dur(ol.p99_queue_delay.as_secs_f64()),
+        fmt_dur(ol.p99_service.as_secs_f64()),
+    );
+
     // attack-window narrative from the intro: detection latency bounds
     // the attacker's undetected window
-    let window = sr.p99_latency + Duration::from_millis(1);
+    let window = ol.p99_window + Duration::from_millis(1);
     println!(
         "\nattack window (p99 + ingest): {} — vs a 30 s dispatch cycle, \
          the attacker loses {:.0}x of their window",

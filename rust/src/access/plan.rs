@@ -300,6 +300,40 @@ impl TtPlan {
         &self.sched_group_starts
     }
 
+    /// Number of L2 tiles in the attached layout (0 when untiled).
+    #[inline]
+    pub fn num_tiles(&self) -> usize {
+        if self.layout_ready {
+            self.tile_starts.len()
+        } else {
+            0
+        }
+    }
+
+    /// The distinct-row slots (indices into `uniq_rows`) scheduled into
+    /// tile `i`, in schedule order; empty when the plan is untiled or
+    /// `i >= num_tiles()`.  Tiles are the ready-made routing units of
+    /// plan-driven sharding: a tile's row set is exactly what stays
+    /// cache-resident while the tile is walked, so a router that keeps a
+    /// tile's rows on one replica keeps that replica warm.
+    pub fn tile_slots(&self, i: usize) -> &[u32] {
+        if !self.layout_ready || i >= self.tile_starts.len() {
+            return &[];
+        }
+        let lo = self.tile_starts[i] as usize;
+        let hi = self
+            .tile_starts
+            .get(i + 1)
+            .map(|&x| x as usize)
+            .unwrap_or(self.sched.len());
+        &self.sched[lo..hi]
+    }
+
+    /// The rows of tile `i` (its slots resolved through `uniq_rows`).
+    pub fn tile_rows(&self, i: usize) -> impl Iterator<Item = u64> + '_ {
+        self.tile_slots(i).iter().map(move |&s| self.uniq_rows[s as usize])
+    }
+
     #[inline]
     pub fn shapes(&self) -> Option<TtShapes> {
         self.shapes
@@ -590,6 +624,37 @@ mod tests {
         plan.build_layout(0);
         assert!(!plan.tiled());
         assert!(plan.sched().is_empty() && plan.tile_starts().is_empty());
+    }
+
+    #[test]
+    fn tile_row_sets_partition_the_distinct_rows() {
+        let shapes = TtShapes::plan(5000, 16, 8);
+        let mut rng = Rng::new(13);
+        let idx: Vec<u64> = (0..1024).map(|_| rng.below(400)).collect();
+        let mut plan = TtPlan::default();
+        plan.build(shapes, &idx, BagLayout::Unit(idx.len()));
+        assert_eq!(plan.num_tiles(), 0, "untiled plan exposes no tiles");
+        assert!(plan.tile_slots(0).is_empty(), "untiled tile_slots must be empty");
+        plan.build_layout(1);
+        let n_tiles = plan.num_tiles();
+        assert!(n_tiles > 1, "1 KiB budget must cut several tiles");
+        // every distinct-row slot appears in exactly one tile
+        let n = plan.uniq_rows.len();
+        let mut seen = vec![false; n];
+        for t in 0..n_tiles {
+            for &slot in plan.tile_slots(t) {
+                assert!(!seen[slot as usize], "slot {slot} in two tiles");
+                seen[slot as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "a slot is in no tile");
+        assert!(plan.tile_slots(n_tiles).is_empty(), "out-of-range tile must be empty");
+        // tile_rows resolves slots through uniq_rows
+        for t in 0..n_tiles {
+            for (row, &slot) in plan.tile_rows(t).zip(plan.tile_slots(t)) {
+                assert_eq!(row, plan.uniq_rows[slot as usize]);
+            }
+        }
     }
 
     #[test]

@@ -246,6 +246,19 @@ impl AccessPlanner {
         self.bijections[t].as_ref()
     }
 
+    /// Snapshot this planner's routing view: per-slot shapes + CURRENT
+    /// bijections, enough to compute a request's plan-affinity key
+    /// without building a plan.  Hand it to
+    /// [`PlanAffinity`](crate::serve::PlanAffinity) so serving routes
+    /// requests to the replica whose plan scratch already holds their
+    /// prefix groups.
+    pub fn affinity_map(&self) -> AffinityMap {
+        AffinityMap {
+            shapes: self.shapes.clone(),
+            bijections: self.bijections.clone(),
+        }
+    }
+
     /// Plan one batch into reusable scratch: observe raw columns (online
     /// mode), maybe refresh bijections, then remap + dedup + group into
     /// `out`.
@@ -272,6 +285,46 @@ impl AccessPlanner {
     pub fn plan_frozen_into(&self, batch: &Batch, out: &mut BatchPlan) {
         out.set_policy(self.cache_kb, self.fuse_tables);
         out.build_into(batch, &self.shapes, &self.bijections);
+    }
+}
+
+/// Frozen routing view of a planner: per-slot TT shapes and bijections.
+/// [`AffinityMap::key`] reduces one request's sparse indices to the mixed
+/// hash of its post-bijection TT prefixes — the exact quantity
+/// `TtPlan::finish_forward` groups distinct rows by — so equal keys mean
+/// the requests' plans share prefix groups (warm reuse-buffer partial
+/// products and warm `TtPlan::tile_slots` row sets on whichever serving
+/// replica saw them last).
+#[derive(Clone)]
+pub struct AffinityMap {
+    shapes: Vec<Option<TtShapes>>,
+    bijections: Vec<Option<IndexBijection>>,
+}
+
+impl AffinityMap {
+    /// FNV-1a mix of every compressed slot's post-bijection TT prefix.
+    /// Falls back to hashing the raw indices when no slot is compressed,
+    /// so routing still spreads load on plain-table configurations.
+    pub fn key(&self, sparse: &[u64]) -> u64 {
+        use crate::util::hash::{fnv1a_step, FNV_OFFSET};
+        let mut h = FNV_OFFSET;
+        let mut any = false;
+        for (t, sh) in self.shapes.iter().enumerate() {
+            let Some(sh) = sh else { continue };
+            let Some(&raw) = sparse.get(t) else { continue };
+            let row = match self.bijections[t].as_ref() {
+                Some(b) => b.apply(raw),
+                None => raw,
+            };
+            h = fnv1a_step(h, sh.prefix_of(row));
+            any = true;
+        }
+        if !any {
+            for &v in sparse {
+                h = fnv1a_step(h, v);
+            }
+        }
+        h
     }
 }
 
@@ -371,6 +424,24 @@ mod tests {
             !p.reorder_stall_samples().is_empty(),
             "scheduled engine must record stall samples"
         );
+    }
+
+    #[test]
+    fn affinity_key_follows_prefix_groups() {
+        let cfg = cfg(); // tables: (4000, compressed), (40, plain)
+        let p = AccessPlanner::for_engine_cfg(&cfg);
+        let map = p.affinity_map();
+        let shapes = table_shapes(&cfg)[0].unwrap();
+        let m3 = shapes.m[2];
+        assert!(m3 >= 2, "test premise: >1 row per prefix");
+        // same TT prefix on the compressed slot => same key, regardless of
+        // the plain slot (which never enters a TtPlan)
+        let a = map.key(&[5 * m3, 7]);
+        let b = map.key(&[5 * m3 + 1, 23]);
+        assert_eq!(a, b, "same-prefix requests must share an affinity key");
+        // a different prefix changes the key
+        let c = map.key(&[9 * m3, 7]);
+        assert_ne!(a, c);
     }
 
     #[test]

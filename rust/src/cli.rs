@@ -85,8 +85,14 @@ SUBCOMMANDS:
                --background-reorder (rebuilds on a worker, epoch swap)
                --cache-kb N (L2 tile budget for plan layouts; 0 = off)
                --fuse-tables (fused same-vocab planning sweep)
-  serve        Stream batch-1 detection over a held-out sample stream
-               --requests N  --threshold F  --workers N (replica shards)
+  serve        Stream detection over a held-out sample stream
+               --requests N  --threshold F
+               --replicas N (detector shards; was --workers pre-redesign)
+               --policy round_robin|least_queued|plan_affinity
+               --max-batch N  --deadline-us N (micro-batch fill deadline)
+               --clients N (closed-loop concurrency; 0 = 2x replicas)
+               --arrival-rate F (open-loop Poisson req/s; 0 = closed loop)
+               --dispatch-us N (per-call dispatch charge)
   gen-data     Generate and summarize the IEEE-118 FDIA dataset
                --normal N  --attack N  --seed N
   runtime      Smoke-run the PJRT artifacts (requires `make artifacts`)

@@ -10,6 +10,7 @@ use anyhow::{bail, Context, Result};
 use crate::access::AccessCfg;
 use crate::coordinator::engine::EngineCfg;
 use crate::exec::ExecCfg;
+use crate::serve::{Policy, ServeCfg};
 use crate::tt::table::EffTtOptions;
 
 /// Parsed TOML-subset document: `section.key -> value`.
@@ -161,6 +162,10 @@ pub struct RecAdConfig {
     /// run online bijection rebuilds on a background worker
     /// (`[access] background_reorder` / `--background-reorder`).
     pub background_reorder: bool,
+    /// `[serve]` section: replica count, micro-batching, route policy,
+    /// dispatch charge, and the load shape (closed-loop `clients` /
+    /// open-loop `arrival_rate`).
+    pub serve: ServeCfg,
     pub seed: u64,
     pub artifacts_dir: String,
 }
@@ -186,6 +191,7 @@ impl Default for RecAdConfig {
             cache_kb: AccessCfg::default().cache_kb,
             fuse_tables: false,
             background_reorder: false,
+            serve: ServeCfg::default(),
             seed: 42,
             artifacts_dir: "artifacts".into(),
         }
@@ -193,9 +199,9 @@ impl Default for RecAdConfig {
 }
 
 impl RecAdConfig {
-    pub fn from_toml(t: &Toml) -> RecAdConfig {
+    pub fn from_toml(t: &Toml) -> Result<RecAdConfig> {
         let d = RecAdConfig::default();
-        RecAdConfig {
+        Ok(RecAdConfig {
             dataset: t.str_or("run.dataset", &d.dataset).to_string(),
             scale: t.num_or("run.scale", d.scale),
             epochs: t.usize_or("run.epochs", d.epochs),
@@ -214,14 +220,26 @@ impl RecAdConfig {
             cache_kb: t.usize_or("access.cache_kb", d.cache_kb),
             fuse_tables: t.bool_or("access.fuse_tables", d.fuse_tables),
             background_reorder: t.bool_or("access.background_reorder", d.background_reorder),
+            serve: ServeCfg {
+                replicas: t.usize_or("serve.replicas", d.serve.replicas).max(1),
+                max_batch: t.usize_or("serve.max_batch", d.serve.max_batch).max(1),
+                deadline_us: t.usize_or("serve.deadline_us", d.serve.deadline_us as usize)
+                    as u64,
+                policy: Policy::parse(t.str_or("serve.policy", d.serve.policy.as_str()))
+                    .context("[serve] policy")?,
+                dispatch_us: t.usize_or("serve.dispatch_us", d.serve.dispatch_us as usize)
+                    as u64,
+                clients: t.usize_or("serve.clients", d.serve.clients),
+                arrival_rate: t.num_or("serve.arrival_rate", d.serve.arrival_rate),
+            },
             seed: t.num_or("run.seed", d.seed as f64) as u64,
             artifacts_dir: t.str_or("run.artifacts_dir", &d.artifacts_dir).to_string(),
-        }
+        })
     }
 
     pub fn load(path: &str) -> Result<RecAdConfig> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-        Ok(Self::from_toml(&Toml::parse(&text)?))
+        Self::from_toml(&Toml::parse(&text)?)
     }
 
     pub fn engine_cfg(&self) -> EngineCfg {
@@ -283,9 +301,18 @@ refresh_every = 16
 cache_kb = 512
 fuse_tables = true
 background_reorder = true
+
+[serve]
+replicas = 4
+max_batch = 8
+deadline_us = 2000
+policy = "plan_affinity"
+dispatch_us = 50
+clients = 6
+arrival_rate = 1200.0
 "#;
         let t = Toml::parse(doc).unwrap();
-        let c = RecAdConfig::from_toml(&t);
+        let c = RecAdConfig::from_toml(&t).unwrap();
         assert_eq!(c.dataset, "ieee118");
         assert_eq!(c.epochs, 5);
         assert_eq!(c.batch_size, 256);
@@ -306,16 +333,33 @@ background_reorder = true
         assert_eq!(a.cache_kb, 512);
         assert!(a.fuse_tables);
         assert!(a.background_reorder);
+        assert_eq!(c.serve.replicas, 4);
+        assert_eq!(c.serve.max_batch, 8);
+        assert_eq!(c.serve.deadline_us, 2000);
+        assert_eq!(c.serve.policy, crate::serve::Policy::PlanAffinity);
+        assert_eq!(c.serve.dispatch_us, 50);
+        assert_eq!(c.serve.clients, 6);
+        assert!((c.serve.arrival_rate - 1200.0).abs() < 1e-9);
     }
 
     #[test]
     fn access_defaults_without_section() {
         let t = Toml::parse("[run]\nepochs = 1\n").unwrap();
-        let c = RecAdConfig::from_toml(&t);
+        let c = RecAdConfig::from_toml(&t).unwrap();
         let d = crate::access::AccessCfg::default();
         assert_eq!(c.plan_ahead, d.plan_ahead);
         assert!(!c.online_reorder);
         assert_eq!(c.reorder_refresh, d.refresh_every);
+        // [serve] defaults: 1 replica, round robin, closed loop
+        assert_eq!(c.serve.replicas, 1);
+        assert_eq!(c.serve.policy, crate::serve::Policy::RoundRobin);
+        assert_eq!(c.serve.arrival_rate, 0.0);
+    }
+
+    #[test]
+    fn rejects_unknown_route_policy() {
+        let t = Toml::parse("[serve]\npolicy = \"coin_flip\"\n").unwrap();
+        assert!(RecAdConfig::from_toml(&t).is_err());
     }
 
     #[test]

@@ -1,8 +1,6 @@
 //! `recad` — the Rec-AD leader binary: train / serve / gen-data /
 //! runtime-smoke / report subcommands over the library.
 
-use std::time::Duration;
-
 use anyhow::Result;
 
 use recad::cli::{Cli, USAGE};
@@ -14,7 +12,7 @@ use recad::coordinator::trainer;
 use recad::data::schema;
 use recad::powersys::dataset::{generate, DatasetCfg, SparseVocab};
 use recad::runtime::{Artifacts, DlrmTrainStep, TtLookupExe};
-use recad::serve::{Detector, StreamingServer};
+use recad::serve::{run_open_loop, OpenLoopCfg, Policy, ServeSession};
 use recad::util::bench::{fmt_bytes, fmt_dur, Table};
 use recad::util::prng::Rng;
 
@@ -169,6 +167,20 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let cfg = load_config(cli)?;
     let requests = cli.usize_or("requests", 500)?;
     let threshold = cli.f64_or("threshold", 0.5)? as f32;
+    // [serve] section + CLI overrides.  Replica count is --replicas now;
+    // --workers only sets TRAINING workers (the old overload routed it
+    // into shard count).
+    let mut scfg = cfg.serve;
+    scfg.replicas = cli.usize_or("replicas", scfg.replicas)?.max(1);
+    scfg.max_batch = cli.usize_or("max-batch", scfg.max_batch)?.max(1);
+    if let Some(p) = cli.opt("policy") {
+        scfg.policy = Policy::parse(p)?;
+    }
+    scfg.deadline_us = cli.usize_or("deadline-us", scfg.deadline_us as usize)? as u64;
+    scfg.clients = cli.usize_or("clients", scfg.clients)?;
+    scfg.arrival_rate = cli.f64_or("arrival-rate", scfg.arrival_rate)?;
+    scfg.dispatch_us = cli.usize_or("dispatch-us", scfg.dispatch_us as usize)? as u64;
+
     let ds = generate(&DatasetCfg {
         n_normal: 2000,
         n_attack: 500,
@@ -178,44 +190,55 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         seed: cfg.seed,
     });
     println!("training detector before serving…");
-    // Serve honors the [access] policy end to end: the detector must
-    // read back through the SAME planner (bijections + layout knobs) the
-    // model trained under.
+    // Serve honors the [access] policy end to end: the session threads
+    // the SAME planner (bijections + layout knobs) the model trained
+    // under into every replica.
     let access = cfg.access_cfg();
     let (report, engine, planner) =
         trainer::train_ieee118_full(cfg.engine_cfg(), &access, &ds, 2, 64, cfg.seed);
     print_eval(&report.eval);
     let model_bytes = engine.model_bytes();
-    let mut engine = engine;
-    // Serving shards at the request level (one replica per worker); pin
-    // each replica's intra-step pool to 1 so N replicas don't fan out to
-    // N×N threads.
-    engine.set_workers(1);
-    let det = Detector::with_planner(engine, threshold, planner);
+    let session = ServeSession::from_trained(engine, planner)
+        .threshold(threshold)
+        .with_cfg(&scfg);
     let stream = &ds.samples[..requests.min(ds.samples.len())];
-    let dispatch = Duration::from_micros(100);
-    let sr = if cfg.workers > 1 {
-        // sharded mode: one detector replica per worker, round-robin
-        let mut replicas = Vec::with_capacity(cfg.workers);
-        for _ in 1..cfg.workers {
-            replicas.push(det.clone());
-        }
-        replicas.push(det);
-        let server = StreamingServer::start_sharded(replicas, 1, dispatch);
-        server.run_stream_concurrent(stream, model_bytes, cfg.workers * 2)
+    if scfg.arrival_rate > 0.0 {
+        // open loop: Poisson arrivals, attack-window accounting
+        let server = session.start();
+        let ol = run_open_loop(
+            server,
+            stream,
+            &OpenLoopCfg { rate_per_sec: scfg.arrival_rate, seed: cfg.seed ^ 0x0417 },
+        );
+        println!(
+            "open loop [{}]: {}/{} served on {} replica(s) at {:.0}/s offered \
+             ({:.0}/s achieved)",
+            ol.policy, ol.served, ol.offered, ol.replicas, ol.offered_rate, ol.achieved_rate
+        );
+        println!(
+            "attack window p50 {} / p99 {} / max {}  (queue p99 {} + service p99 {})",
+            fmt_dur(ol.p50_window.as_secs_f64()),
+            fmt_dur(ol.p99_window.as_secs_f64()),
+            fmt_dur(ol.max_window.as_secs_f64()),
+            fmt_dur(ol.p99_queue_delay.as_secs_f64()),
+            fmt_dur(ol.p99_service.as_secs_f64()),
+        );
     } else {
-        let server = StreamingServer::start(det, 1, dispatch);
-        server.run_stream(stream, model_bytes)
-    };
-    println!(
-        "served {} requests on {} replica(s): {:.1} TPS, mean latency {}, p99 {}, model {}",
-        sr.served,
-        sr.replicas,
-        sr.tps,
-        fmt_dur(sr.mean_latency.as_secs_f64()),
-        fmt_dur(sr.p99_latency.as_secs_f64()),
-        fmt_bytes(sr.model_bytes)
-    );
+        let server = session.start();
+        let sr = server.run_stream_concurrent(stream, model_bytes, scfg.effective_clients());
+        println!(
+            "served {} stream requests ({} lifetime) on {} replica(s) via {}: \
+             {:.1} TPS, mean latency {}, p99 {}, model {}",
+            sr.served,
+            sr.lifetime_served,
+            sr.replicas,
+            sr.policy,
+            sr.tps,
+            fmt_dur(sr.mean_latency.as_secs_f64()),
+            fmt_dur(sr.p99_latency.as_secs_f64()),
+            fmt_bytes(sr.model_bytes)
+        );
+    }
     Ok(())
 }
 

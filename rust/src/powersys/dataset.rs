@@ -87,18 +87,9 @@ pub struct Ieee118Dataset {
     pub bdd_tau: f64,
 }
 
-/// FNV-1a for stable feature hashing.
-#[inline]
-pub fn fnv1a(data: &[u64]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &d in data {
-        for b in d.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x1000_0000_01b3);
-        }
-    }
-    h
-}
+/// FNV-1a for stable feature hashing (shared with the plan-affinity
+/// router; the implementation lives in `util::hash`).
+pub use crate::util::hash::fnv1a;
 
 pub fn generate(cfg: &DatasetCfg) -> Ieee118Dataset {
     let grid = Grid::ieee118(cfg.seed);

@@ -2,7 +2,7 @@
 //! verdicts with attack-window accounting (the paper's motivation: every
 //! ms of detection latency is attacker opportunity).
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::access::{AccessPlanner, BatchPlan};
 use crate::coordinator::engine::NativeDlrm;
@@ -90,12 +90,18 @@ impl Detector {
         self.predict_scratch()
     }
 
-    pub fn verdict(&mut self, sample: &Sample, latency: Duration) -> Verdict {
+    /// Score one sample and measure the handling latency here — the
+    /// pre-redesign signature took the latency as a caller-supplied
+    /// argument, which let drivers stamp verdicts with unrelated clocks.
+    /// Server-side queueing is accounted separately by the serving path
+    /// ([`Reply`](crate::serve::Reply)'s queue-delay/service split).
+    pub fn verdict(&mut self, sample: &Sample) -> Verdict {
+        let t0 = Instant::now();
         let p = self.score(sample);
         Verdict {
             attack_probability: p,
             is_attack: p > self.threshold,
-            latency,
+            latency: t0.elapsed(),
         }
     }
 }
@@ -130,5 +136,24 @@ mod tests {
         for (a, b) in singles.iter().zip(&batched) {
             assert!((a - b).abs() < 1e-5, "batch/single mismatch {a} vs {b}");
         }
+    }
+
+    #[test]
+    fn verdict_measures_its_own_latency() {
+        let ds = generate(&DatasetCfg {
+            n_normal: 20,
+            n_attack: 5,
+            vocab: SparseVocab::ieee118(1.0 / 2000.0),
+            n_profiles: 5,
+            noise_std: 0.005,
+            seed: 3,
+        });
+        let cfg = EngineCfg::ieee118(1.0 / 2000.0);
+        let engine = NativeDlrm::new(cfg, &mut Rng::new(4));
+        let mut det = Detector::new(engine, 0.5);
+        let v = det.verdict(&ds.samples[0]);
+        assert!((0.0..=1.0).contains(&v.attack_probability));
+        assert_eq!(v.is_attack, v.attack_probability > 0.5);
+        assert!(v.latency > Duration::ZERO, "latency must be measured, not supplied");
     }
 }

@@ -1,0 +1,167 @@
+//! Open-loop load generation: Poisson arrivals at a target rate,
+//! submitted WITHOUT waiting for replies — unlike the closed-loop
+//! drivers (`run_stream*`), which can never observe queueing because
+//! each client has at most one request in flight.
+//!
+//! This is the measurement the paper's real-time claim actually needs:
+//! under industrial streaming load the attacker's undetected window is
+//! the end-to-end detection latency *including queueing*, so the report
+//! splits every request's window into queue delay (enqueue → pickup)
+//! and service time (pickup → verdict) and summarizes the window
+//! percentiles under load.
+
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::powersys::dataset::Sample;
+use crate::serve::server::{Reply, StreamingServer};
+use crate::util::prng::Rng;
+use crate::util::stats::percentile;
+
+/// Open-loop generator configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct OpenLoopCfg {
+    /// Target Poisson arrival rate (requests per second).
+    pub rate_per_sec: f64,
+    /// Seed of the (deterministic) arrival process.
+    pub seed: u64,
+}
+
+/// What an open-loop run measured.
+#[derive(Debug)]
+pub struct OpenLoopReport {
+    /// Requests the generator offered (== `samples.len()`).
+    pub offered: usize,
+    /// Requests that came back with a verdict (every offered request —
+    /// the generator always drains its reply channels).
+    pub served: u64,
+    pub wall: Duration,
+    /// Configured arrival rate (requests/s).
+    pub offered_rate: f64,
+    /// `served / wall` — sags below `offered_rate` once queues grow.
+    pub achieved_rate: f64,
+    /// Attack-window percentiles: end-to-end detection latency under
+    /// load (queue delay + service time).
+    pub mean_window: Duration,
+    pub p50_window: Duration,
+    pub p99_window: Duration,
+    pub max_window: Duration,
+    /// Queueing side of the window (enqueue → batch pickup).
+    pub mean_queue_delay: Duration,
+    pub p99_queue_delay: Duration,
+    /// Compute side of the window (pickup → verdict).
+    pub mean_service: Duration,
+    pub p99_service: Duration,
+    pub replicas: usize,
+    pub policy: &'static str,
+    /// Sorted per-request windows in seconds (for bench arms /
+    /// custom percentiles).
+    pub window_samples: Vec<f64>,
+}
+
+/// Drive `samples` through the server as an open-loop Poisson stream at
+/// `cfg.rate_per_sec`, wait for every verdict, then shut the server
+/// down.  Requests are submitted in order; replies are awaited after the
+/// last arrival, so slow replicas delay accounting, never arrivals.
+pub fn run_open_loop(
+    server: StreamingServer,
+    samples: &[Sample],
+    cfg: &OpenLoopCfg,
+) -> OpenLoopReport {
+    assert!(cfg.rate_per_sec > 0.0, "open loop needs a positive arrival rate");
+    assert!(!samples.is_empty(), "open loop needs at least one request");
+    let replicas = server.replicas();
+    let policy = server.policy_name();
+    let mut rng = Rng::new(cfg.seed);
+    let mut receivers = Vec::with_capacity(samples.len());
+    let mut due = Duration::ZERO;
+    let t0 = Instant::now();
+    for s in samples {
+        // Poisson process: exponential inter-arrival gaps at the target
+        // rate.  1 - f64() keeps the argument in (0, 1] so ln is finite.
+        let gap = -(1.0 - rng.f64()).ln() / cfg.rate_per_sec;
+        due += Duration::from_secs_f64(gap);
+        if let Some(wait) = due.checked_sub(t0.elapsed()) {
+            if !wait.is_zero() {
+                thread::sleep(wait);
+            }
+        }
+        receivers.push(server.submit(s));
+    }
+    let replies: Vec<Reply> = receivers
+        .into_iter()
+        .map(|rx| rx.recv().expect("replica answered"))
+        .collect();
+    let wall = t0.elapsed();
+    let (lifetime, _) = server.shutdown();
+    assert!(lifetime >= replies.len() as u64, "replicas lost requests");
+
+    let mut windows: Vec<f64> = replies.iter().map(|r| r.latency.as_secs_f64()).collect();
+    let mut queue: Vec<f64> =
+        replies.iter().map(|r| r.queue_delay.as_secs_f64()).collect();
+    let mut service: Vec<f64> =
+        replies.iter().map(|r| r.service_time().as_secs_f64()).collect();
+    for v in [&mut windows, &mut queue, &mut service] {
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let d = |s: f64| Duration::from_secs_f64(s.max(0.0));
+
+    OpenLoopReport {
+        offered: samples.len(),
+        served: replies.len() as u64,
+        wall,
+        offered_rate: cfg.rate_per_sec,
+        achieved_rate: replies.len() as f64 / wall.as_secs_f64().max(1e-12),
+        mean_window: d(mean(&windows)),
+        p50_window: d(percentile(&windows, 0.50)),
+        p99_window: d(percentile(&windows, 0.99)),
+        max_window: d(*windows.last().unwrap()),
+        mean_queue_delay: d(mean(&queue)),
+        p99_queue_delay: d(percentile(&queue, 0.99)),
+        mean_service: d(mean(&service)),
+        p99_service: d(percentile(&service, 0.99)),
+        replicas,
+        policy,
+        window_samples: windows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{EngineCfg, NativeDlrm};
+    use crate::powersys::dataset::{generate, DatasetCfg, SparseVocab};
+    use crate::serve::session::ServeSession;
+    use crate::util::prng::Rng as TestRng;
+
+    #[test]
+    fn open_loop_drains_every_request() {
+        let ds = generate(&DatasetCfg {
+            n_normal: 40,
+            n_attack: 10,
+            vocab: SparseVocab::ieee118(1.0 / 2000.0),
+            n_profiles: 10,
+            noise_std: 0.005,
+            seed: 8,
+        });
+        let engine = NativeDlrm::new(EngineCfg::ieee118(1.0 / 2000.0), &mut TestRng::new(2));
+        let server = ServeSession::from_engine(engine).replicas(2).start();
+        let cfg = OpenLoopCfg { rate_per_sec: 4000.0, seed: 3 };
+        let report = run_open_loop(server, &ds.samples[..30], &cfg);
+        assert_eq!(report.offered, 30);
+        assert_eq!(report.served, 30);
+        assert_eq!(report.window_samples.len(), 30);
+        assert!(report.achieved_rate > 0.0);
+        assert!(report.p50_window <= report.p99_window);
+        assert!(report.p99_window <= report.max_window);
+        // the split re-adds to the window (pointwise svc = window − queue)
+        let sum = report.mean_queue_delay + report.mean_service;
+        let diff = if sum > report.mean_window {
+            sum - report.mean_window
+        } else {
+            report.mean_window - sum
+        };
+        assert!(diff < Duration::from_millis(1), "queue/service split drifted: {diff:?}");
+    }
+}

@@ -1,9 +1,35 @@
-//! Streaming FDIA detection service (paper §V-M, Table VI): batch-1
-//! real-time inference with latency/TPS accounting, plus an optional
-//! micro-batching router.
+//! Streaming FDIA detection service (paper §V-M, Table VI), redesigned
+//! as a composable serving stack:
+//!
+//! * [`Detector`] (`detector`) — the detection head: trained engine +
+//!   frozen planner + per-replica plan scratch.
+//! * [`RoutePolicy`] (`router`) — pluggable request routing:
+//!   [`RoundRobin`], [`LeastQueued`] (per-replica depth gauges), and
+//!   [`PlanAffinity`] (plan-driven shard routing: requests hash through
+//!   the planner's bijection + TT-prefix map so hot rows keep landing on
+//!   the replica whose plan scratch and tiles are warm).
+//! * [`StreamingServer`] (`server`) — N replica workers, micro-batching
+//!   with an optional fill deadline, queue-delay/service-time split per
+//!   [`Reply`], stream-only vs lifetime accounting in [`ServeReport`].
+//! * [`ServeSession`] (`session`) — the fluent builder that wires all of
+//!   the above (`ServeSession::from_trained(engine, planner)
+//!   .replicas(n).policy(p).max_batch(b).deadline(d).start()`).
+//! * [`run_open_loop`] (`load`) — Poisson open-loop load generation:
+//!   attack-window percentiles under load, split into queueing and
+//!   service.
+//!
+//! Invariant: replicas are clones of one trained detector, so route
+//! policy, replica count, and micro-batching can never change a verdict
+//! — pinned bitwise by `tests/serve_equivalence.rs`.
 
 pub mod detector;
+pub mod load;
+pub mod router;
 pub mod server;
+pub mod session;
 
 pub use detector::{Detector, Verdict};
-pub use server::{ServeReport, StreamingServer};
+pub use load::{run_open_loop, OpenLoopCfg, OpenLoopReport};
+pub use router::{LeastQueued, PlanAffinity, Policy, QueueDepths, RoundRobin, RoutePolicy};
+pub use server::{Reply, ServeReport, StreamingServer};
+pub use session::{ServeCfg, ServeSession};

@@ -1,0 +1,271 @@
+//! Pluggable request routing for the serving stack: a [`RoutePolicy`]
+//! decides which detector replica serves each request.
+//!
+//! Three built-in policies:
+//!
+//! * [`RoundRobin`] — the pre-redesign behavior: an atomic cursor cycling
+//!   over replicas, blind to queue state and index locality.
+//! * [`LeastQueued`] — per-replica queue-depth gauges ([`QueueDepths`]:
+//!   incremented at dispatch, decremented when the replica finishes a
+//!   request); each request goes to the shallowest queue, with a rotating
+//!   scan start so ties don't pile onto replica 0.
+//! * [`PlanAffinity`] — plan-driven shard routing (the ROADMAP item): a
+//!   request's compressed sparse indices are pushed through the planner's
+//!   bijections and TT prefix map ([`AffinityMap`]) — the exact quantity
+//!   `TtPlan` groups rows by — and the mixed key picks the replica.
+//!   Requests sharing hot prefixes keep landing on the same replica, so
+//!   that replica's plan scratch, reuse-buffer partial products and
+//!   tiled row sets (`TtPlan::tile_slots`) stay warm.
+//!
+//! Replicas are clones of one trained detector, so the policy can NEVER
+//! change a verdict — only queueing and cache behavior.  Pinned by
+//! `tests/serve_equivalence.rs`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::access::AffinityMap;
+use crate::powersys::dataset::Sample;
+
+/// Per-replica in-flight request gauges, shared between the server's
+/// dispatch side (enter) and the replica workers (leave).
+pub struct QueueDepths {
+    depths: Vec<AtomicUsize>,
+}
+
+impl QueueDepths {
+    pub fn new(replicas: usize) -> QueueDepths {
+        QueueDepths {
+            depths: (0..replicas).map(|_| AtomicUsize::new(0)).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.depths.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.depths.is_empty()
+    }
+
+    /// Current in-flight request count of replica `i`.
+    #[inline]
+    pub fn depth(&self, i: usize) -> usize {
+        self.depths[i].load(Ordering::Relaxed)
+    }
+
+    /// A request was dispatched to replica `i`.
+    #[inline]
+    pub fn enter(&self, i: usize) {
+        self.depths[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Replica `i` finished a request.
+    #[inline]
+    pub fn leave(&self, i: usize) {
+        self.depths[i].fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// A routing decision per request.  Implementations must be `Sync`:
+/// `route` is called concurrently from every closed-loop client thread.
+pub trait RoutePolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Pick the replica (`< depths.len()`) that serves `sample`.
+    fn route(&self, sample: &Sample, depths: &QueueDepths) -> usize;
+}
+
+/// Blind cyclic dispatch (the legacy `StreamingServer` behavior).
+#[derive(Default)]
+pub struct RoundRobin {
+    next: AtomicUsize,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin::default()
+    }
+}
+
+impl RoutePolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round_robin"
+    }
+
+    fn route(&self, _sample: &Sample, depths: &QueueDepths) -> usize {
+        self.next.fetch_add(1, Ordering::Relaxed) % depths.len()
+    }
+}
+
+/// Route to the replica with the fewest in-flight requests.  The scan
+/// start rotates so equal-depth replicas share the load instead of the
+/// lowest index absorbing every tie.
+#[derive(Default)]
+pub struct LeastQueued {
+    cursor: AtomicUsize,
+}
+
+impl LeastQueued {
+    pub fn new() -> LeastQueued {
+        LeastQueued::default()
+    }
+}
+
+impl RoutePolicy for LeastQueued {
+    fn name(&self) -> &'static str {
+        "least_queued"
+    }
+
+    fn route(&self, _sample: &Sample, depths: &QueueDepths) -> usize {
+        let n = depths.len();
+        let start = self.cursor.fetch_add(1, Ordering::Relaxed) % n;
+        let mut best = start;
+        let mut best_depth = depths.depth(start);
+        for k in 1..n {
+            let i = (start + k) % n;
+            let d = depths.depth(i);
+            if d < best_depth {
+                best = i;
+                best_depth = d;
+            }
+        }
+        best
+    }
+}
+
+/// Plan-driven shard routing: hash the request's post-bijection TT
+/// prefixes ([`AffinityMap::key`]) onto a replica.  Stateless and
+/// deterministic — the same hot rows always land on the same replica,
+/// whose plan scratch and embedding tiles are already warm.
+pub struct PlanAffinity {
+    map: AffinityMap,
+}
+
+impl PlanAffinity {
+    pub fn new(map: AffinityMap) -> PlanAffinity {
+        PlanAffinity { map }
+    }
+}
+
+impl RoutePolicy for PlanAffinity {
+    fn name(&self) -> &'static str {
+        "plan_affinity"
+    }
+
+    fn route(&self, sample: &Sample, depths: &QueueDepths) -> usize {
+        (self.map.key(&sample.sparse) % depths.len() as u64) as usize
+    }
+}
+
+/// Route-policy selector for config / CLI (`[serve] policy = "…"`,
+/// `--policy …`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    RoundRobin,
+    LeastQueued,
+    PlanAffinity,
+}
+
+impl Policy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "round_robin",
+            Policy::LeastQueued => "least_queued",
+            Policy::PlanAffinity => "plan_affinity",
+        }
+    }
+
+    /// Parse a policy name; accepts `-` or `_` separators.
+    pub fn parse(s: &str) -> anyhow::Result<Policy> {
+        match s.trim().to_ascii_lowercase().replace('-', "_").as_str() {
+            "round_robin" | "rr" => Ok(Policy::RoundRobin),
+            "least_queued" | "lq" => Ok(Policy::LeastQueued),
+            "plan_affinity" | "pa" => Ok(Policy::PlanAffinity),
+            other => anyhow::bail!(
+                "unknown route policy '{other}' \
+                 (expected round_robin | least_queued | plan_affinity)"
+            ),
+        }
+    }
+}
+
+impl std::str::FromStr for Policy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Policy> {
+        Policy::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::powersys::dataset::{N_DENSE, N_SPARSE};
+
+    fn sample(seed: u64) -> Sample {
+        let mut rng = crate::util::prng::Rng::new(seed);
+        let mut sparse = [0u64; N_SPARSE];
+        for v in sparse.iter_mut() {
+            *v = rng.below(100);
+        }
+        Sample { dense: [0.0; N_DENSE], sparse, label: 0.0, attack_kind: None }
+    }
+
+    #[test]
+    fn policy_parse_round_trips_and_rejects_garbage() {
+        for p in [Policy::RoundRobin, Policy::LeastQueued, Policy::PlanAffinity] {
+            assert_eq!(Policy::parse(p.as_str()).unwrap(), p);
+        }
+        assert_eq!(Policy::parse("plan-affinity").unwrap(), Policy::PlanAffinity);
+        assert_eq!(Policy::parse("RR").unwrap(), Policy::RoundRobin);
+        assert!(Policy::parse("random").is_err());
+    }
+
+    #[test]
+    fn round_robin_cycles_replicas() {
+        let d = QueueDepths::new(3);
+        let rr = RoundRobin::new();
+        let s = sample(1);
+        let picks: Vec<usize> = (0..6).map(|_| rr.route(&s, &d)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_queued_prefers_shallow_queues() {
+        let d = QueueDepths::new(3);
+        d.enter(0);
+        d.enter(0);
+        d.enter(1);
+        let lq = LeastQueued::new();
+        let s = sample(2);
+        // replica 2 is empty: every route must pick it until it fills
+        for _ in 0..4 {
+            assert_eq!(lq.route(&s, &d), 2);
+        }
+        d.enter(2);
+        d.enter(2);
+        d.enter(2);
+        // now replica 1 (depth 1) is the shallowest
+        assert_eq!(lq.route(&s, &d), 1);
+        d.leave(0);
+        d.leave(0);
+        // replica 0 drained to zero
+        assert_eq!(lq.route(&s, &d), 0);
+    }
+
+    #[test]
+    fn queue_depths_track_enter_leave() {
+        let d = QueueDepths::new(2);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.depth(0), 0);
+        d.enter(0);
+        d.enter(0);
+        d.enter(1);
+        assert_eq!(d.depth(0), 2);
+        assert_eq!(d.depth(1), 1);
+        d.leave(0);
+        assert_eq!(d.depth(0), 1);
+    }
+}

@@ -1,44 +1,67 @@
-//! Streaming inference server: worker threads consume request channels
-//! and answer with verdicts; the driver measures per-request latency and
-//! sustained TPS (Table VI's configuration: batch size 1, industrial
-//! streaming).  A micro-batching mode (`max_batch > 1`) drains whatever is
-//! queued up to the cap — the standard serving-router trade-off.
+//! Streaming inference server: replica worker threads consume request
+//! channels and answer with verdicts.  Which replica serves a request is
+//! decided by a pluggable [`RoutePolicy`] (`serve::router`) — round-robin,
+//! least-queued, or plan-affinity shard routing — and replicas are clones
+//! of one trained detector, so verdicts are bitwise independent of the
+//! policy (pinned by `tests/serve_equivalence.rs`).
 //!
-//! **Sharded mode** (exec refactor): [`StreamingServer::start_sharded`]
-//! runs N detector replicas, one per worker thread, with round-robin
-//! dispatch and merged latency accounting — the serving analogue of the
-//! exec layer's intra-step parallelism, letting a Table VI-style stream
-//! saturate multiple cores.  Replicas are identical trained models, so
-//! verdicts are independent of which shard serves a request.
+//! **Micro-batching** (`max_batch > 1`): a replica drains whatever is
+//! queued up to the cap; with a non-zero `deadline` it additionally waits
+//! up to that long for the batch to fill — the standard serving-router
+//! latency/throughput trade-off.  Batching never changes scores.
 //!
-//! **Access planning** (access refactor): each replica's [`Detector`]
-//! owns its batch + `BatchPlan` scratch, so request handling reuses
-//! per-replica plan buffers (column extraction, dedup, unit-bag offsets)
-//! instead of re-deriving index work per request — allocation-free in
-//! steady state, with no cross-replica synchronization.
+//! **Accounting**: every [`Reply`] carries the queue-delay / service-time
+//! split (enqueue → pickup vs pickup → verdict), which is what the
+//! open-loop generator (`serve::load`) needs to attribute the attack
+//! window.  [`ServeReport`] counts the driven stream only; requests
+//! served before `run_stream*` (e.g. warm-up `infer` calls) appear under
+//! `lifetime_served` instead of inflating the stream TPS.
+//!
+//! Constructing a server by hand is the low-level path — prefer the
+//! [`ServeSession`](crate::serve::ServeSession) builder, which threads
+//! the trained planner, policy, replica count and deadlines end to end.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::platform::SimPlatform;
 use crate::powersys::dataset::Sample;
 use crate::serve::detector::Detector;
+use crate::serve::router::{QueueDepths, RoundRobin, RoutePolicy};
 use crate::util::stats::LatencyHist;
 
 /// One in-flight request.
 struct Request {
     sample: Sample,
     enqueued: Instant,
-    reply: mpsc::Sender<(f32, Duration)>,
+    reply: mpsc::Sender<Reply>,
+}
+
+/// One answered request.
+#[derive(Clone, Copy, Debug)]
+pub struct Reply {
+    pub prob: f32,
+    /// End-to-end latency: enqueue → verdict delivered.
+    pub latency: Duration,
+    /// Enqueue → batch pickup: router queueing plus any micro-batch
+    /// deadline wait.
+    pub queue_delay: Duration,
+}
+
+impl Reply {
+    /// Pickup → verdict: dispatch charge + model compute.
+    pub fn service_time(&self) -> Duration {
+        self.latency.saturating_sub(self.queue_delay)
+    }
 }
 
 pub struct StreamingServer {
     txs: Vec<mpsc::Sender<Request>>,
     handles: Vec<thread::JoinHandle<ServerStats>>,
-    /// Round-robin dispatch cursor.
-    next: AtomicUsize,
+    depths: Arc<QueueDepths>,
+    policy: Arc<dyn RoutePolicy>,
 }
 
 struct ServerStats {
@@ -48,39 +71,45 @@ struct ServerStats {
 
 #[derive(Debug)]
 pub struct ServeReport {
+    /// Requests served by THIS `run_stream*` call (stream-only).
     pub served: u64,
+    /// Requests served over the replicas' whole lifetime — includes any
+    /// `infer`/`submit` traffic before the stream.  (The pre-redesign
+    /// report conflated this with `served`, inflating `tps`.)
+    pub lifetime_served: u64,
     pub wall: Duration,
+    /// Stream-only throughput: `served / wall`.
     pub tps: f64,
+    /// Stream-only latency stats, recorded at the closed-loop clients.
     pub mean_latency: Duration,
     pub p99_latency: Duration,
     /// Peak device memory ≈ model bytes + activation slack.
     pub model_bytes: u64,
     /// Detector replicas that served the stream.
     pub replicas: usize,
+    /// Route policy that dispatched the stream.
+    pub policy: &'static str,
 }
 
 impl StreamingServer {
-    /// Spawn a single serving thread around a trained detector.
-    /// `dispatch` is charged per inference call (the platform's launch
-    /// overhead).
-    pub fn start(detector: Detector, max_batch: usize, dispatch: Duration) -> StreamingServer {
-        Self::start_sharded(vec![detector], max_batch, dispatch)
-    }
-
-    /// N-replica sharded serving: one detector per worker thread,
-    /// round-robin request dispatch, latency histograms merged at
-    /// shutdown.  Pass replicas cloned from one trained detector so every
-    /// shard issues identical verdicts.
-    pub fn start_sharded(
+    /// Full-control constructor: N replica workers, a micro-batch cap and
+    /// fill deadline, a per-call dispatch charge, and the route policy.
+    /// Prefer [`ServeSession`](crate::serve::ServeSession) unless you are
+    /// wiring a custom [`RoutePolicy`].
+    pub fn spawn(
         detectors: Vec<Detector>,
         max_batch: usize,
+        deadline: Duration,
         dispatch: Duration,
+        policy: Arc<dyn RoutePolicy>,
     ) -> StreamingServer {
         assert!(!detectors.is_empty(), "need at least one detector replica");
+        let depths = Arc::new(QueueDepths::new(detectors.len()));
         let mut txs = Vec::with_capacity(detectors.len());
         let mut handles = Vec::with_capacity(detectors.len());
-        for mut detector in detectors {
+        for (id, mut detector) in detectors.into_iter().enumerate() {
             let (tx, rx) = mpsc::channel::<Request>();
+            let depths = Arc::clone(&depths);
             let handle = thread::spawn(move || {
                 let mut stats = ServerStats { served: 0, hist: LatencyHist::new() };
                 let mut pending: Vec<Request> = Vec::new();
@@ -91,22 +120,46 @@ impl StreamingServer {
                         Err(_) => break,
                     };
                     pending.push(first);
-                    // micro-batch: drain whatever is already queued
-                    while pending.len() < max_batch {
-                        match rx.try_recv() {
-                            Ok(r) => pending.push(r),
-                            Err(_) => break,
+                    if max_batch > 1 {
+                        if deadline.is_zero() {
+                            // drain whatever is already queued
+                            while pending.len() < max_batch {
+                                match rx.try_recv() {
+                                    Ok(r) => pending.push(r),
+                                    Err(_) => break,
+                                }
+                            }
+                        } else {
+                            // wait up to the deadline for the batch to fill
+                            let cutoff = Instant::now() + deadline;
+                            while pending.len() < max_batch {
+                                let left = match cutoff
+                                    .checked_duration_since(Instant::now())
+                                {
+                                    Some(d) if !d.is_zero() => d,
+                                    _ => break,
+                                };
+                                match rx.recv_timeout(left) {
+                                    Ok(r) => pending.push(r),
+                                    Err(_) => break,
+                                }
+                            }
                         }
                     }
+                    let picked = Instant::now();
                     SimPlatform::charge(dispatch);
-                    let samples: Vec<&Sample> = pending.iter().map(|r| &r.sample).collect();
+                    let samples: Vec<&Sample> =
+                        pending.iter().map(|r| &r.sample).collect();
                     let probs = detector.score_batch(&samples);
-                    let now = Instant::now();
+                    let done = Instant::now();
                     for (req, p) in pending.drain(..).zip(probs) {
-                        let lat = now.duration_since(req.enqueued);
-                        stats.hist.record(lat);
+                        let latency = done.saturating_duration_since(req.enqueued);
+                        let queue_delay =
+                            picked.saturating_duration_since(req.enqueued);
+                        stats.hist.record(latency);
                         stats.served += 1;
-                        let _ = req.reply.send((p, lat));
+                        depths.leave(id);
+                        let _ = req.reply.send(Reply { prob: p, latency, queue_delay });
                     }
                 }
                 stats
@@ -114,33 +167,78 @@ impl StreamingServer {
             txs.push(tx);
             handles.push(handle);
         }
-        StreamingServer { txs, handles, next: AtomicUsize::new(0) }
+        StreamingServer { txs, handles, depths, policy }
+    }
+
+    /// Legacy single-replica entry point (round-robin is a no-op at 1).
+    pub fn start(detector: Detector, max_batch: usize, dispatch: Duration) -> StreamingServer {
+        Self::start_sharded(vec![detector], max_batch, dispatch)
+    }
+
+    /// Legacy N-replica entry point: round-robin dispatch, no fill
+    /// deadline.  Superseded by
+    /// [`ServeSession`](crate::serve::ServeSession), which also threads
+    /// planners and route policies; kept for drivers that already hold
+    /// detector clones.
+    pub fn start_sharded(
+        detectors: Vec<Detector>,
+        max_batch: usize,
+        dispatch: Duration,
+    ) -> StreamingServer {
+        Self::spawn(
+            detectors,
+            max_batch,
+            Duration::ZERO,
+            dispatch,
+            Arc::new(RoundRobin::new()),
+        )
     }
 
     pub fn replicas(&self) -> usize {
         self.txs.len()
     }
 
-    /// Submit one sample and wait for the verdict (closed-loop client).
-    /// Requests round-robin across replicas.
-    pub fn infer(&self, sample: &Sample) -> (f32, Duration) {
-        let shard = self.next.fetch_add(1, Ordering::Relaxed) % self.txs.len();
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Current per-replica in-flight request gauges.
+    pub fn queue_depths(&self) -> &QueueDepths {
+        &self.depths
+    }
+
+    /// Submit one sample WITHOUT waiting (open-loop client): the policy
+    /// picks the replica, the reply arrives on the returned channel.
+    pub fn submit(&self, sample: &Sample) -> mpsc::Receiver<Reply> {
+        let shard = self.policy.route(sample, &self.depths).min(self.txs.len() - 1);
+        self.depths.enter(shard);
         let (rtx, rrx) = mpsc::channel();
         self.txs[shard]
-            .send(Request { sample: sample.clone(), enqueued: Instant::now(), reply: rtx })
+            .send(Request {
+                sample: sample.clone(),
+                enqueued: Instant::now(),
+                reply: rtx,
+            })
             .expect("server alive");
-        rrx.recv().expect("server replies")
+        rrx
+    }
+
+    /// Submit one sample and wait for the verdict (closed-loop client).
+    pub fn infer(&self, sample: &Sample) -> Reply {
+        self.submit(sample).recv().expect("server replies")
     }
 
     /// Drive a closed-loop stream of samples; returns the Table VI row.
+    /// Latency and TPS cover THIS stream only (see `lifetime_served`).
     pub fn run_stream(self, samples: &[Sample], model_bytes: u64) -> ServeReport {
         let replicas = self.replicas();
+        let mut hist = LatencyHist::new();
         let t0 = Instant::now();
         for s in samples {
-            let _ = self.infer(s);
+            hist.record(self.infer(s).latency);
         }
         let wall = t0.elapsed();
-        self.report(wall, model_bytes, replicas)
+        self.report(wall, hist, samples.len() as u64, model_bytes, replicas)
     }
 
     /// Drive the stream from `clients` concurrent closed-loop clients —
@@ -155,31 +253,56 @@ impl StreamingServer {
         let replicas = self.replicas();
         let clients = clients.clamp(1, samples.len().max(1));
         let chunk = ((samples.len() + clients - 1) / clients).max(1);
+        let mut hist = LatencyHist::new();
         let t0 = Instant::now();
-        thread::scope(|s| {
+        thread::scope(|sc| {
+            let mut parts = Vec::new();
             for part in samples.chunks(chunk) {
                 let srv = &self;
-                s.spawn(move || {
+                parts.push(sc.spawn(move || {
+                    let mut h = LatencyHist::new();
                     for smp in part {
-                        let _ = srv.infer(smp);
+                        h.record(srv.infer(smp).latency);
                     }
-                });
+                    h
+                }));
+            }
+            for p in parts {
+                hist.merge(&p.join().unwrap());
             }
         });
         let wall = t0.elapsed();
-        self.report(wall, model_bytes, replicas)
+        self.report(wall, hist, samples.len() as u64, model_bytes, replicas)
     }
 
-    fn report(self, wall: Duration, model_bytes: u64, replicas: usize) -> ServeReport {
+    /// Stop the replicas; returns (lifetime served count, lifetime
+    /// latency histogram).  Used by drivers that account client-side
+    /// (the open-loop generator) instead of through `run_stream*`.
+    pub fn shutdown(self) -> (u64, LatencyHist) {
         let stats = self.finish();
+        (stats.served, stats.hist)
+    }
+
+    fn report(
+        self,
+        wall: Duration,
+        stream_hist: LatencyHist,
+        stream_served: u64,
+        model_bytes: u64,
+        replicas: usize,
+    ) -> ServeReport {
+        let policy = self.policy.name();
+        let lifetime = self.finish();
         ServeReport {
-            served: stats.served,
+            served: stream_served,
+            lifetime_served: lifetime.served,
             wall,
-            tps: stats.served as f64 / wall.as_secs_f64(),
-            mean_latency: Duration::from_nanos(stats.hist.mean_ns() as u64),
-            p99_latency: Duration::from_nanos(stats.hist.quantile_ns(0.99) as u64),
+            tps: stream_served as f64 / wall.as_secs_f64().max(1e-12),
+            mean_latency: Duration::from_nanos(stream_hist.mean_ns() as u64),
+            p99_latency: Duration::from_nanos(stream_hist.quantile_ns(0.99) as u64),
             model_bytes,
             replicas,
+            policy,
         }
     }
 
@@ -225,23 +348,29 @@ mod tests {
         let server = StreamingServer::start(detector(), 1, Duration::ZERO);
         let report = server.run_stream(&ss[..25], 1000);
         assert_eq!(report.served, 25);
+        assert_eq!(report.lifetime_served, 25);
         assert_eq!(report.replicas, 1);
+        assert_eq!(report.policy, "round_robin");
         assert!(report.tps > 0.0);
         assert!(report.mean_latency > Duration::ZERO);
         assert!(report.p99_latency >= report.mean_latency / 2);
     }
 
     #[test]
-    fn verdict_probabilities_sane() {
+    fn stream_counts_exclude_prior_infer_traffic() {
         let ss = samples(8);
         let server = StreamingServer::start(detector(), 1, Duration::ZERO);
         for s in &ss[..5] {
-            let (p, lat) = server.infer(s);
-            assert!((0.0..=1.0).contains(&p));
-            assert!(lat > Duration::ZERO);
+            let r = server.infer(s);
+            assert!((0.0..=1.0).contains(&r.prob));
+            assert!(r.latency > Duration::ZERO);
+            assert!(r.latency >= r.queue_delay);
         }
         let report = server.run_stream(&ss[5..8], 0);
-        assert_eq!(report.served, 8); // 5 singles + 3 streamed
+        // the 5 warm-up `infer` calls must NOT inflate the stream stats…
+        assert_eq!(report.served, 3);
+        // …but stay visible in the lifetime counter
+        assert_eq!(report.lifetime_served, 8);
     }
 
     #[test]
@@ -249,19 +378,34 @@ mod tests {
         let ss = samples(16);
         // verdicts from a single replica…
         let single = StreamingServer::start(detector(), 1, Duration::ZERO);
-        let want: Vec<f32> = ss[..12].iter().map(|s| single.infer(s).0).collect();
+        let want: Vec<f32> = ss[..12].iter().map(|s| single.infer(s).prob).collect();
         let _ = single.run_stream(&ss[12..13], 0);
         // …must match a 3-replica shard (identical clones, any dispatch)
         let det = detector();
         let replicas = vec![det.clone(), det.clone(), det];
         let sharded = StreamingServer::start_sharded(replicas, 1, Duration::ZERO);
         assert_eq!(sharded.replicas(), 3);
-        let got: Vec<f32> = ss[..12].iter().map(|s| sharded.infer(s).0).collect();
+        let got: Vec<f32> = ss[..12].iter().map(|s| sharded.infer(s).prob).collect();
         for (a, b) in want.iter().zip(&got) {
             assert!((a - b).abs() < 1e-6, "shard changed verdict: {a} vs {b}");
         }
         let report = sharded.run_stream_concurrent(&ss[..16], 0, 4);
-        assert_eq!(report.served, 12 + 16);
+        assert_eq!(report.served, 16);
+        assert_eq!(report.lifetime_served, 12 + 16);
         assert_eq!(report.replicas, 3);
+    }
+
+    #[test]
+    fn queue_gauges_drain_after_serving() {
+        let ss = samples(8);
+        let server = StreamingServer::start(detector(), 1, Duration::ZERO);
+        for s in &ss[..6] {
+            let _ = server.infer(s);
+        }
+        // closed loop: every request was answered, so gauges are back to 0
+        assert_eq!(server.queue_depths().depth(0), 0);
+        let (lifetime, hist) = server.shutdown();
+        assert_eq!(lifetime, 6);
+        assert_eq!(hist.count(), 6);
     }
 }

@@ -1,0 +1,238 @@
+//! `ServeSession` — the one-stop serving builder.  Replaces the
+//! `Detector::new` / `Detector::with_planner` / `StreamingServer::start`
+//! / `start_sharded` constructor maze with a single fluent API:
+//!
+//! ```ignore
+//! let server = ServeSession::from_trained(engine, planner)
+//!     .replicas(4)
+//!     .policy(Policy::PlanAffinity)
+//!     .max_batch(8)
+//!     .deadline(Duration::from_millis(2))
+//!     .start();
+//! ```
+//!
+//! The builder threads everything that must stay consistent end to end:
+//! the FROZEN planner the model trained under (bijections + layout
+//! policy), per-replica intra-step worker pinning (replica-level
+//! sharding, so N replicas don't fan out to N×workers threads), the
+//! route policy (with `PlanAffinity` snapshotting the planner's
+//! [`AffinityMap`](crate::access::AffinityMap) before it is moved into
+//! the detector), and the micro-batch cap + fill deadline.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::access::AccessPlanner;
+use crate::coordinator::engine::NativeDlrm;
+use crate::serve::detector::Detector;
+use crate::serve::router::{LeastQueued, PlanAffinity, Policy, RoundRobin, RoutePolicy};
+use crate::serve::server::StreamingServer;
+
+/// `[serve]` section of the run config (+ the matching CLI flags).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeCfg {
+    /// Detector replicas (`[serve] replicas` / `--replicas`; the old
+    /// overloaded `--workers` now only sets training workers).
+    pub replicas: usize,
+    /// Micro-batch cap per replica (`[serve] max_batch` / `--max-batch`).
+    pub max_batch: usize,
+    /// How long a replica waits for a micro-batch to fill, in µs
+    /// (`[serve] deadline_us` / `--deadline-us`); 0 = drain-only.
+    pub deadline_us: u64,
+    /// Route policy (`[serve] policy` / `--policy`).
+    pub policy: Policy,
+    /// Per-call dispatch charge in µs (`[serve] dispatch_us` /
+    /// `--dispatch-us`): the platform's launch overhead.
+    pub dispatch_us: u64,
+    /// Closed-loop client count (`[serve] clients` / `--clients`);
+    /// 0 means 2× replicas.
+    pub clients: usize,
+    /// Open-loop Poisson arrival rate in requests/s (`[serve]
+    /// arrival_rate` / `--arrival-rate`); 0 selects the closed loop.
+    pub arrival_rate: f64,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg {
+            replicas: 1,
+            max_batch: 1,
+            deadline_us: 0,
+            policy: Policy::RoundRobin,
+            dispatch_us: 100,
+            clients: 0,
+            arrival_rate: 0.0,
+        }
+    }
+}
+
+impl ServeCfg {
+    /// Closed-loop concurrency: explicit `clients`, or 2× replicas so
+    /// every replica can stay busy while another request is in flight.
+    pub fn effective_clients(&self) -> usize {
+        if self.clients == 0 {
+            self.replicas * 2
+        } else {
+            self.clients
+        }
+    }
+}
+
+/// Fluent serving builder; see the module docs for the full example.
+#[derive(Clone)]
+pub struct ServeSession {
+    engine: NativeDlrm,
+    planner: AccessPlanner,
+    threshold: f32,
+    replicas: usize,
+    max_batch: usize,
+    deadline: Duration,
+    dispatch: Duration,
+    policy: Policy,
+}
+
+impl ServeSession {
+    /// Serve a trained engine through the SPECIFIC planner it trained
+    /// under — required whenever reordering was active: the learned
+    /// embedding rows are only consistent with that planner's bijections.
+    /// The planner is frozen by the detector (read-only traffic never
+    /// advances online-reorder state).
+    pub fn from_trained(engine: NativeDlrm, planner: AccessPlanner) -> ServeSession {
+        ServeSession {
+            engine,
+            planner,
+            threshold: 0.5,
+            replicas: 1,
+            max_batch: 1,
+            deadline: Duration::ZERO,
+            dispatch: Duration::ZERO,
+            policy: Policy::RoundRobin,
+        }
+    }
+
+    /// Serve an engine trained without reordering (identity planner).
+    pub fn from_engine(engine: NativeDlrm) -> ServeSession {
+        let planner = AccessPlanner::for_engine_cfg(&engine.cfg);
+        ServeSession::from_trained(engine, planner)
+    }
+
+    /// Verdict threshold on the attack probability (default 0.5).
+    pub fn threshold(mut self, t: f32) -> ServeSession {
+        self.threshold = t;
+        self
+    }
+
+    /// Detector replica count (default 1).
+    pub fn replicas(mut self, n: usize) -> ServeSession {
+        self.replicas = n.max(1);
+        self
+    }
+
+    /// Route policy (default round-robin).
+    pub fn policy(mut self, p: Policy) -> ServeSession {
+        self.policy = p;
+        self
+    }
+
+    /// Micro-batch cap per replica (default 1 = no batching).
+    pub fn max_batch(mut self, b: usize) -> ServeSession {
+        self.max_batch = b.max(1);
+        self
+    }
+
+    /// How long a replica waits for a micro-batch to fill before scoring
+    /// what it has (default zero = drain-only batching).
+    pub fn deadline(mut self, d: Duration) -> ServeSession {
+        self.deadline = d;
+        self
+    }
+
+    /// Per-call dispatch charge (platform launch overhead; default zero).
+    pub fn dispatch(mut self, d: Duration) -> ServeSession {
+        self.dispatch = d;
+        self
+    }
+
+    /// Apply a `[serve]` config section (replicas, batching + deadline,
+    /// policy, dispatch).  Loop shape (`clients` / `arrival_rate`) stays
+    /// with the driver — see [`ServeCfg::effective_clients`] and
+    /// `serve::load`.
+    pub fn with_cfg(self, cfg: &ServeCfg) -> ServeSession {
+        self.replicas(cfg.replicas)
+            .max_batch(cfg.max_batch)
+            .deadline(Duration::from_micros(cfg.deadline_us))
+            .policy(cfg.policy)
+            .dispatch(Duration::from_micros(cfg.dispatch_us))
+    }
+
+    /// Spawn the replica workers and return the running server.
+    pub fn start(mut self) -> StreamingServer {
+        let n = self.replicas;
+        // Replica-level sharding: pin each replica's intra-step pool to 1
+        // so N replicas don't fan out to N×workers threads.
+        self.engine.set_workers(1);
+        // Snapshot the affinity view BEFORE the planner moves into the
+        // detector: PlanAffinity must hash through the same bijections
+        // the replicas plan with.
+        let affinity = self.planner.affinity_map();
+        let det = Detector::with_planner(self.engine, self.threshold, self.planner);
+        let mut replicas = Vec::with_capacity(n);
+        for _ in 1..n {
+            replicas.push(det.clone());
+        }
+        replicas.push(det);
+        let policy: Arc<dyn RoutePolicy> = match self.policy {
+            Policy::RoundRobin => Arc::new(RoundRobin::new()),
+            Policy::LeastQueued => Arc::new(LeastQueued::new()),
+            Policy::PlanAffinity => Arc::new(PlanAffinity::new(affinity)),
+        };
+        StreamingServer::spawn(replicas, self.max_batch, self.deadline, self.dispatch, policy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::EngineCfg;
+    use crate::powersys::dataset::{generate, DatasetCfg, SparseVocab};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn serve_cfg_defaults_and_effective_clients() {
+        let d = ServeCfg::default();
+        assert_eq!(d.replicas, 1);
+        assert_eq!(d.max_batch, 1);
+        assert_eq!(d.deadline_us, 0);
+        assert_eq!(d.policy, Policy::RoundRobin);
+        assert_eq!(d.arrival_rate, 0.0);
+        let c = ServeCfg { replicas: 3, ..Default::default() };
+        assert_eq!(c.effective_clients(), 6);
+        let c = ServeCfg { replicas: 3, clients: 2, ..Default::default() };
+        assert_eq!(c.effective_clients(), 2);
+    }
+
+    #[test]
+    fn builder_starts_configured_server() {
+        let ds = generate(&DatasetCfg {
+            n_normal: 24,
+            n_attack: 6,
+            vocab: SparseVocab::ieee118(1.0 / 2000.0),
+            n_profiles: 10,
+            noise_std: 0.005,
+            seed: 5,
+        });
+        let engine = NativeDlrm::new(EngineCfg::ieee118(1.0 / 2000.0), &mut Rng::new(6));
+        let server = ServeSession::from_engine(engine)
+            .replicas(3)
+            .policy(Policy::LeastQueued)
+            .max_batch(4)
+            .threshold(0.4)
+            .start();
+        assert_eq!(server.replicas(), 3);
+        assert_eq!(server.policy_name(), "least_queued");
+        let report = server.run_stream(&ds.samples[..10], 0);
+        assert_eq!(report.served, 10);
+        assert_eq!(report.lifetime_served, 10);
+        assert_eq!(report.policy, "least_queued");
+    }
+}

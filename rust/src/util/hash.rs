@@ -1,0 +1,43 @@
+//! FNV-1a hashing for stable keys, shared by the dataset generators
+//! (feature hashing) and the plan-affinity router (prefix keys).
+
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold one u64 into a running FNV-1a state, byte by byte.
+#[inline]
+pub fn fnv1a_step(mut h: u64, v: u64) -> u64 {
+    for b in v.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a of a u64 slice.
+#[inline]
+pub fn fnv1a(data: &[u64]) -> u64 {
+    data.iter().fold(FNV_OFFSET, |h, &d| fnv1a_step(h, d))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_hash_is_the_step_fold() {
+        let xs = [3u64, 0, u64::MAX, 42];
+        let mut h = FNV_OFFSET;
+        for &x in &xs {
+            h = fnv1a_step(h, x);
+        }
+        assert_eq!(fnv1a(&xs), h);
+        assert_eq!(fnv1a(&[]), FNV_OFFSET);
+    }
+
+    #[test]
+    fn distinct_inputs_diverge() {
+        assert_ne!(fnv1a(&[1]), fnv1a(&[2]));
+        assert_ne!(fnv1a(&[1, 2]), fnv1a(&[2, 1]));
+    }
+}

@@ -273,11 +273,11 @@ fn router_microbatching_preserves_verdicts() {
     let mk = || Detector::new(NativeDlrm::new(cfg.clone(), &mut Rng::new(9)), 0.5);
 
     let single = StreamingServer::start(mk(), 1, Duration::ZERO);
-    let p1: Vec<f32> = ds.samples[..20].iter().map(|s| single.infer(s).0).collect();
+    let p1: Vec<f32> = ds.samples[..20].iter().map(|s| single.infer(s).prob).collect();
     let _ = single.run_stream(&ds.samples[20..21], 0);
 
     let batched = StreamingServer::start(mk(), 8, Duration::ZERO);
-    let p8: Vec<f32> = ds.samples[..20].iter().map(|s| batched.infer(s).0).collect();
+    let p8: Vec<f32> = ds.samples[..20].iter().map(|s| batched.infer(s).prob).collect();
     let _ = batched.run_stream(&ds.samples[20..21], 0);
 
     for (a, b) in p1.iter().zip(&p8) {

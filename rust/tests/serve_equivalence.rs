@@ -1,0 +1,160 @@
+//! Serving-stack equivalence pins (the api_redesign acceptance gates):
+//!
+//! 1. Verdicts are BITWISE identical across `RoundRobin` /
+//!    `LeastQueued` / `PlanAffinity` and replica counts 1/2/4 — replicas
+//!    are clones of one trained detector, so routing can only move
+//!    requests, never change scores.
+//! 2. The open-loop Poisson generator serves every offered request and
+//!    its queue-delay/service-time split re-adds to the attack window.
+//! 3. The micro-batch deadline path scores exactly like batch-1 serving
+//!    (forward passes are row-independent).
+
+use std::time::Duration;
+
+use recad::access::AccessPlanner;
+use recad::coordinator::engine::{EngineCfg, NativeDlrm};
+use recad::data::batcher::EpochIter;
+use recad::data::ctr::Batch;
+use recad::powersys::dataset::{generate, DatasetCfg, Sample, SparseVocab};
+use recad::serve::{run_open_loop, OpenLoopCfg, Policy, QueueDepths, RoutePolicy, ServeSession};
+use recad::util::prng::Rng;
+
+const POLICIES: [Policy; 3] = [Policy::RoundRobin, Policy::LeastQueued, Policy::PlanAffinity];
+
+fn dataset(n: usize) -> Vec<Sample> {
+    generate(&DatasetCfg {
+        n_normal: n,
+        n_attack: n / 4,
+        vocab: SparseVocab::ieee118(1.0 / 2000.0),
+        n_profiles: 10,
+        noise_std: 0.005,
+        seed: 2,
+    })
+    .samples
+}
+
+/// A session whose planner carries REAL (profiled) bijections, so
+/// `PlanAffinity` hashes through a non-identity remap — the serving
+/// configuration every reordered training run produces.
+fn profiled_session(samples: &[Sample]) -> ServeSession {
+    let engine = NativeDlrm::new(EngineCfg::ieee118(1.0 / 2000.0), &mut Rng::new(1));
+    let mut rng = Rng::new(3);
+    let profile: Vec<Batch> = EpochIter::new(samples, 32, &mut rng).take(4).collect();
+    let planner = AccessPlanner::with_profile(&engine.cfg, &profile, 0.1);
+    ServeSession::from_trained(engine, planner)
+}
+
+#[test]
+fn verdicts_bitwise_identical_across_policies_and_replicas() {
+    let samples = dataset(120);
+    let stream = &samples[..24];
+    let base = profiled_session(&samples);
+    let want: Vec<u32> = {
+        let server = base.clone().start();
+        let bits = stream.iter().map(|s| server.infer(s).prob.to_bits()).collect();
+        let _ = server.shutdown();
+        bits
+    };
+    for policy in POLICIES {
+        for replicas in [1usize, 2, 4] {
+            let server = base.clone().replicas(replicas).policy(policy).start();
+            assert_eq!(server.replicas(), replicas);
+            let got: Vec<u32> =
+                stream.iter().map(|s| server.infer(s).prob.to_bits()).collect();
+            assert_eq!(
+                want, got,
+                "{policy:?} x {replicas} replicas changed verdict bits"
+            );
+            let (lifetime, _) = server.shutdown();
+            assert_eq!(lifetime, stream.len() as u64, "requests lost by {policy:?}");
+        }
+    }
+}
+
+#[test]
+fn open_loop_serves_everything_with_sane_window_split() {
+    let samples = dataset(160);
+    let stream = &samples[..60];
+    let base = profiled_session(&samples);
+    for policy in POLICIES {
+        let server = base.clone().replicas(2).policy(policy).start();
+        let report = run_open_loop(
+            server,
+            stream,
+            &OpenLoopCfg { rate_per_sec: 3000.0, seed: 7 },
+        );
+        assert_eq!(report.offered, stream.len());
+        assert_eq!(report.served, stream.len() as u64, "open loop dropped requests");
+        assert_eq!(report.window_samples.len(), stream.len());
+        assert!(report.achieved_rate > 0.0);
+        // queue delay is non-negative by construction and the split
+        // re-adds to the window (service = window − queue, pointwise)
+        assert!(report.p50_window <= report.p99_window);
+        assert!(report.p99_window <= report.max_window);
+        let sum = report.mean_queue_delay + report.mean_service;
+        let drift = if sum > report.mean_window {
+            sum - report.mean_window
+        } else {
+            report.mean_window - sum
+        };
+        assert!(
+            drift < Duration::from_millis(1),
+            "queue/service split drifted {drift:?} under {policy:?}"
+        );
+        assert!(
+            report.window_samples.windows(2).all(|w| w[0] <= w[1]),
+            "window samples must come back sorted"
+        );
+    }
+}
+
+#[test]
+fn microbatch_deadline_path_matches_batch1_scores() {
+    let samples = dataset(120);
+    let stream = &samples[..16];
+    let base = profiled_session(&samples);
+    let want: Vec<u32> = {
+        let server = base.clone().start(); // batch-1 reference
+        let bits = stream.iter().map(|s| server.infer(s).prob.to_bits()).collect();
+        let _ = server.shutdown();
+        bits
+    };
+    let server = base
+        .max_batch(8)
+        .deadline(Duration::from_millis(4))
+        .start();
+    // submit everything up front so the deadline batcher actually groups
+    let rxs: Vec<_> = stream.iter().map(|s| server.submit(s)).collect();
+    let got: Vec<u32> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().expect("reply").prob.to_bits())
+        .collect();
+    assert_eq!(want, got, "deadline micro-batching changed scores");
+    let (lifetime, hist) = server.shutdown();
+    assert_eq!(lifetime, stream.len() as u64);
+    assert_eq!(hist.count(), stream.len() as u64);
+}
+
+#[test]
+fn plan_affinity_routes_consistently_and_spreads_hot_prefixes() {
+    use recad::serve::PlanAffinity;
+    let samples = dataset(200);
+    let planner = AccessPlanner::for_engine_cfg(&EngineCfg::ieee118(1.0 / 2000.0));
+    let policy = PlanAffinity::new(planner.affinity_map());
+    let depths = QueueDepths::new(4);
+    let mut hit = [false; 4];
+    for s in &samples[..64] {
+        let a = policy.route(s, &depths);
+        assert!(a < 4);
+        // stateless + deterministic: the same sample always lands on the
+        // same replica, whatever the queues look like
+        depths.enter((a + 1) % 4);
+        assert_eq!(policy.route(s, &depths), a);
+        depths.leave((a + 1) % 4);
+        hit[a] = true;
+    }
+    assert!(
+        hit.iter().filter(|&&h| h).count() > 1,
+        "affinity routing collapsed onto one replica: {hit:?}"
+    );
+}
