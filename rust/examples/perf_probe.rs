@@ -15,7 +15,9 @@ use std::time::Instant;
 
 use recad::access::{replay_fill, run_prefetched_fill, AccessCfg, AccessPlanner, BatchPlan};
 use recad::bench_support::{bench_workers, write_bench_json, BenchArm};
+use recad::coordinator::data_parallel::{train_data_parallel_placed, DpCfg, Placement};
 use recad::coordinator::engine::{EngineCfg, NativeDlrm};
+use recad::coordinator::platform::SimPlatform;
 use recad::coordinator::trainer::train_ieee118_full;
 use recad::serve::{run_open_loop, OpenLoopCfg, Policy, ServeSession};
 use recad::data::batcher::EpochIter;
@@ -292,6 +294,89 @@ fn reorder_stall_arm(
     (arm, losses)
 }
 
+/// Device-placement arms (BENCH_device_placement.json): real data-
+/// parallel training, replicated vs plan-placed, at workers 1/2/4, on a
+/// two-TT-table Zipf workload big enough that a shard touches a strict
+/// subset of the TT cores.  Each arm reports throughput plus the total
+/// logical all-reduce payload (`payload_bytes` extra key); the probe
+/// asserts plan-placed payload strictly below replicated at workers ≥ 2
+/// — the communication win plan-driven placement exists for.
+fn placement_arms() -> Vec<BenchArm> {
+    let (vocab, batch, n_batches, rounds) = if smoke() {
+        (30_000u64, 64usize, 6usize, 2usize)
+    } else {
+        (200_000, 256, 12, 3)
+    };
+    let cfg = EngineCfg {
+        dense_dim: 4,
+        emb_dim: 16,
+        tables: vec![(vocab, true), (vocab * 5 / 8, true), (118, false)],
+        tt_rank: 8,
+        bot_hidden: vec![32],
+        top_hidden: vec![32],
+        lr: 0.05,
+        tt_opts: EffTtOptions::default(),
+        exec: ExecCfg::serial(),
+    };
+    let z1 = Zipf::new(vocab, 1.2);
+    let z2 = Zipf::new(vocab * 5 / 8, 1.2);
+    let mut rng = Rng::new(23);
+    let batches: Vec<Batch> = (0..n_batches)
+        .map(|_| {
+            let mut dense = vec![0.0f32; batch * 4];
+            rng.fill_normal(&mut dense, 0.0, 1.0);
+            let sparse: Vec<u64> = (0..batch)
+                .flat_map(|_| [z1.sample(&mut rng), z2.sample(&mut rng), rng.below(118)])
+                .collect();
+            let labels: Vec<f32> =
+                (0..batch).map(|_| if rng.coin(0.3) { 1.0 } else { 0.0 }).collect();
+            Batch { dense, sparse, labels, batch_size: batch }
+        })
+        .collect();
+    let planner = AccessPlanner::for_engine_cfg(&cfg);
+    let cost = SimPlatform::v100(4).cost;
+    let mut arms = Vec::new();
+    for placement in [Placement::Replicated, Placement::Plan] {
+        for workers in [1usize, 2, 4] {
+            let dp = DpCfg { workers, placement, cost, seed: 5 };
+            let mut iters = Vec::new();
+            let mut payload = 0u64;
+            for _ in 0..rounds {
+                let (r, _) =
+                    train_data_parallel_placed(cfg.clone(), &planner, &batches, &dp);
+                iters.push(r.wall.as_secs_f64() / r.steps as f64);
+                payload = r.payload_bytes;
+            }
+            arms.push(
+                BenchArm::from_iters(
+                    format!("dp_{}_w{workers}", placement.as_str()),
+                    workers,
+                    &iters,
+                    batch,
+                )
+                .with_extra("payload_bytes", payload as f64),
+            );
+        }
+    }
+    let payload_of = |name: &str| {
+        arms.iter()
+            .find(|a| a.name == name)
+            .and_then(|a| a.extra.iter().find(|(k, _)| k == "payload_bytes"))
+            .map(|(_, v)| *v)
+            .unwrap_or(-1.0)
+    };
+    for workers in [2usize, 4] {
+        let rep = payload_of(&format!("dp_replicated_w{workers}"));
+        let plan = payload_of(&format!("dp_plan_w{workers}"));
+        assert!(
+            plan > 0.0 && rep > 0.0 && plan < rep,
+            "plan-placed payload must be strictly below replicated at \
+             workers={workers}: plan {plan} vs replicated {rep}"
+        );
+    }
+    arms
+}
+
 /// Serving-router arms (BENCH_serving.json): every route policy at
 /// replicas 1/2/4, measured both closed-loop (TPS: per-request wall over
 /// a concurrent stream) and open-loop (attack window: per-request
@@ -502,4 +587,35 @@ fn main() {
     );
     let sv_path = write_bench_json("serving", par, &sv_arms);
     println!("wrote {sv_path} ({} arms, JSON round-trip checked)", sv_arms.len());
+
+    // ---- device-placement arms (BENCH_device_placement.json) ------------
+    let dp_arms = placement_arms();
+    let stat = |name: &str| {
+        dp_arms
+            .iter()
+            .find(|a| a.name == name)
+            .map(|a| {
+                let pb = a
+                    .extra
+                    .iter()
+                    .find(|(k, _)| k == "payload_bytes")
+                    .map(|(_, v)| *v)
+                    .unwrap_or(0.0);
+                (a.throughput, pb)
+            })
+            .unwrap_or((0.0, 0.0))
+    };
+    for workers in [2usize, 4] {
+        let (rt, rp) = stat(&format!("dp_replicated_w{workers}"));
+        let (pt, pp) = stat(&format!("dp_plan_w{workers}"));
+        println!(
+            "dp w{workers}: replicated {rt:.0} samples/s @ {:.1} KB payload | \
+             plan-placed {pt:.0} samples/s @ {:.1} KB payload ({:.2}x less traffic)",
+            rp / 1e3,
+            pp / 1e3,
+            rp / pp.max(1.0),
+        );
+    }
+    let dp_path = write_bench_json("device_placement", par, &dp_arms);
+    println!("wrote {dp_path} ({} arms, JSON round-trip checked)", dp_arms.len());
 }

@@ -45,4 +45,4 @@ pub mod planner;
 pub use fused::FusedStats;
 pub use ingest::{replay_fill, run_prefetched, run_prefetched_fill, IngestReport, PlannedBatch};
 pub use plan::{BagLayout, BatchPlan, TtPlan, UnitOffsets};
-pub use planner::{table_shapes, AccessCfg, AccessPlanner, AffinityMap};
+pub use planner::{table_shapes, AccessCfg, AccessPlanner, AffinityMap, PlacementMap};

@@ -4,7 +4,7 @@
 //! trainer, the pipeline and the server all configure one of these
 //! instead of hand-rolling remap/dedup on their hot paths.
 
-use crate::access::plan::BatchPlan;
+use crate::access::plan::{BatchPlan, TtPlan};
 use crate::coordinator::engine::EngineCfg;
 use crate::data::ctr::Batch;
 use crate::reorder::bijection::IndexBijection;
@@ -259,6 +259,15 @@ impl AccessPlanner {
         }
     }
 
+    /// Snapshot this planner's routing view as a training-side
+    /// [`PlacementMap`]: the affinity keys that route serving requests to
+    /// warm replicas, reduced modulo `workers`, assign each TT prefix
+    /// group (and therefore each tile row-set a plan cuts from it) to the
+    /// data-parallel worker that owns those rows.
+    pub fn placement_map(&self, workers: usize) -> PlacementMap {
+        PlacementMap::new(self.affinity_map(), workers)
+    }
+
     /// Plan one batch into reusable scratch: observe raw columns (online
     /// mode), maybe refresh bijections, then remap + dedup + group into
     /// `out`.
@@ -325,6 +334,69 @@ impl AffinityMap {
             }
         }
         h
+    }
+}
+
+/// Assigns TT prefix groups — and whole samples — to data-parallel
+/// training workers, reusing the serving-side FNV prefix key
+/// ([`AffinityMap::key`]).  Samples whose compressed slots share ALL
+/// their post-bijection TT prefixes hash to the same worker.  With one
+/// compressed slot that makes every prefix group's owner exclusive, so
+/// the sparse TT-core all-reduce ships each owned core slice from one
+/// worker (only core coordinates shared between distinct prefixes
+/// repeat); with several compressed slots the mixed key can split one
+/// table's prefix group across workers when the other tables' prefixes
+/// differ — duplication is reduced, not eliminated.
+#[derive(Clone)]
+pub struct PlacementMap {
+    map: AffinityMap,
+    workers: usize,
+}
+
+impl PlacementMap {
+    pub fn new(map: AffinityMap, workers: usize) -> PlacementMap {
+        assert!(workers >= 1, "placement needs at least one worker");
+        PlacementMap { map, workers }
+    }
+
+    #[inline]
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Owning worker of one sample: its mixed affinity key (every
+    /// compressed slot's post-bijection TT prefix) modulo the worker
+    /// count.  Samples sharing all their TT prefixes always co-locate.
+    #[inline]
+    pub fn owner_of(&self, sparse: &[u64]) -> usize {
+        (self.map.key(sparse) % self.workers as u64) as usize
+    }
+
+    /// Owning worker of a single RAW row of slot `t` under the per-slot
+    /// prefix key (`None` for plain slots).  For configurations with
+    /// exactly one compressed slot this agrees with [`Self::owner_of`];
+    /// with several, [`Self::owner_of`] mixes all slots' prefixes while
+    /// this view answers "which worker owns this table row".
+    pub fn row_owner(&self, t: usize, raw_row: u64) -> Option<usize> {
+        use crate::util::hash::{fnv1a_step, FNV_OFFSET};
+        let sh = self.map.shapes.get(t)?.as_ref()?;
+        let row = match self.map.bijections.get(t).and_then(|b| b.as_ref()) {
+            Some(b) => b.apply(raw_row),
+            None => raw_row,
+        };
+        Some((fnv1a_step(FNV_OFFSET, sh.prefix_of(row)) % self.workers as u64) as usize)
+    }
+
+    /// Primary owner of one tile row-set of a built plan
+    /// ([`TtPlan::tile_rows`]): the owner of the tile's first (hottest)
+    /// scheduled row's prefix group.  Plan rows are already
+    /// post-bijection, so the prefix is hashed directly.  `None` when the
+    /// plan is untiled or the tile is out of range.
+    pub fn tile_owner(&self, plan: &TtPlan, tile: usize) -> Option<usize> {
+        use crate::util::hash::{fnv1a_step, FNV_OFFSET};
+        let sh = plan.shapes()?;
+        let row = plan.tile_rows(tile).next()?;
+        Some((fnv1a_step(FNV_OFFSET, sh.prefix_of(row)) % self.workers as u64) as usize)
     }
 }
 
@@ -442,6 +514,54 @@ mod tests {
         // a different prefix changes the key
         let c = map.key(&[9 * m3, 7]);
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn placement_keeps_prefix_groups_on_one_worker() {
+        let cfg = cfg(); // tables: (4000, compressed), (40, plain)
+        let p = AccessPlanner::for_engine_cfg(&cfg);
+        let pm = p.placement_map(4);
+        assert_eq!(pm.workers(), 4);
+        let shapes = table_shapes(&cfg)[0].unwrap();
+        let m3 = shapes.m[2];
+        assert!(m3 >= 2, "test premise: >1 row per prefix");
+        // rows sharing a TT prefix share a row owner…
+        assert_eq!(pm.row_owner(0, 5 * m3), pm.row_owner(0, 5 * m3 + 1));
+        // …and the plain slot has no owner
+        assert_eq!(pm.row_owner(1, 7), None);
+        // one compressed slot => sample owner == that slot's row owner
+        for row in [0u64, 3 * m3, 5 * m3 + 1, 9 * m3] {
+            assert_eq!(Some(pm.owner_of(&[row, 23])), pm.row_owner(0, row));
+        }
+        // owners stay in range and more than one worker gets work
+        let owners: std::collections::HashSet<usize> =
+            (0..64u64).map(|g| pm.owner_of(&[g * m3, 0])).collect();
+        assert!(owners.iter().all(|&w| w < 4));
+        assert!(owners.len() > 1, "64 prefix groups all hashed to one worker");
+    }
+
+    #[test]
+    fn placement_assigns_plan_tiles() {
+        let cfg = cfg();
+        let mut p = AccessPlanner::for_engine_cfg(&cfg);
+        p.set_layout_policy(1, false); // 1 KiB budget => several tiles
+        let mut g = gen();
+        let batch = g.next_batch(256);
+        let mut plan = BatchPlan::default();
+        p.plan_into(&batch, &mut plan);
+        let tp = plan.tt_plan(0).unwrap();
+        assert!(tp.num_tiles() > 1, "tiny budget must cut tiles");
+        let pm = p.placement_map(3);
+        for t in 0..tp.num_tiles() {
+            let owner = pm.tile_owner(tp, t).expect("tiled plan has owners");
+            assert!(owner < 3);
+            // the tile's primary owner is its first row's prefix owner —
+            // and plan rows are post-bijection (identity here), so the
+            // row-owner view must agree
+            let first = tp.tile_rows(t).next().unwrap();
+            assert_eq!(Some(owner), pm.row_owner(0, first));
+        }
+        assert_eq!(pm.tile_owner(tp, tp.num_tiles()), None);
     }
 
     #[test]

@@ -57,6 +57,9 @@ pub struct BenchArm {
     /// number of measured samples behind the percentiles (lets CI assert
     /// an arm — e.g. the ingest-stall arms — actually collected data)
     pub n: usize,
+    /// extra per-arm scalars serialized as additional JSON keys (e.g.
+    /// the device-placement arms report `payload_bytes`)
+    pub extra: Vec<(String, f64)>,
 }
 
 impl BenchArm {
@@ -71,13 +74,25 @@ impl BenchArm {
             p50_us: s.p50 * 1e6,
             p99_us: s.p99 * 1e6,
             n: iters.len(),
+            extra: Vec::new(),
         }
     }
 
+    /// Attach an extra scalar reported alongside the standard fields.
+    pub fn with_extra(mut self, key: &str, value: f64) -> BenchArm {
+        self.extra.push((key.to_string(), value));
+        self
+    }
+
     fn json(&self) -> String {
+        let extra: String = self
+            .extra
+            .iter()
+            .map(|(k, v)| format!(", \"{k}\": {v:.1}"))
+            .collect();
         format!(
             "{{\"name\": \"{}\", \"workers\": {}, \"throughput_per_sec\": {:.1}, \
-             \"p50_us\": {:.1}, \"p99_us\": {:.1}, \"n\": {}}}",
+             \"p50_us\": {:.1}, \"p99_us\": {:.1}, \"n\": {}{extra}}}",
             self.name, self.workers, self.throughput, self.p50_us, self.p99_us, self.n
         )
     }

@@ -85,6 +85,10 @@ SUBCOMMANDS:
                --background-reorder (rebuilds on a worker, epoch swap)
                --cache-kb N (L2 tile budget for plan layouts; 0 = off)
                --fuse-tables (fused same-vocab planning sweep)
+               --devices N (data-parallel replica workers; 1 = single)
+               --placement replicated|plan (multi-device batch routing:
+                 plan routes TT prefix groups to their owning worker and
+                 ships TT-core gradients as sparse (offset, delta) runs)
   serve        Stream detection over a held-out sample stream
                --requests N  --threshold F
                --replicas N (detector shards; was --workers pre-redesign)

@@ -8,6 +8,7 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Context, Result};
 
 use crate::access::AccessCfg;
+use crate::coordinator::data_parallel::Placement;
 use crate::coordinator::engine::EngineCfg;
 use crate::exec::ExecCfg;
 use crate::serve::{Policy, ServeCfg};
@@ -162,6 +163,15 @@ pub struct RecAdConfig {
     /// run online bijection rebuilds on a background worker
     /// (`[access] background_reorder` / `--background-reorder`).
     pub background_reorder: bool,
+    /// `[train]` section: data-parallel replica workers (devices).  1 =
+    /// single-engine training (`--devices N`).
+    pub devices: usize,
+    /// `[train] placement = "replicated"|"plan"` / `--placement`: how
+    /// multi-device shards and the parameter exchange map onto workers.
+    /// `replicated` is bit-identical to the historical data-parallel
+    /// path; `plan` routes prefix groups to their owning worker and
+    /// ships TT-core gradients sparsely.
+    pub placement: Placement,
     /// `[serve]` section: replica count, micro-batching, route policy,
     /// dispatch charge, and the load shape (closed-loop `clients` /
     /// open-loop `arrival_rate`).
@@ -191,6 +201,8 @@ impl Default for RecAdConfig {
             cache_kb: AccessCfg::default().cache_kb,
             fuse_tables: false,
             background_reorder: false,
+            devices: 1,
+            placement: Placement::Replicated,
             serve: ServeCfg::default(),
             seed: 42,
             artifacts_dir: "artifacts".into(),
@@ -220,6 +232,9 @@ impl RecAdConfig {
             cache_kb: t.usize_or("access.cache_kb", d.cache_kb),
             fuse_tables: t.bool_or("access.fuse_tables", d.fuse_tables),
             background_reorder: t.bool_or("access.background_reorder", d.background_reorder),
+            devices: t.usize_or("train.devices", d.devices).max(1),
+            placement: Placement::parse(t.str_or("train.placement", d.placement.as_str()))
+                .context("[train] placement")?,
             serve: ServeCfg {
                 replicas: t.usize_or("serve.replicas", d.serve.replicas).max(1),
                 max_batch: t.usize_or("serve.max_batch", d.serve.max_batch).max(1),
@@ -291,6 +306,10 @@ reorder = false
 [pipeline]
 lc = 8
 
+[train]
+devices = 4
+placement = "plan"
+
 [exec]
 workers = 3
 
@@ -322,6 +341,8 @@ arrival_rate = 1200.0
         assert!(c.reuse); // default preserved
         assert_eq!(c.pipeline_lc, 8);
         assert_eq!(c.workers, 3);
+        assert_eq!(c.devices, 4);
+        assert_eq!(c.placement, Placement::Plan);
         assert_eq!(c.seed, 7);
         assert_eq!(c.plan_ahead, 2);
         assert!(c.online_reorder);
@@ -360,6 +381,16 @@ arrival_rate = 1200.0
     fn rejects_unknown_route_policy() {
         let t = Toml::parse("[serve]\npolicy = \"coin_flip\"\n").unwrap();
         assert!(RecAdConfig::from_toml(&t).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_placement_and_defaults_replicated() {
+        let t = Toml::parse("[train]\nplacement = \"telepathy\"\n").unwrap();
+        assert!(RecAdConfig::from_toml(&t).is_err());
+        let t = Toml::parse("[run]\nepochs = 1\n").unwrap();
+        let c = RecAdConfig::from_toml(&t).unwrap();
+        assert_eq!(c.devices, 1);
+        assert_eq!(c.placement, Placement::Replicated);
     }
 
     #[test]

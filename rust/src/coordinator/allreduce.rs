@@ -4,68 +4,223 @@
 //! Real summation over worker threads (correctness-bearing) plus a
 //! modeled link cost (2·(N−1)/N · bytes / bw) charged as wall time — the
 //! same overlap semantics as the pipeline's transfers.
+//!
+//! Two exchanges share the deposit/merge protocol:
+//!
+//! * [`AllReduce::allreduce_weighted`] — the dense path: every worker
+//!   ships its full parameter vector; the merge is a **shard-size
+//!   weighted** mean (uniform weights compute the plain mean — the same
+//!   ops as the old code at one worker, and at n > 1 one fixed instance
+//!   of the arrival-order sums the old code produced
+//!   nondeterministically), which is what makes uneven shards exact
+//!   global-batch SGD.
+//! * [`AllReduce::allreduce_sparse`] — the plan-placed path: workers ship
+//!   only `(offset, delta)` runs covering the parameters their shard
+//!   actually touched (TT-core slices of their owned prefix groups plus
+//!   boundary rows shared across owners); the merge applies the weighted
+//!   deltas onto the common pre-step base.  Returns the round's total
+//!   payload bytes so callers can account the communication volume.
+//!
+//! Determinism: workers deposit into per-worker slots and every worker
+//! merges the slots in worker-index order, so results are identical bits
+//! on every worker and reproducible run to run regardless of arrival
+//! order (the old shared-accumulator design summed in arrival order).
 
 use std::sync::{Arc, Barrier, Mutex};
 
 use crate::coordinator::platform::{CostModel, SimPlatform};
 
+/// Sparse parameter delta: contiguous `(offset, len)` runs into a flat
+/// region plus the concatenated per-element deltas.  This is the
+/// `(offset, delta)` payload of [`AllReduce::allreduce_sparse`].
+#[derive(Clone, Debug, Default)]
+pub struct SparseDelta {
+    /// `(start, len)` runs, ascending and non-overlapping.
+    pub runs: Vec<(u32, u32)>,
+    /// Deltas for every covered element, run by run.
+    pub vals: Vec<f32>,
+}
+
+impl SparseDelta {
+    pub fn clear(&mut self) {
+        self.runs.clear();
+        self.vals.clear();
+    }
+
+    /// Rebuild as `post - base`, keeping only elements that changed
+    /// (adjacent changed elements merge into one run).  Buffers are
+    /// reused across calls.
+    pub fn diff(&mut self, base: &[f32], post: &[f32]) {
+        assert_eq!(base.len(), post.len(), "sparse diff length mismatch");
+        self.clear();
+        let mut i = 0usize;
+        while i < base.len() {
+            if post[i] == base[i] {
+                i += 1;
+                continue;
+            }
+            let start = i;
+            while i < base.len() && post[i] != base[i] {
+                self.vals.push(post[i] - base[i]);
+                i += 1;
+            }
+            self.runs.push((start as u32, (i - start) as u32));
+        }
+    }
+
+    /// Wire size: 8 bytes per run header + 4 per delta element.
+    pub fn payload_bytes(&self) -> u64 {
+        (self.runs.len() * 8 + self.vals.len() * 4) as u64
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+}
+
+#[derive(Default)]
+struct DenseSlot {
+    weight: f32,
+    buf: Vec<f32>,
+}
+
+#[derive(Default)]
+struct SparseSlot {
+    weight: f32,
+    delta: SparseDelta,
+    bytes: u64,
+}
+
 /// Shared all-reduce context for `n` workers.
 pub struct AllReduce {
     n: usize,
-    acc: Mutex<Vec<f32>>,
-    arrived: Mutex<usize>,
-    barrier: Barrier,
     cost: CostModel,
+    barrier: Barrier,
+    dense: Vec<Mutex<DenseSlot>>,
+    sparse: Vec<Mutex<SparseSlot>>,
 }
 
 impl AllReduce {
     pub fn new(n: usize, len: usize, cost: CostModel) -> Arc<AllReduce> {
         Arc::new(AllReduce {
             n,
-            acc: Mutex::new(vec![0.0; len]),
-            arrived: Mutex::new(0),
-            barrier: Barrier::new(n),
             cost,
+            barrier: Barrier::new(n),
+            dense: (0..n)
+                .map(|_| Mutex::new(DenseSlot { weight: 0.0, buf: Vec::with_capacity(len) }))
+                .collect(),
+            sparse: (0..n).map(|_| Mutex::new(SparseSlot::default())).collect(),
         })
     }
 
-    /// Reduce `data` across all workers (mean); every worker's slice is
-    /// replaced by the mean.  Blocks until all `n` workers arrive.
-    pub fn allreduce_mean(&self, data: &mut [f32]) {
+    /// Reduce `data` across all workers (plain mean); every worker's slice
+    /// is replaced by the mean.  Blocks until all `n` workers arrive.
+    /// `w` is the caller's worker index.
+    pub fn allreduce_mean(&self, w: usize, data: &mut [f32]) {
+        self.allreduce_weighted(w, data, 1.0);
+    }
+
+    /// Weighted mean across all workers: every worker's slice is replaced
+    /// by `Σ wᵢ·xᵢ / Σ wᵢ`.  With uniform weights of 1.0 the arithmetic
+    /// is the old unweighted mean's (bit-identical at one worker; at
+    /// n > 1 the fixed merge order is one deterministic instance of the
+    /// arrival-order sums the old shared-accumulator produced, so runs
+    /// are now reproducible rather than history-matching).  With weights
+    /// proportional to shard sizes, averaging post-step parameters from a
+    /// common starting point is exactly global-batch SGD even when
+    /// `batch_size % n_workers != 0`.
+    pub fn allreduce_weighted(&self, w: usize, data: &mut [f32], weight: f32) {
         // charge the ring cost once per worker (concurrent sleeps overlap,
         // so wall impact ≈ one ring time — matching a real ring)
         SimPlatform::charge(self.cost.allreduce_time((data.len() * 4) as u64, self.n));
 
-        // accumulate
+        // deposit the pre-scaled contribution into this worker's slot
         {
-            let mut acc = self.acc.lock().unwrap();
-            assert_eq!(acc.len(), data.len(), "allreduce length mismatch");
-            for (a, &d) in acc.iter_mut().zip(data.iter()) {
-                *a += d;
-            }
-            let mut k = self.arrived.lock().unwrap();
-            *k += 1;
-        }
-        self.barrier.wait();
-        // read back the mean
-        {
-            let acc = self.acc.lock().unwrap();
-            let inv = 1.0 / self.n as f32;
-            for (d, &a) in data.iter_mut().zip(acc.iter()) {
-                *d = a * inv;
+            let mut slot = self.dense[w].lock().unwrap();
+            slot.weight = weight;
+            slot.buf.clear();
+            slot.buf.extend_from_slice(data);
+            if weight != 1.0 {
+                for v in slot.buf.iter_mut() {
+                    *v *= weight;
+                }
             }
         }
         self.barrier.wait();
-        // one worker resets for the next round
+        // merge in worker-index order — identical bits on every worker
+        let mut wsum = 0.0f32;
+        data.fill(0.0);
+        for ws in 0..self.n {
+            let slot = self.dense[ws].lock().unwrap();
+            assert_eq!(slot.buf.len(), data.len(), "allreduce length mismatch");
+            wsum += slot.weight;
+            for (d, &v) in data.iter_mut().zip(slot.buf.iter()) {
+                *d += v;
+            }
+        }
+        let inv = 1.0 / wsum;
+        for d in data.iter_mut() {
+            *d *= inv;
+        }
+        // nobody may re-deposit until every worker finished merging
+        self.barrier.wait();
+    }
+
+    /// Sparse weighted exchange: every worker contributes the
+    /// `(offset, delta)` runs its step produced over a shared flat
+    /// `region` (the COMMON pre-step base), with its shard weight; on
+    /// return every worker's `region` holds `base + Σ wᵢ·deltaᵢ / Σ wᵢ`
+    /// — elementwise identical (in exact arithmetic) to the dense
+    /// weighted mean of the post-step regions, at the wire cost of only
+    /// the touched elements.  Workers with empty shards still call in
+    /// (weight 0, empty delta) so their weight share is accounted and the
+    /// barrier completes.  Returns the round's total payload bytes
+    /// (identical on every worker).
+    pub fn allreduce_sparse(
+        &self,
+        w: usize,
+        region: &mut [f32],
+        delta: &SparseDelta,
+        weight: f32,
+    ) -> u64 {
+        let own_bytes = delta.payload_bytes();
+        SimPlatform::charge(self.cost.allreduce_time(own_bytes, self.n));
         {
-            let mut k = self.arrived.lock().unwrap();
-            if *k == self.n {
-                *k = 0;
-                let mut acc = self.acc.lock().unwrap();
-                acc.fill(0.0);
+            let mut slot = self.sparse[w].lock().unwrap();
+            slot.weight = weight;
+            slot.bytes = own_bytes;
+            slot.delta.runs.clear();
+            slot.delta.runs.extend_from_slice(&delta.runs);
+            slot.delta.vals.clear();
+            slot.delta.vals.extend_from_slice(&delta.vals);
+        }
+        self.barrier.wait();
+        // pass 1: total weight + payload (fixed order, identical everywhere)
+        let mut wsum = 0.0f32;
+        let mut total = 0u64;
+        for ws in 0..self.n {
+            let slot = self.sparse[ws].lock().unwrap();
+            wsum += slot.weight;
+            total += slot.bytes;
+        }
+        // pass 2: apply the weighted deltas onto the common base, in
+        // worker-index order (overlapping offsets — boundary rows shared
+        // across owners — accumulate deterministically)
+        let inv = 1.0 / wsum;
+        for ws in 0..self.n {
+            let slot = self.sparse[ws].lock().unwrap();
+            let scale = slot.weight * inv;
+            let mut k = 0usize;
+            for &(off, len) in slot.delta.runs.iter() {
+                let off = off as usize;
+                for j in 0..len as usize {
+                    region[off + j] += slot.delta.vals[k] * scale;
+                    k += 1;
+                }
             }
         }
         self.barrier.wait();
+        total
     }
 }
 
@@ -93,7 +248,7 @@ mod tests {
                 let ar = ar.clone();
                 std::thread::spawn(move || {
                     let mut v = vec![(w + 1) as f32; 8];
-                    ar.allreduce_mean(&mut v);
+                    ar.allreduce_mean(w, &mut v);
                     v
                 })
             })
@@ -117,7 +272,7 @@ mod tests {
                     let mut out = Vec::new();
                     for round in 0..3 {
                         let mut v = vec![(w as f32) + round as f32; 2];
-                        ar.allreduce_mean(&mut v);
+                        ar.allreduce_mean(w, &mut v);
                         out.push(v[0]);
                     }
                     out
@@ -127,6 +282,110 @@ mod tests {
         for h in handles {
             let o = h.join().unwrap();
             assert_eq!(o, vec![0.5, 1.5, 2.5]);
+        }
+    }
+
+    #[test]
+    fn weighted_mean_weights_contributions() {
+        // weights 3:1 — exact in f32, so the expectation is exact
+        let ar = AllReduce::new(2, 1, cost());
+        let handles: Vec<_> = (0..2)
+            .map(|w| {
+                let ar = ar.clone();
+                std::thread::spawn(move || {
+                    let (val, weight) = if w == 0 { (8.0f32, 3.0) } else { (4.0, 1.0) };
+                    let mut v = vec![val; 4];
+                    ar.allreduce_weighted(w, &mut v, weight);
+                    v
+                })
+            })
+            .collect();
+        for h in handles {
+            // (3*8 + 1*4) / 4 = 7
+            assert_eq!(h.join().unwrap(), vec![7.0; 4]);
+        }
+    }
+
+    #[test]
+    fn sparse_diff_finds_runs() {
+        let base = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let post = vec![1.0f32, 2.5, 3.5, 4.0, 5.0, 7.0];
+        let mut d = SparseDelta::default();
+        d.diff(&base, &post);
+        assert_eq!(d.runs, vec![(1, 2), (5, 1)]);
+        assert_eq!(d.vals, vec![0.5, 0.5, 1.0]);
+        assert_eq!(d.payload_bytes(), 2 * 8 + 3 * 4);
+        d.diff(&base, &base);
+        assert!(d.is_empty());
+        assert_eq!(d.payload_bytes(), 0);
+    }
+
+    #[test]
+    fn sparse_exchange_matches_dense_weighted_mean() {
+        // two workers, disjoint + overlapping touched elements, weights
+        // chosen exact in f32; sparse result must equal the dense
+        // weighted mean of the post vectors
+        let n = 2;
+        let base = vec![10.0f32, 20.0, 30.0, 40.0];
+        let posts = [vec![12.0f32, 20.0, 34.0, 40.0], vec![10.0f32, 24.0, 38.0, 40.0]];
+        let weights = [1.0f32, 3.0];
+        let ar = AllReduce::new(n, 4, cost());
+        let handles: Vec<_> = (0..n)
+            .map(|w| {
+                let ar = ar.clone();
+                let base = base.clone();
+                let post = posts[w].clone();
+                let weight = weights[w];
+                std::thread::spawn(move || {
+                    let mut delta = SparseDelta::default();
+                    delta.diff(&base, &post);
+                    let mut region = base.clone();
+                    let bytes = ar.allreduce_sparse(w, &mut region, &delta, weight);
+                    (region, bytes)
+                })
+            })
+            .collect();
+        // dense expectation: (1*post0 + 3*post1) / 4
+        let want: Vec<f32> = (0..4)
+            .map(|i| (posts[0][i] + 3.0 * posts[1][i]) / 4.0)
+            .collect();
+        let mut bytes_seen = Vec::new();
+        for h in handles {
+            let (region, bytes) = h.join().unwrap();
+            assert_eq!(region, want);
+            bytes_seen.push(bytes);
+        }
+        assert_eq!(bytes_seen[0], bytes_seen[1], "payload total must agree");
+        assert!(bytes_seen[0] > 0);
+    }
+
+    #[test]
+    fn empty_shard_participates_with_zero_weight() {
+        let n = 3;
+        let base = vec![5.0f32, 5.0];
+        let ar = AllReduce::new(n, 2, cost());
+        let handles: Vec<_> = (0..n)
+            .map(|w| {
+                let ar = ar.clone();
+                let base = base.clone();
+                std::thread::spawn(move || {
+                    let mut delta = SparseDelta::default();
+                    let weight = if w == 2 {
+                        0.0 // empty shard: no delta, no weight share
+                    } else {
+                        let post = vec![5.0 + (w + 1) as f32, 5.0];
+                        delta.diff(&base, &post);
+                        1.5
+                    };
+                    let mut region = base.clone();
+                    ar.allreduce_sparse(w, &mut region, &delta, weight);
+                    region
+                })
+            })
+            .collect();
+        for h in handles {
+            // (1.5*1 + 1.5*2) / 3.0 = 1.5 on element 0, untouched elsewhere
+            assert_eq!(h.join().unwrap(), vec![6.5, 5.0]);
         }
     }
 }

@@ -1,34 +1,114 @@
-//! Real multi-worker data-parallel training (paper Fig. 8's ALLReduce arm,
-//! executed with actual OS threads rather than the analytic composition of
-//! `baselines::multi_gpu`).
+//! Real multi-worker data-parallel training (paper Fig. 8's ALLReduce
+//! arm, executed with actual OS threads rather than the analytic
+//! composition of `baselines::multi_gpu`).
 //!
-//! Every worker owns a full replica (MLPs + Eff-TT cores — small enough to
-//! replicate, which is Rec-AD's §V-H scalability argument), consumes its
-//! shard of each global batch, and all-reduces the *parameter deltas*
-//! after each step: with SGD, averaging post-step parameters from a common
-//! starting point is exactly averaging gradients, and it lets us reuse the
-//! engine's fused update unchanged.
+//! Every worker owns a full replica (MLPs + Eff-TT cores — small enough
+//! to replicate, which is Rec-AD's §V-H scalability argument), consumes
+//! its shard of each global batch, and synchronizes the *parameter
+//! deltas* after each step: with SGD, the shard-size weighted mean of
+//! post-step parameters from a common starting point is exactly
+//! global-batch SGD (weighting is what keeps that identity when
+//! `batch_size % n_workers != 0` — uniform averaging over uneven shards
+//! is not global-batch SGD).
+//!
+//! Two [`Placement`] policies decide how a global batch maps to workers:
+//!
+//! * [`Placement::Replicated`] — contiguous shards (remainder spread one
+//!   sample per leading worker) and a dense all-reduce of the FULL
+//!   parameter vector.  The historical behavior, now deterministic: at
+//!   one worker it is bit-identical to plain SGD (pinned); at n > 1 on
+//!   even batches it computes the same mean the old code did, in a fixed
+//!   merge order instead of the old nondeterministic arrival order (and
+//!   reported losses are now the shard-size-weighted global-batch loss).
+//! * [`Placement::Plan`] — **plan-driven device placement**: samples are
+//!   routed through an [`AccessPlanner`]'s [`PlacementMap`], which mixes
+//!   every compressed slot's post-bijection TT prefix into one key, so
+//!   samples sharing ALL their TT prefixes always co-locate.  With a
+//!   single compressed table that gives each prefix group exactly one
+//!   owning worker; with several, a group of one table can still be
+//!   touched by multiple workers (its samples may differ in the other
+//!   tables' prefixes) — routing reduces, not eliminates, cross-worker
+//!   repetition.  Dense MLPs (+ plain tables) stay replicated behind
+//!   the same weighted all-reduce, while TT-core gradients travel
+//!   through [`AllReduce::allreduce_sparse`] as `(offset, delta)` runs
+//!   covering only the core slices each worker's shard touched, so the
+//!   exchange volume drops well below the dense payload (touched-slice
+//!   sparsity always; reduced duplication on top where ownership is
+//!   exclusive).  In exact arithmetic both placements compute the same
+//!   global-batch step; `tests/placement_equivalence.rs` pins
+//!   bit-identity at one worker and convergence-equivalence at 2/4.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::allreduce::AllReduce;
+use anyhow::{bail, Result};
+
+use crate::access::planner::{AccessPlanner, PlacementMap};
+use crate::coordinator::allreduce::{AllReduce, SparseDelta};
 use crate::coordinator::engine::{EngineCfg, NativeDlrm, TableSlot};
 use crate::coordinator::platform::CostModel;
 use crate::data::ctr::Batch;
 use crate::util::prng::Rng;
 
+/// How a global batch (and the parameter exchange) maps onto workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Contiguous shards + dense full-vector all-reduce (the default).
+    Replicated,
+    /// Plan-driven placement: prefix-group routing + sparse TT exchange.
+    Plan,
+}
+
+impl Placement {
+    pub fn parse(s: &str) -> Result<Placement> {
+        match s {
+            "replicated" => Ok(Placement::Replicated),
+            "plan" => Ok(Placement::Plan),
+            other => bail!("unknown placement '{other}' (expected replicated|plan)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Placement::Replicated => "replicated",
+            Placement::Plan => "plan",
+        }
+    }
+}
+
+/// Data-parallel run configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct DpCfg {
+    /// Requested worker count (clamped so no worker can see an empty
+    /// contiguous shard: effective workers ≤ smallest batch size).
+    pub workers: usize,
+    pub placement: Placement,
+    /// Interconnect model charged for every exchange.
+    pub cost: CostModel,
+    /// Replica init seed (identical across workers by construction).
+    pub seed: u64,
+}
+
 #[derive(Debug)]
 pub struct DataParallelReport {
+    /// Effective worker count (after clamping to the smallest batch).
     pub workers: usize,
+    pub placement: Placement,
     pub steps: u64,
     pub wall: Duration,
     pub throughput: f64,
-    /// Per-step mean loss (averaged across workers).
+    /// Per-step GLOBAL-batch loss (shard-size weighted across workers).
     pub losses: Vec<f32>,
+    /// Total logical all-reduce payload over the run, summed across
+    /// workers and steps (0 at one worker — nothing is exchanged).
+    /// Replicated ships the full flat vector per worker per step; plan
+    /// placement ships the dense region per worker plus the sparse
+    /// `(offset, delta)` runs.
+    pub payload_bytes: u64,
 }
 
-/// Flatten all trainable parameters into one vector (allreduce payload).
+/// Flatten all trainable parameters into one vector (dense payload of
+/// the replicated exchange).
 fn flatten(engine: &NativeDlrm, out: &mut Vec<f32>) {
     out.clear();
     for l in engine.bot.iter().chain(&engine.top) {
@@ -80,12 +160,86 @@ fn unflatten(engine: &mut NativeDlrm, flat: &[f32]) {
     assert_eq!(at, flat.len(), "flat parameter size drift");
 }
 
-/// Split a global batch into `n` contiguous shards (last may be larger).
+/// Flatten the replicated-dense region of the plan-placed exchange: MLP
+/// layers plus plain (uncompressed) tables.
+fn flatten_dense(engine: &NativeDlrm, out: &mut Vec<f32>) {
+    out.clear();
+    for l in engine.bot.iter().chain(&engine.top) {
+        out.extend_from_slice(&l.w);
+        out.extend_from_slice(&l.b);
+    }
+    for t in &engine.tables {
+        if let TableSlot::Plain(t) = t {
+            out.extend_from_slice(&t.weights);
+        }
+    }
+}
+
+fn unflatten_dense(engine: &mut NativeDlrm, flat: &[f32]) {
+    let mut at = 0usize;
+    let mut take = |n: usize| -> &[f32] {
+        let s = &flat[at..at + n];
+        at += n;
+        s
+    };
+    for l in engine.bot.iter_mut().chain(engine.top.iter_mut()) {
+        let n = l.w.len();
+        l.w.copy_from_slice(take(n));
+        let n = l.b.len();
+        l.b.copy_from_slice(take(n));
+    }
+    for t in engine.tables.iter_mut() {
+        if let TableSlot::Plain(t) = t {
+            let n = t.weights.len();
+            t.weights.copy_from_slice(take(n));
+        }
+    }
+    assert_eq!(at, flat.len(), "dense parameter size drift");
+}
+
+/// Flatten the owner-routed region: every TT table's cores, slot order.
+fn flatten_tt(engine: &NativeDlrm, out: &mut Vec<f32>) {
+    out.clear();
+    for t in &engine.tables {
+        if let TableSlot::Tt(t) = t {
+            out.extend_from_slice(&t.core1);
+            out.extend_from_slice(&t.core2);
+            out.extend_from_slice(&t.core3);
+        }
+    }
+}
+
+fn unflatten_tt(engine: &mut NativeDlrm, flat: &[f32]) {
+    let mut at = 0usize;
+    let mut take = |n: usize| -> &[f32] {
+        let s = &flat[at..at + n];
+        at += n;
+        s
+    };
+    for t in engine.tables.iter_mut() {
+        if let TableSlot::Tt(t) = t {
+            let n = t.core1.len();
+            t.core1.copy_from_slice(take(n));
+            let n = t.core2.len();
+            t.core2.copy_from_slice(take(n));
+            let n = t.core3.len();
+            t.core3.copy_from_slice(take(n));
+        }
+    }
+    assert_eq!(at, flat.len(), "tt parameter size drift");
+}
+
+/// Split a global batch into `n` contiguous shards.  The remainder is
+/// spread one sample per leading worker, so shard sizes differ by at
+/// most one (the old layout dumped the whole remainder on the last
+/// worker AND weighted it equally in the reduce).
 fn shard(batch: &Batch, n_sparse: usize, w: usize, n: usize) -> Batch {
-    let per = batch.batch_size / n;
-    let lo = w * per;
-    let hi = if w + 1 == n { batch.batch_size } else { lo + per };
-    let nd = batch.dense.len() / batch.batch_size;
+    let b = batch.batch_size;
+    let per = b / n;
+    let rem = b % n;
+    let lo = w * per + w.min(rem);
+    let hi = lo + per + usize::from(w < rem);
+    let nd = batch.dense.len() / b;
     Batch {
         dense: batch.dense[lo * nd..hi * nd].to_vec(),
         sparse: batch.sparse[lo * n_sparse..hi * n_sparse].to_vec(),
@@ -94,7 +248,46 @@ fn shard(batch: &Batch, n_sparse: usize, w: usize, n: usize) -> Batch {
     }
 }
 
-/// Train `batches` across `n_workers` replicas with per-step all-reduce.
+/// Route every batch once: per batch, per worker, the owned sample
+/// indices (original batch order — a pure function of the batch and the
+/// frozen map, so all workers share one pre-pass instead of re-hashing
+/// the whole batch n times).
+fn route_batches(
+    batches: &[Batch],
+    n_sparse: usize,
+    pm: &PlacementMap,
+    n: usize,
+) -> Vec<Vec<Vec<u32>>> {
+    batches
+        .iter()
+        .map(|b| {
+            let mut lists = vec![Vec::new(); n];
+            for r in 0..b.batch_size {
+                let w = pm.owner_of(&b.sparse[r * n_sparse..(r + 1) * n_sparse]);
+                lists[w].push(r as u32);
+            }
+            lists
+        })
+        .collect()
+}
+
+/// Gather the selected samples of a batch into a new contiguous batch.
+fn gather(batch: &Batch, n_sparse: usize, rows: &[u32]) -> Batch {
+    let nd = batch.dense.len() / batch.batch_size;
+    let mut dense = Vec::with_capacity(rows.len() * nd);
+    let mut sparse = Vec::with_capacity(rows.len() * n_sparse);
+    let mut labels = Vec::with_capacity(rows.len());
+    for &r in rows {
+        let r = r as usize;
+        dense.extend_from_slice(&batch.dense[r * nd..(r + 1) * nd]);
+        sparse.extend_from_slice(&batch.sparse[r * n_sparse..(r + 1) * n_sparse]);
+        labels.push(batch.labels[r]);
+    }
+    Batch { dense, sparse, labels, batch_size: rows.len() }
+}
+
+/// Train `batches` across `n_workers` replicas with per-step all-reduce
+/// (replicated placement, identity planner — the historical entry point).
 pub fn train_data_parallel(
     cfg: EngineCfg,
     batches: &[Batch],
@@ -102,54 +295,149 @@ pub fn train_data_parallel(
     cost: CostModel,
     seed: u64,
 ) -> DataParallelReport {
-    assert!(n_workers >= 1);
+    let planner = AccessPlanner::for_engine_cfg(&cfg);
+    let dp = DpCfg { workers: n_workers, placement: Placement::Replicated, cost, seed };
+    train_data_parallel_placed(cfg, &planner, batches, &dp).0
+}
+
+/// Train `batches` across replicas under an explicit [`Placement`],
+/// routing plan-placed shards through `planner`'s placement map (its
+/// CURRENT bijections — the view serving routes by).  Returns the report
+/// and the trained engine (all replicas hold identical parameters after
+/// the final exchange; worker 0's is returned).
+pub fn train_data_parallel_placed(
+    cfg: EngineCfg,
+    planner: &AccessPlanner,
+    batches: &[Batch],
+    dp: &DpCfg,
+) -> (DataParallelReport, NativeDlrm) {
+    assert!(dp.workers >= 1);
+    assert!(!batches.is_empty(), "data-parallel training needs batches");
+    let min_batch = batches.iter().map(|b| b.batch_size).min().unwrap();
+    assert!(min_batch >= 1, "empty batch in the training stream");
+    // clamp: more workers than samples would hand train_step zero-size
+    // shards under contiguous sharding
+    let n = dp.workers.min(min_batch);
     let n_sparse = cfg.n_tables();
+    // plan placement at one worker degenerates to the replicated path
+    // (one shard = the whole batch, nothing to exchange), so the routing
+    // pre-pass only exists for n > 1
+    let routing = (dp.placement == Placement::Plan && n > 1)
+        .then(|| route_batches(batches, n_sparse, &planner.placement_map(n), n));
+
     // identical init across replicas: same seed
-    let proto = NativeDlrm::new(cfg.clone(), &mut Rng::new(seed));
+    let proto = NativeDlrm::new(cfg.clone(), &mut Rng::new(dp.seed));
     let mut probe = Vec::new();
     flatten(&proto, &mut probe);
     let payload = probe.len();
-    let ar = AllReduce::new(n_workers, payload, cost);
+    flatten_dense(&proto, &mut probe);
+    let dense_len = probe.len();
+    let tt_len = payload - dense_len;
+    let ar = AllReduce::new(n, payload, dp.cost);
     drop(proto);
 
     let t0 = Instant::now();
-    let losses = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..n_workers)
+    let (losses, engine, payload_bytes) = std::thread::scope(|scope| {
+        let routing = routing.as_deref();
+        let handles: Vec<_> = (0..n)
             .map(|w| {
                 let ar: Arc<AllReduce> = Arc::clone(&ar);
                 let cfg = cfg.clone();
                 scope.spawn(move || {
-                    let mut engine = NativeDlrm::new(cfg, &mut Rng::new(seed));
+                    let mut engine = NativeDlrm::new(cfg, &mut Rng::new(dp.seed));
                     let mut flat = vec![0.0f32; payload];
-                    let mut my_losses = Vec::with_capacity(batches.len());
-                    for batch in batches {
-                        let sb = shard(batch, n_sparse, w, n_workers);
-                        let loss = engine.train_step(&sb);
-                        // average post-step params == average grads (SGD)
-                        flatten(&engine, &mut flat);
-                        ar.allreduce_mean(&mut flat);
-                        unflatten(&mut engine, &flat);
-                        my_losses.push(loss);
+                    let mut dense = vec![0.0f32; dense_len];
+                    let mut base = vec![0.0f32; tt_len];
+                    let mut post = vec![0.0f32; tt_len];
+                    let mut delta = SparseDelta::default();
+                    let mut my: Vec<(f32, u32)> = Vec::with_capacity(batches.len());
+                    let mut bytes = 0u64;
+                    for (bi, batch) in batches.iter().enumerate() {
+                        match routing {
+                            None => {
+                                let sb = shard(batch, n_sparse, w, n);
+                                let loss = engine.train_step(&sb);
+                                // shard-size weight, 1.0 exactly on even
+                                // shards (the plain mean's arithmetic —
+                                // no reweighting perturbation)
+                                let weight = (sb.batch_size * n) as f64
+                                    / batch.batch_size as f64;
+                                // weighted mean of post-step params ==
+                                // global-batch SGD (common start + SGD)
+                                flatten(&engine, &mut flat);
+                                ar.allreduce_weighted(w, &mut flat, weight as f32);
+                                unflatten(&mut engine, &flat);
+                                if w == 0 && n > 1 {
+                                    bytes += (n * payload * 4) as u64;
+                                }
+                                my.push((loss, sb.batch_size as u32));
+                            }
+                            Some(routing) => {
+                                let rows = &routing[bi][w];
+                                let size = rows.len();
+                                flatten_tt(&engine, &mut base);
+                                let loss = if size > 0 {
+                                    let sb = gather(batch, n_sparse, rows);
+                                    engine.train_step(&sb)
+                                } else {
+                                    0.0 // weight 0 below: excluded
+                                };
+                                let weight = ((size * n) as f64
+                                    / batch.batch_size as f64)
+                                    as f32;
+                                flatten_dense(&engine, &mut dense);
+                                ar.allreduce_weighted(w, &mut dense, weight);
+                                unflatten_dense(&mut engine, &dense);
+                                flatten_tt(&engine, &mut post);
+                                delta.diff(&base, &post);
+                                let round =
+                                    ar.allreduce_sparse(w, &mut base, &delta, weight);
+                                unflatten_tt(&mut engine, &base);
+                                if w == 0 {
+                                    bytes += round + (n * dense_len * 4) as u64;
+                                }
+                                my.push((loss, size as u32));
+                            }
+                        }
                     }
-                    my_losses
+                    (my, (w == 0).then_some(engine), bytes)
                 })
             })
             .collect();
-        let all: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
-        // mean loss per step across workers
-        (0..batches.len())
-            .map(|s| all.iter().map(|l| l[s]).sum::<f32>() / n_workers as f32)
-            .collect::<Vec<f32>>()
+        let mut results: Vec<(Vec<(f32, u32)>, Option<NativeDlrm>, u64)> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let payload_bytes: u64 = results.iter().map(|r| r.2).sum();
+        let engine = results
+            .iter_mut()
+            .find_map(|r| r.1.take())
+            .expect("worker 0 returns its engine");
+        let all: Vec<Vec<(f32, u32)>> = results.into_iter().map(|r| r.0).collect();
+        // per-step GLOBAL-batch loss: shard-size weighted mean (plain
+        // per-worker losses are already per-sample means of their shard)
+        let losses: Vec<f32> = (0..batches.len())
+            .map(|s| {
+                if n == 1 {
+                    return all[0][s].0;
+                }
+                let total: f64 = all.iter().map(|l| l[s].1 as f64).sum();
+                (all.iter().map(|l| l[s].0 as f64 * l[s].1 as f64).sum::<f64>()
+                    / total.max(1.0)) as f32
+            })
+            .collect();
+        (losses, engine, payload_bytes)
     });
     let wall = t0.elapsed();
     let samples: u64 = batches.iter().map(|b| b.batch_size as u64).sum();
-    DataParallelReport {
-        workers: n_workers,
+    let report = DataParallelReport {
+        workers: n,
+        placement: dp.placement,
         steps: batches.len() as u64,
         wall,
         throughput: samples as f64 / wall.as_secs_f64(),
         losses,
-    }
+        payload_bytes,
+    };
+    (report, engine)
 }
 
 #[cfg(test)]
@@ -200,6 +488,7 @@ mod tests {
         let mut engine = NativeDlrm::new(cfg, &mut Rng::new(5));
         let direct: Vec<f32> = batches.iter().map(|b| engine.train_step(b)).collect();
         assert_eq!(dp.losses, direct, "1-worker DP must equal plain SGD");
+        assert_eq!(dp.payload_bytes, 0, "one worker exchanges nothing");
     }
 
     #[test]
@@ -207,9 +496,30 @@ mod tests {
         let (cfg, batches) = setup();
         let dp = train_data_parallel(cfg, &batches, 3, zero_cost(), 5);
         assert_eq!(dp.steps, 16);
+        assert_eq!(dp.workers, 3);
+        assert!(dp.payload_bytes > 0);
         let head = dp.losses[0];
         let tail = dp.losses[dp.losses.len() - 1];
         assert!(tail < head, "no learning under DP: {head} -> {tail}");
+    }
+
+    #[test]
+    fn worker_count_clamps_to_smallest_batch() {
+        let (cfg, _) = setup();
+        let schema = DatasetSchema {
+            name: "dp-tiny",
+            n_dense: 4,
+            vocabs: vec![1500, 60],
+            emb_dim: 8,
+            zipf_s: 1.2,
+            ft_rank: 8,
+        };
+        let mut gen = CtrGenerator::new(schema, 3);
+        let batches = gen.batches(4, 3); // 3 samples < 8 requested workers
+        let dp = train_data_parallel(cfg, &batches, 8, zero_cost(), 5);
+        assert_eq!(dp.workers, 3, "workers must clamp to the smallest batch");
+        assert_eq!(dp.losses.len(), 4);
+        assert!(dp.losses.iter().all(|l| l.is_finite()));
     }
 
     #[test]
@@ -218,10 +528,38 @@ mod tests {
         let a = NativeDlrm::new(cfg.clone(), &mut Rng::new(1));
         let mut flat = Vec::new();
         flatten(&a, &mut flat);
-        let mut b = NativeDlrm::new(cfg, &mut Rng::new(2));
+        let mut b = NativeDlrm::new(cfg.clone(), &mut Rng::new(2));
         unflatten(&mut b, &flat);
         let mut flat_b = Vec::new();
         flatten(&b, &mut flat_b);
         assert_eq!(flat, flat_b);
+        // the dense + tt split covers the same parameters, disjointly
+        let mut dense = Vec::new();
+        let mut tt = Vec::new();
+        flatten_dense(&a, &mut dense);
+        flatten_tt(&a, &mut tt);
+        assert_eq!(dense.len() + tt.len(), flat.len());
+        let mut c = NativeDlrm::new(cfg, &mut Rng::new(3));
+        unflatten_dense(&mut c, &dense);
+        unflatten_tt(&mut c, &tt);
+        let mut flat_c = Vec::new();
+        flatten(&c, &mut flat_c);
+        assert_eq!(flat, flat_c, "dense+tt split must reassemble the full vector");
+    }
+
+    #[test]
+    fn remainder_spreads_across_leading_workers() {
+        let (_, batches) = setup();
+        let b = &batches[0]; // 32 samples
+        let sizes: Vec<usize> =
+            (0..5).map(|w| shard(b, 2, w, 5).batch_size).collect();
+        assert_eq!(sizes, vec![7, 7, 6, 6, 6]);
+        assert_eq!(sizes.iter().sum::<usize>(), 32);
+        // shards tile the batch contiguously
+        let mut labels = Vec::new();
+        for w in 0..5 {
+            labels.extend(shard(b, 2, w, 5).labels);
+        }
+        assert_eq!(labels, b.labels);
     }
 }

@@ -12,8 +12,11 @@ pub mod platform;
 pub mod queues;
 pub mod trainer;
 
+pub use allreduce::{AllReduce, SparseDelta};
 pub use cache::{EmbeddingCache, PrefetchBatch, PrefetchedRow};
-pub use data_parallel::{train_data_parallel, DataParallelReport};
+pub use data_parallel::{
+    train_data_parallel, train_data_parallel_placed, DataParallelReport, DpCfg, Placement,
+};
 pub use engine::{EngineCfg, NativeDlrm, TableSlot};
 pub use params::{GradPacket, HostParams};
 pub use pipeline::{run as run_pipeline, PipelineCfg, PipelineReport};

@@ -5,6 +5,9 @@
 use std::time::{Duration, Instant};
 
 use crate::access::{run_prefetched_fill, AccessCfg, AccessPlanner, BatchPlan};
+use crate::coordinator::data_parallel::{
+    train_data_parallel_placed, DataParallelReport, DpCfg,
+};
 use crate::coordinator::engine::{EngineCfg, NativeDlrm};
 use crate::data::batcher::{fill_batch, EpochIter};
 use crate::data::ctr::Batch;
@@ -107,6 +110,30 @@ pub fn train_ieee118_full(
         plan_stall_max_s,
     };
     (report, engine, planner)
+}
+
+/// Multi-device training driver (paper Fig. 8): assemble the epoch
+/// stream once, train it across `dp.workers` replica workers under
+/// `dp.placement` (contiguous replicated shards, or plan-driven
+/// prefix-group routing with the sparse TT-core exchange), then evaluate
+/// the synchronized model on the held-out split.
+pub fn train_ieee118_dp(
+    cfg: EngineCfg,
+    dataset: &Ieee118Dataset,
+    epochs: usize,
+    batch_size: usize,
+    dp: &DpCfg,
+) -> (DataParallelReport, NativeDlrm, ClassifyReport) {
+    let (train, test) = dataset.split(0.8);
+    let mut rng = Rng::new(dp.seed ^ 0xE90C);
+    let mut batches = Vec::new();
+    for _ in 0..epochs {
+        batches.extend(EpochIter::new(train, batch_size, &mut rng));
+    }
+    let planner = AccessPlanner::for_engine_cfg(&cfg);
+    let (report, mut engine) = train_data_parallel_placed(cfg, &planner, &batches, dp);
+    let eval = evaluate_on_with(&mut engine, &planner, test);
+    (report, engine, eval)
 }
 
 /// Evaluate a trained engine on a sample slice (identity index mapping).

@@ -5,6 +5,7 @@ use anyhow::Result;
 
 use recad::cli::{Cli, USAGE};
 use recad::config::RecAdConfig;
+use recad::coordinator::data_parallel::{DpCfg, Placement};
 use recad::coordinator::engine::NativeDlrm;
 use recad::coordinator::pipeline::{self, PipelineCfg};
 use recad::coordinator::platform::SimPlatform;
@@ -64,6 +65,10 @@ fn load_config(cli: &Cli) -> Result<RecAdConfig> {
     cfg.workers = cli.usize_or("workers", cfg.workers)?.max(1);
     cfg.plan_ahead = cli.usize_or("plan-ahead", cfg.plan_ahead)?;
     cfg.cache_kb = cli.usize_or("cache-kb", cfg.cache_kb)?;
+    cfg.devices = cli.usize_or("devices", cfg.devices)?.max(1);
+    if let Some(p) = cli.opt("placement") {
+        cfg.placement = Placement::parse(p)?;
+    }
     if cli.flag("online-reorder") {
         cfg.online_reorder = true;
     }
@@ -98,6 +103,13 @@ fn cmd_train(cli: &Cli) -> Result<()> {
 
     if cli.flag("pipeline") {
         // PS-pipeline mode over the small host tables
+        if cfg.devices > 1 {
+            eprintln!(
+                "warning: --pipeline is single-device; ignoring --devices {} \
+                 (and --placement)",
+                cfg.devices
+            );
+        }
         let ecfg = cfg.engine_cfg();
         let mut engine = NativeDlrm::new(ecfg, &mut Rng::new(cfg.seed));
         let host_slots = vec![2usize, 3, 4, 5, 6];
@@ -114,6 +126,57 @@ fn cmd_train(cli: &Cli) -> Result<()> {
             report.steps, report.throughput, report.raw_fixed, report.cache_hits
         );
         let eval = trainer::evaluate_on(&mut engine, ds.split(0.8).1);
+        print_eval(&eval);
+    } else if cfg.devices > 1 {
+        // multi-device data-parallel training ([train] devices/placement).
+        // The DP driver plans inline per worker (identity planner): the
+        // [access] ingest options do not apply — say so instead of
+        // silently training a different configuration than requested.
+        let access = cfg.access_cfg();
+        if access.online_reorder
+            || access.background_reorder
+            || access.fuse_tables
+            || access.plan_ahead != recad::access::AccessCfg::default().plan_ahead
+            || access.cache_kb != recad::access::AccessCfg::default().cache_kb
+        {
+            eprintln!(
+                "warning: [access] options (plan-ahead/online-reorder/\
+                 background-reorder/cache-kb/fuse-tables) are ignored by \
+                 multi-device training (--devices {}); they apply to \
+                 single-device runs only",
+                cfg.devices
+            );
+        }
+        // each device is already a thread: pin replicas to one intra-step
+        // exec worker so devices x workers threads never oversubscribe
+        // (the same hazard ServeSession::start pins replicas for)
+        if cfg.workers > 1 {
+            eprintln!(
+                "note: --devices {} pins each replica to 1 intra-step worker \
+                 (--workers {} would run devices x workers threads)",
+                cfg.devices, cfg.workers
+            );
+        }
+        let mut ecfg = cfg.engine_cfg();
+        ecfg.exec = recad::exec::ExecCfg::serial();
+        let dp = DpCfg {
+            workers: cfg.devices,
+            placement: cfg.placement,
+            cost: SimPlatform::v100(cfg.devices).cost,
+            seed: cfg.seed,
+        };
+        let (report, _engine, eval) =
+            trainer::train_ieee118_dp(ecfg, &ds, cfg.epochs, cfg.batch_size, &dp);
+        println!(
+            "data-parallel [{}] x{}: {} steps in {} ({:.0} samples/s, \
+             all-reduce payload {})",
+            report.placement.as_str(),
+            report.workers,
+            report.steps,
+            fmt_dur(report.wall.as_secs_f64()),
+            report.throughput,
+            fmt_bytes(report.payload_bytes),
+        );
         print_eval(&eval);
     } else {
         let access = cfg.access_cfg();

@@ -97,7 +97,9 @@ impl OnlineReorderer {
 /// overlaps one training batch before its result is required.
 pub const DEFAULT_ADOPT_LAG: usize = 1;
 
-/// One rebuild request shipped to the background worker.
+/// One rebuild request shipped to the background worker (behind an
+/// `Arc`: the ingest thread keeps a second handle for crash recovery
+/// without a second deep copy of freq + window).
 struct RefreshJob {
     epoch: u64,
     rows: u64,
@@ -128,6 +130,12 @@ struct PendingRefresh {
     countdown: usize,
     /// synchronous twin: the bijection computed inline at the trigger.
     done: Option<IndexBijection>,
+    /// background engine: the snapshot that was shipped to the worker,
+    /// kept so a worker that dies MID-rebuild (panic in the Louvain
+    /// stack) can be recovered from at the adoption point by rebuilding
+    /// inline from the identical inputs — same bijection, training
+    /// survives.
+    job: Option<Arc<RefreshJob>>,
     /// ingest-thread seconds already spent on this refresh (inline
     /// rebuild for the synchronous twin, snapshot+dispatch otherwise).
     stall_so_far: f64,
@@ -143,12 +151,16 @@ pub struct BackgroundReorderer {
     /// true = compute inline at the trigger (the stall BASELINE with the
     /// same adoption schedule); false = compute on the worker thread.
     synchronous: bool,
+    /// The background worker died (send failed): rebuilds fall back to
+    /// the ingest thread — training survives, the stall advantage is
+    /// gone.  Logged once when first detected.
+    worker_lost: bool,
     freq: FreqCounter,
     window: VecDeque<Vec<u64>>,
     since_refresh: usize,
     epoch: u64,
     pending: Option<PendingRefresh>,
-    tx: Option<mpsc::Sender<RefreshJob>>,
+    tx: Option<mpsc::Sender<Arc<RefreshJob>>>,
     worker: Option<std::thread::JoinHandle<()>>,
     swap: Arc<SwapSlot>,
     /// Current bijection (identity until the first adoption).
@@ -186,6 +198,7 @@ impl BackgroundReorderer {
             window_cap: window_cap.max(1),
             adopt_lag,
             synchronous: !background,
+            worker_lost: false,
             freq: FreqCounter::new(),
             window: VecDeque::new(),
             since_refresh: 0,
@@ -218,17 +231,27 @@ impl BackgroundReorderer {
             self.since_refresh = 0;
             self.epoch += 1;
             let t0 = Instant::now();
-            let done = if self.synchronous {
+            let (done, job) = if self.synchronous {
                 let refs: Vec<&[u64]> = self.window.iter().map(|v| v.as_slice()).collect();
-                Some(IndexBijection::build_with_freq(
+                let bij = IndexBijection::build_with_freq(
                     self.rows,
                     &self.freq,
                     &refs,
                     self.hot_ratio,
-                ))
+                );
+                (Some(bij), None)
             } else {
-                self.dispatch();
-                None
+                // ONE deep snapshot; the Arc is shared between the
+                // worker and the crash-recovery slot
+                let job = Arc::new(self.make_job());
+                match self.dispatch(Arc::clone(&job)) {
+                    // worker already gone: the rebuild ran inline as a
+                    // fallback (same inputs => same bijection)
+                    Some(bij) => (Some(bij), None),
+                    // in flight; keep the snapshot so a worker that dies
+                    // mid-rebuild can be recovered from at adoption
+                    None => (None, Some(job)),
+                }
             };
             let stall_so_far = t0.elapsed().as_secs_f64();
             // half-life = one refresh interval, same as the inline engine
@@ -237,6 +260,7 @@ impl BackgroundReorderer {
                 epoch: self.epoch,
                 countdown: self.adopt_lag,
                 done,
+                job,
                 stall_so_far,
             });
         }
@@ -246,7 +270,7 @@ impl BackgroundReorderer {
             let t0 = Instant::now();
             let bij = match p.done.take() {
                 Some(b) => b,
-                None => self.wait_for(p.epoch),
+                None => self.await_epoch(p.epoch, p.job.take()),
             };
             if self.stall_samples.len() >= STALL_SAMPLE_CAP {
                 self.stall_samples.drain(..STALL_SAMPLE_CAP / 2);
@@ -267,9 +291,25 @@ impl BackgroundReorderer {
         self.stall_samples.iter().cloned().fold(0.0, f64::max)
     }
 
-    fn dispatch(&mut self) {
-        if self.tx.is_none() {
-            let (tx, rx) = mpsc::channel::<RefreshJob>();
+    /// Snapshot the rebuild inputs at the trigger point.
+    fn make_job(&self) -> RefreshJob {
+        RefreshJob {
+            epoch: self.epoch,
+            rows: self.rows,
+            hot_ratio: self.hot_ratio,
+            freq: self.freq.clone(),
+            window: self.window.iter().cloned().collect(),
+        }
+    }
+
+    /// Ship the rebuild to the background worker.  If the worker is gone
+    /// (its thread panicked, so the channel is closed), compute the
+    /// bijection inline instead and return it — a dead worker degrades
+    /// to synchronous-twin behavior (identical outputs, full stall)
+    /// rather than panicking the ingest thread.
+    fn dispatch(&mut self, job: Arc<RefreshJob>) -> Option<IndexBijection> {
+        if self.tx.is_none() && !self.worker_lost {
+            let (tx, rx) = mpsc::channel::<Arc<RefreshJob>>();
             let swap = self.swap.clone();
             let handle = std::thread::spawn(move || {
                 for job in rx {
@@ -288,23 +328,74 @@ impl BackgroundReorderer {
             self.tx = Some(tx);
             self.worker = Some(handle);
         }
-        let job = RefreshJob {
-            epoch: self.epoch,
-            rows: self.rows,
-            hot_ratio: self.hot_ratio,
-            freq: self.freq.clone(),
-            window: self.window.iter().cloned().collect(),
+        let undelivered = match self.tx.as_ref() {
+            Some(tx) => match tx.send(job) {
+                Ok(()) => None,
+                Err(e) => Some(e.0), // channel closed: the job comes back
+            },
+            None => Some(job),
         };
-        // a send can only fail if the worker panicked; surface that at
-        // the adoption point (wait_for would hang), not silently here
-        self.tx.as_ref().unwrap().send(job).expect("background reorder worker died");
+        let job = undelivered?;
+        self.tx = None; // stop trying; rebuild inline from now on
+        Some(self.rebuild_inline(&job))
     }
 
-    /// Block until the worker has published `epoch` (or newer), and read
-    /// the bijection WITHOUT consuming the slot (clones keep it valid).
-    /// Waits with a timeout so a worker that died mid-rebuild (panic in
-    /// the Louvain stack, unwind on OOM) fails the adoption loudly
-    /// instead of hanging ingest forever.
+    /// Synchronous fallback rebuild from a job snapshot (dead worker).
+    fn rebuild_inline(&mut self, job: &RefreshJob) -> IndexBijection {
+        if !self.worker_lost {
+            self.worker_lost = true;
+            eprintln!(
+                "recad: background reorder worker died; falling back to \
+                 synchronous rebuilds (bijections unchanged, stalls grow)"
+            );
+        }
+        let refs: Vec<&[u64]> = job.window.iter().map(|v| v.as_slice()).collect();
+        IndexBijection::build_with_freq(job.rows, &job.freq, &refs, job.hot_ratio)
+    }
+
+    /// Adoption-point wait: block until the worker has published `epoch`
+    /// (or newer) and read the bijection WITHOUT consuming the slot
+    /// (clones keep it valid).  A worker that died MID-rebuild (panic in
+    /// the Louvain stack, unwind on OOM) is detected via the timed wait;
+    /// the refresh is then rebuilt inline from the `job` snapshot — the
+    /// identical inputs the worker had, so the adopted bijection is
+    /// unchanged and training survives.
+    fn await_epoch(&mut self, epoch: u64, job: Option<Arc<RefreshJob>>) -> IndexBijection {
+        {
+            let mut slot = self.swap.slot.lock().unwrap();
+            loop {
+                if let Some((e, bij)) = slot.as_ref() {
+                    if *e >= epoch {
+                        return bij.clone();
+                    }
+                }
+                if !self.worker.as_ref().is_some_and(|h| !h.is_finished()) {
+                    // worker thread is gone; one last slot check below
+                    // catches a publish that raced its exit
+                    break;
+                }
+                let (guard, _timed_out) = self
+                    .swap
+                    .ready
+                    .wait_timeout(slot, std::time::Duration::from_millis(20))
+                    .unwrap();
+                slot = guard;
+            }
+            if let Some((e, bij)) = slot.as_ref() {
+                if *e >= epoch {
+                    return bij.clone();
+                }
+            }
+        }
+        // the worker died before publishing this epoch
+        let job = job
+            .unwrap_or_else(|| panic!("reorder worker died before epoch {epoch}, no snapshot"));
+        self.rebuild_inline(&job)
+    }
+
+    /// Block until the worker publishes `epoch` — the clone path, which
+    /// has no `&mut self` to fall back with; a dead worker panics here
+    /// (cloning an engine whose worker crashed mid-rebuild).
     fn wait_for(&self, epoch: u64) -> IndexBijection {
         let mut slot = self.swap.slot.lock().unwrap();
         loop {
@@ -336,6 +427,8 @@ impl Clone for BackgroundReorderer {
             epoch: p.epoch,
             countdown: p.countdown,
             stall_so_far: p.stall_so_far,
+            // resolved to a concrete bijection, so no snapshot needed
+            job: None,
             done: Some(match &p.done {
                 Some(b) => b.clone(),
                 None => self.wait_for(p.epoch),
@@ -348,6 +441,7 @@ impl Clone for BackgroundReorderer {
             window_cap: self.window_cap,
             adopt_lag: self.adopt_lag,
             synchronous: self.synchronous,
+            worker_lost: self.worker_lost,
             freq: self.freq.clone(),
             window: self.window.clone(),
             since_refresh: self.since_refresh,
@@ -371,6 +465,22 @@ impl Drop for BackgroundReorderer {
         if let Some(h) = self.worker.take() {
             let _ = h.join();
         }
+    }
+}
+
+#[cfg(test)]
+impl BackgroundReorderer {
+    /// Simulate a crashed worker: end the real thread, then install a
+    /// channel whose receiver is already gone so every send fails the
+    /// way a panicked worker's does.
+    fn sever_worker_for_test(&mut self) {
+        self.tx.take();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+        let (tx, rx) = mpsc::channel::<Arc<RefreshJob>>();
+        drop(rx);
+        self.tx = Some(tx);
     }
 }
 
@@ -464,6 +574,94 @@ mod tests {
         assert_eq!(adopted_at, vec![3, 6, 9]);
         assert_eq!(r.stall_samples.len(), 3, "every adoption must record a stall sample");
         assert!(r.max_stall() >= 0.0);
+    }
+
+    /// A dead background worker must degrade to inline rebuilds (same
+    /// bijections as the synchronous twin), not panic the ingest thread.
+    #[test]
+    fn dead_worker_falls_back_to_synchronous_rebuild() {
+        let vocab = 2500u64;
+        let z = Zipf::new(vocab, 1.2);
+        let mut rng = Rng::new(17);
+        let batches: Vec<Vec<u64>> = (0..12)
+            .map(|_| (0..96).map(|_| z.sample(&mut rng)).collect())
+            .collect();
+        // reference: the synchronous-compute twin over the same stream
+        let mut sync = BackgroundReorderer::new(vocab, 0.1, 3, 6, 1, false);
+        let mut sync_adopt = Vec::new();
+        for (step, col) in batches.iter().enumerate() {
+            if sync.observe(col) {
+                sync_adopt.push(step);
+            }
+        }
+        // background engine whose worker dies before the first trigger
+        let mut bg = BackgroundReorderer::new(vocab, 0.1, 3, 6, 1, true);
+        bg.sever_worker_for_test();
+        let mut bg_adopt = Vec::new();
+        for (step, col) in batches.iter().enumerate() {
+            if bg.observe(col) {
+                bg_adopt.push(step);
+            }
+        }
+        assert!(bg.worker_lost, "severed worker must be detected");
+        assert_eq!(sync_adopt, bg_adopt, "adoption schedule diverged");
+        assert!(bg.refreshes >= 2, "fallback must keep refreshing");
+        for i in 0..vocab {
+            assert_eq!(
+                sync.bijection.apply(i),
+                bg.bijection.apply(i),
+                "fallback bijection diverged at {i}"
+            );
+        }
+        // stall samples keep flowing (they now measure the inline cost)
+        assert_eq!(bg.stall_samples.len(), bg.refreshes as usize);
+    }
+
+    /// The realistic death mode: the worker accepts a job and then dies
+    /// WITHOUT publishing (panic mid-rebuild).  The adoption point must
+    /// rebuild inline from the kept snapshot — identical bijections to
+    /// the synchronous twin, no ingest panic.
+    #[test]
+    fn mid_rebuild_worker_death_recovers_inline() {
+        let vocab = 2200u64;
+        let z = Zipf::new(vocab, 1.2);
+        let mut rng = Rng::new(29);
+        let batches: Vec<Vec<u64>> = (0..8)
+            .map(|_| (0..96).map(|_| z.sample(&mut rng)).collect())
+            .collect();
+        let mut sync = BackgroundReorderer::new(vocab, 0.1, 3, 6, 1, false);
+        let mut sync_adopt = Vec::new();
+        for (step, col) in batches.iter().enumerate() {
+            if sync.observe(col) {
+                sync_adopt.push(step);
+            }
+        }
+        let mut bg = BackgroundReorderer::new(vocab, 0.1, 3, 6, 1, true);
+        let mut bg_adopt = Vec::new();
+        for (step, col) in batches.iter().enumerate() {
+            if step == 3 {
+                // the trigger at step 2 dispatched a job; simulate the
+                // worker dying mid-rebuild: a finished thread handle and
+                // a swap slot that will never be published
+                assert!(
+                    matches!(bg.pending.as_ref(), Some(p) if p.done.is_none()),
+                    "test premise: a background rebuild is in flight"
+                );
+                bg.swap = Arc::new(SwapSlot::default());
+                bg.worker = Some(std::thread::spawn(|| {}));
+            }
+            if bg.observe(col) {
+                bg_adopt.push(step);
+            }
+        }
+        assert_eq!(sync_adopt, bg_adopt, "adoption schedule diverged after crash");
+        for i in 0..vocab {
+            assert_eq!(
+                sync.bijection.apply(i),
+                bg.bijection.apply(i),
+                "crash-recovered bijection diverged at {i}"
+            );
+        }
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! and service time (pickup → verdict) and summarizes the window
 //! percentiles under load.
 
+use std::sync::mpsc;
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -32,9 +33,14 @@ pub struct OpenLoopCfg {
 pub struct OpenLoopReport {
     /// Requests the generator offered (== `samples.len()`).
     pub offered: usize,
-    /// Requests that came back with a verdict (every offered request —
-    /// the generator always drains its reply channels).
+    /// Requests that came back with a verdict.  Normally every offered
+    /// request; see `dropped` for the exceptions.
     pub served: u64,
+    /// Requests whose reply channel disconnected before a verdict
+    /// arrived (a replica dropped the sender — e.g. a session shutdown
+    /// racing the drain).  Counted instead of aborting the run; excluded
+    /// from every latency statistic.
+    pub dropped: usize,
     pub wall: Duration,
     /// Configured arrival rate (requests/s).
     pub offered_rate: f64,
@@ -88,13 +94,33 @@ pub fn run_open_loop(
         }
         receivers.push(server.submit(s));
     }
-    let replies: Vec<Reply> = receivers
-        .into_iter()
-        .map(|rx| rx.recv().expect("replica answered"))
-        .collect();
+    let (replies, dropped) = drain_replies(receivers);
     let wall = t0.elapsed();
     let (lifetime, _) = server.shutdown();
     assert!(lifetime >= replies.len() as u64, "replicas lost requests");
+    if replies.is_empty() {
+        // every reply channel disconnected: report the drop count with
+        // zeroed latency stats instead of dividing by nothing
+        return OpenLoopReport {
+            offered: samples.len(),
+            served: 0,
+            dropped,
+            wall,
+            offered_rate: cfg.rate_per_sec,
+            achieved_rate: 0.0,
+            mean_window: Duration::ZERO,
+            p50_window: Duration::ZERO,
+            p99_window: Duration::ZERO,
+            max_window: Duration::ZERO,
+            mean_queue_delay: Duration::ZERO,
+            p99_queue_delay: Duration::ZERO,
+            mean_service: Duration::ZERO,
+            p99_service: Duration::ZERO,
+            replicas,
+            policy,
+            window_samples: Vec::new(),
+        };
+    }
 
     let mut windows: Vec<f64> = replies.iter().map(|r| r.latency.as_secs_f64()).collect();
     let mut queue: Vec<f64> =
@@ -110,6 +136,7 @@ pub fn run_open_loop(
     OpenLoopReport {
         offered: samples.len(),
         served: replies.len() as u64,
+        dropped,
         wall,
         offered_rate: cfg.rate_per_sec,
         achieved_rate: replies.len() as f64 / wall.as_secs_f64().max(1e-12),
@@ -125,6 +152,25 @@ pub fn run_open_loop(
         policy,
         window_samples: windows,
     }
+}
+
+/// Await every reply channel in submission order.  A disconnected
+/// channel (the replica dropped the sender before answering — a session
+/// shutdown racing the drain) counts that request as dropped instead of
+/// aborting the whole open-loop run.
+fn drain_replies(receivers: Vec<mpsc::Receiver<Reply>>) -> (Vec<Reply>, usize) {
+    let mut dropped = 0usize;
+    let replies = receivers
+        .into_iter()
+        .filter_map(|rx| match rx.recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::RecvError) => {
+                dropped += 1;
+                None
+            }
+        })
+        .collect();
+    (replies, dropped)
 }
 
 #[cfg(test)]
@@ -151,6 +197,7 @@ mod tests {
         let report = run_open_loop(server, &ds.samples[..30], &cfg);
         assert_eq!(report.offered, 30);
         assert_eq!(report.served, 30);
+        assert_eq!(report.dropped, 0);
         assert_eq!(report.window_samples.len(), 30);
         assert!(report.achieved_rate > 0.0);
         assert!(report.p50_window <= report.p99_window);
@@ -163,5 +210,35 @@ mod tests {
             report.mean_window - sum
         };
         assert!(diff < Duration::from_millis(1), "queue/service split drifted: {diff:?}");
+    }
+
+    #[test]
+    fn dropped_reply_channels_are_counted_not_fatal() {
+        // three in-flight requests; the replica serving the second dies
+        // (drops its reply sender without answering) — the drain must
+        // count it as dropped and keep the other verdicts
+        let mk = |prob: f32| Reply {
+            prob,
+            latency: Duration::from_micros(50),
+            queue_delay: Duration::from_micros(10),
+        };
+        let (tx1, rx1) = std::sync::mpsc::channel();
+        let (tx2, rx2) = std::sync::mpsc::channel::<Reply>();
+        let (tx3, rx3) = std::sync::mpsc::channel();
+        tx1.send(mk(0.1)).unwrap();
+        drop(tx2); // session shutdown raced the drain
+        tx3.send(mk(0.9)).unwrap();
+        let (replies, dropped) = drain_replies(vec![rx1, rx2, rx3]);
+        assert_eq!(dropped, 1);
+        assert_eq!(replies.len(), 2);
+        assert_eq!(replies[0].prob, 0.1);
+        assert_eq!(replies[1].prob, 0.9);
+
+        // all channels dead: everything dropped, nothing served
+        let (txa, rxa) = std::sync::mpsc::channel::<Reply>();
+        drop(txa);
+        let (replies, dropped) = drain_replies(vec![rxa]);
+        assert!(replies.is_empty());
+        assert_eq!(dropped, 1);
     }
 }

@@ -240,19 +240,45 @@ impl<'a> Parser<'a> {
                         Some(b't') => s.push('\t'),
                         Some(b'r') => s.push('\r'),
                         Some(b'u') => {
-                            // \uXXXX (no surrogate-pair handling; artifacts
-                            // never emit astral-plane chars)
-                            let hex = self
-                                .b
-                                .get(self.i + 1..self.i + 5)
+                            // \uXXXX, with UTF-16 surrogate pairs decoded
+                            // (😀 => U+1F600); a lone surrogate
+                            // degrades to U+FFFD instead of corrupting
+                            let hex4 = |b: &[u8], at: usize| -> Option<u32> {
+                                let h = b.get(at..at + 4)?;
+                                u32::from_str_radix(std::str::from_utf8(h).ok()?, 16).ok()
+                            };
+                            let code = hex4(self.b, self.i + 1)
                                 .ok_or_else(|| self.err("bad \\u"))?;
-                            let code = u32::from_str_radix(
-                                std::str::from_utf8(hex).map_err(|_| self.err("bad \\u"))?,
-                                16,
-                            )
-                            .map_err(|_| self.err("bad \\u"))?;
-                            s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
-                            self.i += 4;
+                            if (0xD800..0xDC00).contains(&code) {
+                                // high surrogate: pair with \uDC00..\uDFFF
+                                let lo = if self.b.get(self.i + 5) == Some(&b'\\')
+                                    && self.b.get(self.i + 6) == Some(&b'u')
+                                {
+                                    hex4(self.b, self.i + 7)
+                                        .filter(|c| (0xDC00..0xE000).contains(c))
+                                } else {
+                                    None
+                                };
+                                match lo {
+                                    Some(lo) => {
+                                        let c = 0x10000
+                                            + ((code - 0xD800) << 10)
+                                            + (lo - 0xDC00);
+                                        s.push(char::from_u32(c).unwrap_or('\u{FFFD}'));
+                                        self.i += 10; // XXXX + \uYYYY
+                                    }
+                                    None => {
+                                        s.push('\u{FFFD}'); // lone high
+                                        self.i += 4;
+                                    }
+                                }
+                            } else if (0xDC00..0xE000).contains(&code) {
+                                s.push('\u{FFFD}'); // lone low surrogate
+                                self.i += 4;
+                            } else {
+                                s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                                self.i += 4;
+                            }
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -367,6 +393,27 @@ mod tests {
     fn escapes() {
         let j = Json::parse(r#""a\nb\t\"q\" A""#).unwrap();
         assert_eq!(j.as_str(), Some("a\nb\t\"q\" A"));
+    }
+
+    #[test]
+    fn surrogate_pairs_roundtrip() {
+        // non-BMP char via a UTF-16 surrogate pair escape
+        let j = Json::parse(r#""smile \uD83D\uDE00 end""#).unwrap();
+        assert_eq!(j.as_str(), Some("smile \u{1F600} end"));
+        // the writer emits raw UTF-8, which must re-parse identically
+        let j2 = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(j, j2);
+        // a bench-report-shaped doc with a non-BMP name survives the trip
+        let doc = r#"{"arms": [{"name": "tt_\uD83D\uDE80_fwd", "n": 1}]}"#;
+        let d = Json::parse(doc).unwrap();
+        let name = d.get("arms").unwrap().idx(0).unwrap().get("name").unwrap();
+        assert_eq!(name.as_str(), Some("tt_\u{1F680}_fwd"));
+        assert_eq!(Json::parse(&d.to_string()).unwrap(), d);
+        // lone surrogates degrade to U+FFFD instead of corrupting
+        assert_eq!(Json::parse(r#""\uD83D x""#).unwrap().as_str(), Some("\u{FFFD} x"));
+        assert_eq!(Json::parse(r#""\uDE00""#).unwrap().as_str(), Some("\u{FFFD}"));
+        // BMP escapes still decode as before
+        assert_eq!(Json::parse(r#""\u0041\u00e9""#).unwrap().as_str(), Some("A\u{e9}"));
     }
 
     #[test]

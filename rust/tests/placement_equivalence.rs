@@ -1,0 +1,241 @@
+//! Placement-equivalence properties of data-parallel training:
+//!
+//! * `placement=replicated` at one worker == plan-placed at one worker
+//!   == plain single-engine SGD, **bit-identically** (losses and
+//!   post-training predictions).
+//! * Uneven shards (`batch_size % workers != 0`) are exact global-batch
+//!   SGD under the shard-size weighted reduce — the bug the old
+//!   uniform mean had.
+//! * Plan-placed DP at workers 2/4 is convergence-equivalent to
+//!   replicated (both compute the same weighted global-batch step in
+//!   exact arithmetic; only float summation order differs).
+//! * Plan placement's all-reduce payload is strictly below replicated's
+//!   at workers ≥ 2 (the sparse TT exchange ships touched slices only).
+//! * `AllReduce` survives multi-round use with uneven arrival order —
+//!   the deposit/merge protocol is deterministic by construction.
+
+use std::time::Duration;
+
+use recad::access::AccessPlanner;
+use recad::coordinator::allreduce::AllReduce;
+use recad::coordinator::data_parallel::{
+    train_data_parallel, train_data_parallel_placed, DpCfg, Placement,
+};
+use recad::coordinator::engine::{EngineCfg, NativeDlrm};
+use recad::coordinator::platform::CostModel;
+use recad::data::ctr::{Batch, CtrGenerator};
+use recad::data::schema::DatasetSchema;
+use recad::exec::ExecCfg;
+use recad::tt::table::EffTtOptions;
+use recad::util::prng::Rng;
+
+fn zero_cost() -> CostModel {
+    CostModel {
+        h2d_bps: 1e18,
+        d2d_bps: 1e18,
+        transfer_latency: Duration::ZERO,
+        ps_row: Duration::ZERO,
+        dispatch: Duration::ZERO,
+    }
+}
+
+fn cfg(vocab: u64) -> EngineCfg {
+    EngineCfg {
+        dense_dim: 4,
+        emb_dim: 8,
+        tables: vec![(vocab, true), (60, false)],
+        tt_rank: 4,
+        bot_hidden: vec![16],
+        top_hidden: vec![16],
+        lr: 0.05,
+        tt_opts: EffTtOptions::default(),
+        exec: ExecCfg::default(),
+    }
+}
+
+fn batches(vocab: u64, n: usize, batch: usize, seed: u64) -> Vec<Batch> {
+    let schema = DatasetSchema {
+        name: "placement-test",
+        n_dense: 4,
+        vocabs: vec![vocab, 60],
+        emb_dim: 8,
+        zipf_s: 1.2,
+        ft_rank: 8,
+    };
+    CtrGenerator::new(schema, seed).batches(n, batch)
+}
+
+fn run(
+    cfg: &EngineCfg,
+    batches: &[Batch],
+    workers: usize,
+    placement: Placement,
+) -> (Vec<f32>, Vec<f32>, u64) {
+    let planner = AccessPlanner::for_engine_cfg(cfg);
+    let dp = DpCfg { workers, placement, cost: zero_cost(), seed: 9 };
+    let (report, mut engine) =
+        train_data_parallel_placed(cfg.clone(), &planner, batches, &dp);
+    // post-training predictions on the first batch fingerprint the params
+    let probe = engine.predict(&batches[0]);
+    (report.losses, probe, report.payload_bytes)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Plan-placed at one worker must match replicated at one worker AND
+/// plain single-engine SGD, bit for bit.
+#[test]
+fn one_worker_plan_equals_replicated_equals_plain() {
+    let cfg = cfg(1500);
+    let bs = batches(1500, 12, 32, 11);
+    let (rep_l, rep_p, rep_bytes) = run(&cfg, &bs, 1, Placement::Replicated);
+    let (plan_l, plan_p, plan_bytes) = run(&cfg, &bs, 1, Placement::Plan);
+    assert_eq!(bits(&rep_l), bits(&plan_l), "1-worker losses diverged");
+    assert_eq!(bits(&rep_p), bits(&plan_p), "1-worker params diverged");
+    assert_eq!(rep_bytes, 0);
+    assert_eq!(plan_bytes, 0);
+    let mut engine = NativeDlrm::new(cfg, &mut Rng::new(9));
+    let direct: Vec<f32> = bs.iter().map(|b| engine.train_step(b)).collect();
+    assert_eq!(bits(&direct), bits(&plan_l), "1-worker DP != plain SGD");
+}
+
+/// THE uneven-shard regression (batch_size 33, workers 4): the
+/// shard-size weighted reduce makes DP exactly global-batch SGD, so the
+/// DP loss sequence must track the single-engine sequence to float
+/// noise.  (The old uniform mean over 9/8/8/8-sized shards biased every
+/// step toward the small shards and drifted off the global trajectory.)
+#[test]
+fn uneven_shards_match_global_batch_sgd() {
+    let cfg = cfg(1500);
+    let bs = batches(1500, 16, 33, 7);
+    let mut engine = NativeDlrm::new(cfg.clone(), &mut Rng::new(9));
+    let direct: Vec<f32> = bs.iter().map(|b| engine.train_step(b)).collect();
+    for placement in [Placement::Replicated, Placement::Plan] {
+        let (losses, _, _) = run(&cfg, &bs, 4, placement);
+        assert_eq!(losses.len(), direct.len());
+        for (step, (&dp, &gb)) in losses.iter().zip(&direct).enumerate() {
+            // float-order noise only; the old uniform mean drifted ~1e-2
+            let tol = 5e-3 * gb.abs().max(0.2);
+            assert!(
+                (dp - gb).abs() <= tol,
+                "[{}] step {step}: DP loss {dp} vs global-batch {gb} \
+                 (|Δ| {} > {tol})",
+                placement.as_str(),
+                (dp - gb).abs()
+            );
+        }
+    }
+}
+
+/// Plan-placed training at 2 and 4 workers stays on the replicated
+/// trajectory (convergence-equivalent) and still learns.
+#[test]
+fn plan_placement_convergence_equivalent_at_2_and_4() {
+    let cfg = cfg(1500);
+    let bs = batches(1500, 16, 32, 5);
+    let (rep_l, _, _) = run(&cfg, &bs, 1, Placement::Replicated);
+    for workers in [2usize, 4] {
+        let (plan_l, _, _) = run(&cfg, &bs, workers, Placement::Plan);
+        for (step, (&a, &b)) in plan_l.iter().zip(&rep_l).enumerate() {
+            let tol = 5e-3 * b.abs().max(0.2);
+            assert!(
+                (a - b).abs() <= tol,
+                "workers={workers} step {step}: plan {a} vs replicated {b}"
+            );
+        }
+        let head = plan_l[0];
+        let tail = plan_l[plan_l.len() - 1];
+        assert!(tail < head, "plan-placed DP stopped learning: {head} -> {tail}");
+    }
+}
+
+/// The sparse TT exchange must move strictly fewer bytes than the dense
+/// replicated all-reduce at every multi-worker width.
+#[test]
+fn plan_payload_strictly_below_replicated() {
+    let cfg = cfg(20_000);
+    let bs = batches(20_000, 6, 64, 3);
+    for workers in [2usize, 4] {
+        let (_, _, rep_bytes) = run(&cfg, &bs, workers, Placement::Replicated);
+        let (_, _, plan_bytes) = run(&cfg, &bs, workers, Placement::Plan);
+        assert!(
+            plan_bytes > 0 && plan_bytes < rep_bytes,
+            "workers={workers}: plan payload {plan_bytes} !< replicated {rep_bytes}"
+        );
+    }
+}
+
+/// Degenerate routing: every sample shares one TT prefix, so plan
+/// placement routes the whole batch to one worker and the others run
+/// empty shards (weight 0) — training must survive and still match the
+/// single-engine trajectory.
+#[test]
+fn plan_placement_survives_empty_shards() {
+    let cfg = cfg(1500);
+    let mut bs = batches(1500, 6, 16, 3);
+    for b in bs.iter_mut() {
+        for r in 0..b.batch_size {
+            b.sparse[r * 2] = 7; // constant row => one owner for everyone
+        }
+    }
+    let mut engine = NativeDlrm::new(cfg.clone(), &mut Rng::new(9));
+    let direct: Vec<f32> = bs.iter().map(|b| engine.train_step(b)).collect();
+    let (losses, _, _) = run(&cfg, &bs, 3, Placement::Plan);
+    assert_eq!(losses.len(), direct.len());
+    for (&dp, &gb) in losses.iter().zip(&direct) {
+        assert!(dp.is_finite());
+        // one worker holds the whole batch: its step IS the global step
+        let tol = 3e-3 * gb.abs().max(0.2);
+        assert!((dp - gb).abs() <= tol, "degenerate routing drifted: {dp} vs {gb}");
+    }
+}
+
+/// Clamping: more workers than samples must not hand any engine an
+/// empty contiguous shard.
+#[test]
+fn replicated_clamps_workers_below_tiny_batches() {
+    let cfg = cfg(1500);
+    let bs = batches(1500, 4, 2, 3);
+    let report = train_data_parallel(cfg, &bs, 6, zero_cost(), 9);
+    assert_eq!(report.workers, 2, "6 workers over 2-sample batches must clamp");
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+}
+
+/// AllReduce multi-round determinism under uneven arrival order: workers
+/// arrive at each round staggered differently, yet every round's result
+/// is the exact weighted mean (values and weights chosen exact in f32).
+#[test]
+fn allreduce_multi_round_uneven_arrival() {
+    let n = 3;
+    let rounds = 5;
+    let ar = AllReduce::new(n, 4, zero_cost());
+    let handles: Vec<_> = (0..n)
+        .map(|w| {
+            let ar = ar.clone();
+            std::thread::spawn(move || {
+                let mut out = Vec::new();
+                for r in 0..rounds {
+                    // rotate which worker arrives last each round
+                    let delay_ms = ((w + r) % n) as u64 * 7;
+                    std::thread::sleep(Duration::from_millis(delay_ms));
+                    // weights 1, 2, 1 (sum 4); values (w+1)*(r+1)
+                    let weight = if w == 1 { 2.0f32 } else { 1.0 };
+                    let mut v = vec![((w + 1) * (r + 1)) as f32; 4];
+                    ar.allreduce_weighted(w, &mut v, weight);
+                    out.push(v);
+                }
+                out
+            })
+        })
+        .collect();
+    for h in handles {
+        let rows = h.join().unwrap();
+        for (r, v) in rows.iter().enumerate() {
+            // (1*1 + 2*2 + 1*3)/4 * (r+1) = 2*(r+1), exact in f32
+            let want = 2.0 * (r + 1) as f32;
+            assert_eq!(v, &vec![want; 4], "round {r} drifted under uneven arrival");
+        }
+    }
+}
