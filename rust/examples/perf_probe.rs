@@ -14,7 +14,7 @@
 use std::time::Instant;
 
 use recad::access::{replay_fill, run_prefetched_fill, AccessCfg, AccessPlanner, BatchPlan};
-use recad::bench_support::{bench_workers, write_bench_json, BenchArm};
+use recad::bench_support::{arm_extra, bench_workers, write_bench_json, BenchArm};
 use recad::coordinator::data_parallel::{train_data_parallel_placed, DpCfg, Placement};
 use recad::coordinator::engine::{EngineCfg, NativeDlrm};
 use recad::coordinator::platform::SimPlatform;
@@ -26,7 +26,7 @@ use recad::data::zipf::{GradualDriftZipf, GrowingVocabZipf, Zipf};
 use recad::exec::ExecCfg;
 use recad::powersys::dataset::{generate, DatasetCfg, SparseVocab};
 use recad::tt::shapes::TtShapes;
-use recad::tt::table::{EffTtOptions, EffTtTable, TtScratch};
+use recad::tt::table::{EffTtOptions, EffTtTable, QuantizeMode, TtScratch};
 use recad::util::prng::Rng;
 
 fn smoke() -> bool {
@@ -336,9 +336,16 @@ fn placement_arms() -> Vec<BenchArm> {
     let planner = AccessPlanner::for_engine_cfg(&cfg);
     let cost = SimPlatform::v100(4).cost;
     let mut arms = Vec::new();
-    for placement in [Placement::Replicated, Placement::Plan] {
+    // (arm tag, placement, quantized exchange): replicated + plan f32,
+    // plus the int8 sparse exchange arm on top of plan placement
+    let configs = [
+        ("replicated", Placement::Replicated, false),
+        ("plan", Placement::Plan, false),
+        ("plan_q8", Placement::Plan, true),
+    ];
+    for (tag, placement, quantize_comm) in configs {
         for workers in [1usize, 2, 4] {
-            let dp = DpCfg { workers, placement, cost, seed: 5 };
+            let dp = DpCfg { workers, placement, cost, seed: 5, quantize_comm };
             let mut iters = Vec::new();
             let mut payload = 0u64;
             for _ in 0..rounds {
@@ -348,30 +355,25 @@ fn placement_arms() -> Vec<BenchArm> {
                 payload = r.payload_bytes;
             }
             arms.push(
-                BenchArm::from_iters(
-                    format!("dp_{}_w{workers}", placement.as_str()),
-                    workers,
-                    &iters,
-                    batch,
-                )
-                .with_extra("payload_bytes", payload as f64),
+                BenchArm::from_iters(format!("dp_{tag}_w{workers}"), workers, &iters, batch)
+                    .with_extra("payload_bytes", payload as f64),
             );
         }
     }
-    let payload_of = |name: &str| {
-        arms.iter()
-            .find(|a| a.name == name)
-            .and_then(|a| a.extra.iter().find(|(k, _)| k == "payload_bytes"))
-            .map(|(_, v)| *v)
-            .unwrap_or(-1.0)
-    };
+    let payload_of = |name: &str| arm_extra(&arms, name, "payload_bytes").unwrap_or(-1.0);
     for workers in [2usize, 4] {
         let rep = payload_of(&format!("dp_replicated_w{workers}"));
         let plan = payload_of(&format!("dp_plan_w{workers}"));
+        let q8 = payload_of(&format!("dp_plan_q8_w{workers}"));
         assert!(
             plan > 0.0 && rep > 0.0 && plan < rep,
             "plan-placed payload must be strictly below replicated at \
              workers={workers}: plan {plan} vs replicated {rep}"
+        );
+        assert!(
+            q8 > 0.0 && q8 < plan,
+            "int8 sparse exchange must be strictly below f32 sparse at \
+             workers={workers}: q8 {q8} vs plan {plan}"
         );
     }
     arms
@@ -429,6 +431,132 @@ fn serving_arms() -> Vec<BenchArm> {
             ));
         }
     }
+    arms
+}
+
+/// Quantized-fast-path arms (BENCH_quantized_path.json): serving at the
+/// IEEE-118 scale with f32 vs f16 vs int8 frozen cores — closed-loop TPS
+/// and open-loop attack-window percentiles — each carrying its frozen
+/// `model_bytes`, plus the training exchange twins: the f32 sparse
+/// all-reduce vs the int8+error-feedback one at 2 workers, each carrying
+/// `payload_bytes`.  The probe asserts the byte orderings the fast path
+/// exists for (int8 < f16 < f32 model bytes; q8 < f32 exchange payload).
+fn quantized_path_arms() -> Vec<BenchArm> {
+    let (requests, rounds, rate) = if smoke() { (48, 2, 800.0) } else { (300, 3, 2500.0) };
+    let (n_normal, n_attack, epochs) = if smoke() { (400, 100, 1) } else { (1500, 375, 2) };
+    let ds = generate(&DatasetCfg {
+        n_normal,
+        n_attack,
+        vocab: SparseVocab::ieee118(1.0 / 2000.0),
+        n_profiles: 50,
+        noise_std: 0.005,
+        seed: 29,
+    });
+    let (_, engine, planner) =
+        train_ieee118_full(engine_cfg(1), &AccessCfg::default(), &ds, epochs, 64, 5);
+    let base = ServeSession::from_trained(engine.clone(), planner);
+    let stream = &ds.samples[..requests.min(ds.samples.len())];
+    let replicas = 2usize;
+    let mut arms = Vec::new();
+    let mut model_bytes_of = Vec::new();
+    for mode in [QuantizeMode::Off, QuantizeMode::F16, QuantizeMode::Int8] {
+        let model_bytes = {
+            let mut frozen = engine.clone();
+            frozen.freeze_quantized(mode);
+            frozen.model_bytes() as f64
+        };
+        model_bytes_of.push(model_bytes);
+        let mut iters = Vec::new();
+        for _ in 0..rounds {
+            let server = base.clone().replicas(replicas).quantize(mode).start();
+            let r = server.run_stream_concurrent(stream, 0, replicas * 2);
+            iters.push(r.wall.as_secs_f64() / r.served.max(1) as f64);
+        }
+        arms.push(
+            BenchArm::from_iters(
+                format!("serve_closed_{}_r{replicas}", mode.as_str()),
+                replicas,
+                &iters,
+                1,
+            )
+            .with_extra("model_bytes", model_bytes),
+        );
+        let server = base.clone().replicas(replicas).quantize(mode).start();
+        let ol = run_open_loop(server, stream, &OpenLoopCfg { rate_per_sec: rate, seed: 17 });
+        arms.push(
+            BenchArm::from_iters(
+                format!("serve_open_{}_r{replicas}", mode.as_str()),
+                replicas,
+                &ol.window_samples,
+                1,
+            )
+            .with_extra("model_bytes", model_bytes),
+        );
+    }
+    assert!(
+        model_bytes_of[2] < model_bytes_of[1] && model_bytes_of[1] < model_bytes_of[0],
+        "frozen model bytes must order int8 < f16 < f32: {model_bytes_of:?}"
+    );
+
+    // training exchange twins: plan-placed sparse all-reduce, f32 vs int8
+    // with error feedback, on a TT workload at 2 workers
+    let (vocab, batch, n_batches) = if smoke() {
+        (10_000u64, 64usize, 4usize)
+    } else {
+        (60_000, 256, 8)
+    };
+    let cfg = EngineCfg {
+        dense_dim: 4,
+        emb_dim: 16,
+        tables: vec![(vocab, true), (118, false)],
+        tt_rank: 8,
+        bot_hidden: vec![32],
+        top_hidden: vec![32],
+        lr: 0.05,
+        tt_opts: EffTtOptions::default(),
+        exec: ExecCfg::serial(),
+    };
+    let z = Zipf::new(vocab, 1.2);
+    let mut rng = Rng::new(31);
+    let batches: Vec<Batch> = (0..n_batches)
+        .map(|_| {
+            let mut dense = vec![0.0f32; batch * 4];
+            rng.fill_normal(&mut dense, 0.0, 1.0);
+            let sparse: Vec<u64> =
+                (0..batch).flat_map(|_| [z.sample(&mut rng), rng.below(118)]).collect();
+            let labels: Vec<f32> =
+                (0..batch).map(|_| if rng.coin(0.3) { 1.0 } else { 0.0 }).collect();
+            Batch { dense, sparse, labels, batch_size: batch }
+        })
+        .collect();
+    let dp_planner = AccessPlanner::for_engine_cfg(&cfg);
+    let cost = SimPlatform::v100(2).cost;
+    for (tag, quantize_comm) in [("f32", false), ("q8", true)] {
+        let dp = DpCfg {
+            workers: 2,
+            placement: Placement::Plan,
+            cost,
+            seed: 5,
+            quantize_comm,
+        };
+        let mut iters = Vec::new();
+        let mut payload = 0u64;
+        for _ in 0..rounds {
+            let (r, _) = train_data_parallel_placed(cfg.clone(), &dp_planner, &batches, &dp);
+            iters.push(r.wall.as_secs_f64() / r.steps as f64);
+            payload = r.payload_bytes;
+        }
+        arms.push(
+            BenchArm::from_iters(format!("allreduce_sparse_{tag}_w2"), 2, &iters, batch)
+                .with_extra("payload_bytes", payload as f64),
+        );
+    }
+    let f32_payload = arm_extra(&arms, "allreduce_sparse_f32_w2", "payload_bytes").unwrap();
+    let q8_payload = arm_extra(&arms, "allreduce_sparse_q8_w2", "payload_bytes").unwrap();
+    assert!(
+        q8_payload > 0.0 && q8_payload < f32_payload,
+        "q8 exchange payload {q8_payload} must be strictly below f32 {f32_payload}"
+    );
     arms
 }
 
@@ -616,6 +744,40 @@ fn main() {
             rp / pp.max(1.0),
         );
     }
+    for workers in [2usize, 4] {
+        let (_, fp) = stat(&format!("dp_plan_w{workers}"));
+        let (_, qp) = stat(&format!("dp_plan_q8_w{workers}"));
+        println!(
+            "dp w{workers}: q8 exchange {:.1} KB vs f32 sparse {:.1} KB \
+             ({:.2}x less traffic)",
+            qp / 1e3,
+            fp / 1e3,
+            fp / qp.max(1.0),
+        );
+    }
     let dp_path = write_bench_json("device_placement", par, &dp_arms);
     println!("wrote {dp_path} ({} arms, JSON round-trip checked)", dp_arms.len());
+
+    // ---- quantized fast path (BENCH_quantized_path.json) ----------------
+    let qp_arms = quantized_path_arms();
+    let qtps = |name: &str| {
+        qp_arms.iter().find(|a| a.name == name).map(|a| a.throughput).unwrap_or(0.0)
+    };
+    println!(
+        "serve closed r2: f32 {:.0} TPS | f16 {:.0} TPS | int8 {:.0} TPS",
+        qtps("serve_closed_off_r2"),
+        qtps("serve_closed_f16_r2"),
+        qtps("serve_closed_int8_r2"),
+    );
+    let qp99 = |name: &str| {
+        qp_arms.iter().find(|a| a.name == name).map(|a| a.p99_us).unwrap_or(0.0)
+    };
+    println!(
+        "serve open-loop p99 attack window r2: f32 {:.0}µs | f16 {:.0}µs | int8 {:.0}µs",
+        qp99("serve_open_off_r2"),
+        qp99("serve_open_f16_r2"),
+        qp99("serve_open_int8_r2"),
+    );
+    let qp_path = write_bench_json("quantized_path", par, &qp_arms);
+    println!("wrote {qp_path} ({} arms, JSON round-trip checked)", qp_arms.len());
 }

@@ -223,6 +223,16 @@ impl TtPlan {
     /// materialized independently and the scatter/apply orders are
     /// unchanged) — pinned by `tests/plan_equivalence.rs`.
     pub fn build_layout(&mut self, cache_kb: usize) {
+        self.build_layout_elem(cache_kb, 4);
+    }
+
+    /// [`TtPlan::build_layout`] with an explicit core element width in
+    /// bytes (4 = f32, 2 = f16, 1 = int8).  Quantized cores shrink the
+    /// per-row D3 slice, so more rows fit one L2 tile; the partial
+    /// product and the output row stay f32 (dequantize-in-microkernel
+    /// accumulates in f32).  `elem_bytes = 4` is exactly the historical
+    /// budget — `build_layout` delegates here.
+    pub fn build_layout_elem(&mut self, cache_kb: usize, elem_bytes: usize) {
         self.layout_ready = false;
         self.sched.clear();
         self.slot_pos.clear();
@@ -247,12 +257,13 @@ impl TtPlan {
         order.sort_by(|&x, &y| {
             size_of(y as usize).cmp(&size_of(x as usize)).then(x.cmp(&y))
         });
-        // rows per tile: cache_kb minus the shared partial product, spread
-        // over the per-row working set (output row + D3 slice), in floats
+        // rows per tile: cache_kb minus the shared partial product (f32),
+        // spread over the per-row working set — f32 output row plus the
+        // D3 slice at the storage width — in bytes
         let plen = s.n[0] * s.n[1] * s.rank;
-        let per_row = s.dim + s.rank * s.n[2];
+        let per_row = s.dim * 4 + s.rank * s.n[2] * elem_bytes;
         let budget_rows =
-            ((cache_kb * 1024 / 4).saturating_sub(plen) / per_row.max(1)).max(8);
+            ((cache_kb * 1024).saturating_sub(plen * 4) / per_row.max(1)).max(8);
         self.sched.reserve(n_rows);
         self.tile_starts.push(0);
         let mut in_tile = 0usize;
@@ -624,6 +635,29 @@ mod tests {
         plan.build_layout(0);
         assert!(!plan.tiled());
         assert!(plan.sched().is_empty() && plan.tile_starts().is_empty());
+    }
+
+    #[test]
+    fn elem_width_aware_layout_packs_wider_tiles() {
+        let shapes = TtShapes::plan(5000, 16, 8);
+        let mut rng = Rng::new(21);
+        let idx: Vec<u64> = (0..2048).map(|_| rng.below(600)).collect();
+        let mut plan = TtPlan::default();
+        plan.build(shapes, &idx, BagLayout::Unit(idx.len()));
+        // build_layout == build_layout_elem at 4 bytes, exactly
+        plan.build_layout(2);
+        let f32_tiles: Vec<u32> = plan.tile_starts().to_vec();
+        let f32_sched: Vec<u32> = plan.sched().to_vec();
+        plan.build_layout_elem(2, 4);
+        assert_eq!(plan.tile_starts(), &f32_tiles[..]);
+        assert_eq!(plan.sched(), &f32_sched[..]);
+        // shrinking the D3 slice never cuts MORE tiles, and the schedule
+        // (hottest-first order) is width-independent
+        for eb in [2usize, 1] {
+            plan.build_layout_elem(2, eb);
+            assert!(plan.tile_starts().len() <= f32_tiles.len());
+            assert_eq!(plan.sched(), &f32_sched[..]);
+        }
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! weights with an f32 scale.  4× compression (vs Eff-TT's 5–80×) and a
 //! measurable accuracy cost — the trade-off Table I summarizes.
 
-use crate::tt::linalg::axpy;
+use crate::tt::linalg::{axpy, i8_scale, quantize_i8, Dequant, QI8};
 use crate::tt::plain::PlainTable;
 
 /// Per-row symmetric int8 embedding table.
@@ -15,19 +15,17 @@ pub struct QuantizedTable {
 }
 
 impl QuantizedTable {
-    /// Quantize an existing f32 table.
+    /// Quantize an existing f32 table (the shared `tt::linalg` int8
+    /// scheme: per-block symmetric scale, one block per row here).
     pub fn from_plain(t: &PlainTable) -> QuantizedTable {
         let (rows, dim) = (t.rows, t.dim);
         let mut q = vec![0i8; rows as usize * dim];
         let mut scale = vec![0.0f32; rows as usize];
         for r in 0..rows as usize {
             let row = &t.weights[r * dim..(r + 1) * dim];
-            let max = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-            let s = if max > 0.0 { max / 127.0 } else { 1.0 };
+            let s = i8_scale(row);
             scale[r] = s;
-            for d in 0..dim {
-                q[r * dim + d] = (row[d] / s).round().clamp(-127.0, 127.0) as i8;
-            }
+            quantize_i8(row, s, &mut q[r * dim..(r + 1) * dim]);
         }
         QuantizedTable { rows, dim, q, scale }
     }
@@ -36,13 +34,13 @@ impl QuantizedTable {
         (self.q.len() + self.scale.len() * 4) as u64
     }
 
-    /// Dequantized row materialization.
+    /// Dequantized row materialization (panics unless `out.len()` is
+    /// exactly `dim` — a short buffer used to truncate silently).
     pub fn row(&self, i: u64, out: &mut [f32]) {
         let d = self.dim;
-        let s = self.scale[i as usize];
-        for (o, &qv) in out.iter_mut().zip(&self.q[i as usize * d..(i as usize + 1) * d]) {
-            *o = qv as f32 * s;
-        }
+        assert_eq!(out.len(), d, "row buffer len {} != dim {d}", out.len());
+        let i = i as usize;
+        QI8 { q: &self.q[i * d..(i + 1) * d], scale: self.scale[i] }.dequant_into(out);
     }
 
     /// EmbeddingBag(sum) with on-the-fly dequantization.
@@ -117,6 +115,34 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert!((x - y).abs() < 0.05, "{x} vs {y}");
         }
+    }
+
+    #[test]
+    fn zero_max_row_round_trips_exact_zeros() {
+        let mut rng = Rng::new(4);
+        let mut t = PlainTable::new(8, 4, &mut rng);
+        t.weights[2 * 4..3 * 4].fill(0.0); // all-zero row => max == 0.0
+        let q = QuantizedTable::from_plain(&t);
+        let mut out = vec![1.0f32; 4];
+        q.row(2, &mut out);
+        assert_eq!(out, vec![0.0; 4], "zero row must dequantize to exact zeros");
+        // and a nonzero neighbor still round-trips within scale/2
+        q.row(3, &mut out);
+        let orig = t.row(3);
+        let max = orig.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        for (a, b) in out.iter().zip(orig) {
+            assert!((a - b).abs() <= max / 127.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "row buffer len")]
+    fn short_row_buffer_panics_instead_of_truncating() {
+        let mut rng = Rng::new(5);
+        let t = PlainTable::new(4, 8, &mut rng);
+        let q = QuantizedTable::from_plain(&t);
+        let mut short = vec![0.0f32; 4]; // != dim — used to truncate silently
+        q.row(0, &mut short);
     }
 
     /// Table I context: int8 gives 4x, Eff-TT gives far more at scale.

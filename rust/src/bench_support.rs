@@ -98,6 +98,18 @@ impl BenchArm {
     }
 }
 
+/// Look up an arm's extra scalar by arm name + key (e.g. the
+/// `payload_bytes` the placement and quantized-path arms report) — the
+/// helper benches use to assert cross-arm orderings before writing JSON.
+pub fn arm_extra(arms: &[BenchArm], name: &str, key: &str) -> Option<f64> {
+    arms.iter()
+        .find(|a| a.name == name)?
+        .extra
+        .iter()
+        .find(|(k, _)| k == key)
+        .map(|&(_, v)| v)
+}
+
 /// Write `BENCH_<bench>.json` in `perf_probe`'s schema, then parse it
 /// back with the crate's JSON parser as a self-check (the CI smoke job
 /// relies on this failing loudly on malformed output).  Returns the path.
@@ -189,6 +201,17 @@ mod tests {
         let cfg = engine_for(&s, BENCH_SCALE, 8);
         assert!(cfg.tables[0].1, "scaled 12k-row table should compress");
         assert!(!cfg.tables[2].1, "118-row table stays plain");
+    }
+
+    #[test]
+    fn arm_extra_finds_named_scalars() {
+        let arms = vec![
+            BenchArm::from_iters("a".into(), 1, &[0.5], 10).with_extra("payload_bytes", 64.0),
+            BenchArm::from_iters("b".into(), 2, &[0.5], 10),
+        ];
+        assert_eq!(arm_extra(&arms, "a", "payload_bytes"), Some(64.0));
+        assert_eq!(arm_extra(&arms, "b", "payload_bytes"), None);
+        assert_eq!(arm_extra(&arms, "c", "payload_bytes"), None);
     }
 
     #[test]

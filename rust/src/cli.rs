@@ -89,6 +89,9 @@ SUBCOMMANDS:
                --placement replicated|plan (multi-device batch routing:
                  plan routes TT prefix groups to their owning worker and
                  ships TT-core gradients as sparse (offset, delta) runs)
+               --quantize off|int8|f16 (int8 also compresses the plan-
+                 placed gradient exchange: per-run scales + error
+                 feedback on the sender)
   serve        Stream detection over a held-out sample stream
                --requests N  --threshold F
                --replicas N (detector shards; was --workers pre-redesign)
@@ -97,6 +100,8 @@ SUBCOMMANDS:
                --clients N (closed-loop concurrency; 0 = 2x replicas)
                --arrival-rate F (open-loop Poisson req/s; 0 = closed loop)
                --dispatch-us N (per-call dispatch charge)
+               --quantize off|int8|f16 (freeze TT cores into quantized
+                 tiles for serving; dequantize-in-microkernel fast path)
   gen-data     Generate and summarize the IEEE-118 FDIA dataset
                --normal N  --attack N  --seed N
   runtime      Smoke-run the PJRT artifacts (requires `make artifacts`)

@@ -12,7 +12,7 @@ use crate::coordinator::data_parallel::Placement;
 use crate::coordinator::engine::EngineCfg;
 use crate::exec::ExecCfg;
 use crate::serve::{Policy, ServeCfg};
-use crate::tt::table::EffTtOptions;
+use crate::tt::table::{EffTtOptions, QuantizeMode};
 
 /// Parsed TOML-subset document: `section.key -> value`.
 #[derive(Debug, Default)]
@@ -141,6 +141,12 @@ pub struct RecAdConfig {
     pub reuse: bool,
     pub grad_aggregation: bool,
     pub fused_update: bool,
+    /// `[tt] quantize = "off"|"int8"|"f16"` / `--quantize`: serving-mode
+    /// TT-core storage.  Serve freezes the trained cores into the chosen
+    /// format (dequantize-in-microkernel fast path); train uses it to
+    /// pick int8 gradient exchange (`int8` => quantized sparse
+    /// all-reduce under plan placement).
+    pub quantize: QuantizeMode,
     pub pipeline_lc: usize,
     /// exec-layer worker count (1 = serial; N-way intra-step parallelism
     /// is bit-identical to serial by construction).
@@ -193,6 +199,7 @@ impl Default for RecAdConfig {
             reuse: true,
             grad_aggregation: true,
             fused_update: true,
+            quantize: QuantizeMode::Off,
             pipeline_lc: 4,
             workers: 1,
             plan_ahead: AccessCfg::default().plan_ahead,
@@ -224,6 +231,8 @@ impl RecAdConfig {
             reuse: t.bool_or("tt.reuse", d.reuse),
             grad_aggregation: t.bool_or("tt.grad_aggregation", d.grad_aggregation),
             fused_update: t.bool_or("tt.fused_update", d.fused_update),
+            quantize: QuantizeMode::parse(t.str_or("tt.quantize", d.quantize.as_str()))
+                .context("[tt] quantize")?,
             pipeline_lc: t.usize_or("pipeline.lc", d.pipeline_lc),
             workers: t.usize_or("exec.workers", d.workers).max(1),
             plan_ahead: t.usize_or("access.plan_ahead", d.plan_ahead),
@@ -302,6 +311,7 @@ seed = 7
 [tt]
 rank = 16
 reorder = false
+quantize = "int8"
 
 [pipeline]
 lc = 8
@@ -339,6 +349,7 @@ arrival_rate = 1200.0
         assert_eq!(c.tt_rank, 16);
         assert!(!c.reorder);
         assert!(c.reuse); // default preserved
+        assert_eq!(c.quantize, QuantizeMode::Int8);
         assert_eq!(c.pipeline_lc, 8);
         assert_eq!(c.workers, 3);
         assert_eq!(c.devices, 4);
@@ -381,6 +392,15 @@ arrival_rate = 1200.0
     fn rejects_unknown_route_policy() {
         let t = Toml::parse("[serve]\npolicy = \"coin_flip\"\n").unwrap();
         assert!(RecAdConfig::from_toml(&t).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_quantize_mode_and_defaults_off() {
+        let t = Toml::parse("[tt]\nquantize = \"int4\"\n").unwrap();
+        assert!(RecAdConfig::from_toml(&t).is_err());
+        let t = Toml::parse("[run]\nepochs = 1\n").unwrap();
+        let c = RecAdConfig::from_toml(&t).unwrap();
+        assert_eq!(c.quantize, QuantizeMode::Off);
     }
 
     #[test]

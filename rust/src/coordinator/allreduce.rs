@@ -78,6 +78,71 @@ impl SparseDelta {
     }
 }
 
+/// int8-quantized sparse delta: the same `(offset, len)` runs as
+/// [`SparseDelta`], with per-element deltas stored as int8 against one
+/// symmetric scale **per run**, plus an error-feedback residual retained
+/// on the sender so the quantization error re-enters the next round's
+/// delta instead of being lost (keeps SGD convergence; see
+/// [`SparseDeltaQ8::from_delta`]).
+#[derive(Clone, Debug, Default)]
+pub struct SparseDeltaQ8 {
+    /// `(start, len)` runs, ascending and non-overlapping.
+    pub runs: Vec<(u32, u32)>,
+    /// Quantized deltas for every covered element, run by run.
+    pub q: Vec<i8>,
+    /// One symmetric scale per run (`q * scale` dequantizes).
+    pub scales: Vec<f32>,
+}
+
+impl SparseDeltaQ8 {
+    pub fn clear(&mut self) {
+        self.runs.clear();
+        self.q.clear();
+        self.scales.clear();
+    }
+
+    /// Quantize `delta` with error feedback: each covered element ships
+    /// `round((delta + residual) / scale)` and the sender's `residual`
+    /// keeps what the int8 grid dropped, to be carried into the next
+    /// round.  `residual` is indexed by the same flat region coordinates
+    /// as the runs; untouched positions keep their residual until their
+    /// parameter is next touched.  Buffers are reused across calls.
+    pub fn from_delta(&mut self, delta: &SparseDelta, residual: &mut [f32]) {
+        self.clear();
+        let mut k = 0usize;
+        for &(off, len) in delta.runs.iter() {
+            let (off, len) = (off as usize, len as usize);
+            assert!(off + len <= residual.len(), "residual region too small");
+            // per-run symmetric scale over the error-compensated values
+            let mut max = 0.0f32;
+            for j in 0..len {
+                max = max.max((delta.vals[k + j] + residual[off + j]).abs());
+            }
+            let scale = if max > 0.0 { max / 127.0 } else { 1.0 };
+            for j in 0..len {
+                let v = delta.vals[k + j] + residual[off + j];
+                let q = (v / scale).round().clamp(-127.0, 127.0) as i8;
+                residual[off + j] = v - q as f32 * scale;
+                self.q.push(q);
+            }
+            self.runs.push((off as u32, len as u32));
+            self.scales.push(scale);
+            k += len;
+        }
+        debug_assert_eq!(k, delta.vals.len());
+    }
+
+    /// Wire size: 8 bytes per run header + 4 per run scale + 1 per
+    /// quantized element.
+    pub fn payload_bytes(&self) -> u64 {
+        (self.runs.len() * 8 + self.scales.len() * 4 + self.q.len()) as u64
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+}
+
 #[derive(Default)]
 struct DenseSlot {
     weight: f32,
@@ -91,6 +156,13 @@ struct SparseSlot {
     bytes: u64,
 }
 
+#[derive(Default)]
+struct SparseQSlot {
+    weight: f32,
+    delta: SparseDeltaQ8,
+    bytes: u64,
+}
+
 /// Shared all-reduce context for `n` workers.
 pub struct AllReduce {
     n: usize,
@@ -98,6 +170,7 @@ pub struct AllReduce {
     barrier: Barrier,
     dense: Vec<Mutex<DenseSlot>>,
     sparse: Vec<Mutex<SparseSlot>>,
+    sparse_q: Vec<Mutex<SparseQSlot>>,
 }
 
 impl AllReduce {
@@ -110,6 +183,7 @@ impl AllReduce {
                 .map(|_| Mutex::new(DenseSlot { weight: 0.0, buf: Vec::with_capacity(len) }))
                 .collect(),
             sparse: (0..n).map(|_| Mutex::new(SparseSlot::default())).collect(),
+            sparse_q: (0..n).map(|_| Mutex::new(SparseQSlot::default())).collect(),
         })
     }
 
@@ -215,6 +289,65 @@ impl AllReduce {
                 let off = off as usize;
                 for j in 0..len as usize {
                     region[off + j] += slot.delta.vals[k] * scale;
+                    k += 1;
+                }
+            }
+        }
+        self.barrier.wait();
+        total
+    }
+
+    /// Quantized twin of [`allreduce_sparse`]: workers ship int8 runs
+    /// with one f32 scale per run (≈4× fewer wire bytes than the f32
+    /// deltas on run-dominated payloads).  The deposit/merge protocol —
+    /// per-worker slots, barrier, two fixed-order passes, barrier — is
+    /// identical, so the result is identical bits on every worker; the
+    /// *values* differ from the f32 exchange only by the per-element
+    /// quantization error, which the sender retains as error-feedback
+    /// residual (see [`SparseDeltaQ8::from_delta`]) so it re-enters its
+    /// next delta rather than compounding.  Returns the round's total
+    /// payload bytes (identical on every worker).
+    pub fn allreduce_sparse_q8(
+        &self,
+        w: usize,
+        region: &mut [f32],
+        delta: &SparseDeltaQ8,
+        weight: f32,
+    ) -> u64 {
+        let own_bytes = delta.payload_bytes();
+        SimPlatform::charge(self.cost.allreduce_time(own_bytes, self.n));
+        {
+            let mut slot = self.sparse_q[w].lock().unwrap();
+            slot.weight = weight;
+            slot.bytes = own_bytes;
+            slot.delta.runs.clear();
+            slot.delta.runs.extend_from_slice(&delta.runs);
+            slot.delta.q.clear();
+            slot.delta.q.extend_from_slice(&delta.q);
+            slot.delta.scales.clear();
+            slot.delta.scales.extend_from_slice(&delta.scales);
+        }
+        self.barrier.wait();
+        // pass 1: total weight + payload (fixed order, identical everywhere)
+        let mut wsum = 0.0f32;
+        let mut total = 0u64;
+        for ws in 0..self.n {
+            let slot = self.sparse_q[ws].lock().unwrap();
+            wsum += slot.weight;
+            total += slot.bytes;
+        }
+        // pass 2: dequantize-and-apply onto the common base, in
+        // worker-index order
+        let inv = 1.0 / wsum;
+        for ws in 0..self.n {
+            let slot = self.sparse_q[ws].lock().unwrap();
+            let wscale = slot.weight * inv;
+            let mut k = 0usize;
+            for (ri, &(off, len)) in slot.delta.runs.iter().enumerate() {
+                let off = off as usize;
+                let s = slot.delta.scales[ri] * wscale;
+                for j in 0..len as usize {
+                    region[off + j] += slot.delta.q[k] as f32 * s;
                     k += 1;
                 }
             }
@@ -357,6 +490,114 @@ mod tests {
         }
         assert_eq!(bytes_seen[0], bytes_seen[1], "payload total must agree");
         assert!(bytes_seen[0] > 0);
+    }
+
+    #[test]
+    fn q8_payload_strictly_below_f32_payload() {
+        // one 16-element run: f32 = 8 + 64 bytes; q8 = 8 + 4 + 16 bytes
+        let base = vec![0.0f32; 16];
+        let post: Vec<f32> = (0..16).map(|i| (i + 1) as f32 * 0.01).collect();
+        let mut d = SparseDelta::default();
+        d.diff(&base, &post);
+        let mut dq = SparseDeltaQ8::default();
+        let mut residual = vec![0.0f32; 16];
+        dq.from_delta(&d, &mut residual);
+        assert_eq!(dq.runs, d.runs);
+        assert_eq!(d.payload_bytes(), 8 + 64);
+        assert_eq!(dq.payload_bytes(), 8 + 4 + 16);
+        assert!(dq.payload_bytes() < d.payload_bytes());
+    }
+
+    #[test]
+    fn q8_error_feedback_retains_what_the_grid_drops() {
+        let base = vec![0.0f32; 4];
+        let post = vec![1.0f32, 0.003, 0.5, 0.0];
+        let mut d = SparseDelta::default();
+        d.diff(&base, &post);
+        let mut dq = SparseDeltaQ8::default();
+        let mut residual = vec![0.0f32; 4];
+        dq.from_delta(&d, &mut residual);
+        // dequantized + residual reconstructs the exact delta
+        let mut k = 0usize;
+        for (ri, &(off, len)) in dq.runs.iter().enumerate() {
+            for j in 0..len as usize {
+                let deq = dq.q[k] as f32 * dq.scales[ri];
+                let exact = post[off as usize + j] - base[off as usize + j];
+                assert!(
+                    (deq + residual[off as usize + j] - exact).abs() < 1e-6,
+                    "elem {j}: {deq} + residual != {exact}"
+                );
+                k += 1;
+            }
+        }
+        // the tiny element really was rounded — residual is nonzero there
+        assert!(residual[1] != 0.0, "expected quantization error on 0.003");
+        // a second round with zero new delta flushes the residual out
+        let mut d2 = SparseDelta::default();
+        d2.runs = d.runs.clone();
+        d2.vals = vec![0.0; d.vals.len()];
+        let before = residual.clone();
+        let mut dq2 = SparseDeltaQ8::default();
+        dq2.from_delta(&d2, &mut residual);
+        let deq1 = dq2.q[1] as f32 * dq2.scales[0];
+        assert!((deq1 + residual[1] - before[1]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn q8_all_zero_run_round_trips_zeros() {
+        let mut d = SparseDelta::default();
+        d.runs = vec![(2, 3)];
+        d.vals = vec![0.0; 3];
+        let mut dq = SparseDeltaQ8::default();
+        let mut residual = vec![0.0f32; 8];
+        dq.from_delta(&d, &mut residual);
+        assert_eq!(dq.scales, vec![1.0]);
+        assert_eq!(dq.q, vec![0, 0, 0]);
+        assert!(residual.iter().all(|&r| r == 0.0));
+    }
+
+    #[test]
+    fn q8_exchange_close_to_f32_exchange() {
+        // same deposit/merge protocol as the f32 sparse path; values may
+        // differ only by the int8 grid (≤ max|v|/127 per element per
+        // worker), and the totals must agree across workers
+        let n = 2;
+        let base = vec![10.0f32, 20.0, 30.0, 40.0];
+        let posts = [vec![12.0f32, 20.0, 34.0, 40.0], vec![10.0f32, 24.0, 38.0, 40.0]];
+        let weights = [1.0f32, 3.0];
+        let ar = AllReduce::new(n, 4, cost());
+        let handles: Vec<_> = (0..n)
+            .map(|w| {
+                let ar = ar.clone();
+                let base = base.clone();
+                let post = posts[w].clone();
+                let weight = weights[w];
+                std::thread::spawn(move || {
+                    let mut delta = SparseDelta::default();
+                    delta.diff(&base, &post);
+                    let mut dq = SparseDeltaQ8::default();
+                    let mut residual = vec![0.0f32; 4];
+                    dq.from_delta(&delta, &mut residual);
+                    let mut region = base.clone();
+                    let bytes = ar.allreduce_sparse_q8(w, &mut region, &dq, weight);
+                    (region, bytes, delta.payload_bytes())
+                })
+            })
+            .collect();
+        let want: Vec<f32> = (0..4)
+            .map(|i| (posts[0][i] + 3.0 * posts[1][i]) / 4.0)
+            .collect();
+        let mut seen = Vec::new();
+        for h in handles {
+            let (region, bytes, f32_bytes) = h.join().unwrap();
+            for (got, expect) in region.iter().zip(&want) {
+                // deltas are ≤ 8 in magnitude -> grid step ≤ 8/127
+                assert!((got - expect).abs() < 0.07, "{got} vs {expect}");
+            }
+            assert!(bytes < f32_bytes, "q8 {bytes} not below f32 {f32_bytes}");
+            seen.push((region, bytes));
+        }
+        assert_eq!(seen[0], seen[1], "workers must agree bit-for-bit");
     }
 
     #[test]

@@ -44,7 +44,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::access::planner::{AccessPlanner, PlacementMap};
-use crate::coordinator::allreduce::{AllReduce, SparseDelta};
+use crate::coordinator::allreduce::{AllReduce, SparseDelta, SparseDeltaQ8};
 use crate::coordinator::engine::{EngineCfg, NativeDlrm, TableSlot};
 use crate::coordinator::platform::CostModel;
 use crate::data::ctr::Batch;
@@ -87,6 +87,12 @@ pub struct DpCfg {
     pub cost: CostModel,
     /// Replica init seed (identical across workers by construction).
     pub seed: u64,
+    /// Ship the plan-placed TT delta runs int8-quantized (per-run
+    /// symmetric scales, error-feedback residual retained on the sender
+    /// so dropped mass re-enters the next step's delta).  Only the Plan
+    /// placement at n > 1 exchanges sparse runs, so this is a no-op for
+    /// Replicated and single-worker runs.
+    pub quantize_comm: bool,
 }
 
 #[derive(Debug)]
@@ -296,7 +302,13 @@ pub fn train_data_parallel(
     seed: u64,
 ) -> DataParallelReport {
     let planner = AccessPlanner::for_engine_cfg(&cfg);
-    let dp = DpCfg { workers: n_workers, placement: Placement::Replicated, cost, seed };
+    let dp = DpCfg {
+        workers: n_workers,
+        placement: Placement::Replicated,
+        cost,
+        seed,
+        quantize_comm: false,
+    };
     train_data_parallel_placed(cfg, &planner, batches, &dp).0
 }
 
@@ -350,6 +362,11 @@ pub fn train_data_parallel_placed(
                     let mut base = vec![0.0f32; tt_len];
                     let mut post = vec![0.0f32; tt_len];
                     let mut delta = SparseDelta::default();
+                    // error-feedback state for quantized comm: residual
+                    // persists across steps so quantization error is
+                    // re-injected instead of lost
+                    let mut qdelta = SparseDeltaQ8::default();
+                    let mut residual = vec![0.0f32; if dp.quantize_comm { tt_len } else { 0 }];
                     let mut my: Vec<(f32, u32)> = Vec::with_capacity(batches.len());
                     let mut bytes = 0u64;
                     for (bi, batch) in batches.iter().enumerate() {
@@ -390,8 +407,12 @@ pub fn train_data_parallel_placed(
                                 unflatten_dense(&mut engine, &dense);
                                 flatten_tt(&engine, &mut post);
                                 delta.diff(&base, &post);
-                                let round =
-                                    ar.allreduce_sparse(w, &mut base, &delta, weight);
+                                let round = if dp.quantize_comm {
+                                    qdelta.from_delta(&delta, &mut residual);
+                                    ar.allreduce_sparse_q8(w, &mut base, &qdelta, weight)
+                                } else {
+                                    ar.allreduce_sparse(w, &mut base, &delta, weight)
+                                };
                                 unflatten_tt(&mut engine, &base);
                                 if w == 0 {
                                     bytes += round + (n * dense_len * 4) as u64;
@@ -545,6 +566,38 @@ mod tests {
         let mut flat_c = Vec::new();
         flatten(&c, &mut flat_c);
         assert_eq!(flat, flat_c, "dense+tt split must reassemble the full vector");
+    }
+
+    #[test]
+    fn quantized_comm_shrinks_payload_and_still_learns() {
+        let (cfg, batches) = setup();
+        let planner = AccessPlanner::for_engine_cfg(&cfg);
+        let mk = |q: bool| DpCfg {
+            workers: 2,
+            placement: Placement::Plan,
+            cost: zero_cost(),
+            seed: 5,
+            quantize_comm: q,
+        };
+        let (f32_rep, _) =
+            train_data_parallel_placed(cfg.clone(), &planner, &batches, &mk(false));
+        let (q8_rep, _) =
+            train_data_parallel_placed(cfg, &planner, &batches, &mk(true));
+        assert!(
+            q8_rep.payload_bytes < f32_rep.payload_bytes,
+            "q8 {} must undercut f32 sparse {}",
+            q8_rep.payload_bytes,
+            f32_rep.payload_bytes
+        );
+        let head = q8_rep.losses[0];
+        let tail = q8_rep.losses[q8_rep.losses.len() - 1];
+        assert!(tail < head, "no learning under q8 comm: {head} -> {tail}");
+        // error feedback keeps the trajectories close, not identical
+        let f32_tail = f32_rep.losses[f32_rep.losses.len() - 1];
+        assert!(
+            (tail - f32_tail).abs() < 0.1,
+            "q8 tail loss {tail} drifted from f32 {f32_tail}"
+        );
     }
 
     #[test]

@@ -16,7 +16,7 @@ use crate::exec::{ExecCfg, ExecPool};
 use crate::tt::linalg::{axpy, gemm_acc, gemm_bt_acc};
 use crate::tt::plain::PlainTable;
 use crate::tt::shapes::TtShapes;
-use crate::tt::table::{EffTtOptions, EffTtTable, TtScratch};
+use crate::tt::table::{EffTtOptions, EffTtTable, QuantizeMode, TtScratch};
 use crate::util::prng::Rng;
 
 /// One dense layer (row-major weights [din, dout]).
@@ -273,6 +273,17 @@ impl NativeDlrm {
 
     pub fn workers(&self) -> usize {
         self.pool.workers()
+    }
+
+    /// Freeze (or thaw, with [`QuantizeMode::Off`]) every TT table into
+    /// the quantized serving representation.  Plain slots are untouched.
+    /// A frozen engine is forward-only; training panics until thawed.
+    pub fn freeze_quantized(&mut self, mode: QuantizeMode) {
+        for t in &mut self.tables {
+            if let TableSlot::Tt(tt) = t {
+                tt.freeze_quantized(mode);
+            }
+        }
     }
 
     /// Total embedding-parameter bytes (Table IV / VI accounting).

@@ -14,6 +14,7 @@ use recad::data::schema;
 use recad::powersys::dataset::{generate, DatasetCfg, SparseVocab};
 use recad::runtime::{Artifacts, DlrmTrainStep, TtLookupExe};
 use recad::serve::{run_open_loop, OpenLoopCfg, Policy, ServeSession};
+use recad::tt::table::QuantizeMode;
 use recad::util::bench::{fmt_bytes, fmt_dur, Table};
 use recad::util::prng::Rng;
 
@@ -68,6 +69,9 @@ fn load_config(cli: &Cli) -> Result<RecAdConfig> {
     cfg.devices = cli.usize_or("devices", cfg.devices)?.max(1);
     if let Some(p) = cli.opt("placement") {
         cfg.placement = Placement::parse(p)?;
+    }
+    if let Some(q) = cli.opt("quantize") {
+        cfg.quantize = QuantizeMode::parse(q)?;
     }
     if cli.flag("online-reorder") {
         cfg.online_reorder = true;
@@ -159,11 +163,25 @@ fn cmd_train(cli: &Cli) -> Result<()> {
         }
         let mut ecfg = cfg.engine_cfg();
         ecfg.exec = recad::exec::ExecCfg::serial();
+        // --quantize int8 under plan placement compresses the gradient
+        // exchange; f16 has no wire format (serving-only) — say so.
+        let quantize_comm = match cfg.quantize {
+            QuantizeMode::Int8 => cfg.placement == Placement::Plan,
+            QuantizeMode::F16 => {
+                eprintln!(
+                    "warning: --quantize f16 is serving-only; training \
+                     exchanges stay f32 (use int8 for quantized comm)"
+                );
+                false
+            }
+            QuantizeMode::Off => false,
+        };
         let dp = DpCfg {
             workers: cfg.devices,
             placement: cfg.placement,
             cost: SimPlatform::v100(cfg.devices).cost,
             seed: cfg.seed,
+            quantize_comm,
         };
         let (report, _engine, eval) =
             trainer::train_ieee118_dp(ecfg, &ds, cfg.epochs, cfg.batch_size, &dp);
@@ -260,10 +278,24 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let (report, engine, planner) =
         trainer::train_ieee118_full(cfg.engine_cfg(), &access, &ds, 2, 64, cfg.seed);
     print_eval(&report.eval);
-    let model_bytes = engine.model_bytes();
+    // report the footprint actually served: frozen tiles when quantizing
+    let model_bytes = if cfg.quantize != QuantizeMode::Off {
+        let mut frozen = engine.clone();
+        frozen.freeze_quantized(cfg.quantize);
+        println!(
+            "serving with {} quantized TT cores ({} vs {} f32)",
+            cfg.quantize.as_str(),
+            fmt_bytes(frozen.model_bytes()),
+            fmt_bytes(engine.model_bytes()),
+        );
+        frozen.model_bytes()
+    } else {
+        engine.model_bytes()
+    };
     let session = ServeSession::from_trained(engine, planner)
         .threshold(threshold)
-        .with_cfg(&scfg);
+        .with_cfg(&scfg)
+        .quantize(cfg.quantize);
     let stream = &ds.samples[..requests.min(ds.samples.len())];
     if scfg.arrival_rate > 0.0 {
         // open loop: Poisson arrivals, attack-window accounting

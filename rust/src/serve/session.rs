@@ -24,6 +24,7 @@ use std::time::Duration;
 
 use crate::access::AccessPlanner;
 use crate::coordinator::engine::NativeDlrm;
+use crate::tt::table::QuantizeMode;
 use crate::serve::detector::Detector;
 use crate::serve::router::{LeastQueued, PlanAffinity, Policy, RoundRobin, RoutePolicy};
 use crate::serve::server::StreamingServer;
@@ -89,6 +90,7 @@ pub struct ServeSession {
     deadline: Duration,
     dispatch: Duration,
     policy: Policy,
+    quantize: QuantizeMode,
 }
 
 impl ServeSession {
@@ -107,6 +109,7 @@ impl ServeSession {
             deadline: Duration::ZERO,
             dispatch: Duration::ZERO,
             policy: Policy::RoundRobin,
+            quantize: QuantizeMode::Off,
         }
     }
 
@@ -153,6 +156,16 @@ impl ServeSession {
         self
     }
 
+    /// Quantized serving mode (`[tt] quantize` / `--quantize`; default
+    /// off).  On [`ServeSession::start`] every TT table is frozen into
+    /// int8 or f16 core tiles and scored through the dequantize-in-
+    /// microkernel fast path — a serving-only representation; the engine
+    /// inside the server can no longer train.
+    pub fn quantize(mut self, mode: QuantizeMode) -> ServeSession {
+        self.quantize = mode;
+        self
+    }
+
     /// Apply a `[serve]` config section (replicas, batching + deadline,
     /// policy, dispatch).  Loop shape (`clients` / `arrival_rate`) stays
     /// with the driver — see [`ServeCfg::effective_clients`] and
@@ -168,6 +181,11 @@ impl ServeSession {
     /// Spawn the replica workers and return the running server.
     pub fn start(mut self) -> StreamingServer {
         let n = self.replicas;
+        // Freeze before cloning replicas so all of them share the same
+        // quantized tiles (quantize once, not once per replica).
+        if self.quantize != QuantizeMode::Off {
+            self.engine.freeze_quantized(self.quantize);
+        }
         // Replica-level sharding: pin each replica's intra-step pool to 1
         // so N replicas don't fan out to N×workers threads.
         self.engine.set_workers(1);

@@ -199,6 +199,344 @@ pub fn gemm_at_tiled(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n:
     }
 }
 
+/// Output-column lane width of the portable wide kernels: 8 f32s = one
+/// AVX register (two NEON registers).  Fixed-trip loops over local arrays
+/// of this width give LLVM full-width vector ops without `std::arch`.
+pub const LANES: usize = 8;
+
+/// Wide-lane [`gemm_acc_ku`]: the same k-unrolled tile microkernel with
+/// the j-loop advanced `LANES` output columns at a time.  Each output
+/// element still accumulates its four k-terms in ascending order with one
+/// `+=` per term (no FMA, no reassociation) — lanes only change *which
+/// elements step together*, never any element's op sequence — so the
+/// result is **bit-identical** to [`gemm_acc_ku`] (hence to [`gemm_acc`]).
+/// With the off-by-default `simd` cargo feature on x86_64, an AVX
+/// `std::arch` path is selected at runtime; it uses mul-then-add (never
+/// FMA), which is IEEE-identical per lane to the scalar sequence.
+#[inline]
+pub fn gemm_acc_kuw(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if std::is_x86_feature_detected!("avx") {
+        // SAFETY: AVX availability checked on the line above.
+        unsafe { gemm_acc_ku_avx(a, b, c, m, k, n) };
+        return;
+    }
+    gemm_acc_ku_wide(a, b, c, m, k, n);
+}
+
+fn gemm_acc_ku_wide(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let k4 = k / 4 * 4;
+    let nw = n / LANES * LANES;
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut p = 0;
+        while p < k4 {
+            let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
+            if a0 != 0.0 && a1 != 0.0 && a2 != 0.0 && a3 != 0.0 {
+                let b0 = &b[p * n..(p + 1) * n];
+                let b1 = &b[(p + 1) * n..(p + 2) * n];
+                let b2 = &b[(p + 2) * n..(p + 3) * n];
+                let b3 = &b[(p + 3) * n..(p + 4) * n];
+                let mut j = 0;
+                while j < nw {
+                    let mut cv = [0.0f32; LANES];
+                    cv.copy_from_slice(&crow[j..j + LANES]);
+                    for l in 0..LANES {
+                        cv[l] += a0 * b0[j + l];
+                    }
+                    for l in 0..LANES {
+                        cv[l] += a1 * b1[j + l];
+                    }
+                    for l in 0..LANES {
+                        cv[l] += a2 * b2[j + l];
+                    }
+                    for l in 0..LANES {
+                        cv[l] += a3 * b3[j + l];
+                    }
+                    crow[j..j + LANES].copy_from_slice(&cv);
+                    j += LANES;
+                }
+                for jj in nw..n {
+                    let mut cv = crow[jj];
+                    cv += a0 * b0[jj];
+                    cv += a1 * b1[jj];
+                    cv += a2 * b2[jj];
+                    cv += a3 * b3[jj];
+                    crow[jj] = cv;
+                }
+            } else {
+                for q in 0..4 {
+                    let av = arow[p + q];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[(p + q) * n..(p + q + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+            p += 4;
+        }
+        for pp in k4..k {
+            let av = arow[pp];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[pp * n..(pp + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx")]
+unsafe fn gemm_acc_ku_avx(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,
+    };
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let k4 = k / 4 * 4;
+    let nw = n / 8 * 8;
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut p = 0;
+        while p < k4 {
+            let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
+            if a0 != 0.0 && a1 != 0.0 && a2 != 0.0 && a3 != 0.0 {
+                let b0 = &b[p * n..(p + 1) * n];
+                let b1 = &b[(p + 1) * n..(p + 2) * n];
+                let b2 = &b[(p + 2) * n..(p + 3) * n];
+                let b3 = &b[(p + 3) * n..(p + 4) * n];
+                let (v0, v1, v2, v3) = (
+                    _mm256_set1_ps(a0),
+                    _mm256_set1_ps(a1),
+                    _mm256_set1_ps(a2),
+                    _mm256_set1_ps(a3),
+                );
+                let mut j = 0;
+                while j < nw {
+                    let mut cv = _mm256_loadu_ps(crow.as_ptr().add(j));
+                    cv = _mm256_add_ps(cv, _mm256_mul_ps(v0, _mm256_loadu_ps(b0.as_ptr().add(j))));
+                    cv = _mm256_add_ps(cv, _mm256_mul_ps(v1, _mm256_loadu_ps(b1.as_ptr().add(j))));
+                    cv = _mm256_add_ps(cv, _mm256_mul_ps(v2, _mm256_loadu_ps(b2.as_ptr().add(j))));
+                    cv = _mm256_add_ps(cv, _mm256_mul_ps(v3, _mm256_loadu_ps(b3.as_ptr().add(j))));
+                    _mm256_storeu_ps(crow.as_mut_ptr().add(j), cv);
+                    j += 8;
+                }
+                for jj in nw..n {
+                    let mut cv = crow[jj];
+                    cv += a0 * b0[jj];
+                    cv += a1 * b1[jj];
+                    cv += a2 * b2[jj];
+                    cv += a3 * b3[jj];
+                    crow[jj] = cv;
+                }
+            } else {
+                for q in 0..4 {
+                    let av = arow[p + q];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[(p + q) * n..(p + q + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+            p += 4;
+        }
+        for pp in k4..k {
+            let av = arow[pp];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[pp * n..(pp + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// Wide-lane [`gemm_at_tiled`]: see [`gemm_acc_kuw`] for the lane/bit-
+/// identity argument; this is the Aᵀ-layout twin used by the tiled
+/// backward's chain hops.  **Bit-identical** to [`gemm_at_tiled`] (hence
+/// to [`gemm_at_acc`]).
+#[inline]
+pub fn gemm_at_tiledw(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if std::is_x86_feature_detected!("avx") {
+        // SAFETY: AVX availability checked on the line above.
+        unsafe { gemm_at_tiled_avx(a, b, c, m, k, n) };
+        return;
+    }
+    gemm_at_tiled_wide(a, b, c, m, k, n);
+}
+
+fn gemm_at_tiled_wide(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let k4 = k / 4 * 4;
+    let nw = n / LANES * LANES;
+    let mut p = 0;
+    while p < k4 {
+        let a0 = &a[p * m..(p + 1) * m];
+        let a1 = &a[(p + 1) * m..(p + 2) * m];
+        let a2 = &a[(p + 2) * m..(p + 3) * m];
+        let a3 = &a[(p + 3) * m..(p + 4) * m];
+        let b0 = &b[p * n..(p + 1) * n];
+        let b1 = &b[(p + 1) * n..(p + 2) * n];
+        let b2 = &b[(p + 2) * n..(p + 3) * n];
+        let b3 = &b[(p + 3) * n..(p + 4) * n];
+        for i in 0..m {
+            let (x0, x1, x2, x3) = (a0[i], a1[i], a2[i], a3[i]);
+            let crow = &mut c[i * n..(i + 1) * n];
+            if x0 != 0.0 && x1 != 0.0 && x2 != 0.0 && x3 != 0.0 {
+                let mut j = 0;
+                while j < nw {
+                    let mut cv = [0.0f32; LANES];
+                    cv.copy_from_slice(&crow[j..j + LANES]);
+                    for l in 0..LANES {
+                        cv[l] += x0 * b0[j + l];
+                    }
+                    for l in 0..LANES {
+                        cv[l] += x1 * b1[j + l];
+                    }
+                    for l in 0..LANES {
+                        cv[l] += x2 * b2[j + l];
+                    }
+                    for l in 0..LANES {
+                        cv[l] += x3 * b3[j + l];
+                    }
+                    crow[j..j + LANES].copy_from_slice(&cv);
+                    j += LANES;
+                }
+                for jj in nw..n {
+                    let mut cv = crow[jj];
+                    cv += x0 * b0[jj];
+                    cv += x1 * b1[jj];
+                    cv += x2 * b2[jj];
+                    cv += x3 * b3[jj];
+                    crow[jj] = cv;
+                }
+            } else {
+                for (xv, brow) in [(x0, b0), (x1, b1), (x2, b2), (x3, b3)] {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += xv * bv;
+                    }
+                }
+            }
+        }
+        p += 4;
+    }
+    for pp in k4..k {
+        let arow = &a[pp * m..(pp + 1) * m];
+        let brow = &b[pp * n..(pp + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx")]
+unsafe fn gemm_at_tiled_avx(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,
+    };
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let k4 = k / 4 * 4;
+    let nw = n / 8 * 8;
+    let mut p = 0;
+    while p < k4 {
+        let a0 = &a[p * m..(p + 1) * m];
+        let a1 = &a[(p + 1) * m..(p + 2) * m];
+        let a2 = &a[(p + 2) * m..(p + 3) * m];
+        let a3 = &a[(p + 3) * m..(p + 4) * m];
+        let b0 = &b[p * n..(p + 1) * n];
+        let b1 = &b[(p + 1) * n..(p + 2) * n];
+        let b2 = &b[(p + 2) * n..(p + 3) * n];
+        let b3 = &b[(p + 3) * n..(p + 4) * n];
+        for i in 0..m {
+            let (x0, x1, x2, x3) = (a0[i], a1[i], a2[i], a3[i]);
+            let crow = &mut c[i * n..(i + 1) * n];
+            if x0 != 0.0 && x1 != 0.0 && x2 != 0.0 && x3 != 0.0 {
+                let (v0, v1, v2, v3) = (
+                    _mm256_set1_ps(x0),
+                    _mm256_set1_ps(x1),
+                    _mm256_set1_ps(x2),
+                    _mm256_set1_ps(x3),
+                );
+                let mut j = 0;
+                while j < nw {
+                    let mut cv = _mm256_loadu_ps(crow.as_ptr().add(j));
+                    cv = _mm256_add_ps(cv, _mm256_mul_ps(v0, _mm256_loadu_ps(b0.as_ptr().add(j))));
+                    cv = _mm256_add_ps(cv, _mm256_mul_ps(v1, _mm256_loadu_ps(b1.as_ptr().add(j))));
+                    cv = _mm256_add_ps(cv, _mm256_mul_ps(v2, _mm256_loadu_ps(b2.as_ptr().add(j))));
+                    cv = _mm256_add_ps(cv, _mm256_mul_ps(v3, _mm256_loadu_ps(b3.as_ptr().add(j))));
+                    _mm256_storeu_ps(crow.as_mut_ptr().add(j), cv);
+                    j += 8;
+                }
+                for jj in nw..n {
+                    let mut cv = crow[jj];
+                    cv += x0 * b0[jj];
+                    cv += x1 * b1[jj];
+                    cv += x2 * b2[jj];
+                    cv += x3 * b3[jj];
+                    crow[jj] = cv;
+                }
+            } else {
+                for (xv, brow) in [(x0, b0), (x1, b1), (x2, b2), (x3, b3)] {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += xv * bv;
+                    }
+                }
+            }
+        }
+        p += 4;
+    }
+    for pp in k4..k {
+        let arow = &a[pp * m..(pp + 1) * m];
+        let brow = &b[pp * n..(pp + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
 /// Column-restricted Aᵀ·B: `block[m, j1-j0] += Aᵀ[k,m]ᵀ · B[k, j0..j1]`,
 /// where A is stored [k, m] and `block` is a private dense buffer for the
 /// column range.  The k-loop is outermost and ascending — exactly
@@ -273,6 +611,292 @@ pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
     debug_assert_eq!(y.len(), x.len());
     for (a, &b) in y.iter_mut().zip(x) {
         *a += alpha * b;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantized operands: int8 (symmetric per-block scale) and f16 (bit-cast
+// u16) views, dequantized element-by-element *inside* the kernel loops —
+// the quantized TT serving path never materializes an f32 copy of a core
+// slice larger than the [n1, R] first-hop seed.
+// ---------------------------------------------------------------------------
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even (hand-rolled; no
+/// `half` crate in offline builds).  Handles subnormals, ±inf and NaN.
+#[inline]
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 255 {
+        // inf / NaN: keep NaN-ness via a quiet payload bit
+        let m = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | m;
+    }
+    let e = exp - 127 + 15; // re-biased f16 exponent
+    if e >= 31 {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflow → signed zero
+        }
+        // subnormal: shift the implicit-1 mantissa down, round to even
+        let m = mant | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half = 1u32 << (shift - 1);
+        let mut v = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        if rem > half || (rem == half && (v & 1) == 1) {
+            v += 1;
+        }
+        return sign | v as u16;
+    }
+    // normal: round the 23-bit mantissa to 10 bits, nearest-even; a
+    // rounding carry into the exponent field is correct (may hit inf)
+    let mut v = ((e as u32) << 10) | (mant >> 13);
+    let rem = mant & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && (v & 1) == 1) {
+        v += 1;
+    }
+    sign | v as u16
+}
+
+/// IEEE 754 binary16 bits → f32 (exact; every f16 value is representable).
+#[inline]
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x03ff) as u32;
+    if exp == 0 {
+        if mant == 0 {
+            return f32::from_bits(sign); // ±0
+        }
+        // subnormal: renormalize into the f32 exponent range
+        let mut e = 113u32; // 127 - 15 + 1
+        let mut m = mant;
+        while m & 0x0400 == 0 {
+            m <<= 1;
+            e -= 1;
+        }
+        return f32::from_bits(sign | (e << 23) | ((m & 0x03ff) << 13));
+    }
+    if exp == 31 {
+        return f32::from_bits(sign | 0x7f80_0000 | (mant << 13)); // inf/NaN
+    }
+    f32::from_bits(sign | ((exp + 127 - 15) << 23) | (mant << 13))
+}
+
+/// Symmetric per-block int8 scale: `max|v| / 127`, or 1.0 for an all-zero
+/// block so zeros round-trip to exact zeros.
+#[inline]
+pub fn i8_scale(block: &[f32]) -> f32 {
+    let max = block.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if max > 0.0 {
+        max / 127.0
+    } else {
+        1.0
+    }
+}
+
+/// Quantize `block` into `out` with a symmetric scale (see [`i8_scale`]).
+#[inline]
+pub fn quantize_i8(block: &[f32], scale: f32, out: &mut [i8]) {
+    debug_assert_eq!(block.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(block) {
+        *o = (v / scale).round().clamp(-127.0, 127.0) as i8;
+    }
+}
+
+/// Read-only quantized operand, dequantized per element at the point of
+/// use inside a kernel loop.
+pub trait Dequant: Copy {
+    /// Dequantized element at flat index `i`.
+    fn at(&self, i: usize) -> f32;
+    /// Number of elements in the view.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Expand the whole view into `out` — reserved for *tiny* operands
+    /// (e.g. the [n1, R] slice seeding a TT prefix product).
+    fn dequant_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len(), "dequant_into: length mismatch");
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.at(i);
+        }
+    }
+}
+
+/// int8 block with one symmetric scale.
+#[derive(Clone, Copy)]
+pub struct QI8<'a> {
+    pub q: &'a [i8],
+    pub scale: f32,
+}
+
+impl Dequant for QI8<'_> {
+    #[inline(always)]
+    fn at(&self, i: usize) -> f32 {
+        self.q[i] as f32 * self.scale
+    }
+    #[inline(always)]
+    fn len(&self) -> usize {
+        self.q.len()
+    }
+}
+
+/// f16 block stored as raw bits.
+#[derive(Clone, Copy)]
+pub struct QF16<'a> {
+    pub h: &'a [u16],
+}
+
+impl Dequant for QF16<'_> {
+    #[inline(always)]
+    fn at(&self, i: usize) -> f32 {
+        f16_bits_to_f32(self.h[i])
+    }
+    #[inline(always)]
+    fn len(&self) -> usize {
+        self.h.len()
+    }
+}
+
+/// [`gemm_acc`] with a quantized B, dequantized inside the j-loop.  Same
+/// i-k-j order and `av == 0.0` skip as the f32 kernel.
+#[inline]
+pub fn gemm_acc_q<B: Dequant>(a: &[f32], b: B, c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let boff = p * n;
+            for (j, cv) in crow.iter_mut().enumerate() {
+                *cv += av * b.at(boff + j);
+            }
+        }
+    }
+}
+
+/// [`gemm_acc_ku`] with a quantized B — the hop-2 tile microkernel of the
+/// quantized serving walk.  Same quad structure, zero-skip fallback and
+/// per-element accumulation order as the f32 kernel; B values are
+/// dequantized at the point of use inside the j-loop.
+#[inline]
+pub fn gemm_acc_ku_q<B: Dequant>(a: &[f32], b: B, c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let k4 = k / 4 * 4;
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut p = 0;
+        while p < k4 {
+            let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
+            if a0 != 0.0 && a1 != 0.0 && a2 != 0.0 && a3 != 0.0 {
+                let (o0, o1, o2, o3) = (p * n, (p + 1) * n, (p + 2) * n, (p + 3) * n);
+                for (j, cv) in crow.iter_mut().enumerate() {
+                    let mut v = *cv;
+                    v += a0 * b.at(o0 + j);
+                    v += a1 * b.at(o1 + j);
+                    v += a2 * b.at(o2 + j);
+                    v += a3 * b.at(o3 + j);
+                    *cv = v;
+                }
+            } else {
+                for q in 0..4 {
+                    let av = arow[p + q];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let boff = (p + q) * n;
+                    for (j, cv) in crow.iter_mut().enumerate() {
+                        *cv += av * b.at(boff + j);
+                    }
+                }
+            }
+            p += 4;
+        }
+        for pp in k4..k {
+            let av = arow[pp];
+            if av == 0.0 {
+                continue;
+            }
+            let boff = pp * n;
+            for (j, cv) in crow.iter_mut().enumerate() {
+                *cv += av * b.at(boff + j);
+            }
+        }
+    }
+}
+
+/// [`gemm_at_tiled`] with a quantized A (the [k,m]-stored core operand of
+/// the chain hops), dequantized at the point of use.  The zero-skip guard
+/// tests the *dequantized* value, matching the f32 kernel's semantics on
+/// the same numbers.
+#[inline]
+pub fn gemm_at_tiled_q<A: Dequant>(a: A, b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let k4 = k / 4 * 4;
+    let mut p = 0;
+    while p < k4 {
+        let b0 = &b[p * n..(p + 1) * n];
+        let b1 = &b[(p + 1) * n..(p + 2) * n];
+        let b2 = &b[(p + 2) * n..(p + 3) * n];
+        let b3 = &b[(p + 3) * n..(p + 4) * n];
+        for i in 0..m {
+            let (x0, x1, x2, x3) = (
+                a.at(p * m + i),
+                a.at((p + 1) * m + i),
+                a.at((p + 2) * m + i),
+                a.at((p + 3) * m + i),
+            );
+            let crow = &mut c[i * n..(i + 1) * n];
+            if x0 != 0.0 && x1 != 0.0 && x2 != 0.0 && x3 != 0.0 {
+                for j in 0..n {
+                    let mut cv = crow[j];
+                    cv += x0 * b0[j];
+                    cv += x1 * b1[j];
+                    cv += x2 * b2[j];
+                    cv += x3 * b3[j];
+                    crow[j] = cv;
+                }
+            } else {
+                for (xv, brow) in [(x0, b0), (x1, b1), (x2, b2), (x3, b3)] {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += xv * bv;
+                    }
+                }
+            }
+        }
+        p += 4;
+    }
+    for pp in k4..k {
+        let brow = &b[pp * n..(pp + 1) * n];
+        for i in 0..m {
+            let av = a.at(pp * m + i);
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
     }
 }
 
@@ -452,5 +1076,160 @@ mod tests {
         let mut y = vec![1.0, 2.0];
         axpy(&mut y, 0.5, &[2.0, 4.0]);
         assert_eq!(y, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn gemm_acc_kuw_bit_identical_to_gemm_acc_ku() {
+        // n up to 2.5×LANES so both the lane body and the scalar column
+        // tail run; zero injection exercises the quad fallback.
+        check_cases("gemm_kuw", 40, |rng, case| {
+            let (m, k, n) = (
+                rng.usize_below(8) + 1,
+                rng.usize_below(13) + 1,
+                rng.usize_below(2 * LANES + 5) + 1,
+            );
+            let mut a = rand_vec(rng, m * k);
+            if case % 3 == 0 && !a.is_empty() {
+                let z = rng.usize_below(a.len());
+                a[z] = 0.0;
+            }
+            let b = rand_vec(rng, k * n);
+            let mut c_ref = rand_vec(rng, m * n);
+            let mut c_w = c_ref.clone();
+            gemm_acc_ku(&a, &b, &mut c_ref, m, k, n);
+            gemm_acc_kuw(&a, &b, &mut c_w, m, k, n);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&c_ref), bits(&c_w), "m={m} k={k} n={n}");
+        });
+    }
+
+    #[test]
+    fn gemm_at_tiledw_bit_identical_to_gemm_at_tiled() {
+        check_cases("gemm_at_tiledw", 40, |rng, case| {
+            let (m, k, n) = (
+                rng.usize_below(8) + 1,
+                rng.usize_below(13) + 1,
+                rng.usize_below(2 * LANES + 5) + 1,
+            );
+            let mut at = rand_vec(rng, k * m);
+            if case % 3 == 0 && !at.is_empty() {
+                let z = rng.usize_below(at.len());
+                at[z] = 0.0;
+            }
+            let b = rand_vec(rng, k * n);
+            let mut c_ref = rand_vec(rng, m * n);
+            let mut c_w = c_ref.clone();
+            gemm_at_tiled(&at, &b, &mut c_ref, m, k, n);
+            gemm_at_tiledw(&at, &b, &mut c_w, m, k, n);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&c_ref), bits(&c_w), "m={m} k={k} n={n}");
+        });
+    }
+
+    #[test]
+    fn f16_roundtrip_and_specials() {
+        // every exactly-representable value survives the round trip
+        for v in [0.0f32, -0.0, 1.0, -1.5, 0.09997559, 65504.0, -65504.0] {
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            let err = (back - v).abs();
+            assert!(err <= v.abs() * 1e-3, "{v} -> {back}");
+        }
+        assert_eq!(f32_to_f16_bits(0.0).to_be_bytes(), [0, 0]);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // overflow saturates to inf; tiny values flush to signed zero
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e6)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-1e-9)).to_bits(), (-0.0f32).to_bits());
+        // subnormal range stays close in relative terms
+        let v = 3.1e-5f32;
+        let back = f16_bits_to_f32(f32_to_f16_bits(v));
+        assert!((back - v).abs() < 1e-6, "{v} -> {back}");
+    }
+
+    #[test]
+    fn f16_random_roundtrip_relative_error() {
+        check_cases("f16_roundtrip", 200, |rng, _| {
+            let v = rng.normal_f32(0.0, 10.0);
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            if v.abs() >= 6.2e-5 {
+                // binary16 has 11 significand bits -> rel err <= 2^-11
+                assert!((back - v).abs() <= v.abs() * 4.9e-4, "{v} -> {back}");
+            } else {
+                // subnormal range: half an ulp of 2^-24 absolute
+                assert!((back - v).abs() <= 6.2e-8, "{v} -> {back}");
+            }
+        });
+    }
+
+    /// Quantized kernels must equal their f32 twin run on the *dequantized*
+    /// operand bit-for-bit: dequant-at-point-of-use may not reorder or
+    /// contract any arithmetic.
+    #[test]
+    fn quantized_kernels_match_dequantized_reference() {
+        check_cases("gemm_q", 40, |rng, case| {
+            let (m, k, n) = (
+                rng.usize_below(8) + 1,
+                rng.usize_below(13) + 1,
+                rng.usize_below(10) + 1,
+            );
+            let mut a = rand_vec(rng, m * k);
+            if case % 3 == 0 && !a.is_empty() {
+                let z = rng.usize_below(a.len());
+                a[z] = 0.0;
+            }
+            let bf = rand_vec(rng, k * n);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+
+            // int8 view vs f32 kernels on the dequantized block
+            let scale = i8_scale(&bf);
+            let mut q = vec![0i8; bf.len()];
+            quantize_i8(&bf, scale, &mut q);
+            let qv = QI8 { q: &q, scale };
+            let deq: Vec<f32> = (0..bf.len()).map(|i| qv.at(i)).collect();
+            let c0 = rand_vec(rng, m * n);
+            let (mut c_ref, mut c_q) = (c0.clone(), c0.clone());
+            gemm_acc(&a, &deq, &mut c_ref, m, k, n);
+            gemm_acc_q(&a, qv, &mut c_q, m, k, n);
+            assert_eq!(bits(&c_ref), bits(&c_q), "acc_q i8 m={m} k={k} n={n}");
+            let (mut c_ref, mut c_q) = (c0.clone(), c0.clone());
+            gemm_acc_ku(&a, &deq, &mut c_ref, m, k, n);
+            gemm_acc_ku_q(&a, qv, &mut c_q, m, k, n);
+            assert_eq!(bits(&c_ref), bits(&c_q), "ku_q i8 m={m} k={k} n={n}");
+
+            // f16 view, same contract
+            let h: Vec<u16> = bf.iter().map(|&v| f32_to_f16_bits(v)).collect();
+            let hv = QF16 { h: &h };
+            let deq: Vec<f32> = (0..bf.len()).map(|i| hv.at(i)).collect();
+            let (mut c_ref, mut c_q) = (c0.clone(), c0.clone());
+            gemm_acc_ku(&a, &deq, &mut c_ref, m, k, n);
+            gemm_acc_ku_q(&a, hv, &mut c_q, m, k, n);
+            assert_eq!(bits(&c_ref), bits(&c_q), "ku_q f16 m={m} k={k} n={n}");
+
+            // Aᵀ chain kernel with the quantized operand on the A side
+            let atf = rand_vec(rng, k * m);
+            let scale = i8_scale(&atf);
+            let mut qa = vec![0i8; atf.len()];
+            quantize_i8(&atf, scale, &mut qa);
+            let qav = QI8 { q: &qa, scale };
+            let deq_a: Vec<f32> = (0..atf.len()).map(|i| qav.at(i)).collect();
+            let (mut c_ref, mut c_q) = (c0.clone(), c0);
+            gemm_at_tiled(&deq_a, &bf, &mut c_ref, m, k, n);
+            gemm_at_tiled_q(qav, &bf, &mut c_q, m, k, n);
+            assert_eq!(bits(&c_ref), bits(&c_q), "at_tiled_q m={m} k={k} n={n}");
+        });
+    }
+
+    #[test]
+    fn i8_scale_zero_block_roundtrips_zeros() {
+        let z = vec![0.0f32; 9];
+        let s = i8_scale(&z);
+        assert_eq!(s, 1.0);
+        let mut q = vec![0i8; 9];
+        quantize_i8(&z, s, &mut q);
+        let v = QI8 { q: &q, scale: s };
+        for i in 0..9 {
+            assert_eq!(v.at(i).to_bits(), 0.0f32.to_bits());
+        }
     }
 }

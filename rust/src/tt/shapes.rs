@@ -138,6 +138,23 @@ impl TtShapes {
         self.tt_params() * 4
     }
 
+    /// Number of core slices (`m1 + m2 + m3`) — the tile unit of the plan
+    /// walk; int8 storage carries one f32 scale per slice.
+    pub fn num_slices(&self) -> u64 {
+        self.m[0] + self.m[1] + self.m[2]
+    }
+
+    /// Bytes of f16 storage in TT form (2 bytes per parameter).
+    pub fn tt_bytes_f16(&self) -> u64 {
+        self.tt_params() * 2
+    }
+
+    /// Bytes of int8 storage in TT form (1 byte per parameter plus one
+    /// f32 scale per core slice).
+    pub fn tt_bytes_int8(&self) -> u64 {
+        self.tt_params() + self.num_slices() * 4
+    }
+
     pub fn plain_bytes(&self) -> u64 {
         self.plain_params() * 4
     }
@@ -210,6 +227,18 @@ mod tests {
         // as rank shrinks).
         let s = TtShapes::plan(242_500_000, 64, 32);
         assert!(s.compression_ratio() > 1_000.0);
+    }
+
+    #[test]
+    fn quantized_bytes_strictly_ordered() {
+        // paper-scale shapes: int8 < f16 < f32, and the per-slice scale
+        // overhead never erases the win
+        for (rows, dim, rank) in [(1000u64, 16usize, 8usize), (242_500_000, 64, 32)] {
+            let s = TtShapes::plan(rows, dim, rank);
+            assert!(s.tt_bytes_int8() < s.tt_bytes_f16());
+            assert!(s.tt_bytes_f16() < s.tt_bytes());
+            assert_eq!(s.tt_bytes_f16() * 2, s.tt_bytes());
+        }
     }
 
     #[test]

@@ -25,14 +25,106 @@
 
 use std::ops::Range;
 
+use anyhow::{bail, Result};
+
 use crate::access::plan::{BagLayout, TtPlan};
 use crate::exec::par::{par_row_blocks, split_at_cuts, PAR_MIN_WORK};
 use crate::exec::{split_ranges, ExecPool};
 use crate::tt::linalg::{
-    add_assign, axpy, gemm_acc, gemm_acc_ku, gemm_at_acc, gemm_at_tiled, gemm_bt_acc,
+    add_assign, axpy, f32_to_f16_bits, gemm_acc, gemm_acc_ku_q, gemm_acc_kuw, gemm_acc_q,
+    gemm_at_acc, gemm_at_tiledw, gemm_bt_acc, i8_scale, quantize_i8, Dequant, QF16, QI8,
 };
 use crate::tt::shapes::TtShapes;
 use crate::util::prng::Rng;
+
+/// Serving-mode numeric format for frozen TT cores (`[tt] quantize` /
+/// `--quantize`).  `Off` keeps the training-grade f32 path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QuantizeMode {
+    #[default]
+    Off,
+    Int8,
+    F16,
+}
+
+impl QuantizeMode {
+    pub fn parse(s: &str) -> Result<QuantizeMode> {
+        match s {
+            "off" => Ok(QuantizeMode::Off),
+            "int8" => Ok(QuantizeMode::Int8),
+            "f16" => Ok(QuantizeMode::F16),
+            other => bail!("unknown quantize mode '{other}' (expected off|int8|f16)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            QuantizeMode::Off => "off",
+            QuantizeMode::Int8 => "int8",
+            QuantizeMode::F16 => "f16",
+        }
+    }
+}
+
+/// One TT core in quantized storage, sliced exactly like its f32 twin
+/// (slice i covers `[i·slice_len, (i+1)·slice_len)`), so the hottest-first
+/// layout schedule walks the quantized tiles in the same order as the f32
+/// ones.  int8 carries one symmetric scale per slice — the slice IS the
+/// tile unit of the plan walk.
+#[derive(Clone, Default)]
+pub struct QCore {
+    slice_len: usize,
+    q8: Vec<i8>,
+    scales: Vec<f32>,
+    f16: Vec<u16>,
+}
+
+impl QCore {
+    fn quantize(core: &[f32], slice_len: usize, mode: QuantizeMode) -> QCore {
+        debug_assert_eq!(core.len() % slice_len, 0);
+        let mut qc = QCore { slice_len, ..QCore::default() };
+        match mode {
+            QuantizeMode::Off => unreachable!("QCore::quantize called with mode=off"),
+            QuantizeMode::Int8 => {
+                qc.q8.resize(core.len(), 0);
+                for (blk, qblk) in core.chunks(slice_len).zip(qc.q8.chunks_mut(slice_len)) {
+                    let sc = i8_scale(blk);
+                    quantize_i8(blk, sc, qblk);
+                    qc.scales.push(sc);
+                }
+            }
+            QuantizeMode::F16 => {
+                qc.f16 = core.iter().map(|&v| f32_to_f16_bits(v)).collect();
+            }
+        }
+        qc
+    }
+
+    #[inline]
+    fn i8_slice(&self, i: usize) -> QI8<'_> {
+        let l = self.slice_len;
+        QI8 { q: &self.q8[i * l..(i + 1) * l], scale: self.scales[i] }
+    }
+
+    #[inline]
+    fn f16_slice(&self, i: usize) -> QF16<'_> {
+        let l = self.slice_len;
+        QF16 { h: &self.f16[i * l..(i + 1) * l] }
+    }
+
+    fn bytes(&self) -> u64 {
+        (self.q8.len() + self.scales.len() * 4 + self.f16.len() * 2) as u64
+    }
+}
+
+/// Frozen quantized TT cores (see [`EffTtTable::freeze_quantized`]).
+#[derive(Clone)]
+pub struct QuantCores {
+    pub mode: QuantizeMode,
+    q1: QCore,
+    q2: QCore,
+    q3: QCore,
+}
 
 /// Which §III optimizations are active (Fig. 12 ablation switches).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -138,6 +230,8 @@ pub struct EffTtTable {
     /// Shared parallel execution layer; serial by default.  All parallel
     /// paths are bit-identical to `workers = 1` (see `exec` module docs).
     pub pool: ExecPool,
+    /// Frozen quantized cores (serving mode); `None` = f32 path.
+    pub quant: Option<QuantCores>,
 }
 
 impl EffTtTable {
@@ -162,6 +256,7 @@ impl EffTtTable {
             core3,
             stats: TtStats::default(),
             pool: ExecPool::serial(),
+            quant: None,
         }
     }
 
@@ -216,6 +311,7 @@ impl EffTtTable {
             core3,
             stats: TtStats::default(),
             pool: ExecPool::serial(),
+            quant: None,
         }
     }
 
@@ -264,9 +360,35 @@ impl EffTtTable {
         &self.core3[i3 * l..(i3 + 1) * l]
     }
 
-    /// Bytes held by the TT cores.
+    /// Bytes held by the TT cores.  A frozen table reports the quantized
+    /// footprint — the storage the serving hot path actually walks.
     pub fn bytes(&self) -> u64 {
-        ((self.core1.len() + self.core2.len() + self.core3.len()) * 4) as u64
+        match &self.quant {
+            Some(q) => q.q1.bytes() + q.q2.bytes() + q.q3.bytes(),
+            None => ((self.core1.len() + self.core2.len() + self.core3.len()) * 4) as u64,
+        }
+    }
+
+    /// Freeze the table into a reduced-precision serving format: each core
+    /// is re-stored slice-by-slice as int8 (one symmetric scale per slice)
+    /// or f16, and the planned forward dequantizes inside the tile walk
+    /// (never as a separate materialization pass).  Forward-only —
+    /// `backward_sgd*` panics on a frozen table; pass `Off` to thaw back
+    /// to the f32 path.  Opt-in via `[tt] quantize` / `--quantize`.
+    pub fn freeze_quantized(&mut self, mode: QuantizeMode) {
+        if mode == QuantizeMode::Off {
+            self.quant = None;
+            return;
+        }
+        let s = &self.shapes;
+        let r = s.rank;
+        let (l1, l2, l3) = (s.n[0] * r, r * s.n[1] * r, r * s.n[2]);
+        self.quant = Some(QuantCores {
+            mode,
+            q1: QCore::quantize(&self.core1, l1, mode),
+            q2: QCore::quantize(&self.core2, l2, mode),
+            q3: QCore::quantize(&self.core3, l3, mode),
+        });
     }
 
     /// Compute the partial product P(prefix) = D1[i1] · D2[:,i2]
@@ -450,9 +572,16 @@ impl EffTtTable {
             let table = &*self;
             let rows_list = &plan.uniq_rows[..];
             let sched: Option<&[u32]> = if tiled { Some(plan.sched()) } else { None };
-            let fill = |rg: Range<usize>, block: &mut [f32], p: &mut Vec<f32>| match sched {
-                Some(order) => fill_rows_sched(table, rows_list, order, rg, block, plen, dim, p),
-                None => fill_rows(table, rows_list, rg, block, plen, dim, p),
+            let quant = table.quant.as_ref();
+            let fill = |rg: Range<usize>, block: &mut [f32], p: &mut Vec<f32>| match (quant, sched)
+            {
+                (Some(q), _) => {
+                    fill_rows_quant(table, q, rows_list, sched, rg, block, plen, dim, p)
+                }
+                (None, Some(order)) => {
+                    fill_rows_sched(table, rows_list, order, rg, block, plen, dim, p)
+                }
+                (None, None) => fill_rows(table, rows_list, rg, block, plen, dim, p),
             };
             if shards.len() <= 1 {
                 fill(0..uniq_rows, &mut scratch.row[..], &mut scratch.buf);
@@ -531,6 +660,10 @@ impl EffTtTable {
         } else {
             // TT-Rec path: recompute everything per occurrence; bags are
             // independent, so the pooling loop shards across bags.
+            assert!(
+                self.quant.is_none(),
+                "quantized serving requires the reuse-planned forward"
+            );
             self.prepare_prefixes(indices, scratch);
             self.stats.hop2_gemms += indices.len() as u64;
             let m3 = s.m[2];
@@ -628,6 +761,11 @@ impl EffTtTable {
         let s = self.shapes;
         let dim = s.dim;
         let n_bags = bags.num_bags();
+        assert!(
+            self.quant.is_none(),
+            "frozen quantized table is forward-only (serving mode); \
+             freeze_quantized(Off) thaws it for training"
+        );
         assert_eq!(grad_out.len(), n_bags * dim);
         debug_assert_eq!(bags.total(), indices.len());
 
@@ -1014,8 +1152,9 @@ fn compute_chains(
 /// writing per-item gradients at their SCHEDULED slots (the apply phase
 /// reads them back through the inverse map, in original work order).
 /// Chains are pure reads of the cores, so walking them in schedule order
-/// cannot change any value; the dD3/dD2 hops run the k-unrolled tile
-/// microkernel ([`gemm_at_tiled`], bit-identical to [`gemm_at_acc`]).
+/// cannot change any value; the dD3/dD2 hops run the wide-lane k-unrolled
+/// tile microkernel ([`gemm_at_tiledw`], bit-identical to
+/// [`gemm_at_acc`]).
 ///
 /// MIRROR of [`compute_chains`] (indirection + kernels are the ONLY
 /// differences).  The untiled original is kept byte-identical to PR-2
@@ -1058,14 +1197,14 @@ fn compute_chains_order(
         // dD3[:,i3] = Pᵀ [R, n1n2] · gE [n1n2, n3]
         let d3 = &mut g3[wi * l3..(wi + 1) * l3];
         d3.fill(0.0);
-        gemm_at_tiled(&p[..plen], ge, d3, r, n1 * n2, n3);
+        gemm_at_tiledw(&p[..plen], ge, d3, r, n1 * n2, n3);
         // dP = gE [n1n2, n3] · D3-sliceᵀ [n3, R]
         dp[..plen].fill(0.0);
         gemm_bt_acc(ge, t.slice3(i3), &mut dp[..plen], n1 * n2, n3, r);
         // dD2[:,i2] = D1-sliceᵀ [R, n1] · dP(view [n1, n2R])
         let d2 = &mut g2[wi * l2..(wi + 1) * l2];
         d2.fill(0.0);
-        gemm_at_tiled(t.slice1(i1), &dp[..plen], d2, r, n1, n2 * r);
+        gemm_at_tiledw(t.slice1(i1), &dp[..plen], d2, r, n1, n2 * r);
         // dD1[i1] = dP [n1, n2R] · D2-sliceᵀ [n2R, R]
         let d1 = &mut g1[wi * l1..(wi + 1) * l1];
         d1.fill(0.0);
@@ -1078,8 +1217,8 @@ fn compute_chains_order(
 /// `rows`), writing each row at its SCHEDULED position in `out_block`.
 /// Scheduled groups are contiguous runs with distinct prefixes, so the
 /// prefix product still recomputes exactly on group change; the hop-2
-/// contraction runs the k-unrolled tile microkernel ([`gemm_acc_ku`],
-/// bit-identical to [`gemm_acc`]).
+/// contraction runs the wide-lane k-unrolled tile microkernel
+/// ([`gemm_acc_kuw`], bit-identical to [`gemm_acc`]).
 ///
 /// MIRROR of [`fill_rows`] (indirection + kernel are the ONLY
 /// differences); see the mirror note on [`compute_chains_order`] for why
@@ -1109,7 +1248,7 @@ fn fill_rows_sched(
         let dst = &mut out_block[bi * dim..(bi + 1) * dim];
         dst.fill(0.0);
         // [n1·n2, R] · [R, n3] -> row-major [dim] (tile microkernel)
-        gemm_acc_ku(
+        gemm_acc_kuw(
             &p[..plen],
             t.slice3((idx % s.m[2]) as usize),
             dst,
@@ -1117,6 +1256,110 @@ fn fill_rows_sched(
             s.rank,
             s.n[2],
         );
+    }
+}
+
+/// Quantized forward hop-2 worker: the [`fill_rows_sched`] /
+/// [`fill_rows`] walk against frozen cores, dispatching on the frozen
+/// format.  Dequantization happens per element inside the microkernels
+/// ([`gemm_acc_q`] / [`gemm_acc_ku_q`]) as the tile walk streams the
+/// slices; the only materialized f32 operand is the tiny [n1, R]
+/// first-hop slice seeding each prefix product.
+#[allow(clippy::too_many_arguments)]
+fn fill_rows_quant(
+    t: &EffTtTable,
+    q: &QuantCores,
+    rows: &[u64],
+    order: Option<&[u32]>,
+    range: Range<usize>,
+    out_block: &mut [f32],
+    plen: usize,
+    dim: usize,
+    p: &mut Vec<f32>,
+) {
+    match q.mode {
+        QuantizeMode::Off => unreachable!("frozen cores with mode=off"),
+        QuantizeMode::Int8 => fill_rows_q_impl(
+            t,
+            rows,
+            order,
+            range,
+            out_block,
+            plen,
+            dim,
+            p,
+            |i| q.q1.i8_slice(i),
+            |i| q.q2.i8_slice(i),
+            |i| q.q3.i8_slice(i),
+        ),
+        QuantizeMode::F16 => fill_rows_q_impl(
+            t,
+            rows,
+            order,
+            range,
+            out_block,
+            plen,
+            dim,
+            p,
+            |i| q.q1.f16_slice(i),
+            |i| q.q2.f16_slice(i),
+            |i| q.q3.f16_slice(i),
+        ),
+    }
+}
+
+/// Monomorphized body of [`fill_rows_quant`]: same prefix-change /
+/// hop-2 structure as the f32 walkers, with an `Option` order indirection
+/// merging the tiled and untiled variants (new code — not bound by the
+/// PR-2 mirror-byte-identity constraint on the f32 originals).
+#[allow(clippy::too_many_arguments)]
+fn fill_rows_q_impl<B1, B2, B3>(
+    t: &EffTtTable,
+    rows: &[u64],
+    order: Option<&[u32]>,
+    range: Range<usize>,
+    out_block: &mut [f32],
+    plen: usize,
+    dim: usize,
+    p: &mut Vec<f32>,
+    s1: impl Fn(usize) -> B1,
+    s2: impl Fn(usize) -> B2,
+    s3: impl Fn(usize) -> B3,
+) where
+    B1: Dequant,
+    B2: Dequant,
+    B3: Dequant,
+{
+    let s = &t.shapes;
+    debug_assert_eq!(out_block.len(), (range.end - range.start) * dim);
+    let (n1, n2, n3) = (s.n[0], s.n[1], s.n[2]);
+    let r = s.rank;
+    let l1 = n1 * r;
+    // `p` holds the prefix product plus the dequant staging area for the
+    // first-hop slice (the one materialized operand).
+    p.resize(plen + l1, 0.0);
+    let (pbuf, a1) = p.split_at_mut(plen);
+    let mut last_pref = u64::MAX;
+    for (bi, pos) in range.enumerate() {
+        let ri = match order {
+            Some(o) => o[pos] as usize,
+            None => pos,
+        };
+        let idx = rows[ri];
+        let pf = s.prefix_of(idx);
+        if pf != last_pref {
+            let i1 = (pf / s.m[1]) as usize;
+            let i2 = (pf % s.m[1]) as usize;
+            s1(i1).dequant_into(a1);
+            pbuf.fill(0.0);
+            // [n1, R] · [R, n2·R] -> [n1, n2·R], B dequantized in-kernel
+            gemm_acc_q(a1, s2(i2), pbuf, n1, r, n2 * r);
+            last_pref = pf;
+        }
+        let dst = &mut out_block[bi * dim..(bi + 1) * dim];
+        dst.fill(0.0);
+        // [n1·n2, R] · [R, n3] -> row-major [dim] (quantized tile kernel)
+        gemm_acc_ku_q(&pbuf[..plen], s3((idx % s.m[2]) as usize), dst, n1 * n2, r, n3);
     }
 }
 
@@ -1234,6 +1477,7 @@ mod tests {
             core3: t0.core3.clone(),
             stats: TtStats::default(),
             pool: ExecPool::serial(),
+            quant: None,
         };
         let mut out = vec![0.0; 16];
         let mut scr = TtScratch::default();
@@ -1251,6 +1495,7 @@ mod tests {
                 core3: t0.core3.clone(),
                 stats: TtStats::default(),
                 pool: ExecPool::serial(),
+                quant: None,
             };
             tp.core1[probe] += eps;
             let fp = loss(&mut tp);
@@ -1267,6 +1512,7 @@ mod tests {
                 core3: t0.core3.clone(),
                 stats: TtStats::default(),
                 pool: ExecPool::serial(),
+                quant: None,
             };
             ta.backward_sgd(&idx, &offsets, &g, 1.0, &mut scr);
             let analytic = t0.core1[probe] - ta.core1[probe]; // lr=1 ⇒ grad
@@ -1329,6 +1575,69 @@ mod tests {
             last = loss;
         }
         assert!(last < 0.1 * first.unwrap(), "loss did not descend: {} -> {last}", first.unwrap());
+    }
+
+    #[test]
+    fn quantized_forward_close_to_f32_and_smaller() {
+        check_cases("quant-fwd", 10, |rng, _| {
+            let rows = rng.below(2000) + 100;
+            let seed = rng.next_u64();
+            let mut t = table(rows, 16, 4, EffTtOptions::default(), seed);
+            let idx: Vec<u64> = (0..24).map(|_| rng.below(rows)).collect();
+            let (ind, off) = bag_of(&idx);
+            let mut scr = TtScratch::default();
+            let mut f32_out = vec![0.0; 16];
+            t.embedding_bag(&ind, &off, &mut f32_out, &mut scr);
+            let f32_bytes = t.bytes();
+            for mode in [QuantizeMode::F16, QuantizeMode::Int8] {
+                let mut q = t.clone();
+                q.freeze_quantized(mode);
+                assert!(q.bytes() < f32_bytes, "{mode:?} footprint not below f32");
+                let mut out = vec![0.0; 16];
+                let mut qscr = TtScratch::default();
+                q.embedding_bag(&ind, &off, &mut out, &mut qscr);
+                let (rtol, atol) = match mode {
+                    QuantizeMode::F16 => (1e-2, 1e-2),
+                    _ => (0.2, 0.2),
+                };
+                assert_allclose(&out, &f32_out, rtol, atol);
+            }
+        });
+    }
+
+    #[test]
+    fn thawed_table_bit_identical_to_never_frozen() {
+        let mut t = table(800, 16, 4, EffTtOptions::default(), 21);
+        let idx: Vec<u64> = vec![3, 700, 3, 41, 98, 41];
+        let (ind, off) = bag_of(&idx);
+        let mut scr = TtScratch::default();
+        let mut before = vec![0.0; 16];
+        t.embedding_bag(&ind, &off, &mut before, &mut scr);
+        t.freeze_quantized(QuantizeMode::Int8);
+        t.freeze_quantized(QuantizeMode::Off);
+        let mut after = vec![0.0; 16];
+        t.embedding_bag(&ind, &off, &mut after, &mut scr);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&before), bits(&after));
+    }
+
+    #[test]
+    #[should_panic(expected = "forward-only")]
+    fn frozen_table_rejects_backward() {
+        let mut t = table(400, 8, 4, EffTtOptions::default(), 7);
+        t.freeze_quantized(QuantizeMode::Int8);
+        let g = vec![0.0f32; 8];
+        let mut scr = TtScratch::default();
+        t.backward_sgd(&[5], &[0, 1], &g, 0.1, &mut scr);
+    }
+
+    #[test]
+    fn quantize_mode_parses_and_rejects() {
+        assert_eq!(QuantizeMode::parse("off").unwrap(), QuantizeMode::Off);
+        assert_eq!(QuantizeMode::parse("int8").unwrap(), QuantizeMode::Int8);
+        assert_eq!(QuantizeMode::parse("f16").unwrap(), QuantizeMode::F16);
+        assert!(QuantizeMode::parse("fp8").is_err());
+        assert_eq!(QuantizeMode::Int8.as_str(), "int8");
     }
 
     #[test]

@@ -72,7 +72,7 @@ fn run(
     placement: Placement,
 ) -> (Vec<f32>, Vec<f32>, u64) {
     let planner = AccessPlanner::for_engine_cfg(cfg);
-    let dp = DpCfg { workers, placement, cost: zero_cost(), seed: 9 };
+    let dp = DpCfg { workers, placement, cost: zero_cost(), seed: 9, quantize_comm: false };
     let (report, mut engine) =
         train_data_parallel_placed(cfg.clone(), &planner, batches, &dp);
     // post-training predictions on the first batch fingerprint the params

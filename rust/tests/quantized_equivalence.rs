@@ -1,0 +1,207 @@
+//! Quantized-fast-path equivalence pins (the perf_opt acceptance gates):
+//!
+//! 1. With quantize=off the f32 path — scalar or wide/SIMD kernels,
+//!    untiled or tiled layouts, 1 or N exec workers — stays BITWISE
+//!    identical: the wide microkernels replaced the scalar ones inside
+//!    the tiled mirrors, so every (workers × cache_kb) combination must
+//!    produce the same losses and verdict bits.
+//! 2. int8 / f16 frozen serving scores within AUC tolerance of f32 on
+//!    the IEEE-118 smoke model (quantization moves probabilities, not
+//!    ranking quality).
+//! 3. The int8 sparse all-reduce with error feedback converges to
+//!    within tolerance of the f32 dense exchange, at strictly smaller
+//!    payload.
+//! 4. Quantized serving verdict bits are stable across `RoutePolicy` ×
+//!    replica counts — replicas share one frozen engine, so routing can
+//!    only move requests, never change scores.
+
+use recad::access::{AccessCfg, AccessPlanner};
+use recad::coordinator::data_parallel::{train_data_parallel_placed, DpCfg, Placement};
+use recad::coordinator::engine::EngineCfg;
+use recad::coordinator::platform::CostModel;
+use recad::coordinator::trainer;
+use recad::data::ctr::{Batch, CtrGenerator};
+use recad::data::schema::DatasetSchema;
+use recad::exec::ExecCfg;
+use recad::metrics::auc;
+use recad::powersys::dataset::{generate, DatasetCfg, Ieee118Dataset, SparseVocab};
+use recad::serve::{Detector, Policy, ServeSession};
+use recad::tt::table::QuantizeMode;
+use std::time::Duration;
+
+const SCALE: f64 = 1.0 / 2000.0;
+
+fn smoke_dataset(seed: u64) -> Ieee118Dataset {
+    generate(&DatasetCfg {
+        n_normal: 240,
+        n_attack: 60,
+        vocab: SparseVocab::ieee118(SCALE),
+        n_profiles: 20,
+        noise_std: 0.005,
+        seed,
+    })
+}
+
+fn engine_cfg(workers: usize) -> EngineCfg {
+    let mut cfg = EngineCfg::ieee118(SCALE);
+    cfg.exec = ExecCfg::with_workers(workers);
+    cfg
+}
+
+/// Train the smoke model under (workers, cache_kb) and fingerprint it:
+/// the loss curve plus per-sample verdict bits on the eval split.
+fn train_fingerprint(workers: usize, cache_kb: usize, ds: &Ieee118Dataset) -> (Vec<u32>, Vec<u32>) {
+    let access = AccessCfg { cache_kb, ..AccessCfg::default() };
+    let (report, engine, planner) =
+        trainer::train_ieee118_full(engine_cfg(workers), &access, ds, 1, 32, 7);
+    let mut det = Detector::with_planner(engine, 0.5, planner);
+    let bits = ds
+        .split(0.8)
+        .1
+        .iter()
+        .map(|s| det.score(s).to_bits())
+        .collect();
+    (report.loss_curve.iter().map(|l| l.to_bits()).collect(), bits)
+}
+
+#[test]
+fn f32_path_bit_identical_across_workers_and_tile_budgets() {
+    let ds = smoke_dataset(11);
+    // cache_kb = 0 walks the untouched scalar kernels; cache_kb > 0 walks
+    // the tiled mirrors, which now run the wide/SIMD microkernels
+    let (want_losses, want_bits) = train_fingerprint(1, 0, &ds);
+    for (workers, cache_kb) in [(1usize, 4usize), (3, 0), (3, 4)] {
+        let (losses, bits) = train_fingerprint(workers, cache_kb, &ds);
+        assert_eq!(
+            want_losses, losses,
+            "loss curve drifted at workers={workers} cache_kb={cache_kb}"
+        );
+        assert_eq!(
+            want_bits, bits,
+            "verdict bits drifted at workers={workers} cache_kb={cache_kb}"
+        );
+    }
+}
+
+#[test]
+fn quantized_serving_auc_within_tolerance_of_f32() {
+    let ds = smoke_dataset(13);
+    let (_, engine, planner) =
+        trainer::train_ieee118_full(engine_cfg(1), &AccessCfg::default(), &ds, 2, 32, 7);
+    let eval = ds.split(0.8).1;
+    let labels: Vec<f32> = eval.iter().map(|s| s.label).collect();
+    let score_all = |engine: recad::coordinator::engine::NativeDlrm| -> Vec<f32> {
+        let mut det = Detector::with_planner(engine, 0.5, planner.clone());
+        eval.iter().map(|s| det.score(s)).collect()
+    };
+    let f32_auc = auc(&score_all(engine.clone()), &labels);
+    assert!(f32_auc > 0.7, "smoke model failed to learn: AUC {f32_auc}");
+    for (mode, tol) in [(QuantizeMode::F16, 0.01), (QuantizeMode::Int8, 0.05)] {
+        let mut frozen = engine.clone();
+        frozen.freeze_quantized(mode);
+        assert!(
+            frozen.embedding_bytes() < engine.embedding_bytes(),
+            "{mode:?} tables must shrink the embedding footprint"
+        );
+        let q_auc = auc(&score_all(frozen), &labels);
+        assert!(
+            (q_auc - f32_auc).abs() <= tol,
+            "{mode:?} AUC {q_auc} drifted more than {tol} from f32 {f32_auc}"
+        );
+    }
+}
+
+fn dp_batches() -> (EngineCfg, Vec<Batch>) {
+    let cfg = EngineCfg {
+        dense_dim: 4,
+        emb_dim: 8,
+        tables: vec![(1500, true), (60, false)],
+        tt_rank: 4,
+        bot_hidden: vec![16],
+        top_hidden: vec![16],
+        lr: 0.05,
+        tt_opts: recad::tt::table::EffTtOptions::default(),
+        exec: ExecCfg::default(),
+    };
+    let schema = DatasetSchema {
+        name: "q8-test",
+        n_dense: 4,
+        vocabs: vec![1500, 60],
+        emb_dim: 8,
+        zipf_s: 1.2,
+        ft_rank: 8,
+    };
+    (cfg, CtrGenerator::new(schema, 17).batches(24, 32))
+}
+
+fn zero_cost() -> CostModel {
+    CostModel {
+        h2d_bps: 1e18,
+        d2d_bps: 1e18,
+        transfer_latency: Duration::ZERO,
+        ps_row: Duration::ZERO,
+        dispatch: Duration::ZERO,
+    }
+}
+
+#[test]
+fn q8_allreduce_converges_with_f32_dense_exchange_at_lower_payload() {
+    let (cfg, batches) = dp_batches();
+    let planner = AccessPlanner::for_engine_cfg(&cfg);
+    let run = |placement: Placement, quantize_comm: bool| {
+        let dp = DpCfg {
+            workers: 2,
+            placement,
+            cost: zero_cost(),
+            seed: 9,
+            quantize_comm,
+        };
+        train_data_parallel_placed(cfg.clone(), &planner, &batches, &dp).0
+    };
+    let dense = run(Placement::Replicated, false);
+    let sparse = run(Placement::Plan, false);
+    let q8 = run(Placement::Plan, true);
+    // strict payload ordering: q8 < f32 sparse < f32 dense
+    assert!(q8.payload_bytes < sparse.payload_bytes, "q8 must undercut f32 sparse");
+    assert!(sparse.payload_bytes < dense.payload_bytes, "sparse must undercut dense");
+    // convergence equivalence vs the dense exchange: error feedback keeps
+    // the quantized trajectory within tolerance step by step
+    for (i, (a, b)) in q8.losses.iter().zip(&dense.losses).enumerate() {
+        assert!(
+            (a - b).abs() < 0.1,
+            "step {i}: q8 loss {a} drifted from dense f32 {b}"
+        );
+    }
+    let tail = |l: &[f32]| l[l.len() - 4..].iter().sum::<f32>() / 4.0;
+    let (tq, td) = (tail(&q8.losses), tail(&dense.losses));
+    assert!((tq - td).abs() < 0.05, "tail loss drifted: q8 {tq} vs dense {td}");
+    assert!(tq < q8.losses[0], "q8 run failed to learn");
+}
+
+#[test]
+fn quantized_serving_verdicts_stable_across_policies_and_replicas() {
+    let ds = smoke_dataset(19);
+    let (_, engine, planner) =
+        trainer::train_ieee118_full(engine_cfg(1), &AccessCfg::default(), &ds, 1, 32, 7);
+    let stream = &ds.samples[..16];
+    let base = ServeSession::from_trained(engine, planner).quantize(QuantizeMode::Int8);
+    let want: Vec<u32> = {
+        let server = base.clone().start();
+        let bits = stream.iter().map(|s| server.infer(s).prob.to_bits()).collect();
+        let _ = server.shutdown();
+        bits
+    };
+    for policy in [Policy::RoundRobin, Policy::LeastQueued, Policy::PlanAffinity] {
+        for replicas in [1usize, 2, 4] {
+            let server = base.clone().replicas(replicas).policy(policy).start();
+            let got: Vec<u32> =
+                stream.iter().map(|s| server.infer(s).prob.to_bits()).collect();
+            assert_eq!(
+                want, got,
+                "{policy:?} x {replicas} replicas changed quantized verdict bits"
+            );
+            let (lifetime, _) = server.shutdown();
+            assert_eq!(lifetime, stream.len() as u64, "requests lost by {policy:?}");
+        }
+    }
+}
