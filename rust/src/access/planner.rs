@@ -9,7 +9,9 @@ use crate::coordinator::engine::EngineCfg;
 use crate::data::ctr::Batch;
 use crate::reorder::bijection::IndexBijection;
 use crate::reorder::online::{BackgroundReorderer, OnlineReorderer, DEFAULT_ADOPT_LAG};
+use crate::runtime::autotune::{AutotuneCfg, CacheBudgetTuner, CacheFeedback, ReorderCadenceTuner};
 use crate::tt::shapes::TtShapes;
+use crate::util::clock::Clock;
 
 /// `[access]` section of the run config.
 #[derive(Clone, Copy, Debug)]
@@ -72,6 +74,20 @@ impl OnlineSlot {
             OnlineSlot::Scheduled(b) => b.observe(col).then(|| &b.bijection),
         }
     }
+
+    fn refresh_every(&self) -> usize {
+        match self {
+            OnlineSlot::Inline(o) => o.refresh_every(),
+            OnlineSlot::Scheduled(b) => b.refresh_every(),
+        }
+    }
+
+    fn set_refresh_every(&mut self, every: usize) {
+        match self {
+            OnlineSlot::Inline(o) => o.set_refresh_every(every),
+            OnlineSlot::Scheduled(b) => b.set_refresh_every(every),
+        }
+    }
 }
 
 /// Plans batches for one engine configuration.
@@ -89,6 +105,12 @@ pub struct AccessPlanner {
     cache_kb: usize,
     /// Fused cross-table sweep policy stamped onto every plan built.
     fuse_tables: bool,
+    /// Cache-budget autotune loop (`None` = static `cache_kb`).
+    cache_tuner: Option<CacheBudgetTuner>,
+    /// Per-slot reorder-cadence autotune loops (online slots only).
+    cadence: Vec<Option<ReorderCadenceTuner>>,
+    /// Scratch: per-slot "adopted a refreshed bijection this batch".
+    adopted: Vec<bool>,
     /// Batches planned so far.
     pub batches_planned: u64,
     /// Online bijection refreshes across all slots.
@@ -103,6 +125,8 @@ impl std::fmt::Debug for AccessPlanner {
             .field("online", &self.online.iter().filter(|o| o.is_some()).count())
             .field("cache_kb", &self.cache_kb)
             .field("fuse_tables", &self.fuse_tables)
+            .field("cache_tuner", &self.cache_tuner)
+            .field("cadence", &self.cadence.iter().filter(|c| c.is_some()).count())
             .field("batches_planned", &self.batches_planned)
             .field("refreshes", &self.refreshes)
             .finish()
@@ -139,6 +163,9 @@ impl AccessPlanner {
             obs: Vec::new(),
             cache_kb: AccessCfg::default().cache_kb,
             fuse_tables: false,
+            cache_tuner: None,
+            cadence: (0..n).map(|_| None).collect(),
+            adopted: vec![false; n],
             batches_planned: 0,
             refreshes: 0,
         }
@@ -228,6 +255,76 @@ impl AccessPlanner {
         }
     }
 
+    /// Install the autotune feedback loops this planner participates in
+    /// (call AFTER `configure`/`enable_online`, so cadence tuners attach
+    /// to the online slots that exist):
+    ///
+    /// * cache-budget: the planner asks the tuner for each batch's
+    ///   `cache_kb` and reports the built plan's distinct-row count; the
+    ///   training loop must push measured step seconds through
+    ///   [`Self::cache_feedback`] to close the loop.
+    /// * reorder cadence: each online slot gets a peak-decay controller
+    ///   fed from its plan's `reuse_rate()`; interval changes are applied
+    ///   to the slot's refresh engine.
+    ///
+    /// No-op for loops the config disables — a planner without tuners
+    /// plans bit-identically to one that never saw this call.  Cloned
+    /// planners share the cache-feedback bus, so install the cache loop
+    /// only on the planner whose steps are actually timed.
+    pub fn enable_autotune(&mut self, autotune: &AutotuneCfg) {
+        if autotune.cache_on() {
+            self.cache_tuner = Some(CacheBudgetTuner::new(autotune, Clock::real()));
+        }
+        if autotune.reorder_on() {
+            for (t, slot) in self.online.iter().enumerate() {
+                if let Some(s) = slot {
+                    self.cadence[t] =
+                        Some(ReorderCadenceTuner::new(s.refresh_every(), autotune));
+                }
+            }
+        }
+    }
+
+    /// Step-time feedback producer for the cache-budget loop (`None`
+    /// when that loop is off).
+    pub fn cache_feedback(&self) -> Option<CacheFeedback> {
+        self.cache_tuner.as_ref().map(|t| t.feedback())
+    }
+
+    /// The cache-budget tuner's state (telemetry/tests).
+    pub fn cache_tuner(&self) -> Option<&CacheBudgetTuner> {
+        self.cache_tuner.as_ref()
+    }
+
+    /// Slot `t`'s cadence tuner (telemetry/tests).
+    pub fn cadence_tuner(&self, t: usize) -> Option<&ReorderCadenceTuner> {
+        self.cadence[t].as_ref()
+    }
+
+    /// Slot `t`'s current online refresh interval (`None` = not online).
+    pub fn online_refresh_every(&self, t: usize) -> Option<usize> {
+        self.online[t].as_ref().map(|s| s.refresh_every())
+    }
+
+    /// Number of sparse table slots this planner plans for.
+    pub fn num_tables(&self) -> usize {
+        self.online.len()
+    }
+
+    /// Stable signature of the planner's table shapes — the cache
+    /// tuner's re-probe trigger (a different model ⇒ stale cost curves).
+    fn shape_sig(&self) -> u64 {
+        use crate::util::hash::{fnv1a_step, FNV_OFFSET};
+        let mut h = FNV_OFFSET;
+        for sh in self.shapes.iter().flatten() {
+            h = fnv1a_step(h, sh.rows);
+            for &m in &sh.m {
+                h = fnv1a_step(h, m);
+            }
+        }
+        h
+    }
+
     /// Per-refresh ingest-thread stall samples (seconds) accumulated by
     /// the scheduled online engines across all slots (empty for the
     /// inline engine, which has no stall accounting).
@@ -274,17 +371,51 @@ impl AccessPlanner {
     pub fn plan_into(&mut self, batch: &Batch, out: &mut BatchPlan) {
         let ns = self.shapes.len();
         for t in 0..ns {
+            self.adopted[t] = false;
             let Some(online) = self.online[t].as_mut() else { continue };
             self.obs.clear();
             self.obs.extend(batch.sparse_col(t, ns));
             if let Some(bij) = online.observe(&self.obs) {
                 self.bijections[t] = Some(bij.clone());
                 self.refreshes += 1;
+                self.adopted[t] = true;
             }
+        }
+        if let Some(tuner) = self.cache_tuner.as_mut() {
+            self.cache_kb = tuner.budget_now();
         }
         out.set_policy(self.cache_kb, self.fuse_tables);
         out.build_into(batch, &self.shapes, &self.bijections);
         self.batches_planned += 1;
+        if self.cache_tuner.is_some() || self.cadence.iter().any(|c| c.is_some()) {
+            self.autotune_post_build(out);
+        }
+    }
+
+    /// Close the autotune loops on a just-built plan: complete the cache
+    /// tuner's issued probe with the plan's distinct-row count, and feed
+    /// each cadence tuner its slot's reuse rate (applying any interval
+    /// change to the slot's refresh engine).
+    fn autotune_post_build(&mut self, out: &BatchPlan) {
+        let sig = self.shape_sig();
+        if let Some(tuner) = self.cache_tuner.as_mut() {
+            let mut rows = 0usize;
+            for t in 0..self.shapes.len() {
+                if let Some(tp) = out.tt_plan(t) {
+                    rows += tp.distinct_rows();
+                }
+            }
+            tuner.note_rows(sig, rows);
+        }
+        for t in 0..self.cadence.len() {
+            let Some(c) = self.cadence[t].as_mut() else { continue };
+            let Some(tp) = out.tt_plan(t) else { continue };
+            if let Some(new_every) = c.observe(tp.reuse_rate(), self.adopted[t]) {
+                if let Some(slot) = self.online[t].as_mut() {
+                    slot.set_refresh_every(new_every);
+                }
+            }
+        }
     }
 
     /// Plan with the CURRENT bijections, without observing or refreshing

@@ -92,6 +92,9 @@ SUBCOMMANDS:
                --quantize off|int8|f16 (int8 also compresses the plan-
                  placed gradient exchange: per-run scales + error
                  feedback on the sender)
+               --autotune (feedback-tune cache_kb from measured step
+                 times and refresh_every from reuse-rate decay; see
+                 the [autotune] config section for the knobs)
   serve        Stream detection over a held-out sample stream
                --requests N  --threshold F
                --replicas N (detector shards; was --workers pre-redesign)
@@ -102,6 +105,8 @@ SUBCOMMANDS:
                --dispatch-us N (per-call dispatch charge)
                --quantize off|int8|f16 (freeze TT cores into quantized
                  tiles for serving; dequantize-in-microkernel fast path)
+               --autotune (per-replica max_batch/deadline_us feedback
+                 loop bounded by [autotune] target_p99_us)
   gen-data     Generate and summarize the IEEE-118 FDIA dataset
                --normal N  --attack N  --seed N
   runtime      Smoke-run the PJRT artifacts (requires `make artifacts`)

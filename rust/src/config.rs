@@ -11,6 +11,7 @@ use crate::access::AccessCfg;
 use crate::coordinator::data_parallel::Placement;
 use crate::coordinator::engine::EngineCfg;
 use crate::exec::ExecCfg;
+use crate::runtime::autotune::AutotuneCfg;
 use crate::serve::{Policy, ServeCfg};
 use crate::tt::table::{EffTtOptions, QuantizeMode};
 
@@ -182,6 +183,11 @@ pub struct RecAdConfig {
     /// dispatch charge, and the load shape (closed-loop `clients` /
     /// open-loop `arrival_rate`).
     pub serve: ServeCfg,
+    /// `[autotune]` section / `--autotune`: feedback controllers folding
+    /// `cache_kb`, `refresh_every`, and serve `max_batch`/`deadline_us`
+    /// into measurement-driven loops.  Off by default; disabled is
+    /// bit-identical to the static paths.
+    pub autotune: AutotuneCfg,
     pub seed: u64,
     pub artifacts_dir: String,
 }
@@ -211,6 +217,7 @@ impl Default for RecAdConfig {
             devices: 1,
             placement: Placement::Replicated,
             serve: ServeCfg::default(),
+            autotune: AutotuneCfg::default(),
             seed: 42,
             artifacts_dir: "artifacts".into(),
         }
@@ -255,6 +262,28 @@ impl RecAdConfig {
                     as u64,
                 clients: t.usize_or("serve.clients", d.serve.clients),
                 arrival_rate: t.num_or("serve.arrival_rate", d.serve.arrival_rate),
+            },
+            autotune: AutotuneCfg {
+                enabled: t.bool_or("autotune.enabled", d.autotune.enabled),
+                cache: t.bool_or("autotune.cache", d.autotune.cache),
+                reorder: t.bool_or("autotune.reorder", d.autotune.reorder),
+                serve: t.bool_or("autotune.serve", d.autotune.serve),
+                cache_ladder: t
+                    .nums("autotune.cache_ladder")
+                    .map(|v| v.into_iter().map(|n| n.max(0.0) as usize).collect())
+                    .unwrap_or(d.autotune.cache_ladder),
+                probe_batches: t
+                    .usize_or("autotune.probe_batches", d.autotune.probe_batches)
+                    .max(1),
+                min_refresh: t.usize_or("autotune.min_refresh", d.autotune.min_refresh).max(1),
+                max_refresh: t.usize_or("autotune.max_refresh", d.autotune.max_refresh).max(1),
+                reuse_decay_tol: t.num_or("autotune.reuse_decay_tol", d.autotune.reuse_decay_tol),
+                target_p99_us: t
+                    .usize_or("autotune.target_p99_us", d.autotune.target_p99_us as usize)
+                    as u64,
+                max_batch_cap: t
+                    .usize_or("autotune.max_batch_cap", d.autotune.max_batch_cap)
+                    .max(1),
             },
             seed: t.num_or("run.seed", d.seed as f64) as u64,
             artifacts_dir: t.str_or("run.artifacts_dir", &d.artifacts_dir).to_string(),
@@ -411,6 +440,36 @@ arrival_rate = 1200.0
         let c = RecAdConfig::from_toml(&t).unwrap();
         assert_eq!(c.devices, 1);
         assert_eq!(c.placement, Placement::Replicated);
+    }
+
+    #[test]
+    fn parses_autotune_section_and_defaults_off() {
+        let t = Toml::parse("[run]\nepochs = 1\n").unwrap();
+        let c = RecAdConfig::from_toml(&t).unwrap();
+        assert_eq!(c.autotune, AutotuneCfg::default());
+        assert!(!c.autotune.enabled, "autotune must default off");
+        let doc = r#"
+[autotune]
+enabled = true
+serve = false
+cache_ladder = [32, 96]
+probe_batches = 5
+min_refresh = 4
+max_refresh = 128
+reuse_decay_tol = 0.2
+target_p99_us = 5000
+max_batch_cap = 8
+"#;
+        let c = RecAdConfig::from_toml(&Toml::parse(doc).unwrap()).unwrap();
+        assert!(c.autotune.enabled && c.autotune.cache_on() && c.autotune.reorder_on());
+        assert!(!c.autotune.serve_on());
+        assert_eq!(c.autotune.cache_ladder, vec![32, 96]);
+        assert_eq!(c.autotune.probe_batches, 5);
+        assert_eq!(c.autotune.min_refresh, 4);
+        assert_eq!(c.autotune.max_refresh, 128);
+        assert!((c.autotune.reuse_decay_tol - 0.2).abs() < 1e-12);
+        assert_eq!(c.autotune.target_p99_us, 5000);
+        assert_eq!(c.autotune.max_batch_cap, 8);
     }
 
     #[test]

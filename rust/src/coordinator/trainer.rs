@@ -13,6 +13,7 @@ use crate::data::batcher::{fill_batch, EpochIter};
 use crate::data::ctr::Batch;
 use crate::metrics::classify::{evaluate, ClassifyReport};
 use crate::powersys::dataset::{Ieee118Dataset, Sample};
+use crate::runtime::autotune::AutotuneCfg;
 use crate::util::prng::Rng;
 
 #[derive(Debug)]
@@ -73,10 +74,32 @@ pub fn train_ieee118_full(
     batch_size: usize,
     seed: u64,
 ) -> (TrainReport, NativeDlrm, AccessPlanner) {
+    train_ieee118_auto(cfg, access, &AutotuneCfg::default(), dataset, epochs, batch_size, seed)
+}
+
+/// [`train_ieee118_full`] with the self-tuning runtime attached.  With
+/// `autotune.enabled = false` (the [`AutotuneCfg`] default) no tuner is
+/// installed and no step is timed — the run is bit-identical to the
+/// static path (pinned in `tests/autotune_equivalence.rs`).  When the
+/// cache loop is on, the consume side times each `train_step_planned`
+/// and feeds the seconds back to the planner's budget ladder; when the
+/// reorder loop is on, each online slot's `refresh_every` follows its
+/// plan's reuse-rate decay.
+pub fn train_ieee118_auto(
+    cfg: EngineCfg,
+    access: &AccessCfg,
+    autotune: &AutotuneCfg,
+    dataset: &Ieee118Dataset,
+    epochs: usize,
+    batch_size: usize,
+    seed: u64,
+) -> (TrainReport, NativeDlrm, AccessPlanner) {
     let (train, test) = dataset.split(0.8);
     let mut engine = NativeDlrm::new(cfg, &mut Rng::new(seed));
     let mut planner = AccessPlanner::for_engine_cfg(&engine.cfg);
     planner.configure(&engine.cfg, access);
+    planner.enable_autotune(autotune);
+    let feedback = planner.cache_feedback();
     let mut rng = Rng::new(seed ^ 0xE90C);
     let mut loss_curve = Vec::new();
     let mut steps = 0u64;
@@ -89,7 +112,16 @@ pub fn train_ieee118_full(
             &mut planner,
             access.plan_ahead,
             |batch, plan| {
-                loss_curve.push(engine.train_step_planned(batch, plan));
+                match &feedback {
+                    Some(fb) => {
+                        // cache loop on: the measured step time is the
+                        // ladder's cost signal for this batch's budget
+                        let ts = Instant::now();
+                        loss_curve.push(engine.train_step_planned(batch, plan));
+                        fb.push(ts.elapsed().as_secs_f64());
+                    }
+                    None => loss_curve.push(engine.train_step_planned(batch, plan)),
+                }
                 steps += 1;
             },
         );

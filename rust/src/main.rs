@@ -89,6 +89,9 @@ fn load_config(cli: &Cli) -> Result<RecAdConfig> {
     if cli.flag("no-reuse") {
         cfg.reuse = false;
     }
+    if cli.flag("autotune") {
+        cfg.autotune.enabled = true;
+    }
     Ok(cfg)
 }
 
@@ -107,6 +110,12 @@ fn cmd_train(cli: &Cli) -> Result<()> {
 
     if cli.flag("pipeline") {
         // PS-pipeline mode over the small host tables
+        if cfg.autotune.enabled {
+            eprintln!(
+                "warning: --autotune applies to single-device access-layer \
+                 training; ignoring it under --pipeline"
+            );
+        }
         if cfg.devices > 1 {
             eprintln!(
                 "warning: --pipeline is single-device; ignoring --devices {} \
@@ -137,6 +146,14 @@ fn cmd_train(cli: &Cli) -> Result<()> {
         // [access] ingest options do not apply — say so instead of
         // silently training a different configuration than requested.
         let access = cfg.access_cfg();
+        if cfg.autotune.enabled {
+            eprintln!(
+                "warning: --autotune tunes the access-layer cache/reorder \
+                 loops; multi-device training (--devices {}) plans inline \
+                 per worker, so it is ignored",
+                cfg.devices
+            );
+        }
         if access.online_reorder
             || access.background_reorder
             || access.fuse_tables
@@ -198,14 +215,33 @@ fn cmd_train(cli: &Cli) -> Result<()> {
         print_eval(&eval);
     } else {
         let access = cfg.access_cfg();
-        let (report, _) = trainer::train_ieee118_with(
+        let (report, _, planner) = trainer::train_ieee118_auto(
             cfg.engine_cfg(),
             &access,
+            &cfg.autotune,
             &ds,
             cfg.epochs,
             cfg.batch_size,
             cfg.seed,
         );
+        if let Some(tuner) = planner.cache_tuner() {
+            println!(
+                "autotune[cache]: committed {} (ladder {:?}, {} reprobe(s))",
+                tuner
+                    .committed_kb()
+                    .map(|kb| format!("{kb} KiB"))
+                    .unwrap_or_else(|| "nothing yet".into()),
+                cfg.autotune.cache_ladder,
+                tuner.reprobes,
+            );
+        }
+        if cfg.autotune.reorder_on() {
+            for t in 0..planner.num_tables() {
+                if let Some(every) = planner.online_refresh_every(t) {
+                    println!("autotune[reorder]: table {t} refresh_every -> {every}");
+                }
+            }
+        }
         println!(
             "trained {} steps in {} ({:.0} samples/s; ingest plan-ahead {}{}{}; \
              max ingest plan stall {})",
@@ -275,8 +311,15 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     // the SAME planner (bijections + layout knobs) the model trained
     // under into every replica.
     let access = cfg.access_cfg();
-    let (report, engine, planner) =
-        trainer::train_ieee118_full(cfg.engine_cfg(), &access, &ds, 2, 64, cfg.seed);
+    let (report, engine, planner) = trainer::train_ieee118_auto(
+        cfg.engine_cfg(),
+        &access,
+        &cfg.autotune,
+        &ds,
+        2,
+        64,
+        cfg.seed,
+    );
     print_eval(&report.eval);
     // report the footprint actually served: frozen tiles when quantizing
     let model_bytes = if cfg.quantize != QuantizeMode::Off {
@@ -295,7 +338,15 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let session = ServeSession::from_trained(engine, planner)
         .threshold(threshold)
         .with_cfg(&scfg)
-        .quantize(cfg.quantize);
+        .quantize(cfg.quantize)
+        .autotune(&cfg.autotune);
+    if cfg.autotune.serve_on() {
+        println!(
+            "autotune[serve]: replicas adapt max_batch/deadline toward \
+             p99 <= {} us (cap {})",
+            cfg.autotune.target_p99_us, cfg.autotune.max_batch_cap
+        );
+    }
     let stream = &ds.samples[..requests.min(ds.samples.len())];
     if scfg.arrival_rate > 0.0 {
         // open loop: Poisson arrivals, attack-window accounting

@@ -91,6 +91,17 @@ impl OnlineReorderer {
         self.refreshes += 1;
         true
     }
+
+    /// Current refresh interval (batches between rebuilds).
+    pub fn refresh_every(&self) -> usize {
+        self.refresh_every
+    }
+
+    /// Retune the refresh interval (autotune cadence controller).  Takes
+    /// effect at the next trigger check; clamped to >= 1.
+    pub fn set_refresh_every(&mut self, every: usize) {
+        self.refresh_every = every.max(1);
+    }
 }
 
 /// Default adoption lag of the scheduled refresh engines: the rebuild
@@ -171,6 +182,10 @@ pub struct BackgroundReorderer {
     /// Bounded telemetry: when it reaches [`STALL_SAMPLE_CAP`] the oldest
     /// half is dropped, so steady-state memory stays flat on long runs.
     pub stall_samples: Vec<f64>,
+    /// Running maximum over ALL stall samples ever recorded — tracked
+    /// independently of the drained ring so [`Self::max_stall`] stays
+    /// exact after the cap evicts old samples.
+    stall_max: f64,
 }
 
 /// Cap on retained stall samples (halved when reached).
@@ -210,6 +225,7 @@ impl BackgroundReorderer {
             bijection: IndexBijection::identity(rows),
             refreshes: 0,
             stall_samples: Vec::new(),
+            stall_max: 0.0,
         }
     }
 
@@ -272,10 +288,7 @@ impl BackgroundReorderer {
                 Some(b) => b,
                 None => self.await_epoch(p.epoch, p.job.take()),
             };
-            if self.stall_samples.len() >= STALL_SAMPLE_CAP {
-                self.stall_samples.drain(..STALL_SAMPLE_CAP / 2);
-            }
-            self.stall_samples.push(p.stall_so_far + t0.elapsed().as_secs_f64());
+            self.record_stall(p.stall_so_far + t0.elapsed().as_secs_f64());
             self.bijection = bij;
             self.refreshes += 1;
             return true;
@@ -286,9 +299,34 @@ impl BackgroundReorderer {
         false
     }
 
-    /// Maximum per-refresh ingest stall observed so far (seconds).
+    /// Record one per-refresh stall sample: the ring is halved at its cap
+    /// (bounded memory), but the running maximum is updated first so
+    /// `max_stall` never under-reports a drained sample.
+    fn record_stall(&mut self, secs: f64) {
+        self.stall_max = self.stall_max.max(secs);
+        if self.stall_samples.len() >= STALL_SAMPLE_CAP {
+            self.stall_samples.drain(..STALL_SAMPLE_CAP / 2);
+        }
+        self.stall_samples.push(secs);
+    }
+
+    /// Maximum per-refresh ingest stall observed so far (seconds) — over
+    /// the engine's whole lifetime, not just the retained ring.
     pub fn max_stall(&self) -> f64 {
-        self.stall_samples.iter().cloned().fold(0.0, f64::max)
+        self.stall_max
+    }
+
+    /// Current refresh interval (batches between rebuild triggers).
+    pub fn refresh_every(&self) -> usize {
+        self.refresh_every
+    }
+
+    /// Retune the refresh interval (autotune cadence controller).  Takes
+    /// effect at the next trigger check; clamped to >= 1.  The adoption
+    /// lag of an in-flight refresh is untouched, so retuning never
+    /// perturbs the fixed batch-indexed adoption schedule.
+    pub fn set_refresh_every(&mut self, every: usize) {
+        self.refresh_every = every.max(1);
     }
 
     /// Snapshot the rebuild inputs at the trigger point.
@@ -453,6 +491,7 @@ impl Clone for BackgroundReorderer {
             bijection: self.bijection.clone(),
             refreshes: self.refreshes,
             stall_samples: self.stall_samples.clone(),
+            stall_max: self.stall_max,
         }
     }
 }
@@ -683,6 +722,49 @@ mod tests {
         for i in 0..vocab {
             assert_eq!(r.bijection.apply(i), c.bijection.apply(i), "clone diverged at {i}");
         }
+    }
+
+    /// Regression: the stall-sample ring halves itself at its cap, which
+    /// used to silently discard the largest sample — `max_stall()` then
+    /// under-reported.  The running max must survive the drain.
+    #[test]
+    fn max_stall_survives_sample_ring_drain() {
+        let mut r = BackgroundReorderer::new(100, 0.1, 1, 1, 0, false);
+        r.record_stall(9.0); // the lifetime maximum, recorded early
+        for _ in 0..(STALL_SAMPLE_CAP + 10) {
+            r.record_stall(0.001); // enough traffic to drain the ring twice
+        }
+        assert!(
+            !r.stall_samples.contains(&9.0),
+            "test premise: the big sample must have been drained"
+        );
+        assert!(r.stall_samples.len() <= STALL_SAMPLE_CAP, "ring must stay bounded");
+        assert_eq!(r.max_stall(), 9.0, "running max must survive the drain");
+    }
+
+    #[test]
+    fn retuned_refresh_interval_takes_effect_next_trigger() {
+        let vocab = 1000u64;
+        let z = Zipf::new(vocab, 1.2);
+        let mut rng = Rng::new(5);
+        let mut r = BackgroundReorderer::new(vocab, 0.1, 8, 8, 0, false);
+        assert_eq!(r.refresh_every(), 8);
+        r.set_refresh_every(2);
+        assert_eq!(r.refresh_every(), 2);
+        let mut adopted_at = Vec::new();
+        for step in 0..6 {
+            let col: Vec<u64> = (0..64).map(|_| z.sample(&mut rng)).collect();
+            if r.observe(&col) {
+                adopted_at.push(step);
+            }
+        }
+        // lag 0: triggers and adoptions land on the same batch, every 2
+        assert_eq!(adopted_at, vec![1, 3, 5]);
+        let mut o = OnlineReorderer::new(vocab, 0.1, 8, 8);
+        o.set_refresh_every(1);
+        assert_eq!(o.refresh_every(), 1);
+        let col: Vec<u64> = (0..64).map(|_| z.sample(&mut rng)).collect();
+        assert!(o.observe(&col), "interval 1 must refresh on every batch");
     }
 
     #[test]

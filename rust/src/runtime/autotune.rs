@@ -1,0 +1,785 @@
+//! Self-tuning runtime: feedback controllers that fold the static
+//! performance knobs into measurement-driven loops.
+//!
+//! Three controllers, one per knob family, all **off by default** and
+//! provably inert when disabled (the hook sites consult them only when
+//! installed; `tests/autotune_equivalence.rs` pins autotune=off
+//! bit-identical to the static paths):
+//!
+//! * [`CacheBudgetTuner`] — picks `[access] cache_kb` by probing a small
+//!   ladder of budgets during the first batches: each planned batch is
+//!   built under one rung, the trainer reports the measured step time
+//!   through a [`CacheFeedback`] bus, and the tuner normalizes it to
+//!   seconds per distinct TT row (so batch-composition noise cancels).
+//!   Once every rung has `probe_batches` samples it commits the argmin
+//!   and stops probing; a table-shape change or a >2× drift in distinct
+//!   rows per batch re-opens the probe.
+//! * [`ReorderCadenceTuner`] — adapts `refresh_every` from the observed
+//!   `TtPlan::reuse_rate()`: a fresh bijection re-baselines the peak;
+//!   when the smoothed reuse decays `reuse_decay_tol` below that peak
+//!   the interval halves (drift: refresh sooner), and after a long
+//!   decay-free stretch it doubles (stable: rebuild less).
+//! * [`ServeBatchTuner`] — nudges a replica's `max_batch`/`deadline_us`
+//!   from the queue-delay vs service-time split each `Reply` already
+//!   carries, bounded by a p99 attack-window target: over target it
+//!   stops waiting for fill (deadline → 0) and, when queueing dominates,
+//!   widens batches to drain the queue; under target it grows batches
+//!   under queue pressure or allows a bounded fill wait otherwise.
+//!
+//! All three are built on the injectable [`Clock`] + [`Ewma`] from
+//! `util::clock`, so their unit tests run wall-clock-free.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::clock::{Clock, Ewma};
+use crate::util::stats::percentile;
+
+/// `[autotune]` config section (also `--autotune` on the CLI).  The
+/// master `enabled` switch gates all three loops; the per-loop flags
+/// select which knob families participate once enabled.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AutotuneCfg {
+    /// Master switch; `false` (the default) leaves every static path
+    /// untouched.
+    pub enabled: bool,
+    /// Tune `[access] cache_kb` from measured step times.
+    pub cache: bool,
+    /// Tune `[access] refresh_every` from reuse-rate decay.
+    pub reorder: bool,
+    /// Tune `[serve] max_batch`/`deadline_us` per replica.
+    pub serve: bool,
+    /// Cache budgets (KiB) probed before committing.
+    pub cache_ladder: Vec<usize>,
+    /// Feedback samples required per rung before the ladder commits.
+    pub probe_batches: usize,
+    /// Cadence bounds: `refresh_every` is clamped to this range.
+    pub min_refresh: usize,
+    pub max_refresh: usize,
+    /// Fractional reuse-rate decay below the post-refresh peak that
+    /// triggers a cadence shorten (0.1 = 10% below peak).
+    pub reuse_decay_tol: f64,
+    /// Serve-loop p99 attack-window target (µs).
+    pub target_p99_us: u64,
+    /// Upper bound on autotuned `max_batch`.
+    pub max_batch_cap: usize,
+}
+
+impl Default for AutotuneCfg {
+    fn default() -> Self {
+        AutotuneCfg {
+            enabled: false,
+            cache: true,
+            reorder: true,
+            serve: true,
+            cache_ladder: vec![64, 128, 256, 512],
+            probe_batches: 3,
+            min_refresh: 2,
+            max_refresh: 512,
+            reuse_decay_tol: 0.1,
+            target_p99_us: 20_000,
+            max_batch_cap: 32,
+        }
+    }
+}
+
+impl AutotuneCfg {
+    /// Cache-budget loop active?
+    pub fn cache_on(&self) -> bool {
+        self.enabled && self.cache && !self.cache_ladder.is_empty()
+    }
+
+    /// Reorder-cadence loop active?
+    pub fn reorder_on(&self) -> bool {
+        self.enabled && self.reorder
+    }
+
+    /// Serve-batching loop active?
+    pub fn serve_on(&self) -> bool {
+        self.enabled && self.serve
+    }
+
+    /// The serve-loop parameters the server threads consume.
+    pub fn serve_tune(&self) -> ServeTuneCfg {
+        ServeTuneCfg {
+            target_p99: Duration::from_micros(self.target_p99_us.max(1)),
+            max_batch_cap: self.max_batch_cap.max(1),
+            adjust_every: 64,
+            min_interval: Duration::from_millis(1),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cache-budget tuning
+// ---------------------------------------------------------------------------
+
+/// Producer handle of the step-time feedback bus: the trainer's consume
+/// closure times `train_step_planned` and pushes the seconds here; the
+/// planner-side [`CacheBudgetTuner`] drains them in batch order.
+#[derive(Clone)]
+pub struct CacheFeedback(Arc<Mutex<VecDeque<f64>>>);
+
+impl CacheFeedback {
+    /// Report one measured step time (seconds) for the oldest
+    /// not-yet-scored planned batch.
+    pub fn push(&self, secs: f64) {
+        self.0.lock().unwrap().push_back(secs);
+    }
+}
+
+/// One planned-but-not-yet-scored batch: which rung sized its layout,
+/// and (once the plan is built) how many distinct TT rows it walked.
+#[derive(Clone, Debug)]
+struct IssuedProbe {
+    rung: usize,
+    rows: Option<usize>,
+}
+
+/// Ladder-probing controller for the per-batch cache budget.  Drive it
+/// from the planning loop:
+///
+/// 1. [`CacheBudgetTuner::budget_now`] BEFORE the layout policy is set —
+///    returns the cache budget (KiB) this batch should be built under;
+/// 2. [`CacheBudgetTuner::note_rows`] AFTER the plan is built — reports
+///    the shape signature + distinct-row count that normalize feedback;
+/// 3. the trainer pushes measured step seconds via [`CacheFeedback`].
+///
+/// Feedback arrives in batch order (the trainer consumes batches in the
+/// order they were planned), so attribution is a FIFO walk of the
+/// issued-probe queue — no timestamps needed.
+#[derive(Clone)]
+pub struct CacheBudgetTuner {
+    ladder: Vec<usize>,
+    probe_batches: usize,
+    /// Seconds per distinct row, smoothed per rung.
+    cost: Vec<Ewma>,
+    /// Scored feedback samples per rung.
+    seen: Vec<usize>,
+    issued: VecDeque<IssuedProbe>,
+    feedback: CacheFeedback,
+    /// Committed rung index once the ladder has settled.
+    committed: Option<usize>,
+    /// Distinct-rows-per-batch level at commit time (drift detector).
+    committed_rows: Option<usize>,
+    committed_at: Option<f64>,
+    shape_sig: Option<u64>,
+    last_rows: usize,
+    clock: Clock,
+    /// Times the probe re-opened (shape change or row drift).
+    pub reprobes: u64,
+}
+
+impl CacheBudgetTuner {
+    pub fn new(cfg: &AutotuneCfg, clock: Clock) -> Self {
+        let ladder = if cfg.cache_ladder.is_empty() {
+            AutotuneCfg::default().cache_ladder
+        } else {
+            cfg.cache_ladder.clone()
+        };
+        let n = ladder.len();
+        CacheBudgetTuner {
+            ladder,
+            probe_batches: cfg.probe_batches.max(1),
+            cost: vec![Ewma::new(0.5); n],
+            seen: vec![0; n],
+            issued: VecDeque::new(),
+            feedback: CacheFeedback(Arc::new(Mutex::new(VecDeque::new()))),
+            committed: None,
+            committed_rows: None,
+            committed_at: None,
+            shape_sig: None,
+            last_rows: 0,
+            clock,
+            reprobes: 0,
+        }
+    }
+
+    /// The feedback bus producer handle (hand it to the timing site).
+    pub fn feedback(&self) -> CacheFeedback {
+        self.feedback.clone()
+    }
+
+    /// Budget (KiB) for the batch about to be planned.  Drains pending
+    /// feedback, commits the ladder argmin once every rung has
+    /// `probe_batches` scored samples, and records the issued probe.
+    pub fn budget_now(&mut self) -> usize {
+        self.drain_feedback();
+        let rung = match self.committed {
+            Some(r) => r,
+            None => self.least_probed_rung(),
+        };
+        self.issued.push_back(IssuedProbe { rung, rows: None });
+        self.ladder[rung]
+    }
+
+    /// Report the built plan's shape signature + distinct TT rows.  A
+    /// signature change or a >2× distinct-row drift from the committed
+    /// level re-opens the probe.
+    pub fn note_rows(&mut self, shape_sig: u64, rows: usize) {
+        if self.shape_sig != Some(shape_sig) {
+            if self.shape_sig.is_some() {
+                self.reprobe();
+            }
+            self.shape_sig = Some(shape_sig);
+        }
+        self.last_rows = rows;
+        if let Some(p) = self.issued.iter_mut().find(|p| p.rows.is_none()) {
+            p.rows = Some(rows);
+        }
+        if self.committed.is_some() {
+            let base = self.committed_rows.unwrap_or(rows).max(1);
+            if rows > base * 2 || rows * 2 < base {
+                self.reprobe();
+            }
+        }
+    }
+
+    /// Committed budget (KiB), once the ladder has settled.
+    pub fn committed_kb(&self) -> Option<usize> {
+        self.committed.map(|r| self.ladder[r])
+    }
+
+    /// Seconds-since-start at which the current commit landed.
+    pub fn committed_at(&self) -> Option<f64> {
+        self.committed_at
+    }
+
+    fn least_probed_rung(&self) -> usize {
+        // count in-flight issues so consecutive prefetched batches spread
+        // across rungs instead of piling onto one
+        let mut load = self.seen.clone();
+        for p in &self.issued {
+            load[p.rung] += 1;
+        }
+        let mut best = 0;
+        for (i, &n) in load.iter().enumerate() {
+            if n < load[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    fn drain_feedback(&mut self) {
+        loop {
+            let secs = {
+                let mut q = self.feedback.0.lock().unwrap();
+                // the front probe must already know its row count (its
+                // plan was built before its step could be timed); if not,
+                // the sample belongs to a future batch — leave it queued
+                if self.issued.front().map_or(true, |p| p.rows.is_none()) {
+                    break;
+                }
+                match q.pop_front() {
+                    Some(s) => s,
+                    None => break,
+                }
+            };
+            let p = self.issued.pop_front().expect("checked above");
+            let rows = p.rows.expect("checked above").max(1);
+            self.seen[p.rung] += 1;
+            self.cost[p.rung].observe(secs / rows as f64);
+        }
+        if self.committed.is_none() && self.seen.iter().all(|&n| n >= self.probe_batches) {
+            let mut best = 0;
+            for i in 1..self.ladder.len() {
+                if self.cost[i].or(f64::INFINITY) < self.cost[best].or(f64::INFINITY) {
+                    best = i;
+                }
+            }
+            self.committed = Some(best);
+            self.committed_rows = Some(self.last_rows);
+            self.committed_at = Some(self.clock.now());
+        }
+    }
+
+    fn reprobe(&mut self) {
+        self.committed = None;
+        self.committed_rows = None;
+        self.committed_at = None;
+        for c in &mut self.cost {
+            c.reset();
+        }
+        for s in &mut self.seen {
+            *s = 0;
+        }
+        self.reprobes += 1;
+    }
+}
+
+impl std::fmt::Debug for CacheBudgetTuner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CacheBudgetTuner")
+            .field("ladder", &self.ladder)
+            .field("seen", &self.seen)
+            .field("committed_kb", &self.committed_kb())
+            .field("reprobes", &self.reprobes)
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reorder-cadence tuning
+// ---------------------------------------------------------------------------
+
+/// Peak-decay controller for `refresh_every`.  Feed it once per planned
+/// batch per table; it returns `Some(new_interval)` when the cadence
+/// should change (apply via `set_refresh_every` on the reorder engine).
+#[derive(Clone, Debug)]
+pub struct ReorderCadenceTuner {
+    every: usize,
+    min: usize,
+    max: usize,
+    decay_tol: f64,
+    reuse: Ewma,
+    /// Post-refresh peak of the smoothed reuse rate.
+    peak: f64,
+    /// Batches since the last decay signal or cadence change.
+    stable: usize,
+    /// Times the interval halved (drift detected).
+    pub shortens: u64,
+    /// Times the interval doubled (reuse stable).
+    pub relaxes: u64,
+}
+
+impl ReorderCadenceTuner {
+    pub fn new(initial_every: usize, cfg: &AutotuneCfg) -> Self {
+        let min = cfg.min_refresh.max(1);
+        let max = cfg.max_refresh.max(min);
+        ReorderCadenceTuner {
+            every: initial_every.clamp(min, max),
+            min,
+            max,
+            decay_tol: cfg.reuse_decay_tol.clamp(0.0, 1.0),
+            reuse: Ewma::new(0.3),
+            peak: 0.0,
+            stable: 0,
+            shortens: 0,
+            relaxes: 0,
+        }
+    }
+
+    /// Current interval (the engine may have started from a different
+    /// clamp; callers apply returned changes, this mirrors them).
+    pub fn every(&self) -> usize {
+        self.every
+    }
+
+    /// Observe one batch's reuse rate; `adopted` marks the batch where a
+    /// refreshed bijection landed (it re-baselines the peak — reuse
+    /// legitimately jumps there).  Returns the new interval when the
+    /// cadence changes.
+    pub fn observe(&mut self, reuse_rate: f64, adopted: bool) -> Option<usize> {
+        let smoothed = self.reuse.observe(reuse_rate);
+        if adopted {
+            self.peak = smoothed;
+        } else {
+            self.peak = self.peak.max(smoothed);
+            if smoothed < self.peak * (1.0 - self.decay_tol) && self.every > self.min {
+                // reuse decayed below the post-refresh peak: drift —
+                // refresh more often
+                self.every = (self.every / 2).max(self.min);
+                self.shortens += 1;
+                self.peak = smoothed;
+                self.stable = 0;
+                return Some(self.every);
+            }
+        }
+        self.stable += 1;
+        if self.stable >= self.every * 2 && self.every < self.max {
+            // a full double interval with no decay: stable — rebuild less
+            self.every = (self.every * 2).min(self.max);
+            self.relaxes += 1;
+            self.stable = 0;
+            return Some(self.every);
+        }
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serve-batching tuning
+// ---------------------------------------------------------------------------
+
+/// Serve-loop parameters consumed by the server worker threads.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeTuneCfg {
+    /// p99 attack-window bound the knobs must respect.
+    pub target_p99: Duration,
+    /// Upper bound on autotuned `max_batch`.
+    pub max_batch_cap: usize,
+    /// Replies between knob adjustments.
+    pub adjust_every: usize,
+    /// Minimum wall time between adjustments (debounce under bursts).
+    pub min_interval: Duration,
+}
+
+/// The fill deadline never exceeds `target_p99 * DEADLINE_FRAC`: waiting
+/// longer than a quarter of the latency budget for batch fill can never
+/// pay for itself at p99.
+pub const DEADLINE_FRAC: f64 = 0.25;
+
+/// The live `max_batch`/`deadline` pair a worker loop reads each
+/// iteration — atomics behind an `Arc` so the tuner (same thread) and
+/// any observer (stats thread, tests) see consistent values without
+/// locking the hot path.
+#[derive(Debug)]
+pub struct BatchKnobs {
+    max_batch: AtomicUsize,
+    deadline_ns: AtomicU64,
+}
+
+impl BatchKnobs {
+    pub fn new(max_batch: usize, deadline: Duration) -> Arc<BatchKnobs> {
+        Arc::new(BatchKnobs {
+            max_batch: AtomicUsize::new(max_batch.max(1)),
+            deadline_ns: AtomicU64::new(deadline.as_nanos().min(u64::MAX as u128) as u64),
+        })
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch.load(Ordering::Relaxed)
+    }
+
+    pub fn deadline(&self) -> Duration {
+        Duration::from_nanos(self.deadline_ns.load(Ordering::Relaxed))
+    }
+
+    fn set(&self, max_batch: usize, deadline: Duration) {
+        self.max_batch.store(max_batch.max(1), Ordering::Relaxed);
+        self.deadline_ns
+            .store(deadline.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+    }
+}
+
+/// Per-replica micro-batching controller.  Feed every reply's
+/// end-to-end window + its queue/service split; every `adjust_every`
+/// replies (debounced by `min_interval`) it recomputes the window p99
+/// and nudges the knobs:
+///
+/// * p99 over target → deadline halves toward 0 (stop waiting for
+///   fill), and if queue delay dominates service time, `max_batch`
+///   doubles (drain the queue in fewer dispatches);
+/// * p99 under target, queue-dominated → `max_batch` doubles (up to the
+///   cap);
+/// * p99 under target, service-dominated → the fill deadline may grow,
+///   but never beyond `min(headroom/4, target * DEADLINE_FRAC)`.
+///
+/// Invariants (pinned in tests): `max_batch ∈ [1, cap]`; `deadline ≤
+/// target_p99 * DEADLINE_FRAC` always; an over-target adjustment never
+/// raises the deadline.
+pub struct ServeBatchTuner {
+    cfg: ServeTuneCfg,
+    knobs: Arc<BatchKnobs>,
+    clock: Clock,
+    window: Vec<f64>,
+    queue: Ewma,
+    service: Ewma,
+    last_adjust: Option<f64>,
+    /// Number of knob adjustments applied.
+    pub adjustments: u64,
+}
+
+impl ServeBatchTuner {
+    pub fn new(
+        cfg: ServeTuneCfg,
+        initial_batch: usize,
+        initial_deadline: Duration,
+        clock: Clock,
+    ) -> Self {
+        let bound = cfg.target_p99.mul_f64(DEADLINE_FRAC);
+        let knobs = BatchKnobs::new(
+            initial_batch.clamp(1, cfg.max_batch_cap.max(1)),
+            initial_deadline.min(bound),
+        );
+        ServeBatchTuner {
+            cfg,
+            knobs,
+            clock,
+            window: Vec::new(),
+            queue: Ewma::new(0.2),
+            service: Ewma::new(0.2),
+            last_adjust: None,
+            adjustments: 0,
+        }
+    }
+
+    /// The shared knob pair the worker loop reads.
+    pub fn knobs(&self) -> Arc<BatchKnobs> {
+        Arc::clone(&self.knobs)
+    }
+
+    /// Feed one reply: end-to-end attack window, its queue-delay part,
+    /// and its service-time part.
+    pub fn observe(&mut self, window: Duration, queue_delay: Duration, service: Duration) {
+        self.window.push(window.as_secs_f64());
+        self.queue.observe(queue_delay.as_secs_f64());
+        self.service.observe(service.as_secs_f64());
+        if self.window.len() < self.cfg.adjust_every.max(1) {
+            return;
+        }
+        let now = self.clock.now();
+        if let Some(last) = self.last_adjust {
+            if now - last < self.cfg.min_interval.as_secs_f64() {
+                return; // debounce: keep accumulating
+            }
+        }
+        self.adjust(now);
+    }
+
+    fn adjust(&mut self, now: f64) {
+        let mut w = std::mem::take(&mut self.window);
+        w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99 = percentile(&w, 0.99);
+        let target = self.cfg.target_p99.as_secs_f64();
+        let bound = target * DEADLINE_FRAC;
+        let queue_dominated = self.queue.or(0.0) > self.service.or(0.0);
+        let b = self.knobs.max_batch();
+        let d = self.knobs.deadline().as_secs_f64();
+        let (nb, nd) = if p99 > target {
+            // over budget: stop waiting for fill; widen batches only if
+            // the time is going to queueing rather than compute
+            let nd = if d / 2.0 < target * 0.05 { 0.0 } else { d / 2.0 };
+            let nb = if queue_dominated { (b * 2).min(self.cfg.max_batch_cap) } else { b };
+            (nb, nd)
+        } else if queue_dominated {
+            // under budget but queueing: bigger dispatches, same wait
+            ((b * 2).min(self.cfg.max_batch_cap), d)
+        } else {
+            // under budget, compute-bound: allow a bounded fill wait so
+            // batching amortizes dispatch overhead
+            let headroom = ((target - p99) / 4.0).max(0.0);
+            let grown = (d.max(target * 0.01) * 2.0).min(headroom);
+            (b, grown.max(d).min(bound))
+        };
+        let changed = nb != b || (nd - d).abs() > 1e-12;
+        self.knobs.set(nb, Duration::from_secs_f64(nd.clamp(0.0, bound)));
+        if changed {
+            self.adjustments += 1;
+        }
+        self.last_adjust = Some(now);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn on() -> AutotuneCfg {
+        AutotuneCfg { enabled: true, ..AutotuneCfg::default() }
+    }
+
+    #[test]
+    fn disabled_cfg_gates_every_loop() {
+        let off = AutotuneCfg::default();
+        assert!(!off.enabled && !off.cache_on() && !off.reorder_on() && !off.serve_on());
+        let on = on();
+        assert!(on.cache_on() && on.reorder_on() && on.serve_on());
+        let partial = AutotuneCfg { serve: false, ..on };
+        assert!(partial.cache_on() && !partial.serve_on());
+    }
+
+    /// Synthetic cost model: rung 1 (128 KiB) is cheapest.  The ladder
+    /// must probe every rung, commit 128, and stay committed.
+    #[test]
+    fn cache_ladder_settles_on_cheapest_rung() {
+        let cfg = on();
+        let mut t = CacheBudgetTuner::new(&cfg, Clock::manual());
+        let fb = t.feedback();
+        let cost_of = |kb: usize| match kb {
+            64 => 4.0e-3,
+            128 => 1.0e-3,
+            256 => 2.0e-3,
+            _ => 3.0e-3,
+        };
+        let mut history = Vec::new();
+        for _ in 0..40 {
+            let kb = t.budget_now();
+            history.push(kb);
+            t.note_rows(0xABCD, 1000);
+            fb.push(cost_of(kb));
+        }
+        assert_eq!(t.committed_kb(), Some(128), "ladder must commit the cheapest rung");
+        assert_eq!(t.reprobes, 0);
+        // every rung was probed at least probe_batches times
+        for &kb in &cfg.cache_ladder {
+            assert!(
+                history.iter().filter(|&&h| h == kb).count() >= cfg.probe_batches,
+                "rung {kb} under-probed"
+            );
+        }
+        // and the tail is pure committed budget
+        assert!(history[history.len() - 8..].iter().all(|&h| h == 128));
+    }
+
+    #[test]
+    fn cache_ladder_reprobes_on_shape_change_and_row_drift() {
+        let cfg = on();
+        let mut t = CacheBudgetTuner::new(&cfg, Clock::manual());
+        let fb = t.feedback();
+        for _ in 0..20 {
+            let kb = t.budget_now();
+            t.note_rows(1, 1000);
+            fb.push(if kb == 512 { 1.0e-3 } else { 5.0e-3 });
+        }
+        assert_eq!(t.committed_kb(), Some(512));
+        // shape change: probe re-opens
+        t.budget_now();
+        t.note_rows(2, 1000);
+        assert_eq!(t.committed_kb(), None, "shape change must re-open the probe");
+        assert_eq!(t.reprobes, 1);
+        fb.push(1.0e-3);
+        for _ in 0..20 {
+            let kb = t.budget_now();
+            t.note_rows(2, 1000);
+            fb.push(if kb == 64 { 1.0e-3 } else { 5.0e-3 });
+        }
+        assert_eq!(t.committed_kb(), Some(64), "re-probe must re-commit on new costs");
+        // row drift beyond 2x: probe re-opens again
+        t.budget_now();
+        t.note_rows(2, 2500);
+        assert_eq!(t.committed_kb(), None, "row drift must re-open the probe");
+        assert_eq!(t.reprobes, 2);
+    }
+
+    #[test]
+    fn cadence_shortens_under_decay_and_relaxes_when_stable() {
+        let cfg = on();
+        let mut t = ReorderCadenceTuner::new(64, &cfg);
+        assert_eq!(t.every(), 64);
+        // drift: reuse decays steadily from a high post-refresh peak
+        let mut reuse = 0.9;
+        let mut changed = Vec::new();
+        t.observe(reuse, true); // fresh bijection baselines the peak
+        for _ in 0..14 {
+            reuse *= 0.95;
+            if let Some(e) = t.observe(reuse, false) {
+                changed.push(e);
+            }
+        }
+        assert!(t.shortens >= 2, "steady decay must shorten the cadence");
+        assert!(t.every() < 64);
+        assert!(changed.windows(2).all(|w| w[1] <= w[0]), "shortens must be monotone");
+        assert!(t.every() >= cfg.min_refresh, "cadence must respect the floor");
+        // stability: constant reuse relaxes the cadence back out
+        let short = t.every();
+        let mut relaxed = false;
+        for _ in 0..(short * 8) {
+            if t.observe(0.5, false).is_some() {
+                relaxed = true;
+            }
+        }
+        assert!(relaxed && t.every() > short, "stable reuse must relax the cadence");
+        assert!(t.relaxes >= 1);
+        assert!(t.every() <= cfg.max_refresh);
+    }
+
+    #[test]
+    fn cadence_never_leaves_bounds() {
+        let cfg = AutotuneCfg { min_refresh: 4, max_refresh: 16, ..on() };
+        let mut t = ReorderCadenceTuner::new(1000, &cfg);
+        assert_eq!(t.every(), 16, "initial interval clamps into range");
+        // hammer decay: must stop at the floor
+        for i in 0..200 {
+            t.observe(if i % 2 == 0 { 0.9 } else { 0.1 }, false);
+            assert!(t.every() >= 4 && t.every() <= 16);
+        }
+    }
+
+    fn serve_cfg() -> ServeTuneCfg {
+        ServeTuneCfg {
+            target_p99: Duration::from_micros(10_000),
+            max_batch_cap: 16,
+            adjust_every: 8,
+            min_interval: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn over_target_drives_deadline_to_zero_and_respects_cap() {
+        let cfg = serve_cfg();
+        let mut t =
+            ServeBatchTuner::new(cfg, 4, Duration::from_micros(2_000), Clock::manual());
+        let knobs = t.knobs();
+        let mut deadlines = vec![knobs.deadline()];
+        // queue-dominated overload: window 20ms, 15ms of it queueing
+        for _ in 0..200 {
+            t.observe(
+                Duration::from_millis(20),
+                Duration::from_millis(15),
+                Duration::from_millis(5),
+            );
+            deadlines.push(knobs.deadline());
+        }
+        assert!(t.adjustments >= 1);
+        assert_eq!(knobs.deadline(), Duration::ZERO, "over target must stop fill waits");
+        assert!(deadlines.windows(2).all(|w| w[1] <= w[0]), "deadline never grows over target");
+        assert_eq!(knobs.max_batch(), cfg.max_batch_cap, "queue pressure widens to the cap");
+    }
+
+    #[test]
+    fn under_target_grows_batch_under_queue_pressure_only() {
+        let cfg = serve_cfg();
+        let mut t = ServeBatchTuner::new(cfg, 2, Duration::ZERO, Clock::manual());
+        let knobs = t.knobs();
+        // fast replies, but queue delay dominates service
+        for _ in 0..40 {
+            t.observe(
+                Duration::from_micros(500),
+                Duration::from_micros(400),
+                Duration::from_micros(100),
+            );
+        }
+        assert!(knobs.max_batch() > 2, "queue-dominated must widen batches");
+        assert!(knobs.max_batch() <= cfg.max_batch_cap);
+    }
+
+    #[test]
+    fn deadline_never_exceeds_p99_bound() {
+        let cfg = serve_cfg();
+        let bound = cfg.target_p99.mul_f64(DEADLINE_FRAC);
+        // an initial deadline beyond the bound is clamped at construction
+        let t = ServeBatchTuner::new(cfg, 1, Duration::from_secs(1), Clock::manual());
+        assert!(t.knobs().deadline() <= bound);
+        // light compute-bound load: deadline may grow but never past the bound
+        let mut t = ServeBatchTuner::new(cfg, 1, Duration::ZERO, Clock::manual());
+        let knobs = t.knobs();
+        for _ in 0..400 {
+            t.observe(
+                Duration::from_micros(300),
+                Duration::from_micros(20),
+                Duration::from_micros(280),
+            );
+            assert!(knobs.deadline() <= bound, "deadline exceeded the p99 bound");
+        }
+        assert!(knobs.deadline() > Duration::ZERO, "light load should allow some fill wait");
+        assert_eq!(knobs.max_batch(), 1, "service-dominated load must not widen batches");
+    }
+
+    #[test]
+    fn min_interval_debounces_adjustments() {
+        let cfg = ServeTuneCfg { min_interval: Duration::from_secs(1), ..serve_cfg() };
+        let clock = Clock::manual();
+        let mut t = ServeBatchTuner::new(cfg, 1, Duration::ZERO, clock.clone());
+        for _ in 0..100 {
+            t.observe(
+                Duration::from_micros(500),
+                Duration::from_micros(400),
+                Duration::from_micros(100),
+            );
+        }
+        assert_eq!(t.adjustments, 1, "only the first adjustment fits in the debounce window");
+        clock.advance(2.0);
+        for _ in 0..cfg.adjust_every {
+            t.observe(
+                Duration::from_micros(500),
+                Duration::from_micros(400),
+                Duration::from_micros(100),
+            );
+        }
+        assert!(t.adjustments >= 2, "adjustments resume after the debounce window");
+    }
+}

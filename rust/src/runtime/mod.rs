@@ -9,8 +9,13 @@
 //! executor types are API-compatible stubs whose constructors return a
 //! descriptive error — so the CLI, tests and benches compile and degrade
 //! gracefully instead of failing the whole build.
+//!
+//! `autotune` is the runtime's self-tuning layer: feedback controllers
+//! that fold the static cache/reorder/serve knobs into measurement-driven
+//! loops (off by default; see `runtime::autotune`).
 
 pub mod artifact;
+pub mod autotune;
 #[cfg(feature = "pjrt")]
 pub mod client;
 #[cfg(feature = "pjrt")]
@@ -20,6 +25,10 @@ pub mod executor;
 pub mod executor;
 
 pub use artifact::{ArtifactMeta, Artifacts, ParamMeta};
+pub use autotune::{
+    AutotuneCfg, BatchKnobs, CacheBudgetTuner, CacheFeedback, ReorderCadenceTuner,
+    ServeBatchTuner, ServeTuneCfg,
+};
 #[cfg(feature = "pjrt")]
 pub use client::client;
 pub use executor::{DlrmFwd, DlrmTrainStep, TtLookupExe};

@@ -28,8 +28,10 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::platform::SimPlatform;
 use crate::powersys::dataset::Sample;
+use crate::runtime::autotune::{ServeBatchTuner, ServeTuneCfg};
 use crate::serve::detector::Detector;
 use crate::serve::router::{QueueDepths, RoundRobin, RoutePolicy};
+use crate::util::clock::Clock;
 use crate::util::stats::LatencyHist;
 
 /// One in-flight request.
@@ -103,6 +105,24 @@ impl StreamingServer {
         dispatch: Duration,
         policy: Arc<dyn RoutePolicy>,
     ) -> StreamingServer {
+        Self::spawn_tuned(detectors, max_batch, deadline, dispatch, policy, None)
+    }
+
+    /// [`Self::spawn`] with per-replica serve-batching autotune.  Each
+    /// worker thread owns a [`ServeBatchTuner`] seeded from the
+    /// configured `max_batch`/`deadline`; the loop reads the live knob
+    /// pair every iteration and feeds every reply's window/queue/service
+    /// split back.  With `autotune = None` the static knobs are read
+    /// directly — the loop body is the identical code path, so the
+    /// untuned server behaves exactly as before.
+    pub fn spawn_tuned(
+        detectors: Vec<Detector>,
+        max_batch: usize,
+        deadline: Duration,
+        dispatch: Duration,
+        policy: Arc<dyn RoutePolicy>,
+        autotune: Option<ServeTuneCfg>,
+    ) -> StreamingServer {
         assert!(!detectors.is_empty(), "need at least one detector replica");
         let depths = Arc::new(QueueDepths::new(detectors.len()));
         let mut txs = Vec::with_capacity(detectors.len());
@@ -111,6 +131,9 @@ impl StreamingServer {
             let (tx, rx) = mpsc::channel::<Request>();
             let depths = Arc::clone(&depths);
             let handle = thread::spawn(move || {
+                let mut tuner = autotune
+                    .map(|c| ServeBatchTuner::new(c, max_batch, deadline, Clock::real()));
+                let knobs = tuner.as_ref().map(|t| t.knobs());
                 let mut stats = ServerStats { served: 0, hist: LatencyHist::new() };
                 let mut pending: Vec<Request> = Vec::new();
                 loop {
@@ -120,6 +143,10 @@ impl StreamingServer {
                         Err(_) => break,
                     };
                     pending.push(first);
+                    let (max_batch, deadline) = match &knobs {
+                        Some(k) => (k.max_batch(), k.deadline()),
+                        None => (max_batch, deadline),
+                    };
                     if max_batch > 1 {
                         if deadline.is_zero() {
                             // drain whatever is already queued
@@ -160,6 +187,13 @@ impl StreamingServer {
                         stats.served += 1;
                         depths.leave(id);
                         let _ = req.reply.send(Reply { prob: p, latency, queue_delay });
+                        if let Some(t) = tuner.as_mut() {
+                            t.observe(
+                                latency,
+                                queue_delay,
+                                latency.saturating_sub(queue_delay),
+                            );
+                        }
                     }
                 }
                 stats

@@ -24,6 +24,7 @@ use std::time::Duration;
 
 use crate::access::AccessPlanner;
 use crate::coordinator::engine::NativeDlrm;
+use crate::runtime::autotune::{AutotuneCfg, ServeTuneCfg};
 use crate::tt::table::QuantizeMode;
 use crate::serve::detector::Detector;
 use crate::serve::router::{LeastQueued, PlanAffinity, Policy, RoundRobin, RoutePolicy};
@@ -91,6 +92,7 @@ pub struct ServeSession {
     dispatch: Duration,
     policy: Policy,
     quantize: QuantizeMode,
+    autotune: Option<ServeTuneCfg>,
 }
 
 impl ServeSession {
@@ -110,6 +112,7 @@ impl ServeSession {
             dispatch: Duration::ZERO,
             policy: Policy::RoundRobin,
             quantize: QuantizeMode::Off,
+            autotune: None,
         }
     }
 
@@ -166,6 +169,16 @@ impl ServeSession {
         self
     }
 
+    /// Attach the serve-batching autotune loop (`[autotune]` /
+    /// `--autotune`): each replica adapts its `max_batch`/`deadline`
+    /// from the queue-delay vs service-time split, bounded by the p99
+    /// target.  A config with the serve loop disabled installs nothing —
+    /// the server runs the exact static path.
+    pub fn autotune(mut self, cfg: &AutotuneCfg) -> ServeSession {
+        self.autotune = cfg.serve_on().then(|| cfg.serve_tune());
+        self
+    }
+
     /// Apply a `[serve]` config section (replicas, batching + deadline,
     /// policy, dispatch).  Loop shape (`clients` / `arrival_rate`) stays
     /// with the driver — see [`ServeCfg::effective_clients`] and
@@ -204,7 +217,14 @@ impl ServeSession {
             Policy::LeastQueued => Arc::new(LeastQueued::new()),
             Policy::PlanAffinity => Arc::new(PlanAffinity::new(affinity)),
         };
-        StreamingServer::spawn(replicas, self.max_batch, self.deadline, self.dispatch, policy)
+        StreamingServer::spawn_tuned(
+            replicas,
+            self.max_batch,
+            self.deadline,
+            self.dispatch,
+            policy,
+            self.autotune,
+        )
     }
 }
 

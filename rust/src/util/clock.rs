@@ -1,0 +1,155 @@
+//! Injectable monotonic time + exponentially weighted moving averages —
+//! the two primitives every autotune controller (`runtime::autotune`)
+//! is built from.  Controllers take a [`Clock`] instead of calling
+//! `Instant::now` directly so their unit tests drive time by hand
+//! ([`Clock::manual`] + [`Clock::advance`]) and stay wall-clock-free and
+//! bit-reproducible.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A monotonic clock reporting seconds since its creation.  Cloning a
+/// manual clock shares its time source, so a controller and the test
+/// driving it observe the same hand-advanced timeline.
+#[derive(Clone, Debug)]
+pub struct Clock {
+    source: Source,
+}
+
+#[derive(Clone, Debug)]
+enum Source {
+    /// Wall time (production): seconds since the clock was built.
+    Real(Instant),
+    /// Hand-advanced time (tests): nanoseconds behind an `Arc`, shared
+    /// by every clone.
+    Manual(Arc<AtomicU64>),
+}
+
+impl Clock {
+    /// Wall-clock-backed monotonic source (production default).
+    pub fn real() -> Clock {
+        Clock { source: Source::Real(Instant::now()) }
+    }
+
+    /// Deterministic test clock starting at t = 0; advance with
+    /// [`Clock::advance`].
+    pub fn manual() -> Clock {
+        Clock { source: Source::Manual(Arc::new(AtomicU64::new(0))) }
+    }
+
+    /// Seconds since this clock (or the manual source it shares) began.
+    pub fn now(&self) -> f64 {
+        match &self.source {
+            Source::Real(t0) => t0.elapsed().as_secs_f64(),
+            Source::Manual(ns) => ns.load(Ordering::Relaxed) as f64 * 1e-9,
+        }
+    }
+
+    /// Advance a manual clock by `secs`.  Panics on a real clock — a
+    /// test that advances wall time by hand is a bug, not a no-op.
+    pub fn advance(&self, secs: f64) {
+        assert!(secs >= 0.0, "clocks are monotonic; cannot advance by {secs}");
+        match &self.source {
+            Source::Real(_) => panic!("Clock::advance on a real clock"),
+            Source::Manual(ns) => {
+                ns.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Exponentially weighted moving average: `v ← (1-α)·v + α·x`.  The
+/// first observation seeds the value directly (no zero-bias warmup).
+#[derive(Clone, Copy, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    /// `alpha` ∈ (0, 1]: weight of the newest observation.
+    pub fn new(alpha: f64) -> Ewma {
+        assert!(alpha > 0.0 && alpha <= 1.0, "EWMA alpha {alpha} not in (0, 1]");
+        Ewma { alpha, value: None }
+    }
+
+    /// Fold in one observation; returns the updated average.
+    pub fn observe(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => v + self.alpha * (x - v),
+        };
+        self.value = Some(v);
+        v
+    }
+
+    /// Current average (`None` before the first observation).
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+
+    /// Current average, or `default` before the first observation.
+    pub fn or(&self, default: f64) -> f64 {
+        self.value.unwrap_or(default)
+    }
+
+    /// Number of observations is not tracked; this resets the average so
+    /// the next observation re-seeds it (used at controller phase
+    /// boundaries, e.g. after a bijection refresh).
+    pub fn reset(&mut self) {
+        self.value = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_clock_is_deterministic_and_shared() {
+        let c = Clock::manual();
+        assert_eq!(c.now(), 0.0);
+        let c2 = c.clone();
+        c.advance(1.5);
+        assert!((c.now() - 1.5).abs() < 1e-9);
+        assert!((c2.now() - 1.5).abs() < 1e-9, "clones must share the source");
+        c2.advance(0.5);
+        assert!((c.now() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn real_clock_moves_forward() {
+        let c = Clock::real();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    #[should_panic(expected = "real clock")]
+    fn advancing_real_clock_panics() {
+        Clock::real().advance(1.0);
+    }
+
+    #[test]
+    fn ewma_seeds_then_smooths() {
+        let mut e = Ewma::new(0.5);
+        assert_eq!(e.value(), None);
+        assert_eq!(e.or(7.0), 7.0);
+        assert_eq!(e.observe(10.0), 10.0, "first sample seeds directly");
+        assert_eq!(e.observe(0.0), 5.0);
+        assert_eq!(e.observe(5.0), 5.0);
+        e.reset();
+        assert_eq!(e.observe(3.0), 3.0, "reset re-seeds");
+    }
+
+    #[test]
+    fn ewma_converges_to_constant_input() {
+        let mut e = Ewma::new(0.2);
+        for _ in 0..200 {
+            e.observe(4.0);
+        }
+        assert!((e.or(0.0) - 4.0).abs() < 1e-9);
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod bench;
 pub mod check;
+pub mod clock;
 pub mod hash;
 pub mod json;
 pub mod prng;

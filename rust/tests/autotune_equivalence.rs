@@ -1,0 +1,299 @@
+//! Self-tuning-runtime equivalence pins (the perf_opt acceptance gates):
+//!
+//! 1. With autotune OFF (the default), `train_ieee118_auto` is BITWISE
+//!    identical to a hand-inlined static training loop — the controller
+//!    layer must be provably inert when disabled, not merely similar.
+//! 2. The serving path with autotune off (or the serve loop disabled)
+//!    installs no tuner and scores bit-identically.
+//! 3. With the serve loop ON the knobs may move mid-stream, but scores
+//!    stay bit-identical — batching/scheduling changes can move requests
+//!    between micro-batches, never change a forward pass (forward passes
+//!    are row-independent).
+//! 4. The reorder-cadence controller, fed purely through
+//!    `AccessPlanner::plan_into`, shortens `refresh_every` when the hot
+//!    set drifts (reuse-rate peak decay).
+//! 5. The cache-budget controller, fed through the same planning path
+//!    plus the step-time feedback bus, commits a ladder rung.
+
+use std::time::Duration;
+
+use recad::access::{run_prefetched_fill, AccessCfg, AccessPlanner, BatchPlan};
+use recad::coordinator::engine::{EngineCfg, NativeDlrm};
+use recad::coordinator::trainer::{evaluate_on_with, train_ieee118_auto};
+use recad::data::batcher::EpochIter;
+use recad::data::ctr::Batch;
+use recad::data::zipf::GradualDriftZipf;
+use recad::exec::ExecCfg;
+use recad::powersys::dataset::{generate, DatasetCfg, Ieee118Dataset, Sample, SparseVocab};
+use recad::runtime::AutotuneCfg;
+use recad::serve::ServeSession;
+use recad::tt::table::EffTtOptions;
+use recad::util::prng::Rng;
+
+fn train_dataset() -> Ieee118Dataset {
+    generate(&DatasetCfg {
+        n_normal: 300,
+        n_attack: 75,
+        vocab: SparseVocab::ieee118(1.0 / 2000.0),
+        n_profiles: 10,
+        noise_std: 0.005,
+        seed: 5,
+    })
+}
+
+/// The pre-autotune static training loop, inlined from the trainer:
+/// engine + planner + epoch shuffle + prefetched ingest, with NO step
+/// timing and NO tuner consultation.  `train_ieee118_auto` with the
+/// loops off must reproduce every loss bit and the final eval.
+fn static_reference(
+    cfg: EngineCfg,
+    access: &AccessCfg,
+    ds: &Ieee118Dataset,
+    epochs: usize,
+    batch_size: usize,
+    seed: u64,
+) -> (Vec<u32>, u64) {
+    let (train, test) = ds.split(0.8);
+    let mut engine = NativeDlrm::new(cfg, &mut Rng::new(seed));
+    let mut planner = AccessPlanner::for_engine_cfg(&engine.cfg);
+    planner.configure(&engine.cfg, access);
+    let mut rng = Rng::new(seed ^ 0xE90C);
+    let mut losses = Vec::new();
+    for _ in 0..epochs {
+        let mut iter = EpochIter::new(train, batch_size, &mut rng);
+        let _ = run_prefetched_fill(
+            |out| iter.next_into(out),
+            &mut planner,
+            access.plan_ahead,
+            |batch, plan| losses.push(engine.train_step_planned(batch, plan).to_bits()),
+        );
+    }
+    let eval = evaluate_on_with(&mut engine, &planner, test);
+    (losses, eval.accuracy.to_bits())
+}
+
+#[test]
+fn autotune_off_is_bit_identical_to_the_static_trainer() {
+    let ds = train_dataset();
+    // online reorder + cache budget + lookahead: the config where every
+    // tuner hook sits on the hot path and must still be inert
+    let access = AccessCfg {
+        online_reorder: true,
+        cache_kb: 128,
+        plan_ahead: 2,
+        refresh_every: 4,
+        window: 4,
+        ..AccessCfg::default()
+    };
+    let cfg = EngineCfg::ieee118(1.0 / 2000.0);
+    let (want_losses, want_acc) = static_reference(cfg.clone(), &access, &ds, 2, 32, 9);
+    assert!(!want_losses.is_empty());
+    let off_cfgs = [
+        AutotuneCfg::default(),
+        // master switch off overrides per-loop switches…
+        AutotuneCfg { enabled: false, cache: true, reorder: true, serve: true, ..AutotuneCfg::default() },
+        // …and enabled with every loop off installs nothing either
+        AutotuneCfg { enabled: true, cache: false, reorder: false, serve: false, ..AutotuneCfg::default() },
+    ];
+    for at in off_cfgs {
+        let (report, _, planner) =
+            train_ieee118_auto(cfg.clone(), &access, &at, &ds, 2, 32, 9);
+        let got: Vec<u32> = report.loss_curve.iter().map(|l| l.to_bits()).collect();
+        assert_eq!(want_losses, got, "autotune-off loss bits drifted under {at:?}");
+        assert_eq!(want_acc, report.eval.accuracy.to_bits(), "eval drifted under {at:?}");
+        assert!(planner.cache_tuner().is_none(), "no cache tuner may install: {at:?}");
+        assert!(planner.cache_feedback().is_none(), "no feedback bus may install: {at:?}");
+        for t in 0..planner.num_tables() {
+            assert!(planner.cadence_tuner(t).is_none(), "no cadence tuner on slot {t}: {at:?}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serving
+// ---------------------------------------------------------------------------
+
+fn serve_dataset(n: usize) -> Vec<Sample> {
+    generate(&DatasetCfg {
+        n_normal: n,
+        n_attack: n / 4,
+        vocab: SparseVocab::ieee118(1.0 / 2000.0),
+        n_profiles: 10,
+        noise_std: 0.005,
+        seed: 2,
+    })
+    .samples
+}
+
+/// A session whose planner carries REAL (profiled) bijections — the
+/// serving configuration every reordered training run produces.
+fn profiled_session(samples: &[Sample]) -> ServeSession {
+    let engine = NativeDlrm::new(EngineCfg::ieee118(1.0 / 2000.0), &mut Rng::new(1));
+    let mut rng = Rng::new(3);
+    let profile: Vec<Batch> = EpochIter::new(samples, 32, &mut rng).take(4).collect();
+    let planner = AccessPlanner::with_profile(&engine.cfg, &profile, 0.1);
+    ServeSession::from_trained(engine, planner)
+}
+
+#[test]
+fn serve_autotune_off_installs_nothing_and_scores_identically() {
+    let samples = serve_dataset(120);
+    let stream = &samples[..24];
+    let base = profiled_session(&samples);
+    let want: Vec<u32> = {
+        let server = base.clone().start();
+        let bits = stream.iter().map(|s| server.infer(s).prob.to_bits()).collect();
+        let _ = server.shutdown();
+        bits
+    };
+    let off_cfgs = [
+        AutotuneCfg::default(),
+        AutotuneCfg { enabled: true, serve: false, ..AutotuneCfg::default() },
+    ];
+    for at in off_cfgs {
+        let server = base.clone().replicas(2).autotune(&at).start();
+        let got: Vec<u32> =
+            stream.iter().map(|s| server.infer(s).prob.to_bits()).collect();
+        assert_eq!(want, got, "autotune-off serving changed verdict bits under {at:?}");
+        let (lifetime, _) = server.shutdown();
+        assert_eq!(lifetime, stream.len() as u64);
+    }
+}
+
+#[test]
+fn serve_autotune_on_keeps_score_bits() {
+    let samples = serve_dataset(120);
+    let stream = &samples[..80];
+    let base = profiled_session(&samples);
+    let want: Vec<u32> = {
+        let server = base.clone().start(); // batch-1 reference
+        let bits = stream.iter().map(|s| server.infer(s).prob.to_bits()).collect();
+        let _ = server.shutdown();
+        bits
+    };
+    // one replica + 80 up-front submissions: the reply count crosses the
+    // tuner's adjust_every, so the knobs actually move mid-stream
+    let at = AutotuneCfg {
+        enabled: true,
+        cache: false,
+        reorder: false,
+        target_p99_us: 5_000,
+        ..AutotuneCfg::default()
+    };
+    let server = base
+        .max_batch(4)
+        .deadline(Duration::from_micros(200))
+        .autotune(&at)
+        .start();
+    let rxs: Vec<_> = stream.iter().map(|s| server.submit(s)).collect();
+    let got: Vec<u32> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().expect("reply").prob.to_bits())
+        .collect();
+    assert_eq!(want, got, "serve autotune changed verdict bits");
+    let (lifetime, hist) = server.shutdown();
+    assert_eq!(lifetime, stream.len() as u64);
+    assert_eq!(hist.count(), stream.len() as u64);
+}
+
+// ---------------------------------------------------------------------------
+// Planner-fed controllers
+// ---------------------------------------------------------------------------
+
+fn small_cfg() -> EngineCfg {
+    EngineCfg {
+        dense_dim: 4,
+        emb_dim: 8,
+        tables: vec![(4000, true), (16, false)],
+        tt_rank: 4,
+        bot_hidden: vec![8],
+        top_hidden: vec![8],
+        lr: 0.05,
+        tt_opts: EffTtOptions::default(),
+        exec: ExecCfg::serial(),
+    }
+}
+
+fn zipf_batch(z: &GradualDriftZipf, rng: &mut Rng, b: usize) -> Batch {
+    let sparse: Vec<u64> =
+        (0..b).flat_map(|_| [z.sample(rng), rng.below(16)]).collect();
+    Batch { dense: vec![0.0; b * 4], sparse, labels: vec![0.0; b], batch_size: b }
+}
+
+#[test]
+fn cadence_tuner_shortens_refresh_under_hot_set_drift() {
+    let cfg = small_cfg();
+    let access =
+        AccessCfg { refresh_every: 8, window: 4, hot_ratio: 0.1, ..AccessCfg::default() };
+    let mut planner = AccessPlanner::for_engine_cfg(&cfg);
+    planner.enable_scheduled_online(&cfg, &access, false);
+    planner.enable_autotune(&AutotuneCfg {
+        enabled: true,
+        cache: false,
+        serve: false,
+        ..AutotuneCfg::default()
+    });
+    let mut rng = Rng::new(11);
+    let mut z = GradualDriftZipf::new(4000, 1.2, 13);
+    let mut plan = BatchPlan::default();
+    // stationary warmup: the bijection adapts, reuse plateaus (the
+    // cadence may legitimately RELAX here — compare against drift onset)
+    for _ in 0..32 {
+        let b = zipf_batch(&z, &mut rng, 64);
+        planner.plan_into(&b, &mut plan);
+    }
+    let onset = planner.online_refresh_every(0).expect("slot 0 is online");
+    let onset_shortens = planner.cadence_tuner(0).expect("cadence tuner installed").shortens;
+    // hot-set drift: half the vocabulary rotates in; reuse under the
+    // stale bijection decays and the controller must refresh sooner
+    z.begin_drift(2000);
+    for _ in 0..24 {
+        z.advance(1.5 / 24.0);
+        let b = zipf_batch(&z, &mut rng, 64);
+        planner.plan_into(&b, &mut plan);
+    }
+    let fin = planner.online_refresh_every(0).expect("slot 0 is online");
+    let tuner = planner.cadence_tuner(0).expect("cadence tuner installed");
+    assert!(
+        tuner.shortens > onset_shortens,
+        "drift must register at least one shorten ({onset_shortens} -> {})",
+        tuner.shortens
+    );
+    assert!(fin < onset, "refresh_every must shorten under drift: {onset} -> {fin}");
+    // the tuner's mirror of the interval tracks the engine's
+    assert_eq!(tuner.every(), fin);
+    // the plain (uncompressed) slot never grows a cadence tuner
+    assert!(planner.cadence_tuner(1).is_none());
+}
+
+#[test]
+fn cache_tuner_commits_a_ladder_rung_through_plan_into() {
+    let cfg = small_cfg();
+    let mut planner = AccessPlanner::for_engine_cfg(&cfg);
+    planner.configure(&cfg, &AccessCfg::default());
+    let at = AutotuneCfg {
+        enabled: true,
+        reorder: false,
+        serve: false,
+        probe_batches: 2,
+        ..AutotuneCfg::default()
+    };
+    planner.enable_autotune(&at);
+    let fb = planner.cache_feedback().expect("cache loop installs a feedback bus");
+    let mut rng = Rng::new(21);
+    let z = GradualDriftZipf::new(4000, 1.2, 23); // stationary (no drift begun)
+    let mut plan = BatchPlan::default();
+    for _ in 0..32 {
+        let b = zipf_batch(&z, &mut rng, 64);
+        planner.plan_into(&b, &mut plan);
+        fb.push(1.0e-3); // flat cost: any rung may win, but one MUST
+    }
+    let tuner = planner.cache_tuner().expect("cache tuner installed");
+    let kb = tuner.committed_kb().expect("ladder commits after probing every rung");
+    assert!(
+        at.cache_ladder.contains(&kb),
+        "committed budget {kb} KiB not on the ladder {:?}",
+        at.cache_ladder
+    );
+    assert_eq!(tuner.reprobes, 0, "stationary stream must not re-open the probe");
+}
