@@ -11,13 +11,16 @@
 //! writing — malformed output fails the run, which is what the CI smoke
 //! job asserts.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use recad::access::{replay_fill, run_prefetched_fill, AccessCfg, AccessPlanner, BatchPlan};
 use recad::bench_support::{arm_extra, bench_workers, write_bench_json, BenchArm};
-use recad::runtime::AutotuneCfg;
+use recad::runtime::{AutotuneCfg, FaultCfg, FaultPlan};
 use recad::util::clock::Ewma;
-use recad::coordinator::data_parallel::{train_data_parallel_placed, DpCfg, Placement};
+use recad::coordinator::data_parallel::{
+    train_data_parallel_faulted, train_data_parallel_placed, DpCfg, Placement,
+};
 use recad::coordinator::engine::{EngineCfg, NativeDlrm};
 use recad::coordinator::platform::SimPlatform;
 use recad::coordinator::trainer::train_ieee118_full;
@@ -994,6 +997,146 @@ fn reorder_recovery_arms() -> Vec<BenchArm> {
     arms
 }
 
+/// Fault-tolerance arms (BENCH_fault_tolerance.json): the open-loop
+/// serving stream fault-free vs with a replica kill + supervised respawn
+/// — each arm's window percentiles come from `run_open_loop`, and each
+/// carries `served`/`shed`/`dropped`/`respawns` plus the post-recovery
+/// `tail_p99_us` — and the straggler-exclusion training twins (full
+/// participation vs straggle_rate 0.3 with error-feedback carry), each
+/// carrying `final_loss_e6`.  The acceptance bounds are asserted
+/// in-process before the JSON is written: the kill arm respawns and
+/// keeps serving with zero silent drops, its post-recovery tail p99
+/// stays within 25% (+ scheduling slack) of the fault-free twin, and
+/// the straggler twin's final loss lands within 0.1 of full
+/// participation.
+fn fault_tolerance_arms() -> Vec<BenchArm> {
+    let (requests, rate) = if smoke() { (60usize, 1200.0) } else { (300, 2500.0) };
+    let (n_normal, n_attack) = if smoke() { (200, 50) } else { (600, 150) };
+    let ds = generate(&DatasetCfg {
+        n_normal,
+        n_attack,
+        vocab: SparseVocab::ieee118(1.0 / 2000.0),
+        n_profiles: 50,
+        noise_std: 0.005,
+        seed: 31,
+    });
+    let base = ServeSession::from_engine(NativeDlrm::new(engine_cfg(1), &mut Rng::new(3)))
+        .replicas(2)
+        .heartbeat(Duration::from_millis(2));
+    let stream = &ds.samples[..requests.min(ds.samples.len())];
+    let mut arms = Vec::new();
+
+    let open = |name: &str, plan: Option<Arc<FaultPlan>>| {
+        let server = base.clone().fault(plan).start();
+        let ol = run_open_loop(server, stream, &OpenLoopCfg { rate_per_sec: rate, seed: 17 });
+        let arm =
+            BenchArm::from_iters(format!("serve_open_{name}_r2"), 2, &ol.window_samples, 1)
+                .with_extra("served", ol.served as f64)
+                .with_extra("shed", ol.shed as f64)
+                .with_extra("dropped", ol.dropped as f64)
+                .with_extra("respawns", ol.respawns as f64)
+                .with_extra("tail_p99_us", ol.tail_p99_window.as_secs_f64() * 1e6);
+        (arm, ol)
+    };
+    let (free_arm, free) = open("fault_free", None);
+    let plan = FaultCfg {
+        enabled: true,
+        seed: 7,
+        kill_replica: Some(0),
+        kill_after: (requests / 8) as u64,
+        ..FaultCfg::default()
+    }
+    .plan()
+    .unwrap();
+    let (kill_arm, kill) = open("replica_kill", Some(plan.clone()));
+    assert_eq!(kill.dropped, 0, "replica kill silently dropped requests");
+    assert!(
+        kill.served > 0 && kill.served as usize + kill.shed == kill.offered,
+        "kill arm accounting leaked: {} served + {} shed != {} offered",
+        kill.served,
+        kill.shed,
+        kill.offered
+    );
+    assert!(
+        kill.respawns >= 1 && plan.event_count("respawn") >= 1,
+        "supervisor never respawned the killed replica"
+    );
+    let free_tail = free.tail_p99_window.as_secs_f64();
+    let kill_tail = kill.tail_p99_window.as_secs_f64();
+    assert!(
+        kill_tail <= free_tail * 1.25 + 500e-6,
+        "post-recovery tail p99 {:.0}µs exceeds fault-free {:.0}µs by more than 25% (+slack)",
+        kill_tail * 1e6,
+        free_tail * 1e6
+    );
+    arms.push(free_arm);
+    arms.push(kill_arm);
+
+    // straggler-exclusion training twins: full participation vs rate 0.3
+    let (vocab, batch, n_batches) =
+        if smoke() { (3_000u64, 32usize, 8usize) } else { (20_000, 64, 16) };
+    let cfg = EngineCfg {
+        dense_dim: 4,
+        emb_dim: 8,
+        tables: vec![(vocab, true), (60, false)],
+        tt_rank: 4,
+        bot_hidden: vec![16],
+        top_hidden: vec![16],
+        lr: 0.05,
+        tt_opts: EffTtOptions::default(),
+        exec: ExecCfg::serial(),
+    };
+    let z = Zipf::new(vocab, 1.2);
+    let mut rng = Rng::new(37);
+    let batches: Vec<Batch> = (0..n_batches)
+        .map(|_| {
+            let mut dense = vec![0.0f32; batch * 4];
+            rng.fill_normal(&mut dense, 0.0, 1.0);
+            let sparse: Vec<u64> =
+                (0..batch).flat_map(|_| [z.sample(&mut rng), rng.below(60)]).collect();
+            let labels: Vec<f32> =
+                (0..batch).map(|_| if rng.coin(0.3) { 1.0 } else { 0.0 }).collect();
+            Batch { dense, sparse, labels, batch_size: batch }
+        })
+        .collect();
+    let planner = AccessPlanner::for_engine_cfg(&cfg);
+    let cost = SimPlatform::v100(3).cost;
+    let dp = DpCfg {
+        workers: 3,
+        placement: Placement::Replicated,
+        cost,
+        seed: 5,
+        quantize_comm: false,
+    };
+    let run_train = |tag: &str, fplan: Option<&Arc<FaultPlan>>| {
+        let (r, _) = train_data_parallel_faulted(cfg.clone(), &planner, &batches, &dp, fplan);
+        let per_step = [r.wall.as_secs_f64() / r.steps as f64];
+        let last = *r.losses.last().unwrap();
+        let arm = BenchArm::from_iters(format!("train_{tag}_w3"), 3, &per_step, batch)
+            .with_extra("final_loss_e6", f64::from(last) * 1e6);
+        (arm, last)
+    };
+    let (full_arm, full_loss) = run_train("full_participation", None);
+    let splan = FaultCfg {
+        enabled: true,
+        seed: 13,
+        straggle_rate: 0.3,
+        straggle_ms: 0,
+        ..FaultCfg::default()
+    }
+    .plan()
+    .unwrap();
+    let (strag_arm, strag_loss) = run_train("straggler_0p3", Some(&splan));
+    assert!(splan.event_count("straggle") > 0, "straggle rate 0.3 never fired");
+    assert!(
+        (strag_loss - full_loss).abs() < 0.1,
+        "straggler-excluded final loss {strag_loss} drifted from full participation {full_loss}"
+    );
+    arms.push(full_arm);
+    arms.push(strag_arm);
+    arms
+}
+
 fn main() {
     let par = bench_workers();
     let worker_arms: Vec<usize> = if par > 1 { vec![1, par] } else { vec![1] };
@@ -1224,4 +1367,26 @@ fn main() {
     let rr_arms = reorder_recovery_arms();
     let rr_path = write_bench_json("reorder_recovery", par, &rr_arms);
     println!("wrote {rr_path} ({} arms, JSON round-trip checked)", rr_arms.len());
+
+    // ---- fault tolerance (BENCH_fault_tolerance.json) -------------------
+    let ft_arms = fault_tolerance_arms();
+    let fx = |name: &str, key: &str| arm_extra(&ft_arms, name, key).unwrap_or(0.0);
+    println!(
+        "serve open-loop r2 replica-kill: {:.0} served / {:.0} shed / {:.0} dropped, \
+         {:.0} respawn(s); post-recovery tail p99 {:.0}µs vs fault-free {:.0}µs",
+        fx("serve_open_replica_kill_r2", "served"),
+        fx("serve_open_replica_kill_r2", "shed"),
+        fx("serve_open_replica_kill_r2", "dropped"),
+        fx("serve_open_replica_kill_r2", "respawns"),
+        fx("serve_open_replica_kill_r2", "tail_p99_us"),
+        fx("serve_open_fault_free_r2", "tail_p99_us"),
+    );
+    println!(
+        "train w3 straggler exclusion (rate 0.3): final loss {:.4} vs full \
+         participation {:.4}",
+        fx("train_straggler_0p3_w3", "final_loss_e6") / 1e6,
+        fx("train_full_participation_w3", "final_loss_e6") / 1e6,
+    );
+    let ft_path = write_bench_json("fault_tolerance", par, &ft_arms);
+    println!("wrote {ft_path} ({} arms, JSON round-trip checked)", ft_arms.len());
 }

@@ -95,6 +95,12 @@ SUBCOMMANDS:
                --autotune (feedback-tune cache_kb from measured step
                  times and refresh_every from reuse-rate decay; see
                  the [autotune] config section for the knobs)
+               --fault-straggle-rate F  --fault-straggle-ms N
+                 (chaos: workers miss the all-reduce deadline — weight-0
+                 exclusion + error-feedback carry)
+               --fault-dead-worker N  --fault-dead-round N
+                 (chaos: worker N dies permanently at round N; its shard
+                 re-routes to the live workers)
   serve        Stream detection over a held-out sample stream
                --requests N  --threshold F
                --replicas N (detector shards; was --workers pre-redesign)
@@ -107,6 +113,18 @@ SUBCOMMANDS:
                  tiles for serving; dequantize-in-microkernel fast path)
                --autotune (per-replica max_batch/deadline_us feedback
                  loop bounded by [autotune] target_p99_us)
+               --shed-budget-us N (refuse requests whose queue-delay
+                 estimate exceeds N µs: Reply { shed }; 0 = never shed)
+               --heartbeat-ms N (supervisor period: dead/hung replicas
+                 respawn from the frozen snapshot; 0 = no supervision)
+               --hang-ms N (hung-replica threshold for the supervisor)
+               --fault-seed N (enable the chaos plan at seed N)
+               --fault-kill-replica N  --fault-kill-after N
+                 (chaos: replica N panics after serving N requests)
+               --fault-stall-rate F  --fault-stall-ms N (chaos: stalls)
+               --fault-sever-rate F (chaos: reply channels severed)
+               --fault-flood-rate F  --fault-flood-burst N (chaos:
+                 junk-request queue floods)
   gen-data     Generate and summarize the IEEE-118 FDIA dataset
                --normal N  --attack N  --seed N
   runtime      Smoke-run the PJRT artifacts (requires `make artifacts`)

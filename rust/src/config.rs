@@ -12,6 +12,7 @@ use crate::coordinator::data_parallel::Placement;
 use crate::coordinator::engine::EngineCfg;
 use crate::exec::ExecCfg;
 use crate::runtime::autotune::AutotuneCfg;
+use crate::runtime::fault::FaultCfg;
 use crate::serve::{Policy, ServeCfg};
 use crate::tt::table::{EffTtOptions, QuantizeMode};
 
@@ -188,6 +189,11 @@ pub struct RecAdConfig {
     /// into measurement-driven loops.  Off by default; disabled is
     /// bit-identical to the static paths.
     pub autotune: AutotuneCfg,
+    /// `[fault]` section / `--fault-*`: the seeded chaos-injection plan
+    /// (replica kills/panics/stalls, reply severs, queue floods, training
+    /// stragglers, a dead worker).  Off by default; disabled is
+    /// bit-identical to the fault-free paths.
+    pub fault: FaultCfg,
     pub seed: u64,
     pub artifacts_dir: String,
 }
@@ -218,14 +224,101 @@ impl Default for RecAdConfig {
             placement: Placement::Replicated,
             serve: ServeCfg::default(),
             autotune: AutotuneCfg::default(),
+            fault: FaultCfg::default(),
             seed: 42,
             artifacts_dir: "artifacts".into(),
         }
     }
 }
 
+/// A key that, when present, must be a positive integer (`>= 1`, no
+/// fraction).  The parser's `usize_or` would silently truncate `0.7` to
+/// 0 or wrap a negative through `as usize` — these checks run on the RAW
+/// value so bad numerics fail loudly, naming the offending key.
+fn expect_positive_int(t: &Toml, key: &str) -> Result<()> {
+    if let Some(TomlValue::Num(n)) = t.get(key) {
+        if *n < 1.0 || n.fract() != 0.0 {
+            bail!("config key '{key}' must be a positive integer, got {n}");
+        }
+    }
+    Ok(())
+}
+
+/// A key that, when present, must be a non-negative integer.
+fn expect_unsigned_int(t: &Toml, key: &str) -> Result<()> {
+    if let Some(TomlValue::Num(n)) = t.get(key) {
+        if *n < 0.0 || n.fract() != 0.0 {
+            bail!("config key '{key}' must be a non-negative integer, got {n}");
+        }
+    }
+    Ok(())
+}
+
+/// A key that, when present, must be a probability in `[0, 1]`.
+fn expect_rate(t: &Toml, key: &str) -> Result<()> {
+    if let Some(TomlValue::Num(n)) = t.get(key) {
+        if !(0.0..=1.0).contains(n) {
+            bail!("config key '{key}' must be a rate in [0, 1], got {n}");
+        }
+    }
+    Ok(())
+}
+
+/// A key that, when present, must be a non-negative number.
+fn expect_non_negative(t: &Toml, key: &str) -> Result<()> {
+    if let Some(TomlValue::Num(n)) = t.get(key) {
+        if *n < 0.0 {
+            bail!("config key '{key}' must be non-negative, got {n}");
+        }
+    }
+    Ok(())
+}
+
+/// Validate the `[serve]` / `[train]` / `[fault]` numerics before any
+/// `as usize` narrowing can hide them.  Only EXPLICIT keys are checked —
+/// absent keys keep their (valid) defaults.
+fn validate_numerics(t: &Toml) -> Result<()> {
+    for key in [
+        "serve.replicas",
+        "serve.max_batch",
+        "serve.deadline_us",
+        "train.devices",
+    ] {
+        expect_positive_int(t, key)?;
+    }
+    for key in [
+        "serve.dispatch_us",
+        "serve.clients",
+        "serve.shed_budget_us",
+        "serve.heartbeat_ms",
+        "serve.hang_ms",
+        "fault.seed",
+        "fault.kill_replica",
+        "fault.kill_after",
+        "fault.stall_ms",
+        "fault.flood_burst",
+        "fault.straggle_ms",
+        "fault.dead_worker",
+        "fault.dead_round",
+    ] {
+        expect_unsigned_int(t, key)?;
+    }
+    for key in [
+        "fault.panic_rate",
+        "fault.stall_rate",
+        "fault.sever_rate",
+        "fault.flood_rate",
+        "fault.straggle_rate",
+    ] {
+        expect_rate(t, key)?;
+    }
+    expect_non_negative(t, "serve.arrival_rate")?;
+    Ok(())
+}
+
 impl RecAdConfig {
     pub fn from_toml(t: &Toml) -> Result<RecAdConfig> {
+        validate_numerics(t)?;
         let d = RecAdConfig::default();
         Ok(RecAdConfig {
             dataset: t.str_or("run.dataset", &d.dataset).to_string(),
@@ -262,6 +355,13 @@ impl RecAdConfig {
                     as u64,
                 clients: t.usize_or("serve.clients", d.serve.clients),
                 arrival_rate: t.num_or("serve.arrival_rate", d.serve.arrival_rate),
+                shed_budget_us: t
+                    .usize_or("serve.shed_budget_us", d.serve.shed_budget_us as usize)
+                    as u64,
+                heartbeat_ms: t
+                    .usize_or("serve.heartbeat_ms", d.serve.heartbeat_ms as usize)
+                    as u64,
+                hang_ms: t.usize_or("serve.hang_ms", d.serve.hang_ms as usize) as u64,
             },
             autotune: AutotuneCfg {
                 enabled: t.bool_or("autotune.enabled", d.autotune.enabled),
@@ -284,6 +384,29 @@ impl RecAdConfig {
                 max_batch_cap: t
                     .usize_or("autotune.max_batch_cap", d.autotune.max_batch_cap)
                     .max(1),
+            },
+            fault: FaultCfg {
+                enabled: t.bool_or("fault.enabled", d.fault.enabled),
+                seed: t.usize_or("fault.seed", d.fault.seed as usize) as u64,
+                kill_replica: match t.get("fault.kill_replica") {
+                    Some(TomlValue::Num(n)) => Some(*n as usize),
+                    _ => d.fault.kill_replica,
+                },
+                kill_after: t.usize_or("fault.kill_after", d.fault.kill_after as usize) as u64,
+                panic_rate: t.num_or("fault.panic_rate", d.fault.panic_rate),
+                stall_rate: t.num_or("fault.stall_rate", d.fault.stall_rate),
+                stall_ms: t.usize_or("fault.stall_ms", d.fault.stall_ms as usize) as u64,
+                sever_rate: t.num_or("fault.sever_rate", d.fault.sever_rate),
+                flood_rate: t.num_or("fault.flood_rate", d.fault.flood_rate),
+                flood_burst: t.usize_or("fault.flood_burst", d.fault.flood_burst),
+                straggle_rate: t.num_or("fault.straggle_rate", d.fault.straggle_rate),
+                straggle_ms: t.usize_or("fault.straggle_ms", d.fault.straggle_ms as usize)
+                    as u64,
+                dead_worker: match t.get("fault.dead_worker") {
+                    Some(TomlValue::Num(n)) => Some(*n as usize),
+                    _ => d.fault.dead_worker,
+                },
+                dead_round: t.usize_or("fault.dead_round", d.fault.dead_round as usize) as u64,
             },
             seed: t.num_or("run.seed", d.seed as f64) as u64,
             artifacts_dir: t.str_or("run.artifacts_dir", &d.artifacts_dir).to_string(),
@@ -470,6 +593,97 @@ max_batch_cap = 8
         assert!((c.autotune.reuse_decay_tol - 0.2).abs() < 1e-12);
         assert_eq!(c.autotune.target_p99_us, 5000);
         assert_eq!(c.autotune.max_batch_cap, 8);
+    }
+
+    #[test]
+    fn parses_fault_section_and_defaults_off() {
+        let t = Toml::parse("[run]\nepochs = 1\n").unwrap();
+        let c = RecAdConfig::from_toml(&t).unwrap();
+        assert_eq!(c.fault, FaultCfg::default());
+        assert!(!c.fault.enabled, "fault injection must default off");
+        assert!(c.fault.plan().is_none(), "disabled cfg must build no plan");
+        let doc = r#"
+[fault]
+enabled = true
+seed = 9
+kill_replica = 0
+kill_after = 3
+panic_rate = 0.05
+stall_rate = 0.1
+stall_ms = 2
+sever_rate = 0.02
+flood_rate = 0.01
+flood_burst = 2
+straggle_rate = 0.25
+straggle_ms = 1
+dead_worker = 1
+dead_round = 4
+"#;
+        let c = RecAdConfig::from_toml(&Toml::parse(doc).unwrap()).unwrap();
+        assert!(c.fault.enabled);
+        assert_eq!(c.fault.seed, 9);
+        assert_eq!(c.fault.kill_replica, Some(0));
+        assert_eq!(c.fault.kill_after, 3);
+        assert!((c.fault.panic_rate - 0.05).abs() < 1e-12);
+        assert!((c.fault.stall_rate - 0.1).abs() < 1e-12);
+        assert_eq!(c.fault.stall_ms, 2);
+        assert!((c.fault.sever_rate - 0.02).abs() < 1e-12);
+        assert!((c.fault.flood_rate - 0.01).abs() < 1e-12);
+        assert_eq!(c.fault.flood_burst, 2);
+        assert!((c.fault.straggle_rate - 0.25).abs() < 1e-12);
+        assert_eq!(c.fault.straggle_ms, 1);
+        assert_eq!(c.fault.dead_worker, Some(1));
+        assert_eq!(c.fault.dead_round, 4);
+        assert!(c.fault.plan().is_some());
+    }
+
+    #[test]
+    fn parses_serve_guard_knobs() {
+        let doc = "[serve]\nshed_budget_us = 500\nheartbeat_ms = 5\nhang_ms = 100\n";
+        let c = RecAdConfig::from_toml(&Toml::parse(doc).unwrap()).unwrap();
+        assert_eq!(c.serve.shed_budget_us, 500);
+        assert_eq!(c.serve.heartbeat_ms, 5);
+        assert_eq!(c.serve.hang_ms, 100);
+        // defaults: no shedding, no supervision
+        let c = RecAdConfig::from_toml(&Toml::parse("[run]\nepochs = 1\n").unwrap()).unwrap();
+        assert_eq!(c.serve.shed_budget_us, 0);
+        assert_eq!(c.serve.heartbeat_ms, 0);
+        assert_eq!(c.serve.hang_ms, 200);
+    }
+
+    #[test]
+    fn rejects_invalid_numerics_naming_the_key() {
+        let cases = [
+            ("[serve]\nreplicas = 0\n", "serve.replicas"),
+            ("[serve]\nmax_batch = 0\n", "serve.max_batch"),
+            ("[serve]\ndeadline_us = 0\n", "serve.deadline_us"),
+            ("[train]\ndevices = 0\n", "train.devices"),
+            ("[serve]\nshed_budget_us = -5\n", "serve.shed_budget_us"),
+            ("[serve]\nheartbeat_ms = -1\n", "serve.heartbeat_ms"),
+            ("[serve]\nhang_ms = 1.5\n", "serve.hang_ms"),
+            ("[serve]\narrival_rate = -10.0\n", "serve.arrival_rate"),
+            ("[fault]\npanic_rate = 1.5\n", "fault.panic_rate"),
+            ("[fault]\nstall_rate = -0.1\n", "fault.stall_rate"),
+            ("[fault]\nsever_rate = 2\n", "fault.sever_rate"),
+            ("[fault]\nflood_rate = -1\n", "fault.flood_rate"),
+            ("[fault]\nstraggle_rate = 1.01\n", "fault.straggle_rate"),
+            ("[fault]\nkill_replica = -2\n", "fault.kill_replica"),
+            ("[fault]\nstall_ms = 2.5\n", "fault.stall_ms"),
+            ("[fault]\ndead_worker = -1\n", "fault.dead_worker"),
+        ];
+        for (doc, key) in cases {
+            let t = Toml::parse(doc).unwrap();
+            let err = RecAdConfig::from_toml(&t)
+                .err()
+                .unwrap_or_else(|| panic!("{doc:?} must be rejected"));
+            let msg = format!("{err:#}");
+            assert!(msg.contains(key), "error for {doc:?} does not name '{key}': {msg}");
+        }
+        // the valid boundary values still pass
+        for doc in ["[serve]\nreplicas = 1\n", "[fault]\npanic_rate = 1.0\n",
+                    "[fault]\nstall_rate = 0.0\n", "[serve]\narrival_rate = 0.0\n"] {
+            assert!(RecAdConfig::from_toml(&Toml::parse(doc).unwrap()).is_ok(), "{doc:?}");
+        }
     }
 
     #[test]

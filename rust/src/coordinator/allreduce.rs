@@ -357,6 +357,61 @@ impl AllReduce {
     }
 }
 
+/// Error-feedback carry-over for straggler-excluded all-reduce rounds —
+/// the dense-path mirror of [`SparseDeltaQ8`]'s residual mechanism.
+///
+/// When a worker misses a round's deadline it is excluded from that
+/// round's weighted mean (weight 0), but its local step is not thrown
+/// away: the caller [`absorb`](StragglerCarry::absorb)s `post − base`
+/// into the carry, and at the start of the next round
+/// [`fold_into`](StragglerCarry::fold_into) re-applies it onto the
+/// consensus parameters before the worker computes its next step.  The
+/// straggler's gradient information arrives one round late instead of
+/// being dropped, which is what keeps convergence within tolerance of
+/// full participation (pinned by `tests/fault_equivalence.rs`).
+#[derive(Clone, Debug)]
+pub struct StragglerCarry {
+    carry: Vec<f32>,
+    nonzero: bool,
+}
+
+impl StragglerCarry {
+    pub fn new(len: usize) -> StragglerCarry {
+        StragglerCarry { carry: vec![0.0; len], nonzero: false }
+    }
+
+    /// Accumulate this round's unshipped local progress (`post − base`).
+    pub fn absorb(&mut self, base: &[f32], post: &[f32]) {
+        assert_eq!(base.len(), self.carry.len(), "carry length mismatch");
+        assert_eq!(post.len(), self.carry.len(), "carry length mismatch");
+        for ((c, &b), &p) in self.carry.iter_mut().zip(base).zip(post) {
+            *c += p - b;
+        }
+        self.nonzero = true;
+    }
+
+    /// Re-apply the carried delta onto `params` and clear the carry.
+    /// Returns whether anything was applied — false means `params` was
+    /// not touched at all (no fold, no clear, zero arithmetic), so the
+    /// straggler-free path stays bit-identical.
+    pub fn fold_into(&mut self, params: &mut [f32]) -> bool {
+        if !self.nonzero {
+            return false;
+        }
+        assert_eq!(params.len(), self.carry.len(), "carry length mismatch");
+        for (p, c) in params.iter_mut().zip(self.carry.iter_mut()) {
+            *p += *c;
+            *c = 0.0;
+        }
+        self.nonzero = false;
+        true
+    }
+
+    pub fn is_empty(&self) -> bool {
+        !self.nonzero
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -598,6 +653,33 @@ mod tests {
             seen.push((region, bytes));
         }
         assert_eq!(seen[0], seen[1], "workers must agree bit-for-bit");
+    }
+
+    #[test]
+    fn straggler_carry_round_trips_missed_progress() {
+        let mut carry = StragglerCarry::new(3);
+        assert!(carry.is_empty());
+
+        // empty carry: fold_into must be a strict no-op (bit-identity)
+        let mut params = vec![1.0f32, 2.0, 3.0];
+        assert!(!carry.fold_into(&mut params));
+        assert_eq!(params, vec![1.0, 2.0, 3.0]);
+
+        // a missed round absorbs post − base…
+        let base = vec![1.0f32, 2.0, 3.0];
+        let post = vec![1.5f32, 2.0, 2.0];
+        carry.absorb(&base, &post);
+        assert!(!carry.is_empty());
+        // …two missed rounds accumulate
+        carry.absorb(&base, &post);
+
+        // the fold re-applies the full accumulated delta, then clears
+        let mut consensus = vec![10.0f32, 20.0, 30.0];
+        assert!(carry.fold_into(&mut consensus));
+        assert_eq!(consensus, vec![11.0, 20.0, 28.0]);
+        assert!(carry.is_empty());
+        assert!(!carry.fold_into(&mut consensus));
+        assert_eq!(consensus, vec![11.0, 20.0, 28.0]);
     }
 
     #[test]

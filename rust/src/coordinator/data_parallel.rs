@@ -44,10 +44,11 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::access::planner::{AccessPlanner, PlacementMap};
-use crate::coordinator::allreduce::{AllReduce, SparseDelta, SparseDeltaQ8};
+use crate::coordinator::allreduce::{AllReduce, SparseDelta, SparseDeltaQ8, StragglerCarry};
 use crate::coordinator::engine::{EngineCfg, NativeDlrm, TableSlot};
-use crate::coordinator::platform::CostModel;
+use crate::coordinator::platform::{CostModel, SimPlatform};
 use crate::data::ctr::Batch;
+use crate::runtime::fault::FaultPlan;
 use crate::util::prng::Rng;
 
 /// How a global batch (and the parameter exchange) maps onto workers.
@@ -461,6 +462,269 @@ pub fn train_data_parallel_placed(
     (report, engine)
 }
 
+/// Fault-tolerant variant of [`train_data_parallel_placed`]: same
+/// arithmetic, plus two failure modes driven by a deterministic
+/// [`FaultPlan`]:
+///
+/// * **Stragglers** — a worker whose round the plan marks late misses
+///   the exchange deadline: it still hits every barrier (the simulated
+///   communicator never loses a slot) but deposits with weight 0, so the
+///   round's weighted mean is taken over the survivors only.  Its local
+///   step is NOT thrown away: the (post − pre) progress is absorbed into
+///   a [`StragglerCarry`] and folded back into its parameters at the
+///   next round's start — the same error-feedback shape as
+///   `allreduce_sparse_q8`'s residual, so missed work re-enters the
+///   consensus one round late instead of vanishing.  If every live
+///   worker would miss a round, nobody is excluded (the deadline is
+///   effectively extended — a 0-weight-sum mean is undefined).
+/// * **A permanently dead worker** — from its death round on, it trains
+///   nothing and deposits weight 0 (keeping its barrier slot so the
+///   group stays in lockstep, like a respawned-but-empty rank), and its
+///   share of the data is re-routed: Replicated re-shards each batch
+///   over the live workers; Plan moves the dead owner's rows to the next
+///   worker (cyclic), deterministically.
+///
+/// With `fault` `None` — or a plan with no training faults configured —
+/// this delegates straight to [`train_data_parallel_placed`]: the
+/// fault-free path is the SAME code, bit-identical by construction
+/// (pinned by `tests/fault_equivalence.rs`).
+pub fn train_data_parallel_faulted(
+    cfg: EngineCfg,
+    planner: &AccessPlanner,
+    batches: &[Batch],
+    dp: &DpCfg,
+    fault: Option<&Arc<FaultPlan>>,
+) -> (DataParallelReport, NativeDlrm) {
+    let plan = match fault {
+        Some(f) if f.cfg().straggle_rate > 0.0 || f.cfg().dead_worker.is_some() => f,
+        _ => return train_data_parallel_placed(cfg, planner, batches, dp),
+    };
+    assert!(dp.workers >= 1);
+    assert!(!batches.is_empty(), "data-parallel training needs batches");
+    let min_batch = batches.iter().map(|b| b.batch_size).min().unwrap();
+    assert!(min_batch >= 1, "empty batch in the training stream");
+    let n = dp.workers.min(min_batch);
+    let n_sparse = cfg.n_tables();
+    // the dead worker only exists if somebody can take over its shard
+    let dead_cfg = plan.cfg().dead_worker.filter(|&dw| n > 1 && dw < n);
+    let dead_round = plan.cfg().dead_round;
+    let mut routing = (dp.placement == Placement::Plan && n > 1)
+        .then(|| route_batches(batches, n_sparse, &planner.placement_map(n), n));
+    // re-route the dead owner's rows to the next worker (cyclic) from its
+    // death round on — a deterministic pre-pass all workers agree on
+    if let (Some(routing), Some(dw)) = (routing.as_mut(), dead_cfg) {
+        let target = (dw + 1) % n;
+        for lists in routing.iter_mut().skip(dead_round as usize) {
+            let moved = std::mem::take(&mut lists[dw]);
+            lists[target].extend(moved);
+            lists[target].sort_unstable();
+        }
+    }
+
+    let proto = NativeDlrm::new(cfg.clone(), &mut Rng::new(dp.seed));
+    let mut probe = Vec::new();
+    flatten(&proto, &mut probe);
+    let payload = probe.len();
+    flatten_dense(&proto, &mut probe);
+    let dense_len = probe.len();
+    let tt_len = payload - dense_len;
+    let ar = AllReduce::new(n, payload, dp.cost);
+    drop(proto);
+
+    let t0 = Instant::now();
+    let (losses, engine, payload_bytes) = std::thread::scope(|scope| {
+        let routing = routing.as_deref();
+        let handles: Vec<_> = (0..n)
+            .map(|w| {
+                let ar: Arc<AllReduce> = Arc::clone(&ar);
+                let cfg = cfg.clone();
+                let f: &FaultPlan = plan;
+                scope.spawn(move || {
+                    let mut engine = NativeDlrm::new(cfg, &mut Rng::new(dp.seed));
+                    let mut flat = vec![0.0f32; payload];
+                    let mut pre = vec![0.0f32; payload];
+                    let mut dense = vec![0.0f32; dense_len];
+                    let mut pre_dense = vec![0.0f32; dense_len];
+                    let mut base = vec![0.0f32; tt_len];
+                    let mut post = vec![0.0f32; tt_len];
+                    let mut delta = SparseDelta::default();
+                    let empty_delta = SparseDelta::default();
+                    let empty_q = SparseDeltaQ8::default();
+                    let mut qdelta = SparseDeltaQ8::default();
+                    let mut residual = vec![0.0f32; if dp.quantize_comm { tt_len } else { 0 }];
+                    // missed-round error feedback (replicated / plan split)
+                    let mut carry = StragglerCarry::new(payload);
+                    let mut carry_dense = StragglerCarry::new(dense_len);
+                    let mut carry_tt = StragglerCarry::new(tt_len);
+                    let mut my: Vec<(f32, u32)> = Vec::with_capacity(batches.len());
+                    let mut bytes = 0u64;
+                    for (bi, batch) in batches.iter().enumerate() {
+                        let round = bi as u64;
+                        let dead = dead_cfg == Some(w) && round >= dead_round;
+                        if dead && round == dead_round {
+                            f.record("dead", w, round);
+                        }
+                        // the straggler set is a pure function of the
+                        // plan, so every worker derives the SAME excluded
+                        // set (no timed rendezvous) — with an all-miss
+                        // guard, and, under plan placement, a guard
+                        // against rounds where every surviving shard is
+                        // empty (either would zero the weight sum)
+                        let live: Vec<usize> = (0..n)
+                            .filter(|&ww| !(dead_cfg == Some(ww) && round >= dead_round))
+                            .collect();
+                        let all_miss = match routing {
+                            None => live.iter().all(|&ww| f.straggle(ww, round)),
+                            Some(routing) => {
+                                let surviving_rows: usize = live
+                                    .iter()
+                                    .filter(|&&ww| !f.straggle(ww, round))
+                                    .map(|&ww| routing[bi][ww].len())
+                                    .sum();
+                                surviving_rows == 0
+                            }
+                        };
+                        let miss = !dead && !all_miss && f.straggle(w, round);
+                        if miss {
+                            f.record("straggle", w, round);
+                            SimPlatform::charge(f.straggle_delay());
+                        }
+                        match routing {
+                            None => {
+                                // fold last round's missed progress back
+                                // in before snapshotting the round base
+                                flatten(&engine, &mut flat);
+                                if carry.fold_into(&mut flat) {
+                                    unflatten(&mut engine, &flat);
+                                }
+                                pre.copy_from_slice(&flat);
+                                // the dead worker's shard is re-dealt
+                                // over the live workers
+                                let (n_live, pos) = match dead_cfg {
+                                    Some(dw) if round >= dead_round => {
+                                        (n - 1, if w > dw { w - 1 } else { w })
+                                    }
+                                    _ => (n, w),
+                                };
+                                let (loss, size) = if dead {
+                                    (0.0, 0)
+                                } else {
+                                    let sb = shard(batch, n_sparse, pos, n_live);
+                                    (engine.train_step(&sb), sb.batch_size)
+                                };
+                                flatten(&engine, &mut flat);
+                                if miss {
+                                    carry.absorb(&pre, &flat);
+                                }
+                                let weight = if dead || miss {
+                                    0.0
+                                } else {
+                                    ((size * n_live) as f64 / batch.batch_size as f64) as f32
+                                };
+                                ar.allreduce_weighted(w, &mut flat, weight);
+                                unflatten(&mut engine, &flat);
+                                if w == 0 && n > 1 {
+                                    bytes += (n * payload * 4) as u64;
+                                }
+                                my.push((loss, size as u32));
+                            }
+                            Some(routing) => {
+                                flatten_dense(&engine, &mut dense);
+                                if carry_dense.fold_into(&mut dense) {
+                                    unflatten_dense(&mut engine, &dense);
+                                }
+                                pre_dense.copy_from_slice(&dense);
+                                flatten_tt(&engine, &mut base);
+                                if carry_tt.fold_into(&mut base) {
+                                    unflatten_tt(&mut engine, &base);
+                                }
+                                // `base` = this round's common TT start
+                                // (with any carried progress folded in)
+                                let rows = &routing[bi][w];
+                                let size = rows.len();
+                                let loss = if size > 0 {
+                                    let sb = gather(batch, n_sparse, rows);
+                                    engine.train_step(&sb)
+                                } else {
+                                    0.0
+                                };
+                                let weight = if miss {
+                                    0.0
+                                } else {
+                                    ((size * n) as f64 / batch.batch_size as f64) as f32
+                                };
+                                flatten_dense(&engine, &mut dense);
+                                if miss {
+                                    carry_dense.absorb(&pre_dense, &dense);
+                                }
+                                ar.allreduce_weighted(w, &mut dense, weight);
+                                unflatten_dense(&mut engine, &dense);
+                                flatten_tt(&engine, &mut post);
+                                // a missed round ships an EMPTY delta
+                                // (zero bytes, weight 0) and banks its
+                                // local TT progress in the carry instead
+                                let round_bytes = if miss {
+                                    carry_tt.absorb(&base, &post);
+                                    if dp.quantize_comm {
+                                        ar.allreduce_sparse_q8(w, &mut base, &empty_q, 0.0)
+                                    } else {
+                                        ar.allreduce_sparse(w, &mut base, &empty_delta, 0.0)
+                                    }
+                                } else {
+                                    delta.diff(&base, &post);
+                                    if dp.quantize_comm {
+                                        qdelta.from_delta(&delta, &mut residual);
+                                        ar.allreduce_sparse_q8(w, &mut base, &qdelta, weight)
+                                    } else {
+                                        ar.allreduce_sparse(w, &mut base, &delta, weight)
+                                    }
+                                };
+                                unflatten_tt(&mut engine, &base);
+                                if w == 0 {
+                                    bytes += round_bytes + (n * dense_len * 4) as u64;
+                                }
+                                my.push((loss, size as u32));
+                            }
+                        }
+                    }
+                    (my, (w == 0).then_some(engine), bytes)
+                })
+            })
+            .collect();
+        let mut results: Vec<(Vec<(f32, u32)>, Option<NativeDlrm>, u64)> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let payload_bytes: u64 = results.iter().map(|r| r.2).sum();
+        let engine = results
+            .iter_mut()
+            .find_map(|r| r.1.take())
+            .expect("worker 0 returns its engine");
+        let all: Vec<Vec<(f32, u32)>> = results.into_iter().map(|r| r.0).collect();
+        let losses: Vec<f32> = (0..batches.len())
+            .map(|s| {
+                if n == 1 {
+                    return all[0][s].0;
+                }
+                let total: f64 = all.iter().map(|l| l[s].1 as f64).sum();
+                (all.iter().map(|l| l[s].0 as f64 * l[s].1 as f64).sum::<f64>()
+                    / total.max(1.0)) as f32
+            })
+            .collect();
+        (losses, engine, payload_bytes)
+    });
+    let wall = t0.elapsed();
+    let samples: u64 = batches.iter().map(|b| b.batch_size as u64).sum();
+    let report = DataParallelReport {
+        workers: n,
+        placement: dp.placement,
+        steps: batches.len() as u64,
+        wall,
+        throughput: samples as f64 / wall.as_secs_f64(),
+        losses,
+        payload_bytes,
+    };
+    (report, engine)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -598,6 +862,113 @@ mod tests {
             (tail - f32_tail).abs() < 0.1,
             "q8 tail loss {tail} drifted from f32 {f32_tail}"
         );
+    }
+
+    #[test]
+    fn faulted_with_no_training_faults_is_bit_identical_to_placed() {
+        use crate::runtime::fault::FaultCfg;
+        let (cfg, batches) = setup();
+        let planner = AccessPlanner::for_engine_cfg(&cfg);
+        for placement in [Placement::Replicated, Placement::Plan] {
+            let dp = DpCfg {
+                workers: 3,
+                placement,
+                cost: zero_cost(),
+                seed: 5,
+                quantize_comm: false,
+            };
+            let (base, _) =
+                train_data_parallel_placed(cfg.clone(), &planner, &batches, &dp);
+            let (none, _) =
+                train_data_parallel_faulted(cfg.clone(), &planner, &batches, &dp, None);
+            // a plan with serving faults only (no stragglers, no dead
+            // worker) must not perturb training either
+            let plan = FaultCfg { enabled: true, sever_rate: 0.5, ..FaultCfg::default() }
+                .plan()
+                .unwrap();
+            let (serve_only, _) = train_data_parallel_faulted(
+                cfg.clone(),
+                &planner,
+                &batches,
+                &dp,
+                Some(&plan),
+            );
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&base.losses), bits(&none.losses), "{placement:?}: None drifted");
+            assert_eq!(
+                bits(&base.losses),
+                bits(&serve_only.losses),
+                "{placement:?}: serve-only plan drifted"
+            );
+        }
+    }
+
+    #[test]
+    fn dead_worker_is_rerouted_and_training_still_learns() {
+        use crate::runtime::fault::FaultCfg;
+        let (cfg, batches) = setup();
+        let planner = AccessPlanner::for_engine_cfg(&cfg);
+        for placement in [Placement::Replicated, Placement::Plan] {
+            let dp = DpCfg {
+                workers: 3,
+                placement,
+                cost: zero_cost(),
+                seed: 5,
+                quantize_comm: false,
+            };
+            let plan = FaultCfg {
+                enabled: true,
+                dead_worker: Some(1),
+                dead_round: 3,
+                ..FaultCfg::default()
+            }
+            .plan()
+            .unwrap();
+            let (rep, _) =
+                train_data_parallel_faulted(cfg.clone(), &planner, &batches, &dp, Some(&plan));
+            assert_eq!(rep.steps, 16);
+            assert!(rep.losses.iter().all(|l| l.is_finite()), "{placement:?}: NaN loss");
+            let head = rep.losses[0];
+            let tail = rep.losses[rep.losses.len() - 1];
+            assert!(tail < head, "{placement:?}: no learning past a dead worker: {head} -> {tail}");
+            assert_eq!(plan.event_count("dead"), 1, "{placement:?}: death not logged once");
+        }
+    }
+
+    #[test]
+    fn straggler_exclusion_converges_close_to_full_participation() {
+        use crate::runtime::fault::FaultCfg;
+        let (cfg, batches) = setup();
+        let planner = AccessPlanner::for_engine_cfg(&cfg);
+        let dp = DpCfg {
+            workers: 3,
+            placement: Placement::Replicated,
+            cost: zero_cost(),
+            seed: 5,
+            quantize_comm: false,
+        };
+        let (full, _) = train_data_parallel_placed(cfg.clone(), &planner, &batches, &dp);
+        let plan = FaultCfg {
+            enabled: true,
+            straggle_rate: 0.3,
+            straggle_ms: 0, // decision logic under test, not the sleep
+            ..FaultCfg::default()
+        }
+        .plan()
+        .unwrap();
+        let (lossy, _) =
+            train_data_parallel_faulted(cfg, &planner, &batches, &dp, Some(&plan));
+        assert!(plan.event_count("straggle") > 0, "rate 0.3 over 48 draws never fired");
+        assert!(lossy.losses.iter().all(|l| l.is_finite()));
+        let full_tail = full.losses[full.losses.len() - 1];
+        let lossy_tail = lossy.losses[lossy.losses.len() - 1];
+        // error-feedback carry keeps the excluded rounds' progress: the
+        // trajectory tracks full participation closely, not exactly
+        assert!(
+            (lossy_tail - full_tail).abs() < 0.1,
+            "straggler tail loss {lossy_tail} drifted from full-participation {full_tail}"
+        );
+        assert!(lossy_tail < lossy.losses[0], "no learning under stragglers");
     }
 
     #[test]

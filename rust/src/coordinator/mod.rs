@@ -12,10 +12,11 @@ pub mod platform;
 pub mod queues;
 pub mod trainer;
 
-pub use allreduce::{AllReduce, SparseDelta};
+pub use allreduce::{AllReduce, SparseDelta, StragglerCarry};
 pub use cache::{EmbeddingCache, PrefetchBatch, PrefetchedRow};
 pub use data_parallel::{
-    train_data_parallel, train_data_parallel_placed, DataParallelReport, DpCfg, Placement,
+    train_data_parallel, train_data_parallel_faulted, train_data_parallel_placed,
+    DataParallelReport, DpCfg, Placement,
 };
 pub use engine::{EngineCfg, NativeDlrm, TableSlot};
 pub use params::{GradPacket, HostParams};

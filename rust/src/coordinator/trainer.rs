@@ -2,12 +2,14 @@
 //! Used by the Table III/V benches, the CLI `train` subcommand, and the
 //! examples.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::access::{run_prefetched_fill, AccessCfg, AccessPlanner, BatchPlan};
 use crate::coordinator::data_parallel::{
-    train_data_parallel_placed, DataParallelReport, DpCfg,
+    train_data_parallel_faulted, DataParallelReport, DpCfg,
 };
+use crate::runtime::fault::FaultPlan;
 use crate::coordinator::engine::{EngineCfg, NativeDlrm};
 use crate::data::batcher::{fill_batch, EpochIter};
 use crate::data::ctr::Batch;
@@ -156,6 +158,23 @@ pub fn train_ieee118_dp(
     batch_size: usize,
     dp: &DpCfg,
 ) -> (DataParallelReport, NativeDlrm, ClassifyReport) {
+    train_ieee118_dp_faulted(cfg, dataset, epochs, batch_size, dp, None)
+}
+
+/// [`train_ieee118_dp`] under a chaos plan: stragglers miss the exchange
+/// deadline (weight-0 exclusion + error-feedback carry) and a
+/// permanently dead worker's shard is re-routed — see
+/// [`train_data_parallel_faulted`].  With `fault` `None` (or a plan
+/// carrying no training faults) this IS `train_ieee118_dp`,
+/// bit-identically.
+pub fn train_ieee118_dp_faulted(
+    cfg: EngineCfg,
+    dataset: &Ieee118Dataset,
+    epochs: usize,
+    batch_size: usize,
+    dp: &DpCfg,
+    fault: Option<&Arc<FaultPlan>>,
+) -> (DataParallelReport, NativeDlrm, ClassifyReport) {
     let (train, test) = dataset.split(0.8);
     let mut rng = Rng::new(dp.seed ^ 0xE90C);
     let mut batches = Vec::new();
@@ -163,7 +182,8 @@ pub fn train_ieee118_dp(
         batches.extend(EpochIter::new(train, batch_size, &mut rng));
     }
     let planner = AccessPlanner::for_engine_cfg(&cfg);
-    let (report, mut engine) = train_data_parallel_placed(cfg, &planner, &batches, dp);
+    let (report, mut engine) =
+        train_data_parallel_faulted(cfg, &planner, &batches, dp, fault);
     let eval = evaluate_on_with(&mut engine, &planner, test);
     (report, engine, eval)
 }

@@ -37,6 +37,7 @@ where
         let mut rest = data;
         let last = ranges.len() - 1;
         let mut own: Option<(usize, &mut [T])> = None;
+        let mut spawned = Vec::with_capacity(last);
         for (i, r) in ranges.into_iter().enumerate() {
             let take = (r.end - r.start) * width;
             let (block, tail) = std::mem::take(&mut rest).split_at_mut(take);
@@ -47,13 +48,34 @@ where
                 // idling at the scope join (no spare-thread oversubscribe)
                 own = Some((first_row, block));
             } else {
-                s.spawn(move || f(first_row, block));
+                spawned.push((i, r, s.spawn(move || f(first_row, block))));
             }
         }
         if let Some((first_row, block)) = own {
             f(first_row, block);
         }
+        // join explicitly so a dead worker is named (shard + row span +
+        // original payload) instead of the scope's anonymous re-panic
+        for (i, r, h) in spawned {
+            if let Err(p) = h.join() {
+                panic!(
+                    "exec shard worker {i} (rows {}..{}) panicked: {}",
+                    r.start,
+                    r.end,
+                    panic_message(&p)
+                );
+            }
+        }
     });
+}
+
+/// Best-effort extraction of a panic payload's message (panics carry
+/// `&str` or `String` in practice).
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    p.downcast_ref::<&str>()
+        .map(|s| (*s).to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string())
 }
 
 /// Split `0..n` into at most `parts` balanced contiguous shards whose
@@ -164,16 +186,25 @@ pub fn par_gemm_at_overwrite(
     std::thread::scope(|s| {
         let last = ranges.len() - 1;
         let mut own: Option<(usize, usize, &mut Vec<f32>)> = None;
+        let mut spawned = Vec::with_capacity(last);
         for (i, (r, block)) in ranges.iter().zip(blocks.iter_mut()).enumerate() {
             let (j0, j1) = (r.start, r.end);
             if i == last {
                 own = Some((j0, j1, block));
             } else {
-                s.spawn(move || gemm_at_block(a, b, block, m, k, n, j0, j1));
+                spawned.push((i, j0, j1, s.spawn(move || gemm_at_block(a, b, block, m, k, n, j0, j1))));
             }
         }
         if let Some((j0, j1, block)) = own {
             gemm_at_block(a, b, block, m, k, n, j0, j1);
+        }
+        for (i, j0, j1, h) in spawned {
+            if let Err(p) = h.join() {
+                panic!(
+                    "exec shard worker {i} (cols {j0}..{j1}) panicked: {}",
+                    panic_message(&p)
+                );
+            }
         }
     });
     for (r, block) in ranges.iter().zip(blocks.iter()) {
@@ -283,6 +314,28 @@ mod tests {
             par_gemm_at_overwrite(&pool(3), &at, &b, &mut c_par, m, k, n);
             assert_eq!(bits(&c_serial), bits(&c_par), "m={m} k={k} n={n}");
         }
+    }
+
+    #[test]
+    fn panicking_shard_worker_is_resurfaced_with_its_shard_label() {
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut data = vec![0u32; 64 * 2];
+            par_row_blocks(&pool(4), &mut data, 2, |row0, _block| {
+                if row0 == 0 {
+                    panic!("injected shard fault");
+                }
+            });
+        }))
+        .expect_err("worker panic must propagate to the caller");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "non-string".to_string());
+        assert!(
+            msg.contains("exec shard worker 0 (rows 0..16)"),
+            "panic not labeled with the shard: {msg}"
+        );
+        assert!(msg.contains("injected shard fault"), "original payload lost: {msg}");
     }
 
     #[test]

@@ -92,6 +92,63 @@ fn load_config(cli: &Cli) -> Result<RecAdConfig> {
     if cli.flag("autotune") {
         cfg.autotune.enabled = true;
     }
+    // --fault-* chaos knobs: any explicit knob switches injection on
+    let mut fault_touched = false;
+    if cli.opt("fault-seed").is_some() {
+        cfg.fault.seed = cli.usize_or("fault-seed", cfg.fault.seed as usize)? as u64;
+        fault_touched = true;
+    }
+    if cli.opt("fault-kill-replica").is_some() {
+        cfg.fault.kill_replica = Some(cli.usize_or("fault-kill-replica", 0)?);
+        fault_touched = true;
+    }
+    if cli.opt("fault-kill-after").is_some() {
+        cfg.fault.kill_after = cli.usize_or("fault-kill-after", 0)? as u64;
+        fault_touched = true;
+    }
+    if cli.opt("fault-panic-rate").is_some() {
+        cfg.fault.panic_rate = cli.f64_or("fault-panic-rate", 0.0)?;
+        fault_touched = true;
+    }
+    if cli.opt("fault-stall-rate").is_some() {
+        cfg.fault.stall_rate = cli.f64_or("fault-stall-rate", 0.0)?;
+        fault_touched = true;
+    }
+    if cli.opt("fault-stall-ms").is_some() {
+        cfg.fault.stall_ms = cli.usize_or("fault-stall-ms", 0)? as u64;
+        fault_touched = true;
+    }
+    if cli.opt("fault-sever-rate").is_some() {
+        cfg.fault.sever_rate = cli.f64_or("fault-sever-rate", 0.0)?;
+        fault_touched = true;
+    }
+    if cli.opt("fault-flood-rate").is_some() {
+        cfg.fault.flood_rate = cli.f64_or("fault-flood-rate", 0.0)?;
+        fault_touched = true;
+    }
+    if cli.opt("fault-flood-burst").is_some() {
+        cfg.fault.flood_burst = cli.usize_or("fault-flood-burst", 0)?;
+        fault_touched = true;
+    }
+    if cli.opt("fault-straggle-rate").is_some() {
+        cfg.fault.straggle_rate = cli.f64_or("fault-straggle-rate", 0.0)?;
+        fault_touched = true;
+    }
+    if cli.opt("fault-straggle-ms").is_some() {
+        cfg.fault.straggle_ms = cli.usize_or("fault-straggle-ms", 0)? as u64;
+        fault_touched = true;
+    }
+    if cli.opt("fault-dead-worker").is_some() {
+        cfg.fault.dead_worker = Some(cli.usize_or("fault-dead-worker", 0)?);
+        fault_touched = true;
+    }
+    if cli.opt("fault-dead-round").is_some() {
+        cfg.fault.dead_round = cli.usize_or("fault-dead-round", 0)? as u64;
+        fault_touched = true;
+    }
+    if fault_touched {
+        cfg.fault.enabled = true;
+    }
     Ok(cfg)
 }
 
@@ -200,8 +257,15 @@ fn cmd_train(cli: &Cli) -> Result<()> {
             seed: cfg.seed,
             quantize_comm,
         };
-        let (report, _engine, eval) =
-            trainer::train_ieee118_dp(ecfg, &ds, cfg.epochs, cfg.batch_size, &dp);
+        let fault_plan = cfg.fault.plan();
+        let (report, _engine, eval) = trainer::train_ieee118_dp_faulted(
+            ecfg,
+            &ds,
+            cfg.epochs,
+            cfg.batch_size,
+            &dp,
+            fault_plan.as_ref(),
+        );
         println!(
             "data-parallel [{}] x{}: {} steps in {} ({:.0} samples/s, \
              all-reduce payload {})",
@@ -212,6 +276,14 @@ fn cmd_train(cli: &Cli) -> Result<()> {
             report.throughput,
             fmt_bytes(report.payload_bytes),
         );
+        if let Some(f) = &fault_plan {
+            println!(
+                "chaos [seed {}]: {} straggler exclusion(s), {} dead-worker event(s)",
+                f.cfg().seed,
+                f.event_count("straggle"),
+                f.event_count("dead"),
+            );
+        }
         print_eval(&eval);
     } else {
         let access = cfg.access_cfg();
@@ -297,6 +369,20 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     scfg.clients = cli.usize_or("clients", scfg.clients)?;
     scfg.arrival_rate = cli.f64_or("arrival-rate", scfg.arrival_rate)?;
     scfg.dispatch_us = cli.usize_or("dispatch-us", scfg.dispatch_us as usize)? as u64;
+    scfg.shed_budget_us = cli.usize_or("shed-budget-us", scfg.shed_budget_us as usize)? as u64;
+    scfg.heartbeat_ms = cli.usize_or("heartbeat-ms", scfg.heartbeat_ms as usize)? as u64;
+    scfg.hang_ms = cli.usize_or("hang-ms", scfg.hang_ms as usize)? as u64;
+    let fault_plan = cfg.fault.plan();
+    if fault_plan.is_some()
+        && scfg.heartbeat_ms == 0
+        && (cfg.fault.kill_replica.is_some() || cfg.fault.panic_rate > 0.0)
+    {
+        eprintln!(
+            "warning: replica kill/panic faults are enabled without a \
+             supervisor (--heartbeat-ms 0): dead replicas stay dead and \
+             their queued requests time out as dropped"
+        );
+    }
 
     let ds = generate(&DatasetCfg {
         n_normal: 2000,
@@ -339,7 +425,8 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         .threshold(threshold)
         .with_cfg(&scfg)
         .quantize(cfg.quantize)
-        .autotune(&cfg.autotune);
+        .autotune(&cfg.autotune)
+        .fault(fault_plan.clone());
     if cfg.autotune.serve_on() {
         println!(
             "autotune[serve]: replicas adapt max_batch/deadline toward \
@@ -369,6 +456,28 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             fmt_dur(ol.p99_queue_delay.as_secs_f64()),
             fmt_dur(ol.p99_service.as_secs_f64()),
         );
+        if ol.shed > 0 || ol.dropped > 0 || ol.respawns > 0 {
+            println!(
+                "fault tolerance: {} shed, {} dropped, {} respawn(s); \
+                 post-recovery tail p99 {}",
+                ol.shed,
+                ol.dropped,
+                ol.respawns,
+                fmt_dur(ol.tail_p99_window.as_secs_f64()),
+            );
+        }
+        if let Some(f) = &fault_plan {
+            println!(
+                "chaos [seed {}]: {} panic(s), {} stall(s), {} sever(s), \
+                 {} flood(s), {} respawn(s)",
+                f.cfg().seed,
+                f.event_count("panic"),
+                f.event_count("stall"),
+                f.event_count("sever"),
+                f.event_count("flood"),
+                f.event_count("respawn"),
+            );
+        }
     } else {
         let server = session.start();
         let sr = server.run_stream_concurrent(stream, model_bytes, scfg.effective_clients());

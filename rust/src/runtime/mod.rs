@@ -16,6 +16,7 @@
 
 pub mod artifact;
 pub mod autotune;
+pub mod fault;
 #[cfg(feature = "pjrt")]
 pub mod client;
 #[cfg(feature = "pjrt")]
@@ -29,6 +30,7 @@ pub use autotune::{
     AutotuneCfg, BatchKnobs, CacheBudgetTuner, CacheFeedback, ReorderCadenceTuner,
     ServeBatchTuner, ServeTuneCfg,
 };
+pub use fault::{FaultCfg, FaultEvent, FaultPlan};
 #[cfg(feature = "pjrt")]
 pub use client::client;
 pub use executor::{DlrmFwd, DlrmTrainStep, TtLookupExe};

@@ -16,6 +16,11 @@ pub struct Verdict {
     pub is_attack: bool,
     /// End-to-end handling latency of this request.
     pub latency: Duration,
+    /// The measurement vector contained NaN/inf channels that were
+    /// clamped before scoring.  A poisoned measurement is itself a
+    /// strong tamper signal — the flag lets operators alarm on it even
+    /// when the clamped probability stays below threshold.
+    pub poisoned: bool,
 }
 
 /// `Clone` so a trained detector can be replicated across serving shards
@@ -26,6 +31,10 @@ pub struct Verdict {
 pub struct Detector {
     pub engine: NativeDlrm,
     pub threshold: f32,
+    /// Lifetime count of samples whose dense measurements carried
+    /// NaN/inf channels (clamped to 0.0 before scoring, never propagated
+    /// into the MLP).
+    pub poisoned: u64,
     scratch: Batch,
     planner: AccessPlanner,
     plan: BatchPlan,
@@ -47,10 +56,33 @@ impl Detector {
         Detector {
             engine,
             threshold,
+            poisoned: 0,
             scratch: Batch::default(),
             planner,
             plan: BatchPlan::default(),
         }
+    }
+
+    /// Append one sample's dense measurements to the scratch batch,
+    /// clamping non-finite channels to 0.0 instead of letting a single
+    /// poisoned sensor reading propagate NaN through the MLP into a
+    /// garbage probability (and, batched, into OTHER requests' scores).
+    /// Returns whether anything had to be clamped.  Finite inputs are
+    /// copied verbatim — the fault-free path is bit-identical.
+    fn push_dense_sanitized(&mut self, dense: &[f32]) -> bool {
+        let mut dirty = false;
+        for &v in dense {
+            if v.is_finite() {
+                self.scratch.dense.push(v);
+            } else {
+                dirty = true;
+                self.scratch.dense.push(0.0);
+            }
+        }
+        if dirty {
+            self.poisoned += 1;
+        }
+        dirty
     }
 
     /// Run the assembled scratch batch through the planned predict path.
@@ -64,7 +96,7 @@ impl Detector {
     /// Score one sample (batch-1 streaming path).
     pub fn score(&mut self, sample: &Sample) -> f32 {
         self.scratch.dense.clear();
-        self.scratch.dense.extend_from_slice(&sample.dense);
+        self.push_dense_sanitized(&sample.dense);
         self.scratch.sparse.clear();
         self.scratch.sparse.extend_from_slice(&sample.sparse);
         self.scratch.labels.clear();
@@ -80,7 +112,8 @@ impl Detector {
         self.scratch.sparse.clear();
         self.scratch.labels.clear();
         for s in samples {
-            self.scratch.dense.extend_from_slice(&s.dense);
+            let dense = s.dense;
+            self.push_dense_sanitized(&dense);
             self.scratch.sparse.extend_from_slice(&s.sparse);
             self.scratch.labels.push(0.0);
         }
@@ -97,11 +130,13 @@ impl Detector {
     /// ([`Reply`](crate::serve::Reply)'s queue-delay/service split).
     pub fn verdict(&mut self, sample: &Sample) -> Verdict {
         let t0 = Instant::now();
+        let before = self.poisoned;
         let p = self.score(sample);
         Verdict {
             attack_probability: p,
             is_attack: p > self.threshold,
             latency: t0.elapsed(),
+            poisoned: self.poisoned > before,
         }
     }
 }
@@ -136,6 +171,54 @@ mod tests {
         for (a, b) in singles.iter().zip(&batched) {
             assert!((a - b).abs() < 1e-5, "batch/single mismatch {a} vs {b}");
         }
+    }
+
+    #[test]
+    fn poisoned_samples_are_clamped_and_flagged_not_propagated() {
+        let ds = generate(&DatasetCfg {
+            n_normal: 20,
+            n_attack: 5,
+            vocab: SparseVocab::ieee118(1.0 / 2000.0),
+            n_profiles: 5,
+            noise_std: 0.005,
+            seed: 9,
+        });
+        let cfg = EngineCfg::ieee118(1.0 / 2000.0);
+        let engine = NativeDlrm::new(cfg, &mut Rng::new(4));
+        let mut det = Detector::new(engine, 0.5);
+
+        // a NaN/inf measurement vector must still yield a finite verdict
+        let mut poisoned = ds.samples[0].clone();
+        poisoned.dense[0] = f32::NAN;
+        poisoned.dense[1] = f32::INFINITY;
+        poisoned.dense[2] = f32::NEG_INFINITY;
+        let v = det.verdict(&poisoned);
+        assert!(v.attack_probability.is_finite(), "NaN leaked through the MLP");
+        assert!((0.0..=1.0).contains(&v.attack_probability));
+        assert!(v.poisoned, "clamped sample must be flagged");
+        assert_eq!(det.poisoned, 1);
+
+        // the clamp is equivalent to zeroing the poisoned channels…
+        let mut zeroed = ds.samples[0].clone();
+        zeroed.dense[0] = 0.0;
+        zeroed.dense[1] = 0.0;
+        zeroed.dense[2] = 0.0;
+        let pz = det.score(&zeroed);
+        let pp = det.score(&poisoned);
+        assert_eq!(pp.to_bits(), pz.to_bits(), "clamp must equal explicit zeroing");
+
+        // …and a clean sample is copied verbatim, unflagged
+        let before = det.poisoned;
+        let v = det.verdict(&ds.samples[1]);
+        assert!(!v.poisoned);
+        assert_eq!(det.poisoned, before);
+
+        // batched scoring: the poisoned row must not corrupt its peers
+        let clean = det.score(&ds.samples[1]);
+        let refs: Vec<&Sample> = vec![&poisoned, &ds.samples[1]];
+        let batched = det.score_batch(&refs);
+        assert!(batched.iter().all(|p| p.is_finite()));
+        assert!((batched[1] - clean).abs() < 1e-5, "poisoned row smeared its neighbor");
     }
 
     #[test]

@@ -34,13 +34,20 @@ pub struct OpenLoopReport {
     /// Requests the generator offered (== `samples.len()`).
     pub offered: usize,
     /// Requests that came back with a verdict.  Normally every offered
-    /// request; see `dropped` for the exceptions.
+    /// request; see `dropped` and `shed` for the exceptions.
     pub served: u64,
-    /// Requests whose reply channel disconnected before a verdict
-    /// arrived (a replica dropped the sender — e.g. a session shutdown
-    /// racing the drain).  Counted instead of aborting the run; excluded
-    /// from every latency statistic.
+    /// Requests whose reply channel disconnected (or timed out) before a
+    /// verdict arrived (a replica dropped the sender — e.g. a session
+    /// shutdown racing the drain, or an injected reply-sever fault).
+    /// Counted instead of aborting the run; excluded from every latency
+    /// statistic.  Distinct from `shed`: a drop is silent loss, a shed
+    /// is an explicit immediate refusal.
     pub dropped: usize,
+    /// Requests the router refused under overload (`Reply::shed`) —
+    /// answered immediately, never queued, excluded from latency stats.
+    pub shed: usize,
+    /// Replicas the supervisor respawned during the run.
+    pub respawns: u64,
     pub wall: Duration,
     /// Configured arrival rate (requests/s).
     pub offered_rate: f64,
@@ -60,6 +67,10 @@ pub struct OpenLoopReport {
     pub p99_service: Duration,
     pub replicas: usize,
     pub policy: &'static str,
+    /// p99 attack window over the SECOND HALF of served requests in
+    /// arrival order — the post-recovery tail a kill/respawn bench arm
+    /// compares against its fault-free twin.
+    pub tail_p99_window: Duration,
     /// Sorted per-request windows in seconds (for bench arms /
     /// custom percentiles).
     pub window_samples: Vec<f64>,
@@ -96,15 +107,22 @@ pub fn run_open_loop(
     }
     let (replies, dropped) = drain_replies(receivers);
     let wall = t0.elapsed();
+    let respawns = server.respawns();
     let (lifetime, _) = server.shutdown();
-    assert!(lifetime >= replies.len() as u64, "replicas lost requests");
-    if replies.is_empty() {
-        // every reply channel disconnected: report the drop count with
-        // zeroed latency stats instead of dividing by nothing
+    // split explicit overload refusals from real verdicts (arrival order
+    // is preserved — `replies` follows submission order)
+    let served: Vec<&Reply> = replies.iter().filter(|r| !r.shed).collect();
+    let shed = replies.len() - served.len();
+    assert!(lifetime >= served.len() as u64, "replicas lost requests");
+    if served.is_empty() {
+        // every reply channel disconnected or shed: report the counts
+        // with zeroed latency stats instead of dividing by nothing
         return OpenLoopReport {
             offered: samples.len(),
             served: 0,
             dropped,
+            shed,
+            respawns,
             wall,
             offered_rate: cfg.rate_per_sec,
             achieved_rate: 0.0,
@@ -118,28 +136,40 @@ pub fn run_open_loop(
             p99_service: Duration::ZERO,
             replicas,
             policy,
+            tail_p99_window: Duration::ZERO,
             window_samples: Vec::new(),
         };
     }
 
-    let mut windows: Vec<f64> = replies.iter().map(|r| r.latency.as_secs_f64()).collect();
+    let d = |s: f64| Duration::from_secs_f64(s.max(0.0));
+    // post-recovery tail: p99 over the second half of served requests in
+    // arrival order (a kill/respawn arm's recovered steady state)
+    let mut tail: Vec<f64> = served[served.len() / 2..]
+        .iter()
+        .map(|r| r.latency.as_secs_f64())
+        .collect();
+    tail.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let tail_p99_window = d(percentile(&tail, 0.99));
+
+    let mut windows: Vec<f64> = served.iter().map(|r| r.latency.as_secs_f64()).collect();
     let mut queue: Vec<f64> =
-        replies.iter().map(|r| r.queue_delay.as_secs_f64()).collect();
+        served.iter().map(|r| r.queue_delay.as_secs_f64()).collect();
     let mut service: Vec<f64> =
-        replies.iter().map(|r| r.service_time().as_secs_f64()).collect();
+        served.iter().map(|r| r.service_time().as_secs_f64()).collect();
     for v in [&mut windows, &mut queue, &mut service] {
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     }
     let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
-    let d = |s: f64| Duration::from_secs_f64(s.max(0.0));
 
     OpenLoopReport {
         offered: samples.len(),
-        served: replies.len() as u64,
+        served: served.len() as u64,
         dropped,
+        shed,
+        respawns,
         wall,
         offered_rate: cfg.rate_per_sec,
-        achieved_rate: replies.len() as f64 / wall.as_secs_f64().max(1e-12),
+        achieved_rate: served.len() as f64 / wall.as_secs_f64().max(1e-12),
         mean_window: d(mean(&windows)),
         p50_window: d(percentile(&windows, 0.50)),
         p99_window: d(percentile(&windows, 0.99)),
@@ -150,21 +180,25 @@ pub fn run_open_loop(
         p99_service: d(percentile(&service, 0.99)),
         replicas,
         policy,
+        tail_p99_window,
         window_samples: windows,
     }
 }
 
 /// Await every reply channel in submission order.  A disconnected
 /// channel (the replica dropped the sender before answering — a session
-/// shutdown racing the drain) counts that request as dropped instead of
-/// aborting the whole open-loop run.
+/// shutdown racing the drain, or an injected reply-sever fault) counts
+/// that request as dropped instead of aborting the whole open-loop run;
+/// so does a reply that fails to arrive within a generous deadline (an
+/// unsupervised replica died with the request queued — without the
+/// timeout the drain would block forever).
 fn drain_replies(receivers: Vec<mpsc::Receiver<Reply>>) -> (Vec<Reply>, usize) {
     let mut dropped = 0usize;
     let replies = receivers
         .into_iter()
-        .filter_map(|rx| match rx.recv() {
+        .filter_map(|rx| match rx.recv_timeout(Duration::from_secs(30)) {
             Ok(r) => Some(r),
-            Err(mpsc::RecvError) => {
+            Err(_) => {
                 dropped += 1;
                 None
             }
@@ -198,6 +232,9 @@ mod tests {
         assert_eq!(report.offered, 30);
         assert_eq!(report.served, 30);
         assert_eq!(report.dropped, 0);
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.respawns, 0);
+        assert!(report.tail_p99_window <= report.max_window);
         assert_eq!(report.window_samples.len(), 30);
         assert!(report.achieved_rate > 0.0);
         assert!(report.p50_window <= report.p99_window);
@@ -221,6 +258,7 @@ mod tests {
             prob,
             latency: Duration::from_micros(50),
             queue_delay: Duration::from_micros(10),
+            shed: false,
         };
         let (tx1, rx1) = std::sync::mpsc::channel();
         let (tx2, rx2) = std::sync::mpsc::channel::<Reply>();

@@ -21,6 +21,15 @@
 //! Invariant: replicas are clones of one trained detector, so route
 //! policy, replica count, and micro-batching can never change a verdict
 //! — pinned bitwise by `tests/serve_equivalence.rs`.
+//!
+//! Fault tolerance (PR 8): replica queues survive worker death, a
+//! supervisor ([`GuardCfg::heartbeat`]) respawns dead/hung replicas from
+//! a frozen snapshot, the router sheds under overload
+//! ([`GuardCfg::shed_budget`], `Reply { shed: true }`), and all of it is
+//! driven deterministically by the
+//! [`FaultPlan`](crate::runtime::fault::FaultPlan) chaos harness —
+//! disabled, the stack is bit-identical to the unguarded one (pinned by
+//! `tests/fault_equivalence.rs`).
 
 pub mod detector;
 pub mod load;
@@ -31,5 +40,5 @@ pub mod session;
 pub use detector::{Detector, Verdict};
 pub use load::{run_open_loop, OpenLoopCfg, OpenLoopReport};
 pub use router::{LeastQueued, PlanAffinity, Policy, QueueDepths, RoundRobin, RoutePolicy};
-pub use server::{Reply, ServeReport, StreamingServer};
+pub use server::{GuardCfg, Reply, ServeReport, StreamingServer};
 pub use session::{ServeCfg, ServeSession};

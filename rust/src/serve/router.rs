@@ -21,21 +21,30 @@
 //! change a verdict — only queueing and cache behavior.  Pinned by
 //! `tests/serve_equivalence.rs`.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 use crate::access::AffinityMap;
 use crate::powersys::dataset::Sample;
 
 /// Per-replica in-flight request gauges, shared between the server's
-/// dispatch side (enter) and the replica workers (leave).
+/// dispatch side (enter) and the replica workers (leave).  Next to the
+/// depth gauges sit the fault-tolerance signals the supervisor reads:
+/// a per-replica heartbeat counter (bumped every batch pickup) and a
+/// liveness bit (cleared when a replica worker unwinds, restored on
+/// respawn).  Policies consult the liveness bits so a dead replica stops
+/// receiving traffic the instant it dies, not after its respawn.
 pub struct QueueDepths {
     depths: Vec<AtomicUsize>,
+    beats: Vec<AtomicU64>,
+    live: Vec<AtomicBool>,
 }
 
 impl QueueDepths {
     pub fn new(replicas: usize) -> QueueDepths {
         QueueDepths {
             depths: (0..replicas).map(|_| AtomicUsize::new(0)).collect(),
+            beats: (0..replicas).map(|_| AtomicU64::new(0)).collect(),
+            live: (0..replicas).map(|_| AtomicBool::new(true)).collect(),
         }
     }
 
@@ -66,6 +75,55 @@ impl QueueDepths {
     pub fn leave(&self, i: usize) {
         self.depths[i].fetch_sub(1, Ordering::Relaxed);
     }
+
+    /// Replica `i` proves progress (called once per batch pickup).
+    #[inline]
+    pub fn beat(&self, i: usize) {
+        self.beats[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Heartbeat counter of replica `i` — the supervisor compares
+    /// successive readings to detect a hung worker.
+    #[inline]
+    pub fn beats(&self, i: usize) -> u64 {
+        self.beats[i].load(Ordering::Relaxed)
+    }
+
+    /// Is replica `i` currently believed alive?
+    #[inline]
+    pub fn alive(&self, i: usize) -> bool {
+        self.live[i].load(Ordering::Relaxed)
+    }
+
+    /// Flip replica `i`'s liveness (worker unwind → false, respawn →
+    /// true).
+    #[inline]
+    pub fn set_alive(&self, i: usize, alive: bool) {
+        self.live[i].store(alive, Ordering::Relaxed);
+    }
+
+    /// Number of replicas currently marked alive.
+    pub fn live_count(&self) -> usize {
+        self.live.iter().filter(|a| a.load(Ordering::Relaxed)).count()
+    }
+
+    /// First alive replica at or cyclically after `start`; falls back to
+    /// `start` itself when every replica is marked dead (the queue still
+    /// exists, so the request waits for the supervisor's respawn instead
+    /// of being lost).  With a full live-set this is the identity map —
+    /// policies built on it are bit-identical to their pre-fault-layer
+    /// routing.
+    #[inline]
+    pub fn first_alive_from(&self, start: usize) -> usize {
+        let n = self.depths.len();
+        for k in 0..n {
+            let i = (start + k) % n;
+            if self.alive(i) {
+                return i;
+            }
+        }
+        start
+    }
 }
 
 /// A routing decision per request.  Implementations must be `Sync`:
@@ -95,7 +153,8 @@ impl RoutePolicy for RoundRobin {
     }
 
     fn route(&self, _sample: &Sample, depths: &QueueDepths) -> usize {
-        self.next.fetch_add(1, Ordering::Relaxed) % depths.len()
+        let pick = self.next.fetch_add(1, Ordering::Relaxed) % depths.len();
+        depths.first_alive_from(pick)
     }
 }
 
@@ -121,17 +180,23 @@ impl RoutePolicy for LeastQueued {
     fn route(&self, _sample: &Sample, depths: &QueueDepths) -> usize {
         let n = depths.len();
         let start = self.cursor.fetch_add(1, Ordering::Relaxed) % n;
-        let mut best = start;
-        let mut best_depth = depths.depth(start);
-        for k in 1..n {
+        // Scan only the live-set; with every replica alive this reduces
+        // exactly to the pre-fault-layer shallowest-queue scan.
+        let mut best: Option<(usize, usize)> = None;
+        for k in 0..n {
             let i = (start + k) % n;
+            if !depths.alive(i) {
+                continue;
+            }
             let d = depths.depth(i);
-            if d < best_depth {
-                best = i;
-                best_depth = d;
+            if best.map_or(true, |(_, bd)| d < bd) {
+                best = Some((i, d));
             }
         }
-        best
+        match best {
+            Some((i, _)) => i,
+            None => depths.first_alive_from(start),
+        }
     }
 }
 
@@ -155,7 +220,10 @@ impl RoutePolicy for PlanAffinity {
     }
 
     fn route(&self, sample: &Sample, depths: &QueueDepths) -> usize {
-        (self.map.key(&sample.sparse) % depths.len() as u64) as usize
+        let pick = (self.map.key(&sample.sparse) % depths.len() as u64) as usize;
+        // Affinity is best-effort under faults: a dead owner's keys walk
+        // forward to the next live replica and snap back on respawn.
+        depths.first_alive_from(pick)
     }
 }
 
@@ -253,6 +321,64 @@ mod tests {
         d.leave(0);
         // replica 0 drained to zero
         assert_eq!(lq.route(&s, &d), 0);
+    }
+
+    #[test]
+    fn policies_skip_dead_replicas_and_recover_on_revival() {
+        let d = QueueDepths::new(3);
+        let s = sample(3);
+
+        let rr = RoundRobin::new();
+        d.set_alive(1, false);
+        // cursor picks 0,1,2 — pick 1 walks forward to 2
+        assert_eq!(rr.route(&s, &d), 0);
+        assert_eq!(rr.route(&s, &d), 2);
+        assert_eq!(rr.route(&s, &d), 2);
+        d.set_alive(1, true);
+        assert_eq!(rr.route(&s, &d), 0);
+        assert_eq!(rr.route(&s, &d), 1);
+
+        let lq = LeastQueued::new();
+        d.set_alive(2, false);
+        d.enter(0);
+        d.enter(0);
+        // replica 2 is empty but dead: the shallow-queue scan must pick 1
+        for _ in 0..3 {
+            assert_eq!(lq.route(&s, &d), 1);
+        }
+        d.enter(1);
+        d.set_alive(2, true);
+        // revived replica 2 (depth 0) is now the shallowest live queue
+        assert_eq!(lq.route(&s, &d), 2);
+        assert_eq!(d.live_count(), 3);
+    }
+
+    #[test]
+    fn all_dead_routes_fall_back_to_original_pick() {
+        let d = QueueDepths::new(2);
+        d.set_alive(0, false);
+        d.set_alive(1, false);
+        assert_eq!(d.live_count(), 0);
+        let rr = RoundRobin::new();
+        let s = sample(4);
+        // nothing alive: the pick degrades to the raw cursor value so the
+        // request queues for the supervisor's respawn instead of panicking
+        assert_eq!(rr.route(&s, &d), 0);
+        assert_eq!(rr.route(&s, &d), 1);
+        let lq = LeastQueued::new();
+        let p0 = lq.route(&s, &d);
+        assert!(p0 < 2);
+    }
+
+    #[test]
+    fn heartbeats_count_pickups() {
+        let d = QueueDepths::new(2);
+        assert_eq!(d.beats(0), 0);
+        d.beat(0);
+        d.beat(0);
+        d.beat(1);
+        assert_eq!(d.beats(0), 2);
+        assert_eq!(d.beats(1), 1);
     }
 
     #[test]

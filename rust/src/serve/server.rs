@@ -1,14 +1,32 @@
-//! Streaming inference server: replica worker threads consume request
-//! channels and answer with verdicts.  Which replica serves a request is
-//! decided by a pluggable [`RoutePolicy`] (`serve::router`) — round-robin,
-//! least-queued, or plan-affinity shard routing — and replicas are clones
-//! of one trained detector, so verdicts are bitwise independent of the
-//! policy (pinned by `tests/serve_equivalence.rs`).
+//! Streaming inference server: replica worker threads consume per-replica
+//! request queues and answer with verdicts.  Which replica serves a
+//! request is decided by a pluggable [`RoutePolicy`] (`serve::router`) —
+//! round-robin, least-queued, or plan-affinity shard routing — and
+//! replicas are clones of one trained detector, so verdicts are bitwise
+//! independent of the policy (pinned by `tests/serve_equivalence.rs`).
 //!
 //! **Micro-batching** (`max_batch > 1`): a replica drains whatever is
 //! queued up to the cap; with a non-zero `deadline` it additionally waits
 //! up to that long for the batch to fill — the standard serving-router
 //! latency/throughput trade-off.  Batching never changes scores.
+//!
+//! **Fault tolerance**: replica queues are shared deques (not channels),
+//! so a panicking worker's queued — and even picked-but-unserved —
+//! requests survive it: a drop guard pushes the in-flight batch back and
+//! the supervisor thread (enabled by [`GuardCfg::heartbeat`] > 0)
+//! respawns the replica from a frozen detector snapshot under a bumped
+//! epoch, with the stale incarnation (if merely hung, not dead) retiring
+//! itself at its next pickup.  Liveness bits on [`QueueDepths`] steer the
+//! route policies away from dead replicas in the interim.  Router-side
+//! **load shedding** ([`GuardCfg::shed_budget`]) answers immediately with
+//! `Reply { shed: true }` once the queue-delay estimate (EWMA service
+//! time × queue depth) exceeds the configured p99 attack-window budget,
+//! so overload degrades to bounded-latency partial service instead of
+//! unbounded queueing.  All of it is fed by the deterministic
+//! [`FaultPlan`](crate::runtime::fault::FaultPlan) chaos harness in
+//! tests/benches; with no plan and no supervisor the hot path is the
+//! pre-fault-layer code, bit-identical (pinned by
+//! `tests/fault_equivalence.rs`).
 //!
 //! **Accounting**: every [`Reply`] carries the queue-delay / service-time
 //! split (enqueue → pickup vs pickup → verdict), which is what the
@@ -19,26 +37,35 @@
 //!
 //! Constructing a server by hand is the low-level path — prefer the
 //! [`ServeSession`](crate::serve::ServeSession) builder, which threads
-//! the trained planner, policy, replica count and deadlines end to end.
+//! the trained planner, policy, replica count, deadlines and fault knobs
+//! end to end.
 
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::platform::SimPlatform;
 use crate::powersys::dataset::Sample;
 use crate::runtime::autotune::{ServeBatchTuner, ServeTuneCfg};
+use crate::runtime::fault::FaultPlan;
 use crate::serve::detector::Detector;
 use crate::serve::router::{QueueDepths, RoundRobin, RoutePolicy};
 use crate::util::clock::Clock;
 use crate::util::stats::LatencyHist;
+
+/// Sentinel sequence number for fault-injected flood junk: never severed,
+/// and its reply channel is born dead.
+const FLOOD_SEQ: u64 = u64::MAX;
 
 /// One in-flight request.
 struct Request {
     sample: Sample,
     enqueued: Instant,
     reply: mpsc::Sender<Reply>,
+    /// Global submit sequence (fault-plan key for reply-sever decisions).
+    seq: u64,
 }
 
 /// One answered request.
@@ -48,8 +75,13 @@ pub struct Reply {
     /// End-to-end latency: enqueue → verdict delivered.
     pub latency: Duration,
     /// Enqueue → batch pickup: router queueing plus any micro-batch
-    /// deadline wait.
+    /// deadline wait.  For a shed reply: the queue-delay estimate that
+    /// tripped the budget.
     pub queue_delay: Duration,
+    /// True when the router refused the request under overload instead
+    /// of scoring it (`prob` is meaningless).  Shed replies arrive
+    /// immediately — bounded-latency partial service.
+    pub shed: bool,
 }
 
 impl Reply {
@@ -59,16 +91,142 @@ impl Reply {
     }
 }
 
-pub struct StreamingServer {
-    txs: Vec<mpsc::Sender<Request>>,
-    handles: Vec<thread::JoinHandle<ServerStats>>,
-    depths: Arc<QueueDepths>,
-    policy: Arc<dyn RoutePolicy>,
+/// Supervision / degradation knobs.  The default (`heartbeat` and
+/// `shed_budget` both zero) runs no supervisor thread and never sheds —
+/// the exact pre-fault-layer server.
+#[derive(Clone, Copy, Debug)]
+pub struct GuardCfg {
+    /// Shed a request when its routed replica's queue-delay estimate
+    /// exceeds this budget (the p99 attack-window target).  Zero = never
+    /// shed.
+    pub shed_budget: Duration,
+    /// Supervisor polling period; zero = no supervisor (and therefore no
+    /// respawns and no frozen-detector snapshot held).
+    pub heartbeat: Duration,
+    /// A live replica whose queue is non-empty but whose heartbeat
+    /// counter has not moved for this long is declared hung and
+    /// respawned over.
+    pub hang: Duration,
 }
 
-struct ServerStats {
-    served: u64,
-    hist: LatencyHist,
+impl Default for GuardCfg {
+    fn default() -> GuardCfg {
+        GuardCfg {
+            shed_budget: Duration::ZERO,
+            heartbeat: Duration::ZERO,
+            hang: Duration::from_millis(200),
+        }
+    }
+}
+
+/// The static per-replica knobs (shared by all incarnations).
+struct SpawnKnobs {
+    max_batch: usize,
+    deadline: Duration,
+    dispatch: Duration,
+    autotune: Option<ServeTuneCfg>,
+}
+
+/// One replica's request queue: a deque under a mutex (NOT an mpsc
+/// channel) so queued requests outlive a dead worker and are simply
+/// picked up by its respawned incarnation.
+struct ReplicaQueue {
+    q: Mutex<VecDeque<Request>>,
+    cv: Condvar,
+}
+
+/// State shared by the dispatch side, every replica incarnation, and the
+/// supervisor.
+struct ServerCore {
+    queues: Vec<ReplicaQueue>,
+    depths: QueueDepths,
+    /// Respawn epoch per replica: bumped by the supervisor; a worker
+    /// whose epoch is stale retires at its next pickup.
+    epochs: Vec<AtomicU64>,
+    /// False once shutdown begins: workers drain their queue, then exit.
+    open: AtomicBool,
+    served: AtomicU64,
+    shed: AtomicU64,
+    hist: Mutex<LatencyHist>,
+    knobs: SpawnKnobs,
+    guard: GuardCfg,
+    /// EWMA of per-request service nanos (α = 1/8) — the shedding
+    /// estimator's cost model.
+    svc_ewma_ns: AtomicU64,
+    fault: Option<Arc<FaultPlan>>,
+    respawns: AtomicU64,
+    /// Frozen detector snapshot the supervisor respawns from; `None`
+    /// when unsupervised (no extra clone held).
+    proto: Mutex<Option<Detector>>,
+    handles: Mutex<Vec<thread::JoinHandle<()>>>,
+    seq: AtomicU64,
+}
+
+impl ServerCore {
+    fn epoch_of(&self, id: usize) -> u64 {
+        self.epochs[id].load(Ordering::Acquire)
+    }
+
+    fn note_service(&self, service: Duration, batch: usize) {
+        let per = (service.as_nanos() as u64) / batch.max(1) as u64;
+        let prev = self.svc_ewma_ns.load(Ordering::Relaxed);
+        let next = if prev == 0 { per } else { prev - prev / 8 + per / 8 };
+        self.svc_ewma_ns.store(next, Ordering::Relaxed);
+    }
+
+    /// Expected wait for a request routed to `shard` right now.
+    fn queue_delay_estimate(&self, shard: usize) -> Duration {
+        let per = self.svc_ewma_ns.load(Ordering::Relaxed);
+        Duration::from_nanos(per.saturating_mul(self.depths.depth(shard) as u64))
+    }
+}
+
+/// Marks the replica dead when its worker unwinds — unless the epoch has
+/// already moved on (a respawned-over incarnation must not smear the
+/// fresh one's liveness bit).
+struct AliveGuard {
+    core: Arc<ServerCore>,
+    id: usize,
+    epoch: u64,
+}
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        if self.core.epoch_of(self.id) == self.epoch {
+            self.core.depths.set_alive(self.id, false);
+        }
+    }
+}
+
+/// The picked-but-unserved batch: on panic unwind the requests go back
+/// to the FRONT of the queue (original order) for the respawned
+/// incarnation — an accepted request is never silently dropped.
+struct PendingBatch {
+    reqs: Vec<Request>,
+    core: Arc<ServerCore>,
+    id: usize,
+}
+
+impl Drop for PendingBatch {
+    fn drop(&mut self) {
+        if self.reqs.is_empty() {
+            return;
+        }
+        let q = &self.core.queues[self.id];
+        {
+            let mut guard = q.q.lock().unwrap();
+            for r in self.reqs.drain(..).rev() {
+                guard.push_front(r);
+            }
+        }
+        q.cv.notify_all();
+    }
+}
+
+pub struct StreamingServer {
+    core: Arc<ServerCore>,
+    policy: Arc<dyn RoutePolicy>,
+    supervisor: Option<thread::JoinHandle<()>>,
 }
 
 #[derive(Debug)]
@@ -91,6 +249,174 @@ pub struct ServeReport {
     pub replicas: usize,
     /// Route policy that dispatched the stream.
     pub policy: &'static str,
+}
+
+/// One replica incarnation's serve loop.  `my_epoch` retires it once the
+/// supervisor has respawned over it.
+fn run_replica(core: Arc<ServerCore>, id: usize, my_epoch: u64, mut detector: Detector) {
+    let mut tuner = core.knobs.autotune.map(|c| {
+        ServeBatchTuner::new(c, core.knobs.max_batch, core.knobs.deadline, Clock::real())
+    });
+    let knobs = tuner.as_ref().map(|t| t.knobs());
+    let _alive = AliveGuard { core: Arc::clone(&core), id, epoch: my_epoch };
+    let mut served_here: u64 = 0;
+    let mut round: u64 = 0;
+    loop {
+        let mut pending = PendingBatch {
+            reqs: Vec::new(),
+            core: Arc::clone(&core),
+            id,
+        };
+        {
+            let rq = &core.queues[id];
+            let mut q = rq.q.lock().unwrap();
+            // blocking pickup of the first request
+            loop {
+                if core.epoch_of(id) != my_epoch {
+                    return; // respawned over: retire without serving
+                }
+                if let Some(r) = q.pop_front() {
+                    pending.reqs.push(r);
+                    break;
+                }
+                if !core.open.load(Ordering::Acquire) {
+                    return; // queue drained and server closed
+                }
+                let (g, _) = rq.cv.wait_timeout(q, Duration::from_millis(25)).unwrap();
+                q = g;
+            }
+            let (max_batch, deadline) = match &knobs {
+                Some(k) => (k.max_batch(), k.deadline()),
+                None => (core.knobs.max_batch, core.knobs.deadline),
+            };
+            if max_batch > 1 {
+                if deadline.is_zero() {
+                    // drain whatever is already queued
+                    while pending.reqs.len() < max_batch {
+                        match q.pop_front() {
+                            Some(r) => pending.reqs.push(r),
+                            None => break,
+                        }
+                    }
+                } else {
+                    // wait up to the deadline for the batch to fill
+                    let cutoff = Instant::now() + deadline;
+                    'fill: while pending.reqs.len() < max_batch {
+                        while let Some(r) = q.pop_front() {
+                            pending.reqs.push(r);
+                            if pending.reqs.len() >= max_batch {
+                                break 'fill;
+                            }
+                        }
+                        let left = match cutoff.checked_duration_since(Instant::now()) {
+                            Some(d) if !d.is_zero() => d,
+                            _ => break,
+                        };
+                        let (g, _) = rq.cv.wait_timeout(q, left).unwrap();
+                        q = g;
+                    }
+                }
+            }
+        } // queue lock dropped before compute (and before any injected panic)
+        round += 1;
+        core.depths.beat(id);
+        if let Some(f) = core.fault.as_ref() {
+            if let Some(d) = f.stall(id, round) {
+                f.record("stall", id, round);
+                thread::sleep(d);
+            }
+            if f.kill_now(id, my_epoch, served_here) || f.panic_now(id, round) {
+                f.record("panic", id, served_here);
+                // `pending`'s drop guard requeues the picked batch; the
+                // alive guard flips the liveness bit for the supervisor.
+                panic!("injected fault: replica {id} panicked (epoch {my_epoch})");
+            }
+        }
+        let picked = Instant::now();
+        SimPlatform::charge(core.knobs.dispatch);
+        let samples: Vec<&Sample> = pending.reqs.iter().map(|r| &r.sample).collect();
+        let probs = detector.score_batch(&samples);
+        let done = Instant::now();
+        let batch = pending.reqs.len();
+        core.note_service(done.saturating_duration_since(picked), batch);
+        for (req, p) in pending.reqs.drain(..).zip(probs) {
+            let latency = done.saturating_duration_since(req.enqueued);
+            let queue_delay = picked.saturating_duration_since(req.enqueued);
+            core.hist.lock().unwrap().record(latency);
+            core.served.fetch_add(1, Ordering::Relaxed);
+            core.depths.leave(id);
+            served_here += 1;
+            let severed = req.seq != FLOOD_SEQ
+                && core.fault.as_ref().map_or(false, |f| f.sever_reply(req.seq));
+            if severed {
+                if let Some(f) = core.fault.as_ref() {
+                    f.record("sever", id, req.seq);
+                }
+                drop(req.reply); // client sees a dead channel, not a verdict
+            } else {
+                let _ = req.reply.send(Reply { prob: p, latency, queue_delay, shed: false });
+            }
+            if let Some(t) = tuner.as_mut() {
+                t.observe(latency, queue_delay, latency.saturating_sub(queue_delay));
+            }
+        }
+    }
+}
+
+/// Respawn replica `id` from the frozen snapshot under a fresh epoch.
+fn respawn(core: &Arc<ServerCore>, id: usize, why: &'static str) {
+    let det = {
+        let proto = core.proto.lock().unwrap();
+        match proto.as_ref() {
+            Some(d) => d.clone(),
+            None => return, // unsupervised server holds no snapshot
+        }
+    };
+    let epoch = core.epochs[id].fetch_add(1, Ordering::AcqRel) + 1;
+    core.depths.set_alive(id, true);
+    core.respawns.fetch_add(1, Ordering::Relaxed);
+    if let Some(f) = core.fault.as_ref() {
+        f.record("respawn", id, epoch);
+    }
+    eprintln!("[supervisor] replica {id} {why}: respawning (epoch {epoch})");
+    let c = Arc::clone(core);
+    let h = thread::spawn(move || run_replica(c, id, epoch, det));
+    core.handles.lock().unwrap().push(h);
+    core.queues[id].cv.notify_all();
+}
+
+/// Supervisor loop: every `heartbeat`, respawn replicas that died
+/// (liveness bit cleared by their unwind guard) or hung (non-empty queue
+/// with a frozen heartbeat counter for longer than `hang`).
+fn run_supervisor(core: Arc<ServerCore>) {
+    let n = core.queues.len();
+    let mut last_beats: Vec<u64> = (0..n).map(|i| core.depths.beats(i)).collect();
+    let mut stuck_since: Vec<Option<Instant>> = vec![None; n];
+    loop {
+        thread::sleep(core.guard.heartbeat);
+        if !core.open.load(Ordering::Acquire) {
+            return;
+        }
+        for i in 0..n {
+            let dead = !core.depths.alive(i);
+            let beats = core.depths.beats(i);
+            let progressed = beats != last_beats[i];
+            last_beats[i] = beats;
+            let mut hung = false;
+            if !dead {
+                if progressed || core.depths.depth(i) == 0 {
+                    stuck_since[i] = None;
+                } else {
+                    let since = *stuck_since[i].get_or_insert_with(Instant::now);
+                    hung = since.elapsed() >= core.guard.hang;
+                }
+            }
+            if dead || hung {
+                stuck_since[i] = None;
+                respawn(&core, i, if dead { "died" } else { "hung" });
+            }
+        }
+    }
 }
 
 impl StreamingServer {
@@ -123,85 +449,73 @@ impl StreamingServer {
         policy: Arc<dyn RoutePolicy>,
         autotune: Option<ServeTuneCfg>,
     ) -> StreamingServer {
+        Self::spawn_supervised(
+            detectors,
+            max_batch,
+            deadline,
+            dispatch,
+            policy,
+            autotune,
+            GuardCfg::default(),
+            None,
+        )
+    }
+
+    /// The fully-guarded constructor: [`Self::spawn_tuned`] plus
+    /// supervision / shedding knobs and an optional chaos plan.  With
+    /// `guard == GuardCfg::default()` and `fault == None` this is
+    /// byte-for-byte the unguarded server: no supervisor thread, no
+    /// snapshot clone, no shed checks on the submit path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn_supervised(
+        detectors: Vec<Detector>,
+        max_batch: usize,
+        deadline: Duration,
+        dispatch: Duration,
+        policy: Arc<dyn RoutePolicy>,
+        autotune: Option<ServeTuneCfg>,
+        guard: GuardCfg,
+        fault: Option<Arc<FaultPlan>>,
+    ) -> StreamingServer {
         assert!(!detectors.is_empty(), "need at least one detector replica");
-        let depths = Arc::new(QueueDepths::new(detectors.len()));
-        let mut txs = Vec::with_capacity(detectors.len());
-        let mut handles = Vec::with_capacity(detectors.len());
-        for (id, mut detector) in detectors.into_iter().enumerate() {
-            let (tx, rx) = mpsc::channel::<Request>();
-            let depths = Arc::clone(&depths);
-            let handle = thread::spawn(move || {
-                let mut tuner = autotune
-                    .map(|c| ServeBatchTuner::new(c, max_batch, deadline, Clock::real()));
-                let knobs = tuner.as_ref().map(|t| t.knobs());
-                let mut stats = ServerStats { served: 0, hist: LatencyHist::new() };
-                let mut pending: Vec<Request> = Vec::new();
-                loop {
-                    // blocking receive for the first request
-                    let first = match rx.recv() {
-                        Ok(r) => r,
-                        Err(_) => break,
-                    };
-                    pending.push(first);
-                    let (max_batch, deadline) = match &knobs {
-                        Some(k) => (k.max_batch(), k.deadline()),
-                        None => (max_batch, deadline),
-                    };
-                    if max_batch > 1 {
-                        if deadline.is_zero() {
-                            // drain whatever is already queued
-                            while pending.len() < max_batch {
-                                match rx.try_recv() {
-                                    Ok(r) => pending.push(r),
-                                    Err(_) => break,
-                                }
-                            }
-                        } else {
-                            // wait up to the deadline for the batch to fill
-                            let cutoff = Instant::now() + deadline;
-                            while pending.len() < max_batch {
-                                let left = match cutoff
-                                    .checked_duration_since(Instant::now())
-                                {
-                                    Some(d) if !d.is_zero() => d,
-                                    _ => break,
-                                };
-                                match rx.recv_timeout(left) {
-                                    Ok(r) => pending.push(r),
-                                    Err(_) => break,
-                                }
-                            }
-                        }
-                    }
-                    let picked = Instant::now();
-                    SimPlatform::charge(dispatch);
-                    let samples: Vec<&Sample> =
-                        pending.iter().map(|r| &r.sample).collect();
-                    let probs = detector.score_batch(&samples);
-                    let done = Instant::now();
-                    for (req, p) in pending.drain(..).zip(probs) {
-                        let latency = done.saturating_duration_since(req.enqueued);
-                        let queue_delay =
-                            picked.saturating_duration_since(req.enqueued);
-                        stats.hist.record(latency);
-                        stats.served += 1;
-                        depths.leave(id);
-                        let _ = req.reply.send(Reply { prob: p, latency, queue_delay });
-                        if let Some(t) = tuner.as_mut() {
-                            t.observe(
-                                latency,
-                                queue_delay,
-                                latency.saturating_sub(queue_delay),
-                            );
-                        }
-                    }
-                }
-                stats
-            });
-            txs.push(tx);
-            handles.push(handle);
+        let n = detectors.len();
+        let supervise = !guard.heartbeat.is_zero();
+        let proto = if supervise {
+            Some(detectors[0].clone())
+        } else {
+            None
+        };
+        let core = Arc::new(ServerCore {
+            queues: (0..n)
+                .map(|_| ReplicaQueue { q: Mutex::new(VecDeque::new()), cv: Condvar::new() })
+                .collect(),
+            depths: QueueDepths::new(n),
+            epochs: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            open: AtomicBool::new(true),
+            served: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            hist: Mutex::new(LatencyHist::new()),
+            knobs: SpawnKnobs { max_batch, deadline, dispatch, autotune },
+            guard,
+            svc_ewma_ns: AtomicU64::new(0),
+            fault,
+            respawns: AtomicU64::new(0),
+            proto: Mutex::new(proto),
+            handles: Mutex::new(Vec::with_capacity(n)),
+            seq: AtomicU64::new(0),
+        });
+        for (id, detector) in detectors.into_iter().enumerate() {
+            let c = Arc::clone(&core);
+            let h = thread::spawn(move || run_replica(c, id, 0, detector));
+            core.handles.lock().unwrap().push(h);
         }
-        StreamingServer { txs, handles, depths, policy }
+        let supervisor = if supervise {
+            let c = Arc::clone(&core);
+            Some(thread::spawn(move || run_supervisor(c)))
+        } else {
+            None
+        };
+        StreamingServer { core, policy, supervisor }
     }
 
     /// Legacy single-replica entry point (round-robin is a no-op at 1).
@@ -229,31 +543,84 @@ impl StreamingServer {
     }
 
     pub fn replicas(&self) -> usize {
-        self.txs.len()
+        self.core.queues.len()
     }
 
     pub fn policy_name(&self) -> &'static str {
         self.policy.name()
     }
 
-    /// Current per-replica in-flight request gauges.
+    /// Current per-replica in-flight request gauges (+ heartbeat and
+    /// liveness signals).
     pub fn queue_depths(&self) -> &QueueDepths {
-        &self.depths
+        &self.core.depths
+    }
+
+    /// Replicas respawned by the supervisor so far.
+    pub fn respawns(&self) -> u64 {
+        self.core.respawns.load(Ordering::Relaxed)
+    }
+
+    /// Requests refused under overload so far.
+    pub fn shed_count(&self) -> u64 {
+        self.core.shed.load(Ordering::Relaxed)
     }
 
     /// Submit one sample WITHOUT waiting (open-loop client): the policy
     /// picks the replica, the reply arrives on the returned channel.
+    /// With a non-zero shed budget the reply may be an immediate
+    /// `Reply { shed: true }` refusal instead of a verdict.
     pub fn submit(&self, sample: &Sample) -> mpsc::Receiver<Reply> {
-        let shard = self.policy.route(sample, &self.depths).min(self.txs.len() - 1);
-        self.depths.enter(shard);
+        let core = &self.core;
+        let shard = self
+            .policy
+            .route(sample, &core.depths)
+            .min(core.queues.len() - 1);
         let (rtx, rrx) = mpsc::channel();
-        self.txs[shard]
-            .send(Request {
+        if !core.guard.shed_budget.is_zero() {
+            let est = core.queue_delay_estimate(shard);
+            if est > core.guard.shed_budget {
+                core.shed.fetch_add(1, Ordering::Relaxed);
+                let _ = rtx.send(Reply {
+                    prob: 0.0,
+                    latency: Duration::ZERO,
+                    queue_delay: est,
+                    shed: true,
+                });
+                return rrx;
+            }
+        }
+        let seq = core.seq.fetch_add(1, Ordering::Relaxed);
+        core.depths.enter(shard);
+        let rq = &core.queues[shard];
+        {
+            let mut q = rq.q.lock().unwrap();
+            q.push_back(Request {
                 sample: sample.clone(),
                 enqueued: Instant::now(),
                 reply: rtx,
-            })
-            .expect("server alive");
+                seq,
+            });
+            if let Some(f) = core.fault.as_ref() {
+                let burst = f.flood_burst(seq);
+                if burst > 0 {
+                    f.record("flood", shard, seq);
+                    for _ in 0..burst {
+                        // junk requests whose reply channels are born
+                        // dead: pure queue pressure
+                        let (jtx, _) = mpsc::channel();
+                        core.depths.enter(shard);
+                        q.push_back(Request {
+                            sample: sample.clone(),
+                            enqueued: Instant::now(),
+                            reply: jtx,
+                            seq: FLOOD_SEQ,
+                        });
+                    }
+                }
+            }
+        }
+        rq.cv.notify_all();
         rrx
     }
 
@@ -313,8 +680,7 @@ impl StreamingServer {
     /// latency histogram).  Used by drivers that account client-side
     /// (the open-loop generator) instead of through `run_stream*`.
     pub fn shutdown(self) -> (u64, LatencyHist) {
-        let stats = self.finish();
-        (stats.served, stats.hist)
+        self.finish()
     }
 
     fn report(
@@ -326,10 +692,10 @@ impl StreamingServer {
         replicas: usize,
     ) -> ServeReport {
         let policy = self.policy.name();
-        let lifetime = self.finish();
+        let (lifetime_served, _) = self.finish();
         ServeReport {
             served: stream_served,
-            lifetime_served: lifetime.served,
+            lifetime_served,
             wall,
             tps: stream_served as f64 / wall.as_secs_f64().max(1e-12),
             mean_latency: Duration::from_nanos(stream_hist.mean_ns() as u64),
@@ -340,15 +706,33 @@ impl StreamingServer {
         }
     }
 
-    fn finish(mut self) -> ServerStats {
-        self.txs.clear(); // drop every sender so the workers exit
-        let mut merged = ServerStats { served: 0, hist: LatencyHist::new() };
-        for h in self.handles.drain(..) {
-            let s = h.join().unwrap();
-            merged.served += s.served;
-            merged.hist.merge(&s.hist);
+    fn finish(self) -> (u64, LatencyHist) {
+        let StreamingServer { core, supervisor, policy: _ } = self;
+        core.open.store(false, Ordering::Release);
+        for q in &core.queues {
+            q.cv.notify_all();
         }
-        merged
+        if let Some(sup) = supervisor {
+            let _ = sup.join();
+        }
+        // respawns can push new handles while we drain, so loop; a
+        // panicked (fault-injected) incarnation joins as Err, which is
+        // expected and harmless — its stats already live in the core.
+        loop {
+            let batch: Vec<_> = {
+                let mut hs = core.handles.lock().unwrap();
+                hs.drain(..).collect()
+            };
+            if batch.is_empty() {
+                break;
+            }
+            for h in batch {
+                let _ = h.join();
+            }
+        }
+        let served = core.served.load(Ordering::Relaxed);
+        let hist = core.hist.lock().unwrap().clone();
+        (served, hist)
     }
 }
 
@@ -357,6 +741,7 @@ mod tests {
     use super::*;
     use crate::coordinator::engine::{EngineCfg, NativeDlrm};
     use crate::powersys::dataset::{generate, DatasetCfg, SparseVocab};
+    use crate::runtime::fault::{FaultCfg, FaultPlan};
     use crate::util::prng::Rng;
 
     fn samples(n: usize) -> Vec<Sample> {
@@ -397,6 +782,7 @@ mod tests {
         for s in &ss[..5] {
             let r = server.infer(s);
             assert!((0.0..=1.0).contains(&r.prob));
+            assert!(!r.shed);
             assert!(r.latency > Duration::ZERO);
             assert!(r.latency >= r.queue_delay);
         }
@@ -441,5 +827,85 @@ mod tests {
         let (lifetime, hist) = server.shutdown();
         assert_eq!(lifetime, 6);
         assert_eq!(hist.count(), 6);
+    }
+
+    #[test]
+    fn supervisor_respawns_killed_replica_and_no_request_is_lost() {
+        let ss = samples(10);
+        let plan = FaultPlan::new(FaultCfg {
+            enabled: true,
+            kill_replica: Some(0),
+            kill_after: 2,
+            ..FaultCfg::default()
+        });
+        let guard = GuardCfg {
+            heartbeat: Duration::from_millis(2),
+            ..GuardCfg::default()
+        };
+        let server = StreamingServer::spawn_supervised(
+            vec![detector()],
+            1,
+            Duration::ZERO,
+            Duration::ZERO,
+            Arc::new(RoundRobin::new()),
+            None,
+            guard,
+            Some(Arc::clone(&plan)),
+        );
+        let receivers: Vec<_> = ss[..8].iter().map(|s| server.submit(s)).collect();
+        let mut got = 0;
+        for rx in receivers {
+            let r = rx.recv_timeout(Duration::from_secs(20)).expect("served after respawn");
+            assert!(!r.shed);
+            assert!((0.0..=1.0).contains(&r.prob));
+            got += 1;
+        }
+        assert_eq!(got, 8, "every accepted request must be served");
+        assert!(server.respawns() >= 1, "supervisor must log a respawn");
+        assert!(plan.event_count("panic") >= 1);
+        assert!(plan.event_count("respawn") >= 1);
+        let (lifetime, _) = server.shutdown();
+        assert_eq!(lifetime, 8);
+    }
+
+    #[test]
+    fn overload_sheds_instead_of_queueing_unboundedly() {
+        let ss = samples(30);
+        let guard = GuardCfg {
+            shed_budget: Duration::from_nanos(1),
+            ..GuardCfg::default()
+        };
+        let server = StreamingServer::spawn_supervised(
+            vec![detector()],
+            1,
+            Duration::ZERO,
+            Duration::from_millis(5), // slow dispatch: queues build instantly
+            Arc::new(RoundRobin::new()),
+            None,
+            guard,
+            None,
+        );
+        // first request seeds the service-time EWMA
+        let warm = server.infer(&ss[0]);
+        assert!(!warm.shed);
+        // rapid-fire: the worker is busy ≥5 ms per request, so later
+        // submits see depth ≥ 1 and an estimate ≫ 1 ns → shed
+        let receivers: Vec<_> = ss[1..21].iter().map(|s| server.submit(s)).collect();
+        let mut served = 0;
+        let mut shed = 0;
+        for rx in receivers {
+            let r = rx.recv_timeout(Duration::from_secs(20)).expect("answered or shed");
+            if r.shed {
+                shed += 1;
+                assert_eq!(r.latency, Duration::ZERO);
+            } else {
+                served += 1;
+            }
+        }
+        assert_eq!(served + shed, 20, "every request answered exactly once");
+        assert!(shed >= 1, "overload must shed");
+        assert_eq!(server.shed_count(), shed as u64);
+        let (lifetime, _) = server.shutdown();
+        assert_eq!(lifetime, 1 + served as u64);
     }
 }

@@ -25,10 +25,11 @@ use std::time::Duration;
 use crate::access::AccessPlanner;
 use crate::coordinator::engine::NativeDlrm;
 use crate::runtime::autotune::{AutotuneCfg, ServeTuneCfg};
+use crate::runtime::fault::FaultPlan;
 use crate::tt::table::QuantizeMode;
 use crate::serve::detector::Detector;
 use crate::serve::router::{LeastQueued, PlanAffinity, Policy, RoundRobin, RoutePolicy};
-use crate::serve::server::StreamingServer;
+use crate::serve::server::{GuardCfg, StreamingServer};
 
 /// `[serve]` section of the run config (+ the matching CLI flags).
 #[derive(Clone, Copy, Debug)]
@@ -52,6 +53,18 @@ pub struct ServeCfg {
     /// Open-loop Poisson arrival rate in requests/s (`[serve]
     /// arrival_rate` / `--arrival-rate`); 0 selects the closed loop.
     pub arrival_rate: f64,
+    /// Load-shedding budget in µs (`[serve] shed_budget_us` /
+    /// `--shed-budget-us`): requests whose queue-delay estimate exceeds
+    /// it are refused with `Reply { shed: true }`.  0 = never shed.
+    pub shed_budget_us: u64,
+    /// Supervisor heartbeat period in ms (`[serve] heartbeat_ms` /
+    /// `--heartbeat-ms`): dead/hung replicas are respawned from the
+    /// frozen snapshot.  0 = no supervision.
+    pub heartbeat_ms: u64,
+    /// Hung-replica threshold in ms (`[serve] hang_ms` / `--hang-ms`):
+    /// a non-empty queue with a frozen heartbeat for this long triggers
+    /// a respawn-over.
+    pub hang_ms: u64,
 }
 
 impl Default for ServeCfg {
@@ -64,6 +77,9 @@ impl Default for ServeCfg {
             dispatch_us: 100,
             clients: 0,
             arrival_rate: 0.0,
+            shed_budget_us: 0,
+            heartbeat_ms: 0,
+            hang_ms: 200,
         }
     }
 }
@@ -93,6 +109,8 @@ pub struct ServeSession {
     policy: Policy,
     quantize: QuantizeMode,
     autotune: Option<ServeTuneCfg>,
+    guard: GuardCfg,
+    fault: Option<Arc<FaultPlan>>,
 }
 
 impl ServeSession {
@@ -113,6 +131,8 @@ impl ServeSession {
             policy: Policy::RoundRobin,
             quantize: QuantizeMode::Off,
             autotune: None,
+            guard: GuardCfg::default(),
+            fault: None,
         }
     }
 
@@ -179,16 +199,46 @@ impl ServeSession {
         self
     }
 
+    /// Load-shedding budget: refuse requests whose queue-delay estimate
+    /// exceeds it (default zero = never shed).
+    pub fn shed_budget(mut self, d: Duration) -> ServeSession {
+        self.guard.shed_budget = d;
+        self
+    }
+
+    /// Supervisor heartbeat period (default zero = no supervisor
+    /// thread, no respawns).
+    pub fn heartbeat(mut self, d: Duration) -> ServeSession {
+        self.guard.heartbeat = d;
+        self
+    }
+
+    /// Hung-replica threshold for the supervisor (default 200 ms).
+    pub fn hang(mut self, d: Duration) -> ServeSession {
+        self.guard.hang = d;
+        self
+    }
+
+    /// Attach a chaos plan (`[fault]` / `--fault-*`); `None` (the
+    /// default) leaves every fault branch unentered.
+    pub fn fault(mut self, plan: Option<Arc<FaultPlan>>) -> ServeSession {
+        self.fault = plan;
+        self
+    }
+
     /// Apply a `[serve]` config section (replicas, batching + deadline,
-    /// policy, dispatch).  Loop shape (`clients` / `arrival_rate`) stays
-    /// with the driver — see [`ServeCfg::effective_clients`] and
-    /// `serve::load`.
+    /// policy, dispatch, shedding + supervision).  Loop shape
+    /// (`clients` / `arrival_rate`) stays with the driver — see
+    /// [`ServeCfg::effective_clients`] and `serve::load`.
     pub fn with_cfg(self, cfg: &ServeCfg) -> ServeSession {
         self.replicas(cfg.replicas)
             .max_batch(cfg.max_batch)
             .deadline(Duration::from_micros(cfg.deadline_us))
             .policy(cfg.policy)
             .dispatch(Duration::from_micros(cfg.dispatch_us))
+            .shed_budget(Duration::from_micros(cfg.shed_budget_us))
+            .heartbeat(Duration::from_millis(cfg.heartbeat_ms))
+            .hang(Duration::from_millis(cfg.hang_ms))
     }
 
     /// Spawn the replica workers and return the running server.
@@ -217,13 +267,15 @@ impl ServeSession {
             Policy::LeastQueued => Arc::new(LeastQueued::new()),
             Policy::PlanAffinity => Arc::new(PlanAffinity::new(affinity)),
         };
-        StreamingServer::spawn_tuned(
+        StreamingServer::spawn_supervised(
             replicas,
             self.max_batch,
             self.deadline,
             self.dispatch,
             policy,
             self.autotune,
+            self.guard,
+            self.fault,
         )
     }
 }
