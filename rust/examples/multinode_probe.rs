@@ -1,0 +1,161 @@
+//! Multi-node serving probe: open-loop p99 attack window vs node count
+//! over loopback TCP — the ISSUE 9 acceptance measurement — plus a
+//! node-kill recovery arm (kill one of three nodes mid-run, respawn it
+//! at a fresh port, assert zero dropped requests).
+//!
+//! Writes `BENCH_multinode.json` in `perf_probe`'s schema; arm extras
+//! carry the ring/recovery accounting (`dropped`, `evictions`,
+//! `rejoins`, `ring_epoch`).  `RECAD_SMOKE=1` shrinks the workload for
+//! the CI smoke job.
+
+use std::cell::RefCell;
+use std::time::Duration;
+
+use recad::access::AccessPlanner;
+use recad::bench_support::{bench_workers, write_bench_json, BenchArm};
+use recad::coordinator::engine::{EngineCfg, NativeDlrm};
+use recad::net::{run_open_loop_net, NetClient, NetLoopReport, NodeServer};
+use recad::powersys::dataset::{generate, DatasetCfg, SparseVocab};
+use recad::runtime::FaultCfg;
+use recad::serve::{OpenLoopCfg, ServeSession};
+use recad::util::prng::Rng;
+
+fn smoke() -> bool {
+    std::env::var("RECAD_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn arm_from_report(name: String, nl: &NetLoopReport) -> BenchArm {
+    let r = &nl.report;
+    BenchArm {
+        name,
+        workers: nl.nodes,
+        throughput: r.achieved_rate,
+        p50_us: r.p50_window.as_secs_f64() * 1e6,
+        p99_us: r.p99_window.as_secs_f64() * 1e6,
+        n: r.served as usize,
+        extra: Vec::new(),
+    }
+    .with_extra("dropped", r.dropped as f64)
+    .with_extra("shed", r.shed as f64)
+    .with_extra("evictions", nl.evictions as f64)
+    .with_extra("rejoins", nl.rejoins as f64)
+    .with_extra("ring_epoch", nl.ring_epoch as f64)
+}
+
+fn main() {
+    let (requests, rate) = if smoke() { (160usize, 4000.0) } else { (600, 6000.0) };
+    let ds = generate(&DatasetCfg {
+        n_normal: requests,
+        n_attack: requests / 4,
+        vocab: SparseVocab::ieee118(1.0 / 2000.0),
+        n_profiles: 10,
+        noise_std: 0.005,
+        seed: 2,
+    });
+    let stream = &ds.samples[..requests.min(ds.samples.len())];
+    let ecfg = EngineCfg::ieee118(1.0 / 2000.0);
+    let engine = NativeDlrm::new(ecfg.clone(), &mut Rng::new(1));
+    let affinity = AccessPlanner::for_engine_cfg(&ecfg).affinity_map();
+    let base = ServeSession::from_engine(engine);
+    let mut arms: Vec<BenchArm> = Vec::new();
+
+    // ---- open-loop p99 attack window vs node count ---------------------
+    for n in 1..=3usize {
+        let nodes: Vec<NodeServer> = (0..n)
+            .map(|i| {
+                NodeServer::spawn(i as u64, 0, base.clone(), "127.0.0.1:0", None)
+                    .expect("node spawn")
+            })
+            .collect();
+        let addrs: Vec<String> = nodes.iter().map(|nd| nd.addr().to_string()).collect();
+        let mut client = NetClient::connect(affinity.clone(), &addrs, 64, 128)
+            .expect("router connect")
+            .timeouts(Duration::from_millis(10), Duration::from_millis(250));
+        let nl = run_open_loop_net(
+            &mut client,
+            stream,
+            &OpenLoopCfg { rate_per_sec: rate, seed: 3 },
+            None,
+        );
+        client.close();
+        for nd in nodes {
+            nd.shutdown();
+        }
+        let r = &nl.report;
+        println!(
+            "nodes_{n}: {}/{} served at {:.0}/s, window p50 {:.0} us / p99 {:.0} us \
+             ({} dropped, {} shed)",
+            r.served,
+            r.offered,
+            r.achieved_rate,
+            r.p50_window.as_secs_f64() * 1e6,
+            r.p99_window.as_secs_f64() * 1e6,
+            r.dropped,
+            r.shed,
+        );
+        assert_eq!(r.dropped, 0, "nodes_{n}: healthy run dropped requests");
+        arms.push(arm_from_report(format!("nodes_{n}"), &nl));
+    }
+
+    // ---- node-kill recovery arm ----------------------------------------
+    // Three nodes share a chaos plan that kills node 1 mid-stream (the
+    // seeded verdict fires at generation 0 only); the router evicts it,
+    // requeues its in-flight work onto the survivors, and the respawn
+    // callback brings a generation-1 replacement up at a NEW port.
+    let plan = FaultCfg {
+        enabled: true,
+        seed: 7,
+        kill_node: Some(1),
+        node_kill_after: if smoke() { 5 } else { 20 },
+        ..FaultCfg::default()
+    }
+    .plan()
+    .expect("enabled cfg builds a plan");
+    let spawned: RefCell<Vec<NodeServer>> = RefCell::new(Vec::new());
+    for i in 0..3u64 {
+        let nd = NodeServer::spawn(i, 0, base.clone(), "127.0.0.1:0", Some(plan.clone()))
+            .expect("node spawn");
+        spawned.borrow_mut().push(nd);
+    }
+    let addrs: Vec<String> =
+        spawned.borrow().iter().map(|nd| nd.addr().to_string()).collect();
+    let mut client = NetClient::connect(affinity.clone(), &addrs, 64, 128)
+        .expect("router connect")
+        .timeouts(Duration::from_millis(10), Duration::from_millis(250));
+    let mut respawn = |slot: usize| -> Option<String> {
+        let nd = NodeServer::spawn(slot as u64, 1, base.clone(), "127.0.0.1:0", None).ok()?;
+        let addr = nd.addr().to_string();
+        spawned.borrow_mut().push(nd);
+        Some(addr)
+    };
+    let nl = run_open_loop_net(
+        &mut client,
+        stream,
+        &OpenLoopCfg { rate_per_sec: rate, seed: 3 },
+        Some(&mut respawn),
+    );
+    client.close();
+    for nd in spawned.into_inner() {
+        nd.shutdown();
+    }
+    let r = &nl.report;
+    println!(
+        "node_kill_recovery: {}/{} served, {} dropped, {} eviction(s), {} rejoin(s), \
+         ring epoch {}, post-recovery tail p99 {:.0} us",
+        r.served,
+        r.offered,
+        r.dropped,
+        nl.evictions,
+        nl.rejoins,
+        nl.ring_epoch,
+        r.tail_p99_window.as_secs_f64() * 1e6,
+    );
+    assert_eq!(r.dropped, 0, "node kill dropped requests");
+    assert!(nl.evictions >= 1, "router never evicted the killed node");
+    assert!(nl.rejoins >= 1, "respawned node never rejoined the ring");
+    assert!(plan.event_count("node_kill") >= 1, "node-kill fault never fired");
+    arms.push(arm_from_report("node_kill_recovery".into(), &nl));
+
+    let path = write_bench_json("multinode", bench_workers(), &arms);
+    println!("wrote {path}");
+}

@@ -141,6 +141,15 @@ impl FusedSweep {
         stats.fused_slots += members.len() as u64;
         stats.cross_shared_rows += shared;
     }
+
+    /// Member slot-lists of the classes that actually fused (≥ 2 slots)
+    /// in the most recent [`build_classes`](Self::build_classes) sweep —
+    /// the candidates for a class-wide ranked execution layout.  Stale
+    /// class scratch from earlier sweeps has its member list cleared, so
+    /// it never leaks through here.
+    pub(crate) fn multi_classes(&self) -> impl Iterator<Item = &[usize]> + '_ {
+        self.classes.iter().filter(|(_, m)| m.len() >= 2).map(|(_, m)| m.as_slice())
+    }
 }
 
 #[cfg(test)]

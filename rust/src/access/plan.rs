@@ -8,6 +8,7 @@
 //! is bit-identical to the pre-refactor unplanned path — pinned by
 //! `tests/plan_equivalence.rs`.
 
+use std::collections::HashMap;
 use std::ops::Range;
 
 use crate::data::ctr::Batch;
@@ -233,6 +234,29 @@ impl TtPlan {
     /// accumulates in f32).  `elem_bytes = 4` is exactly the historical
     /// budget — `build_layout` delegates here.
     pub fn build_layout_elem(&mut self, cache_kb: usize, elem_bytes: usize) {
+        self.build_layout_ordered(cache_kb, elem_bytes, None);
+    }
+
+    /// [`TtPlan::build_layout`] with the group schedule ranked by a
+    /// class-wide prefix-heat map instead of this table's private group
+    /// sizes.  `heat` maps TT prefix → summed distinct-row count across
+    /// every slot of a fused class, so all members of the class walk
+    /// their (shared-vocabulary) prefix groups in ONE order: forward
+    /// materializations and backward chunk sweeps of fused tables
+    /// interleave on the same prefixes instead of each table pulling the
+    /// partial-product cache in its own direction.  Prefixes absent from
+    /// the map rank coldest.  Pure scheduling metadata, like every other
+    /// layout: bit-identical outputs, pinned by `tests/plan_equivalence.rs`.
+    pub fn build_layout_ranked(&mut self, cache_kb: usize, heat: &HashMap<u64, u64>) {
+        self.build_layout_ordered(cache_kb, 4, Some(heat));
+    }
+
+    fn build_layout_ordered(
+        &mut self,
+        cache_kb: usize,
+        elem_bytes: usize,
+        heat: Option<&HashMap<u64, u64>>,
+    ) {
         self.layout_ready = false;
         self.sched.clear();
         self.slot_pos.clear();
@@ -254,9 +278,23 @@ impl TtPlan {
             hi - lo
         };
         let mut order: Vec<u32> = (0..n_groups as u32).collect();
-        order.sort_by(|&x, &y| {
-            size_of(y as usize).cmp(&size_of(x as usize)).then(x.cmp(&y))
-        });
+        match heat {
+            None => order.sort_by(|&x, &y| {
+                size_of(y as usize).cmp(&size_of(x as usize)).then(x.cmp(&y))
+            }),
+            Some(heat) => {
+                // class-wide ranking: (heat desc, prefix asc) is a total
+                // order on prefixes, hence SHARED by every class member
+                // regardless of which groups each table actually has
+                let prefix_of =
+                    |gi: usize| -> u64 { s.prefix_of(self.uniq_rows[starts[gi] as usize]) };
+                let rank = |gi: usize| -> (std::cmp::Reverse<u64>, u64) {
+                    let p = prefix_of(gi);
+                    (std::cmp::Reverse(heat.get(&p).copied().unwrap_or(0)), p)
+                };
+                order.sort_by_key(|&x| rank(x as usize));
+            }
+        }
         // rows per tile: cache_kb minus the shared partial product (f32),
         // spread over the per-row working set — f32 output row plus the
         // D3 slice at the storage width — in bytes
@@ -507,6 +545,41 @@ impl BatchPlan {
             for plan in self.tt.iter_mut().flatten() {
                 plan.build_layout(self.cache_kb);
             }
+            if self.fuse_tables {
+                // Fused classes get a class-wide RANKED layout on top:
+                // sum each TT prefix's distinct-row count across every
+                // member, then rebuild each member's schedule in that
+                // shared heat order so the fused tables' core-slice
+                // walks interleave on the same prefixes.  Overrides the
+                // generic layout above (ranked build clears first);
+                // bit-identity is untouched either way.
+                let fused = std::mem::take(&mut self.fused);
+                let mut heat: HashMap<u64, u64> = HashMap::new();
+                for members in fused.multi_classes() {
+                    heat.clear();
+                    for &t in members {
+                        let (Some(sh), Some(plan)) = (&shapes[t], &self.tt[t]) else {
+                            continue;
+                        };
+                        let n_rows = plan.uniq_rows.len();
+                        let starts = &plan.group_starts;
+                        for (gi, &lo) in starts.iter().enumerate() {
+                            let hi = starts
+                                .get(gi + 1)
+                                .map(|&x| x as usize)
+                                .unwrap_or(n_rows);
+                            let prefix = sh.prefix_of(plan.uniq_rows[lo as usize]);
+                            *heat.entry(prefix).or_insert(0) += (hi - lo as usize) as u64;
+                        }
+                    }
+                    for &t in members {
+                        if let Some(plan) = self.tt[t].as_mut() {
+                            plan.build_layout_ranked(self.cache_kb, &heat);
+                        }
+                    }
+                }
+                self.fused = fused;
+            }
         }
         self.unit_offsets.get(b);
     }
@@ -658,6 +731,76 @@ mod tests {
             assert!(plan.tile_starts().len() <= f32_tiles.len());
             assert_eq!(plan.sched(), &f32_sched[..]);
         }
+    }
+
+    #[test]
+    fn ranked_layout_shares_one_prefix_order_across_plans() {
+        let shapes = TtShapes::plan(5000, 16, 8);
+        let mut rng = Rng::new(11);
+        let idx_a: Vec<u64> = (0..1024).map(|_| rng.below(400)).collect();
+        let idx_b: Vec<u64> = (0..1024).map(|_| rng.below(700)).collect();
+        let mut a = TtPlan::default();
+        let mut b = TtPlan::default();
+        a.build(shapes, &idx_a, BagLayout::Unit(idx_a.len()));
+        b.build(shapes, &idx_b, BagLayout::Unit(idx_b.len()));
+        // class-wide heat: summed distinct-row counts per prefix
+        let mut heat: HashMap<u64, u64> = HashMap::new();
+        for plan in [&a, &b] {
+            let n = plan.uniq_rows.len();
+            for (gi, &lo) in plan.group_starts.iter().enumerate() {
+                let hi = plan
+                    .group_starts
+                    .get(gi + 1)
+                    .map(|&x| x as usize)
+                    .unwrap_or(n);
+                let p = shapes.prefix_of(plan.uniq_rows[lo as usize]);
+                *heat.entry(p).or_insert(0) += (hi - lo as usize) as u64;
+            }
+        }
+        a.build_layout_ranked(1, &heat);
+        b.build_layout_ranked(1, &heat);
+        // scheduled prefix sequence of one plan, in walk order
+        let prefixes_of = |plan: &TtPlan| -> Vec<u64> {
+            plan.sched_group_starts()
+                .iter()
+                .map(|&p| {
+                    let slot = plan.sched()[p as usize] as usize;
+                    shapes.prefix_of(plan.uniq_rows[slot])
+                })
+                .collect()
+        };
+        for plan in [&a, &b] {
+            assert!(plan.tiled());
+            // sched is still a permutation of the distinct-row slots
+            let n = plan.uniq_rows.len();
+            let mut seen = vec![false; n];
+            for &slot in plan.sched() {
+                assert!(!seen[slot as usize]);
+                seen[slot as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s));
+            // walk order follows (heat desc, prefix asc) — the shared rank
+            let ps = prefixes_of(plan);
+            assert!(ps.windows(2).all(|w| {
+                let ka = (std::cmp::Reverse(heat[&w[0]]), w[0]);
+                let kb = (std::cmp::Reverse(heat[&w[1]]), w[1]);
+                ka < kb
+            }));
+            // tile boundaries remain group boundaries
+            for &t in plan.tile_starts() {
+                assert!(plan.sched_group_starts().contains(&t));
+            }
+        }
+        // both plans walk their (shared-vocabulary) prefixes in ONE order:
+        // the common prefixes appear in the same relative order
+        let pa = prefixes_of(&a);
+        let pb = prefixes_of(&b);
+        let common: Vec<u64> =
+            pa.iter().copied().filter(|p| pb.contains(p)).collect();
+        let pb_common: Vec<u64> =
+            pb.iter().copied().filter(|p| pa.contains(p)).collect();
+        assert!(!common.is_empty(), "test needs overlapping prefixes");
+        assert_eq!(common, pb_common, "class members disagree on walk order");
     }
 
     #[test]

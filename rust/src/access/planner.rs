@@ -4,6 +4,8 @@
 //! trainer, the pipeline and the server all configure one of these
 //! instead of hand-rolling remap/dedup on their hot paths.
 
+use std::collections::BTreeMap;
+
 use crate::access::plan::{BatchPlan, TtPlan};
 use crate::coordinator::engine::EngineCfg;
 use crate::data::ctr::Batch;
@@ -12,6 +14,7 @@ use crate::reorder::online::{BackgroundReorderer, OnlineReorderer, DEFAULT_ADOPT
 use crate::runtime::autotune::{AutotuneCfg, CacheBudgetTuner, CacheFeedback, ReorderCadenceTuner};
 use crate::tt::shapes::TtShapes;
 use crate::util::clock::Clock;
+use crate::util::json::Json;
 
 /// `[access]` section of the run config.
 #[derive(Clone, Copy, Debug)]
@@ -465,6 +468,143 @@ impl AffinityMap {
             }
         }
         h
+    }
+
+    /// Serialize the routing view so a router can ship it to a joining
+    /// node (`net::Frame::Join`).  Bijections travel as their curated
+    /// `(old, new)` entries in canonical order; the dense materialization
+    /// is re-derived on parse, so `key()` is bit-identical after a
+    /// round-trip.
+    pub fn to_json(&self) -> Json {
+        let slots: Vec<Json> = self
+            .shapes
+            .iter()
+            .zip(self.bijections.iter())
+            .map(|(sh, bij)| {
+                let mut m = BTreeMap::new();
+                let shapes = match sh {
+                    None => Json::Null,
+                    Some(s) => {
+                        let mut sm = BTreeMap::new();
+                        sm.insert("rows".into(), Json::Num(s.rows as f64));
+                        sm.insert("dim".into(), Json::Num(s.dim as f64));
+                        sm.insert("rank".into(), Json::Num(s.rank as f64));
+                        sm.insert(
+                            "m".into(),
+                            Json::Arr(s.m.iter().map(|&v| Json::Num(v as f64)).collect()),
+                        );
+                        sm.insert(
+                            "n".into(),
+                            Json::Arr(s.n.iter().map(|&v| Json::Num(v as f64)).collect()),
+                        );
+                        Json::Obj(sm)
+                    }
+                };
+                let bijection = match bij {
+                    None => Json::Null,
+                    Some(b) => {
+                        let mut bm = BTreeMap::new();
+                        bm.insert("rows".into(), Json::Num(b.rows as f64));
+                        bm.insert("n_hot".into(), Json::Num(b.n_hot as f64));
+                        bm.insert("n_communities".into(), Json::Num(b.n_communities as f64));
+                        bm.insert("modularity".into(), Json::Num(b.modularity));
+                        bm.insert(
+                            "entries".into(),
+                            Json::Arr(
+                                b.entries()
+                                    .iter()
+                                    .map(|&(o, n)| {
+                                        Json::Arr(vec![
+                                            Json::Num(o as f64),
+                                            Json::Num(n as f64),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        );
+                        Json::Obj(bm)
+                    }
+                };
+                m.insert("shapes".into(), shapes);
+                m.insert("bijection".into(), bijection);
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("slots".into(), Json::Arr(slots));
+        Json::Obj(root)
+    }
+
+    /// Parse a snapshot serialized by [`to_json`](Self::to_json).
+    pub fn from_json(j: &Json) -> anyhow::Result<AffinityMap> {
+        use anyhow::Context;
+        let slots = j.get("slots").and_then(Json::as_arr).context("missing slots")?;
+        let mut shapes = Vec::with_capacity(slots.len());
+        let mut bijections = Vec::with_capacity(slots.len());
+        for (t, slot) in slots.iter().enumerate() {
+            let sh = match slot.get("shapes") {
+                None | Some(Json::Null) => None,
+                Some(s) => {
+                    let u = |k: &str| {
+                        s.get(k).and_then(Json::as_u64).context(format!("slot {t}: missing shapes.{k}"))
+                    };
+                    let arr_u = |k: &str| -> anyhow::Result<Vec<u64>> {
+                        s.get(k)
+                            .and_then(Json::as_arr)
+                            .context(format!("slot {t}: missing shapes.{k}"))?
+                            .iter()
+                            .map(|v| v.as_u64().context(format!("slot {t}: bad shapes.{k}")))
+                            .collect()
+                    };
+                    let m = arr_u("m")?;
+                    let n = arr_u("n")?;
+                    anyhow::ensure!(m.len() == 3 && n.len() == 3, "slot {t}: shapes arity");
+                    Some(TtShapes {
+                        rows: u("rows")?,
+                        dim: u("dim")? as usize,
+                        m: [m[0], m[1], m[2]],
+                        n: [n[0] as usize, n[1] as usize, n[2] as usize],
+                        rank: u("rank")? as usize,
+                    })
+                }
+            };
+            let bij = match slot.get("bijection") {
+                None | Some(Json::Null) => None,
+                Some(b) => {
+                    let u = |k: &str| {
+                        b.get(k)
+                            .and_then(Json::as_u64)
+                            .context(format!("slot {t}: missing bijection.{k}"))
+                    };
+                    let entries = b
+                        .get("entries")
+                        .and_then(Json::as_arr)
+                        .context(format!("slot {t}: missing bijection.entries"))?
+                        .iter()
+                        .map(|e| {
+                            let o = e.idx(0).and_then(Json::as_u64);
+                            let n = e.idx(1).and_then(Json::as_u64);
+                            match (o, n) {
+                                (Some(o), Some(n)) => Ok((o, n)),
+                                _ => anyhow::bail!("slot {t}: bad bijection entry"),
+                            }
+                        })
+                        .collect::<anyhow::Result<Vec<(u64, u64)>>>()?;
+                    Some(IndexBijection::from_entries(
+                        u("rows")?,
+                        u("n_hot")? as usize,
+                        u("n_communities")? as usize,
+                        b.get("modularity")
+                            .and_then(Json::as_f64)
+                            .context(format!("slot {t}: missing bijection.modularity"))?,
+                        &entries,
+                    ))
+                }
+            };
+            shapes.push(sh);
+            bijections.push(bij);
+        }
+        Ok(AffinityMap { shapes, bijections })
     }
 }
 

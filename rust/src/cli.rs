@@ -125,6 +125,24 @@ SUBCOMMANDS:
                --fault-sever-rate F (chaos: reply channels severed)
                --fault-flood-rate F  --fault-flood-burst N (chaos:
                  junk-request queue floods)
+  node         Serve one detector node over TCP (multi-node tier).
+               Trains the same seeded detector as `serve`, wraps it in a
+               ServeSession and answers length-prefixed binary frames.
+               --listen host:port ([net] listen; port 0 = ephemeral)
+               --node-id N (ring identity — must equal this node's
+                 position in the router's --nodes list)
+               --generation N (respawn epoch; chaos kills fire only at
+                 generation 0, so respawned nodes survive)
+               --threshold F  ([serve] knobs apply per node)
+               --fault-kill-node N  --fault-node-kill-after N
+                 (chaos: node N drops mid-request after serving N)
+  route        Open-loop router driving detector nodes over TCP:
+               consistent-hash ring keyed on the plan-affinity snapshot,
+               heartbeat eviction, in-flight re-route on node death.
+               --nodes host:port,host:port,…  ([net] nodes)
+               --requests N  --arrival-rate F (Poisson req/s)
+               ([net] vnodes = ring points per node, heartbeat_ms =
+                probe cadence, max_outstanding = per-node backpressure)
   gen-data     Generate and summarize the IEEE-118 FDIA dataset
                --normal N  --attack N  --seed N
   runtime      Smoke-run the PJRT artifacts (requires `make artifacts`)

@@ -129,6 +129,47 @@ fn parse_value(v: &str, ln: usize) -> Result<TomlValue> {
     bail!("line {ln}: cannot parse value '{v}' (supported: string, number, bool, [numbers])")
 }
 
+/// `[net]` section: the multi-node serving tier (`recad node` /
+/// `recad route`).  The TOML subset has no string arrays, so `nodes` is
+/// a single comma-separated `host:port` list.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetCfg {
+    /// `recad node` bind address (`host:port`; port 0 picks a free port).
+    pub listen: String,
+    /// comma-separated node addresses the router dials (`recad route`).
+    pub nodes: String,
+    /// virtual nodes per physical node on the consistent-hash ring.
+    pub vnodes: usize,
+    /// router heartbeat cadence toward idle-suspect nodes (ms).
+    pub heartbeat_ms: u64,
+    /// per-node in-flight request cap before router backpressure.
+    pub max_outstanding: usize,
+}
+
+impl Default for NetCfg {
+    fn default() -> Self {
+        NetCfg {
+            listen: "127.0.0.1:7070".into(),
+            nodes: String::new(),
+            vnodes: 64,
+            heartbeat_ms: 50,
+            max_outstanding: 256,
+        }
+    }
+}
+
+impl NetCfg {
+    /// The `nodes` list split on commas (empty entries dropped).
+    pub fn node_list(&self) -> Vec<String> {
+        self.nodes
+            .split(',')
+            .map(|s| s.trim())
+            .filter(|s| !s.is_empty())
+            .map(|s| s.to_string())
+            .collect()
+    }
+}
+
 /// Top-level launcher configuration.
 #[derive(Clone, Debug)]
 pub struct RecAdConfig {
@@ -194,6 +235,10 @@ pub struct RecAdConfig {
     /// stragglers, a dead worker).  Off by default; disabled is
     /// bit-identical to the fault-free paths.
     pub fault: FaultCfg,
+    /// `[net]` section: node bind address, router node list, ring vnodes,
+    /// heartbeat cadence and per-node backpressure cap for the
+    /// `node`/`route` multi-node serving subcommands.
+    pub net: NetCfg,
     pub seed: u64,
     pub artifacts_dir: String,
 }
@@ -225,6 +270,7 @@ impl Default for RecAdConfig {
             serve: ServeCfg::default(),
             autotune: AutotuneCfg::default(),
             fault: FaultCfg::default(),
+            net: NetCfg::default(),
             seed: 42,
             artifacts_dir: "artifacts".into(),
         }
@@ -283,6 +329,8 @@ fn validate_numerics(t: &Toml) -> Result<()> {
         "serve.max_batch",
         "serve.deadline_us",
         "train.devices",
+        "net.vnodes",
+        "net.max_outstanding",
     ] {
         expect_positive_int(t, key)?;
     }
@@ -300,6 +348,9 @@ fn validate_numerics(t: &Toml) -> Result<()> {
         "fault.straggle_ms",
         "fault.dead_worker",
         "fault.dead_round",
+        "fault.kill_node",
+        "fault.node_kill_after",
+        "net.heartbeat_ms",
     ] {
         expect_unsigned_int(t, key)?;
     }
@@ -309,6 +360,7 @@ fn validate_numerics(t: &Toml) -> Result<()> {
         "fault.sever_rate",
         "fault.flood_rate",
         "fault.straggle_rate",
+        "fault.node_kill_rate",
     ] {
         expect_rate(t, key)?;
     }
@@ -407,6 +459,25 @@ impl RecAdConfig {
                     _ => d.fault.dead_worker,
                 },
                 dead_round: t.usize_or("fault.dead_round", d.fault.dead_round as usize) as u64,
+                kill_node: match t.get("fault.kill_node") {
+                    Some(TomlValue::Num(n)) => Some(*n as usize),
+                    _ => d.fault.kill_node,
+                },
+                node_kill_after: t
+                    .usize_or("fault.node_kill_after", d.fault.node_kill_after as usize)
+                    as u64,
+                node_kill_rate: t.num_or("fault.node_kill_rate", d.fault.node_kill_rate),
+            },
+            net: NetCfg {
+                listen: t.str_or("net.listen", &d.net.listen).to_string(),
+                nodes: t.str_or("net.nodes", &d.net.nodes).to_string(),
+                vnodes: t.usize_or("net.vnodes", d.net.vnodes).max(1),
+                heartbeat_ms: t
+                    .usize_or("net.heartbeat_ms", d.net.heartbeat_ms as usize)
+                    as u64,
+                max_outstanding: t
+                    .usize_or("net.max_outstanding", d.net.max_outstanding)
+                    .max(1),
             },
             seed: t.num_or("run.seed", d.seed as f64) as u64,
             artifacts_dir: t.str_or("run.artifacts_dir", &d.artifacts_dir).to_string(),
@@ -618,6 +689,9 @@ straggle_rate = 0.25
 straggle_ms = 1
 dead_worker = 1
 dead_round = 4
+kill_node = 1
+node_kill_after = 6
+node_kill_rate = 0.5
 "#;
         let c = RecAdConfig::from_toml(&Toml::parse(doc).unwrap()).unwrap();
         assert!(c.fault.enabled);
@@ -634,7 +708,36 @@ dead_round = 4
         assert_eq!(c.fault.straggle_ms, 1);
         assert_eq!(c.fault.dead_worker, Some(1));
         assert_eq!(c.fault.dead_round, 4);
+        assert_eq!(c.fault.kill_node, Some(1));
+        assert_eq!(c.fault.node_kill_after, 6);
+        assert!((c.fault.node_kill_rate - 0.5).abs() < 1e-12);
         assert!(c.fault.plan().is_some());
+    }
+
+    #[test]
+    fn parses_net_section_and_splits_node_list() {
+        let t = Toml::parse("[run]\nepochs = 1\n").unwrap();
+        let c = RecAdConfig::from_toml(&t).unwrap();
+        assert_eq!(c.net, NetCfg::default());
+        assert_eq!(c.net.listen, "127.0.0.1:7070");
+        assert!(c.net.node_list().is_empty(), "no nodes by default");
+        let doc = r#"
+[net]
+listen = "0.0.0.0:7071"
+nodes = "10.0.0.1:7070, 10.0.0.2:7070,10.0.0.3:7070"
+vnodes = 128
+heartbeat_ms = 25
+max_outstanding = 64
+"#;
+        let c = RecAdConfig::from_toml(&Toml::parse(doc).unwrap()).unwrap();
+        assert_eq!(c.net.listen, "0.0.0.0:7071");
+        assert_eq!(
+            c.net.node_list(),
+            vec!["10.0.0.1:7070", "10.0.0.2:7070", "10.0.0.3:7070"]
+        );
+        assert_eq!(c.net.vnodes, 128);
+        assert_eq!(c.net.heartbeat_ms, 25);
+        assert_eq!(c.net.max_outstanding, 64);
     }
 
     #[test]
@@ -670,6 +773,12 @@ dead_round = 4
             ("[fault]\nkill_replica = -2\n", "fault.kill_replica"),
             ("[fault]\nstall_ms = 2.5\n", "fault.stall_ms"),
             ("[fault]\ndead_worker = -1\n", "fault.dead_worker"),
+            ("[fault]\nkill_node = -1\n", "fault.kill_node"),
+            ("[fault]\nnode_kill_after = 1.5\n", "fault.node_kill_after"),
+            ("[fault]\nnode_kill_rate = 1.5\n", "fault.node_kill_rate"),
+            ("[net]\nvnodes = 0\n", "net.vnodes"),
+            ("[net]\nmax_outstanding = 0.5\n", "net.max_outstanding"),
+            ("[net]\nheartbeat_ms = -1\n", "net.heartbeat_ms"),
         ];
         for (doc, key) in cases {
             let t = Toml::parse(doc).unwrap();

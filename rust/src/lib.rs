@@ -10,6 +10,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exec;
 pub mod metrics;
+pub mod net;
 pub mod powersys;
 pub mod reorder;
 pub mod runtime;

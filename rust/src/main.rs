@@ -11,6 +11,7 @@ use recad::coordinator::pipeline::{self, PipelineCfg};
 use recad::coordinator::platform::SimPlatform;
 use recad::coordinator::trainer;
 use recad::data::schema;
+use recad::net::{run_open_loop_net, NetClient, NodeServer};
 use recad::powersys::dataset::{generate, DatasetCfg, SparseVocab};
 use recad::runtime::{Artifacts, DlrmTrainStep, TtLookupExe};
 use recad::serve::{run_open_loop, OpenLoopCfg, Policy, ServeSession};
@@ -45,6 +46,8 @@ fn run(args: &[String]) -> Result<()> {
         }
         "train" => cmd_train(&cli),
         "serve" => cmd_serve(&cli),
+        "node" => cmd_node(&cli),
+        "route" => cmd_route(&cli),
         "gen-data" => cmd_gen_data(&cli),
         "runtime" => cmd_runtime(&cli),
         "report" => cmd_report(),
@@ -144,6 +147,14 @@ fn load_config(cli: &Cli) -> Result<RecAdConfig> {
     }
     if cli.opt("fault-dead-round").is_some() {
         cfg.fault.dead_round = cli.usize_or("fault-dead-round", 0)? as u64;
+        fault_touched = true;
+    }
+    if cli.opt("fault-kill-node").is_some() {
+        cfg.fault.kill_node = Some(cli.usize_or("fault-kill-node", 0)?);
+        fault_touched = true;
+    }
+    if cli.opt("fault-node-kill-after").is_some() {
+        cfg.fault.node_kill_after = cli.usize_or("fault-node-kill-after", 0)? as u64;
         fault_touched = true;
     }
     if fault_touched {
@@ -494,6 +505,135 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             fmt_bytes(sr.model_bytes)
         );
     }
+    Ok(())
+}
+
+fn cmd_node(cli: &Cli) -> Result<()> {
+    let cfg = load_config(cli)?;
+    let id = cli.usize_or("node-id", 0)? as u64;
+    let generation = cli.usize_or("generation", 0)? as u64;
+    let listen = cli.opt_or("listen", &cfg.net.listen).to_string();
+    let threshold = cli.f64_or("threshold", 0.5)? as f32;
+    // every node trains the SAME seeded detector the router (and the
+    // other nodes) train: same cfg + same seed => bit-identical weights,
+    // so verdicts are node-independent and the ring can move keys freely
+    let ds = generate(&DatasetCfg {
+        n_normal: 2000,
+        n_attack: 500,
+        vocab: SparseVocab::ieee118(cfg.scale),
+        n_profiles: 100,
+        noise_std: 0.005,
+        seed: cfg.seed,
+    });
+    println!("node {id}: training detector before listening…");
+    let access = cfg.access_cfg();
+    let (report, engine, planner) = trainer::train_ieee118_auto(
+        cfg.engine_cfg(),
+        &access,
+        &cfg.autotune,
+        &ds,
+        2,
+        64,
+        cfg.seed,
+    );
+    print_eval(&report.eval);
+    let fault_plan = cfg.fault.plan();
+    let session = ServeSession::from_trained(engine, planner)
+        .threshold(threshold)
+        .with_cfg(&cfg.serve)
+        .quantize(cfg.quantize)
+        .fault(fault_plan.clone());
+    let node = NodeServer::spawn(id, generation, session, &listen, fault_plan)?;
+    println!(
+        "node {} (generation {}) listening on {}",
+        node.id(),
+        node.generation(),
+        node.addr()
+    );
+    while !node.is_stopped() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    let served = node.shutdown();
+    println!("node {id} stopped after serving {served} request(s)");
+    Ok(())
+}
+
+fn cmd_route(cli: &Cli) -> Result<()> {
+    let cfg = load_config(cli)?;
+    let requests = cli.usize_or("requests", 500)?;
+    let default_rate = if cfg.serve.arrival_rate > 0.0 { cfg.serve.arrival_rate } else { 2000.0 };
+    let rate = cli.f64_or("arrival-rate", default_rate)?;
+    let nodes: Vec<String> = match cli.opt("nodes") {
+        Some(s) => s
+            .split(',')
+            .map(|x| x.trim().to_string())
+            .filter(|x| !x.is_empty())
+            .collect(),
+        None => cfg.net.node_list(),
+    };
+    anyhow::ensure!(
+        !nodes.is_empty(),
+        "no nodes to route to: pass --nodes host:port,… or set [net] nodes"
+    );
+    // the affinity snapshot the ring keys on comes from the same seeded
+    // training run the nodes performed
+    let ds = generate(&DatasetCfg {
+        n_normal: 2000,
+        n_attack: 500,
+        vocab: SparseVocab::ieee118(cfg.scale),
+        n_profiles: 100,
+        noise_std: 0.005,
+        seed: cfg.seed,
+    });
+    println!("router: deriving the plan-affinity snapshot (same training run as the nodes)…");
+    let access = cfg.access_cfg();
+    let (_report, _engine, planner) = trainer::train_ieee118_auto(
+        cfg.engine_cfg(),
+        &access,
+        &cfg.autotune,
+        &ds,
+        2,
+        64,
+        cfg.seed,
+    );
+    let affinity = planner.affinity_map();
+    let mut client =
+        NetClient::connect(affinity, &nodes, cfg.net.vnodes, cfg.net.max_outstanding)?.timeouts(
+            std::time::Duration::from_millis(cfg.net.heartbeat_ms.max(1)),
+            std::time::Duration::from_millis(500),
+        );
+    let stream = &ds.samples[..requests.min(ds.samples.len())];
+    println!(
+        "router: {} node(s), ring epoch {}, open loop at {:.0} req/s over {} requests",
+        nodes.len(),
+        client.router().epoch(),
+        rate,
+        stream.len()
+    );
+    let nl = run_open_loop_net(
+        &mut client,
+        stream,
+        &OpenLoopCfg { rate_per_sec: rate, seed: cfg.seed ^ 0x0417 },
+        None,
+    );
+    client.close();
+    let ol = &nl.report;
+    println!(
+        "open loop [{}]: {}/{} served on {} node(s) at {:.0}/s offered ({:.0}/s achieved)",
+        ol.policy, ol.served, ol.offered, nl.nodes, ol.offered_rate, ol.achieved_rate
+    );
+    println!(
+        "attack window p50 {} / p99 {} / max {}  (queue p99 {} + service p99 {})",
+        fmt_dur(ol.p50_window.as_secs_f64()),
+        fmt_dur(ol.p99_window.as_secs_f64()),
+        fmt_dur(ol.max_window.as_secs_f64()),
+        fmt_dur(ol.p99_queue_delay.as_secs_f64()),
+        fmt_dur(ol.p99_service.as_secs_f64()),
+    );
+    println!(
+        "ring: epoch {}, {} eviction(s), {} rejoin(s); {} shed, {} dropped, {} undeliverable",
+        nl.ring_epoch, nl.evictions, nl.rejoins, ol.shed, ol.dropped, client.undeliverable
+    );
     Ok(())
 }
 

@@ -1,0 +1,34 @@
+//! `net` — the multi-node serving tier (ISSUE 9).
+//!
+//! Promotes `serve::RoutePolicy` from intra-process thread routing to
+//! cross-process node routing, with zero new dependencies:
+//!
+//! * [`wire`] — tagged little-endian frame codec (`Frame`, `NodeGauge`).
+//! * [`rpc`] — `u32` length-prefixed framing over blocking
+//!   `TcpStream`s, with a stop-aware read path for node handlers.
+//! * [`ring`] — consistent-hash ring with virtual nodes, keyed by the
+//!   `AccessPlanner::affinity_map()` FNV prefix key so hot TT prefix
+//!   groups pin to nodes with warm quantized tiles; membership changes
+//!   move a provably bounded ~1/n key fraction (property-tested).
+//! * [`node`] — `recad node`: a TCP server wrapping a `ServeSession`
+//!   (frozen snapshot, supervisor, shedding intact).
+//! * [`router`] — `RemoteRouter` (the `RoutePolicy` surface over remote
+//!   gauges), `NetClient` (liveness, eviction, requeue-on-death,
+//!   rejoin, backpressure), and `run_open_loop_net`.
+//!
+//! Invariant: loopback multi-node serving is bit-identical to the
+//! in-process `ServeSession` at equal model state — replicas are clones
+//! of one trained detector whether they live behind a socket or not —
+//! pinned by `tests/net_equivalence.rs`.
+
+pub mod node;
+pub mod ring;
+pub mod router;
+pub mod rpc;
+pub mod wire;
+
+pub use node::NodeServer;
+pub use ring::HashRing;
+pub use router::{run_open_loop_net, NetClient, NetLoopReport, RemoteReply, RemoteRouter};
+pub use rpc::{read_frame, write_frame, MAX_FRAME};
+pub use wire::{Frame, NodeGauge};

@@ -1,0 +1,276 @@
+//! `recad node`: a serving node exposing a `ServeSession` over TCP.
+//!
+//! A `NodeServer` binds a listener and wraps a started
+//! `StreamingServer`, so everything the in-process tier provides —
+//! frozen snapshot, supervisor respawn, EWMA shedding — is intact
+//! behind the socket.  Per connection, two threads cooperate:
+//!
+//! * the **handler** reads frames with a short read timeout (polling the
+//!   node stop flag between partial reads), turns `Infer` frames into
+//!   `submit()` calls, and answers heartbeats/joins inline;
+//! * the **reply pump** drains the per-request reply receivers in
+//!   submission order and writes `Reply` frames back, piggybacking a
+//!   `NodeGauge` snapshot on each one.
+//!
+//! The handler and the pump share the write half of the socket behind a
+//! mutex, so heartbeat acks interleave safely with replies.
+//!
+//! **Chaos**: when a `FaultPlan` with a node-kill verdict is attached,
+//! the handler checks `node_kill_now` *before* submitting each request;
+//! when the verdict fires the node records the event and stops without
+//! replying — the triggering request is genuinely lost in flight and the
+//! client router must re-route it, which is exactly what the zero-drop
+//! test pins.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::access::AffinityMap;
+use crate::runtime::FaultPlan;
+use crate::serve::{Reply, ServeSession, StreamingServer};
+use crate::util::json::Json;
+
+use super::rpc::{read_frame_interruptible, write_frame, ReadOutcome};
+use super::wire::{Frame, NodeGauge};
+
+/// Read-timeout granularity for connection handlers; bounds how stale a
+/// stop-flag observation can be.
+const POLL: Duration = Duration::from_millis(25);
+
+pub struct NodeServer {
+    id: u64,
+    generation: u64,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    served: Arc<AtomicU64>,
+    accept: Option<thread::JoinHandle<Arc<StreamingServer>>>,
+}
+
+fn gauge_of(server: &StreamingServer, served: &AtomicU64) -> NodeGauge {
+    let depths = server.queue_depths();
+    let mut depth = 0u32;
+    for i in 0..depths.len() {
+        depth += depths.depth(i) as u32;
+    }
+    NodeGauge {
+        depth,
+        live: depths.live_count() as u32,
+        served: served.load(Ordering::Relaxed),
+        shed: server.shed_count(),
+        respawns: server.respawns(),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_conn(
+    stream: TcpStream,
+    server: Arc<StreamingServer>,
+    stop: Arc<AtomicBool>,
+    served: Arc<AtomicU64>,
+    fault: Option<Arc<FaultPlan>>,
+    id: u64,
+    generation: u64,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(POLL));
+    let writer = Arc::new(Mutex::new(match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    }));
+    let mut reader = stream;
+
+    // Reply pump: preserves submission order per connection, so a
+    // client reading sequentially never sees seq reordering from one
+    // node (ordering across nodes is the router's concern).
+    let (pending_tx, pending_rx) = mpsc::channel::<(u64, mpsc::Receiver<Reply>)>();
+    let pump = {
+        let writer = Arc::clone(&writer);
+        let server = Arc::clone(&server);
+        let stop = Arc::clone(&stop);
+        let served = Arc::clone(&served);
+        thread::spawn(move || {
+            for (seq, rx) in pending_rx {
+                if stop.load(Ordering::Relaxed) {
+                    break; // killed: in-flight replies are lost on purpose
+                }
+                let reply = match rx.recv_timeout(Duration::from_secs(30)) {
+                    Ok(r) => r,
+                    Err(_) => continue, // replica severed the reply; client re-routes
+                };
+                let frame = Frame::Reply {
+                    seq,
+                    prob: reply.prob,
+                    latency_ns: reply.latency.as_nanos() as u64,
+                    queue_delay_ns: reply.queue_delay.as_nanos() as u64,
+                    shed: reply.shed,
+                    gauge: gauge_of(&server, &served),
+                };
+                let mut w = writer.lock().unwrap();
+                if write_frame(&mut *w, &frame).is_err() {
+                    break;
+                }
+            }
+        })
+    };
+
+    loop {
+        let frame = match read_frame_interruptible(&mut reader, &stop) {
+            Ok(ReadOutcome::Frame(f)) => f,
+            Ok(ReadOutcome::Eof) | Ok(ReadOutcome::Stopped) | Err(_) => break,
+        };
+        match frame {
+            Frame::Infer { seq, .. } => {
+                let sample = match frame.sample() {
+                    Ok(s) => s,
+                    Err(_) => break, // malformed request: drop the connection
+                };
+                let n = served.load(Ordering::Relaxed) + 1;
+                if let Some(plan) = &fault {
+                    if plan.node_kill_now(id, generation, n) {
+                        plan.record("node_kill", id as usize, n);
+                        stop.store(true, Ordering::Relaxed);
+                        break; // the triggering request dies in flight
+                    }
+                }
+                served.store(n, Ordering::Relaxed);
+                let rx = server.submit(&sample);
+                if pending_tx.send((seq, rx)).is_err() {
+                    break;
+                }
+            }
+            Frame::Heartbeat { seq } => {
+                let ack = Frame::HeartbeatAck { seq, gauge: gauge_of(&server, &served) };
+                let mut w = writer.lock().unwrap();
+                if write_frame(&mut *w, &ack).is_err() {
+                    break;
+                }
+            }
+            Frame::Join { node, affinity } => {
+                // The router ships its affinity snapshot on join; a node
+                // that cannot parse it must refuse so the client falls
+                // back rather than routing against a different key space.
+                let ok = Json::parse(&affinity)
+                    .ok()
+                    .map(|j| AffinityMap::from_json(&j).is_ok())
+                    .unwrap_or(false);
+                let ack = Frame::JoinAck { node, ok };
+                let mut w = writer.lock().unwrap();
+                if write_frame(&mut *w, &ack).is_err() {
+                    break;
+                }
+            }
+            Frame::Leave { .. } => break,
+            Frame::Shutdown => {
+                stop.store(true, Ordering::Relaxed);
+                break;
+            }
+            // client-bound frames arriving at a node are protocol errors
+            Frame::Reply { .. } | Frame::HeartbeatAck { .. } | Frame::JoinAck { .. } => break,
+        }
+    }
+
+    drop(pending_tx);
+    let _ = pump.join();
+    // Close both halves so the client's reader observes EOF promptly.
+    if let Ok(w) = writer.lock() {
+        let _ = w.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+impl NodeServer {
+    /// Start a node: bind `listen` (use port 0 for tests), start the
+    /// session, and serve connections until shutdown or node-kill.
+    /// `generation` feeds the node-kill verdict: a respawned node passes
+    /// 1 and is spared, mirroring the replica-kill discipline.
+    pub fn spawn(
+        id: u64,
+        generation: u64,
+        session: ServeSession,
+        listen: &str,
+        fault: Option<Arc<FaultPlan>>,
+    ) -> Result<NodeServer> {
+        let listener =
+            TcpListener::bind(listen).with_context(|| format!("node {id}: bind {listen}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let server = Arc::new(session.start());
+        let stop = Arc::new(AtomicBool::new(false));
+        let served = Arc::new(AtomicU64::new(0));
+        let accept = {
+            let server = Arc::clone(&server);
+            let stop = Arc::clone(&stop);
+            let served = Arc::clone(&served);
+            thread::spawn(move || {
+                let mut conns = Vec::new();
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let server = Arc::clone(&server);
+                            let stop = Arc::clone(&stop);
+                            let served = Arc::clone(&served);
+                            let fault = fault.clone();
+                            conns.push(thread::spawn(move || {
+                                handle_conn(stream, server, stop, served, fault, id, generation)
+                            }));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            thread::sleep(Duration::from_millis(1));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                stop.store(true, Ordering::Relaxed);
+                for c in conns {
+                    let _ = c.join();
+                }
+                server
+            })
+        };
+        Ok(NodeServer { id, generation, addr, stop, served, accept: Some(accept) })
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Bound address — the actual port when spawned with port 0.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// True once the node has stopped accepting (shutdown or chaos kill).
+    pub fn is_stopped(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    /// Infer requests accepted so far.
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    /// Stop the node and reap every thread, including the wrapped
+    /// session's replicas.  Safe (and required) after a chaos kill: the
+    /// accept loop has already exited, so this just joins and tears
+    /// down.  Returns the number of accepted requests.
+    pub fn shutdown(mut self) -> u64 {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            if let Ok(server) = h.join() {
+                if let Ok(server) = Arc::try_unwrap(server) {
+                    let _ = server.shutdown();
+                }
+            }
+        }
+        self.served.load(Ordering::Relaxed)
+    }
+}

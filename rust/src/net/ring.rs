@@ -1,0 +1,207 @@
+//! Consistent-hash ring with virtual nodes.
+//!
+//! Keys are the FNV prefix keys produced by `AffinityMap::key`, so a hot
+//! TT prefix group always lands on the node whose quantized tiles are
+//! already warm for it.  Each physical node owns `vnodes` points on a
+//! `u64` ring; a key routes to the owner of the first point at or after
+//! `splitmix64(key)` (wrapping).  Because every point position is a pure
+//! function of `(node, replica)`, membership changes have two properties
+//! the tests pin:
+//!
+//! * **Bounded movement** — removing one of `n` nodes only reassigns
+//!   keys that were owned by the removed node's points, an expected
+//!   `1/n` fraction (property-tested at ≤ `2/n` with sampling slack);
+//!   keys owned by surviving nodes never move.
+//! * **Snap-back** — re-adding a node restores its exact points, so
+//!   every key it used to own returns to it.
+//!
+//! `epoch` increments on every membership change; routing is a pure
+//! function of `(key, epoch)`, which the router uses to reason about
+//! in-flight requests across evictions.
+
+use crate::util::prng::splitmix64;
+
+#[derive(Clone, Debug)]
+pub struct HashRing {
+    /// Sorted `(position, node)` points; ties broken by node id.
+    points: Vec<(u64, u64)>,
+    /// Current member node ids, sorted.
+    nodes: Vec<u64>,
+    /// Virtual points per physical node.
+    vnodes: usize,
+    /// Bumped on every add/remove.
+    epoch: u64,
+}
+
+/// Ring position of virtual replica `i` of `node` — a pure function, so
+/// re-adding a node reclaims exactly the points it held before.
+fn point_of(node: u64, i: usize) -> u64 {
+    let mut s = node
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (i as u64).wrapping_mul(0xD1B5_4A32_D192_ED03);
+    splitmix64(&mut s)
+}
+
+impl HashRing {
+    pub fn new(vnodes: usize) -> HashRing {
+        assert!(vnodes >= 1, "a node needs at least one ring point");
+        HashRing { points: Vec::new(), nodes: Vec::new(), vnodes, epoch: 0 }
+    }
+
+    pub fn with_nodes(vnodes: usize, ids: &[u64]) -> HashRing {
+        let mut r = HashRing::new(vnodes);
+        for &id in ids {
+            r.add(id);
+        }
+        r
+    }
+
+    /// Add a node; returns false (and changes nothing) if already present.
+    pub fn add(&mut self, node: u64) -> bool {
+        if self.contains(node) {
+            return false;
+        }
+        self.nodes.push(node);
+        self.nodes.sort_unstable();
+        for i in 0..self.vnodes {
+            self.points.push((point_of(node, i), node));
+        }
+        self.points.sort_unstable();
+        self.epoch += 1;
+        true
+    }
+
+    /// Remove a node; returns false if it was not a member.
+    pub fn remove(&mut self, node: u64) -> bool {
+        if !self.contains(node) {
+            return false;
+        }
+        self.nodes.retain(|&n| n != node);
+        self.points.retain(|&(_, n)| n != node);
+        self.epoch += 1;
+        true
+    }
+
+    pub fn contains(&self, node: u64) -> bool {
+        self.nodes.binary_search(&node).is_ok()
+    }
+
+    pub fn nodes(&self) -> &[u64] {
+        &self.nodes
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Owner of `key`, or None if the ring is empty.
+    pub fn node_for(&self, key: u64) -> Option<u64> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let mut s = key;
+        let pos = splitmix64(&mut s);
+        let i = self.points.partition_point(|p| p.0 < pos);
+        let i = if i == self.points.len() { 0 } else { i };
+        Some(self.points[i].1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn sample_keys(n: usize, seed: u64) -> Vec<u64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.below(u64::MAX)).collect()
+    }
+
+    #[test]
+    fn routing_is_deterministic_within_an_epoch() {
+        let ring = HashRing::with_nodes(64, &[0, 1, 2, 3]);
+        let clone = ring.clone();
+        for k in sample_keys(1000, 5) {
+            assert_eq!(ring.node_for(k), clone.node_for(k));
+            assert_eq!(ring.node_for(k), ring.node_for(k));
+        }
+    }
+
+    #[test]
+    fn all_nodes_receive_some_share() {
+        let ring = HashRing::with_nodes(64, &[0, 1, 2]);
+        let mut counts = [0usize; 3];
+        for k in sample_keys(3000, 9) {
+            counts[ring.node_for(k).unwrap() as usize] += 1;
+        }
+        for (n, c) in counts.iter().enumerate() {
+            assert!(*c > 0, "node {n} owns no keys");
+        }
+    }
+
+    #[test]
+    fn removing_one_of_n_moves_at_most_two_over_n() {
+        let keys = sample_keys(10_000, 17);
+        for n in [2usize, 3, 4, 8] {
+            let ids: Vec<u64> = (0..n as u64).collect();
+            let full = HashRing::with_nodes(64, &ids);
+            let before: Vec<u64> = keys.iter().map(|&k| full.node_for(k).unwrap()).collect();
+            let mut reduced = full.clone();
+            reduced.remove(0);
+            let mut moved = 0usize;
+            for (i, &k) in keys.iter().enumerate() {
+                let after = reduced.node_for(k).unwrap();
+                if before[i] == 0 {
+                    assert_ne!(after, 0, "key still routed to the removed node");
+                } else {
+                    assert_eq!(before[i], after, "a surviving node's key moved");
+                }
+                if before[i] != after {
+                    moved += 1;
+                }
+            }
+            let bound = 2.0 / n as f64;
+            let frac = moved as f64 / keys.len() as f64;
+            assert!(
+                frac <= bound,
+                "removing 1 of {n} moved {frac:.4} of keys (bound {bound:.4})"
+            );
+        }
+    }
+
+    #[test]
+    fn readding_a_node_snaps_keys_back() {
+        let keys = sample_keys(4000, 23);
+        let full = HashRing::with_nodes(64, &[0, 1, 2]);
+        let before: Vec<u64> = keys.iter().map(|&k| full.node_for(k).unwrap()).collect();
+        let mut ring = full.clone();
+        let e0 = ring.epoch();
+        ring.remove(1);
+        assert_eq!(ring.epoch(), e0 + 1);
+        ring.add(1);
+        assert_eq!(ring.epoch(), e0 + 2);
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(before[i], ring.node_for(k).unwrap(), "key failed to snap back");
+        }
+    }
+
+    #[test]
+    fn membership_edge_cases() {
+        let mut ring = HashRing::new(8);
+        assert!(ring.node_for(7).is_none());
+        assert!(ring.add(4));
+        assert!(!ring.add(4), "double add accepted");
+        assert_eq!(ring.node_for(7), Some(4), "singleton ring must own every key");
+        assert!(ring.remove(4));
+        assert!(!ring.remove(4), "double remove accepted");
+        assert!(ring.is_empty());
+    }
+}

@@ -1,0 +1,544 @@
+//! Client side of the multi-node tier: a ring-backed `RoutePolicy`
+//! promoted to cross-process routing, plus the `NetClient` connection
+//! manager and the network open-loop load generator.
+//!
+//! `RemoteRouter` keeps the intra-process `RoutePolicy` surface — node
+//! slots are just indices into a client-side `QueueDepths` whose gauges
+//! now mean "requests in flight to that node" — so the serving stack's
+//! routing abstractions carry over unchanged.  On top of that,
+//! `NetClient` adds what the network makes necessary:
+//!
+//! * **liveness** — a reader thread per node marks its slot dead on
+//!   EOF/error; `sweep` also evicts nodes whose replies *and* heartbeat
+//!   acks have gone silent past `hang_timeout` while work is queued;
+//! * **re-route on death** — an evicted node's in-flight requests drain
+//!   to the front of a pending queue in sequence order (the same
+//!   discipline the in-process supervisor uses for a dead replica's
+//!   queue) and re-dispatch to surviving nodes;
+//! * **rejoin** — an optional respawn callback maps a dead slot to a
+//!   fresh address; on reconnect the node's ring points are restored
+//!   (snap-back) and its slot is marked alive again;
+//! * **backpressure** — a slot at `max_outstanding` in-flight requests
+//!   overflows to the least-loaded live node; with every node saturated
+//!   the dispatcher sweeps and waits instead of growing socket buffers.
+
+use std::collections::{HashMap, VecDeque};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::access::AffinityMap;
+use crate::powersys::dataset::Sample;
+use crate::serve::load::{OpenLoopCfg, OpenLoopReport};
+use crate::serve::{QueueDepths, RoutePolicy};
+use crate::util::prng::Rng;
+
+use super::ring::HashRing;
+use super::rpc::{read_frame, write_frame};
+use super::wire::{Frame, NodeGauge};
+
+/// Respawn callback: given a dead slot, optionally return the address of
+/// a replacement node to rejoin in its place.
+pub type RespawnFn<'a> = dyn FnMut(usize) -> Option<String> + 'a;
+
+/// `RoutePolicy` over a consistent-hash ring of nodes.  Slot indices
+/// into the client-side `QueueDepths` double as ring node ids.
+pub struct RemoteRouter {
+    affinity: AffinityMap,
+    ring: Mutex<HashRing>,
+    slots: usize,
+}
+
+impl RemoteRouter {
+    pub fn new(affinity: AffinityMap, slots: usize, vnodes: usize) -> RemoteRouter {
+        let ids: Vec<u64> = (0..slots as u64).collect();
+        RemoteRouter { affinity, ring: Mutex::new(HashRing::with_nodes(vnodes, &ids)), slots }
+    }
+
+    /// Ring owner for a sparse vector's affinity key (ignoring liveness).
+    pub fn pick(&self, sparse: &[u64]) -> usize {
+        let key = self.affinity.key(sparse);
+        match self.ring.lock().unwrap().node_for(key) {
+            Some(n) => n as usize,
+            None => (key % self.slots.max(1) as u64) as usize,
+        }
+    }
+
+    /// Remove a node's ring points; its keys spill to the survivors.
+    pub fn evict(&self, slot: usize) -> bool {
+        self.ring.lock().unwrap().remove(slot as u64)
+    }
+
+    /// Restore a node's ring points; its keys snap back.
+    pub fn rejoin(&self, slot: usize) -> bool {
+        self.ring.lock().unwrap().add(slot as u64)
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.ring.lock().unwrap().epoch()
+    }
+
+    pub fn ring_len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn affinity(&self) -> &AffinityMap {
+        &self.affinity
+    }
+}
+
+impl RoutePolicy for RemoteRouter {
+    fn name(&self) -> &'static str {
+        "ring_affinity"
+    }
+
+    fn route(&self, sample: &Sample, depths: &QueueDepths) -> usize {
+        let want = self.pick(&sample.sparse) % depths.len().max(1);
+        depths.first_alive_from(want)
+    }
+}
+
+/// Reply delivered back from a node, stamped with client receive time.
+#[derive(Clone, Copy, Debug)]
+pub struct RemoteReply {
+    pub prob: f32,
+    pub latency: Duration,
+    pub queue_delay: Duration,
+    pub shed: bool,
+    pub node: usize,
+    pub at: Instant,
+}
+
+struct ReplySink {
+    replies: Mutex<HashMap<u64, RemoteReply>>,
+    cv: Condvar,
+}
+
+struct Conn {
+    writer: TcpStream,
+    /// seq → sample index, for requeue on death.
+    outstanding: Arc<Mutex<HashMap<u64, usize>>>,
+    dead: Arc<AtomicBool>,
+    /// Micros since client epoch of the last frame from this node.
+    last_seen: Arc<AtomicU64>,
+    gauge: Arc<Mutex<NodeGauge>>,
+    reader: Option<thread::JoinHandle<()>>,
+}
+
+struct Slot {
+    addr: String,
+    conn: Option<Conn>,
+}
+
+pub struct NetClient {
+    router: Arc<RemoteRouter>,
+    depths: Arc<QueueDepths>,
+    slots: Vec<Slot>,
+    sink: Arc<ReplySink>,
+    epoch: Instant,
+    affinity_json: String,
+    max_outstanding: usize,
+    hang_timeout: Duration,
+    heartbeat_every: Duration,
+    last_heartbeat: Vec<Instant>,
+    next_seq: u64,
+    /// Requests drained from dead nodes, awaiting re-dispatch in
+    /// original sequence order.
+    pending: VecDeque<(u64, usize)>,
+    /// Requests that could not be delivered to any live node.
+    pub undeliverable: usize,
+    pub evictions: u64,
+    pub rejoins: u64,
+}
+
+impl NetClient {
+    /// Connect to every address, shipping the affinity snapshot in the
+    /// `Join` handshake; nodes that cannot parse it refuse the join.
+    pub fn connect(
+        affinity: AffinityMap,
+        addrs: &[String],
+        vnodes: usize,
+        max_outstanding: usize,
+    ) -> Result<NetClient> {
+        ensure!(!addrs.is_empty(), "need at least one node address");
+        let affinity_json = affinity.to_json().to_string();
+        let router = Arc::new(RemoteRouter::new(affinity, addrs.len(), vnodes));
+        let mut client = NetClient {
+            router,
+            depths: Arc::new(QueueDepths::new(addrs.len())),
+            slots: addrs.iter().map(|a| Slot { addr: a.clone(), conn: None }).collect(),
+            sink: Arc::new(ReplySink { replies: Mutex::new(HashMap::new()), cv: Condvar::new() }),
+            epoch: Instant::now(),
+            affinity_json,
+            max_outstanding: max_outstanding.max(1),
+            hang_timeout: Duration::from_millis(500),
+            heartbeat_every: Duration::from_millis(50),
+            last_heartbeat: vec![Instant::now(); addrs.len()],
+            next_seq: 0,
+            pending: VecDeque::new(),
+            undeliverable: 0,
+            evictions: 0,
+            rejoins: 0,
+        };
+        for i in 0..client.slots.len() {
+            client
+                .connect_slot(i)
+                .with_context(|| format!("join node {i} at {}", client.slots[i].addr))?;
+        }
+        Ok(client)
+    }
+
+    /// Heartbeat cadence and silent-node eviction threshold.
+    pub fn timeouts(mut self, heartbeat_every: Duration, hang_timeout: Duration) -> NetClient {
+        self.heartbeat_every = heartbeat_every;
+        self.hang_timeout = hang_timeout;
+        self
+    }
+
+    pub fn router(&self) -> &RemoteRouter {
+        &self.router
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn live_nodes(&self) -> usize {
+        self.depths.live_count()
+    }
+
+    /// Last gauge piggybacked by a node, if it ever replied.
+    pub fn gauge(&self, slot: usize) -> Option<NodeGauge> {
+        self.slots[slot].conn.as_ref().map(|c| *c.gauge.lock().unwrap())
+    }
+
+    fn connect_slot(&mut self, i: usize) -> Result<()> {
+        let mut stream = TcpStream::connect(&self.slots[i].addr)?;
+        stream.set_nodelay(true)?;
+        write_frame(&mut stream, &Frame::Join { node: i as u64, affinity: self.affinity_json.clone() })?;
+        match read_frame(&mut stream)? {
+            Frame::JoinAck { ok: true, .. } => {}
+            Frame::JoinAck { ok: false, .. } => bail!("node rejected affinity snapshot"),
+            f => bail!("expected JoinAck, got {f:?}"),
+        }
+        let outstanding = Arc::new(Mutex::new(HashMap::new()));
+        let dead = Arc::new(AtomicBool::new(false));
+        let last_seen = Arc::new(AtomicU64::new(self.epoch.elapsed().as_micros() as u64));
+        let gauge = Arc::new(Mutex::new(NodeGauge::default()));
+        let reader = {
+            let mut rstream = stream.try_clone()?;
+            let outstanding = Arc::clone(&outstanding);
+            let dead = Arc::clone(&dead);
+            let last_seen = Arc::clone(&last_seen);
+            let gauge_slot = Arc::clone(&gauge);
+            let sink = Arc::clone(&self.sink);
+            let depths = Arc::clone(&self.depths);
+            let epoch = self.epoch;
+            thread::spawn(move || {
+                loop {
+                    let frame = match read_frame(&mut rstream) {
+                        Ok(f) => f,
+                        Err(_) => break,
+                    };
+                    last_seen.store(epoch.elapsed().as_micros() as u64, Ordering::Relaxed);
+                    match frame {
+                        Frame::Reply { seq, prob, latency_ns, queue_delay_ns, shed, gauge } => {
+                            *gauge_slot.lock().unwrap() = gauge;
+                            if outstanding.lock().unwrap().remove(&seq).is_some() {
+                                depths.leave(i);
+                            }
+                            let reply = RemoteReply {
+                                prob,
+                                latency: Duration::from_nanos(latency_ns),
+                                queue_delay: Duration::from_nanos(queue_delay_ns),
+                                shed,
+                                node: i,
+                                at: Instant::now(),
+                            };
+                            sink.replies.lock().unwrap().insert(seq, reply);
+                            sink.cv.notify_all();
+                        }
+                        Frame::HeartbeatAck { gauge, .. } => {
+                            *gauge_slot.lock().unwrap() = gauge;
+                        }
+                        _ => break, // protocol error: treat as dead
+                    }
+                }
+                dead.store(true, Ordering::Relaxed);
+                sink.cv.notify_all();
+            })
+        };
+        self.slots[i].conn =
+            Some(Conn { writer: stream, outstanding, dead, last_seen, gauge, reader: Some(reader) });
+        self.depths.set_alive(i, true);
+        self.last_heartbeat[i] = Instant::now();
+        Ok(())
+    }
+
+    /// Tear down a slot: mark it dead everywhere, drain its in-flight
+    /// requests to the *front* of the pending queue in sequence order
+    /// (oldest first — the PR 8 requeue discipline), and reap the reader.
+    fn evict_slot(&mut self, slot: usize) {
+        let Some(mut conn) = self.slots[slot].conn.take() else { return };
+        conn.dead.store(true, Ordering::Relaxed);
+        let _ = conn.writer.shutdown(std::net::Shutdown::Both);
+        if let Some(h) = conn.reader.take() {
+            let _ = h.join();
+        }
+        let mut drained: Vec<(u64, usize)> = conn.outstanding.lock().unwrap().drain().collect();
+        drained.sort_unstable();
+        for _ in &drained {
+            self.depths.leave(slot);
+        }
+        for &(seq, idx) in drained.iter().rev() {
+            self.pending.push_front((seq, idx));
+        }
+        self.depths.set_alive(slot, false);
+        self.router.evict(slot);
+        self.evictions += 1;
+    }
+
+    /// Detect deaths (reader EOF, silent hang), evict, and optionally
+    /// rejoin respawned nodes.  Re-dispatch of drained requests happens
+    /// in `pump`, which owns the sample slice.
+    pub fn sweep(&mut self, mut respawn: Option<&mut RespawnFn<'_>>) {
+        for slot in 0..self.slots.len() {
+            let Some(conn) = self.slots[slot].conn.as_mut() else { continue };
+            if conn.dead.load(Ordering::Relaxed) {
+                self.evict_slot(slot);
+                continue;
+            }
+            let in_flight = !conn.outstanding.lock().unwrap().is_empty();
+            if in_flight {
+                let seen = Duration::from_micros(conn.last_seen.load(Ordering::Relaxed));
+                let silent = self.epoch.elapsed().saturating_sub(seen);
+                if silent > self.hang_timeout {
+                    self.evict_slot(slot);
+                    continue;
+                }
+                if self.last_heartbeat[slot].elapsed() > self.heartbeat_every {
+                    self.last_heartbeat[slot] = Instant::now();
+                    let seq = self.next_seq;
+                    if write_frame(&mut conn.writer, &Frame::Heartbeat { seq }).is_err() {
+                        self.evict_slot(slot);
+                        continue;
+                    }
+                }
+            }
+        }
+        if let Some(cb) = respawn.as_deref_mut() {
+            for slot in 0..self.slots.len() {
+                if self.slots[slot].conn.is_some() || self.depths.alive(slot) {
+                    continue;
+                }
+                if let Some(addr) = cb(slot) {
+                    self.slots[slot].addr = addr;
+                    if self.connect_slot(slot).is_ok() {
+                        self.router.rejoin(slot);
+                        self.rejoins += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    fn least_loaded_live(&self) -> Option<usize> {
+        (0..self.slots.len())
+            .filter(|&i| self.depths.alive(i) && self.slots[i].conn.is_some())
+            .min_by_key(|&i| self.depths.depth(i))
+    }
+
+    /// Dispatch one request, honoring affinity, liveness, and
+    /// backpressure.  Fails only when every node is dead.
+    fn dispatch(&mut self, seq: u64, idx: usize, sample: &Sample) -> Result<()> {
+        loop {
+            let Some(fallback) = self.least_loaded_live() else {
+                bail!("no live nodes");
+            };
+            let mut slot = self.router.route(sample, &self.depths);
+            if self.slots[slot].conn.is_none() {
+                slot = fallback;
+            }
+            if self.depths.depth(slot) >= self.max_outstanding {
+                if self.depths.depth(fallback) >= self.max_outstanding {
+                    // every live node saturated: wait for replies
+                    thread::sleep(Duration::from_micros(200));
+                    self.sweep(None);
+                    continue;
+                }
+                slot = fallback;
+            }
+            let conn = self.slots[slot].conn.as_mut().expect("routed to empty slot");
+            conn.outstanding.lock().unwrap().insert(seq, idx);
+            self.depths.enter(slot);
+            match write_frame(&mut conn.writer, &Frame::from_sample(seq, sample)) {
+                Ok(()) => return Ok(()),
+                Err(_) => {
+                    conn.outstanding.lock().unwrap().remove(&seq);
+                    self.depths.leave(slot);
+                    self.evict_slot(slot);
+                }
+            }
+        }
+    }
+
+    /// Sweep for deaths, then re-dispatch drained requests in order.
+    pub fn pump(&mut self, samples: &[Sample], respawn: Option<&mut RespawnFn<'_>>) {
+        self.sweep(respawn);
+        while let Some((seq, idx)) = self.pending.pop_front() {
+            // a drained request may have been answered just before death
+            if self.sink.replies.lock().unwrap().contains_key(&seq) {
+                continue;
+            }
+            if self.dispatch(seq, idx, &samples[idx]).is_err() {
+                self.undeliverable += 1;
+            }
+        }
+    }
+
+    /// In-flight request count across all nodes plus requeued work.
+    pub fn outstanding(&self) -> usize {
+        let inflight: usize = self
+            .slots
+            .iter()
+            .filter_map(|s| s.conn.as_ref())
+            .map(|c| c.outstanding.lock().unwrap().len())
+            .sum();
+        inflight + self.pending.len()
+    }
+
+    /// Closed-loop inference: dispatch and wait for the verdict,
+    /// re-routing through node deaths.  30s cap, then an error.
+    pub fn infer(&mut self, sample: &Sample) -> Result<RemoteReply> {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let one = [sample.clone()];
+        self.dispatch(seq, 0, sample)?;
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            {
+                let mut replies = self.sink.replies.lock().unwrap();
+                if let Some(r) = replies.remove(&seq) {
+                    return Ok(r);
+                }
+                let (g, _) =
+                    self.sink.cv.wait_timeout(replies, Duration::from_millis(5)).unwrap();
+                drop(g);
+            }
+            self.pump(&one, None);
+            if Instant::now() > deadline {
+                bail!("infer seq {seq} timed out");
+            }
+        }
+    }
+
+    /// Send `Leave` and close every connection (replies already read).
+    pub fn close(&mut self) {
+        for slot in 0..self.slots.len() {
+            if let Some(conn) = self.slots[slot].conn.as_mut() {
+                let _ = write_frame(&mut conn.writer, &Frame::Leave { node: slot as u64 });
+            }
+            self.evict_slot(slot);
+        }
+    }
+}
+
+/// Multi-node open-loop result: the familiar per-stream report plus
+/// ring/recovery accounting.
+#[derive(Clone, Debug)]
+pub struct NetLoopReport {
+    pub report: OpenLoopReport,
+    pub nodes: usize,
+    pub evictions: u64,
+    pub rejoins: u64,
+    pub ring_epoch: u64,
+}
+
+/// Open-loop Poisson generation against a `NetClient` — the network
+/// analog of `serve::run_open_loop`, with the same gap formula and seed
+/// discipline so offered traffic is comparable across tiers.  The attack
+/// window is measured from each request's *scheduled* arrival, so a
+/// request re-routed through a node death pays its full recovery time.
+pub fn run_open_loop_net(
+    client: &mut NetClient,
+    samples: &[Sample],
+    cfg: &OpenLoopCfg,
+    mut respawn: Option<&mut RespawnFn<'_>>,
+) -> NetLoopReport {
+    let n = samples.len();
+    let mut rng = Rng::new(cfg.seed);
+    let mut offsets = Vec::with_capacity(n);
+    let mut due = 0.0f64;
+    for _ in 0..n {
+        due += -(1.0 - rng.f64()).ln() / cfg.rate_per_sec;
+        offsets.push(due);
+    }
+    let t0 = Instant::now();
+    for i in 0..n {
+        let wait = offsets[i] - t0.elapsed().as_secs_f64();
+        if wait > 0.0 {
+            thread::sleep(Duration::from_secs_f64(wait));
+        }
+        client.pump(samples, respawn.as_deref_mut());
+        let seq = client.next_seq;
+        client.next_seq += 1;
+        debug_assert_eq!(seq as usize, i);
+        if client.dispatch(seq, i, &samples[i]).is_err() {
+            client.undeliverable += 1;
+        }
+    }
+    // Drain: every request must come back, requeue, or prove undeliverable.
+    let drain_deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        client.pump(samples, respawn.as_deref_mut());
+        if client.outstanding() == 0 || Instant::now() > drain_deadline {
+            break;
+        }
+        let replies = client.sink.replies.lock().unwrap();
+        let _ = client.sink.cv.wait_timeout(replies, Duration::from_millis(2));
+    }
+    let wall = t0.elapsed();
+
+    let replies = client.sink.replies.lock().unwrap();
+    let mut windows = Vec::new();
+    let mut queue = Vec::new();
+    let mut service = Vec::new();
+    let mut shed = 0usize;
+    for (i, off) in offsets.iter().enumerate() {
+        let Some(r) = replies.get(&(i as u64)) else { continue };
+        if r.shed {
+            shed += 1;
+            continue;
+        }
+        let w = (r.at - t0).as_secs_f64() - off;
+        windows.push(w.max(0.0));
+        queue.push(r.queue_delay.as_secs_f64());
+        service.push(r.latency.saturating_sub(r.queue_delay).as_secs_f64());
+    }
+    drop(replies);
+    let dropped = n - windows.len() - shed;
+    let report = OpenLoopReport::from_parts(
+        n,
+        dropped,
+        shed,
+        client.rejoins,
+        wall,
+        cfg.rate_per_sec,
+        &windows,
+        &queue,
+        &service,
+        client.nodes(),
+        "ring_affinity",
+    );
+    NetLoopReport {
+        report,
+        nodes: client.nodes(),
+        evictions: client.evictions,
+        rejoins: client.rejoins,
+        ring_epoch: client.router.epoch(),
+    }
+}

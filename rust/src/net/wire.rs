@@ -1,0 +1,345 @@
+//! Binary wire format for the multi-node serving tier.
+//!
+//! Every frame is a 1-byte tag followed by little-endian fixed-width
+//! fields; variable-length sequences (dense/sparse vectors, the affinity
+//! snapshot string) carry a `u32` element count first.  The framing
+//! layer (`net/rpc.rs`) prefixes the encoded payload with a `u32`
+//! length, so the codec here never needs to guess where a frame ends.
+//!
+//! | tag | frame          | payload                                            |
+//! |-----|----------------|----------------------------------------------------|
+//! | 1   | `Infer`        | seq u64, dense `[f32]`, sparse `[u64]`, label f32  |
+//! | 2   | `Reply`        | seq, prob f32, latency/queue ns u64, shed u8, gauge|
+//! | 3   | `Heartbeat`    | seq u64                                            |
+//! | 4   | `HeartbeatAck` | seq u64, gauge                                     |
+//! | 5   | `Join`         | node u64, affinity snapshot JSON string            |
+//! | 6   | `JoinAck`      | node u64, ok u8                                    |
+//! | 7   | `Leave`        | node u64                                           |
+//! | 8   | `Shutdown`     | —                                                  |
+//!
+//! A `NodeGauge` (queue depth, live replicas, served/shed/respawn
+//! counters) piggybacks on every `Reply` and `HeartbeatAck`, giving the
+//! client-side router a remote view of `QueueDepths` without a separate
+//! metrics channel.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::powersys::dataset::{Sample, N_DENSE, N_SPARSE};
+
+pub const TAG_INFER: u8 = 1;
+pub const TAG_REPLY: u8 = 2;
+pub const TAG_HEARTBEAT: u8 = 3;
+pub const TAG_HEARTBEAT_ACK: u8 = 4;
+pub const TAG_JOIN: u8 = 5;
+pub const TAG_JOIN_ACK: u8 = 6;
+pub const TAG_LEAVE: u8 = 7;
+pub const TAG_SHUTDOWN: u8 = 8;
+
+/// Remote load/liveness gauge piggybacked on replies and heartbeat acks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NodeGauge {
+    /// Total queued requests across the node's replicas.
+    pub depth: u32,
+    /// Replicas currently alive under the node's supervisor.
+    pub live: u32,
+    /// Infer requests accepted by the node so far.
+    pub served: u64,
+    /// Requests shed by the node's admission guard.
+    pub shed: u64,
+    /// Replica respawns performed by the node's supervisor.
+    pub respawns: u64,
+}
+
+/// One RPC frame.  See the module table for the wire layout.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Infer { seq: u64, dense: Vec<f32>, sparse: Vec<u64>, label: f32 },
+    Reply {
+        seq: u64,
+        prob: f32,
+        latency_ns: u64,
+        queue_delay_ns: u64,
+        shed: bool,
+        gauge: NodeGauge,
+    },
+    Heartbeat { seq: u64 },
+    HeartbeatAck { seq: u64, gauge: NodeGauge },
+    Join { node: u64, affinity: String },
+    JoinAck { node: u64, ok: bool },
+    Leave { node: u64 },
+    Shutdown,
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_gauge(buf: &mut Vec<u8>, g: &NodeGauge) {
+    put_u32(buf, g.depth);
+    put_u32(buf, g.live);
+    put_u64(buf, g.served);
+    put_u64(buf, g.shed);
+    put_u64(buf, g.respawns);
+}
+
+/// Bounds-checked little-endian reader over a decoded payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.at + n <= self.buf.len(),
+            "frame truncated: need {n} bytes at offset {} of {}",
+            self.at,
+            self.buf.len()
+        );
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn gauge(&mut self) -> Result<NodeGauge> {
+        Ok(NodeGauge {
+            depth: self.u32()?,
+            live: self.u32()?,
+            served: self.u64()?,
+            shed: self.u64()?,
+            respawns: self.u64()?,
+        })
+    }
+
+    fn count(&mut self) -> Result<usize> {
+        let n = self.u32()? as usize;
+        // Each element is at least one byte; a count beyond the buffer
+        // is corrupt and would otherwise trigger a huge allocation.
+        ensure!(n <= self.buf.len(), "corrupt element count {n}");
+        Ok(n)
+    }
+
+    fn done(&self) -> Result<()> {
+        ensure!(self.at == self.buf.len(), "{} trailing bytes after frame", self.buf.len() - self.at);
+        Ok(())
+    }
+}
+
+impl Frame {
+    /// Build an `Infer` frame from a detector sample.
+    pub fn from_sample(seq: u64, s: &Sample) -> Frame {
+        Frame::Infer {
+            seq,
+            dense: s.dense.to_vec(),
+            sparse: s.sparse.to_vec(),
+            label: s.label,
+        }
+    }
+
+    /// Reconstruct the sample carried by an `Infer` frame.  The attack
+    /// kind is generator-side metadata and does not cross the wire.
+    pub fn sample(&self) -> Result<Sample> {
+        let Frame::Infer { dense, sparse, label, .. } = self else {
+            bail!("sample() on a non-Infer frame");
+        };
+        ensure!(dense.len() == N_DENSE, "dense arity {} != {N_DENSE}", dense.len());
+        ensure!(sparse.len() == N_SPARSE, "sparse arity {} != {N_SPARSE}", sparse.len());
+        let mut d = [0f32; N_DENSE];
+        d.copy_from_slice(dense);
+        let mut sp = [0u64; N_SPARSE];
+        sp.copy_from_slice(sparse);
+        Ok(Sample { dense: d, sparse: sp, label: *label, attack_kind: None })
+    }
+
+    /// Append the binary encoding of this frame to `buf`.
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            Frame::Infer { seq, dense, sparse, label } => {
+                buf.push(TAG_INFER);
+                put_u64(buf, *seq);
+                put_u32(buf, dense.len() as u32);
+                for v in dense {
+                    put_f32(buf, *v);
+                }
+                put_u32(buf, sparse.len() as u32);
+                for v in sparse {
+                    put_u64(buf, *v);
+                }
+                put_f32(buf, *label);
+            }
+            Frame::Reply { seq, prob, latency_ns, queue_delay_ns, shed, gauge } => {
+                buf.push(TAG_REPLY);
+                put_u64(buf, *seq);
+                put_f32(buf, *prob);
+                put_u64(buf, *latency_ns);
+                put_u64(buf, *queue_delay_ns);
+                buf.push(*shed as u8);
+                put_gauge(buf, gauge);
+            }
+            Frame::Heartbeat { seq } => {
+                buf.push(TAG_HEARTBEAT);
+                put_u64(buf, *seq);
+            }
+            Frame::HeartbeatAck { seq, gauge } => {
+                buf.push(TAG_HEARTBEAT_ACK);
+                put_u64(buf, *seq);
+                put_gauge(buf, gauge);
+            }
+            Frame::Join { node, affinity } => {
+                buf.push(TAG_JOIN);
+                put_u64(buf, *node);
+                put_u32(buf, affinity.len() as u32);
+                buf.extend_from_slice(affinity.as_bytes());
+            }
+            Frame::JoinAck { node, ok } => {
+                buf.push(TAG_JOIN_ACK);
+                put_u64(buf, *node);
+                buf.push(*ok as u8);
+            }
+            Frame::Leave { node } => {
+                buf.push(TAG_LEAVE);
+                put_u64(buf, *node);
+            }
+            Frame::Shutdown => buf.push(TAG_SHUTDOWN),
+        }
+    }
+
+    /// Decode one frame from an exact payload slice (no length prefix).
+    pub fn decode(buf: &[u8]) -> Result<Frame> {
+        let mut c = Cursor { buf, at: 0 };
+        let tag = c.u8()?;
+        let f = match tag {
+            TAG_INFER => {
+                let seq = c.u64()?;
+                let nd = c.count()?;
+                let mut dense = Vec::with_capacity(nd);
+                for _ in 0..nd {
+                    dense.push(c.f32()?);
+                }
+                let ns = c.count()?;
+                let mut sparse = Vec::with_capacity(ns);
+                for _ in 0..ns {
+                    sparse.push(c.u64()?);
+                }
+                let label = c.f32()?;
+                Frame::Infer { seq, dense, sparse, label }
+            }
+            TAG_REPLY => Frame::Reply {
+                seq: c.u64()?,
+                prob: c.f32()?,
+                latency_ns: c.u64()?,
+                queue_delay_ns: c.u64()?,
+                shed: c.u8()? != 0,
+                gauge: c.gauge()?,
+            },
+            TAG_HEARTBEAT => Frame::Heartbeat { seq: c.u64()? },
+            TAG_HEARTBEAT_ACK => Frame::HeartbeatAck { seq: c.u64()?, gauge: c.gauge()? },
+            TAG_JOIN => {
+                let node = c.u64()?;
+                let n = c.count()?;
+                let affinity = String::from_utf8(c.take(n)?.to_vec())?;
+                Frame::Join { node, affinity }
+            }
+            TAG_JOIN_ACK => Frame::JoinAck { node: c.u64()?, ok: c.u8()? != 0 },
+            TAG_LEAVE => Frame::Leave { node: c.u64()? },
+            TAG_SHUTDOWN => Frame::Shutdown,
+            t => bail!("unknown frame tag {t}"),
+        };
+        c.done()?;
+        Ok(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: Frame) {
+        let mut buf = Vec::new();
+        f.encode(&mut buf);
+        let back = Frame::decode(&buf).expect("decode");
+        assert_eq!(f, back);
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        let gauge = NodeGauge { depth: 3, live: 2, served: 77, shed: 1, respawns: 4 };
+        roundtrip(Frame::Infer {
+            seq: 42,
+            dense: vec![0.5, -1.25, f32::MIN_POSITIVE, 0.0, 3.0, 9.5],
+            sparse: vec![0, 1, u64::MAX, 7, 8, 9, 10],
+            label: 1.0,
+        });
+        roundtrip(Frame::Reply {
+            seq: 42,
+            prob: 0.875,
+            latency_ns: 1_234_567,
+            queue_delay_ns: 89,
+            shed: true,
+            gauge,
+        });
+        roundtrip(Frame::Heartbeat { seq: 9 });
+        roundtrip(Frame::HeartbeatAck { seq: 9, gauge });
+        roundtrip(Frame::Join { node: 2, affinity: "{\"slots\":[]}".into() });
+        roundtrip(Frame::JoinAck { node: 2, ok: true });
+        roundtrip(Frame::Leave { node: 5 });
+        roundtrip(Frame::Shutdown);
+    }
+
+    #[test]
+    fn infer_frame_rebuilds_the_sample() {
+        let s = Sample {
+            dense: [0.1, 0.2, 0.3, 0.4, 0.5, 0.6],
+            sparse: [1, 2, 3, 4, 5, 6, 7],
+            label: 1.0,
+            attack_kind: None,
+        };
+        let f = Frame::from_sample(11, &s);
+        let back = f.sample().expect("sample");
+        assert_eq!(s.dense, back.dense);
+        assert_eq!(s.sparse, back.sparse);
+        assert_eq!(s.label.to_bits(), back.label.to_bits());
+    }
+
+    #[test]
+    fn truncated_and_garbage_frames_are_rejected() {
+        let mut buf = Vec::new();
+        Frame::Heartbeat { seq: 1 }.encode(&mut buf);
+        assert!(Frame::decode(&buf[..buf.len() - 1]).is_err(), "truncated accepted");
+        assert!(Frame::decode(&[0xFF, 0, 0]).is_err(), "unknown tag accepted");
+        buf.push(0); // trailing byte
+        assert!(Frame::decode(&buf).is_err(), "trailing bytes accepted");
+        // corrupt element count must not allocate terabytes
+        let mut inf = Vec::new();
+        Frame::Infer { seq: 1, dense: vec![], sparse: vec![], label: 0.0 }.encode(&mut inf);
+        inf[9] = 0xFF;
+        inf[10] = 0xFF;
+        inf[11] = 0xFF;
+        inf[12] = 0xFF;
+        assert!(Frame::decode(&inf).is_err(), "corrupt count accepted");
+    }
+}

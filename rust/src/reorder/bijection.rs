@@ -44,6 +44,33 @@ pub struct IndexBijection {
 /// because unprofiled ids are by definition cold.
 const DENSE_LIMIT: u64 = 32_000_000;
 
+/// Materialize the total permutation for a curated sparse map:
+/// unprofiled ids fill the remaining new-id slots in ascending original
+/// order.  Deterministic given `(rows, map)` — shared by the offline
+/// builder and the snapshot deserializer ([`IndexBijection::from_entries`])
+/// so a bijection shipped to another node applies bit-identically.
+fn totalize(rows: u64, map: &HashMap<u64, u64>) -> Option<Vec<u64>> {
+    if rows > DENSE_LIMIT {
+        return None;
+    }
+    let mut d = vec![u64::MAX; rows as usize];
+    for (&old, &new) in map {
+        d[old as usize] = new;
+    }
+    let mut slot = 0u64;
+    let taken: std::collections::HashSet<u64> = map.values().copied().collect();
+    for old in 0..rows {
+        if d[old as usize] == u64::MAX {
+            while taken.contains(&slot) {
+                slot += 1;
+            }
+            d[old as usize] = slot;
+            slot += 1;
+        }
+    }
+    Some(d)
+}
+
 impl IndexBijection {
     /// Identity bijection (reordering disabled — the ablation arm).
     pub fn identity(rows: u64) -> IndexBijection {
@@ -126,26 +153,7 @@ impl IndexBijection {
         }
         // 4) totalize: unprofiled ids fill the remaining slots in
         //    ascending order (locality-preserving tail)
-        let dense = if rows <= DENSE_LIMIT {
-            let mut d = vec![u64::MAX; rows as usize];
-            for (&old, &new) in &map {
-                d[old as usize] = new;
-            }
-            let mut slot = 0u64;
-            let taken: std::collections::HashSet<u64> = map.values().copied().collect();
-            for old in 0..rows {
-                if d[old as usize] == u64::MAX {
-                    while taken.contains(&slot) {
-                        slot += 1;
-                    }
-                    d[old as usize] = slot;
-                    slot += 1;
-                }
-            }
-            Some(d)
-        } else {
-            None
-        };
+        let dense = totalize(rows, &map);
         IndexBijection {
             map,
             dense,
@@ -177,6 +185,31 @@ impl IndexBijection {
     /// Number of explicitly remapped ids.
     pub fn mapped(&self) -> usize {
         self.map.len()
+    }
+
+    /// The curated `(old, new)` pairs, sorted by old id — a canonical
+    /// order despite the backing `HashMap`, so serialized snapshots are
+    /// byte-stable across runs.
+    pub fn entries(&self) -> Vec<(u64, u64)> {
+        let mut e: Vec<(u64, u64)> = self.map.iter().map(|(&o, &n)| (o, n)).collect();
+        e.sort_unstable();
+        e
+    }
+
+    /// Rebuild a bijection from a serialized snapshot
+    /// ([`entries`](Self::entries) plus the summary stats).  The dense
+    /// materialization is re-derived with the same `totalize` pass the
+    /// builder uses, so `apply` is bit-identical to the original.
+    pub fn from_entries(
+        rows: u64,
+        n_hot: usize,
+        n_communities: usize,
+        modularity: f64,
+        entries: &[(u64, u64)],
+    ) -> IndexBijection {
+        let map: HashMap<u64, u64> = entries.iter().copied().collect();
+        let dense = totalize(rows, &map);
+        IndexBijection { map, dense, rows, n_hot, n_communities, modularity }
     }
 }
 
@@ -279,6 +312,31 @@ mod tests {
         let bij = IndexBijection::identity(100);
         for i in 0..100 {
             assert_eq!(bij.apply(i), i);
+        }
+    }
+
+    #[test]
+    fn entries_snapshot_rebuilds_bit_identically() {
+        let mut rng = Rng::new(4);
+        let batches = sample_batches(&mut rng, 30, 32, 4000);
+        let refs: Vec<&[u64]> = batches.iter().map(|b| b.as_slice()).collect();
+        let bij = IndexBijection::build(4000, &refs, 0.2);
+        let back = IndexBijection::from_entries(
+            bij.rows,
+            bij.n_hot,
+            bij.n_communities,
+            bij.modularity,
+            &bij.entries(),
+        );
+        for old in 0..4000 {
+            assert_eq!(bij.apply(old), back.apply(old), "remap drifted at {old}");
+        }
+        assert_eq!(bij.entries(), back.entries(), "entries not canonical");
+        // an identity snapshot stays identity
+        let id = IndexBijection::identity(64);
+        let id2 = IndexBijection::from_entries(64, 0, 0, 0.0, &id.entries());
+        for old in 0..64 {
+            assert_eq!(id2.apply(old), old);
         }
     }
 }

@@ -2,8 +2,11 @@
 //! `--fault-*` CLI; off by default).
 //!
 //! A [`FaultPlan`] schedules four serving faults — replica panic, worker
-//! stall, reply-channel sever, queue flood — and two training faults —
-//! per-round stragglers and a permanently dead worker.  Every decision
+//! stall, reply-channel sever, queue flood — two training faults —
+//! per-round stragglers and a permanently dead worker — and one
+//! network-tier fault — a whole-node kill (`kill_node`) that stops a
+//! `net::NodeServer` mid-stream so the remote router's eviction +
+//! requeue path gets chaos coverage.  Every decision
 //! is a **stateless hash** of `(seed, fault kind, actor, sequence)`
 //! rather than a draw from a shared sequential PRNG, so fault schedules
 //! are reproducible regardless of thread interleaving: the same seed
@@ -33,6 +36,7 @@ const K_STALL: u64 = 0x02;
 const K_SEVER: u64 = 0x03;
 const K_FLOOD: u64 = 0x04;
 const K_STRAGGLE: u64 = 0x05;
+const K_NODEKILL: u64 = 0x06;
 
 /// `[fault]` section of the run config (+ the matching `--fault-*`
 /// flags).  Everything defaults to off: rates 0, no deterministic kill,
@@ -73,6 +77,16 @@ pub struct FaultCfg {
     /// (its shard re-routes to the surviving workers from then on).
     pub dead_worker: Option<usize>,
     pub dead_round: u64,
+    /// Serving-tier node kill (`net::NodeServer`): node `kill_node`'s
+    /// first generation stops dead — without replying — once it has
+    /// accepted `node_kill_after` requests AND the seeded
+    /// `(seed, NodeKill, node, served)` verdict lands under
+    /// `node_kill_rate`.  Rate 1.0 makes the threshold deterministic;
+    /// lower rates let the kill point wander (reproducibly) with the
+    /// seed.  A respawned node (generation ≥ 1) is spared.
+    pub kill_node: Option<usize>,
+    pub node_kill_after: u64,
+    pub node_kill_rate: f64,
 }
 
 impl Default for FaultCfg {
@@ -92,6 +106,9 @@ impl Default for FaultCfg {
             straggle_ms: 5,
             dead_worker: None,
             dead_round: 1,
+            kill_node: None,
+            node_kill_after: 8,
+            node_kill_rate: 1.0,
         }
     }
 }
@@ -131,7 +148,7 @@ impl FaultCfg {
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct FaultEvent {
     /// "panic" | "stall" | "sever" | "flood" | "respawn" | "straggle" |
-    /// "dead".
+    /// "dead" | "node_kill".
     pub kind: &'static str,
     /// Replica / worker index the event happened on.
     pub actor: usize,
@@ -224,6 +241,19 @@ impl FaultPlan {
         self.cfg.dead_worker == Some(worker) && round >= self.cfg.dead_round
     }
 
+    /// Serving-node kill verdict: checked by `net::NodeServer` before
+    /// accepting request number `served`.  First generation only (a
+    /// respawned node passes `generation == 1` and is spared), gated by
+    /// the accept-count threshold, then decided by the same stateless
+    /// `(seed, kind, actor, seq)` hash as every other fault — so the
+    /// kill point replays bit-identically under one seed.
+    pub fn node_kill_now(&self, node: u64, generation: u64, served: u64) -> bool {
+        generation == 0
+            && self.cfg.kill_node == Some(node as usize)
+            && served >= self.cfg.node_kill_after
+            && self.roll(K_NODEKILL, node, served) < self.cfg.node_kill_rate
+    }
+
     /// Append to the recovery event log (injection sites + supervisor).
     pub fn record(&self, kind: &'static str, actor: usize, seq: u64) {
         self.log.lock().unwrap().push(FaultEvent { kind, actor, seq });
@@ -264,6 +294,9 @@ mod tests {
             straggle_ms: 2,
             dead_worker: Some(2),
             dead_round: 5,
+            kill_node: Some(1),
+            node_kill_after: 6,
+            node_kill_rate: 1.0,
         }
     }
 
@@ -325,6 +358,34 @@ mod tests {
         assert!(p.worker_dead(2, 5));
         assert!(p.worker_dead(2, 100));
         assert!(!p.worker_dead(0, 100));
+    }
+
+    #[test]
+    fn node_kill_is_seeded_threshold_deterministic_and_spares_respawns() {
+        let p = FaultPlan::new(chaotic()); // kill_node 1, after 6, rate 1.0
+        assert!(!p.node_kill_now(1, 0, 5), "fired below the accept threshold");
+        assert!(p.node_kill_now(1, 0, 6), "rate-1.0 kill must fire at the threshold");
+        assert!(!p.node_kill_now(0, 0, 99), "only the configured node dies");
+        assert!(!p.node_kill_now(1, 1, 99), "respawned generation is spared");
+        // sub-1.0 rates replay identically per seed and diverge across seeds
+        let mk = |seed| {
+            FaultPlan::new(FaultCfg { seed, node_kill_rate: 0.3, ..chaotic() })
+        };
+        let (a, b, c) = (mk(7), mk(7), mk(8));
+        let fire = |p: &Arc<FaultPlan>| {
+            (6..200u64).map(|s| p.node_kill_now(1, 0, s)).collect::<Vec<bool>>()
+        };
+        assert_eq!(fire(&a), fire(&b), "same seed, different node-kill schedule");
+        assert_ne!(fire(&a), fire(&c), "seed did not perturb the node-kill schedule");
+        // the new kind domain leaves existing schedules unperturbed
+        let base = FaultPlan::new(FaultCfg { kill_node: None, ..chaotic() });
+        for seq in 0..200u64 {
+            assert_eq!(a.sever_reply(seq), base.sever_reply(seq));
+            assert_eq!(a.flood_burst(seq), base.flood_burst(seq));
+        }
+        // defaults keep the fault off entirely
+        let quiet = FaultPlan::new(FaultCfg { enabled: true, ..FaultCfg::default() });
+        assert!(!quiet.node_kill_now(0, 0, 1_000_000));
     }
 
     #[test]

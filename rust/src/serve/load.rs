@@ -10,12 +10,17 @@
 //! and service time (pickup → verdict) and summarizes the window
 //! percentiles under load.
 
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::thread;
 use std::time::{Duration, Instant};
 
+use anyhow::{Context, Result};
+
 use crate::powersys::dataset::Sample;
+use crate::serve::router::policy_static;
 use crate::serve::server::{Reply, StreamingServer};
+use crate::util::json::Json;
 use crate::util::prng::Rng;
 use crate::util::stats::percentile;
 
@@ -29,7 +34,7 @@ pub struct OpenLoopCfg {
 }
 
 /// What an open-loop run measured.
-#[derive(Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct OpenLoopReport {
     /// Requests the generator offered (== `samples.len()`).
     pub offered: usize,
@@ -76,6 +81,165 @@ pub struct OpenLoopReport {
     pub window_samples: Vec<f64>,
 }
 
+impl OpenLoopReport {
+    /// Assemble a report from raw per-request samples **in arrival
+    /// order** (windows/queue/service each hold one entry per served,
+    /// non-shed request).  This is the single statistics path shared by
+    /// the in-process generator and the multi-node one
+    /// (`net::run_open_loop_net`), so their percentile discipline —
+    /// tail over the second half in arrival order, mean over the sorted
+    /// vector — can never drift apart.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_parts(
+        offered: usize,
+        dropped: usize,
+        shed: usize,
+        respawns: u64,
+        wall: Duration,
+        offered_rate: f64,
+        windows_arrival: &[f64],
+        queue_arrival: &[f64],
+        service_arrival: &[f64],
+        replicas: usize,
+        policy: &'static str,
+    ) -> OpenLoopReport {
+        if windows_arrival.is_empty() {
+            // every reply channel disconnected or shed: report the counts
+            // with zeroed latency stats instead of dividing by nothing
+            return OpenLoopReport {
+                offered,
+                served: 0,
+                dropped,
+                shed,
+                respawns,
+                wall,
+                offered_rate,
+                achieved_rate: 0.0,
+                mean_window: Duration::ZERO,
+                p50_window: Duration::ZERO,
+                p99_window: Duration::ZERO,
+                max_window: Duration::ZERO,
+                mean_queue_delay: Duration::ZERO,
+                p99_queue_delay: Duration::ZERO,
+                mean_service: Duration::ZERO,
+                p99_service: Duration::ZERO,
+                replicas,
+                policy,
+                tail_p99_window: Duration::ZERO,
+                window_samples: Vec::new(),
+            };
+        }
+        let d = |s: f64| Duration::from_secs_f64(s.max(0.0));
+        // post-recovery tail: p99 over the second half of served requests
+        // in arrival order (a kill/respawn arm's recovered steady state)
+        let mut tail: Vec<f64> = windows_arrival[windows_arrival.len() / 2..].to_vec();
+        tail.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let tail_p99_window = d(percentile(&tail, 0.99));
+
+        let mut windows = windows_arrival.to_vec();
+        let mut queue = queue_arrival.to_vec();
+        let mut service = service_arrival.to_vec();
+        for v in [&mut windows, &mut queue, &mut service] {
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+
+        OpenLoopReport {
+            offered,
+            served: windows.len() as u64,
+            dropped,
+            shed,
+            respawns,
+            wall,
+            offered_rate,
+            achieved_rate: windows.len() as f64 / wall.as_secs_f64().max(1e-12),
+            mean_window: d(mean(&windows)),
+            p50_window: d(percentile(&windows, 0.50)),
+            p99_window: d(percentile(&windows, 0.99)),
+            max_window: d(*windows.last().unwrap()),
+            mean_queue_delay: d(mean(&queue)),
+            p99_queue_delay: d(percentile(&queue, 0.99)),
+            mean_service: d(mean(&service)),
+            p99_service: d(percentile(&service, 0.99)),
+            replicas,
+            policy,
+            tail_p99_window,
+            window_samples: windows,
+        }
+    }
+
+    /// Serialize for cross-node aggregation.  Durations travel as
+    /// integer nanoseconds (exact below 2^53); floats rely on the
+    /// writer's shortest round-trip form.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        let ns = |d: Duration| Json::Num(d.as_nanos() as f64);
+        m.insert("offered".into(), Json::Num(self.offered as f64));
+        m.insert("served".into(), Json::Num(self.served as f64));
+        m.insert("dropped".into(), Json::Num(self.dropped as f64));
+        m.insert("shed".into(), Json::Num(self.shed as f64));
+        m.insert("respawns".into(), Json::Num(self.respawns as f64));
+        m.insert("wall_ns".into(), ns(self.wall));
+        m.insert("offered_rate".into(), Json::Num(self.offered_rate));
+        m.insert("achieved_rate".into(), Json::Num(self.achieved_rate));
+        m.insert("mean_window_ns".into(), ns(self.mean_window));
+        m.insert("p50_window_ns".into(), ns(self.p50_window));
+        m.insert("p99_window_ns".into(), ns(self.p99_window));
+        m.insert("max_window_ns".into(), ns(self.max_window));
+        m.insert("mean_queue_delay_ns".into(), ns(self.mean_queue_delay));
+        m.insert("p99_queue_delay_ns".into(), ns(self.p99_queue_delay));
+        m.insert("mean_service_ns".into(), ns(self.mean_service));
+        m.insert("p99_service_ns".into(), ns(self.p99_service));
+        m.insert("replicas".into(), Json::Num(self.replicas as f64));
+        m.insert("policy".into(), Json::Str(self.policy.to_string()));
+        m.insert("tail_p99_window_ns".into(), ns(self.tail_p99_window));
+        m.insert(
+            "window_samples".into(),
+            Json::Arr(self.window_samples.iter().map(|&w| Json::Num(w)).collect()),
+        );
+        Json::Obj(m)
+    }
+
+    /// Parse a report serialized by [`to_json`](Self::to_json).
+    pub fn from_json(j: &Json) -> Result<OpenLoopReport> {
+        let f = |k: &str| j.get(k).and_then(Json::as_f64).context(format!("missing {k}"));
+        let u = |k: &str| j.get(k).and_then(Json::as_u64).context(format!("missing {k}"));
+        let zu = |k: &str| j.get(k).and_then(Json::as_usize).context(format!("missing {k}"));
+        let dur = |k: &str| u(k).map(Duration::from_nanos);
+        let windows = j
+            .get("window_samples")
+            .and_then(Json::as_arr)
+            .context("missing window_samples")?
+            .iter()
+            .map(|w| w.as_f64().context("non-numeric window sample"))
+            .collect::<Result<Vec<f64>>>()?;
+        Ok(OpenLoopReport {
+            offered: zu("offered")?,
+            served: u("served")?,
+            dropped: zu("dropped")?,
+            shed: zu("shed")?,
+            respawns: u("respawns")?,
+            wall: dur("wall_ns")?,
+            offered_rate: f("offered_rate")?,
+            achieved_rate: f("achieved_rate")?,
+            mean_window: dur("mean_window_ns")?,
+            p50_window: dur("p50_window_ns")?,
+            p99_window: dur("p99_window_ns")?,
+            max_window: dur("max_window_ns")?,
+            mean_queue_delay: dur("mean_queue_delay_ns")?,
+            p99_queue_delay: dur("p99_queue_delay_ns")?,
+            mean_service: dur("mean_service_ns")?,
+            p99_service: dur("p99_service_ns")?,
+            replicas: zu("replicas")?,
+            policy: policy_static(
+                j.get("policy").and_then(Json::as_str).context("missing policy")?,
+            ),
+            tail_p99_window: dur("tail_p99_window_ns")?,
+            window_samples: windows,
+        })
+    }
+}
+
 /// Drive `samples` through the server as an open-loop Poisson stream at
 /// `cfg.rate_per_sec`, wait for every verdict, then shut the server
 /// down.  Requests are submitted in order; replies are awaited after the
@@ -114,75 +278,23 @@ pub fn run_open_loop(
     let served: Vec<&Reply> = replies.iter().filter(|r| !r.shed).collect();
     let shed = replies.len() - served.len();
     assert!(lifetime >= served.len() as u64, "replicas lost requests");
-    if served.is_empty() {
-        // every reply channel disconnected or shed: report the counts
-        // with zeroed latency stats instead of dividing by nothing
-        return OpenLoopReport {
-            offered: samples.len(),
-            served: 0,
-            dropped,
-            shed,
-            respawns,
-            wall,
-            offered_rate: cfg.rate_per_sec,
-            achieved_rate: 0.0,
-            mean_window: Duration::ZERO,
-            p50_window: Duration::ZERO,
-            p99_window: Duration::ZERO,
-            max_window: Duration::ZERO,
-            mean_queue_delay: Duration::ZERO,
-            p99_queue_delay: Duration::ZERO,
-            mean_service: Duration::ZERO,
-            p99_service: Duration::ZERO,
-            replicas,
-            policy,
-            tail_p99_window: Duration::ZERO,
-            window_samples: Vec::new(),
-        };
-    }
-
-    let d = |s: f64| Duration::from_secs_f64(s.max(0.0));
-    // post-recovery tail: p99 over the second half of served requests in
-    // arrival order (a kill/respawn arm's recovered steady state)
-    let mut tail: Vec<f64> = served[served.len() / 2..]
-        .iter()
-        .map(|r| r.latency.as_secs_f64())
-        .collect();
-    tail.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let tail_p99_window = d(percentile(&tail, 0.99));
-
-    let mut windows: Vec<f64> = served.iter().map(|r| r.latency.as_secs_f64()).collect();
-    let mut queue: Vec<f64> =
-        served.iter().map(|r| r.queue_delay.as_secs_f64()).collect();
-    let mut service: Vec<f64> =
+    let windows: Vec<f64> = served.iter().map(|r| r.latency.as_secs_f64()).collect();
+    let queue: Vec<f64> = served.iter().map(|r| r.queue_delay.as_secs_f64()).collect();
+    let service: Vec<f64> =
         served.iter().map(|r| r.service_time().as_secs_f64()).collect();
-    for v in [&mut windows, &mut queue, &mut service] {
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    }
-    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
-
-    OpenLoopReport {
-        offered: samples.len(),
-        served: served.len() as u64,
+    OpenLoopReport::from_parts(
+        samples.len(),
         dropped,
         shed,
         respawns,
         wall,
-        offered_rate: cfg.rate_per_sec,
-        achieved_rate: served.len() as f64 / wall.as_secs_f64().max(1e-12),
-        mean_window: d(mean(&windows)),
-        p50_window: d(percentile(&windows, 0.50)),
-        p99_window: d(percentile(&windows, 0.99)),
-        max_window: d(*windows.last().unwrap()),
-        mean_queue_delay: d(mean(&queue)),
-        p99_queue_delay: d(percentile(&queue, 0.99)),
-        mean_service: d(mean(&service)),
-        p99_service: d(percentile(&service, 0.99)),
+        cfg.rate_per_sec,
+        &windows,
+        &queue,
+        &service,
         replicas,
         policy,
-        tail_p99_window,
-        window_samples: windows,
-    }
+    )
 }
 
 /// Await every reply channel in submission order.  A disconnected
@@ -278,5 +390,56 @@ mod tests {
         let (replies, dropped) = drain_replies(vec![rxa]);
         assert!(replies.is_empty());
         assert_eq!(dropped, 1);
+    }
+
+    #[test]
+    fn open_loop_report_round_trips_through_json() {
+        let windows = [0.0011, 0.0007, 0.0042, 0.0009, 0.0013];
+        let queue = [0.0002, 0.0001, 0.0031, 0.0001, 0.0002];
+        let service = [0.0009, 0.0006, 0.0011, 0.0008, 0.0011];
+        let report = OpenLoopReport::from_parts(
+            7,
+            1,
+            1,
+            2,
+            Duration::from_micros(8_765_432),
+            3000.0,
+            &windows,
+            &queue,
+            &service,
+            3,
+            "plan_affinity",
+        );
+        let text = report.to_json().to_string();
+        let back = OpenLoopReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(report, back, "report drifted through JSON");
+        // a second trip is textually stable
+        assert_eq!(text, back.to_json().to_string());
+
+        // the zero-served degenerate form round-trips too
+        let empty = OpenLoopReport::from_parts(
+            4,
+            4,
+            0,
+            0,
+            Duration::from_millis(12),
+            100.0,
+            &[],
+            &[],
+            &[],
+            1,
+            "round_robin",
+        );
+        let back =
+            OpenLoopReport::from_json(&Json::parse(&empty.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(empty, back);
+
+        // unknown policies degrade to "unknown" instead of failing
+        let mut j = report.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("policy".into(), Json::Str("fancy_future_policy".into()));
+        }
+        assert_eq!(OpenLoopReport::from_json(&j).unwrap().policy, "unknown");
     }
 }

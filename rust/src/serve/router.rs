@@ -267,6 +267,20 @@ impl std::str::FromStr for Policy {
     }
 }
 
+/// Intern a policy name parsed from a serialized report back to the
+/// `&'static str` the report structs carry.  Unknown names collapse to
+/// `"unknown"` rather than failing the parse — a router aggregating
+/// reports from a newer node should keep the numbers.
+pub(crate) fn policy_static(name: &str) -> &'static str {
+    match name {
+        "round_robin" => "round_robin",
+        "least_queued" => "least_queued",
+        "plan_affinity" => "plan_affinity",
+        "ring_affinity" => "ring_affinity",
+        _ => "unknown",
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -229,7 +229,7 @@ pub struct StreamingServer {
     supervisor: Option<thread::JoinHandle<()>>,
 }
 
-#[derive(Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ServeReport {
     /// Requests served by THIS `run_stream*` call (stream-only).
     pub served: u64,
@@ -249,6 +249,46 @@ pub struct ServeReport {
     pub replicas: usize,
     /// Route policy that dispatched the stream.
     pub policy: &'static str,
+}
+
+impl ServeReport {
+    /// Serialize for cross-node aggregation (durations as integer
+    /// nanoseconds, exact below 2^53).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        let ns = |d: Duration| Json::Num(d.as_nanos() as f64);
+        m.insert("served".into(), Json::Num(self.served as f64));
+        m.insert("lifetime_served".into(), Json::Num(self.lifetime_served as f64));
+        m.insert("wall_ns".into(), ns(self.wall));
+        m.insert("tps".into(), Json::Num(self.tps));
+        m.insert("mean_latency_ns".into(), ns(self.mean_latency));
+        m.insert("p99_latency_ns".into(), ns(self.p99_latency));
+        m.insert("model_bytes".into(), Json::Num(self.model_bytes as f64));
+        m.insert("replicas".into(), Json::Num(self.replicas as f64));
+        m.insert("policy".into(), Json::Str(self.policy.to_string()));
+        Json::Obj(m)
+    }
+
+    /// Parse a report serialized by [`to_json`](Self::to_json).
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<ServeReport> {
+        use crate::util::json::Json;
+        use anyhow::Context;
+        let u = |k: &str| j.get(k).and_then(Json::as_u64).context(format!("missing {k}"));
+        Ok(ServeReport {
+            served: u("served")?,
+            lifetime_served: u("lifetime_served")?,
+            wall: Duration::from_nanos(u("wall_ns")?),
+            tps: j.get("tps").and_then(Json::as_f64).context("missing tps")?,
+            mean_latency: Duration::from_nanos(u("mean_latency_ns")?),
+            p99_latency: Duration::from_nanos(u("p99_latency_ns")?),
+            model_bytes: u("model_bytes")?,
+            replicas: j.get("replicas").and_then(Json::as_usize).context("missing replicas")?,
+            policy: super::router::policy_static(
+                j.get("policy").and_then(Json::as_str).context("missing policy")?,
+            ),
+        })
+    }
 }
 
 /// One replica incarnation's serve loop.  `my_epoch` retires it once the

@@ -25,6 +25,7 @@ use recad::coordinator::platform::CostModel;
 use recad::data::ctr::{Batch, CtrGenerator};
 use recad::data::schema::DatasetSchema;
 use recad::exec::ExecCfg;
+use recad::net::{run_open_loop_net, NetClient, NodeServer};
 use recad::powersys::dataset::{generate, DatasetCfg, Sample, SparseVocab};
 use recad::runtime::{FaultCfg, FaultPlan};
 use recad::serve::{run_open_loop, OpenLoopCfg, ServeSession};
@@ -200,6 +201,56 @@ fn replica_kill_mid_stream_loses_no_requests() {
     assert!(report.respawns >= 1, "supervisor never respawned the killed replica");
     assert!(plan.event_count("panic") >= 1, "kill fault never fired");
     assert!(plan.event_count("respawn") >= 1, "respawn not logged");
+}
+
+/// (2b) Multi-node: a NODE killed mid-stream loses zero requests.  The
+/// router notices the dead connection, drains its in-flight sequence
+/// numbers back to the FRONT of the pending queue (the PR 8 requeue
+/// discipline, one tier up) and re-routes them to the survivor — every
+/// offered request is served or explicitly shed, never silently dropped.
+#[test]
+fn node_kill_mid_stream_loses_no_requests() {
+    let samples = serve_samples(120);
+    let stream = &samples[..60];
+    let ecfg = EngineCfg::ieee118(1.0 / 2000.0);
+    let engine = NativeDlrm::new(ecfg.clone(), &mut Rng::new(1));
+    let affinity = AccessPlanner::for_engine_cfg(&ecfg).affinity_map();
+    let plan = FaultCfg {
+        enabled: true,
+        seed: 7,
+        kill_node: Some(1),
+        node_kill_after: 5,
+        ..FaultCfg::default()
+    }
+    .plan()
+    .unwrap();
+    let session = ServeSession::from_engine(engine);
+    let n0 =
+        NodeServer::spawn(0, 0, session.clone(), "127.0.0.1:0", Some(plan.clone())).unwrap();
+    let n1 = NodeServer::spawn(1, 0, session, "127.0.0.1:0", Some(plan.clone())).unwrap();
+    let addrs = vec![n0.addr().to_string(), n1.addr().to_string()];
+    let mut client = NetClient::connect(affinity, &addrs, 32, 64)
+        .unwrap()
+        .timeouts(Duration::from_millis(10), Duration::from_millis(200));
+    let nl = run_open_loop_net(
+        &mut client,
+        stream,
+        &OpenLoopCfg { rate_per_sec: 4000.0, seed: 3 },
+        None,
+    );
+    client.close();
+    let report = &nl.report;
+    assert_eq!(report.offered, 60);
+    assert_eq!(
+        report.served as usize + report.shed + report.dropped,
+        report.offered,
+        "request accounting leaked"
+    );
+    assert_eq!(report.dropped, 0, "killed node silently dropped requests");
+    assert!(nl.evictions >= 1, "router never evicted the killed node");
+    assert!(plan.event_count("node_kill") >= 1, "node-kill fault never fired");
+    n0.shutdown();
+    n1.shutdown();
 }
 
 /// (3) Straggler-excluded all-reduce converges within tolerance of full

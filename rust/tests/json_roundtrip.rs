@@ -1,0 +1,127 @@
+//! Serialization pins (ISSUE 9): every artifact the multi-node tier
+//! ships across a process boundary — the affinity snapshot a joining
+//! node validates, the serve/open-loop reports the router aggregates —
+//! must round-trip through `util::json` losslessly: serialize → parse →
+//! equality, and serialize → parse → serialize → string equality.
+
+use std::time::Duration;
+
+use recad::access::{AccessPlanner, AffinityMap};
+use recad::coordinator::engine::EngineCfg;
+use recad::data::ctr::CtrGenerator;
+use recad::data::schema::DatasetSchema;
+use recad::serve::{OpenLoopReport, ServeReport};
+use recad::util::json::Json;
+use recad::util::prng::Rng;
+
+fn ieee_cfg() -> EngineCfg {
+    EngineCfg::ieee118(1.0 / 2000.0)
+}
+
+/// Identity-planner snapshot: shapes only, no bijections.
+#[test]
+fn identity_affinity_map_round_trips() {
+    let map = AccessPlanner::for_engine_cfg(&ieee_cfg()).affinity_map();
+    let j1 = map.to_json().to_string();
+    let parsed = Json::parse(&j1).unwrap();
+    let back = AffinityMap::from_json(&parsed).unwrap();
+    assert_eq!(back.to_json().to_string(), j1, "serialize → parse → serialize drifted");
+    // the ring key is what routing hashes: it must agree everywhere
+    let mut rng = Rng::new(77);
+    for _ in 0..200 {
+        let sparse: Vec<u64> = (0..8).map(|_| rng.below(5000)).collect();
+        assert_eq!(map.key(&sparse), back.key(&sparse), "affinity key diverged");
+    }
+}
+
+/// Profiled-planner snapshot: non-identity bijections must survive the
+/// trip too (entries are canonicalized, the dense remap is re-derived).
+#[test]
+fn profiled_affinity_map_round_trips_with_bijections() {
+    let cfg = EngineCfg {
+        dense_dim: 4,
+        emb_dim: 8,
+        tables: vec![(1500, true), (60, false)],
+        tt_rank: 4,
+        bot_hidden: vec![16],
+        top_hidden: vec![16],
+        lr: 0.05,
+        tt_opts: Default::default(),
+        exec: Default::default(),
+    };
+    let schema = DatasetSchema {
+        name: "json-test",
+        n_dense: 4,
+        vocabs: vec![1500, 60],
+        emb_dim: 8,
+        zipf_s: 1.2,
+        ft_rank: 8,
+    };
+    let profile = CtrGenerator::new(schema, 31).batches(8, 64);
+    let map = AccessPlanner::with_profile(&cfg, &profile, 0.1).affinity_map();
+    let j1 = map.to_json().to_string();
+    let back = AffinityMap::from_json(&Json::parse(&j1).unwrap()).unwrap();
+    assert_eq!(back.to_json().to_string(), j1);
+    let mut rng = Rng::new(13);
+    for _ in 0..200 {
+        let sparse: Vec<u64> = (0..2).map(|_| rng.below(1500)).collect();
+        assert_eq!(map.key(&sparse), back.key(&sparse), "profiled key diverged");
+    }
+}
+
+#[test]
+fn serve_report_round_trips() {
+    let want = ServeReport {
+        served: 480,
+        lifetime_served: 500,
+        wall: Duration::from_micros(1_234_567),
+        tps: 388.8,
+        mean_latency: Duration::from_nanos(41_000),
+        p99_latency: Duration::from_nanos(987_654),
+        model_bytes: 123_456,
+        replicas: 3,
+        policy: "plan_affinity",
+    };
+    let s = want.to_json().to_string();
+    let got = ServeReport::from_json(&Json::parse(&s).unwrap()).unwrap();
+    assert_eq!(want, got);
+    assert_eq!(got.to_json().to_string(), s);
+}
+
+#[test]
+fn open_loop_report_round_trips() {
+    let want = OpenLoopReport {
+        offered: 300,
+        served: 290,
+        dropped: 4,
+        shed: 6,
+        respawns: 1,
+        wall: Duration::from_millis(750),
+        offered_rate: 400.0,
+        achieved_rate: 386.7,
+        mean_window: Duration::from_micros(900),
+        p50_window: Duration::from_micros(700),
+        p99_window: Duration::from_micros(4_500),
+        max_window: Duration::from_micros(9_000),
+        mean_queue_delay: Duration::from_micros(300),
+        p99_queue_delay: Duration::from_micros(2_000),
+        mean_service: Duration::from_micros(600),
+        p99_service: Duration::from_micros(2_500),
+        replicas: 2,
+        policy: "ring_affinity",
+        tail_p99_window: Duration::from_micros(3_800),
+        window_samples: vec![0.0007, 0.0009, 0.0045],
+    };
+    let s = want.to_json().to_string();
+    let got = OpenLoopReport::from_json(&Json::parse(&s).unwrap()).unwrap();
+    assert_eq!(want, got);
+    assert_eq!(got.to_json().to_string(), s);
+    // unknown policies come back as the static "unknown" sentinel rather
+    // than an error (forward compatibility across report versions)
+    let mut doctored = want.clone();
+    doctored.policy = "round_robin";
+    let mut j = doctored.to_json().to_string();
+    j = j.replace("round_robin", "future_policy");
+    let lenient = OpenLoopReport::from_json(&Json::parse(&j).unwrap()).unwrap();
+    assert_eq!(lenient.policy, "unknown");
+}

@@ -1,0 +1,136 @@
+//! Multi-node serving tier acceptance pins (ISSUE 9):
+//!
+//! 1. **Loopback == in-process, bitwise.**  The same trained session
+//!    served through `recad node` TCP loopback nodes must return the
+//!    exact verdict bits of the in-process `ServeSession`, for 1, 2 and
+//!    3 nodes — the wire, the ring and the router add zero numeric
+//!    drift.
+//! 2. **Bounded rebalancing at the router level.**  Evicting one of n
+//!    nodes re-routes only the dead node's keys (≤ 2/n of a sampled
+//!    workload); surviving-node keys never move, and a rejoin snaps
+//!    every key back to its original owner.
+//! 3. **Deterministic routing per ring epoch.**  The same sparse vector
+//!    routes to the same node for as long as membership is unchanged.
+
+use recad::access::AccessPlanner;
+use recad::coordinator::engine::{EngineCfg, NativeDlrm};
+use recad::net::{HashRing, NetClient, NodeServer, RemoteRouter};
+use recad::powersys::dataset::{generate, DatasetCfg, Sample, SparseVocab};
+use recad::serve::ServeSession;
+use recad::util::prng::Rng;
+
+fn serve_samples(n: usize) -> Vec<Sample> {
+    generate(&DatasetCfg {
+        n_normal: n,
+        n_attack: n / 4,
+        vocab: SparseVocab::ieee118(1.0 / 2000.0),
+        n_profiles: 10,
+        noise_std: 0.005,
+        seed: 2,
+    })
+    .samples
+}
+
+/// (1) Verdict bits served over loopback TCP equal the in-process
+/// session's, for every node count — training is seeded, so every node
+/// holds the identical engine and any ring placement is equivalent.
+#[test]
+fn loopback_nodes_match_in_process_session_bitwise() {
+    let samples = serve_samples(60);
+    let stream = &samples[..24];
+    let ecfg = EngineCfg::ieee118(1.0 / 2000.0);
+    let engine = NativeDlrm::new(ecfg.clone(), &mut Rng::new(1));
+    let affinity = AccessPlanner::for_engine_cfg(&ecfg).affinity_map();
+    let base = ServeSession::from_engine(engine);
+    let want: Vec<u32> = {
+        let server = base.clone().start();
+        let b = stream.iter().map(|s| server.infer(s).prob.to_bits()).collect();
+        let _ = server.shutdown();
+        b
+    };
+    for n in 1..=3usize {
+        let nodes: Vec<NodeServer> = (0..n)
+            .map(|i| {
+                NodeServer::spawn(i as u64, 0, base.clone(), "127.0.0.1:0", None).unwrap()
+            })
+            .collect();
+        let addrs: Vec<String> = nodes.iter().map(|nd| nd.addr().to_string()).collect();
+        let mut client = NetClient::connect(affinity.clone(), &addrs, 32, 64).unwrap();
+        let got: Vec<u32> = stream
+            .iter()
+            .map(|s| client.infer(s).unwrap().prob.to_bits())
+            .collect();
+        assert_eq!(want, got, "{n}-node loopback verdicts diverged from in-process");
+        client.close();
+        for nd in nodes {
+            nd.shutdown();
+        }
+    }
+}
+
+/// (2 + 3) Router-level rebalancing bound over REAL workload keys (the
+/// affinity key of each sample's sparse vector, the exact key `pick`
+/// hashes): eviction moves only the dead node's share, survivors hold
+/// every key they had, rejoin restores the original routing bit for bit.
+#[test]
+fn router_eviction_moves_bounded_fraction_and_rejoin_snaps_back() {
+    let ecfg = EngineCfg::ieee118(1.0 / 2000.0);
+    let affinity = AccessPlanner::for_engine_cfg(&ecfg).affinity_map();
+    let samples = serve_samples(600);
+    for n in [2usize, 3, 4] {
+        let router = RemoteRouter::new(affinity.clone(), n, 64);
+        let before: Vec<usize> = samples.iter().map(|s| router.pick(&s.sparse)).collect();
+        // deterministic within an epoch
+        let again: Vec<usize> = samples.iter().map(|s| router.pick(&s.sparse)).collect();
+        assert_eq!(before, again, "routing not deterministic within an epoch");
+        let epoch0 = router.epoch();
+        assert!(router.evict(n - 1));
+        assert_eq!(router.epoch(), epoch0 + 1, "eviction must bump the epoch");
+        let mut moved = 0usize;
+        for (s, &b) in samples.iter().zip(&before) {
+            let now = router.pick(&s.sparse);
+            if b == n - 1 {
+                moved += 1;
+                assert_ne!(now, n - 1, "key still routed to the evicted node");
+            } else {
+                assert_eq!(now, b, "surviving-node key moved on eviction");
+            }
+        }
+        let bound = 2.0 * samples.len() as f64 / n as f64;
+        assert!(
+            (moved as f64) <= bound,
+            "n={n}: eviction moved {moved}/{} keys (bound {bound:.0})",
+            samples.len()
+        );
+        assert!(moved > 0, "n={n}: the evicted node owned no sampled keys");
+        assert!(router.rejoin(n - 1));
+        assert_eq!(router.epoch(), epoch0 + 2);
+        let back: Vec<usize> = samples.iter().map(|s| router.pick(&s.sparse)).collect();
+        assert_eq!(before, back, "rejoin did not snap keys back to their owners");
+    }
+}
+
+/// The ring the router builds is the library ring: spot-check the same
+/// membership through the public `HashRing` API so the property holds
+/// for arbitrary u64 keys, not only affinity keys.
+#[test]
+fn public_ring_agrees_with_itself_across_epochs() {
+    let mut ring = HashRing::with_nodes(64, &[0, 1, 2]);
+    let keys: Vec<u64> = (0..4096u64).map(|k| k.wrapping_mul(0x9E37_79B9)).collect();
+    let before: Vec<u64> = keys.iter().map(|&k| ring.node_for(k).unwrap()).collect();
+    assert!(ring.remove(1));
+    let mut moved = 0usize;
+    for (&k, &b) in keys.iter().zip(&before) {
+        let now = ring.node_for(k).unwrap();
+        if b == 1 {
+            moved += 1;
+        } else {
+            assert_eq!(now, b, "survivor key moved");
+        }
+        assert_ne!(now, 1);
+    }
+    assert!(moved > 0 && (moved as f64) <= 2.0 * keys.len() as f64 / 3.0);
+    assert!(ring.add(1));
+    let back: Vec<u64> = keys.iter().map(|&k| ring.node_for(k).unwrap()).collect();
+    assert_eq!(before, back, "re-add did not restore the mapping");
+}

@@ -328,6 +328,79 @@ fn fused_plans_match_per_table_bitwise() {
     assert_eq!(bits(&run(false)), bits(&run(true)), "fused training diverged");
 }
 
+/// Fused-class RANKED layouts: with fusion + tiling both on, every
+/// member of a fused class walks its prefix groups in ONE class-wide
+/// heat order (their scheduled prefix sequences agree on every common
+/// prefix), and training through the ranked schedule stays bit-identical
+/// to the untiled, unfused baseline — the layout is pure scheduling
+/// metadata.
+#[test]
+fn fused_ranked_layout_shares_walk_order_and_stays_bit_identical() {
+    let vocab = 1200u64;
+    let cfg = EngineCfg {
+        dense_dim: 4,
+        emb_dim: 8,
+        tables: vec![(vocab, true), (vocab, true), (vocab, true), (40, false)],
+        tt_rank: 4,
+        bot_hidden: vec![16],
+        top_hidden: vec![16],
+        lr: 0.05,
+        tt_opts: EffTtOptions::default(),
+        exec: ExecCfg::serial(),
+    };
+    let batches = tiny_batches(&cfg, 5, 256, 321);
+
+    // plan level: the fused class's members share one walk order
+    let mut planner = AccessPlanner::for_engine_cfg(&cfg);
+    planner.set_layout_policy(256, true);
+    let mut plan = BatchPlan::default();
+    for batch in &batches {
+        planner.plan_into(batch, &mut plan);
+        assert!(plan.fused_stats.sweeps >= 1, "fusion never engaged");
+        let seqs: Vec<Vec<u64>> = (0..3)
+            .map(|t| {
+                let p = plan.tt_plan(t).unwrap();
+                assert!(p.tiled(), "slot {t} missing its layout");
+                let sh = p.shapes().unwrap();
+                p.sched_group_starts()
+                    .iter()
+                    .map(|&g| {
+                        sh.prefix_of(p.uniq_rows[p.sched()[g as usize] as usize])
+                    })
+                    .collect()
+            })
+            .collect();
+        for t in 1..3 {
+            let (a, b) = (&seqs[0], &seqs[t]);
+            let common_a: Vec<u64> =
+                a.iter().copied().filter(|p| b.contains(p)).collect();
+            let common_b: Vec<u64> =
+                b.iter().copied().filter(|p| a.contains(p)).collect();
+            assert!(!common_a.is_empty(), "slots 0/{t} share no prefixes");
+            assert_eq!(
+                common_a, common_b,
+                "slot {t} walks common prefixes in a different order"
+            );
+        }
+    }
+
+    // end-to-end: ranked fused training == untiled unfused, bit for bit,
+    // including the tiny-tile budget that cuts many ranked tiles
+    let run = |cache_kb: usize, fuse: bool| -> Vec<f32> {
+        let mut m = NativeDlrm::new(cfg.clone(), &mut Rng::new(6));
+        let mut planner = AccessPlanner::for_engine_cfg(&cfg);
+        planner.set_layout_policy(cache_kb, fuse);
+        let mut losses = Vec::new();
+        run_prefetched(batches.iter().cloned(), &mut planner, 1, |b, p| {
+            losses.push(m.train_step_planned(b, p))
+        });
+        losses
+    };
+    let base = run(0, false);
+    assert_eq!(bits(&base), bits(&run(256, true)), "ranked fused training diverged");
+    assert_eq!(bits(&base), bits(&run(1, true)), "tiny-tile ranked training diverged");
+}
+
 /// Background bijection refresh mid-epoch must produce the same losses
 /// AND the same detections as the synchronous-compute twin with the same
 /// adoption schedule — while actually recording ingest stall samples.
