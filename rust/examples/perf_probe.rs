@@ -1389,4 +1389,48 @@ fn main() {
     );
     let ft_path = write_bench_json("fault_tolerance", par, &ft_arms);
     println!("wrote {ft_path} ({} arms, JSON round-trip checked)", ft_arms.len());
+
+    // ---- self-lint pass (BENCH_lint.json) -------------------------------
+    let ln_arms = lint_arms();
+    let lx = |key: &str| arm_extra(&ln_arms, "lint_full_crate", key).unwrap_or(-1.0);
+    println!(
+        "recad lint self-run: {:.0} rules over {:.0} files — {:.0} raw site(s), \
+         {:.0} pragma-suppressed, {:.0} surviving (CI gates this to 0)",
+        lx("rules"),
+        lx("files"),
+        lx("findings_raw"),
+        lx("suppressed"),
+        lx("findings_after"),
+    );
+    let ln_path = write_bench_json("lint", par, &ln_arms);
+    println!("wrote {ln_path} ({} arms, JSON round-trip checked)", ln_arms.len());
+}
+
+/// Self-lint arm (BENCH_lint.json): run the `recad lint` determinism &
+/// robustness pass over the crate's own source and report the burn-down
+/// ratchet — sites the rules fired on pre-pragma (`findings_raw`) vs
+/// findings that survive suppression (`findings_after`, gated to zero
+/// by the CI smoke job).  Throughput is files linted per second.
+fn lint_arms() -> Vec<BenchArm> {
+    use recad::analysis::{run_lint, rules::RULES, LintCfg};
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let cfg = LintCfg::default();
+    let reps = if smoke() { 3 } else { 7 };
+    let mut iters = Vec::with_capacity(reps);
+    let mut last = None;
+    for _ in 0..reps {
+        let t = Instant::now();
+        let run = run_lint(root, &cfg, None).expect("lint walk over crate source");
+        iters.push(t.elapsed().as_secs_f64());
+        last = Some(run);
+    }
+    let run = last.expect("at least one lint rep");
+    vec![
+        BenchArm::from_iters("lint_full_crate".into(), 1, &iters, run.files)
+            .with_extra("files", run.files as f64)
+            .with_extra("rules", RULES.len() as f64)
+            .with_extra("findings_raw", run.findings_raw as f64)
+            .with_extra("findings_after", run.findings.len() as f64)
+            .with_extra("suppressed", run.suppressed as f64),
+    ]
 }

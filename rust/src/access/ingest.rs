@@ -60,6 +60,7 @@ where
         let mut pb = PlannedBatch::default();
         let (mut stall_max, mut total) = (0.0f64, 0.0f64);
         while fill(&mut pb.batch) {
+            // lint:allow(D2) plan-stall instrumentation times the real planning call
             let t0 = Instant::now();
             planner.plan_into(&pb.batch, &mut pb.plan);
             let dt = t0.elapsed().as_secs_f64();
@@ -87,6 +88,7 @@ where
                 if !fill(&mut pb.batch) {
                     break;
                 }
+                // lint:allow(D2) plan-stall instrumentation times the real planning call
                 let t0 = Instant::now();
                 planner.plan_into(&pb.batch, &mut pb.plan);
                 let dt = t0.elapsed().as_secs_f64();

@@ -1,0 +1,457 @@
+//! A small Rust lexer for the `recad lint` pass.
+//!
+//! Produces a flat token stream (idents, punctuation, literals,
+//! lifetimes) with 1-based line numbers, discarding comment and string
+//! *content* so rule patterns never fire on prose or log messages.
+//! Comments are still inspected on the way out: `// lint:allow(<rules>)
+//! <reason>` pragmas are collected with the line they annotate.
+//!
+//! This is not a full Rust grammar — it only needs to be faithful
+//! enough that token-sequence rules (`Instant :: now`, `. unwrap (`,
+//! `thread :: spawn`, `unsafe`) see the same shape rustc would, and
+//! that nothing inside strings or comments leaks into the stream.
+//! The tricky corners handled explicitly: nested block comments, raw
+//! and byte strings (`r#"…"#`, `b"…"`, `br#"…"#`), raw identifiers
+//! (`r#fn`), and char-literal vs lifetime disambiguation (`'a'` vs
+//! `'a`).
+
+/// Token kind. Literal content is dropped; only idents and punctuation
+/// carry text the rules match on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Punct,
+    Literal,
+    Lifetime,
+}
+
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Token {
+    pub fn is(&self, text: &str) -> bool {
+        self.text == text
+    }
+    pub fn is_ident(&self, text: &str) -> bool {
+        self.kind == Kind::Ident && self.text == text
+    }
+}
+
+/// A `// lint:allow(<rules>) <reason>` pragma found in a comment.
+///
+/// `file_level` pragmas (`lint:allow-file(...)`) suppress their rules
+/// for the whole file; line pragmas cover their own line (trailing
+/// form) or, when the comment stands alone, the next line that carries
+/// tokens. A pragma with an empty reason is *invalid*: it suppresses
+/// nothing and the rule engine reports it as a finding of its own.
+#[derive(Clone, Debug)]
+pub struct Pragma {
+    pub line: u32,
+    pub rules: Vec<String>,
+    pub reason: String,
+    pub file_level: bool,
+    /// false when the comment contained `lint:allow` but did not parse
+    /// as `lint:allow(<ids>) <reason>` — reported, never applied
+    pub well_formed: bool,
+}
+
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub pragmas: Vec<Pragma>,
+}
+
+/// Multi-character punctuation, longest-match-first. Only sequences
+/// the rules (or their backward scans) care to see as a unit; anything
+/// else falls back to single characters, which is fine for matching.
+const MULTI_PUNCT: &[&str] = &[
+    "..=", "::", "->", "=>", "..", "==", "!=", "<=", ">=", "&&", "||", "<<", ">>", "+=", "-=",
+    "*=", "/=",
+];
+
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut toks: Vec<Token> = Vec::new();
+    let mut pragmas: Vec<Pragma> = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let n = b.len();
+
+    macro_rules! bump_lines {
+        ($slice_start:expr, $slice_end:expr) => {
+            line += b[$slice_start..$slice_end].iter().filter(|&&c| c == b'\n').count() as u32;
+        };
+    }
+
+    while i < n {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_ascii_whitespace() => {
+                i += 1;
+            }
+            b'/' if i + 1 < n && b[i + 1] == b'/' => {
+                // line comment: scan to EOL, check for a pragma
+                let start = i + 2;
+                let mut j = start;
+                while j < n && b[j] != b'\n' {
+                    j += 1;
+                }
+                let body = &src[start..j];
+                if let Some(p) = parse_pragma(body, line) {
+                    pragmas.push(p);
+                }
+                i = j;
+            }
+            b'/' if i + 1 < n && b[i + 1] == b'*' => {
+                // block comment, nesting tracked
+                let mut depth = 1usize;
+                let mut j = i + 2;
+                while j < n && depth > 0 {
+                    if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                        depth += 1;
+                        j += 2;
+                    } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        if b[j] == b'\n' {
+                            line += 1;
+                        }
+                        j += 1;
+                    }
+                }
+                i = j;
+            }
+            b'"' => {
+                let j = scan_string(b, i);
+                bump_lines!(i, j);
+                toks.push(Token { kind: Kind::Literal, text: String::new(), line });
+                i = j;
+            }
+            b'\'' => {
+                // lifetime or char literal
+                let (j, kind, text) = scan_quote(src, b, i);
+                toks.push(Token { kind, text, line });
+                i = j;
+            }
+            c if c.is_ascii_digit() => {
+                let j = scan_number(b, i);
+                toks.push(Token { kind: Kind::Literal, text: String::new(), line });
+                i = j;
+            }
+            c if c == b'_' || c.is_ascii_alphabetic() => {
+                let mut j = i + 1;
+                while j < n && (b[j] == b'_' || b[j].is_ascii_alphanumeric()) {
+                    j += 1;
+                }
+                let ident = &src[i..j];
+                // raw strings / byte strings start with these prefixes
+                if (ident == "r" || ident == "b" || ident == "br") && j < n {
+                    if b[j] == b'"' {
+                        let raw = ident != "b"; // b"…" is an escaped byte string
+                        let e = if raw { scan_raw_string(b, j, 0) } else { scan_string(b, j) };
+                        bump_lines!(j, e);
+                        toks.push(Token { kind: Kind::Literal, text: String::new(), line });
+                        i = e;
+                        continue;
+                    }
+                    if b[j] == b'#' {
+                        let mut hashes = 0usize;
+                        let mut k = j;
+                        while k < n && b[k] == b'#' {
+                            hashes += 1;
+                            k += 1;
+                        }
+                        if k < n && b[k] == b'"' {
+                            let e = scan_raw_string(b, k, hashes);
+                            bump_lines!(j, e);
+                            toks.push(Token { kind: Kind::Literal, text: String::new(), line });
+                            i = e;
+                            continue;
+                        }
+                        if ident == "r" {
+                            // raw identifier r#ident
+                            let mut e = k;
+                            while e < n && (b[e] == b'_' || b[e].is_ascii_alphanumeric()) {
+                                e += 1;
+                            }
+                            toks.push(Token {
+                                kind: Kind::Ident,
+                                text: src[k..e].to_string(),
+                                line,
+                            });
+                            i = e;
+                            continue;
+                        }
+                    }
+                }
+                toks.push(Token { kind: Kind::Ident, text: ident.to_string(), line });
+                i = j;
+            }
+            _ => {
+                let rest = &src[i..];
+                let mut matched = false;
+                for p in MULTI_PUNCT {
+                    if rest.starts_with(p) {
+                        toks.push(Token { kind: Kind::Punct, text: p.to_string(), line });
+                        i += p.len();
+                        matched = true;
+                        break;
+                    }
+                }
+                if !matched {
+                    toks.push(Token {
+                        kind: Kind::Punct,
+                        text: (c as char).to_string(),
+                        line,
+                    });
+                    i += 1;
+                }
+            }
+        }
+    }
+    Lexed { tokens: toks, pragmas }
+}
+
+/// Scan a `"…"` string starting at the opening quote; returns the index
+/// one past the closing quote. Backslash escapes are honored.
+fn scan_string(b: &[u8], start: usize) -> usize {
+    let n = b.len();
+    let mut j = start + 1;
+    while j < n {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    n
+}
+
+/// Scan a raw string whose opening `"` is at `start`, closed by `"`
+/// followed by `hashes` `#` characters. No escapes.
+fn scan_raw_string(b: &[u8], start: usize, hashes: usize) -> usize {
+    let n = b.len();
+    let mut j = start + 1;
+    while j < n {
+        if b[j] == b'"' {
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while k < n && b[k] == b'#' && seen < hashes {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                return k;
+            }
+        }
+        j += 1;
+    }
+    n
+}
+
+/// Number literal: digits plus `_`, type suffixes, hex/bin alpha, a
+/// fractional dot (but not `..` ranges) and exponent signs.
+fn scan_number(b: &[u8], start: usize) -> usize {
+    let n = b.len();
+    let mut j = start;
+    while j < n {
+        let c = b[j];
+        if c == b'_' || c.is_ascii_alphanumeric() {
+            // exponent sign: 1e-3 / 1E+3
+            if (c == b'e' || c == b'E')
+                && j + 1 < n
+                && (b[j + 1] == b'+' || b[j + 1] == b'-')
+                && j > start
+                && b[start] != b'0' // not hex 0xE...
+            {
+                j += 2;
+                continue;
+            }
+            j += 1;
+        } else if c == b'.' {
+            // `1.5` continues the literal, `0..n` does not
+            if j + 1 < n && b[j + 1] == b'.' {
+                return j;
+            }
+            if j + 1 < n && b[j + 1].is_ascii_digit() {
+                j += 1;
+            } else {
+                return j;
+            }
+        } else {
+            return j;
+        }
+    }
+    j
+}
+
+/// `'` disambiguation: `'a` lifetime (kept, rules never match it but
+/// the backward scans must not be confused) vs `'x'` / `'\n'` char
+/// literal.
+fn scan_quote(src: &str, b: &[u8], start: usize) -> (usize, Kind, String) {
+    let n = b.len();
+    let j = start + 1;
+    if j < n && (b[j] == b'_' || b[j].is_ascii_alphabetic()) {
+        // run of ident chars; a closing quote right after means char
+        let mut k = j;
+        while k < n && (b[k] == b'_' || b[k].is_ascii_alphanumeric()) {
+            k += 1;
+        }
+        if k < n && b[k] == b'\'' {
+            return (k + 1, Kind::Literal, String::new());
+        }
+        return (k, Kind::Lifetime, src[j..k].to_string());
+    }
+    if j < n && b[j] == b'\\' {
+        // escaped char literal: scan to closing quote
+        let mut k = j + 1;
+        while k < n && b[k] != b'\'' {
+            k += 1;
+        }
+        return ((k + 1).min(n), Kind::Literal, String::new());
+    }
+    // plain char literal like '+' or unterminated garbage
+    let mut k = j;
+    while k < n && b[k] != b'\'' && b[k] != b'\n' {
+        k += 1;
+    }
+    if k < n && b[k] == b'\'' {
+        (k + 1, Kind::Literal, String::new())
+    } else {
+        (j, Kind::Punct, "'".to_string())
+    }
+}
+
+/// Parse a pragma out of a line-comment body. Returns None when the
+/// comment has nothing to do with lint pragmas.
+fn parse_pragma(body: &str, line: u32) -> Option<Pragma> {
+    let t = body.trim_start();
+    if !t.starts_with("lint:allow") {
+        return None;
+    }
+    let rest = &t["lint:allow".len()..];
+    let (file_level, rest) = match rest.strip_prefix("-file") {
+        Some(r) => (true, r),
+        None => (false, rest),
+    };
+    let malformed = |reason: &str| Pragma {
+        line,
+        rules: Vec::new(),
+        reason: reason.to_string(),
+        file_level,
+        well_formed: false,
+    };
+    let Some(rest) = rest.trim_start().strip_prefix('(') else {
+        return Some(malformed("missing rule list"));
+    };
+    let Some(close) = rest.find(')') else {
+        return Some(malformed("unterminated rule list"));
+    };
+    let rules: Vec<String> = rest[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    let reason = rest[close + 1..].trim().to_string();
+    if rules.is_empty() {
+        return Some(malformed("empty rule list"));
+    }
+    Some(Pragma { line, rules, reason, file_level, well_formed: true })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == Kind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_opaque() {
+        let src = r##"
+            // Instant::now in a comment
+            /* unwrap() in /* nested */ block */
+            let s = "thread::spawn(HashMap)";
+            let r = r#"unsafe "quoted" text"#;
+            let b = b"panic!";
+            real_ident();
+        "##;
+        let ids = idents(src);
+        assert!(ids.contains(&"real_ident".to_string()));
+        for bad in ["Instant", "unwrap", "spawn", "HashMap", "unsafe", "panic"] {
+            assert!(!ids.contains(&bad.to_string()), "leaked {bad}");
+        }
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let toks = lex("fn f<'a>(x: &'a str) { let c = 'x'; let nl = '\\n'; }").tokens;
+        let lifetimes: Vec<_> =
+            toks.iter().filter(|t| t.kind == Kind::Lifetime).collect();
+        assert_eq!(lifetimes.len(), 2);
+        assert_eq!(lifetimes[0].text, "a");
+        let lits = toks.iter().filter(|t| t.kind == Kind::Literal).count();
+        assert_eq!(lits, 2);
+    }
+
+    #[test]
+    fn multi_punct_and_lines() {
+        let toks = lex("a::b\n->c\nd..e").tokens;
+        let t: Vec<(&str, u32)> =
+            toks.iter().map(|t| (t.text.as_str(), t.line)).collect();
+        assert!(t.contains(&("::", 1)));
+        assert!(t.contains(&("->", 2)));
+        assert!(t.contains(&("..", 3)));
+        assert_eq!(toks.last().unwrap().line, 3);
+    }
+
+    #[test]
+    fn ranges_do_not_eat_numbers() {
+        let toks = lex("for i in 0..10 { x[i] = 1.5e-3; }").tokens;
+        let puncts: Vec<_> =
+            toks.iter().filter(|t| t.text == "..").collect();
+        assert_eq!(puncts.len(), 1);
+        let lits = toks.iter().filter(|t| t.kind == Kind::Literal).count();
+        assert_eq!(lits, 3); // 0, 10, 1.5e-3
+    }
+
+    #[test]
+    fn pragma_parsing() {
+        let lx = lex("// lint:allow(D1, D2) iteration feeds a sort\nfoo();");
+        assert_eq!(lx.pragmas.len(), 1);
+        let p = &lx.pragmas[0];
+        assert!(p.well_formed && !p.file_level);
+        assert_eq!(p.rules, vec!["D1".to_string(), "D2".to_string()]);
+        assert_eq!(p.reason, "iteration feeds a sort");
+
+        let lx = lex("// lint:allow-file(D2) wall-clock by design");
+        assert!(lx.pragmas[0].file_level);
+
+        let lx = lex("// lint:allow(D1)"); // no reason: well-formed but empty reason
+        assert!(lx.pragmas[0].well_formed);
+        assert!(lx.pragmas[0].reason.is_empty());
+
+        let lx = lex("// lint:allow D1 forgot parens");
+        assert!(!lx.pragmas[0].well_formed);
+    }
+
+    #[test]
+    fn raw_identifiers() {
+        let ids = idents("let r#fn = 1; r#match(r#fn);");
+        assert_eq!(ids, vec!["let", "fn", "match", "fn"]);
+    }
+}

@@ -1,0 +1,237 @@
+//! `recad lint` — a self-hosted, zero-dependency determinism &
+//! robustness analysis pass over this crate's own source.
+//!
+//! Every performance layer in this repo is only trustworthy because
+//! its tests pin bit-identity, and bit-identity rests on invariants
+//! the compiler does not check: no HashMap-iteration-order leaks into
+//! results, wall-clock only behind `util/clock`, seeded splitmix64 for
+//! every random verdict, no panic paths in request serving, no
+//! unsupervised threads. Those invariants have been violated and
+//! patched reactively before (reorder canonicalization, serve
+//! requeue-on-unwind); this module enforces them statically so the
+//! next concurrency-heavy subsystem cannot regress them silently.
+//!
+//! Pipeline: `lexer` turns each file into a token stream (comments and
+//! string contents dropped; `// lint:allow(...)` pragmas collected),
+//! `walk` finds test-code spans, `rules` runs the D1–D6 patterns and
+//! applies pragmas, `report` renders human/JSON output. `run_lint`
+//! drives the whole pass over `src/**`, `tests/**`, `examples/**`
+//! (sorted traversal — the lint output itself is deterministic).
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+pub mod walk;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::analysis::rules::{lint_file, Finding};
+
+/// Allowlist roots per rule. Paths are relative to the crate root,
+/// '/'-separated; a root is a plain prefix (`src/net/` covers the
+/// directory, `src/util/clock.rs` the file). The `[lint]` config
+/// section *extends* these defaults — the baked-in roots are part of
+/// the invariant, not a suggestion.
+#[derive(Clone, Debug)]
+pub struct LintCfg {
+    /// D2: files allowed to read the wall clock directly
+    pub allow_instant: Vec<String>,
+    /// D3: request-path roots where panicking is banned
+    pub request_paths: Vec<String>,
+    /// D4: roots allowed to spawn raw threads
+    pub allow_spawn: Vec<String>,
+    /// also flag valid pragmas that suppress nothing (off by default:
+    /// useful locally, too brittle for a cross-version CI gate)
+    pub strict_pragmas: bool,
+}
+
+impl Default for LintCfg {
+    fn default() -> LintCfg {
+        LintCfg {
+            allow_instant: vec![
+                "src/util/clock.rs".into(),
+                "src/util/bench.rs".into(),
+                "src/bench_support.rs".into(),
+                "examples/".into(),
+            ],
+            request_paths: vec!["src/net/".into(), "src/serve/".into()],
+            allow_spawn: vec![
+                "src/exec/".into(),
+                "src/serve/server.rs".into(),
+                "src/reorder/online.rs".into(),
+            ],
+            strict_pragmas: false,
+        }
+    }
+}
+
+impl LintCfg {
+    /// Config for linting standalone fixture snippets: every rule is
+    /// in scope regardless of path (fixtures live outside `src/`).
+    pub fn fixture() -> LintCfg {
+        LintCfg {
+            allow_instant: Vec::new(),
+            request_paths: vec!["".into()],
+            allow_spawn: Vec::new(),
+            strict_pragmas: false,
+        }
+    }
+}
+
+/// Result of a full lint pass.
+pub struct LintRun {
+    /// files scanned
+    pub files: usize,
+    /// findings after pragma suppression (plus pragma-misuse findings)
+    pub findings: Vec<Finding>,
+    /// rule hits before pragmas were applied
+    pub findings_raw: usize,
+    /// findings suppressed by a valid pragma
+    pub suppressed: usize,
+}
+
+impl LintRun {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// Lint a single source text. `path` is the normalized relative path
+/// used for rule scoping and reporting; fixtures pass a synthetic one.
+pub fn lint_source(
+    path: &str,
+    src: &str,
+    cfg: &LintCfg,
+    only: Option<&str>,
+) -> rules::FileFindings {
+    let lexed = lexer::lex(src);
+    let mut ff = lint_file(path, &lexed, cfg, only);
+    if let Some(rule) = only {
+        // a rule filter also filters pragma-misuse noise to that rule's
+        // pragmas; simplest faithful form: keep only the chosen rule
+        ff.after.retain(|f| f.rule == rule);
+    }
+    ff
+}
+
+/// Run the full pass over `{root}/src`, `{root}/tests`,
+/// `{root}/examples`. `root` is the crate root (the directory holding
+/// `src/`).
+pub fn run_lint(root: &Path, cfg: &LintCfg, only: Option<&str>) -> Result<LintRun> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for sub in ["src", "tests", "examples"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    files.sort();
+    let mut run = LintRun { files: 0, findings: Vec::new(), findings_raw: 0, suppressed: 0 };
+    for f in &files {
+        let src = fs::read_to_string(f)
+            .with_context(|| format!("lint: reading {}", f.display()))?;
+        let rel = rel_path(root, f);
+        let ff = lint_source(&rel, &src, cfg, only);
+        run.files += 1;
+        run.findings_raw += ff.raw;
+        run.suppressed += ff.suppressed;
+        run.findings.extend(ff.after);
+    }
+    run.findings.sort();
+    Ok(run)
+}
+
+/// Recursively collect `.rs` files, skipping `lint_fixtures/` (known-
+/// bad snippets exercised explicitly by `tests/lint.rs`) and `target/`.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .with_context(|| format!("lint: walking {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if p.is_dir() {
+            if name == "lint_fixtures" || name == "target" {
+                continue;
+            }
+            collect_rs(&p, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, file: &Path) -> String {
+    let rel = file.strip_prefix(root).unwrap_or(file);
+    let parts: Vec<String> = rel
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect();
+    parts.join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_cfg_scopes() {
+        let cfg = LintCfg::default();
+        assert!(rules::path_allowed("src/util/clock.rs", &cfg.allow_instant));
+        assert!(rules::path_allowed("examples/perf_probe.rs", &cfg.allow_instant));
+        assert!(!rules::path_allowed("src/serve/server.rs", &cfg.allow_instant));
+        assert!(rules::path_allowed("src/net/router.rs", &cfg.request_paths));
+        assert!(!rules::path_allowed("src/tt/table.rs", &cfg.request_paths));
+        assert!(rules::path_allowed("src/exec/pool.rs", &cfg.allow_spawn));
+    }
+
+    #[test]
+    fn lint_source_flags_and_filters() {
+        let bad = "fn f() { let t = std::time::Instant::now(); t.elapsed(); }\n";
+        let ff = lint_source("src/x.rs", bad, &LintCfg::default(), None);
+        assert_eq!(ff.after.len(), 1);
+        assert_eq!(ff.after[0].rule, "D2");
+        // rule filter excludes it
+        let ff = lint_source("src/x.rs", bad, &LintCfg::default(), Some("D1"));
+        assert!(ff.after.is_empty());
+        // allowlisted path excludes it
+        let ff = lint_source("src/util/clock.rs", bad, &LintCfg::default(), None);
+        assert!(ff.after.is_empty());
+    }
+
+    #[test]
+    fn pragma_suppresses_with_reason_only() {
+        let cfg = LintCfg::default();
+        let with_reason =
+            "fn f() { let t = Instant::now(); } // lint:allow(D2) bench timing only\n";
+        let ff = lint_source("src/x.rs", with_reason, &cfg, None);
+        assert!(ff.after.is_empty(), "{:?}", ff.after);
+        assert_eq!(ff.raw, 1);
+        assert_eq!(ff.suppressed, 1);
+
+        let no_reason = "fn f() { let t = Instant::now(); } // lint:allow(D2)\n";
+        let ff = lint_source("src/x.rs", no_reason, &cfg, None);
+        // the D2 finding survives AND the empty pragma is reported
+        assert_eq!(ff.after.len(), 2, "{:?}", ff.after);
+        assert!(ff.after.iter().any(|f| f.rule == "D2"));
+        assert!(ff.after.iter().any(|f| f.rule == "pragma"));
+    }
+
+    #[test]
+    fn file_level_pragma_covers_all_lines() {
+        let cfg = LintCfg::default();
+        let src = "\
+// lint:allow-file(D2) this module times sockets; wall-clock by design
+fn a() { let t = Instant::now(); }
+fn b() { let t = Instant::now(); }
+";
+        let ff = lint_source("src/x.rs", src, &cfg, None);
+        assert!(ff.after.is_empty(), "{:?}", ff.after);
+        assert_eq!(ff.suppressed, 2);
+    }
+}

@@ -1,0 +1,120 @@
+//! Human and machine-readable output for `recad lint`.
+//!
+//! The JSON schema (stable, asserted by CI's bench-smoke job via
+//! `BENCH_lint.json` and consumable by editors):
+//!
+//! ```json
+//! {
+//!   "rules": [{"id": "D1", "invariant": "…"}, …],
+//!   "files_scanned": 63,
+//!   "findings_raw": 41,
+//!   "suppressed": 38,
+//!   "findings": [
+//!     {"file": "src/foo.rs", "line": 12, "rule": "D1", "message": "…"}
+//!   ]
+//! }
+//! ```
+//!
+//! `findings` lists only what survives pragma suppression (including
+//! pragma-misuse findings under rule id "pragma"); `findings_raw`
+//! counts rule hits before pragmas — the ratchet CI tracks is
+//! `findings == []` while `findings_raw` stays honest about how many
+//! sites are pragma-justified rather than clean.
+
+use std::collections::BTreeMap;
+
+use crate::analysis::rules::{Finding, RULES};
+use crate::analysis::LintRun;
+use crate::util::json::Json;
+
+/// Render findings for a terminal: grouped by file, `file:line [rule]
+/// message`, with a one-line summary.
+pub fn human(run: &LintRun) -> String {
+    let mut s = String::new();
+    let mut last_file = "";
+    for f in &run.findings {
+        if f.file != last_file {
+            s.push_str(&format!("{}\n", f.file));
+            last_file = &f.file;
+        }
+        s.push_str(&format!("  {}:{} [{}] {}\n", f.file, f.line, f.rule, f.message));
+    }
+    s.push_str(&format!(
+        "lint: {} file(s), {} finding(s) ({} raw, {} pragma-suppressed)\n",
+        run.files,
+        run.findings.len(),
+        run.findings_raw,
+        run.suppressed
+    ));
+    s
+}
+
+fn finding_json(f: &Finding) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("file".to_string(), Json::Str(f.file.clone()));
+    o.insert("line".to_string(), Json::Num(f.line as f64));
+    o.insert("rule".to_string(), Json::Str(f.rule.clone()));
+    o.insert("message".to_string(), Json::Str(f.message.clone()));
+    Json::Obj(o)
+}
+
+/// Serialize a run to the documented JSON schema.
+pub fn to_json(run: &LintRun) -> String {
+    let rules: Vec<Json> = RULES
+        .iter()
+        .map(|&(id, inv)| {
+            let mut o = BTreeMap::new();
+            o.insert("id".to_string(), Json::Str(id.to_string()));
+            o.insert("invariant".to_string(), Json::Str(inv.to_string()));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut o = BTreeMap::new();
+    o.insert("rules".to_string(), Json::Arr(rules));
+    o.insert("files_scanned".to_string(), Json::Num(run.files as f64));
+    o.insert("findings_raw".to_string(), Json::Num(run.findings_raw as f64));
+    o.insert("suppressed".to_string(), Json::Num(run.suppressed as f64));
+    o.insert(
+        "findings".to_string(),
+        Json::Arr(run.findings.iter().map(finding_json).collect()),
+    );
+    Json::Obj(o).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_run() -> LintRun {
+        LintRun {
+            files: 2,
+            findings: vec![Finding {
+                file: "src/a.rs".into(),
+                line: 3,
+                rule: "D1".into(),
+                message: "iteration".into(),
+            }],
+            findings_raw: 4,
+            suppressed: 3,
+        }
+    }
+
+    #[test]
+    fn json_round_trips_through_util_json() {
+        let s = to_json(&sample_run());
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.get("files_scanned").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("findings_raw").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(j.get("rules").unwrap().as_arr().unwrap().len(), RULES.len());
+        let f = j.get("findings").unwrap().idx(0).unwrap();
+        assert_eq!(f.get("rule").unwrap().as_str().unwrap(), "D1");
+        assert_eq!(f.get("line").unwrap().as_usize().unwrap(), 3);
+    }
+
+    #[test]
+    fn human_output_names_every_finding() {
+        let h = human(&sample_run());
+        assert!(h.contains("src/a.rs:3 [D1]"));
+        assert!(h.contains("1 finding(s) (4 raw, 3 pragma-suppressed)"));
+    }
+}

@@ -1,0 +1,536 @@
+//! The six determinism & robustness rules, run over a lexed file.
+//!
+//! Each rule is a token-sequence pattern wired to a failure mode this
+//! repo has actually shipped and fixed reactively (see README "Static
+//! analysis" for the rule table):
+//!
+//! - **D1** — HashMap/HashSet iteration: order-dependent results leak
+//!   into f64 accumulation order and tie-breaks (the PR 3 reorder bug).
+//! - **D2** — `Instant::now` / `SystemTime` outside `util/clock` and
+//!   bench code: untestable wall-clock timing.
+//! - **D3** — `.unwrap()` / `.expect()` / `panic!` / `unreachable!` on
+//!   `net/` + `serve/` request paths: a poisoned mutex or severed
+//!   channel must degrade (shed/requeue), not unwind.
+//! - **D4** — raw `thread::spawn` outside `exec/`, the serve
+//!   supervisor, and `reorder/online.rs`: unsupervised threads escape
+//!   the fault plan.
+//! - **D5** — nondeterministic randomness (`thread_rng`-style,
+//!   `RandomState`, `DefaultHasher`): everything must come from the
+//!   seeded splitmix64 domain.
+//! - **D6** — `unsafe`: every occurrence needs a pragma with a written
+//!   justification (the simd kernels carry theirs).
+//!
+//! D1 is necessarily a heuristic (no type inference): it tracks, per
+//! file, identifiers whose declaration or initializer names
+//! `HashMap`/`HashSet` — through wrapper types like `Arc<Mutex<…>>` —
+//! and flags iteration-order-revealing method calls (`.iter()`,
+//! `.keys()`, `.values()`, `.drain()`, `.retain()`, …) and
+//! `for … in &ident` loops on them. Vec-of-map bindings
+//! (`Vec<HashMap<…>>`) are flagged only when the receiver is indexed
+//! (`adj[v].values()`), since iterating the outer Vec is ordered.
+//! Cross-file flows (a map returned by another module) are out of
+//! scope; the crate-level invariant is enforced where maps are born.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::analysis::lexer::{Kind, Lexed, Pragma, Token};
+use crate::analysis::walk::{in_test_span, test_spans, Span};
+use crate::analysis::LintCfg;
+
+/// Rule ids with one-line invariants, in report order.
+pub const RULES: &[(&str, &str)] = &[
+    ("D1", "no HashMap/HashSet iteration outside pragma'd order-independent uses"),
+    ("D2", "wall-clock (Instant::now/SystemTime) only behind util/clock + bench code"),
+    ("D3", "no unwrap/expect/panic!/unreachable! on net/ + serve/ request paths"),
+    ("D4", "no raw thread::spawn outside exec/, the serve supervisor, reorder/online"),
+    ("D5", "no nondeterministic randomness; splitmix64 is the only entropy source"),
+    ("D6", "every unsafe block carries a lint:allow(D6) justification"),
+];
+
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: String,
+    pub message: String,
+}
+
+/// Outcome of linting one file.
+pub struct FileFindings {
+    /// findings that survive pragma suppression, plus pragma-misuse
+    /// findings (rule id "pragma")
+    pub after: Vec<Finding>,
+    /// rule findings before any pragma was applied
+    pub raw: usize,
+    /// findings suppressed by a valid pragma
+    pub suppressed: usize,
+}
+
+/// Lint one already-lexed file. `only` restricts to a single rule id.
+pub fn lint_file(path: &str, lexed: &Lexed, cfg: &LintCfg, only: Option<&str>) -> FileFindings {
+    let toks = &lexed.tokens;
+    let spans = test_spans(toks);
+    let mut raw: Vec<Finding> = Vec::new();
+
+    let want = |rule: &str| only.map(|o| o == rule).unwrap_or(true);
+
+    if want("D1") {
+        rule_d1(path, toks, &mut raw);
+    }
+    if want("D2") && !path_allowed(path, &cfg.allow_instant) {
+        rule_d2(path, toks, &spans, &mut raw);
+    }
+    if want("D3") && path_allowed(path, &cfg.request_paths) {
+        rule_d3(path, toks, &spans, &mut raw);
+    }
+    if want("D4") && path.starts_with("src/") && !path_allowed(path, &cfg.allow_spawn) {
+        rule_d4(path, toks, &spans, &mut raw);
+    }
+    if want("D5") {
+        rule_d5(path, toks, &mut raw);
+    }
+    if want("D6") {
+        rule_d6(path, toks, &mut raw);
+    }
+    raw.sort();
+
+    apply_pragmas(path, raw, &lexed.pragmas, toks, cfg, only)
+}
+
+/// True when `path` (normalized, '/'-separated, relative) falls under
+/// any allowlist root. Roots are plain prefixes: `src/net/` covers the
+/// directory, `src/util/clock.rs` covers the file.
+pub fn path_allowed(path: &str, roots: &[String]) -> bool {
+    roots.iter().any(|r| !r.is_empty() && path.starts_with(r.as_str()))
+}
+
+// ---------------------------------------------------------------- D1
+
+const D1_METHODS: &[&str] = &[
+    "iter", "iter_mut", "keys", "values", "values_mut", "into_iter", "into_keys",
+    "into_values", "drain", "retain", "retain_mut",
+];
+
+/// Punctuation the backward declaration scan steps over: generics,
+/// references, grouping, paths, macro bangs.
+const D1_SKIP_PUNCT: &[&str] = &["<", ">", ">>", "&", "(", ")", "[", "]", "::", ",", "!", ";"];
+
+/// Wrapper/path idents the scan steps over between the hash type and
+/// its binder: `x: Arc<Mutex<HashMap<…>>>`, `= Some(HashMap::new())`.
+const D1_SKIP_IDENT: &[&str] = &[
+    "mut", "dyn", "Arc", "Rc", "Mutex", "RwLock", "Option", "Box", "RefCell", "Cell",
+    "Some", "std", "sync", "collections", "new", "with_capacity", "default", "from",
+];
+
+/// Idents/punct that mark the binding as vec-of-map rather than a map.
+const D1_VEC_MARKERS: &[&str] = &["Vec", "VecDeque", "vec"];
+
+fn rule_d1(path: &str, toks: &[Token], out: &mut Vec<Finding>) {
+    // pass 1: collect hash-typed bindings (ident -> is_vec_of)
+    let mut bindings: BTreeMap<String, bool> = BTreeMap::new();
+    for i in 0..toks.len() {
+        if !(toks[i].is_ident("HashMap") || toks[i].is_ident("HashSet")) {
+            continue;
+        }
+        let mut vec_of = false;
+        let mut j = i;
+        let mut steps = 0;
+        let binder = loop {
+            if j == 0 || steps > 24 {
+                break None;
+            }
+            j -= 1;
+            steps += 1;
+            let t = &toks[j];
+            match t.kind {
+                Kind::Punct if t.is(":") || t.is("=") => {
+                    break match toks.get(j.wrapping_sub(1)) {
+                        Some(p) if j >= 1 && p.kind == Kind::Ident && !is_keyword(&p.text) => {
+                            Some(p.text.clone())
+                        }
+                        _ => None,
+                    };
+                }
+                Kind::Punct if t.is("[") => {
+                    vec_of = true;
+                }
+                Kind::Punct if D1_SKIP_PUNCT.contains(&t.text.as_str()) => {}
+                Kind::Ident if D1_VEC_MARKERS.contains(&t.text.as_str()) => {
+                    vec_of = true;
+                }
+                Kind::Ident if D1_SKIP_IDENT.contains(&t.text.as_str()) => {}
+                Kind::Lifetime => {}
+                _ => break None,
+            }
+        };
+        if let Some(name) = binder {
+            // a direct binding anywhere in the file outranks vec-of
+            let e = bindings.entry(name).or_insert(vec_of);
+            *e = *e && vec_of;
+        }
+    }
+    if bindings.is_empty() {
+        return;
+    }
+
+    // pass 2a: iteration-method calls, walking the receiver chain
+    for i in 1..toks.len() {
+        if toks[i].kind != Kind::Ident
+            || !D1_METHODS.contains(&toks[i].text.as_str())
+            || !toks[i - 1].is(".")
+            || !toks.get(i + 1).map(|t| t.is("(")).unwrap_or(false)
+        {
+            continue;
+        }
+        for (name, indexed) in receiver_idents(toks, i - 1) {
+            if let Some(&vec_of) = bindings.get(&name) {
+                if !vec_of || indexed {
+                    out.push(Finding {
+                        file: path.to_string(),
+                        line: toks[i].line,
+                        rule: "D1".into(),
+                        message: format!(
+                            "iteration over hash-ordered `{name}` via .{}() — order-dependent",
+                            toks[i].text
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // pass 2b: `for … in [&][mut] ident {` loops
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].is_ident("for") {
+            // find the `in` of this loop header (bounded scan)
+            let mut k = i + 1;
+            let mut found_in = None;
+            while k < toks.len() && k < i + 24 {
+                if toks[k].is_ident("in") {
+                    found_in = Some(k);
+                    break;
+                }
+                if toks[k].is("{") {
+                    break;
+                }
+                k += 1;
+            }
+            if let Some(inpos) = found_in {
+                // expr tokens until `{`
+                let mut expr: Vec<&Token> = Vec::new();
+                let mut k = inpos + 1;
+                while k < toks.len() && k < inpos + 8 && !toks[k].is("{") {
+                    expr.push(&toks[k]);
+                    k += 1;
+                }
+                let idents: Vec<&&Token> =
+                    expr.iter().filter(|t| t.kind == Kind::Ident && !t.is_ident("mut")).collect();
+                let only_ref = expr
+                    .iter()
+                    .all(|t| t.kind == Kind::Ident || t.is("&") || t.is("*"));
+                if only_ref && idents.len() == 1 {
+                    let name = &idents[0].text;
+                    if let Some(&vec_of) = bindings.get(name.as_str()) {
+                        if !vec_of {
+                            out.push(Finding {
+                                file: path.to_string(),
+                                line: toks[i].line,
+                                rule: "D1".into(),
+                                message: format!(
+                                    "for-loop over hash-ordered `{name}` — order-dependent"
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+fn is_keyword(s: &str) -> bool {
+    matches!(
+        s,
+        "let" | "mut" | "ref" | "static" | "const" | "pub" | "fn" | "in" | "if" | "else"
+            | "match" | "return" | "move" | "use" | "type" | "where"
+    )
+}
+
+/// Walk a method-call receiver chain backward from the `.` at `dot`,
+/// collecting every identifier in the chain with a flag for whether it
+/// was indexed (`ident[…]`). `a.b[i].c().iter()` yields c, b (indexed),
+/// a.
+fn receiver_idents(toks: &[Token], dot: usize) -> Vec<(String, bool)> {
+    let mut names = Vec::new();
+    if dot == 0 {
+        return names;
+    }
+    let mut j = dot - 1;
+    let mut indexed_next = false;
+    loop {
+        let t = &toks[j];
+        if t.is(")") || t.is("]") {
+            if t.is("]") {
+                indexed_next = true;
+            }
+            let (open, close) = if t.is(")") { ("(", ")") } else { ("[", "]") };
+            let mut depth = 0i32;
+            loop {
+                let u = &toks[j];
+                if u.is(close) {
+                    depth += 1;
+                } else if u.is(open) {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                if j == 0 {
+                    return names;
+                }
+                j -= 1;
+            }
+            if j == 0 {
+                return names;
+            }
+            j -= 1;
+            continue;
+        }
+        if t.is("?") {
+            if j == 0 {
+                return names;
+            }
+            j -= 1;
+            continue;
+        }
+        if t.kind == Kind::Ident {
+            names.push((t.text.clone(), indexed_next));
+            indexed_next = false;
+            if j >= 1 && (toks[j - 1].is(".") || toks[j - 1].is("::")) {
+                if j < 2 {
+                    return names;
+                }
+                j -= 2;
+                continue;
+            }
+        }
+        return names;
+    }
+}
+
+// ---------------------------------------------------------------- D2
+
+fn rule_d2(path: &str, toks: &[Token], spans: &[Span], out: &mut Vec<Finding>) {
+    for i in 0..toks.len() {
+        let hit = (toks[i].is_ident("Instant")
+            && toks.get(i + 1).map(|t| t.is("::")).unwrap_or(false)
+            && toks.get(i + 2).map(|t| t.is_ident("now")).unwrap_or(false))
+            || toks[i].is_ident("SystemTime");
+        if hit && !in_test_span(spans, toks[i].line) {
+            out.push(Finding {
+                file: path.to_string(),
+                line: toks[i].line,
+                rule: "D2".into(),
+                message: "wall-clock read outside util/clock — untestable timing; \
+                          inject a Clock"
+                    .into(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------- D3
+
+fn rule_d3(path: &str, toks: &[Token], spans: &[Span], out: &mut Vec<Finding>) {
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        let line = t.line;
+        if in_test_span(spans, line) {
+            continue;
+        }
+        let method_panic = i >= 1
+            && toks[i - 1].is(".")
+            && (t.is_ident("unwrap") || t.is_ident("expect"))
+            && toks.get(i + 1).map(|u| u.is("(")).unwrap_or(false);
+        let macro_panic = (t.is_ident("panic")
+            || t.is_ident("unreachable")
+            || t.is_ident("todo")
+            || t.is_ident("unimplemented"))
+            && toks.get(i + 1).map(|u| u.is("!")).unwrap_or(false);
+        if method_panic || macro_panic {
+            out.push(Finding {
+                file: path.to_string(),
+                line,
+                rule: "D3".into(),
+                message: format!(
+                    "`{}` on a request path — poisoned locks / severed channels must \
+                     shed or requeue, not unwind",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------- D4
+
+fn rule_d4(path: &str, toks: &[Token], spans: &[Span], out: &mut Vec<Finding>) {
+    for i in 0..toks.len() {
+        if toks[i].is_ident("thread")
+            && toks.get(i + 1).map(|t| t.is("::")).unwrap_or(false)
+            && toks.get(i + 2).map(|t| t.is_ident("spawn")).unwrap_or(false)
+            && !in_test_span(spans, toks[i].line)
+        {
+            out.push(Finding {
+                file: path.to_string(),
+                line: toks[i].line,
+                rule: "D4".into(),
+                message: "raw thread::spawn outside the supervised roots — escapes \
+                          the fault plan"
+                    .into(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------- D5
+
+const D5_BANNED: &[&str] = &["thread_rng", "ThreadRng", "from_entropy", "RandomState", "DefaultHasher"];
+
+fn rule_d5(path: &str, toks: &[Token], out: &mut Vec<Finding>) {
+    for t in toks {
+        if t.kind == Kind::Ident && D5_BANNED.contains(&t.text.as_str()) {
+            out.push(Finding {
+                file: path.to_string(),
+                line: t.line,
+                rule: "D5".into(),
+                message: format!(
+                    "`{}` is nondeterministic — use util::prng (splitmix64) instead",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------- D6
+
+fn rule_d6(path: &str, toks: &[Token], out: &mut Vec<Finding>) {
+    for t in toks {
+        if t.is_ident("unsafe") {
+            out.push(Finding {
+                file: path.to_string(),
+                line: t.line,
+                rule: "D6".into(),
+                message: "unsafe requires a lint:allow(D6) pragma with a written \
+                          justification"
+                    .into(),
+            });
+        }
+    }
+}
+
+// -------------------------------------------------------- pragmas
+
+/// Apply pragmas to raw findings. Valid pragmas (well-formed, with a
+/// reason) suppress matching rules on their covered lines; invalid
+/// pragmas suppress nothing and are themselves reported under the
+/// synthetic rule id "pragma".
+fn apply_pragmas(
+    path: &str,
+    raw: Vec<Finding>,
+    pragmas: &[Pragma],
+    toks: &[Token],
+    cfg: &LintCfg,
+    only: Option<&str>,
+) -> FileFindings {
+    let token_lines: BTreeSet<u32> = toks.iter().map(|t| t.line).collect();
+    let raw_count = raw.len();
+
+    // (rule, covered line) for line pragmas; rule for file pragmas
+    struct Active<'a> {
+        p: &'a Pragma,
+        lines: Option<(u32, u32)>, // None = whole file; else the two candidate lines
+        used: bool,
+    }
+    let mut active: Vec<Active> = Vec::new();
+    let mut pragma_findings: Vec<Finding> = Vec::new();
+    for p in pragmas {
+        if !p.well_formed {
+            pragma_findings.push(Finding {
+                file: path.to_string(),
+                line: p.line,
+                rule: "pragma".into(),
+                message: format!("malformed lint pragma ({})", p.reason),
+            });
+            continue;
+        }
+        if p.reason.is_empty() {
+            pragma_findings.push(Finding {
+                file: path.to_string(),
+                line: p.line,
+                rule: "pragma".into(),
+                message: "lint:allow pragma without a justification suppresses nothing".into(),
+            });
+            continue;
+        }
+        let lines = if p.file_level {
+            None
+        } else if token_lines.contains(&p.line) {
+            // trailing pragma: covers its own line
+            Some((p.line, p.line))
+        } else {
+            // standalone comment: covers the next token-bearing line
+            let next = token_lines.range(p.line + 1..).next().copied().unwrap_or(p.line);
+            Some((next, next))
+        };
+        active.push(Active { p, lines, used: false });
+    }
+
+    let mut after: Vec<Finding> = Vec::new();
+    let mut suppressed = 0usize;
+    for f in raw {
+        let mut hit = false;
+        for a in active.iter_mut() {
+            if !a.p.rules.iter().any(|r| r == &f.rule) {
+                continue;
+            }
+            let covers = match a.lines {
+                None => true,
+                Some((lo, hi)) => f.line >= lo && f.line <= hi,
+            };
+            if covers {
+                a.used = true;
+                hit = true;
+                break;
+            }
+        }
+        if hit {
+            suppressed += 1;
+        } else {
+            after.push(f);
+        }
+    }
+
+    if cfg.strict_pragmas && only.is_none() {
+        for a in &active {
+            if !a.used {
+                pragma_findings.push(Finding {
+                    file: path.to_string(),
+                    line: a.p.line,
+                    rule: "pragma".into(),
+                    message: format!(
+                        "unused lint:allow({}) pragma — nothing to suppress here",
+                        a.p.rules.join(",")
+                    ),
+                });
+            }
+        }
+    }
+
+    after.extend(pragma_findings);
+    after.sort();
+    FileFindings { after, raw: raw_count, suppressed }
+}

@@ -1,0 +1,181 @@
+//! Module/scope walking over the token stream: finds `#[cfg(test)]
+//! mod … { … }` bodies and `#[test] fn … { … }` bodies so rules that
+//! only guard production paths (D2/D3/D4) can skip test code.
+//!
+//! Works purely on the lexed token stream — brace depth matching, no
+//! AST. Attribute chains between the marker attribute and the item
+//! (`#[should_panic]`, `#[ignore]`, visibility modifiers) are skipped.
+
+use crate::analysis::lexer::Token;
+
+/// Inclusive line span `[start, end]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub start: u32,
+    pub end: u32,
+}
+
+impl Span {
+    pub fn contains(&self, line: u32) -> bool {
+        line >= self.start && line <= self.end
+    }
+}
+
+/// Collect line spans of test-only code: `#[cfg(test)]` items with a
+/// brace body, and `#[test]` functions.
+pub fn test_spans(toks: &[Token]) -> Vec<Span> {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if let Some(after) = match_attr(toks, i) {
+            if let Some(span) = item_body_span(toks, after, toks[i].line) {
+                spans.push(span);
+                // nested #[test] fns inside a cfg(test) mod are already
+                // covered; keep scanning from inside anyway (cheap, and
+                // overlapping spans are harmless)
+            }
+        }
+        i += 1;
+    }
+    spans
+}
+
+/// Does an attribute starting at `i` mark test code? Matches
+/// `# [ cfg ( test ) ]` and `# [ test ]`. Returns the index one past
+/// the closing `]` on a match.
+fn match_attr(toks: &[Token], i: usize) -> Option<usize> {
+    if !toks.get(i)?.is("#") || !toks.get(i + 1)?.is("[") {
+        return None;
+    }
+    let t2 = toks.get(i + 2)?;
+    if t2.is_ident("test") && toks.get(i + 3)?.is("]") {
+        return Some(i + 4);
+    }
+    if t2.is_ident("cfg")
+        && toks.get(i + 3)?.is("(")
+        && toks.get(i + 4)?.is_ident("test")
+        && toks.get(i + 5)?.is(")")
+        && toks.get(i + 6)?.is("]")
+    {
+        return Some(i + 7);
+    }
+    None
+}
+
+/// From the token after a test attribute, skip further attributes and
+/// modifiers, then find the item's `{ … }` body and return its span.
+/// Items without a brace body (`#[cfg(test)] use …;`, `mod tests;`)
+/// return None.
+fn item_body_span(toks: &[Token], mut i: usize, attr_line: u32) -> Option<Span> {
+    // skip stacked attributes: # [ … ] with bracket depth matching
+    while toks.get(i)?.is("#") && toks.get(i + 1).map(|t| t.is("[")).unwrap_or(false) {
+        let mut depth = 0i32;
+        i += 1;
+        loop {
+            let t = toks.get(i)?;
+            if t.is("[") {
+                depth += 1;
+            } else if t.is("]") {
+                depth -= 1;
+                if depth == 0 {
+                    i += 1;
+                    break;
+                }
+            }
+            i += 1;
+        }
+    }
+    // scan forward to the opening brace, bailing at a `;` (bodyless
+    // item) or implausibly far (not an item we understand)
+    let open = {
+        let mut j = i;
+        let mut found = None;
+        // generics/where clauses can hold `{` only inside const generics
+        // braces are rare there; a simple first-`{` scan with a bound
+        // works for this crate's shapes
+        while j < toks.len() && j < i + 64 {
+            let t = &toks[j];
+            if t.is(";") {
+                return None;
+            }
+            if t.is("{") {
+                found = Some(j);
+                break;
+            }
+            j += 1;
+        }
+        found?
+    };
+    // match the brace
+    let mut depth = 0i32;
+    let mut j = open;
+    while j < toks.len() {
+        let t = &toks[j];
+        if t.is("{") {
+            depth += 1;
+        } else if t.is("}") {
+            depth -= 1;
+            if depth == 0 {
+                return Some(Span { start: attr_line, end: t.line });
+            }
+        }
+        j += 1;
+    }
+    // unbalanced (truncated file): cover to EOF
+    Some(Span { start: attr_line, end: toks.last().map(|t| t.line).unwrap_or(attr_line) })
+}
+
+/// True when `line` falls inside any of the collected test spans.
+pub fn in_test_span(spans: &[Span], line: u32) -> bool {
+    spans.iter().any(|s| s.contains(line))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    #[test]
+    fn cfg_test_mod_span() {
+        let src = "\
+fn prod() {}
+#[cfg(test)]
+mod tests {
+    use super::*;
+    #[test]
+    fn t() { prod(); }
+}
+fn after() {}
+";
+        let toks = lex(src).tokens;
+        let spans = test_spans(&toks);
+        assert!(in_test_span(&spans, 3));
+        assert!(in_test_span(&spans, 6));
+        assert!(!in_test_span(&spans, 1));
+        assert!(!in_test_span(&spans, 8));
+    }
+
+    #[test]
+    fn test_fn_with_extra_attrs() {
+        let src = "\
+#[test]
+#[should_panic(expected = \"boom\")]
+fn explodes() {
+    panic!(\"boom\");
+}
+fn helper() {}
+";
+        let toks = lex(src).tokens;
+        let spans = test_spans(&toks);
+        assert!(in_test_span(&spans, 4));
+        assert!(!in_test_span(&spans, 6));
+    }
+
+    #[test]
+    fn bodyless_cfg_test_items_ignored() {
+        let src = "#[cfg(test)]\nuse std::collections::HashMap;\nfn prod() {}\n";
+        let toks = lex(src).tokens;
+        let spans = test_spans(&toks);
+        assert!(!in_test_span(&spans, 3));
+    }
+}

@@ -148,6 +148,16 @@ SUBCOMMANDS:
   runtime      Smoke-run the PJRT artifacts (requires `make artifacts`)
                --artifacts DIR
   report       Print the static Table II / Table IV footprint report
+  lint         Determinism & robustness analysis over the crate source
+               (rules D1-D6: hash-order iteration, wall-clock reads,
+               request-path panics, raw spawns, nondeterministic rng,
+               unjustified unsafe; suppress a justified site with
+               `// lint:allow(<rule>) <reason>`)
+               --deny (exit non-zero on any finding — the CI gate)
+               --rule D3 (run a single rule)
+               --json (machine-readable findings; schema in README)
+               --root DIR (crate root; default ./ or rust/)
+               --strict-pragmas (also flag pragmas suppressing nothing)
   help         Show this message
 ";
 

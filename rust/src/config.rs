@@ -8,6 +8,7 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Context, Result};
 
 use crate::access::AccessCfg;
+use crate::analysis::LintCfg;
 use crate::coordinator::data_parallel::Placement;
 use crate::coordinator::engine::EngineCfg;
 use crate::exec::ExecCfg;
@@ -239,6 +240,10 @@ pub struct RecAdConfig {
     /// heartbeat cadence and per-node backpressure cap for the
     /// `node`/`route` multi-node serving subcommands.
     pub net: NetCfg,
+    /// `[lint]` section: extra allowlist roots for `recad lint`.  The
+    /// baked-in defaults (see `analysis::LintCfg`) are always active —
+    /// config can only *extend* them, never drop a rule's scope.
+    pub lint: LintCfg,
     pub seed: u64,
     pub artifacts_dir: String,
 }
@@ -271,8 +276,20 @@ impl Default for RecAdConfig {
             autotune: AutotuneCfg::default(),
             fault: FaultCfg::default(),
             net: NetCfg::default(),
+            lint: LintCfg::default(),
             seed: 42,
             artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+/// Extend a lint allowlist with a comma-separated path list from
+/// config, skipping blanks and duplicates.
+fn extend_paths(dst: &mut Vec<String>, csv: &str) {
+    for p in csv.split(',') {
+        let p = p.trim();
+        if !p.is_empty() && !dst.iter().any(|d| d == p) {
+            dst.push(p.to_string());
         }
     }
 }
@@ -478,6 +495,14 @@ impl RecAdConfig {
                 max_outstanding: t
                     .usize_or("net.max_outstanding", d.net.max_outstanding)
                     .max(1),
+            },
+            lint: {
+                let mut l = d.lint.clone();
+                extend_paths(&mut l.allow_instant, t.str_or("lint.allow_instant", ""));
+                extend_paths(&mut l.request_paths, t.str_or("lint.request_paths", ""));
+                extend_paths(&mut l.allow_spawn, t.str_or("lint.allow_spawn", ""));
+                l.strict_pragmas = t.bool_or("lint.strict_pragmas", l.strict_pragmas);
+                l
             },
             seed: t.num_or("run.seed", d.seed as f64) as u64,
             artifacts_dir: t.str_or("run.artifacts_dir", &d.artifacts_dir).to_string(),
@@ -738,6 +763,23 @@ max_outstanding = 64
         assert_eq!(c.net.vnodes, 128);
         assert_eq!(c.net.heartbeat_ms, 25);
         assert_eq!(c.net.max_outstanding, 64);
+    }
+
+    #[test]
+    fn parses_lint_section_extending_defaults() {
+        let doc = "[lint]\nallow_instant = \"src/custom/probe.rs, src/other/\"\nstrict_pragmas = true\n";
+        let c = RecAdConfig::from_toml(&Toml::parse(doc).unwrap()).unwrap();
+        // defaults survive…
+        assert!(c.lint.allow_instant.iter().any(|p| p == "src/util/clock.rs"));
+        assert!(c.lint.request_paths.iter().any(|p| p == "src/serve/"));
+        // …and the extensions land
+        assert!(c.lint.allow_instant.iter().any(|p| p == "src/custom/probe.rs"));
+        assert!(c.lint.allow_instant.iter().any(|p| p == "src/other/"));
+        assert!(c.lint.strict_pragmas);
+        // defaults without the section
+        let c = RecAdConfig::from_toml(&Toml::parse("[run]\nepochs = 1\n").unwrap()).unwrap();
+        assert!(!c.lint.strict_pragmas);
+        assert_eq!(c.lint.allow_spawn.len(), 3);
     }
 
     #[test]

@@ -76,6 +76,7 @@ impl EmbeddingCache {
 
     /// Approximate resident bytes.
     pub fn bytes(&self) -> u64 {
+        // lint:allow(D1) u64 sum is commutative — no fp accumulation order
         self.entries
             .values()
             .map(|e| (e.data.len() * 4 + 32) as u64)
@@ -135,6 +136,7 @@ impl EmbeddingCache {
     /// End-of-step lifecycle pass: decrement LC, evict the dead.
     pub fn end_step(&mut self) {
         let before = self.entries.len();
+        // lint:allow(D1) per-entry LC decrement is independent of visit order
         self.entries.retain(|_, e| {
             if e.lc > 0 {
                 e.lc -= 1;

@@ -7,7 +7,7 @@
 //! counts steps whose updates have landed, and doubles as the snapshot
 //! version carried by prefetched rows for the RAW protocol.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::coordinator::cache::{PrefetchBatch, PrefetchedRow};
 use crate::data::ctr::Batch;
@@ -33,8 +33,10 @@ impl GradPacket {
 /// Host-resident tables, addressed by *slot* (position in the engine's
 /// table list).
 pub struct HostParams {
-    /// slot id -> table
-    pub tables: HashMap<usize, PlainTable>,
+    /// slot id -> table.  A BTreeMap, not a hash map: `snapshot_for`
+    /// iterates it, and the prefetch rows must come out in slot order on
+    /// every run (lint rule D1).
+    pub tables: BTreeMap<usize, PlainTable>,
     /// Steps whose updates have been applied (the host version).
     pub applied: u64,
 }

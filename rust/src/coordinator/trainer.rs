@@ -3,7 +3,7 @@
 //! examples.
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::access::{run_prefetched_fill, AccessCfg, AccessPlanner, BatchPlan};
 use crate::coordinator::data_parallel::{
@@ -16,6 +16,7 @@ use crate::data::ctr::Batch;
 use crate::metrics::classify::{evaluate, ClassifyReport};
 use crate::powersys::dataset::{Ieee118Dataset, Sample};
 use crate::runtime::autotune::AutotuneCfg;
+use crate::util::clock::Clock;
 use crate::util::prng::Rng;
 
 #[derive(Debug)]
@@ -96,6 +97,25 @@ pub fn train_ieee118_auto(
     batch_size: usize,
     seed: u64,
 ) -> (TrainReport, NativeDlrm, AccessPlanner) {
+    train_ieee118_auto_clocked(
+        cfg, access, autotune, dataset, epochs, batch_size, seed, &Clock::real(),
+    )
+}
+
+/// [`train_ieee118_auto`] with an injected [`Clock`] — the source for
+/// the report's wall/throughput numbers and the cache loop's per-step
+/// cost signal.  Tests pass [`Clock::manual`] for wall-clock-free runs.
+#[allow(clippy::too_many_arguments)]
+pub fn train_ieee118_auto_clocked(
+    cfg: EngineCfg,
+    access: &AccessCfg,
+    autotune: &AutotuneCfg,
+    dataset: &Ieee118Dataset,
+    epochs: usize,
+    batch_size: usize,
+    seed: u64,
+    clock: &Clock,
+) -> (TrainReport, NativeDlrm, AccessPlanner) {
     let (train, test) = dataset.split(0.8);
     let mut engine = NativeDlrm::new(cfg, &mut Rng::new(seed));
     let mut planner = AccessPlanner::for_engine_cfg(&engine.cfg);
@@ -106,7 +126,7 @@ pub fn train_ieee118_auto(
     let mut loss_curve = Vec::new();
     let mut steps = 0u64;
     let mut plan_stall_max_s = 0.0f64;
-    let t0 = Instant::now();
+    let t0 = clock.now();
     for _ in 0..epochs {
         let mut iter = EpochIter::new(train, batch_size, &mut rng);
         let report = run_prefetched_fill(
@@ -118,9 +138,9 @@ pub fn train_ieee118_auto(
                     Some(fb) => {
                         // cache loop on: the measured step time is the
                         // ladder's cost signal for this batch's budget
-                        let ts = Instant::now();
+                        let ts = clock.now();
                         loss_curve.push(engine.train_step_planned(batch, plan));
-                        fb.push(ts.elapsed().as_secs_f64());
+                        fb.push((clock.now() - ts).max(0.0));
                     }
                     None => loss_curve.push(engine.train_step_planned(batch, plan)),
                 }
@@ -129,7 +149,7 @@ pub fn train_ieee118_auto(
         );
         plan_stall_max_s = plan_stall_max_s.max(report.plan_stall_max_s);
     }
-    let wall = t0.elapsed();
+    let wall = Duration::from_secs_f64((clock.now() - t0).max(1e-12));
     // evaluate through the SAME (now frozen) remap the model was trained
     // under — with online reordering the bijection the trainer ended on
     // is the only one the learned embedding rows are consistent with

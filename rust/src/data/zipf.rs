@@ -307,6 +307,7 @@ mod tests {
         for _ in 0..8000 {
             *counts.entry(samples(rng)).or_insert(0u64) += 1;
         }
+        // lint:allow(D1) drained to a Vec and fully sorted on the next line
         let mut v: Vec<(u64, u64)> = counts.into_iter().collect();
         v.sort_by_key(|&(id, c)| (std::cmp::Reverse(c), id));
         v.into_iter().take(20).map(|(id, _)| id).collect()
@@ -370,6 +371,7 @@ mod tests {
             for _ in 0..8000 {
                 *counts.entry(dz.sample(rng)).or_insert(0u64) += 1;
             }
+            // lint:allow(D1) drained to a Vec and fully sorted on the next line
             let mut v: Vec<(u64, u64)> = counts.into_iter().collect();
             v.sort_by_key(|&(id, c)| (std::cmp::Reverse(c), id));
             v.into_iter().take(20).map(|(id, _)| id).collect()

@@ -2,6 +2,7 @@
 #![allow(clippy::needless_range_loop)]
 
 pub mod access;
+pub mod analysis;
 pub mod baselines;
 pub mod bench_support;
 pub mod cli;

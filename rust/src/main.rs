@@ -3,6 +3,7 @@
 
 use anyhow::Result;
 
+use recad::analysis;
 use recad::cli::{Cli, USAGE};
 use recad::config::RecAdConfig;
 use recad::coordinator::data_parallel::{DpCfg, Placement};
@@ -51,6 +52,7 @@ fn run(args: &[String]) -> Result<()> {
         "gen-data" => cmd_gen_data(&cli),
         "runtime" => cmd_runtime(&cli),
         "report" => cmd_report(),
+        "lint" => cmd_lint(&cli),
         other => {
             eprintln!("{USAGE}");
             anyhow::bail!("unknown subcommand '{other}'")
@@ -738,5 +740,36 @@ fn cmd_report() -> Result<()> {
     }
     t2.print();
     t4.print();
+    Ok(())
+}
+
+/// `recad lint [--deny] [--rule <id>] [--json] [--root DIR]
+/// [--strict-pragmas]` — the determinism & robustness pass over this
+/// crate's own source (see `analysis/`).
+fn cmd_lint(cli: &Cli) -> Result<()> {
+    let cfg = match cli.opt("config") {
+        Some(path) => RecAdConfig::load(path)?,
+        None => RecAdConfig::default(),
+    };
+    let mut lint = cfg.lint.clone();
+    if cli.flag("strict-pragmas") {
+        lint.strict_pragmas = true;
+    }
+    // default root: the crate dir when invoked from it, else `rust/`
+    // when invoked from the repo root
+    let root = match cli.opt("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None if std::path::Path::new("src").is_dir() => std::path::PathBuf::from("."),
+        None => std::path::PathBuf::from("rust"),
+    };
+    let run = analysis::run_lint(&root, &lint, cli.opt("rule"))?;
+    if cli.flag("json") {
+        println!("{}", analysis::report::to_json(&run));
+    } else {
+        print!("{}", analysis::report::human(&run));
+    }
+    if cli.flag("deny") && !run.clean() {
+        anyhow::bail!("lint --deny: {} finding(s)", run.findings.len());
+    }
     Ok(())
 }

@@ -35,6 +35,7 @@ use crate::access::AffinityMap;
 use crate::runtime::FaultPlan;
 use crate::serve::{Reply, ServeSession, StreamingServer};
 use crate::util::json::Json;
+use crate::util::sync::lock_recover;
 
 use super::rpc::{read_frame_interruptible, write_frame, ReadOutcome};
 use super::wire::{Frame, NodeGauge};
@@ -94,6 +95,7 @@ fn handle_conn(
         let server = Arc::clone(&server);
         let stop = Arc::clone(&stop);
         let served = Arc::clone(&served);
+        // lint:allow(D4) reply pump; joined by handle_conn before the connection closes
         thread::spawn(move || {
             for (seq, rx) in pending_rx {
                 if stop.load(Ordering::Relaxed) {
@@ -111,7 +113,7 @@ fn handle_conn(
                     shed: reply.shed,
                     gauge: gauge_of(&server, &served),
                 };
-                let mut w = writer.lock().unwrap();
+                let mut w = lock_recover(&writer);
                 if write_frame(&mut *w, &frame).is_err() {
                     break;
                 }
@@ -146,7 +148,7 @@ fn handle_conn(
             }
             Frame::Heartbeat { seq } => {
                 let ack = Frame::HeartbeatAck { seq, gauge: gauge_of(&server, &served) };
-                let mut w = writer.lock().unwrap();
+                let mut w = lock_recover(&writer);
                 if write_frame(&mut *w, &ack).is_err() {
                     break;
                 }
@@ -160,7 +162,7 @@ fn handle_conn(
                     .map(|j| AffinityMap::from_json(&j).is_ok())
                     .unwrap_or(false);
                 let ack = Frame::JoinAck { node, ok };
-                let mut w = writer.lock().unwrap();
+                let mut w = lock_recover(&writer);
                 if write_frame(&mut *w, &ack).is_err() {
                     break;
                 }
@@ -206,6 +208,7 @@ impl NodeServer {
             let server = Arc::clone(&server);
             let stop = Arc::clone(&stop);
             let served = Arc::clone(&served);
+            // lint:allow(D4) accept loop; joined on Shutdown via the stop flag below
             thread::spawn(move || {
                 let mut conns = Vec::new();
                 while !stop.load(Ordering::Relaxed) {
@@ -215,6 +218,7 @@ impl NodeServer {
                             let stop = Arc::clone(&stop);
                             let served = Arc::clone(&served);
                             let fault = fault.clone();
+                            // lint:allow(D4) per-connection worker, joined from conns on exit
                             conns.push(thread::spawn(move || {
                                 handle_conn(stream, server, stop, served, fault, id, generation)
                             }));

@@ -344,6 +344,7 @@ mod tests {
         for s in &ds.samples {
             *counts.entry(s.sparse[1]).or_insert(0usize) += 1;
         }
+        // lint:allow(D1) max over all values is commutative — order-free
         let max = counts.values().copied().max().unwrap();
         assert!(
             max as f64 > 2.0 * ds.samples.len() as f64 / counts.len() as f64,

@@ -42,6 +42,7 @@ impl FreqCounter {
     /// Indices sorted by descending frequency (ties by index for
     /// determinism) — Algorithm 2's `Freq_order`.
     pub fn freq_order(&self) -> Vec<u64> {
+        // lint:allow(D1) drained to a Vec and fully sorted on the next line
         let mut v: Vec<(u64, u64)> = self.counts.iter().map(|(&i, &c)| (i, c)).collect();
         v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
         v.into_iter().map(|(i, _)| i).collect()
@@ -70,10 +71,12 @@ impl FreqCounter {
     pub fn decay(&mut self, factor: f64) {
         let factor = factor.clamp(0.0, 1.0);
         self.total = 0;
+        // lint:allow(D1) per-entry integer decay is independent of visit order
         self.counts.retain(|_, c| {
             *c = (*c as f64 * factor) as u64;
             *c > 0
         });
+        // lint:allow(D1) u64 sum is commutative — no fp accumulation order
         self.total = self.counts.values().sum();
     }
 

@@ -9,13 +9,22 @@ use std::collections::HashMap;
 
 /// Compressed index graph: adjacency with accumulated co-occurrence
 /// weights, nodes remapped to dense ids.
+///
+/// The adjacency is stored as *sorted* neighbor lists, not hash maps:
+/// `degree()` and the Louvain modularity sums accumulate f64 edge
+/// weights in neighbor order, and hash iteration order varies per
+/// process — with hash adjacency two builds of the same graph could
+/// disagree in the last ulp and flip a ΔQ tie-break (the exact class
+/// of bug PR 3 fixed in the edge-interning order; `recad lint` rule D1
+/// now bans the pattern outright).
 pub struct IndexGraph {
     /// dense node id -> original embedding index
     pub nodes: Vec<u64>,
     /// original embedding index -> dense node id
     pub node_of: HashMap<u64, usize>,
-    /// adjacency: per node, (neighbor dense id, weight)
-    pub adj: Vec<HashMap<usize, f64>>,
+    /// adjacency: per node, (neighbor dense id, weight), sorted by
+    /// neighbor id with one entry per neighbor
+    pub adj: Vec<Vec<(usize, f64)>>,
     pub total_weight: f64,
 }
 
@@ -28,9 +37,9 @@ pub struct GraphBuilder {
 }
 
 impl GraphBuilder {
-    pub fn new(hot: &[u64]) -> GraphBuilder {
+    pub fn new(hot_ids: &[u64]) -> GraphBuilder {
         GraphBuilder {
-            hot: hot.iter().copied().collect(),
+            hot: hot_ids.iter().copied().collect(),
             max_pairs_per_batch: 4096,
             pairs: HashMap::new(),
         }
@@ -83,20 +92,26 @@ impl GraphBuilder {
         // asserted bit-identical to its synchronous twin, and pipeline ==
         // sequential replays rebuilds).  Sorting by the (a, b) key
         // restores that.
-        let mut pairs: Vec<((u64, u64), f64)> = self.pairs.into_iter().collect();
-        pairs.sort_unstable_by_key(|&(k, _)| k);
-        let mut edges: Vec<(usize, usize, f64)> = Vec::with_capacity(pairs.len());
-        for ((a, b), w) in pairs {
+        // lint:allow(D1) pair accumulator is drained once and key-sorted on the next line
+        let mut sorted_pairs: Vec<((u64, u64), f64)> = self.pairs.into_iter().collect();
+        sorted_pairs.sort_unstable_by_key(|&(k, _)| k);
+        let mut edges: Vec<(usize, usize, f64)> = Vec::with_capacity(sorted_pairs.len());
+        for ((a, b), w) in sorted_pairs {
             let ia = intern(a, &mut nodes, &mut node_of);
             let ib = intern(b, &mut nodes, &mut node_of);
             edges.push((ia, ib, w));
         }
-        let mut adj = vec![HashMap::new(); nodes.len()];
+        let mut adj: Vec<Vec<(usize, f64)>> = vec![Vec::new(); nodes.len()];
         let mut total = 0.0;
         for (a, b, w) in edges {
-            *adj[a].entry(b).or_insert(0.0) += w;
-            *adj[b].entry(a).or_insert(0.0) += w;
+            adj[a].push((b, w));
+            adj[b].push((a, w));
             total += w;
+        }
+        // neighbor lists in ascending id order; the (a, b) keys were
+        // unique so no neighbor repeats and no merge is needed
+        for list in adj.iter_mut() {
+            list.sort_unstable_by_key(|&(v, _)| v);
         }
         IndexGraph { nodes, node_of, adj, total_weight: total }
     }
@@ -107,9 +122,18 @@ impl IndexGraph {
         self.nodes.len()
     }
 
-    /// Weighted degree of a node.
+    /// Weighted degree of a node (neighbor-order f64 sum — stable, the
+    /// adjacency is canonically sorted).
     pub fn degree(&self, v: usize) -> f64 {
-        self.adj[v].values().sum()
+        self.adj[v].iter().map(|&(_, w)| w).sum()
+    }
+
+    /// Weight of the edge `(a, b)`, 0.0 when absent.
+    pub fn weight(&self, a: usize, b: usize) -> f64 {
+        match self.adj[a].binary_search_by_key(&b, |&(v, _)| v) {
+            Ok(i) => self.adj[a][i].1,
+            Err(_) => 0.0,
+        }
     }
 }
 
@@ -127,9 +151,26 @@ mod tests {
         let a = g.node_of[&1];
         let b = g.node_of[&2];
         let c = g.node_of[&3];
-        assert_eq!(g.adj[a][&b], 2.0); // co-occurred twice
-        assert_eq!(g.adj[a][&c], 1.0);
+        assert_eq!(g.weight(a, b), 2.0); // co-occurred twice
+        assert_eq!(g.weight(a, c), 1.0);
         assert_eq!(g.total_weight, 4.0); // edges (1,2)x2 (1,3) (2,3)
+    }
+
+    #[test]
+    fn adjacency_is_sorted_and_symmetric() {
+        let mut gb = GraphBuilder::new(&[]);
+        gb.observe_batch(&[5, 1, 9, 3]);
+        let g = gb.build();
+        for v in 0..g.num_nodes() {
+            let ids: Vec<usize> = g.adj[v].iter().map(|&(u, _)| u).collect();
+            let mut sorted = ids.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(ids, sorted, "node {v} adjacency not sorted/unique");
+            for &(u, w) in &g.adj[v] {
+                assert_eq!(g.weight(u, v), w, "asymmetric edge ({v},{u})");
+            }
+        }
     }
 
     #[test]
@@ -148,7 +189,7 @@ mod tests {
         let g = gb.build();
         let a = g.node_of[&4];
         let b = g.node_of[&9];
-        assert_eq!(g.adj[a][&b], 1.0);
+        assert_eq!(g.weight(a, b), 1.0);
     }
 
     #[test]

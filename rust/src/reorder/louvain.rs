@@ -25,20 +25,12 @@ pub fn louvain(g: &IndexGraph) -> Communities {
     if n == 0 {
         return Communities { assign: vec![], n_comms: 0, modularity: 0.0 };
     }
-    // current (flattened) adjacency in plain vectors, neighbors in
-    // ascending id order — HashMap iteration order varies per instance,
-    // and both the f64 degree sums and the ΔQ tie-breaks below must be
-    // pure functions of the graph (the online-reorder engines are
-    // asserted bit-identical across rebuild invocations)
-    let mut adj: Vec<Vec<(usize, f64)>> = g
-        .adj
-        .iter()
-        .map(|m| {
-            let mut a: Vec<(usize, f64)> = m.iter().map(|(&v, &w)| (v, w)).collect();
-            a.sort_unstable_by_key(|&(v, _)| v);
-            a
-        })
-        .collect();
+    // current adjacency, neighbors already in ascending id order —
+    // IndexGraph stores sorted neighbor lists (not hash maps) precisely
+    // so the f64 degree sums and the ΔQ tie-breaks below are pure
+    // functions of the graph (the online-reorder engines are asserted
+    // bit-identical across rebuild invocations)
+    let mut adj: Vec<Vec<(usize, f64)>> = g.adj.clone();
     // node -> original nodes it represents (for unfolding)
     let mut members: Vec<Vec<usize>> = (0..n).map(|v| vec![v]).collect();
     let mut final_assign = vec![0usize; n];
@@ -76,6 +68,7 @@ pub fn louvain(g: &IndexGraph) -> Communities {
                 // the 1e-12 deadband) resolve to the lowest id instead of
                 // whatever the map yields first — deterministic rebuilds
                 cand.clear();
+                // lint:allow(D1) drained into cand and id-sorted on the next line before any use
                 cand.extend(w_to.iter().map(|(&c, &w)| (c, w)));
                 cand.sort_unstable_by_key(|&(c, _)| c);
                 let (mut best_c, mut best_gain) = (cur, 0.0f64);
@@ -155,7 +148,7 @@ pub fn modularity(g: &IndexGraph, assign: &[usize]) -> f64 {
     let mut deg = vec![0.0; n_comms]; // Σ k_i per community
     for v in 0..g.num_nodes() {
         deg[assign[v]] += g.degree(v);
-        for (&u, &w) in &g.adj[v] {
+        for &(u, w) in &g.adj[v] {
             if assign[u] == assign[v] && u > v {
                 intra[assign[v]] += w;
             }

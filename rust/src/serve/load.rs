@@ -13,13 +13,14 @@
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::thread;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::powersys::dataset::Sample;
 use crate::serve::router::policy_static;
 use crate::serve::server::{Reply, StreamingServer};
+use crate::util::clock::Clock;
 use crate::util::json::Json;
 use crate::util::prng::Rng;
 use crate::util::stats::percentile;
@@ -133,14 +134,14 @@ impl OpenLoopReport {
         // post-recovery tail: p99 over the second half of served requests
         // in arrival order (a kill/respawn arm's recovered steady state)
         let mut tail: Vec<f64> = windows_arrival[windows_arrival.len() / 2..].to_vec();
-        tail.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        tail.sort_by(|a, b| a.total_cmp(b));
         let tail_p99_window = d(percentile(&tail, 0.99));
 
         let mut windows = windows_arrival.to_vec();
         let mut queue = queue_arrival.to_vec();
         let mut service = service_arrival.to_vec();
         for v in [&mut windows, &mut queue, &mut service] {
-            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v.sort_by(|a, b| a.total_cmp(b));
         }
         let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
 
@@ -156,7 +157,7 @@ impl OpenLoopReport {
             mean_window: d(mean(&windows)),
             p50_window: d(percentile(&windows, 0.50)),
             p99_window: d(percentile(&windows, 0.99)),
-            max_window: d(*windows.last().unwrap()),
+            max_window: d(windows.last().copied().unwrap_or(0.0)),
             mean_queue_delay: d(mean(&queue)),
             p99_queue_delay: d(percentile(&queue, 0.99)),
             mean_service: d(mean(&service)),
@@ -249,28 +250,41 @@ pub fn run_open_loop(
     samples: &[Sample],
     cfg: &OpenLoopCfg,
 ) -> OpenLoopReport {
+    run_open_loop_clocked(server, samples, cfg, &Clock::real())
+}
+
+/// `run_open_loop` with an injected clock: the pacing and wall-time
+/// accounting read `clock` instead of the wall directly, so tests can
+/// pin the measured wall (and therefore `achieved_rate`) exactly.  With
+/// a manual clock the generator never sleeps — every arrival whose due
+/// time has "passed" submits immediately.
+pub fn run_open_loop_clocked(
+    server: StreamingServer,
+    samples: &[Sample],
+    cfg: &OpenLoopCfg,
+    clock: &Clock,
+) -> OpenLoopReport {
     assert!(cfg.rate_per_sec > 0.0, "open loop needs a positive arrival rate");
     assert!(!samples.is_empty(), "open loop needs at least one request");
     let replicas = server.replicas();
     let policy = server.policy_name();
     let mut rng = Rng::new(cfg.seed);
     let mut receivers = Vec::with_capacity(samples.len());
-    let mut due = Duration::ZERO;
-    let t0 = Instant::now();
+    let mut due = 0.0f64;
+    let t0 = clock.now();
     for s in samples {
         // Poisson process: exponential inter-arrival gaps at the target
         // rate.  1 - f64() keeps the argument in (0, 1] so ln is finite.
         let gap = -(1.0 - rng.f64()).ln() / cfg.rate_per_sec;
-        due += Duration::from_secs_f64(gap);
-        if let Some(wait) = due.checked_sub(t0.elapsed()) {
-            if !wait.is_zero() {
-                thread::sleep(wait);
-            }
+        due += gap;
+        let wait = due - (clock.now() - t0);
+        if wait > 0.0 {
+            thread::sleep(Duration::from_secs_f64(wait));
         }
         receivers.push(server.submit(s));
     }
     let (replies, dropped) = drain_replies(receivers);
-    let wall = t0.elapsed();
+    let wall = Duration::from_secs_f64((clock.now() - t0).max(1e-12));
     let respawns = server.respawns();
     let (lifetime, _) = server.shutdown();
     // split explicit overload refusals from real verdicts (arrival order
@@ -359,6 +373,35 @@ mod tests {
             report.mean_window - sum
         };
         assert!(diff < Duration::from_millis(1), "queue/service split drifted: {diff:?}");
+    }
+
+    #[test]
+    fn open_loop_with_manual_clock_is_wall_clock_free() {
+        // the generator's pacing and wall accounting go through the
+        // injected Clock (lint rule D2): with a manual clock that never
+        // advances, the measured wall is exactly zero no matter how
+        // long the replicas really took, and achieved_rate is a pure
+        // function of the served count
+        let ds = generate(&DatasetCfg {
+            n_normal: 20,
+            n_attack: 5,
+            vocab: SparseVocab::ieee118(1.0 / 2000.0),
+            n_profiles: 10,
+            noise_std: 0.005,
+            seed: 8,
+        });
+        let engine = NativeDlrm::new(EngineCfg::ieee118(1.0 / 2000.0), &mut TestRng::new(2));
+        let server = ServeSession::from_engine(engine).replicas(2).start();
+        // high rate keeps the (real) sleeps the manual clock induces
+        // far below a millisecond in total
+        let cfg = OpenLoopCfg { rate_per_sec: 500_000.0, seed: 3 };
+        let clock = Clock::manual();
+        let report = run_open_loop_clocked(server, &ds.samples[..16], &cfg, &clock);
+        assert_eq!(report.offered, 16);
+        assert_eq!(report.served + report.shed as u64 + report.dropped as u64, 16);
+        assert_eq!(report.wall, Duration::ZERO, "wall leaked real time");
+        let expect_rate = report.served as f64 / 1e-12;
+        assert_eq!(report.achieved_rate, expect_rate);
     }
 
     #[test]

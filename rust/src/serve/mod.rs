@@ -38,7 +38,7 @@ pub mod server;
 pub mod session;
 
 pub use detector::{Detector, Verdict};
-pub use load::{run_open_loop, OpenLoopCfg, OpenLoopReport};
+pub use load::{run_open_loop, run_open_loop_clocked, OpenLoopCfg, OpenLoopReport};
 pub use router::{LeastQueued, PlanAffinity, Policy, QueueDepths, RoundRobin, RoutePolicy};
 pub use server::{GuardCfg, Reply, ServeReport, StreamingServer};
 pub use session::{ServeCfg, ServeSession};

@@ -44,7 +44,7 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::coordinator::platform::SimPlatform;
 use crate::powersys::dataset::Sample;
@@ -54,6 +54,7 @@ use crate::serve::detector::Detector;
 use crate::serve::router::{QueueDepths, RoundRobin, RoutePolicy};
 use crate::util::clock::Clock;
 use crate::util::stats::LatencyHist;
+use crate::util::sync::{lock_recover, wait_timeout_recover};
 
 /// Sentinel sequence number for fault-injected flood junk: never severed,
 /// and its reply channel is born dead.
@@ -62,7 +63,8 @@ const FLOOD_SEQ: u64 = u64::MAX;
 /// One in-flight request.
 struct Request {
     sample: Sample,
-    enqueued: Instant,
+    /// Enqueue timestamp on the server's [`Clock`], in seconds.
+    enqueued: f64,
     reply: mpsc::Sender<Reply>,
     /// Global submit sequence (fault-plan key for reply-sever decisions).
     seq: u64,
@@ -150,6 +152,10 @@ struct ServerCore {
     hist: Mutex<LatencyHist>,
     knobs: SpawnKnobs,
     guard: GuardCfg,
+    /// Timestamp source for every enqueue/pickup/verdict split.  Real in
+    /// production; a manual clock makes the latency accounting (and the
+    /// hang detector) wall-clock-free under test.
+    clock: Clock,
     /// EWMA of per-request service nanos (α = 1/8) — the shedding
     /// estimator's cost model.
     svc_ewma_ns: AtomicU64,
@@ -214,7 +220,9 @@ impl Drop for PendingBatch {
         }
         let q = &self.core.queues[self.id];
         {
-            let mut guard = q.q.lock().unwrap();
+            // recover, don't unwrap: this drop guard runs precisely while
+            // a panic unwinds, when the queue mutex may be poisoned
+            let mut guard = lock_recover(&q.q);
             for r in self.reqs.drain(..).rev() {
                 guard.push_front(r);
             }
@@ -295,7 +303,7 @@ impl ServeReport {
 /// supervisor has respawned over it.
 fn run_replica(core: Arc<ServerCore>, id: usize, my_epoch: u64, mut detector: Detector) {
     let mut tuner = core.knobs.autotune.map(|c| {
-        ServeBatchTuner::new(c, core.knobs.max_batch, core.knobs.deadline, Clock::real())
+        ServeBatchTuner::new(c, core.knobs.max_batch, core.knobs.deadline, core.clock.clone())
     });
     let knobs = tuner.as_ref().map(|t| t.knobs());
     let _alive = AliveGuard { core: Arc::clone(&core), id, epoch: my_epoch };
@@ -309,7 +317,7 @@ fn run_replica(core: Arc<ServerCore>, id: usize, my_epoch: u64, mut detector: De
         };
         {
             let rq = &core.queues[id];
-            let mut q = rq.q.lock().unwrap();
+            let mut q = lock_recover(&rq.q);
             // blocking pickup of the first request
             loop {
                 if core.epoch_of(id) != my_epoch {
@@ -322,7 +330,7 @@ fn run_replica(core: Arc<ServerCore>, id: usize, my_epoch: u64, mut detector: De
                 if !core.open.load(Ordering::Acquire) {
                     return; // queue drained and server closed
                 }
-                let (g, _) = rq.cv.wait_timeout(q, Duration::from_millis(25)).unwrap();
+                let (g, _) = wait_timeout_recover(&rq.cv, q, Duration::from_millis(25));
                 q = g;
             }
             let (max_batch, deadline) = match &knobs {
@@ -340,7 +348,7 @@ fn run_replica(core: Arc<ServerCore>, id: usize, my_epoch: u64, mut detector: De
                     }
                 } else {
                     // wait up to the deadline for the batch to fill
-                    let cutoff = Instant::now() + deadline;
+                    let cutoff = core.clock.now() + deadline.as_secs_f64();
                     'fill: while pending.reqs.len() < max_batch {
                         while let Some(r) = q.pop_front() {
                             pending.reqs.push(r);
@@ -348,11 +356,12 @@ fn run_replica(core: Arc<ServerCore>, id: usize, my_epoch: u64, mut detector: De
                                 break 'fill;
                             }
                         }
-                        let left = match cutoff.checked_duration_since(Instant::now()) {
-                            Some(d) if !d.is_zero() => d,
-                            _ => break,
-                        };
-                        let (g, _) = rq.cv.wait_timeout(q, left).unwrap();
+                        let left = cutoff - core.clock.now();
+                        if left <= 0.0 {
+                            break;
+                        }
+                        let (g, _) =
+                            wait_timeout_recover(&rq.cv, q, Duration::from_secs_f64(left));
                         q = g;
                     }
                 }
@@ -369,20 +378,21 @@ fn run_replica(core: Arc<ServerCore>, id: usize, my_epoch: u64, mut detector: De
                 f.record("panic", id, served_here);
                 // `pending`'s drop guard requeues the picked batch; the
                 // alive guard flips the liveness bit for the supervisor.
+                // lint:allow(D3) chaos injection: this panic IS the fault under test
                 panic!("injected fault: replica {id} panicked (epoch {my_epoch})");
             }
         }
-        let picked = Instant::now();
+        let picked = core.clock.now();
         SimPlatform::charge(core.knobs.dispatch);
         let samples: Vec<&Sample> = pending.reqs.iter().map(|r| &r.sample).collect();
         let probs = detector.score_batch(&samples);
-        let done = Instant::now();
+        let done = core.clock.now();
         let batch = pending.reqs.len();
-        core.note_service(done.saturating_duration_since(picked), batch);
+        core.note_service(Duration::from_secs_f64((done - picked).max(0.0)), batch);
         for (req, p) in pending.reqs.drain(..).zip(probs) {
-            let latency = done.saturating_duration_since(req.enqueued);
-            let queue_delay = picked.saturating_duration_since(req.enqueued);
-            core.hist.lock().unwrap().record(latency);
+            let latency = Duration::from_secs_f64((done - req.enqueued).max(0.0));
+            let queue_delay = Duration::from_secs_f64((picked - req.enqueued).max(0.0));
+            lock_recover(&core.hist).record(latency);
             core.served.fetch_add(1, Ordering::Relaxed);
             core.depths.leave(id);
             served_here += 1;
@@ -406,7 +416,7 @@ fn run_replica(core: Arc<ServerCore>, id: usize, my_epoch: u64, mut detector: De
 /// Respawn replica `id` from the frozen snapshot under a fresh epoch.
 fn respawn(core: &Arc<ServerCore>, id: usize, why: &'static str) {
     let det = {
-        let proto = core.proto.lock().unwrap();
+        let proto = lock_recover(&core.proto);
         match proto.as_ref() {
             Some(d) => d.clone(),
             None => return, // unsupervised server holds no snapshot
@@ -421,7 +431,7 @@ fn respawn(core: &Arc<ServerCore>, id: usize, why: &'static str) {
     eprintln!("[supervisor] replica {id} {why}: respawning (epoch {epoch})");
     let c = Arc::clone(core);
     let h = thread::spawn(move || run_replica(c, id, epoch, det));
-    core.handles.lock().unwrap().push(h);
+    lock_recover(&core.handles).push(h);
     core.queues[id].cv.notify_all();
 }
 
@@ -431,7 +441,7 @@ fn respawn(core: &Arc<ServerCore>, id: usize, why: &'static str) {
 fn run_supervisor(core: Arc<ServerCore>) {
     let n = core.queues.len();
     let mut last_beats: Vec<u64> = (0..n).map(|i| core.depths.beats(i)).collect();
-    let mut stuck_since: Vec<Option<Instant>> = vec![None; n];
+    let mut stuck_since: Vec<Option<f64>> = vec![None; n];
     loop {
         thread::sleep(core.guard.heartbeat);
         if !core.open.load(Ordering::Acquire) {
@@ -447,8 +457,8 @@ fn run_supervisor(core: Arc<ServerCore>) {
                 if progressed || core.depths.depth(i) == 0 {
                     stuck_since[i] = None;
                 } else {
-                    let since = *stuck_since[i].get_or_insert_with(Instant::now);
-                    hung = since.elapsed() >= core.guard.hang;
+                    let since = *stuck_since[i].get_or_insert_with(|| core.clock.now());
+                    hung = core.clock.now() - since >= core.guard.hang.as_secs_f64();
                 }
             }
             if dead || hung {
@@ -517,6 +527,37 @@ impl StreamingServer {
         guard: GuardCfg,
         fault: Option<Arc<FaultPlan>>,
     ) -> StreamingServer {
+        Self::spawn_supervised_clocked(
+            detectors,
+            max_batch,
+            deadline,
+            dispatch,
+            policy,
+            autotune,
+            guard,
+            fault,
+            Clock::real(),
+        )
+    }
+
+    /// [`Self::spawn_supervised`] with an injected [`Clock`] — the
+    /// timestamp source behind every enqueue/pickup/verdict split, the
+    /// batch-fill deadline, and the supervisor's hang detector.  Tests
+    /// pass [`Clock::manual`] to make the latency accounting
+    /// wall-clock-free; pair a manual clock with a zero fill deadline
+    /// (the fill cutoff never passes unless the test advances time).
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn_supervised_clocked(
+        detectors: Vec<Detector>,
+        max_batch: usize,
+        deadline: Duration,
+        dispatch: Duration,
+        policy: Arc<dyn RoutePolicy>,
+        autotune: Option<ServeTuneCfg>,
+        guard: GuardCfg,
+        fault: Option<Arc<FaultPlan>>,
+        clock: Clock,
+    ) -> StreamingServer {
         assert!(!detectors.is_empty(), "need at least one detector replica");
         let n = detectors.len();
         let supervise = !guard.heartbeat.is_zero();
@@ -537,6 +578,7 @@ impl StreamingServer {
             hist: Mutex::new(LatencyHist::new()),
             knobs: SpawnKnobs { max_batch, deadline, dispatch, autotune },
             guard,
+            clock,
             svc_ewma_ns: AtomicU64::new(0),
             fault,
             respawns: AtomicU64::new(0),
@@ -547,7 +589,7 @@ impl StreamingServer {
         for (id, detector) in detectors.into_iter().enumerate() {
             let c = Arc::clone(&core);
             let h = thread::spawn(move || run_replica(c, id, 0, detector));
-            core.handles.lock().unwrap().push(h);
+            lock_recover(&core.handles).push(h);
         }
         let supervisor = if supervise {
             let c = Arc::clone(&core);
@@ -634,10 +676,10 @@ impl StreamingServer {
         core.depths.enter(shard);
         let rq = &core.queues[shard];
         {
-            let mut q = rq.q.lock().unwrap();
+            let mut q = lock_recover(&rq.q);
             q.push_back(Request {
                 sample: sample.clone(),
-                enqueued: Instant::now(),
+                enqueued: core.clock.now(),
                 reply: rtx,
                 seq,
             });
@@ -652,7 +694,7 @@ impl StreamingServer {
                         core.depths.enter(shard);
                         q.push_back(Request {
                             sample: sample.clone(),
-                            enqueued: Instant::now(),
+                            enqueued: core.clock.now(),
                             reply: jtx,
                             seq: FLOOD_SEQ,
                         });
@@ -665,8 +707,19 @@ impl StreamingServer {
     }
 
     /// Submit one sample and wait for the verdict (closed-loop client).
+    /// A severed reply channel (fault-injected drop, or a replica lost
+    /// without respawn) degrades to an immediate `Reply { shed: true }`
+    /// refusal instead of unwinding the client.
     pub fn infer(&self, sample: &Sample) -> Reply {
-        self.submit(sample).recv().expect("server replies")
+        match self.submit(sample).recv() {
+            Ok(r) => r,
+            Err(_) => Reply {
+                prob: 0.0,
+                latency: Duration::ZERO,
+                queue_delay: Duration::ZERO,
+                shed: true,
+            },
+        }
     }
 
     /// Drive a closed-loop stream of samples; returns the Table VI row.
@@ -674,11 +727,11 @@ impl StreamingServer {
     pub fn run_stream(self, samples: &[Sample], model_bytes: u64) -> ServeReport {
         let replicas = self.replicas();
         let mut hist = LatencyHist::new();
-        let t0 = Instant::now();
+        let t0 = self.core.clock.now();
         for s in samples {
             hist.record(self.infer(s).latency);
         }
-        let wall = t0.elapsed();
+        let wall = Duration::from_secs_f64((self.core.clock.now() - t0).max(0.0));
         self.report(wall, hist, samples.len() as u64, model_bytes, replicas)
     }
 
@@ -695,7 +748,7 @@ impl StreamingServer {
         let clients = clients.clamp(1, samples.len().max(1));
         let chunk = ((samples.len() + clients - 1) / clients).max(1);
         let mut hist = LatencyHist::new();
-        let t0 = Instant::now();
+        let t0 = self.core.clock.now();
         thread::scope(|sc| {
             let mut parts = Vec::new();
             for part in samples.chunks(chunk) {
@@ -709,10 +762,14 @@ impl StreamingServer {
                 }));
             }
             for p in parts {
-                hist.merge(&p.join().unwrap());
+                // a client thread that died mid-stream contributes no
+                // latencies; the served counters in the core still hold
+                if let Ok(h) = p.join() {
+                    hist.merge(&h);
+                }
             }
         });
-        let wall = t0.elapsed();
+        let wall = Duration::from_secs_f64((self.core.clock.now() - t0).max(0.0));
         self.report(wall, hist, samples.len() as u64, model_bytes, replicas)
     }
 
@@ -760,7 +817,7 @@ impl StreamingServer {
         // expected and harmless — its stats already live in the core.
         loop {
             let batch: Vec<_> = {
-                let mut hs = core.handles.lock().unwrap();
+                let mut hs = lock_recover(&core.handles);
                 hs.drain(..).collect()
             };
             if batch.is_empty() {
@@ -771,7 +828,7 @@ impl StreamingServer {
             }
         }
         let served = core.served.load(Ordering::Relaxed);
-        let hist = core.hist.lock().unwrap().clone();
+        let hist = lock_recover(&core.hist).clone();
         (served, hist)
     }
 }
@@ -906,6 +963,58 @@ mod tests {
         assert!(plan.event_count("respawn") >= 1);
         let (lifetime, _) = server.shutdown();
         assert_eq!(lifetime, 8);
+    }
+
+    /// Regression for the D3 burn-down: a panic while HOLDING a queue
+    /// mutex poisons it; every lock site on the request path recovers
+    /// (util::sync::lock_recover) instead of unwinding, so not a single
+    /// subsequent request is lost.
+    #[test]
+    fn poisoned_queue_mutex_loses_no_requests() {
+        let ss = samples(12);
+        let server = StreamingServer::start(detector(), 1, Duration::ZERO);
+        let core = Arc::clone(&server.core);
+        let poisoner = thread::spawn(move || {
+            let _g = core.queues[0].q.lock().unwrap();
+            panic!("poison the queue mutex");
+        });
+        assert!(poisoner.join().is_err(), "poisoner must panic while holding the lock");
+        assert!(server.core.queues[0].q.is_poisoned(), "mutex must actually be poisoned");
+        for s in &ss[..10] {
+            let r = server.infer(s);
+            assert!(!r.shed, "request shed after poison");
+            assert!((0.0..=1.0).contains(&r.prob));
+        }
+        let (lifetime, hist) = server.shutdown();
+        assert_eq!(lifetime, 10, "a request was lost to the poisoned mutex");
+        assert_eq!(hist.count(), 10);
+    }
+
+    /// The injected clock reaches every timestamp read: under a manual
+    /// clock that never advances, latency splits are exactly zero while
+    /// requests still flow (worker wakeups are condvar-driven).
+    #[test]
+    fn manual_clock_server_is_wall_clock_free() {
+        let ss = samples(6);
+        let server = StreamingServer::spawn_supervised_clocked(
+            vec![detector()],
+            1,
+            Duration::ZERO,
+            Duration::ZERO,
+            Arc::new(RoundRobin::new()),
+            None,
+            GuardCfg::default(),
+            None,
+            Clock::manual(),
+        );
+        for s in &ss[..4] {
+            let r = server.infer(s);
+            assert!(!r.shed);
+            assert_eq!(r.latency, Duration::ZERO, "manual clock never advanced");
+            assert_eq!(r.queue_delay, Duration::ZERO);
+        }
+        let (lifetime, _) = server.shutdown();
+        assert_eq!(lifetime, 4);
     }
 
     #[test]

@@ -218,6 +218,7 @@ pub fn gemm_acc_kuw(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: 
     #[cfg(all(feature = "simd", target_arch = "x86_64"))]
     if std::is_x86_feature_detected!("avx") {
         // SAFETY: AVX availability checked on the line above.
+        // lint:allow(D6) AVX dispatch guarded by is_x86_feature_detected
         unsafe { gemm_acc_ku_avx(a, b, c, m, k, n) };
         return;
     }
@@ -297,6 +298,7 @@ fn gemm_acc_ku_wide(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: 
 
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
 #[target_feature(enable = "avx")]
+// lint:allow(D6) target_feature fn: callers prove AVX before entry
 unsafe fn gemm_acc_ku_avx(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     use std::arch::x86_64::{
         _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,
@@ -377,6 +379,7 @@ pub fn gemm_at_tiledw(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n
     #[cfg(all(feature = "simd", target_arch = "x86_64"))]
     if std::is_x86_feature_detected!("avx") {
         // SAFETY: AVX availability checked on the line above.
+        // lint:allow(D6) AVX dispatch guarded by is_x86_feature_detected
         unsafe { gemm_at_tiled_avx(a, b, c, m, k, n) };
         return;
     }
@@ -461,6 +464,7 @@ fn gemm_at_tiled_wide(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n
 
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
 #[target_feature(enable = "avx")]
+// lint:allow(D6) target_feature fn: callers prove AVX before entry
 unsafe fn gemm_at_tiled_avx(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     use std::arch::x86_64::{
         _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,

@@ -11,3 +11,4 @@ pub mod hash;
 pub mod json;
 pub mod prng;
 pub mod stats;
+pub mod sync;

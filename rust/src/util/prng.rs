@@ -136,11 +136,11 @@ impl Rng {
         assert!(k <= n);
         // For small k relative to n use rejection, else shuffle.
         if k * 4 < n {
-            let mut seen = std::collections::HashSet::with_capacity(k);
+            let mut picked = std::collections::HashSet::with_capacity(k);
             let mut out = Vec::with_capacity(k);
             while out.len() < k {
                 let x = self.usize_below(n);
-                if seen.insert(x) {
+                if picked.insert(x) {
                     out.push(x);
                 }
             }

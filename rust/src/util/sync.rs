@@ -1,0 +1,65 @@
+//! Poison-recovering synchronization helpers.
+//!
+//! A `Mutex` poisons when a holder panics. On the serve/net request
+//! paths that must *degrade*, not cascade: the data under our queue
+//! and ring mutexes is a plain value that is valid at every step (no
+//! multi-field invariants updated non-atomically), so recovering the
+//! guard and continuing is sound — the alternative, `.unwrap()`, turns
+//! one chaos-injected replica panic into an unwinding client and a
+//! lost request. `recad lint` rule D3 bans the unwrap form on those
+//! paths; these helpers are the sanctioned replacement.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// `Condvar::wait_timeout` with the same poison recovery. Returns the
+/// re-acquired guard and whether the wait timed out.
+pub fn wait_timeout_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    match cv.wait_timeout(guard, dur) {
+        Ok((g, t)) => (g, t.timed_out()),
+        Err(e) => {
+            let (g, t) = e.into_inner();
+            (g, t.timed_out())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+    use std::thread;
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let h = thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        });
+        assert!(h.join().is_err());
+        assert!(m.is_poisoned());
+        let g = lock_recover(&m);
+        assert_eq!(*g, 7);
+    }
+
+    #[test]
+    fn wait_timeout_recover_times_out() {
+        let m = Mutex::new(false);
+        let cv = Condvar::new();
+        let g = lock_recover(&m);
+        let (g, timed_out) = wait_timeout_recover(&cv, g, Duration::from_millis(5));
+        assert!(timed_out);
+        assert!(!*g);
+    }
+}

@@ -1,0 +1,124 @@
+//! Fixture + self-run suite for `recad lint` (`src/analysis/`).
+//!
+//! Fixtures live in `tests/lint_fixtures/` — one known-bad and one
+//! known-clean snippet per rule, plus the pragma cases.  The fixture
+//! directory is excluded from both compilation and the real lint walk;
+//! this harness feeds each file through `lint_source` with path
+//! scoping disabled (`LintCfg::fixture`) so every rule fires
+//! regardless of location.  The final test is the burn-down gate: the
+//! crate's own source must come back clean, same as the CI
+//! `recad lint --deny` run.
+
+use std::fs;
+use std::path::Path;
+
+use recad::analysis::rules::FileFindings;
+use recad::analysis::{lint_source, run_lint, LintCfg};
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("lint_fixtures")
+        .join(name);
+    fs::read_to_string(&p).unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+/// Lint one fixture under a synthetic `src/` path (D4 only looks at
+/// files under `src/`) with every allowlist emptied.
+fn lint_fixture(name: &str) -> FileFindings {
+    let src = fixture(name);
+    lint_source(&format!("src/fixture/{name}"), &src, &LintCfg::fixture(), None)
+}
+
+#[test]
+fn bad_fixtures_flag_their_rule_and_only_it() {
+    for rule in ["D1", "D2", "D3", "D4", "D5", "D6"] {
+        let name = format!("{}_bad.rs", rule.to_lowercase());
+        let ff = lint_fixture(&name);
+        assert!(!ff.after.is_empty(), "{name}: expected at least one finding");
+        for f in &ff.after {
+            assert_eq!(f.rule, rule, "{name}: stray {} finding: {}", f.rule, f.message);
+        }
+        assert_eq!(ff.raw, ff.after.len(), "{name}: nothing should be suppressed");
+        assert_eq!(ff.suppressed, 0, "{name}");
+    }
+}
+
+#[test]
+fn clean_fixtures_are_clean() {
+    for name in [
+        "d1_clean.rs",
+        "d2_clean.rs",
+        "d3_clean.rs",
+        "d4_clean.rs",
+        "d5_clean.rs",
+        "d6_clean.rs",
+    ] {
+        let ff = lint_fixture(name);
+        assert!(ff.after.is_empty(), "{name}: {:?}", ff.after);
+        assert_eq!(ff.raw, 0, "{name}: raw findings should be zero");
+    }
+}
+
+#[test]
+fn reasoned_pragma_suppresses() {
+    let ff = lint_fixture("pragma_ok.rs");
+    assert!(ff.after.is_empty(), "{:?}", ff.after);
+    assert_eq!(ff.raw, 1, "the D1 site should still be counted pre-pragma");
+    assert_eq!(ff.suppressed, 1);
+}
+
+#[test]
+fn file_level_pragma_covers_whole_file() {
+    let ff = lint_fixture("pragma_file_level.rs");
+    assert!(ff.after.is_empty(), "{:?}", ff.after);
+    assert_eq!(ff.raw, 2, "both clock reads counted pre-pragma");
+    assert_eq!(ff.suppressed, 2);
+}
+
+#[test]
+fn reasonless_pragma_suppresses_nothing_and_is_reported() {
+    let ff = lint_fixture("pragma_missing_reason.rs");
+    assert_eq!(ff.suppressed, 0);
+    assert_eq!(ff.raw, 1);
+    let rules: Vec<&str> = ff.after.iter().map(|f| f.rule.as_str()).collect();
+    assert!(rules.contains(&"D1"), "original finding must survive: {:?}", ff.after);
+    assert!(rules.contains(&"pragma"), "empty pragma must be reported: {:?}", ff.after);
+    assert_eq!(ff.after.len(), 2, "{:?}", ff.after);
+}
+
+#[test]
+fn rule_filter_restricts_findings() {
+    let src = fixture("d3_bad.rs");
+    let cfg = LintCfg::fixture();
+    let ff = lint_source("src/fixture/d3_bad.rs", &src, &cfg, Some("D2"));
+    assert!(ff.after.is_empty(), "D2 filter must hide D3 findings: {:?}", ff.after);
+    let ff = lint_source("src/fixture/d3_bad.rs", &src, &cfg, Some("D3"));
+    assert!(!ff.after.is_empty(), "D3 filter must keep D3 findings");
+}
+
+/// The burn-down gate: the crate's own source lints clean under the
+/// default config — the exact check CI runs as `recad lint --deny` —
+/// and the pass demonstrably did work (rules fired pre-pragma, and
+/// reasoned pragmas suppressed real sites, not an empty universe).
+#[test]
+fn self_run_over_crate_source_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let run = run_lint(root, &LintCfg::default(), None).expect("lint walk");
+    assert!(run.files > 50, "suspiciously few files scanned: {}", run.files);
+    assert!(
+        run.findings_raw > 10,
+        "rules found almost nothing pre-pragma ({}) — rules broken?",
+        run.findings_raw
+    );
+    assert!(run.suppressed > 10, "pragmas barely fired ({})", run.suppressed);
+    assert!(
+        run.findings.is_empty(),
+        "crate must lint clean; findings:\n{}",
+        run.findings
+            .iter()
+            .map(|f| format!("  {}:{} [{}] {}", f.file, f.line, f.rule, f.message))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}

@@ -1,0 +1,10 @@
+// D1 bad: iterating a HashMap accumulates floats in hash order.
+use std::collections::HashMap;
+
+pub fn sum_scores(scores: &HashMap<u64, f32>) -> f32 {
+    let mut acc = 0.0;
+    for (_, v) in scores.iter() {
+        acc += v;
+    }
+    acc
+}

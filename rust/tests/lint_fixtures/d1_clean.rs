@@ -1,0 +1,13 @@
+// D1 clean: ordered iteration comes from a BTreeMap; the HashMap is
+// only used for point lookups, never iterated.
+use std::collections::{BTreeMap, HashMap};
+
+pub fn ordered_sum(ordered: &BTreeMap<u64, f32>, index: &HashMap<u64, usize>) -> f32 {
+    let mut acc = 0.0;
+    for (k, v) in ordered.iter() {
+        if index.get(k).is_some() {
+            acc += v;
+        }
+    }
+    acc
+}

@@ -1,0 +1,7 @@
+// D2 clean: naming the Instant type (imports, signatures) is fine —
+// only reading the clock (`Instant::now`) is flagged.
+use std::time::Instant;
+
+pub fn took(t0: Instant) -> std::time::Duration {
+    t0.elapsed()
+}

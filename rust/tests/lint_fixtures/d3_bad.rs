@@ -1,0 +1,8 @@
+// D3 bad: panic paths on a request-serving code path.
+pub fn decode_tag(buf: &[u8]) -> u32 {
+    let head = buf.first().expect("empty frame");
+    if *head > 4 {
+        panic!("bad tag");
+    }
+    u32::from(*head)
+}

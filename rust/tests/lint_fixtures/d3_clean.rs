@@ -1,0 +1,8 @@
+// D3 clean: the same decode degrades to None instead of unwinding.
+pub fn decode_tag(buf: &[u8]) -> Option<u32> {
+    let head = buf.first()?;
+    if *head > 4 {
+        return None;
+    }
+    Some(u32::from(*head))
+}

@@ -1,0 +1,4 @@
+// D4 bad: a raw fire-and-forget thread nobody joins or supervises.
+pub fn fire_and_forget(job: impl FnOnce() + Send + 'static) {
+    std::thread::spawn(job);
+}

@@ -1,0 +1,4 @@
+// D4 clean: no raw spawn; work runs inline (or through exec::pool).
+pub fn run_inline(job: impl FnOnce()) {
+    job();
+}

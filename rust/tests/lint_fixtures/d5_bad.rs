@@ -1,0 +1,6 @@
+// D5 bad: OS-seeded hasher state makes every run's hash order unique.
+use std::collections::hash_map::RandomState;
+
+pub fn fresh_hasher() -> RandomState {
+    RandomState::new()
+}

@@ -1,0 +1,4 @@
+// D5 clean: deterministic splitmix64-style mixing from an explicit seed.
+pub fn next_seed(state: u64) -> u64 {
+    state.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}

@@ -1,0 +1,4 @@
+// D6 bad: an unsafe block with no lint:allow(D6) justification.
+pub fn read_first(v: &[u32]) -> u32 {
+    unsafe { *v.get_unchecked(0) }
+}

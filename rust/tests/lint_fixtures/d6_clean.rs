@@ -1,0 +1,4 @@
+// D6 clean: no unsafe at all — the bounds check stays.
+pub fn read_first(v: &[u32]) -> u32 {
+    v.first().copied().unwrap_or(0)
+}

@@ -1,0 +1,8 @@
+// lint:allow-file(D2) fixture: a whole-file timing shim
+pub fn t0() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+pub fn t1() -> std::time::Instant {
+    std::time::Instant::now()
+}

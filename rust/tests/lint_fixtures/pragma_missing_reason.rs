@@ -1,0 +1,8 @@
+// Pragma misuse: no reason given, so the finding survives AND the
+// empty pragma itself is reported.
+use std::collections::HashMap;
+
+pub fn count_all(m: &HashMap<u64, u64>) -> u64 {
+    // lint:allow(D1)
+    m.values().sum()
+}

@@ -1,0 +1,7 @@
+// Pragma respected: a reasoned lint:allow suppresses the finding.
+use std::collections::HashMap;
+
+pub fn count_all(m: &HashMap<u64, u64>) -> u64 {
+    // lint:allow(D1) u64 sum is commutative across any visit order
+    m.values().sum()
+}
